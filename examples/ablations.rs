@@ -1,0 +1,130 @@
+//! Fig. 3 ablations: accuracy of ZO-SGD + Algorithm 2 sampling on
+//! roberta_mini + LoRA as a function of (a) K, (b) gamma_mu, (c) epsilon.
+//!
+//!     cargo run --release --example ablations [-- --budget 4800 --sweep k]
+//!
+//! `--sweep k|gamma-mu|epsilon|all` selects the panel.  Results go to
+//! reports/fig3_<sweep>.csv with the Gaussian-baseline reference line.
+
+use anyhow::Result;
+
+use zo_ldsd::cli::Args;
+use zo_ldsd::config::{Manifest, TrainMode};
+use zo_ldsd::coordinator::{run_grid, TrialSpec};
+use zo_ldsd::report::write_csv;
+use zo_ldsd::sampler::LdsdConfig;
+use zo_ldsd::train::{EstimatorKind, SamplerKind, TrainConfig};
+
+const MODEL: &str = "roberta_mini";
+const LR: f32 = 5e-4;
+
+fn alg2_cfg(k: usize, gamma_mu: f32, eps: f32, budget: u64) -> TrainConfig {
+    TrainConfig {
+        estimator: EstimatorKind::BestOfK {
+            k,
+            sampler: SamplerKind::Ldsd(LdsdConfig {
+                eps,
+                gamma_mu,
+                ..Default::default()
+            }),
+        },
+        ..TrainConfig::algorithm2("zo_sgd", LR, budget)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let budget = args.get_u64("budget", 4800)?;
+    let workers = args.get_usize("workers", 2)?;
+    let sweep = args.get_or("sweep", "all").to_string();
+    Manifest::load(&dir)?.model(MODEL)?;
+
+    let mut specs: Vec<TrialSpec> = Vec::new();
+    let spec = |id: String, config: TrainConfig| TrialSpec {
+        id,
+        model: MODEL.into(),
+        mode: TrainMode::Lora,
+        config,
+        eval_batches: 8,
+    };
+
+    if sweep == "k" || sweep == "all" {
+        for k in [1usize, 2, 5, 7, 10] {
+            specs.push(spec(format!("k/{k}"), alg2_cfg(k, 1e-3, 1.0, budget)));
+        }
+    }
+    if sweep == "gamma-mu" || sweep == "all" {
+        for gm in [0.0f32, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1] {
+            specs.push(spec(format!("gamma_mu/{gm}"), alg2_cfg(5, gm, 1.0, budget)));
+        }
+    }
+    if sweep == "epsilon" || sweep == "all" {
+        for eps in [0.05f32, 0.2, 0.5, 1.0, 2.0, 5.0] {
+            specs.push(spec(format!("epsilon/{eps}"), alg2_cfg(5, 1e-3, eps, budget)));
+        }
+    }
+    // design-choice ablations beyond the paper's three panels (DESIGN.md
+    // §8b): the literal printed sign of the mu-update, and the ||mu|| = 1
+    // renormalization the paper suggests in §3.5
+    if sweep == "design" || sweep == "all" {
+        for (label, reward_sign, renorm) in [
+            ("descend_renorm", -1.0f32, true),  // our default
+            ("descend_free", -1.0, false),
+            ("paper_sign_renorm", 1.0, true),   // literal Algorithm 2
+        ] {
+            let mut cfg = alg2_cfg(5, 1e-3, 1.0, budget);
+            if let EstimatorKind::BestOfK { sampler: SamplerKind::Ldsd(l), .. } =
+                &mut cfg.estimator
+            {
+                l.reward_sign = reward_sign;
+                l.renormalize = renorm;
+            }
+            specs.push(spec(format!("design/{label}"), cfg));
+        }
+    }
+    // the Gaussian reference line shown in every Fig. 3 panel
+    specs.push(spec(
+        "reference/gaussian_2fwd".into(),
+        TrainConfig::gaussian_2fwd("zo_sgd", LR, budget),
+    ));
+
+    println!("running {} ablation trials (budget {budget})", specs.len());
+    let results = run_grid(&dir, specs, workers);
+
+    let mut by_panel: std::collections::BTreeMap<String, Vec<(f64, f64)>> =
+        Default::default();
+    let mut reference = f64::NAN;
+    for r in &results {
+        let Ok(tr) = r else {
+            eprintln!("trial failed: {:#}", r.as_ref().err().unwrap());
+            continue;
+        };
+        let (panel, x) = tr.spec_id.split_once('/').unwrap();
+        if panel == "reference" {
+            reference = tr.outcome.final_accuracy;
+            continue;
+        }
+        let xv: f64 = x.parse().unwrap_or(f64::NAN);
+        by_panel
+            .entry(panel.to_string())
+            .or_default()
+            .push((xv, tr.outcome.final_accuracy));
+        println!("  {}: acc {:.4}", tr.spec_id, tr.outcome.final_accuracy);
+    }
+    println!("gaussian 2fwd reference: {reference:.4}");
+
+    std::fs::create_dir_all("reports").ok();
+    for (panel, rows) in by_panel {
+        let xs: Vec<f64> = rows.iter().map(|(x, _)| *x).collect();
+        let accs: Vec<f64> = rows.iter().map(|(_, a)| *a).collect();
+        let refs: Vec<f64> = vec![reference; rows.len()];
+        write_csv(
+            std::path::Path::new(&format!("reports/fig3_{panel}.csv")),
+            &[&panel, "accuracy", "gaussian_reference"],
+            &[&xs, &accs, &refs],
+        )?;
+        println!("wrote reports/fig3_{panel}.csv");
+    }
+    Ok(())
+}

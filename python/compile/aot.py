@@ -1,0 +1,285 @@
+"""AOT build: lower every L2 graph to HLO text + emit manifest and goldens.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts [--full]
+
+Outputs (all consumed by the rust coordinator, never by python at runtime):
+  artifacts/<model>_<mode>_<fn>.hlo.txt   lowered HLO text (the interchange
+      format: xla_extension 0.5.1 rejects jax>=0.5 serialized protos whose
+      instruction ids are 64-bit; the text parser reassigns ids)
+  artifacts/<model>_params.bin            pretrained flat f32 LE params
+  artifacts/<model>_lora_init.bin         flat f32 LE LoRA init
+  artifacts/toy_linreg_grad.hlo.txt       Fig. 2 toy oracle
+  artifacts/manifest.json                 shapes/ABI/stats for everything
+  artifacts/golden.json                   corpus + loss goldens pinning the
+      rust reimplementation of the data pipeline and the PJRT runtime
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model as M, params as P, pretrain
+from .configs import (
+    DEFAULT_PLAN,
+    E2E_100M,
+    MODELS,
+    OPT_MINI,
+    ROBERTA_MINI,
+    corpus_for,
+)
+
+MANIFEST_VERSION = 3
+
+TOY_D = 123  # a9a feature dimensionality
+TOY_N = 512
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "file": os.path.basename(path),
+        "bytes": len(text),
+        "lower_seconds": round(time.time() - t0, 2),
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+        ],
+    }
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def write_bin(path: str, arr: np.ndarray) -> dict:
+    data = np.ascontiguousarray(arr, dtype=np.float32).tobytes()
+    with open(path, "wb") as f:
+        f.write(data)
+    return {
+        "file": os.path.basename(path),
+        "len": int(arr.size),
+        "sha256": hashlib.sha256(data).hexdigest(),
+    }
+
+
+def build_model(cfg, plan, out_dir: str, do_pretrain: bool) -> dict:
+    cspec = corpus_for(cfg)
+    d_ft = P.layout_size(P.ft_layout(cfg))
+    d_lora = P.layout_size(P.lora_layout(cfg))
+    b, s, k = plan.batch, cfg.max_seq, plan.k
+    eb = plan.eval_batch
+
+    entry: dict = {
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "n_classes": cfg.n_classes, "causal": cfg.causal,
+            "pool": cfg.pool, "lora_rank": cfg.lora_rank,
+            "lora_scale": cfg.lora_scale,
+        },
+        "d_ft": d_ft,
+        "d_lora": d_lora,
+        "batch": b,
+        "eval_batch": eb,
+        "k": k,
+        "layout_ft": [
+            {"name": n, "shape": list(sh)} for n, sh in P.ft_layout(cfg)
+        ],
+        "layout_lora": [
+            {"name": n, "shape": list(sh)} for n, sh in P.lora_layout(cfg)
+        ],
+        "artifacts": {},
+    }
+
+    # --- parameters -------------------------------------------------------
+    if do_pretrain:
+        flat, stats = pretrain.adam_pretrain(cfg, cspec, plan)
+        # fine-tuning gets a freshly initialized head (DESIGN.md §5): the
+        # rust ZO runs start near chance accuracy with pretrained features
+        flat = pretrain.reinit_head(cfg, flat)
+        stats["init_accuracy"] = pretrain.eval_accuracy(
+            cfg, cspec, flat, n_batches=4, batch=64
+        )
+        entry["pretrain"] = stats
+    else:
+        flat = np.asarray(P.init_ft(cfg, jax.random.PRNGKey(0)), np.float32)
+        entry["pretrain"] = {"pretrain_steps": 0}
+    entry["params"] = write_bin(os.path.join(out_dir, f"{cfg.name}_params.bin"), flat)
+
+    layout = P.ft_layout(cfg)
+    pdict = P.unflatten(jnp.asarray(flat), layout)
+    lora0 = np.asarray(
+        P.init_lora(cfg, jax.random.PRNGKey(1), head_w=pdict["head.w"],
+                    head_b=pdict["head.b"]),
+        np.float32,
+    )
+    entry["lora_init"] = write_bin(
+        os.path.join(out_dir, f"{cfg.name}_lora_init.bin"), lora0
+    )
+
+    # --- HLO artifacts ------------------------------------------------------
+    ids_s, mask_s = spec((b, s), jnp.int32), spec((b, s))
+    lab_s = spec((b,), jnp.int32)
+    ft = M.make_ft_fns(cfg)
+    lora = M.make_lora_fns(cfg)
+
+    def emit(name, fn, args):
+        path = os.path.join(out_dir, f"{cfg.name}_{name}.hlo.txt")
+        entry["artifacts"][name] = lower_to_file(fn, args, path)
+        print(f"  {cfg.name}_{name}: {entry['artifacts'][name]['bytes']} bytes "
+              f"({entry['artifacts'][name]['lower_seconds']}s)")
+
+    emit("ft_logits", ft["logits"], (spec((d_ft,)), spec((eb, s), jnp.int32), spec((eb, s))))
+    emit("ft_loss", ft["loss"], (spec((d_ft,)), ids_s, mask_s, lab_s))
+    emit("ft_loss_dir", ft["loss_dir"],
+         (spec((d_ft,)), spec((d_ft,)), spec(()), ids_s, mask_s, lab_s))
+    emit("ft_loss_k", ft["loss_k"],
+         (spec((d_ft,)), spec((k, d_ft)), spec(()), ids_s, mask_s, lab_s))
+
+    emit("lora_logits", lora["logits"],
+         (spec((d_ft,)), spec((d_lora,)), spec((eb, s), jnp.int32), spec((eb, s))))
+    emit("lora_loss", lora["loss"],
+         (spec((d_ft,)), spec((d_lora,)), ids_s, mask_s, lab_s))
+    emit("lora_loss_dir", lora["loss_dir"],
+         (spec((d_ft,)), spec((d_lora,)), spec((d_lora,)), spec(()), ids_s, mask_s, lab_s))
+    emit("lora_loss_k", lora["loss_k"],
+         (spec((d_ft,)), spec((d_lora,)), spec((k, d_lora)), spec(()), ids_s, mask_s, lab_s))
+
+    return entry
+
+
+def build_goldens(manifest: dict, out_dir: str) -> None:
+    """Golden values pinning the rust corpus port + PJRT numerics."""
+    golden: dict = {"corpus": [], "losses": {}}
+    for name in manifest["models"]:
+        cfg = MODELS[name]
+        cspec = corpus_for(cfg)
+        b = manifest["models"][name]["batch"]
+        ids, mask, labels = corpus.train_batch(cspec, 0, b)
+        tids, tmask, tlabels = corpus.test_batch(cspec, 0, b)
+        golden["corpus"].append({
+            "model": name,
+            "train_ids": ids.tolist(), "train_mask": mask.tolist(),
+            "train_labels": labels.tolist(),
+            "test_ids": tids.tolist(), "test_mask": tmask.tolist(),
+            "test_labels": tlabels.tolist(),
+        })
+        flat = np.fromfile(
+            os.path.join(out_dir, f"{name}_params.bin"), dtype=np.float32
+        )
+        lora0 = np.fromfile(
+            os.path.join(out_dir, f"{name}_lora_init.bin"), dtype=np.float32
+        )
+        ft = M.make_ft_fns(cfg)
+        lo = M.make_lora_fns(cfg)
+        args = (jnp.asarray(flat), jnp.asarray(ids), jnp.asarray(mask),
+                jnp.asarray(labels))
+        loss_ft = float(jax.jit(ft["loss"])(*args)[0])
+        largs = (jnp.asarray(flat), jnp.asarray(lora0), jnp.asarray(ids),
+                 jnp.asarray(mask), jnp.asarray(labels))
+        loss_lora = float(jax.jit(lo["loss"])(*largs)[0])
+        # deterministic direction the rust side can regenerate exactly:
+        # d_i = 0.5 * sin(i)  (see rust/tests/runtime_golden.rs)
+        dvec = (0.5 * np.sin(np.arange(flat.size, dtype=np.float64))).astype(
+            np.float32
+        )
+        loss_dir = float(
+            jax.jit(ft["loss_dir"])(
+                jnp.asarray(flat), jnp.asarray(dvec), jnp.float32(1e-3),
+                jnp.asarray(ids), jnp.asarray(mask), jnp.asarray(labels)
+            )[0]
+        )
+        golden["losses"][name] = {
+            "ft_loss_batch0": loss_ft,
+            "lora_loss_batch0": loss_lora,
+            "ft_loss_dir_batch0_sin_tau1e-3": loss_dir,
+        }
+    # toy golden: grad of linreg at fixed w, X, y
+    rng = corpus.SplitMix64(0xA9A)
+    w = np.array([((rng.next_u64() >> 11) * (1.0 / (1 << 53))) - 0.5
+                  for _ in range(TOY_D)], np.float32)
+    x = np.array([((rng.next_u64() >> 11) * (1.0 / (1 << 53))) - 0.5
+                  for _ in range(TOY_N * TOY_D)], np.float32).reshape(TOY_N, TOY_D)
+    y = np.array([((rng.next_u64() >> 11) * (1.0 / (1 << 53))) - 0.5
+                  for _ in range(TOY_N)], np.float32)
+    g, l = M.linreg_grad_fn(jnp.asarray(w), jnp.asarray(x), jnp.asarray(y))
+    golden["toy"] = {
+        "loss": float(l),
+        "grad_head": np.asarray(g)[:8].tolist(),
+        "grad_norm": float(np.linalg.norm(np.asarray(g))),
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also build the e2e_100m artifacts (slow)")
+    ap.add_argument("--no-pretrain", action="store_true",
+                    help="skip Adam pretraining (tests only)")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    plan = DEFAULT_PLAN
+    manifest: dict = {
+        "version": MANIFEST_VERSION,
+        "plan": {
+            "batch": plan.batch, "eval_batch": plan.eval_batch, "k": plan.k,
+        },
+        "corpus": {},
+        "models": {},
+    }
+    model_list = [ROBERTA_MINI, OPT_MINI] + ([E2E_100M] if args.full else [])
+    for cfg in model_list:
+        cspec = corpus_for(cfg)
+        manifest["corpus"][cfg.name] = {
+            "vocab": cspec.vocab, "seq": cspec.seq,
+            "n_classes": cspec.n_classes, "lexicon": cspec.lexicon,
+            "min_len": cspec.min_len, "signal_min": cspec.signal_min,
+            "signal_max": cspec.signal_max, "contra": cspec.contra,
+            "noise": cspec.noise, "seed": cspec.seed,
+        }
+        print(f"building {cfg.name} ...")
+        do_pre = (not args.no_pretrain) and cfg.name != "e2e_100m"
+        manifest["models"][cfg.name] = build_model(cfg, plan, out_dir, do_pre)
+
+    # toy oracle (Fig. 2)
+    toy = lower_to_file(
+        M.linreg_grad_fn,
+        (spec((TOY_D,)), spec((TOY_N, TOY_D)), spec((TOY_N,))),
+        os.path.join(out_dir, "toy_linreg_grad.hlo.txt"),
+    )
+    manifest["toy"] = {"d": TOY_D, "n": TOY_N, **toy}
+
+    build_goldens(manifest, out_dir)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest written to {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

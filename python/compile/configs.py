@@ -1,0 +1,97 @@
+"""Model / corpus / artifact build configuration shared across the compile path.
+
+The rust coordinator consumes the same values through artifacts/manifest.json
+(emitted by aot.py); this module is the single python-side source of truth.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Transformer classifier stand-in (DESIGN.md §6)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    n_classes: int
+    causal: bool  # True: OPT-style decoder; False: RoBERTa-style encoder
+    pool: str  # "cls" | "last"
+    lora_rank: int = 8
+    lora_scale: float = 2.0  # alpha / r
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class CorpusSpec:
+    """Synthetic SST-2-like sentiment corpus (DESIGN.md §5).
+
+    Token id space: 0 = PAD, 1 = CLS/BOS, [2, 2+2*lexicon) = class lexicons
+    (positive then negative), the rest neutral.  Examples are generated
+    statelessly from (seed, index) with SplitMix64 so the rust data pipeline
+    reproduces the identical byte-for-byte stream (golden-tested).
+    """
+
+    vocab: int
+    seq: int
+    n_classes: int = 2
+    lexicon: int = 64  # signal tokens per class
+    min_len: int = 16
+    signal_min: int = 2
+    signal_max: int = 6
+    contra: float = 0.08  # prob a signal token comes from the wrong lexicon
+    noise: float = 0.04  # label flip probability
+    seed: int = 0x5EED
+
+
+@dataclass(frozen=True)
+class BuildPlan:
+    """Static shapes baked into the AOT artifacts."""
+
+    batch: int = 8  # training batch
+    eval_batch: int = 64
+    k: int = 5  # candidate directions per step (paper default)
+    # Deliberately partial pretraining (DESIGN.md §5): stops around
+    # 0.75-0.85 held-out accuracy so zero-order fine-tuning has headroom
+    # for the Table 1 orderings to resolve.
+    pretrain_steps: int = 120
+    pretrain_lr: float = 3e-4
+    pretrain_batch: int = 32
+    modes: tuple = ("ft", "lora")
+
+
+ROBERTA_MINI = ModelConfig(
+    name="roberta_mini", vocab=4096, d_model=128, n_layers=4, n_heads=4,
+    d_ff=512, max_seq=32, n_classes=2, causal=False, pool="cls",
+)
+
+OPT_MINI = ModelConfig(
+    name="opt_mini", vocab=4096, d_model=160, n_layers=4, n_heads=4,
+    d_ff=640, max_seq=32, n_classes=2, causal=True, pool="last",
+)
+
+E2E_100M = ModelConfig(
+    name="e2e_100m", vocab=32768, d_model=768, n_layers=12, n_heads=12,
+    d_ff=3072, max_seq=64, n_classes=2, causal=True, pool="last",
+)
+
+MODELS = {m.name: m for m in (ROBERTA_MINI, OPT_MINI, E2E_100M)}
+
+DEFAULT_CORPUS = CorpusSpec(vocab=4096, seq=32)
+E2E_CORPUS = CorpusSpec(vocab=32768, seq=64, seed=0xE2E5EED)
+
+DEFAULT_PLAN = BuildPlan()
+
+
+def corpus_for(model: ModelConfig) -> CorpusSpec:
+    return E2E_CORPUS if model.name == "e2e_100m" else DEFAULT_CORPUS

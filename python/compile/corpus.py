@@ -1,0 +1,115 @@
+"""Synthetic SST-2-like corpus, generated statelessly from (seed, index).
+
+This is the python half of a dual implementation: rust/src/data/corpus.rs
+implements byte-identical logic (same SplitMix64 stream, same draw order).
+Golden batches emitted by aot.py pin the two together; any divergence fails
+rust integration tests.
+
+Draw order per example (ABI — keep in sync with corpus.rs):
+  1. label        <- next() & 1
+  2. L            <- min_len + next() % (seq - min_len)
+  3. n_signal     <- signal_min + next() % (signal_max - signal_min + 1)
+  4. per content position j = 1..L-1 (position 0 is CLS):
+       signal?   <- next() % remaining_positions < remaining_signal
+       if signal:  contra? <- f64(next()) < contra
+                   token   <- 2 + lex * lexicon_class + next() % lex
+       else:       token   <- 2 + 2*lex + next() % n_neutral
+  5. flip?        <- f64(next()) < noise
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .configs import CorpusSpec
+
+MASK64 = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+
+PAD, CLS = 0, 1
+TEST_INDEX_BASE = 1 << 20  # train indices [0, 2^20); test indices start here
+
+
+def _mix(z: int) -> int:
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+
+class SplitMix64:
+    """Matches rust/src/rng/splitmix.rs exactly."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GOLDEN) & MASK64
+        return _mix(self.state)
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def example_seed(spec_seed: int, index: int) -> int:
+    return (spec_seed ^ (((index + 1) * GOLDEN) & MASK64)) & MASK64
+
+
+def generate_example(
+    spec: CorpusSpec, index: int
+) -> Tuple[np.ndarray, np.ndarray, int, int]:
+    """Returns (ids[seq] i32, mask[seq] f32, label, clean_label)."""
+    rng = SplitMix64(example_seed(spec.seed, index))
+    lex = spec.lexicon
+    n_neutral = spec.vocab - 2 - 2 * lex
+    assert n_neutral > 0, "vocab too small for lexicon"
+
+    label = rng.next_u64() & 1
+    length = spec.min_len + rng.next_u64() % (spec.seq - spec.min_len)
+    n_signal = spec.signal_min + rng.next_u64() % (
+        spec.signal_max - spec.signal_min + 1
+    )
+    content = length - 1  # position 0 is CLS
+    n_signal = min(n_signal, content)
+
+    ids = np.zeros(spec.seq, dtype=np.int32)
+    mask = np.zeros(spec.seq, dtype=np.float32)
+    ids[0] = CLS
+    mask[:length] = 1.0
+
+    remaining_signal = n_signal
+    for j in range(1, length):
+        remaining_positions = length - j
+        is_signal = (rng.next_u64() % remaining_positions) < remaining_signal
+        if is_signal:
+            remaining_signal -= 1
+            contra = rng.next_f64() < spec.contra
+            cls_id = (1 - label) if contra else label
+            tok = 2 + lex * cls_id + rng.next_u64() % lex
+        else:
+            tok = 2 + 2 * lex + rng.next_u64() % n_neutral
+        ids[j] = tok
+    flip = rng.next_f64() < spec.noise
+    emitted = (1 - label) if flip else label
+    return ids, mask, int(emitted), int(label)
+
+
+def generate_batch(
+    spec: CorpusSpec, start_index: int, batch: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Contiguous batch [start_index, start_index + batch)."""
+    ids = np.zeros((batch, spec.seq), dtype=np.int32)
+    mask = np.zeros((batch, spec.seq), dtype=np.float32)
+    labels = np.zeros(batch, dtype=np.int32)
+    for b in range(batch):
+        ids[b], mask[b], labels[b], _ = generate_example(spec, start_index + b)
+    return ids, mask, labels
+
+
+def train_batch(spec: CorpusSpec, step: int, batch: int):
+    return generate_batch(spec, step * batch, batch)
+
+
+def test_batch(spec: CorpusSpec, step: int, batch: int):
+    return generate_batch(spec, TEST_INDEX_BASE + step * batch, batch)

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for the ZO-LDSD compute hot path.
+
+All kernels run with interpret=True so the lowered HLO is plain XLA ops the
+CPU PJRT client can execute (real-TPU Mosaic lowering is compile-only on
+this testbed).  Correctness oracle: kernels.ref, enforced by
+python/tests/test_kernels.py.
+"""
+
+from .attention import attention
+from .layernorm import layernorm
+from .lora import lora_matmul
+from .perturb import axpy, perturb_normalize
+
+__all__ = ["attention", "layernorm", "lora_matmul", "axpy", "perturb_normalize"]

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: fused scaled-dot-product attention.
+
+One grid step handles one (batch, head) pair: the whole QK^T -> mask ->
+softmax -> V chain stays in VMEM, which is the TPU analogue of the paper's
+GPU "keep the probe forward pass on-chip" hot path (DESIGN.md
+§Hardware-Adaptation).  interpret=True lowers the kernel to plain HLO so the
+AOT artifact runs on the CPU PJRT client; on a real TPU the same BlockSpec
+tiles map to MXU-aligned 128x128 blocks.
+
+Shapes: q, k, v: [BH, S, Dh]; mask: [BH, S] (1.0 valid / 0.0 pad).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, causal: bool):
+    # Block shapes carry a leading singleton (the grid axis); drop it.
+    q = q_ref[0]  # [S, Dh]
+    k = k_ref[0]
+    v = v_ref[0]
+    mask = m_ref[0]  # [S]
+    s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + (1.0 - mask[None, :]) * NEG_INF
+    if causal:
+        row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        scores = jnp.where(col <= row, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Fused attention over [BH, S, Dh] with key-padding mask [BH, S]."""
+    bh, s, dh = q.shape
+    qkv_spec = pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0))
+    m_spec = pl.BlockSpec((1, s), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, causal=causal),
+        grid=(bh,),
+        in_specs=[qkv_spec, qkv_spec, qkv_spec, m_spec],
+        out_specs=qkv_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v, mask)

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: row-wise LayerNorm over [N, D].
+
+Grid over row blocks; mean/variance/normalize fused in VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]  # [BLK, D]
+    g = g_ref[...]  # [D]
+    b = b_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + EPS) * g[None, :] + b[None, :]
+
+
+def layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: [N, D]; g, b: [D]."""
+    n, d = x.shape
+    blk = min(128, n)
+    rem = (-n) % blk
+    if rem:
+        x = jnp.concatenate([x, jnp.zeros((rem, d), jnp.float32)], axis=0)
+    npad = x.shape[0]
+    out = pl.pallas_call(
+        _ln_kernel,
+        grid=(npad // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, d), jnp.float32),
+        interpret=True,
+    )(x, g, b)
+    return out[:n]

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: fused LoRA matmul  y = x @ W + scale * (x @ A) @ B.
+
+Tiled over the output dimension: each grid step loads one Dout-block of W
+and B into VMEM and recomputes the tiny x@A (r columns) locally — on TPU
+recomputing the rank-r projection in VMEM is cheaper than an extra HBM
+round-trip for the [S, r] intermediate (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lora_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, *, scale: float):
+    x = x_ref[...]  # [S, D]
+    w = w_ref[...]  # [D, BLK]
+    a = a_ref[...]  # [D, r]
+    b = b_ref[...]  # [r, BLK]
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    delta = jnp.dot(
+        jnp.dot(x, a, preferred_element_type=jnp.float32),
+        b,
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = base + scale * delta
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def lora_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    scale: float,
+) -> jnp.ndarray:
+    """x: [S, D], w: [D, Dout], a: [D, r], b: [r, Dout] -> [S, Dout]."""
+    s, dmodel = x.shape
+    dout = w.shape[1]
+    r = a.shape[1]
+    blk = min(128, dout)
+    # pad Dout to a block multiple (TPU lanes want 128-aligned tiles)
+    rem = (-dout) % blk
+    if rem:
+        w = jnp.concatenate([w, jnp.zeros((dmodel, rem), jnp.float32)], axis=1)
+        b = jnp.concatenate([b, jnp.zeros((r, rem), jnp.float32)], axis=1)
+    dpad = w.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_lora_kernel, scale=scale),
+        grid=(dpad // blk,),
+        in_specs=[
+            pl.BlockSpec((s, dmodel), lambda i: (0, 0)),
+            pl.BlockSpec((dmodel, blk), lambda i: (0, i)),
+            pl.BlockSpec((dmodel, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((s, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((s, dpad), jnp.float32),
+        interpret=True,
+    )(x, w, a, b)
+    return out[:, :dout]

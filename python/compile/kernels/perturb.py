@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused ZO parameter perturbation (axpy).
+
+The zero-order hot loop (Algorithm 2, lines 4-5) evaluates f(x + tau*v) for
+K candidate directions.  For a d-parameter model each probe needs an O(d)
+axpy before the forward pass; this kernel streams params and direction
+through VMEM in fixed-size blocks so the perturbed copy never materializes
+in HBM twice.  interpret=True keeps it CPU-runnable (DESIGN.md §7).
+
+The d axis is padded by the caller to a multiple of BLOCK.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 64k f32 = 256 KiB per operand block: 3 operands resident ~= 0.75 MiB of
+# VMEM, safely under the ~16 MiB/core budget with double buffering.
+BLOCK = 65536
+
+
+def _axpy_kernel(x_ref, d_ref, s_ref, o_ref):
+    o_ref[...] = x_ref[...] + s_ref[0] * d_ref[...]
+
+
+def _pad(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    n = x.shape[0]
+    rem = (-n) % block
+    if rem:
+        x = jnp.concatenate([x, jnp.zeros((rem,), dtype=x.dtype)])
+    return x
+
+
+def axpy(x: jnp.ndarray, d: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """x + scale * d for flat f32[d]; scale is a scalar (or shape-(1,)) array."""
+    n = x.shape[0]
+    block = min(BLOCK, n) if n > 0 else 1
+    xp = _pad(x, block)
+    dp = _pad(d, block)
+    s = jnp.reshape(scale.astype(jnp.float32), (1,))
+    grid = (xp.shape[0] // block,)
+    out = pl.pallas_call(
+        _axpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=True,
+    )(xp, dp, s)
+    return out[:n]
+
+
+def perturb_normalize(
+    x: jnp.ndarray, d: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-12
+) -> jnp.ndarray:
+    """x + scale * d/||d||: Algorithm 1 (normalized-direction) variant.
+
+    The norm is a global reduction, computed once outside the blocked kernel;
+    the O(d) axpy still streams through the Pallas kernel.
+    """
+    nrm = jnp.sqrt(jnp.sum(d * d) + eps)
+    return axpy(x, d, scale / nrm)

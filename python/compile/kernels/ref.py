@@ -1,0 +1,91 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth the corresponding Pallas
+kernel (attention.py / perturb.py / lora.py / layernorm.py) is tested
+against in python/tests/test_kernels.py.  Keep these boring and obviously
+correct: no tiling, no trickery, just jnp.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def softmax_ref(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Numerically-stable softmax."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    causal: bool = False,
+) -> jnp.ndarray:
+    """Single-head scaled dot-product attention.
+
+    q, k, v: [S, Dh]; mask: [S] with 1.0 for valid tokens, 0.0 for padding.
+    Returns [S, Dh].
+    """
+    s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = (q @ k.T) * scale  # [S, S]
+    # key-side padding mask
+    scores = scores + (1.0 - mask[None, :]) * NEG_INF
+    if causal:
+        causal_mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(causal_mask, scores, NEG_INF)
+    probs = softmax_ref(scores, axis=-1)
+    return probs @ v
+
+
+def axpy_ref(x: jnp.ndarray, d: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """x + scale * d — the ZO perturbation hot path (Algorithm 2, lines 4-5)."""
+    return x + scale * d
+
+
+def perturb_normalize_ref(
+    x: jnp.ndarray, d: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-12
+) -> jnp.ndarray:
+    """x + scale * d/||d|| — Algorithm 1 style (normalized direction)."""
+    nrm = jnp.sqrt(jnp.sum(d * d) + eps)
+    return x + scale * (d / nrm)
+
+
+def lora_matmul_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    scale: float,
+) -> jnp.ndarray:
+    """y = x @ W + scale * (x @ A) @ B.
+
+    x: [S, D], w: [D, Dout], a: [D, r], b: [r, Dout].
+    """
+    return x @ w + scale * ((x @ a) @ b)
+
+
+def layernorm_ref(
+    x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    """LayerNorm over the last axis.  x: [..., D], g/b: [D]."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def weighted_dir_reduce_ref(
+    dirs: jnp.ndarray, weights: jnp.ndarray
+) -> jnp.ndarray:
+    """(1/K) * sum_i weights[i] * dirs[i]  — the REINFORCE mu-gradient reduce.
+
+    dirs: [K, d], weights: [K].  Returns [d].
+    """
+    k = dirs.shape[0]
+    return jnp.sum(weights[:, None] * dirs, axis=0) / jnp.float32(k)

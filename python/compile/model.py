@@ -1,0 +1,248 @@
+"""L2: JAX transformer classifier forward passes, built on the L1 kernels.
+
+Everything here is *build-time only*: aot.py lowers the functions below to
+HLO text, and the rust coordinator executes the compiled artifacts via PJRT.
+
+Exported graph surface (the artifact ABI, DESIGN.md §2):
+  logits(flat, ids, mask)                     -> (logits[B, C],)
+  loss(flat, ids, mask, labels)               -> (loss,)
+  loss_dir(flat, dir, tau, ids, mask, labels) -> (loss,)         # f(x + tau*dir)
+  loss_k(flat, dirs[K,d], tau, ids, mask, labels) -> (losses[K],)
+plus the _lora variants taking (base_flat, lora_flat, ...) where only the
+LoRA vector is perturbed.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .configs import ModelConfig
+from .kernels import attention, axpy, layernorm, lora_matmul
+
+
+def _split_heads(x: jnp.ndarray, b: int, s: int, h: int, dh: int) -> jnp.ndarray:
+    # [B, S, D] -> [B*H, S, Dh]
+    return x.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+
+def _merge_heads(x: jnp.ndarray, b: int, s: int, h: int, dh: int) -> jnp.ndarray:
+    return x.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def forward(
+    cfg: ModelConfig,
+    p: Dict[str, jnp.ndarray],
+    ids: jnp.ndarray,
+    mask: jnp.ndarray,
+    lora: Optional[Dict[str, jnp.ndarray]] = None,
+) -> jnp.ndarray:
+    """Transformer classifier forward.  ids: [B, S] i32, mask: [B, S] f32.
+
+    Returns logits [B, n_classes].  When `lora` is given, rank-r deltas are
+    applied to W_q / W_v through the fused L1 LoRA kernel and the classifier
+    head comes from the LoRA vector (the base head is ignored).
+    """
+    b, s = ids.shape
+    h, dh, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+
+    x = p["tok_emb"][ids] + p["pos_emb"][None, :s, :]
+    head_mask = jnp.repeat(mask, h, axis=0)  # [B*H, S]
+
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        xn = layernorm(x.reshape(b * s, d), p[pre + "ln1.g"], p[pre + "ln1.b"])
+        if lora is not None:
+            q = lora_matmul(
+                xn, p[pre + "wq"], lora[pre + "lora_q.a"],
+                lora[pre + "lora_q.b"], cfg.lora_scale,
+            ) + p[pre + "bq"]
+            v = lora_matmul(
+                xn, p[pre + "wv"], lora[pre + "lora_v.a"],
+                lora[pre + "lora_v.b"], cfg.lora_scale,
+            ) + p[pre + "bv"]
+        else:
+            q = xn @ p[pre + "wq"] + p[pre + "bq"]
+            v = xn @ p[pre + "wv"] + p[pre + "bv"]
+        k = xn @ p[pre + "wk"] + p[pre + "bk"]
+
+        qh = _split_heads(q.reshape(b, s, d), b, s, h, dh)
+        kh = _split_heads(k.reshape(b, s, d), b, s, h, dh)
+        vh = _split_heads(v.reshape(b, s, d), b, s, h, dh)
+        attn = attention(qh, kh, vh, head_mask, causal=cfg.causal)
+        attn = _merge_heads(attn, b, s, h, dh).reshape(b * s, d)
+        x = x + (attn @ p[pre + "wo"] + p[pre + "bo"]).reshape(b, s, d)
+
+        xn2 = layernorm(x.reshape(b * s, d), p[pre + "ln2.g"], p[pre + "ln2.b"])
+        ff = jax.nn.gelu(xn2 @ p[pre + "wf1"] + p[pre + "bf1"])
+        x = x + (ff @ p[pre + "wf2"] + p[pre + "bf2"]).reshape(b, s, d)
+
+    xf = layernorm(x.reshape(b * s, d), p["final_ln.g"], p["final_ln.b"])
+    xf = xf.reshape(b, s, d)
+    if cfg.pool == "cls":
+        pooled = xf[:, 0, :]
+    else:  # "last": final valid position per example
+        last = jnp.maximum(jnp.sum(mask, axis=1).astype(jnp.int32) - 1, 0)
+        pooled = xf[jnp.arange(b), last, :]
+    hw = lora["head.w"] if lora is not None else p["head.w"]
+    hb = lora["head.b"] if lora is not None else p["head.b"]
+    return pooled @ hw + hb
+
+
+def forward_pure(
+    cfg: ModelConfig,
+    p: Dict[str, jnp.ndarray],
+    ids: jnp.ndarray,
+    mask: jnp.ndarray,
+    lora: Optional[Dict[str, jnp.ndarray]] = None,
+) -> jnp.ndarray:
+    """Pure-jnp twin of forward(): identical math with no Pallas kernels.
+
+    Used (a) as the L2-level correctness oracle in python/tests and (b) for
+    the build-time first-order pretraining pass, which needs autodiff
+    (Pallas interpret kernels are not generally differentiable).
+    """
+    b, s = ids.shape
+    h, dh, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    neg = -1e9
+
+    def ln(x, g, bb):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + bb
+
+    x = p["tok_emb"][ids] + p["pos_emb"][None, :s, :]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        xn = ln(x, p[pre + "ln1.g"], p[pre + "ln1.b"])
+        q = xn @ p[pre + "wq"] + p[pre + "bq"]
+        v = xn @ p[pre + "wv"] + p[pre + "bv"]
+        if lora is not None:
+            q = q + cfg.lora_scale * (
+                (xn @ lora[pre + "lora_q.a"]) @ lora[pre + "lora_q.b"]
+            )
+            v = v + cfg.lora_scale * (
+                (xn @ lora[pre + "lora_v.a"]) @ lora[pre + "lora_v.b"]
+            )
+        k = xn @ p[pre + "wk"] + p[pre + "bk"]
+        qh = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        kh = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        vh = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(
+            jnp.float32(dh)
+        )
+        scores = scores + (1.0 - mask[:, None, None, :]) * neg
+        if cfg.causal:
+            tri = jnp.tril(jnp.ones((s, s), dtype=bool))
+            scores = jnp.where(tri[None, None], scores, neg)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + attn @ p[pre + "wo"] + p[pre + "bo"]
+        xn2 = ln(x, p[pre + "ln2.g"], p[pre + "ln2.b"])
+        ff = jax.nn.gelu(xn2 @ p[pre + "wf1"] + p[pre + "bf1"])
+        x = x + ff @ p[pre + "wf2"] + p[pre + "bf2"]
+
+    xf = ln(x, p["final_ln.g"], p["final_ln.b"])
+    if cfg.pool == "cls":
+        pooled = xf[:, 0, :]
+    else:
+        last = jnp.maximum(jnp.sum(mask, axis=1).astype(jnp.int32) - 1, 0)
+        pooled = xf[jnp.arange(b), last, :]
+    hw = lora["head.w"] if lora is not None else p["head.w"]
+    hb = lora["head.b"] if lora is not None else p["head.b"]
+    return pooled @ hw + hb
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(logp[jnp.arange(logits.shape[0]), labels])
+
+
+# ---------------------------------------------------------------------------
+# Artifact graphs (FT mode: all params trainable & perturbed)
+# ---------------------------------------------------------------------------
+
+def make_ft_fns(cfg: ModelConfig):
+    layout = P.ft_layout(cfg)
+
+    def logits_fn(flat, ids, mask):
+        return (forward(cfg, P.unflatten(flat, layout), ids, mask),)
+
+    def loss_fn(flat, ids, mask, labels):
+        logits = forward(cfg, P.unflatten(flat, layout), ids, mask)
+        return (cross_entropy(logits, labels),)
+
+    def loss_dir_fn(flat, direction, tau, ids, mask, labels):
+        perturbed = axpy(flat, direction, tau)
+        return loss_fn(perturbed, ids, mask, labels)
+
+    def loss_k_fn(flat, dirs, tau, ids, mask, labels):
+        def one(direction):
+            return loss_dir_fn(flat, direction, tau, ids, mask, labels)[0]
+
+        return (jax.lax.map(one, dirs),)
+
+    return {
+        "logits": logits_fn,
+        "loss": loss_fn,
+        "loss_dir": loss_dir_fn,
+        "loss_k": loss_k_fn,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Artifact graphs (LoRA mode: only adapters + head trainable & perturbed)
+# ---------------------------------------------------------------------------
+
+def make_lora_fns(cfg: ModelConfig):
+    base_layout = P.ft_layout(cfg)
+    lora_layout = P.lora_layout(cfg)
+
+    def logits_fn(base, lora, ids, mask):
+        return (
+            forward(
+                cfg,
+                P.unflatten(base, base_layout),
+                ids,
+                mask,
+                lora=P.unflatten(lora, lora_layout),
+            ),
+        )
+
+    def loss_fn(base, lora, ids, mask, labels):
+        logits = logits_fn(base, lora, ids, mask)[0]
+        return (cross_entropy(logits, labels),)
+
+    def loss_dir_fn(base, lora, direction, tau, ids, mask, labels):
+        perturbed = axpy(lora, direction, tau)
+        return loss_fn(base, perturbed, ids, mask, labels)
+
+    def loss_k_fn(base, lora, dirs, tau, ids, mask, labels):
+        def one(direction):
+            return loss_dir_fn(base, lora, direction, tau, ids, mask, labels)[0]
+
+        return (jax.lax.map(one, dirs),)
+
+    return {
+        "logits": logits_fn,
+        "loss": loss_fn,
+        "loss_dir": loss_dir_fn,
+        "loss_k": loss_k_fn,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Toy experiment graph (Fig. 2): linear regression gradient + loss
+# ---------------------------------------------------------------------------
+
+def linreg_grad_fn(w, x, y):
+    """0.5/N * ||Xw - y||^2 and its gradient — the toy DGD oracle."""
+    n = x.shape[0]
+    resid = x @ w - y
+    loss = 0.5 * jnp.sum(resid * resid) / n
+    grad = (x.T @ resid) / n
+    return (grad, loss)

@@ -1,0 +1,124 @@
+"""Flat parameter layout: the L3<->L2 parameter contract.
+
+The rust coordinator owns model parameters as one flat f32[d] vector (plus a
+flat f32[d_lora] vector in LoRA mode); jax unflattens with *static* offsets
+so the layout below is an ABI.  Any change here must bump MANIFEST_VERSION
+in aot.py — the rust manifest loader checks it.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+
+Layout = List[Tuple[str, Tuple[int, ...]]]
+
+
+def ft_layout(cfg: ModelConfig) -> Layout:
+    """Full fine-tuning layout: every model parameter, deterministic order."""
+    d, f = cfg.d_model, cfg.d_ff
+    out: Layout = [
+        ("tok_emb", (cfg.vocab, d)),
+        ("pos_emb", (cfg.max_seq, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        out += [
+            (p + "ln1.g", (d,)), (p + "ln1.b", (d,)),
+            (p + "wq", (d, d)), (p + "bq", (d,)),
+            (p + "wk", (d, d)), (p + "bk", (d,)),
+            (p + "wv", (d, d)), (p + "bv", (d,)),
+            (p + "wo", (d, d)), (p + "bo", (d,)),
+            (p + "ln2.g", (d,)), (p + "ln2.b", (d,)),
+            (p + "wf1", (d, f)), (p + "bf1", (f,)),
+            (p + "wf2", (f, d)), (p + "bf2", (d,)),
+        ]
+    out += [
+        ("final_ln.g", (d,)), ("final_ln.b", (d,)),
+        ("head.w", (d, cfg.n_classes)), ("head.b", (cfg.n_classes,)),
+    ]
+    return out
+
+
+def lora_layout(cfg: ModelConfig) -> Layout:
+    """LoRA trainables: rank-r adapters on W_q and W_v of every layer, plus
+    the classifier head (standard fine-tuning practice)."""
+    d, r = cfg.d_model, cfg.lora_rank
+    out: Layout = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        out += [
+            (p + "lora_q.a", (d, r)), (p + "lora_q.b", (r, d)),
+            (p + "lora_v.a", (d, r)), (p + "lora_v.b", (r, d)),
+        ]
+    out += [("head.w", (d, cfg.n_classes)), ("head.b", (cfg.n_classes,))]
+    return out
+
+
+def layout_size(layout: Layout) -> int:
+    return sum(int(np.prod(s)) for _, s in layout)
+
+
+def unflatten(flat: jnp.ndarray, layout: Layout) -> Dict[str, jnp.ndarray]:
+    """Static-offset unflatten (jit-friendly)."""
+    out: Dict[str, jnp.ndarray] = {}
+    off = 0
+    for name, shape in layout:
+        n = int(np.prod(shape))
+        out[name] = flat[off : off + n].reshape(shape)
+        off += n
+    assert off == flat.shape[0], f"layout size {off} != flat size {flat.shape[0]}"
+    return out
+
+
+def flatten(params: Dict[str, jnp.ndarray], layout: Layout) -> jnp.ndarray:
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in layout])
+
+
+def init_ft(cfg: ModelConfig, key: jax.Array) -> jnp.ndarray:
+    """Flat init for the full model (pre-pretraining)."""
+    layout = ft_layout(cfg)
+    parts = []
+    for name, shape in layout:
+        key, sub = jax.random.split(key)
+        if name.endswith((".g",)):
+            parts.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        elif name.endswith((".b", "bq", "bk", "bv", "bo", "bf1", "bf2")):
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            parts.append(
+                (jax.random.normal(sub, shape, jnp.float32) * 0.02).reshape(-1)
+            )
+    return jnp.concatenate(parts)
+
+
+def init_lora(cfg: ModelConfig, key: jax.Array, head_w: jnp.ndarray | None = None,
+              head_b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Flat init for LoRA trainables: A ~ N(0, 0.01), B = 0 (delta starts at 0);
+    head copied from the pretrained model when provided."""
+    layout = lora_layout(cfg)
+    parts = []
+    for name, shape in layout:
+        key, sub = jax.random.split(key)
+        if name.endswith("lora_q.a") or name.endswith("lora_v.a"):
+            parts.append(
+                (jax.random.normal(sub, shape, jnp.float32) * 0.01).reshape(-1)
+            )
+        elif name.endswith(".b") and "lora" in name:
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        elif name == "head.w":
+            w = head_w if head_w is not None else (
+                jax.random.normal(sub, shape, jnp.float32) * 0.02
+            )
+            parts.append(jnp.asarray(w, jnp.float32).reshape(-1))
+        elif name == "head.b":
+            b = head_b if head_b is not None else jnp.zeros(shape, jnp.float32)
+            parts.append(jnp.asarray(b, jnp.float32).reshape(-1))
+        else:  # pragma: no cover - defensive
+            raise ValueError(f"unhandled lora param {name}")
+    return jnp.concatenate(parts)

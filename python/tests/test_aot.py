@@ -1,0 +1,70 @@
+"""AOT pipeline: HLO text emission and manifest schema (fast paths only —
+the full build is exercised by `make artifacts` + the rust integration
+tests)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+def test_to_hlo_text_emits_parseable_hlo(tmp_path):
+    def fn(x, y):
+        return (jnp.dot(x, y) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    info = aot.lower_to_file(fn, (spec, spec), str(tmp_path / "t.hlo.txt"))
+    text = (tmp_path / "t.hlo.txt").read_text()
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert info["bytes"] == len(text)
+    assert info["inputs"][0]["shape"] == [4, 4]
+
+
+def test_toy_graph_values():
+    w = jnp.asarray(np.ones(3, np.float32))
+    x = jnp.asarray(np.eye(3, dtype=np.float32))
+    y = jnp.asarray(np.zeros(3, np.float32))
+    grad, loss = M.linreg_grad_fn(w, x, y)
+    # residual = w; loss = 0.5 * ||w||^2 / 3
+    assert abs(float(loss) - 0.5) < 1e-6
+    np.testing.assert_allclose(np.asarray(grad), np.ones(3) / 3, rtol=1e-6)
+
+
+def test_write_bin_roundtrip(tmp_path):
+    arr = np.arange(7, dtype=np.float32)
+    info = aot.write_bin(str(tmp_path / "a.bin"), arr)
+    assert info["len"] == 7
+    back = np.fromfile(tmp_path / "a.bin", dtype=np.float32)
+    np.testing.assert_array_equal(arr, back)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", "manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_manifest_consistency():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == aot.MANIFEST_VERSION
+    for name, entry in m["models"].items():
+        d_ft = sum(int(np.prod(l["shape"])) for l in entry["layout_ft"])
+        assert d_ft == entry["d_ft"], name
+        d_lora = sum(int(np.prod(l["shape"])) for l in entry["layout_lora"])
+        assert d_lora == entry["d_lora"], name
+        # every artifact file exists and is non-trivial
+        for aname, info in entry["artifacts"].items():
+            path = os.path.join(root, info["file"])
+            assert os.path.exists(path), f"{name}/{aname}"
+            assert os.path.getsize(path) > 1000
+        params = os.path.join(root, entry["params"]["file"])
+        assert os.path.getsize(params) == 4 * entry["d_ft"]
+        lora = os.path.join(root, entry["lora_init"]["file"])
+        assert os.path.getsize(lora) == 4 * entry["d_lora"]

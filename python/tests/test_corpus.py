@@ -1,0 +1,91 @@
+"""Corpus generator invariants + the SplitMix64 ABI test vectors that pin
+the rust port (rust/src/rng/splitmix.rs has the mirror test)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import CorpusSpec, DEFAULT_CORPUS
+from compile.corpus import (
+    CLS,
+    PAD,
+    SplitMix64,
+    TEST_INDEX_BASE,
+    generate_batch,
+    generate_example,
+)
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def test_splitmix_reference_vector():
+    r = SplitMix64(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+    assert r.next_u64() == 0x6E789E6AA1B965F4
+    assert r.next_u64() == 0x06C45D188009454F
+    assert r.next_u64() == 0xF88BB8A8724C81EC
+
+
+def test_example_deterministic():
+    a = generate_example(DEFAULT_CORPUS, 123)
+    b = generate_example(DEFAULT_CORPUS, 123)
+    np.testing.assert_array_equal(a[0], b[0])
+    assert a[2] == b[2]
+
+
+@given(index=st.integers(0, 10_000))
+def test_example_structure(index):
+    ids, mask, label, clean = generate_example(DEFAULT_CORPUS, index)
+    assert ids.shape == (DEFAULT_CORPUS.seq,)
+    assert ids[0] == CLS
+    assert label in (0, 1) and clean in (0, 1)
+    # prefix mask
+    length = int(mask.sum())
+    assert DEFAULT_CORPUS.min_len <= length < DEFAULT_CORPUS.seq
+    assert (mask[:length] == 1.0).all() and (mask[length:] == 0.0).all()
+    # padding is PAD; valid tokens are in-vocab
+    assert (ids[length:] == PAD).all()
+    assert (ids[1:length] >= 2).all()
+    assert (ids[:length] < DEFAULT_CORPUS.vocab).all()
+
+
+def test_labels_balanced():
+    _, _, labels = generate_batch(DEFAULT_CORPUS, 0, 2000)
+    frac = labels.mean()
+    assert abs(frac - 0.5) < 0.05
+
+
+def test_noise_rate_close_to_spec():
+    flips = 0
+    n = 3000
+    for i in range(n):
+        _, _, label, clean = generate_example(DEFAULT_CORPUS, i)
+        flips += int(label != clean)
+    rate = flips / n
+    assert abs(rate - DEFAULT_CORPUS.noise) < 0.015
+
+
+def test_train_test_streams_disjoint():
+    tr = generate_batch(DEFAULT_CORPUS, 0, 8)
+    te = generate_batch(DEFAULT_CORPUS, TEST_INDEX_BASE, 8)
+    assert not np.array_equal(tr[0], te[0])
+
+
+def test_signal_majority_tracks_clean_label():
+    lex = DEFAULT_CORPUS.lexicon
+    agree = total = 0
+    for i in range(500):
+        ids, _, _, clean = generate_example(DEFAULT_CORPUS, i)
+        pos = ((ids >= 2) & (ids < 2 + lex)).sum()
+        neg = ((ids >= 2 + lex) & (ids < 2 + 2 * lex)).sum()
+        if pos != neg:
+            total += 1
+            agree += int((0 if pos > neg else 1) == clean)
+    assert agree / total > 0.9
+
+
+def test_different_seeds_different_corpora():
+    spec2 = CorpusSpec(vocab=4096, seq=32, seed=999)
+    a = generate_example(DEFAULT_CORPUS, 0)[0]
+    b = generate_example(spec2, 0)[0]
+    assert not np.array_equal(a, b)

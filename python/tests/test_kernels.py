@@ -1,0 +1,159 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp reference oracle.
+
+Hypothesis sweeps shapes and seeds; tolerances are tight because
+interpret=True executes the same f32 arithmetic as the reference.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention,
+    axpy,
+    layernorm,
+    lora_matmul,
+    perturb_normalize,
+    ref,
+)
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("bh,s,dh", [(2, 8, 16), (6, 16, 32), (4, 32, 32)])
+def test_attention_matches_ref(causal, bh, s, dh):
+    rng = np.random.default_rng(bh * 100 + s)
+    q, k, v = (rand(rng, bh, s, dh) for _ in range(3))
+    # prefix-valid masks (the only shape the corpus produces)
+    lens = rng.integers(1, s + 1, size=bh)
+    mask = jnp.asarray(
+        (np.arange(s)[None, :] < lens[:, None]).astype(np.float32)
+    )
+    out = attention(q, k, v, mask, causal=causal)
+    expect = jnp.stack(
+        [ref.attention_ref(q[i], k[i], v[i], mask[i], causal=causal)
+         for i in range(bh)]
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), s=st.sampled_from([4, 8, 16]),
+       dh=st.sampled_from([8, 16, 32]))
+def test_attention_hypothesis(seed, s, dh):
+    rng = np.random.default_rng(seed)
+    q, k, v = (rand(rng, 2, s, dh) for _ in range(3))
+    mask = jnp.ones((2, s), jnp.float32)
+    out = attention(q, k, v, mask, causal=False)
+    expect = jnp.stack(
+        [ref.attention_ref(q[i], k[i], v[i], mask[i]) for i in range(2)]
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    # each output row lies in the convex hull of the V rows: max bound
+    rng = np.random.default_rng(0)
+    q, k = rand(rng, 2, 8, 16), rand(rng, 2, 8, 16)
+    v = jnp.asarray(rng.uniform(0, 1, size=(2, 8, 16)), jnp.float32)
+    mask = jnp.ones((2, 8), jnp.float32)
+    out = np.asarray(attention(q, k, v, mask))
+    assert out.max() <= float(np.asarray(v).max()) + 1e-5
+    assert out.min() >= float(np.asarray(v).min()) - 1e-5
+
+
+# ---------------------------------------------------------------------------
+# perturb (axpy)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.sampled_from([1, 17, 1000, 65536, 65537, 200_000]),
+       scale=st.floats(-2.0, 2.0, allow_nan=False))
+def test_axpy_matches_ref(seed, n, scale):
+    rng = np.random.default_rng(seed)
+    x, d = rand(rng, n), rand(rng, n)
+    out = axpy(x, d, jnp.float32(scale))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.axpy_ref(x, d, scale)),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_axpy_zero_scale_is_identity():
+    rng = np.random.default_rng(1)
+    x, d = rand(rng, 1000), rand(rng, 1000)
+    out = axpy(x, d, jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_perturb_normalize_unit_step():
+    rng = np.random.default_rng(2)
+    x, d = rand(rng, 512), rand(rng, 512)
+    out = perturb_normalize(x, d, jnp.float32(0.1))
+    step = np.asarray(out) - np.asarray(x)
+    assert abs(np.linalg.norm(step) - 0.1) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# lora matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,din,dout,r", [(8, 32, 64, 4), (16, 64, 200, 8),
+                                          (32, 128, 128, 8)])
+def test_lora_matches_ref(s, din, dout, r):
+    rng = np.random.default_rng(s + dout)
+    x, w = rand(rng, s, din), rand(rng, din, dout)
+    a, b = rand(rng, din, r), rand(rng, r, dout)
+    out = lora_matmul(x, w, a, b, 2.0)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.lora_matmul_ref(x, w, a, b, 2.0)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_lora_zero_b_equals_base_matmul():
+    rng = np.random.default_rng(3)
+    x, w = rand(rng, 8, 32), rand(rng, 32, 48)
+    a = rand(rng, 32, 4)
+    b = jnp.zeros((4, 48), jnp.float32)
+    out = lora_matmul(x, w, a, b, 2.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([1, 7, 128, 300]),
+       d=st.sampled_from([8, 64, 128]))
+def test_layernorm_matches_ref(seed, n, d):
+    rng = np.random.default_rng(seed)
+    x, g, b = rand(rng, n, d), rand(rng, d), rand(rng, d)
+    out = layernorm(x, g, b)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.layernorm_ref(x, g, b)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_layernorm_output_standardized():
+    rng = np.random.default_rng(4)
+    x = rand(rng, 64, 128) * 10.0 + 3.0
+    g = jnp.ones(128, jnp.float32)
+    b = jnp.zeros(128, jnp.float32)
+    out = np.asarray(layernorm(x, g, b))
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-2)

@@ -1,0 +1,165 @@
+"""L2 correctness: the kernel-backed forward vs the pure-jnp twin, the
+artifact graphs' algebraic identities, and parameter-layout invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import corpus, model as M, params as P
+from compile.configs import DEFAULT_CORPUS, OPT_MINI, ROBERTA_MINI
+
+
+CFGS = [ROBERTA_MINI, OPT_MINI]
+
+
+def batch_for(cfg, n=4, start=0):
+    spec = DEFAULT_CORPUS
+    ids, mask, labels = corpus.generate_batch(spec, start, n)
+    return jnp.asarray(ids), jnp.asarray(mask), jnp.asarray(labels)
+
+
+@pytest.fixture(scope="module")
+def flats():
+    return {
+        cfg.name: P.init_ft(cfg, jax.random.PRNGKey(0)) for cfg in CFGS
+    }
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_kernel_forward_matches_pure(cfg, flats):
+    flat = flats[cfg.name]
+    layout = P.ft_layout(cfg)
+    p = P.unflatten(flat, layout)
+    ids, mask, _ = batch_for(cfg)
+    out_kernel = M.forward(cfg, p, ids, mask)
+    out_pure = M.forward_pure(cfg, p, ids, mask)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_pure),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_kernel_forward_matches_pure_lora(cfg, flats):
+    flat = flats[cfg.name]
+    p = P.unflatten(flat, P.ft_layout(cfg))
+    lora_flat = P.init_lora(cfg, jax.random.PRNGKey(5))
+    # make the adapters non-trivial (B is zero-init by default)
+    lora_flat = lora_flat.at[:].add(
+        0.01 * jax.random.normal(jax.random.PRNGKey(6), lora_flat.shape)
+    )
+    lora = P.unflatten(lora_flat, P.lora_layout(cfg))
+    ids, mask, _ = batch_for(cfg)
+    out_kernel = M.forward(cfg, p, ids, mask, lora=lora)
+    out_pure = M.forward_pure(cfg, p, ids, mask, lora=lora)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_pure),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lora_zero_adapters_equal_base_ft():
+    """LoRA with B=0 and the base head must reproduce the FT logits."""
+    cfg = ROBERTA_MINI
+    flat = P.init_ft(cfg, jax.random.PRNGKey(1))
+    p = P.unflatten(flat, P.ft_layout(cfg))
+    lora_flat = P.init_lora(cfg, jax.random.PRNGKey(2),
+                            head_w=p["head.w"], head_b=p["head.b"])
+    lora = P.unflatten(lora_flat, P.lora_layout(cfg))
+    ids, mask, _ = batch_for(cfg)
+    np.testing.assert_allclose(
+        np.asarray(M.forward_pure(cfg, p, ids, mask, lora=lora)),
+        np.asarray(M.forward_pure(cfg, p, ids, mask)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_loss_dir_zero_equals_loss():
+    cfg = ROBERTA_MINI
+    flat = P.init_ft(cfg, jax.random.PRNGKey(3))
+    fns = M.make_ft_fns(cfg)
+    ids, mask, labels = batch_for(cfg, n=4)
+    base = fns["loss"](flat, ids, mask, labels)[0]
+    zero = jnp.zeros_like(flat)
+    perturbed = fns["loss_dir"](flat, zero, jnp.float32(0.5), ids, mask, labels)[0]
+    assert abs(float(base) - float(perturbed)) < 1e-6
+
+
+def test_loss_k_equals_stacked_loss_dir():
+    cfg = ROBERTA_MINI
+    flat = P.init_ft(cfg, jax.random.PRNGKey(4))
+    fns = M.make_ft_fns(cfg)
+    ids, mask, labels = batch_for(cfg, n=4)
+    k = 3
+    dirs = jax.random.normal(jax.random.PRNGKey(9), (k, flat.size))
+    tau = jnp.float32(1e-3)
+    fused = fns["loss_k"](flat, dirs, tau, ids, mask, labels)[0]
+    looped = jnp.stack([
+        fns["loss_dir"](flat, dirs[i], tau, ids, mask, labels)[0]
+        for i in range(k)
+    ])
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(looped),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_causal_model_ignores_future_tokens():
+    """opt_mini pools the last valid token; with causal masking, changing a
+    PAD token *after* the last valid position must not change logits."""
+    cfg = OPT_MINI
+    flat = P.init_ft(cfg, jax.random.PRNGKey(7))
+    p = P.unflatten(flat, P.ft_layout(cfg))
+    ids, mask, _ = batch_for(cfg, n=2)
+    out1 = M.forward_pure(cfg, p, ids, mask)
+    ids2 = ids.at[:, -1].set(17)  # both rows have trailing padding
+    assert float(mask[:, -1].sum()) == 0.0
+    out2 = M.forward_pure(cfg, p, ids2, mask)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_encoder_attends_bidirectionally():
+    """roberta_mini (non-causal) pools [CLS]; changing a valid *later*
+    token must change the [CLS] logits."""
+    cfg = ROBERTA_MINI
+    flat = P.init_ft(cfg, jax.random.PRNGKey(8))
+    p = P.unflatten(flat, P.ft_layout(cfg))
+    ids, mask, _ = batch_for(cfg, n=2)
+    out1 = M.forward_pure(cfg, p, ids, mask)
+    j = 5
+    assert float(mask[0, j]) == 1.0
+    ids2 = ids.at[0, j].set((int(ids[0, j]) % 100) + 200)
+    out2 = M.forward_pure(cfg, p, ids2, mask)
+    assert np.abs(np.asarray(out1[0]) - np.asarray(out2[0])).max() > 1e-7
+
+
+def test_cross_entropy_uniform_is_log_c():
+    logits = jnp.zeros((4, 2))
+    labels = jnp.asarray([0, 1, 0, 1])
+    ce = M.cross_entropy(logits, labels)
+    assert abs(float(ce) - np.log(2.0)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# parameter layout ABI
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_flatten_unflatten_roundtrip(cfg):
+    layout = P.ft_layout(cfg)
+    flat = P.init_ft(cfg, jax.random.PRNGKey(11))
+    p = P.unflatten(flat, layout)
+    flat2 = P.flatten(p, layout)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(flat2))
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_layout_sizes(cfg):
+    d_ft = P.layout_size(P.ft_layout(cfg))
+    d_lora = P.layout_size(P.lora_layout(cfg))
+    assert d_ft > 1_000_000  # mini models are ~1-2M params
+    assert d_lora < d_ft // 10  # LoRA is a small fraction
+    # lora layout: 4 adapters per layer + head
+    assert len(P.lora_layout(cfg)) == 4 * cfg.n_layers + 2
+
+
+def test_layout_names_unique():
+    for cfg in CFGS:
+        names = [n for n, _ in P.ft_layout(cfg)]
+        assert len(names) == len(set(names))

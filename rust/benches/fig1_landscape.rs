@@ -1,0 +1,51 @@
+//! Bench: regenerate Fig. 1 (the alignment landscape) and verify its
+//! qualitative structure: saddle at mu = 0, ridges along +-grad f,
+//! valleys orthogonal to it.
+//!
+//!     cargo bench --bench fig1_landscape
+
+use zo_ldsd::bench::Bencher;
+use zo_ldsd::report::Table;
+use zo_ldsd::sampler::expected_alignment_mc;
+
+fn main() {
+    let eps = 0.25f32;
+    let grad = [1.0f32, 0.0];
+    let at = |x: f32, y: f32| expected_alignment_mc(&[x, y], &grad, eps, 20_000, 7);
+
+    let mut t = Table::new(
+        "Fig. 1 landmarks: E[C] over mu (d = 2, grad f = (1,0), eps = 0.25)",
+        &["mu", "E[C]", "paper structure"],
+    );
+    let saddle = at(0.0, 0.0);
+    let ridge_p = at(2.0, 0.0);
+    let ridge_n = at(-2.0, 0.0);
+    let valley = at(0.0, 2.0);
+    let diag = at(1.5, 1.5);
+    t.row(vec!["(0, 0)".into(), format!("{saddle:.3}"), "saddle = 1/d = 0.5".into()]);
+    t.row(vec!["(2, 0)".into(), format!("{ridge_p:.3}"), "aligned ridge -> 1".into()]);
+    t.row(vec!["(-2, 0)".into(), format!("{ridge_n:.3}"), "mirror ridge (mu -> -mu symmetry)".into()]);
+    t.row(vec!["(0, 2)".into(), format!("{valley:.3}"), "orthogonal valley -> 0".into()]);
+    t.row(vec!["(1.5, 1.5)".into(), format!("{diag:.3}"), "diagonal = 1/2 (cos^2 45deg)".into()]);
+    t.print();
+
+    // structural assertions (the figure's whole point)
+    assert!((saddle - 0.5).abs() < 0.02, "saddle should be 1/d");
+    assert!(ridge_p > 0.95 && ridge_n > 0.95, "ridges should approach 1");
+    assert!(valley < 0.05, "valley should approach 0");
+    assert!((ridge_p - ridge_n).abs() < 0.02, "mu -> -mu symmetry");
+    println!("\nstructure checks passed (saddle/ridge/valley/symmetry)\n");
+
+    let mut b = Bencher::new();
+    b.max_seconds = 3.0;
+    b.bench("alignment_mc_4000_samples_d2", 4000.0, || {
+        let _ = expected_alignment_mc(&[1.0, 0.5], &grad, eps, 4000, 3);
+    });
+    let big_mu = vec![0.1f32; 4096];
+    let mut big_g = vec![0.0f32; 4096];
+    big_g[0] = 1.0;
+    b.bench("alignment_mc_200_samples_d4096", 200.0, || {
+        let _ = expected_alignment_mc(&big_mu, &big_g, eps, 200, 3);
+    });
+    b.finish();
+}

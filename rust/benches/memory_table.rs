@@ -1,0 +1,44 @@
+//! Bench: the ZO-vs-first-order memory table (paper §1 motivation),
+//! from first-principles byte accounting on the manifest's models.
+//!
+//!     cargo bench --bench memory_table
+
+use zo_ldsd::config::Manifest;
+use zo_ldsd::metrics::MemoryReport;
+use zo_ldsd::report::Table;
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("SKIP memory bench: artifacts/ not built");
+        return;
+    };
+    for (name, m) in &manifest.models {
+        let report = MemoryReport::build(
+            m.d_ft, m.d_ft, m.shapes.batch, m.shapes.seq, m.d_model,
+            4 * m.d_model, 4, m.n_layers, m.shapes.k,
+        );
+        let mut t = Table::new(
+            &format!("memory: {name} full fine-tuning (d = {})", m.d_ft),
+            &["method", "total MiB", "x inference"],
+        );
+        let mut fo_adam = 0.0f64;
+        let mut zo_sgd = 0.0f64;
+        for r in &report {
+            let mib = r.total() as f64 / (1 << 20) as f64;
+            if r.method == "fo_adam" {
+                fo_adam = mib;
+            }
+            if r.method.starts_with("zo_sgd (") {
+                zo_sgd = mib;
+            }
+            t.row(vec![
+                r.method.clone(),
+                format!("{mib:.1}"),
+                format!("{:.2}", r.over_inference()),
+            ]);
+        }
+        t.print();
+        println!("zo_sgd saves {:.1}x over fo_adam\n", fo_adam / zo_sgd);
+        assert!(fo_adam > zo_sgd, "ZO must beat FO Adam on memory");
+    }
+}

@@ -1,0 +1,110 @@
+//! Bench: hot-path decomposition (§Perf of EXPERIMENTS.md).
+//!
+//! Times every stage of one ZO training step on the PJRT oracle —
+//! sampling, fused K-probe dispatch vs K single dispatches, the central
+//! difference, the policy update, the optimizer axpy — plus the pure-rust
+//! O(d) kernels, so regressions localize immediately.
+//!
+//!     cargo bench --bench perf_hotpath
+
+use zo_ldsd::bench::Bencher;
+use zo_ldsd::config::{Manifest, TrainMode};
+use zo_ldsd::data::Corpus;
+use zo_ldsd::oracle::{Oracle, PjrtOracle};
+use zo_ldsd::runtime::Runtime;
+use zo_ldsd::sampler::{DirectionSampler, GaussianSampler, LdsdConfig, LdsdSampler};
+use zo_ldsd::tensor::{axpy, axpy_into, dot, nrm2};
+
+fn main() {
+    let mut b = Bencher::new();
+    b.max_seconds = 3.0;
+
+    // --- pure-rust O(d) kernels ------------------------------------------
+    let d = 1_321_986usize; // roberta_mini d_ft
+    let x = vec![0.5f32; d];
+    let mut y = vec![0.25f32; d];
+    let mut out = vec![0.0f32; d];
+    b.bench("tensor/axpy_1.3M", d as f64, || axpy(0.1, &x, &mut y));
+    b.bench("tensor/axpy_into_1.3M", d as f64, || {
+        axpy_into(&mut out, &x, 0.1, &y)
+    });
+    b.bench("tensor/dot_1.3M", d as f64, || {
+        std::hint::black_box(dot(&x, &y));
+    });
+    b.bench("tensor/nrm2_1.3M", d as f64, || {
+        std::hint::black_box(nrm2(&x));
+    });
+
+    // --- RNG: scalar cached-spare path vs the pairwise hot loop -----------
+    // (§Perf optimization #1: FT-mode LDSD draws K*d = 6.6M normals/step)
+    {
+        use zo_ldsd::rng::Rng;
+        let n = 1_000_000usize;
+        let mut buf = vec![0.0f32; n];
+        let mut r1 = Rng::new(1);
+        b.bench("rng/normal_scalar_1M", n as f64, || {
+            for v in buf.iter_mut() {
+                *v = r1.normal() as f32;
+            }
+        });
+        let mut r2 = Rng::new(1);
+        b.bench("rng/fill_normal_pairwise_1M", n as f64, || {
+            r2.fill_normal(&mut buf);
+        });
+    }
+
+    // --- samplers ----------------------------------------------------------
+    let mut gauss = GaussianSampler::new(d, 1);
+    let mut dirs = vec![0.0f32; d];
+    b.bench("sampler/gaussian_1dir_1.3M", d as f64, || {
+        gauss.sample(&mut dirs, 1)
+    });
+    let d_lora = 16_642usize;
+    let mut ldsd = LdsdSampler::new(d_lora, 2, LdsdConfig::default());
+    let mut dirs5 = vec![0.0f32; 5 * d_lora];
+    b.bench("sampler/ldsd_5dirs_16k", (5 * d_lora) as f64, || {
+        ldsd.sample(&mut dirs5, 5)
+    });
+    let losses = [0.5f64, 0.4, 0.6, 0.45, 0.55];
+    b.bench("sampler/ldsd_observe_k5_16k", (5 * d_lora) as f64, || {
+        ldsd.observe(&dirs5, &losses, 5)
+    });
+
+    // --- PJRT oracle -------------------------------------------------------
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("(skipping PJRT benches: artifacts/ not built)");
+        b.finish();
+        return;
+    };
+    let rt = Runtime::new("artifacts").unwrap();
+    let entry = manifest.model("roberta_mini").unwrap();
+    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone());
+    let batch = corpus.train_batch(0, entry.shapes.batch);
+
+    for (mode, label) in [(TrainMode::Lora, "lora"), (TrainMode::Ft, "ft")] {
+        let mut oracle = PjrtOracle::new(&rt, entry, mode).unwrap();
+        oracle.set_batch(&batch).unwrap();
+        let dt = oracle.dim();
+        let k = entry.shapes.k;
+        let dir: Vec<f32> = vec![0.01; dt];
+        let dirs: Vec<f32> = vec![0.01; k * dt];
+
+        b.bench(&format!("pjrt/{label}_loss_dir_1fwd"), 1.0, || {
+            oracle.loss_dir(&dir, 1e-3).unwrap();
+        });
+        b.bench(&format!("pjrt/{label}_loss_k_fused_{k}fwd"), k as f64, || {
+            oracle.loss_k(&dirs, k, 1e-3).unwrap();
+        });
+        b.bench(&format!("pjrt/{label}_loss_k_looped_{k}fwd"), k as f64, || {
+            for i in 0..k {
+                oracle.loss_dir(&dirs[i * dt..(i + 1) * dt], 1e-3).unwrap();
+            }
+        });
+        // param re-upload cost after an optimizer step
+        b.bench(&format!("pjrt/{label}_step_with_param_upload"), 1.0, || {
+            oracle.update_params(&mut |x| x[0] += 1e-7).unwrap();
+            oracle.loss_dir(&dir, 1e-3).unwrap();
+        });
+    }
+    b.finish();
+}

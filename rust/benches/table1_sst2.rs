@@ -1,0 +1,81 @@
+//! Bench: a scaled-down Table 1 — the three sampling schemes under one
+//! base optimizer per run, fixed oracle budget, on the PJRT-backed models.
+//! (The full grid lives in `examples/table1.rs`; this bench keeps `cargo
+//! bench` affordable while still exercising the ordering claim.)
+//!
+//!     cargo bench --bench table1_sst2            # zo_sgd, roberta_mini/LoRA
+//!     cargo bench --bench table1_sst2 -- full    # all optimizers
+
+use zo_ldsd::config::{Manifest, TrainMode};
+use zo_ldsd::coordinator::{run_grid, TrialSpec};
+use zo_ldsd::report::Table;
+use zo_ldsd::train::TrainConfig;
+
+fn main() {
+    let dir = "artifacts";
+    if Manifest::load(dir).is_err() {
+        eprintln!("SKIP table1 bench: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let full = std::env::args().any(|a| a == "full");
+    let budget = std::env::var("T1_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1200u64);
+
+    // calibrated LoRA learning rates (see EXPERIMENTS.md / examples/table1.rs)
+    let optimizers: &[(&str, f32)] = if full {
+        &[("zo_sgd", 1e-4), ("zo_adamm", 1e-3), ("jaguar", 5e-5)]
+    } else {
+        &[("zo_sgd", 1e-4)]
+    };
+
+    let mut specs = Vec::new();
+    for (optimizer, lr) in optimizers {
+        for (method, cfg) in [
+            ("gauss_2fwd", TrainConfig::gaussian_2fwd(optimizer, *lr, budget)),
+            ("gauss_6fwd", TrainConfig::gaussian_6fwd(optimizer, *lr, budget)),
+            ("alg2", TrainConfig::algorithm2(optimizer, *lr, budget)),
+        ] {
+            specs.push(TrialSpec {
+                id: format!("roberta_mini/lora/{optimizer}/{method}"),
+                model: "roberta_mini".into(),
+                mode: TrainMode::Lora,
+                config: cfg,
+                eval_batches: 8,
+            });
+        }
+    }
+
+    let t0 = std::time::Instant::now();
+    let results = run_grid(dir, specs, 3);
+    let mut table = Table::new(
+        &format!("Table 1 (bench subset, budget {budget} forwards)"),
+        &["trial", "accuracy", "steps", "secs"],
+    );
+    let mut accs = std::collections::BTreeMap::new();
+    for r in &results {
+        match r {
+            Ok(tr) => {
+                table.row(vec![
+                    tr.spec_id.clone(),
+                    format!("{:.4}", tr.outcome.final_accuracy),
+                    tr.outcome.steps.to_string(),
+                    format!("{:.1}", tr.outcome.wall_seconds),
+                ]);
+                let method = tr.spec_id.rsplit('/').next().unwrap().to_string();
+                accs.entry(method).or_insert(tr.outcome.final_accuracy);
+            }
+            Err(e) => eprintln!("trial failed: {e:#}"),
+        }
+    }
+    table.print();
+    if let (Some(a2), Some(g2), Some(g6)) =
+        (accs.get("alg2"), accs.get("gauss_2fwd"), accs.get("gauss_6fwd"))
+    {
+        println!(
+            "\nordering check (paper: alg2 best, 6fwd <= 2fwd): alg2 {a2:.4}, 2fwd {g2:.4}, 6fwd {g6:.4}"
+        );
+    }
+    println!("total {:.0}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,129 @@
+//! Bench harness substrate (replaces criterion; vendored set lacks it).
+//!
+//! `rust/benches/*.rs` are `harness = false` binaries built on this:
+//! warmup, timed iterations, and a markdown summary via [`Bencher`].
+//! Filters come from argv so `cargo bench -- <filter>` keeps working.
+
+use std::time::Instant;
+
+use crate::metrics::Summary;
+use crate::report::Table;
+
+/// Times closures and accumulates a result table.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub max_seconds: f64,
+    filter: Option<String>,
+    table: Table,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            max_seconds: 5.0,
+            filter,
+            table: Table::new(
+                "bench results",
+                &["name", "iters", "mean", "p50", "p95", "throughput"],
+            ),
+        }
+    }
+
+    /// Honour `cargo bench -- <filter>`.
+    pub fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Time `f`; `work_units` scales the throughput column (e.g. oracle
+    /// calls per invocation).  Returns per-iteration seconds.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, work_units: f64, mut f: F) -> Option<Summary> {
+        if !self.enabled(name) {
+            return None;
+        }
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters
+                && start.elapsed().as_secs_f64() < self.max_seconds)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let s = Summary::of(&samples);
+        let throughput = if s.mean > 0.0 { work_units / s.mean } else { 0.0 };
+        self.table.row(vec![
+            name.to_string(),
+            format!("{}", s.n),
+            format_seconds(s.mean),
+            format_seconds(s.p50),
+            format_seconds(s.p95),
+            format!("{throughput:.1}/s"),
+        ]);
+        Some(s)
+    }
+
+    /// Print the accumulated table (call once at the end of main).
+    pub fn finish(&self) {
+        if !self.table.rows.is_empty() {
+            self.table.print();
+        }
+    }
+}
+
+pub fn format_seconds(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher::new();
+        b.max_seconds = 0.05;
+        b.min_iters = 3;
+        let mut count = 0usize;
+        let s = b.bench("noop", 1.0, || count += 1);
+        // filter from argv may disable in `cargo test` context; tolerate None
+        if let Some(s) = s {
+            assert!(s.n >= 3);
+            assert!(count >= 3 + b.warmup_iters);
+        }
+    }
+
+    #[test]
+    fn second_formatting() {
+        assert_eq!(format_seconds(2.0), "2.000s");
+        assert_eq!(format_seconds(0.002), "2.000ms");
+        assert_eq!(format_seconds(2e-6), "2.000us");
+        assert!(format_seconds(2e-9).ends_with("ns"));
+    }
+}

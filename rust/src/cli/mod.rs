@@ -1,0 +1,192 @@
+//! CLI argument parsing substrate (replaces clap).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed accessors and a generated usage
+//! string.  Used by `rust/src/main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding argv[0]).  `subcommands` lists the recognized
+    /// first tokens; pass `&[]` for a flat CLI.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        subcommands: &[&str],
+    ) -> Result<Self> {
+        Self::parse_with_flags(argv, subcommands, &[])
+    }
+
+    /// Like [`Args::parse`] but with declared boolean flags: a token in
+    /// `flags` never consumes the following argument as its value (so
+    /// `--verbose positional` parses as flag + positional).
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(
+        argv: I,
+        subcommands: &[&str],
+        declared_flags: &[&str],
+    ) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if subcommands.contains(&first.as_str()) {
+                out.subcommand = iter.next();
+            }
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // "--": everything after is positional
+                    out.positional.extend(iter.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.entry(k.to_string()).or_default().push(v.to_string());
+                } else if declared_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else {
+                    // value-taking if next token isn't another option
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.options
+                                .entry(stripped.to_string())
+                                .or_default()
+                                .push(v);
+                        }
+                        _ => out.flags.push(stripped.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(subcommands: &[&str]) -> Result<Self> {
+        Self::parse(std::env::args().skip(1), subcommands)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// All values for a repeatable option (e.g. `--set a=1 --set b=2`).
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow!("--{name} '{s}': {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow!("--{name} '{s}': {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow!("--{name} '{s}': {e}")),
+        }
+    }
+
+    /// Error on unknown options (call after reading everything you accept).
+    pub fn reject_unknown(&self, known_opts: &[&str], known_flags: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known_opts.contains(&k.as_str()) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !known_flags.contains(&f.as_str()) && !known_opts.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_with_flags(
+            s.split_whitespace().map(String::from),
+            &["train", "toy"],
+            &["verbose"],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --model roberta_mini --lr=1e-6 --verbose pos1");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("roberta_mini"));
+        assert_eq!(a.get("lr"), Some("1e-6"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = parse("train --set a=1 --set b=2");
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+        assert_eq!(a.get("set"), Some("b=2"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("toy --steps 50 --gamma 2.5");
+        assert_eq!(a.get_usize("steps", 1).unwrap(), 50);
+        assert_eq!(a.get_f64("gamma", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("absent", 9.0).unwrap(), 9.0);
+        assert!(a.get_f64("steps", 0.0).is_ok());
+        let bad = parse("toy --steps abc");
+        assert!(bad.get_usize("steps", 1).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("train -- --not-an-option");
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn reject_unknown_catches_typos() {
+        let a = parse("train --modle x");
+        assert!(a.reject_unknown(&["model"], &[]).is_err());
+    }
+}

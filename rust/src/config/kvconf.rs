@@ -1,0 +1,209 @@
+//! `key = value` experiment-config files with sections and overrides.
+//!
+//! Format (a pragmatic TOML subset — the vendor set has no serde/toml):
+//!
+//! ```text
+//! # comment
+//! model = roberta_mini
+//! [optimizer]
+//! name = zo_sgd
+//! lr = 1e-6
+//! momentum = 0.9
+//! ```
+//!
+//! Section keys flatten to `section.key`.  CLI overrides (`--set a.b=c`)
+//! are applied on top with `apply_override`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct KvConfig {
+    entries: BTreeMap<String, String>,
+}
+
+impl KvConfig {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unclosed section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, unquote(value.trim()));
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Apply a `key=value` override (CLI `--set`).
+    pub fn apply_override(&mut self, spec: &str) -> Result<()> {
+        let (k, v) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override '{spec}' must be key=value"))?;
+        self.entries.insert(k.trim().to_string(), unquote(v.trim()));
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.entries.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing config key '{key}'"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow!("config '{key}' = '{s}': {e}")),
+        }
+    }
+
+    pub fn get_f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.get_f64(key)?.unwrap_or(default))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow!("config '{key}' = '{s}': {e}")),
+        }
+    }
+
+    pub fn get_usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_usize(key)?.unwrap_or(default))
+    }
+
+    pub fn get_u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow!("config '{key}' = '{s}': {e}")),
+        }
+    }
+
+    pub fn get_bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(s) => bail!("config '{key}' = '{s}' is not a boolean"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside quotes
+    let mut in_quotes = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(s: &str) -> String {
+    if s.len() >= 2 && s.starts_with('"') && s.ends_with('"') {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = KvConfig::parse(
+            "model = roberta_mini # inline comment\n\
+             [optimizer]\n\
+             name = \"zo_sgd\"\n\
+             lr = 1e-6\n\
+             steps = 400\n\
+             nesterov = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("model"), Some("roberta_mini"));
+        assert_eq!(c.get("optimizer.name"), Some("zo_sgd"));
+        assert_eq!(c.get_f64("optimizer.lr").unwrap(), Some(1e-6));
+        assert_eq!(c.get_usize("optimizer.steps").unwrap(), Some(400));
+        assert!(c.get_bool_or("optimizer.nesterov", false).unwrap());
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = KvConfig::parse("a = 1\n").unwrap();
+        c.apply_override("a=2").unwrap();
+        c.apply_override("b.c=3").unwrap();
+        assert_eq!(c.get("a"), Some("2"));
+        assert_eq!(c.get("b.c"), Some("3"));
+    }
+
+    #[test]
+    fn errors_are_descriptive() {
+        assert!(KvConfig::parse("[open\n").is_err());
+        assert!(KvConfig::parse("novalue\n").is_err());
+        let c = KvConfig::parse("x = notanumber\n").unwrap();
+        assert!(c.get_f64("x").is_err());
+        assert!(c.require("nope").is_err());
+    }
+
+    #[test]
+    fn hash_inside_quotes_kept() {
+        let c = KvConfig::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(c.get("s"), Some("a#b"));
+    }
+}

@@ -1,0 +1,371 @@
+//! Typed loader for artifacts/manifest.json (MANIFEST_VERSION guarded).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::corpus::CorpusSpec;
+use crate::jsonio::{parse, Json};
+
+/// Manifest schema version this loader understands (mirrors
+/// `python/compile/aot.py::MANIFEST_VERSION`).
+pub const SUPPORTED_VERSION: u64 = 3;
+
+/// Which parameter set is trainable (and therefore perturbed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TrainMode {
+    Ft,
+    Lora,
+}
+
+impl TrainMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TrainMode::Ft => "ft",
+            TrainMode::Lora => "lora",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ft" => Ok(TrainMode::Ft),
+            "lora" => Ok(TrainMode::Lora),
+            _ => bail!("unknown train mode '{s}' (expected ft|lora)"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub bytes: usize,
+}
+
+/// Static shapes of a model's artifacts.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelShapes {
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub seq: usize,
+    pub k: usize,
+    pub n_classes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub d_ft: usize,
+    pub d_lora: usize,
+    pub shapes: ModelShapes,
+    pub causal: bool,
+    pub pool: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub layout_ft: Vec<LayoutEntry>,
+    pub layout_lora: Vec<LayoutEntry>,
+    pub params_file: String,
+    pub lora_init_file: String,
+    /// held-out accuracy of the pretrained checkpoint (trained head)
+    pub pretrain_accuracy: Option<f64>,
+    /// accuracy after head re-initialization (what rust fine-tuning starts
+    /// from; ~chance level)
+    pub init_accuracy: Option<f64>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl ModelEntry {
+    /// Trainable dimensionality under a mode.
+    pub fn d_trainable(&self, mode: TrainMode) -> usize {
+        match mode {
+            TrainMode::Ft => self.d_ft,
+            TrainMode::Lora => self.d_lora,
+        }
+    }
+
+    /// Artifact name (runtime cache key) for a graph of this model.
+    pub fn artifact(&self, mode: TrainMode, fn_name: &str) -> String {
+        format!("{}_{}_{}", self.name, mode.as_str(), fn_name)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: u64,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub corpora: BTreeMap<String, CorpusSpec>,
+    pub toy_d: usize,
+    pub toy_n: usize,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let root = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = root
+            .field("version")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_u64()
+            .ok_or_else(|| anyhow!("manifest version not an integer"))?;
+        if version != SUPPORTED_VERSION {
+            bail!(
+                "manifest version {version} unsupported (want {SUPPORTED_VERSION}); \
+                 re-run `make artifacts`"
+            );
+        }
+        let mut corpora = BTreeMap::new();
+        if let Some(cs) = root.get("corpus").and_then(Json::as_obj) {
+            for (name, c) in cs {
+                corpora.insert(name.clone(), parse_corpus(c)?);
+            }
+        }
+        let mut models = BTreeMap::new();
+        let model_obj = root
+            .field("models")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models is not an object"))?;
+        for (name, m) in model_obj {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        let toy = root.get("toy");
+        let toy_d = toy
+            .and_then(|t| t.get("d"))
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        let toy_n = toy
+            .and_then(|t| t.get("n"))
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        Ok(Self { version, models, corpora, toy_d, toy_n })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn corpus(&self, model: &str) -> Result<&CorpusSpec> {
+        self.corpora
+            .get(model)
+            .ok_or_else(|| anyhow!("no corpus spec for model '{model}'"))
+    }
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.field(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_usize()
+        .ok_or_else(|| anyhow!("field '{key}' is not a non-negative integer"))
+}
+
+fn f64_field(j: &Json, key: &str) -> Result<f64> {
+    j.field(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_f64()
+        .ok_or_else(|| anyhow!("field '{key}' is not a number"))
+}
+
+fn parse_corpus(c: &Json) -> Result<CorpusSpec> {
+    Ok(CorpusSpec {
+        vocab: usize_field(c, "vocab")? as u64,
+        seq: usize_field(c, "seq")?,
+        n_classes: usize_field(c, "n_classes")? as u64,
+        lexicon: usize_field(c, "lexicon")? as u64,
+        min_len: usize_field(c, "min_len")? as u64,
+        signal_min: usize_field(c, "signal_min")? as u64,
+        signal_max: usize_field(c, "signal_max")? as u64,
+        contra: f64_field(c, "contra")?,
+        noise: f64_field(c, "noise")?,
+        seed: c
+            .field("seed")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_u64()
+            .ok_or_else(|| anyhow!("corpus seed not an integer"))?,
+    })
+}
+
+fn parse_layout(j: &Json) -> Result<Vec<LayoutEntry>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("layout is not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    let mut offset = 0usize;
+    for e in arr {
+        let name = e
+            .field("name")
+            .map_err(|er| anyhow!("{er}"))?
+            .as_str()
+            .ok_or_else(|| anyhow!("layout name not a string"))?
+            .to_string();
+        let shape: Vec<usize> = e
+            .field("shape")
+            .map_err(|er| anyhow!("{er}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("layout shape not an array"))?
+            .iter()
+            .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+            .collect::<Result<_>>()?;
+        let len: usize = shape.iter().product();
+        out.push(LayoutEntry { name, shape, offset, len });
+        offset += len;
+    }
+    Ok(out)
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelEntry> {
+    let cfg = m.field("config").map_err(|e| anyhow!("{e}"))?;
+    let layout_ft = parse_layout(m.field("layout_ft").map_err(|e| anyhow!("{e}"))?)?;
+    let layout_lora =
+        parse_layout(m.field("layout_lora").map_err(|e| anyhow!("{e}"))?)?;
+    let d_ft = usize_field(m, "d_ft")?;
+    let d_lora = usize_field(m, "d_lora")?;
+    // layout/offset consistency is an ABI invariant; check it eagerly
+    let sum_ft: usize = layout_ft.iter().map(|l| l.len).sum();
+    if sum_ft != d_ft {
+        bail!("model {name}: layout_ft sums to {sum_ft}, manifest d_ft={d_ft}");
+    }
+    let sum_lora: usize = layout_lora.iter().map(|l| l.len).sum();
+    if sum_lora != d_lora {
+        bail!("model {name}: layout_lora sums to {sum_lora}, d_lora={d_lora}");
+    }
+    let mut artifacts = BTreeMap::new();
+    if let Some(arts) = m.get("artifacts").and_then(Json::as_obj) {
+        for (aname, a) in arts {
+            artifacts.insert(
+                aname.clone(),
+                ArtifactInfo {
+                    file: a
+                        .field("file")
+                        .map_err(|e| anyhow!("{e}"))?
+                        .as_str()
+                        .unwrap_or_default()
+                        .to_string(),
+                    bytes: a.get("bytes").and_then(Json::as_usize).unwrap_or(0),
+                },
+            );
+        }
+    }
+    Ok(ModelEntry {
+        name: name.to_string(),
+        d_ft,
+        d_lora,
+        shapes: ModelShapes {
+            batch: usize_field(m, "batch")?,
+            eval_batch: usize_field(m, "eval_batch")?,
+            seq: usize_field(cfg, "max_seq")?,
+            k: usize_field(m, "k")?,
+            n_classes: usize_field(cfg, "n_classes")?,
+        },
+        causal: cfg.get("causal").and_then(Json::as_bool).unwrap_or(false),
+        pool: cfg
+            .get("pool")
+            .and_then(Json::as_str)
+            .unwrap_or("cls")
+            .to_string(),
+        vocab: usize_field(cfg, "vocab")?,
+        d_model: usize_field(cfg, "d_model")?,
+        n_layers: usize_field(cfg, "n_layers")?,
+        layout_ft,
+        layout_lora,
+        params_file: m
+            .field("params")
+            .map_err(|e| anyhow!("{e}"))?
+            .field("file")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .unwrap_or_default()
+            .to_string(),
+        lora_init_file: m
+            .field("lora_init")
+            .map_err(|e| anyhow!("{e}"))?
+            .field("file")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .unwrap_or_default()
+            .to_string(),
+        pretrain_accuracy: m
+            .get("pretrain")
+            .and_then(|p| p.get("pretrain_accuracy"))
+            .and_then(Json::as_f64),
+        init_accuracy: m
+            .get("pretrain")
+            .and_then(|p| p.get("init_accuracy"))
+            .and_then(Json::as_f64),
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 3,
+      "corpus": {"m": {"vocab": 64, "seq": 8, "n_classes": 2, "lexicon": 4,
+                       "min_len": 4, "signal_min": 1, "signal_max": 2,
+                       "contra": 0.1, "noise": 0.0, "seed": 7}},
+      "models": {"m": {
+        "config": {"vocab": 64, "d_model": 8, "n_layers": 1, "n_heads": 2,
+                   "d_ff": 16, "max_seq": 8, "n_classes": 2, "causal": false,
+                   "pool": "cls", "lora_rank": 2, "lora_scale": 2.0},
+        "d_ft": 6, "d_lora": 4, "batch": 2, "eval_batch": 4, "k": 3,
+        "layout_ft": [{"name": "a", "shape": [2, 3]}],
+        "layout_lora": [{"name": "b", "shape": [4]}],
+        "params": {"file": "m_params.bin", "len": 6, "sha256": ""},
+        "lora_init": {"file": "m_lora_init.bin", "len": 4, "sha256": ""},
+        "pretrain": {"pretrain_accuracy": 0.75},
+        "artifacts": {"ft_loss": {"file": "m_ft_loss.hlo.txt", "bytes": 10}}
+      }},
+      "toy": {"d": 123, "n": 512}
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::from_json_text(MINI).unwrap();
+        let e = m.model("m").unwrap();
+        assert_eq!(e.d_ft, 6);
+        assert_eq!(e.layout_ft[0].offset, 0);
+        assert_eq!(e.layout_ft[0].len, 6);
+        assert_eq!(e.shapes.k, 3);
+        assert_eq!(e.artifact(TrainMode::Ft, "loss"), "m_ft_loss");
+        assert_eq!(e.d_trainable(TrainMode::Lora), 4);
+        assert_eq!(e.pretrain_accuracy, Some(0.75));
+        assert_eq!(m.corpus("m").unwrap().vocab, 64);
+        assert_eq!(m.toy_d, 123);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = MINI.replace("\"version\": 3", "\"version\": 999");
+        assert!(Manifest::from_json_text(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_layout_size_mismatch() {
+        let bad = MINI.replace("\"d_ft\": 6", "\"d_ft\": 7");
+        let err = Manifest::from_json_text(&bad).unwrap_err().to_string();
+        assert!(err.contains("layout_ft"), "{err}");
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let m = Manifest::from_json_text(MINI).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+}

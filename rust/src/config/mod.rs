@@ -1,0 +1,14 @@
+//! Configuration substrate: artifact manifest + experiment configs.
+//!
+//! * [`Manifest`] — typed view of `artifacts/manifest.json` (the L2->L3
+//!   ABI: shapes, parameter layouts, pretrain stats, artifact inventory).
+//! * [`kvconf`] — a tiny `key = value` config-file format with sections,
+//!   includes and CLI overrides, used by the experiment launcher.
+
+pub mod kvconf;
+mod manifest;
+
+pub use kvconf::KvConfig;
+pub use manifest::{
+    ArtifactInfo, LayoutEntry, Manifest, ModelEntry, ModelShapes, TrainMode,
+};

@@ -1,0 +1,136 @@
+//! Trial coordinator: schedules grids of training runs across a worker
+//! pool and aggregates results (Table 1 / Fig. 3 machinery).
+//!
+//! PJRT clients are not `Send`, so each worker *creates its own
+//! [`Runtime`]* inside the thread; trials are chunked so one worker
+//! amortizes its artifact compilation over its whole chunk.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Manifest, TrainMode};
+use crate::data::Corpus;
+use crate::eval::Evaluator;
+use crate::exec::ThreadPool;
+use crate::oracle::PjrtOracle;
+use crate::runtime::Runtime;
+use crate::train::{TrainConfig, TrainOutcome, Trainer};
+
+/// One training run to schedule.
+#[derive(Clone, Debug)]
+pub struct TrialSpec {
+    pub id: String,
+    pub model: String,
+    pub mode: TrainMode,
+    pub config: TrainConfig,
+    pub eval_batches: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrialResult {
+    pub spec_id: String,
+    pub outcome: TrainOutcome,
+}
+
+/// Run one trial on the current thread (used by workers and by the
+/// single-threaded CLI path).
+pub fn run_trial(
+    artifact_dir: &str,
+    manifest: &Manifest,
+    spec: &TrialSpec,
+    rt: &Runtime,
+) -> Result<TrialResult> {
+    let entry = manifest.model(&spec.model)?;
+    let corpus_spec = manifest.corpus(&spec.model)?.clone();
+    let oracle = PjrtOracle::new(rt, entry, spec.mode)?;
+    let evaluator = Evaluator::new(rt, entry, spec.mode)?;
+    let mut cfg = spec.config.clone();
+    cfg.eval_batches = spec.eval_batches;
+    let corpus = Corpus::new(corpus_spec);
+    let mut trainer = Trainer::new(cfg, oracle, corpus)?;
+    let outcome = trainer.run(Some(&evaluator))?;
+    let _ = artifact_dir;
+    Ok(TrialResult { spec_id: spec.id.clone(), outcome })
+}
+
+/// Run a batch of trials across `workers` threads.  Results come back in
+/// spec order; per-trial failures are isolated into `Err` strings.
+pub fn run_grid(
+    artifact_dir: &str,
+    specs: Vec<TrialSpec>,
+    workers: usize,
+) -> Vec<Result<TrialResult>> {
+    let workers = workers.max(1).min(specs.len().max(1));
+    let pool = ThreadPool::new(workers);
+    // chunk specs round-robin so each worker compiles its artifacts once
+    let mut chunks: Vec<Vec<(usize, TrialSpec)>> = vec![Vec::new(); workers];
+    for (i, spec) in specs.into_iter().enumerate() {
+        chunks[i % workers].push((i, spec));
+    }
+    let dir = artifact_dir.to_string();
+    let chunk_results = pool.scope_map(chunks, move |chunk| {
+        let mut out: Vec<(usize, Result<TrialResult, String>)> = Vec::new();
+        // one runtime + manifest per worker thread
+        let rt = Runtime::new(&dir);
+        let manifest = Manifest::load(&dir);
+        match (&rt, &manifest) {
+            (Ok(rt), Ok(manifest)) => {
+                for (i, spec) in chunk {
+                    let r = run_trial(&dir, manifest, &spec, rt)
+                        .map_err(|e| format!("{e:#}"));
+                    out.push((i, r));
+                }
+            }
+            (Err(e), _) => {
+                for (i, _) in chunk {
+                    out.push((i, Err(format!("runtime init: {e:#}"))));
+                }
+            }
+            (_, Err(e)) => {
+                for (i, _) in chunk {
+                    out.push((i, Err(format!("manifest load: {e:#}"))));
+                }
+            }
+        }
+        out
+    });
+    // flatten, restore order
+    let mut indexed: Vec<(usize, Result<TrialResult, String>)> = Vec::new();
+    for c in chunk_results {
+        match c {
+            Ok(items) => indexed.extend(items),
+            Err(panic_msg) => {
+                // a whole worker chunk panicked; surface it once
+                indexed.push((usize::MAX, Err(panic_msg)));
+            }
+        }
+    }
+    indexed.sort_by_key(|(i, _)| *i);
+    indexed
+        .into_iter()
+        .map(|(_, r)| r.map_err(|e| anyhow!(e)))
+        .collect()
+}
+
+/// Mean/std aggregation of final accuracy across seed-replicated specs.
+pub fn aggregate_accuracy(results: &[&TrialResult]) -> (f64, f64) {
+    let accs: Vec<f64> = results.iter().map(|r| r.outcome.final_accuracy).collect();
+    (crate::metrics::mean(&accs), crate::metrics::stddev(&accs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_mean_std() {
+        let mk = |acc: f64| TrialResult {
+            spec_id: "s".into(),
+            outcome: TrainOutcome { final_accuracy: acc, ..Default::default() },
+        };
+        let a = mk(0.8);
+        let b = mk(0.9);
+        let (m, s) = aggregate_accuracy(&[&a, &b]);
+        assert!((m - 0.85).abs() < 1e-12);
+        assert!(s > 0.0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Synthetic SST-2-like corpus — rust half of the dual implementation.
+//!
+//! Draw order per example is an ABI shared with
+//! `python/compile/corpus.py::generate_example`; see the doc comment there.
+//! `artifacts/golden.json` carries python-generated batches that the
+//! integration tests compare against byte-for-byte.
+
+use crate::rng::{SplitMix64, GOLDEN_GAMMA};
+
+use super::Batch;
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+/// Test examples live at indices >= this; train examples at [0, 2^20).
+pub const TEST_INDEX_BASE: u64 = 1 << 20;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CorpusSpec {
+    pub vocab: u64,
+    pub seq: usize,
+    pub n_classes: u64,
+    pub lexicon: u64,
+    pub min_len: u64,
+    pub signal_min: u64,
+    pub signal_max: u64,
+    pub contra: f64,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl CorpusSpec {
+    /// Matches python `configs.DEFAULT_CORPUS`.
+    pub fn default_mini() -> Self {
+        Self {
+            vocab: 4096,
+            seq: 32,
+            n_classes: 2,
+            lexicon: 64,
+            min_len: 16,
+            signal_min: 2,
+            signal_max: 6,
+            contra: 0.08,
+            noise: 0.04,
+            seed: 0x5EED,
+        }
+    }
+
+    fn n_neutral(&self) -> u64 {
+        self.vocab - 2 - 2 * self.lexicon
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub ids: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// label after noise (what training sees)
+    pub label: i32,
+    /// label before noise (for diagnostics)
+    pub clean_label: i32,
+}
+
+/// Stateless corpus view: any example index is generated on demand.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub spec: CorpusSpec,
+}
+
+impl Corpus {
+    pub fn new(spec: CorpusSpec) -> Self {
+        assert!(spec.n_neutral() > 0, "vocab too small for lexicon");
+        assert!(spec.min_len >= 2 && (spec.min_len as usize) < spec.seq);
+        Self { spec }
+    }
+
+    fn example_seed(&self, index: u64) -> u64 {
+        self.spec.seed ^ (index.wrapping_add(1)).wrapping_mul(GOLDEN_GAMMA)
+    }
+
+    pub fn example(&self, index: u64) -> Example {
+        let s = &self.spec;
+        let mut rng = SplitMix64::new(self.example_seed(index));
+        let lex = s.lexicon;
+
+        let label = (rng.next_u64() & 1) as i32;
+        let length = s.min_len + rng.next_u64() % (s.seq as u64 - s.min_len);
+        let mut n_signal =
+            s.signal_min + rng.next_u64() % (s.signal_max - s.signal_min + 1);
+        let content = length - 1;
+        n_signal = n_signal.min(content);
+
+        let mut ids = vec![PAD; s.seq];
+        let mut mask = vec![0.0f32; s.seq];
+        ids[0] = CLS;
+        for m in mask.iter_mut().take(length as usize) {
+            *m = 1.0;
+        }
+
+        let mut remaining_signal = n_signal;
+        for j in 1..length {
+            let remaining_positions = length - j;
+            let is_signal = rng.next_u64() % remaining_positions < remaining_signal;
+            let tok = if is_signal {
+                remaining_signal -= 1;
+                let contra = rng.next_f64() < s.contra;
+                let cls_id = if contra { 1 - label } else { label } as u64;
+                2 + lex * cls_id + rng.next_u64() % lex
+            } else {
+                2 + 2 * lex + rng.next_u64() % s.n_neutral()
+            };
+            ids[j as usize] = tok as i32;
+        }
+        let flip = rng.next_f64() < s.noise;
+        let emitted = if flip { 1 - label } else { label };
+        Example { ids, mask, label: emitted, clean_label: label }
+    }
+
+    /// Contiguous batch starting at `start_index`.
+    pub fn batch(&self, start_index: u64, batch: usize) -> Batch {
+        let mut out = Batch::zeros(batch, self.spec.seq);
+        for b in 0..batch {
+            let ex = self.example(start_index + b as u64);
+            out.ids[b * self.spec.seq..(b + 1) * self.spec.seq]
+                .copy_from_slice(&ex.ids);
+            out.mask[b * self.spec.seq..(b + 1) * self.spec.seq]
+                .copy_from_slice(&ex.mask);
+            out.labels[b] = ex.label;
+        }
+        out
+    }
+
+    pub fn train_batch(&self, step: u64, batch: usize) -> Batch {
+        self.batch(step * batch as u64, batch)
+    }
+
+    pub fn test_batch(&self, step: u64, batch: usize) -> Batch {
+        self.batch(TEST_INDEX_BASE + step * batch as u64, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::new(CorpusSpec::default_mini())
+    }
+
+    #[test]
+    fn deterministic_per_index() {
+        let c = corpus();
+        let a = c.example(42);
+        let b = c.example(42);
+        assert_eq!(a.ids, b.ids);
+        assert_eq!(a.label, b.label);
+    }
+
+    #[test]
+    fn structure_invariants() {
+        let c = corpus();
+        for i in 0..200 {
+            let ex = c.example(i);
+            assert_eq!(ex.ids.len(), 32);
+            assert_eq!(ex.ids[0], CLS);
+            let valid = ex.mask.iter().filter(|&&m| m == 1.0).count() as u64;
+            assert!(valid >= c.spec.min_len && valid < c.spec.seq as u64);
+            // mask is a prefix
+            for j in 1..ex.mask.len() {
+                assert!(ex.mask[j] <= ex.mask[j - 1]);
+            }
+            // padded region is PAD tokens
+            for j in 0..ex.ids.len() {
+                if ex.mask[j] == 0.0 {
+                    assert_eq!(ex.ids[j], PAD);
+                } else {
+                    assert!(ex.ids[j] >= 1 && (ex.ids[j] as u64) < c.spec.vocab);
+                }
+            }
+            assert!(ex.label == 0 || ex.label == 1);
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let c = corpus();
+        let n = 2000;
+        let ones: i32 = (0..n).map(|i| c.example(i).label).sum();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "label balance {frac}");
+    }
+
+    #[test]
+    fn signal_tokens_correlate_with_clean_label() {
+        let c = corpus();
+        let lex = c.spec.lexicon as i32;
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for i in 0..500 {
+            let ex = c.example(i);
+            let pos = ex
+                .ids
+                .iter()
+                .filter(|&&t| t >= 2 && t < 2 + lex)
+                .count() as i32;
+            let neg = ex
+                .ids
+                .iter()
+                .filter(|&&t| t >= 2 + lex && t < 2 + 2 * lex)
+                .count() as i32;
+            if pos != neg {
+                total += 1;
+                let majority = if pos > neg { 0 } else { 1 };
+                if majority == ex.clean_label {
+                    agree += 1;
+                }
+            }
+        }
+        // the contra rate is 8%, so the majority signal should almost always
+        // match the clean label
+        assert!(agree as f64 / total as f64 > 0.9);
+    }
+
+    #[test]
+    fn train_and_test_streams_disjoint() {
+        let c = corpus();
+        let tr = c.train_batch(0, 4);
+        let te = c.test_batch(0, 4);
+        assert_ne!(tr.ids, te.ids);
+    }
+}

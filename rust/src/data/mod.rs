@@ -1,0 +1,38 @@
+//! Data substrate: synthetic corpora, LIBSVM parsing, batching.
+//!
+//! * [`corpus`] — the synthetic SST-2-like sentiment stream, byte-identical
+//!   to `python/compile/corpus.py` (golden-tested).
+//! * [`libsvm`] — LIBSVM text format parser plus the a9a-like generator
+//!   used by the Fig. 2 toy experiment.
+//! * [`Batch`] — the (ids, mask, labels) triple fed to the PJRT oracles.
+
+pub mod corpus;
+pub mod libsvm;
+
+pub use corpus::{Corpus, CorpusSpec, Example, TEST_INDEX_BASE};
+pub use libsvm::{parse_libsvm, LibsvmDataset, SyntheticRegression};
+
+/// One tokenized training/eval batch in the artifact ABI layout.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    /// row-major [batch, seq] i32
+    pub ids: Vec<i32>,
+    /// row-major [batch, seq] f32 (1.0 valid / 0.0 pad)
+    pub mask: Vec<f32>,
+    /// [batch] i32
+    pub labels: Vec<i32>,
+}
+
+impl Batch {
+    pub fn zeros(batch: usize, seq: usize) -> Self {
+        Self {
+            batch,
+            seq,
+            ids: vec![0; batch * seq],
+            mask: vec![0.0; batch * seq],
+            labels: vec![0; batch],
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Accuracy evaluation via the AOT `logits` artifact.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelEntry, TrainMode};
+use crate::data::{Batch, Corpus};
+use crate::runtime::{Arg, DeviceBuffer, Executable, Runtime};
+
+/// Evaluates test-set accuracy for one (model, mode) pair.  Holds its own
+/// frozen-base device buffer (LoRA mode) so evaluation never perturbs the
+/// training oracle's state.
+pub struct Evaluator {
+    rt: Runtime,
+    exe: Arc<Executable>,
+    entry: ModelEntry,
+    mode: TrainMode,
+    base_dev: Option<DeviceBuffer>,
+}
+
+impl Evaluator {
+    pub fn new(rt: &Runtime, entry: &ModelEntry, mode: TrainMode) -> Result<Self> {
+        let exe = rt.load(&entry.artifact(mode, "logits"))?;
+        let base_dev = match mode {
+            TrainMode::Ft => None,
+            TrainMode::Lora => {
+                let base = crate::oracle::read_params_bin(
+                    &rt.artifact_dir().join(&entry.params_file),
+                    entry.d_ft,
+                )?;
+                Some(
+                    rt.upload_f32(&base, &[entry.d_ft])
+                        .context("uploading eval base params")?,
+                )
+            }
+        };
+        Ok(Self { rt: rt.clone(), exe, entry: entry.clone(), mode, base_dev })
+    }
+
+    /// Accuracy of `trainable` over `n_batches` eval-batch test batches.
+    pub fn accuracy(
+        &self,
+        trainable: &[f32],
+        corpus: &Corpus,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let s = self.entry.shapes;
+        let d_expect = self.entry.d_trainable(self.mode);
+        if trainable.len() != d_expect {
+            bail!(
+                "trainable len {} != expected {d_expect} for {} {}",
+                trainable.len(), self.entry.name, self.mode.as_str()
+            );
+        }
+        let t_dev = self.rt.upload_f32(trainable, &[trainable.len()])?;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..n_batches {
+            let batch = corpus.test_batch(bi as u64, s.eval_batch);
+            let logits = self.logits(&t_dev, &batch)?;
+            for (b, &label) in batch.labels.iter().enumerate() {
+                let row = &logits[b * s.n_classes..(b + 1) * s.n_classes];
+                if argmax(row) == label as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Raw logits for one eval batch (row-major [eval_batch, n_classes]).
+    pub fn logits(&self, t_dev: &DeviceBuffer, batch: &Batch) -> Result<Vec<f32>> {
+        let s = self.entry.shapes;
+        if batch.batch != s.eval_batch || batch.seq != s.seq {
+            bail!(
+                "eval batch shape [{}, {}] != artifact [{}, {}]",
+                batch.batch, batch.seq, s.eval_batch, s.seq
+            );
+        }
+        let ids = self.rt.upload_i32(&batch.ids, &[batch.batch, batch.seq])?;
+        let mask = self.rt.upload_f32(&batch.mask, &[batch.batch, batch.seq])?;
+        let mut args: Vec<Arg<'_>> = Vec::with_capacity(4);
+        if let Some(bd) = &self.base_dev {
+            args.push(Arg::Device(bd));
+        }
+        args.push(Arg::Device(t_dev));
+        args.push(Arg::Device(&ids));
+        args.push(Arg::Device(&mask));
+        let out = self.exe.run_with_device(&args)?;
+        Ok(out.into_iter().next().unwrap_or_default())
+    }
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate() {
+        if *v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 0.9]), 1);
+        assert_eq!(argmax(&[3.0, -1.0, 2.0]), 0);
+        assert_eq!(argmax(&[1.0]), 0);
+    }
+
+    #[test]
+    fn argmax_ties_pick_first() {
+        assert_eq!(argmax(&[0.5, 0.5]), 0);
+    }
+}

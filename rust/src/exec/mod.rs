@@ -1,0 +1,167 @@
+//! Thread-pool execution substrate (replaces tokio for this workload).
+//!
+//! The coordinator's parallelism is coarse-grained — independent training
+//! trials, sweep points, eval batches — so a fixed worker pool with a
+//! simple channel-fed queue is the right tool.  [`ThreadPool::scope_map`]
+//! is the primary API: run a closure over a list of inputs in parallel and
+//! collect results in order.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("zo-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shutdown
+                        }
+                    })
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, size }
+    }
+
+    /// Pool sized to the machine (leaving one core for the main thread).
+    pub fn default_size() -> usize {
+        thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1).max(1))
+            .unwrap_or(4)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool is shut down")
+            .send(Box::new(f))
+            .expect("worker pool hung up");
+    }
+
+    /// Map `f` over `inputs` in parallel; results come back in input order.
+    /// Panics in `f` are isolated per item and surfaced as `Err`.
+    pub fn scope_map<T, R, F>(&self, inputs: Vec<T>, f: F) -> Vec<Result<R, String>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = inputs.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, Result<R, String>)>();
+        for (i, input) in inputs.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    move || f(input),
+                ))
+                .map_err(|e| panic_message(e.as_ref()));
+                let _ = rtx.send((i, result));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker result channel closed early");
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("missing result slot")).collect()
+    }
+}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        format!("worker panicked: {s}")
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        format!("worker panicked: {s}")
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.scope_map((0..100).collect(), |x: i32| x * x);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(*r.as_ref().unwrap(), (i * i) as i32);
+        }
+    }
+
+    #[test]
+    fn panics_are_isolated() {
+        let pool = ThreadPool::new(2);
+        let out = pool.scope_map(vec![1, 2, 3], |x: i32| {
+            if x == 2 {
+                panic!("boom {x}");
+            }
+            x
+        });
+        assert_eq!(out[0], Ok(1));
+        assert!(out[1].as_ref().unwrap_err().contains("boom"));
+        assert_eq!(out[2], Ok(3));
+    }
+
+    #[test]
+    fn all_workers_participate() {
+        let pool = ThreadPool::new(4);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        let out = pool.scope_map((0..64).collect(), move |_x: i32| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            0
+        });
+        assert_eq!(out.len(), 64);
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| {});
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,160 @@
+//! Minimal JSON substrate (replaces serde_json): recursive-descent parser
+//! and writer for the artifact manifest, golden files and report output.
+//!
+//! Scope: full JSON grammar with f64 numbers, UTF-8 strings with the
+//! standard escapes, no trailing commas, no comments.  Numbers are stored
+//! as f64; integer accessors check exactness.
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::to_string_pretty;
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Like `get` but returns a descriptive error — manifest loading wants
+    /// hard failures with context, not silent `None`s.
+    pub fn field(&self, key: &str) -> Result<&Json, String> {
+        self.get(key).ok_or_else(|| format!("missing field '{key}'"))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Flatten a JSON array of numbers into f32s.
+    pub fn to_f32_vec(&self) -> Option<Vec<f32>> {
+        let arr = self.as_arr()?;
+        arr.iter().map(|v| v.as_f64().map(|x| x as f32)).collect()
+    }
+
+    /// Flatten a (possibly nested) JSON array of numbers into f32s,
+    /// row-major.
+    pub fn to_f32_vec_nested(&self) -> Option<Vec<f32>> {
+        let mut out = Vec::new();
+        fn rec(j: &Json, out: &mut Vec<f32>) -> Option<()> {
+            match j {
+                Json::Num(x) => {
+                    out.push(*x as f32);
+                    Some(())
+                }
+                Json::Arr(v) => {
+                    for e in v {
+                        rec(e, out)?;
+                    }
+                    Some(())
+                }
+                _ => None,
+            }
+        }
+        rec(self, &mut out)?;
+        Some(out)
+    }
+
+    pub fn to_i32_vec_nested(&self) -> Option<Vec<i32>> {
+        let f = self.to_f32_vec_nested()?;
+        Some(f.into_iter().map(|x| x as i32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": "hi\n", "d": true}, "e": null}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().to_f32_vec().unwrap(), vec![1.0, 2.5, -300.0]);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str(), Some("hi\n"));
+        assert_eq!(v.get("e"), Some(&Json::Null));
+        let text = to_string_pretty(&v);
+        let v2 = parse(&text).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn nested_flatten() {
+        let v = parse("[[1,2],[3,4]]").unwrap();
+        assert_eq!(v.to_f32_vec_nested().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(v.to_i32_vec_nested().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn integer_accessors_reject_fractions() {
+        let v = parse("1.5").unwrap();
+        assert_eq!(v.as_usize(), None);
+        let v = parse("7").unwrap();
+        assert_eq!(v.as_usize(), Some(7));
+    }
+
+    #[test]
+    fn field_error_has_context() {
+        let v = parse("{}").unwrap();
+        assert!(v.field("missing").unwrap_err().contains("missing"));
+    }
+}

@@ -1,0 +1,120 @@
+//! JSON writer (pretty, deterministic key order via BTreeMap).
+
+use super::Json;
+
+pub fn to_string_pretty(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, 0, &mut out);
+    out
+}
+
+fn indent(n: usize, out: &mut String) {
+    for _ in 0..n {
+        out.push(' ');
+    }
+}
+
+fn write_value(v: &Json, level: usize, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(x) => write_num(*x, out),
+        Json::Str(s) => write_str(s, out),
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                indent(level + 1, out);
+                write_value(item, level + 1, out);
+            }
+            out.push('\n');
+            indent(level, out);
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                indent(level + 1, out);
+                write_str(k, out);
+                out.push_str(": ");
+                write_value(val, level + 1, out);
+            }
+            out.push('\n');
+            indent(level, out);
+            out.push('}');
+        }
+    }
+}
+
+fn write_num(x: f64, out: &mut String) {
+    if !x.is_finite() {
+        // JSON has no NaN/Inf; clamp deterministically and loudly.
+        out.push_str("null");
+        return;
+    }
+    if x.fract() == 0.0 && x.abs() < 9e15 {
+        out.push_str(&format!("{}", x as i64));
+    } else {
+        out.push_str(&format!("{x}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn writes_integers_without_exponent() {
+        assert_eq!(to_string_pretty(&Json::Num(1321986.0)), "1321986");
+    }
+
+    #[test]
+    fn escapes_control_chars() {
+        let s = to_string_pretty(&Json::Str("a\u{0001}b".into()));
+        assert_eq!(s, "\"a\\u0001b\"");
+        assert_eq!(parse(&s).unwrap(), Json::Str("a\u{0001}b".into()));
+    }
+
+    #[test]
+    fn roundtrip_deep() {
+        let mut m = BTreeMap::new();
+        m.insert("x".into(), Json::Arr(vec![Json::Num(1.5), Json::Null]));
+        let v = Json::Obj(m);
+        assert_eq!(parse(&to_string_pretty(&v)).unwrap(), v);
+    }
+}

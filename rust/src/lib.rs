@@ -1,0 +1,40 @@
+//! # zo-ldsd
+//!
+//! Reproduction of *"Zero-Order Optimization for LLM Fine-Tuning via
+//! Learnable Direction Sampling"* (ZO-LDSD) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **L3 (this crate)** — the fine-tuning coordinator: direction-sampling
+//!   policies ([`sampler`]), ZO gradient estimators and base optimizers
+//!   ([`optim`]), oracle-budgeted training loops ([`train`]), the trial
+//!   scheduler ([`coordinator`]), data pipeline ([`data`]), evaluation
+//!   ([`eval`]) and reporting ([`report`]).
+//! * **L2 (python/compile, build-time only)** — JAX transformer
+//!   classifiers lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
+//!   hot spots (fused attention, ZO perturbation axpy, LoRA matmul),
+//!   lowered into the same artifacts.
+//!
+//! The [`runtime`] module loads the artifacts via PJRT; after
+//! `make artifacts` the rust binary is fully self-contained — python never
+//! runs on the training path.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exec;
+pub mod jsonio;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod oracle;
+pub mod proptest;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod tensor;
+pub mod train;

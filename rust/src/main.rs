@@ -1,0 +1,224 @@
+//! zo-ldsd: the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                      inspect artifacts/manifest + runtime
+//!   train                     one fine-tuning run (model x mode x method)
+//!   toy                       Fig. 2 toy experiment (DGD on a9a-like data)
+//!   landscape                 Fig. 1 alignment landscape grid
+//!   memory                    ZO-vs-FO memory table
+//!
+//! Benches regenerate the paper's tables/figures: `cargo bench`.
+
+use anyhow::{bail, Result};
+
+use zo_ldsd::cli::Args;
+use zo_ldsd::config::{Manifest, TrainMode};
+use zo_ldsd::coordinator::{run_trial, TrialSpec};
+use zo_ldsd::data::SyntheticRegression;
+use zo_ldsd::metrics::MemoryReport;
+use zo_ldsd::optim::{DgdConfig, DgdRunner};
+use zo_ldsd::oracle::{LinRegOracle, Oracle};
+use zo_ldsd::report::Table;
+use zo_ldsd::runtime::Runtime;
+use zo_ldsd::sampler::expected_alignment_mc;
+use zo_ldsd::train::TrainConfig;
+
+const USAGE: &str = "\
+zo-ldsd <command> [options]
+
+commands:
+  info                         show manifest + runtime status
+  train --model M --mode ft|lora --method 2fwd|6fwd|alg2
+        [--optimizer zo_sgd|zo_adamm|jaguar] [--lr F] [--budget N]
+        [--eval-every N] [--seed N] [--artifacts DIR]
+  toy   [--steps N] [--variant baseline|ldsd] [--seed N]
+  landscape [--grid N] [--eps F]
+  memory [--model M] [--artifacts DIR]
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["info", "train", "toy", "landscape", "memory"])?;
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("toy") => cmd_toy(&args),
+        Some("landscape") => cmd_landscape(&args),
+        Some("memory") => cmd_memory(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    let manifest = Manifest::load(&dir)?;
+    let mut t = Table::new(
+        "models",
+        &["model", "d_ft", "d_lora", "batch", "seq", "K", "pretrain acc"],
+    );
+    for (name, m) in &manifest.models {
+        t.row(vec![
+            name.clone(),
+            m.d_ft.to_string(),
+            m.d_lora.to_string(),
+            m.shapes.batch.to_string(),
+            m.shapes.seq.to_string(),
+            m.shapes.k.to_string(),
+            m.pretrain_accuracy
+                .map(|a| format!("{a:.3}"))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    // Layered config: file (--config) < CLI options < --set overrides.
+    let mut kv = match args.get("config") {
+        Some(path) => zo_ldsd::config::KvConfig::load(std::path::Path::new(path))?,
+        None => zo_ldsd::config::KvConfig::default(),
+    };
+    for (key, cli) in [
+        ("model", "model"), ("mode", "mode"), ("method", "method"),
+        ("optimizer.name", "optimizer"), ("optimizer.lr", "lr"),
+        ("budget", "budget"), ("eval_every", "eval-every"), ("seed", "seed"),
+    ] {
+        if let Some(v) = args.get(cli) {
+            kv.set(key, v);
+        }
+    }
+    for ov in args.get_all("set") {
+        kv.apply_override(ov)?;
+    }
+
+    let dir = artifacts_dir(args);
+    let model = kv.get_or("model", "roberta_mini").to_string();
+    let mode = TrainMode::parse(kv.get_or("mode", "lora"))?;
+    let method = kv.get_or("method", "alg2").to_string();
+    let optimizer = kv.get_or("optimizer.name", "zo_sgd").to_string();
+    let lr = kv.get_f64_or("optimizer.lr", 1e-4)? as f32;
+    let budget = kv.get_u64_or("budget", 6000)?;
+    let eval_every = kv.get_u64_or("eval_every", 1200)?;
+    let seed = kv.get_u64_or("seed", 0)?;
+
+    let mut cfg = match method.as_str() {
+        "2fwd" => TrainConfig::gaussian_2fwd(&optimizer, lr, budget),
+        "6fwd" => TrainConfig::gaussian_6fwd(&optimizer, lr, budget),
+        "alg2" => TrainConfig::algorithm2(&optimizer, lr, budget),
+        other => bail!("unknown method '{other}' (2fwd|6fwd|alg2)"),
+    };
+    cfg.eval_every = eval_every;
+    cfg.seed = seed;
+
+    let manifest = Manifest::load(&dir)?;
+    let rt = Runtime::new(&dir)?;
+    let spec = TrialSpec {
+        id: format!("{model}/{}/{method}/{optimizer}", mode.as_str()),
+        model,
+        mode,
+        config: cfg,
+        eval_batches: args.get_usize("eval-batches", 8)?,
+    };
+    println!("running {} (budget {budget} forwards)", spec.id);
+    let result = run_trial(&dir, &manifest, &spec, &rt)?;
+    let o = &result.outcome;
+    for (calls, acc) in &o.acc_curve {
+        println!("  calls {calls:>8}  accuracy {acc:.4}");
+    }
+    println!(
+        "done: steps {} calls {} final acc {:.4} best {:.4} ({:.1}s)",
+        o.steps, o.oracle_calls, o.final_accuracy, o.best_accuracy, o.wall_seconds
+    );
+    Ok(())
+}
+
+fn cmd_toy(args: &Args) -> Result<()> {
+    let steps = args.get_usize("steps", 400)?;
+    let seed = args.get_u64("seed", 1)?;
+    let variant = args.get_or("variant", "ldsd");
+    let ds = SyntheticRegression::a9a_like(2048, 0xA9A);
+    let d = ds.x.cols;
+    let mut oracle = LinRegOracle::new(ds.x, ds.y, vec![0.0; d]);
+    let cfg = match variant {
+        "baseline" => {
+            let mut c = DgdConfig::paper_baseline(steps, seed);
+            c.gamma_x = 2.0; // rescaled for the synthetic conditioning
+            c
+        }
+        "ldsd" => {
+            let mut c = DgdConfig::paper_ldsd(steps, seed);
+            c.gamma_x = 0.5;
+            c.gamma_mu = 2e-4;
+            c
+        }
+        other => bail!("unknown variant '{other}'"),
+    };
+    let mut runner = DgdRunner::new(cfg, oracle.dim());
+    let trace = runner.run(&mut oracle)?;
+    println!("step,cos(gx,grad),grad_norm,loss");
+    let stride = (steps / 40).max(1);
+    for i in (0..steps).step_by(stride) {
+        println!(
+            "{i},{:.4},{:.5},{:.6}",
+            trace.alignment[i], trace.grad_norm[i], trace.loss[i]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_landscape(args: &Args) -> Result<()> {
+    let grid = args.get_usize("grid", 41)?;
+    let eps = args.get_f64("eps", 0.25)? as f32;
+    // Fig. 1: d = 2, grad f = (1, 0)
+    let gradient = [1.0f32, 0.0];
+    println!("mu_x,mu_y,expected_alignment");
+    for i in 0..grid {
+        for j in 0..grid {
+            let mx = -3.0 + 6.0 * i as f32 / (grid - 1) as f32;
+            let my = -3.0 + 6.0 * j as f32 / (grid - 1) as f32;
+            let c = expected_alignment_mc(&[mx, my], &gradient, eps, 4000, 99);
+            println!("{mx:.3},{my:.3},{c:.5}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    let model = args.get_or("model", "roberta_mini");
+    let m = manifest.model(model)?;
+    let report = MemoryReport::build(
+        m.d_ft, m.d_ft, m.shapes.batch, m.shapes.seq, m.d_model,
+        4 * m.d_model, 4, m.n_layers, m.shapes.k,
+    );
+    let mut t = Table::new(
+        &format!("memory footprint: {model} (full fine-tuning)"),
+        &["method", "total MiB", "x inference"],
+    );
+    for row in &report {
+        t.row(vec![
+            row.method.clone(),
+            format!("{:.1}", row.total() as f64 / (1 << 20) as f64),
+            format!("{:.2}", row.over_inference()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

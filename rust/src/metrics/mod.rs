@@ -1,0 +1,7 @@
+//! Metrics: memory accounting (the paper's §1 motivation) and run stats.
+
+mod memory;
+mod stats;
+
+pub use memory::{MemoryReport, MethodMemory};
+pub use stats::{mean, percentile, stddev, Summary};

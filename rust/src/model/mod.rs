@@ -1,0 +1,175 @@
+//! Parameter store + checkpointing.
+//!
+//! Checkpoint format (`.zock`): a small JSON header (magic, model, mode,
+//! d, step, metadata) followed by the raw little-endian f32 payload.
+//! Self-describing so restores validate against the manifest before
+//! touching the oracle.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::LayoutEntry;
+use crate::jsonio::{parse, to_string_pretty, Json};
+
+const MAGIC: &str = "zock1";
+
+/// A named view into a flat parameter vector (from the manifest layout).
+pub struct ParamView<'a> {
+    pub name: &'a str,
+    pub shape: &'a [usize],
+    pub data: &'a [f32],
+}
+
+/// Slice a flat vector by manifest layout entries.
+pub fn views<'a>(flat: &'a [f32], layout: &'a [LayoutEntry]) -> Result<Vec<ParamView<'a>>> {
+    let total: usize = layout.iter().map(|l| l.len).sum();
+    if total != flat.len() {
+        bail!("layout total {total} != flat len {}", flat.len());
+    }
+    Ok(layout
+        .iter()
+        .map(|l| ParamView {
+            name: l.name.as_str(),
+            shape: l.shape.as_slice(),
+            data: &flat[l.offset..l.offset + l.len],
+        })
+        .collect())
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub mode: String,
+    pub step: u64,
+    pub oracle_calls: u64,
+    pub data: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let header = Json::Obj(
+            [
+                ("magic".to_string(), Json::Str(MAGIC.into())),
+                ("model".to_string(), Json::Str(self.model.clone())),
+                ("mode".to_string(), Json::Str(self.mode.clone())),
+                ("d".to_string(), Json::Num(self.data.len() as f64)),
+                ("step".to_string(), Json::Num(self.step as f64)),
+                (
+                    "oracle_calls".to_string(),
+                    Json::Num(self.oracle_calls as f64),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let header_text = to_string_pretty(&header);
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        f.write_all(&(header_text.len() as u64).to_le_bytes())?;
+        f.write_all(header_text.as_bytes())?;
+        for v in &self.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8).context("reading header length")?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        if hlen > 1 << 20 {
+            bail!("implausible checkpoint header length {hlen}");
+        }
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf).context("reading header")?;
+        let header = parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+        if header.get("magic").and_then(Json::as_str) != Some(MAGIC) {
+            bail!("not a zo-ldsd checkpoint (bad magic)");
+        }
+        let d = header
+            .field("d")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_usize()
+            .ok_or_else(|| anyhow!("bad d"))?;
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+        if payload.len() != d * 4 {
+            bail!("checkpoint payload {} bytes, want {}", payload.len(), d * 4);
+        }
+        let data = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self {
+            model: header
+                .get("model")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            mode: header
+                .get("mode")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            step: header.get("step").and_then(Json::as_u64).unwrap_or(0),
+            oracle_calls: header
+                .get("oracle_calls")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            data,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let ck = Checkpoint {
+            model: "roberta_mini".into(),
+            mode: "lora".into(),
+            step: 42,
+            oracle_calls: 252,
+            data: (0..100).map(|i| i as f32 * 0.5).collect(),
+        };
+        let dir = std::env::temp_dir().join("zo_ldsd_ck_test");
+        let path = dir.join("t.zock");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("zo_ldsd_ck_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.zock");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn views_slice_by_layout() {
+        let layout = vec![
+            LayoutEntry { name: "a".into(), shape: vec![2, 2], offset: 0, len: 4 },
+            LayoutEntry { name: "b".into(), shape: vec![3], offset: 4, len: 3 },
+        ];
+        let flat: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let v = views(&flat, &layout).unwrap();
+        assert_eq!(v[0].data, &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(v[1].data, &[4.0, 5.0, 6.0]);
+        assert!(views(&flat[..6], &layout).is_err());
+    }
+}

@@ -1,0 +1,289 @@
+//! Directional Gradient Descent (Algorithm 1) — the first-order
+//! instantiation used by the paper's toy experiment (§3.6, Fig. 2).
+//!
+//! The oracle exposes the true gradient; the *estimator* only sees it
+//! through directional projections (eq. 3/5):
+//!
+//! ```text
+//! g_x = (1/K) sum_k  v̄_k <v̄_k, grad f(x)>
+//! ```
+//!
+//! with v_k ~ N(0, I) for the baseline and v_k ~ N(mu, eps^2 I) for LDSD,
+//! whose mu follows the §3.6 REINFORCE ascent on the alignment reward
+//! C_k = <v̄_k, grad-f-bar>^2 with a mean baseline.
+
+use anyhow::Result;
+
+use crate::oracle::GradOracle;
+use crate::rng::Rng;
+use crate::sampler::AlignmentTracker;
+use crate::tensor::{axpy, cosine, dot, normalize, nrm2, scal};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DgdVariant {
+    /// v ~ N(0, I), no policy (the paper's baseline, gamma_x = 200).
+    Baseline,
+    /// v ~ N(mu, eps^2 I) with the learnable mean (gamma_x = 5,
+    /// gamma_mu = 1.4e-5, eps = 1.2e-2 per §A.1).
+    Ldsd,
+}
+
+#[derive(Clone, Debug)]
+pub struct DgdConfig {
+    pub variant: DgdVariant,
+    pub k: usize,
+    pub gamma_x: f32,
+    pub gamma_mu: f32,
+    pub eps: f32,
+    pub steps: usize,
+    pub seed: u64,
+    /// ||mu^0|| for the LDSD variant (random direction at this norm).
+    pub mu_init_norm: f32,
+}
+
+impl DgdConfig {
+    /// Paper §A.1 baseline hyperparameters.
+    pub fn paper_baseline(steps: usize, seed: u64) -> Self {
+        Self {
+            variant: DgdVariant::Baseline,
+            k: 5,
+            gamma_x: 200.0,
+            gamma_mu: 0.0,
+            eps: 1.0,
+            steps,
+            seed,
+            mu_init_norm: 1.0,
+        }
+    }
+
+    /// Paper §A.1 LDSD hyperparameters.
+    pub fn paper_ldsd(steps: usize, seed: u64) -> Self {
+        Self {
+            variant: DgdVariant::Ldsd,
+            k: 5,
+            gamma_x: 5.0,
+            gamma_mu: 1.4e-5,
+            eps: 1.2e-2,
+            steps,
+            seed,
+            mu_init_norm: 1.0,
+        }
+    }
+}
+
+/// Per-iteration series recorded for Fig. 2.
+#[derive(Clone, Debug, Default)]
+pub struct DgdTrace {
+    /// cos(g_x, grad f) per step — Fig. 2 left panel.
+    pub alignment: Vec<f32>,
+    /// ||grad f(x)|| per step — Fig. 2 right panel.
+    pub grad_norm: Vec<f32>,
+    /// f(x) per step.
+    pub loss: Vec<f64>,
+    /// cos(mu, grad f) per step (LDSD only; policy diagnostics).
+    pub mu_alignment: Vec<f32>,
+}
+
+pub struct DgdRunner {
+    pub cfg: DgdConfig,
+    rng: Rng,
+    mu: Vec<f32>,
+}
+
+impl DgdRunner {
+    pub fn new(cfg: DgdConfig, d: usize) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut mu = vec![0.0f32; d];
+        if cfg.variant == DgdVariant::Ldsd {
+            rng.fill_normal(&mut mu);
+            let n = nrm2(&mu);
+            if n > 0.0 {
+                scal(cfg.mu_init_norm / n, &mut mu);
+            }
+        }
+        Self { cfg, rng, mu }
+    }
+
+    /// Warm-start mu along a direction (Lemma 3 initialization).
+    pub fn set_mu(&mut self, dir: &[f32]) {
+        assert_eq!(dir.len(), self.mu.len());
+        self.mu.copy_from_slice(dir);
+        let n = nrm2(&self.mu);
+        if n > 0.0 {
+            scal(self.cfg.mu_init_norm / n, &mut self.mu);
+        }
+    }
+
+    pub fn mu(&self) -> &[f32] {
+        &self.mu
+    }
+
+    /// Run Algorithm 1 against a first-order oracle; returns the Fig. 2
+    /// series.
+    pub fn run<O: GradOracle>(&mut self, oracle: &mut O) -> Result<DgdTrace> {
+        let d = oracle.dim();
+        assert_eq!(self.mu.len(), d);
+        let k = self.cfg.k;
+        let mut trace = DgdTrace::default();
+        let mut tracker = AlignmentTracker::new();
+        let mut grad = vec![0.0f32; d];
+        let mut gx = vec![0.0f32; d];
+        let mut gmu = vec![0.0f32; d];
+        // raw standard-normal samples z_k (the score function needs them:
+        // for v = mu + eps z, (v - mu)/eps^2 = z/eps)
+        let mut zbuf = vec![0.0f32; k * d];
+        // normalized directions v̄_k actually used by the DGD estimator
+        let mut vbuf = vec![0.0f32; k * d];
+        let mut rewards = vec![0.0f32; k];
+
+        for _step in 0..self.cfg.steps {
+            let loss = oracle.grad(&mut grad)?;
+            let gn = nrm2(&grad);
+            trace.loss.push(loss);
+            trace.grad_norm.push(gn);
+
+            // sample K directions; keep raw z and normalized v̄ separately
+            self.rng.fill_normal(&mut zbuf);
+            for i in 0..k {
+                let z = &zbuf[i * d..(i + 1) * d];
+                let row = &mut vbuf[i * d..(i + 1) * d];
+                match self.cfg.variant {
+                    DgdVariant::Baseline => row.copy_from_slice(z),
+                    DgdVariant::Ldsd => {
+                        for j in 0..d {
+                            row[j] = self.mu[j] + self.cfg.eps * z[j];
+                        }
+                    }
+                }
+                normalize(row);
+            }
+
+            // g_x = (1/K) sum_k v̄_k <v̄_k, grad>   (eq. 5)
+            gx.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..k {
+                let row = &vbuf[i * d..(i + 1) * d];
+                let proj = dot(row, &grad);
+                axpy(proj / k as f32, row, &mut gx);
+                // reward C_k = <v̄_k, grad-bar>^2
+                let c = if gn > 0.0 { proj / gn } else { 0.0 };
+                rewards[i] = c * c;
+            }
+            trace.alignment.push(tracker.record(&gx, &grad));
+            if self.cfg.variant == DgdVariant::Ldsd {
+                trace.mu_alignment.push(cosine(&self.mu, &grad));
+                // REINFORCE ascent on the alignment reward with the mean
+                // baseline (§3.6):
+                //   g_mu = (1/K) sum_k (C_k - b̄) (v_k - mu)/eps^2
+                //        = (1/(K eps)) sum_k (C_k - b̄) z_k.
+                let baseline: f32 = rewards.iter().sum::<f32>() / k as f32;
+                gmu.iter_mut().for_each(|v| *v = 0.0);
+                for i in 0..k {
+                    let w = rewards[i] - baseline;
+                    if w != 0.0 {
+                        axpy(w, &zbuf[i * d..(i + 1) * d], &mut gmu);
+                    }
+                }
+                scal(1.0 / (k as f32 * self.cfg.eps), &mut gmu);
+                axpy(self.cfg.gamma_mu, &gmu, &mut self.mu);
+            }
+
+            // x -= gamma_x g_x
+            let gamma = self.cfg.gamma_x;
+            oracle.update_params(&mut |x| axpy(-gamma, &gx, x))?;
+        }
+        Ok(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticRegression;
+    use crate::oracle::{LinRegOracle, Oracle};
+
+    fn toy_oracle(seed: u64) -> LinRegOracle {
+        let ds = SyntheticRegression::a9a_like(256, seed);
+        LinRegOracle::new(ds.x, ds.y, vec![0.0; 123])
+    }
+
+    #[test]
+    fn baseline_descends() {
+        let mut o = toy_oracle(1);
+        // modest gamma_x for the synthetic conditioning
+        let mut cfg = DgdConfig::paper_baseline(300, 7);
+        cfg.gamma_x = 2.0;
+        let mut r = DgdRunner::new(cfg, o.dim());
+        let t = r.run(&mut o).unwrap();
+        assert!(t.loss[299] < t.loss[0] * 0.9, "{} -> {}", t.loss[0], t.loss[299]);
+    }
+
+    #[test]
+    fn ldsd_alignment_beats_baseline() {
+        // Lemma 2 / Fig. 2: LDSD's realized alignment should exceed the
+        // O(1/sqrt(d)) baseline cosine by a wide margin late in training.
+        let steps = 400;
+        let mut ob = toy_oracle(2);
+        let mut cfgb = DgdConfig::paper_baseline(steps, 3);
+        cfgb.gamma_x = 2.0;
+        let mut rb = DgdRunner::new(cfgb, ob.dim());
+        let tb = rb.run(&mut ob).unwrap();
+
+        let mut ol = toy_oracle(2);
+        // gamma_x/gamma_mu/eps rescaled for the synthetic conditioning,
+        // preserving the paper's small-gamma_x-for-LDSD ratio (§A.1 uses
+        // 5 vs 200 = 40x smaller than the baseline's step).
+        let mut cfgl = DgdConfig::paper_ldsd(steps, 3);
+        cfgl.gamma_x = 0.05;
+        cfgl.gamma_mu = 0.05;
+        cfgl.eps = 0.05;
+        let mut rl = DgdRunner::new(cfgl, ol.dim());
+        let tl = rl.run(&mut ol).unwrap();
+
+        let tail = |v: &[f32]| -> f32 {
+            let s = &v[v.len() - 50..];
+            s.iter().sum::<f32>() / s.len() as f32
+        };
+        let (ab, al) = (tail(&tb.alignment), tail(&tl.alignment));
+        assert!(
+            al > ab + 0.1,
+            "LDSD tail alignment {al} should beat baseline {ab}"
+        );
+    }
+
+    #[test]
+    fn mu_alignment_grows() {
+        // |cos(mu, grad)|: C^t depends on the squared cosine, so mu
+        // converging to either +-grad-bar is success (Fig. 1 symmetry).
+        let mut o = toy_oracle(4);
+        let mut cfg = DgdConfig::paper_ldsd(400, 5);
+        cfg.gamma_x = 0.05;
+        cfg.gamma_mu = 0.05;
+        cfg.eps = 0.05;
+        let mut r = DgdRunner::new(cfg, o.dim());
+        let t = r.run(&mut o).unwrap();
+        let early: f32 =
+            t.mu_alignment[..20].iter().map(|c| c.abs()).sum::<f32>() / 20.0;
+        let late: f32 = t.mu_alignment[t.mu_alignment.len() - 20..]
+            .iter()
+            .map(|c| c.abs())
+            .sum::<f32>()
+            / 20.0;
+        assert!(
+            late > early + 0.2 && late > 0.8,
+            "|cos(mu, grad)| should grow: early {early}, late {late}"
+        );
+    }
+
+    #[test]
+    fn trace_lengths_match_steps() {
+        let mut o = toy_oracle(6);
+        let mut cfg = DgdConfig::paper_baseline(50, 1);
+        cfg.gamma_x = 1.0;
+        let mut r = DgdRunner::new(cfg, o.dim());
+        let t = r.run(&mut o).unwrap();
+        assert_eq!(t.alignment.len(), 50);
+        assert_eq!(t.grad_norm.len(), 50);
+        assert_eq!(t.loss.len(), 50);
+        assert!(o.oracle_calls() == 0, "DGD uses the gradient, not the oracle");
+    }
+}

@@ -1,0 +1,312 @@
+//! Gradient estimators: forward evaluations -> gradient surrogate.
+//!
+//! All estimators write a dense `g` into a caller-provided buffer so the
+//! base optimizers are strategy-agnostic (the paper's plug-in claim), and
+//! report exactly how many oracle calls they spent (the §5.1 budget-fair
+//! protocol charges estimators by calls, not iterations).
+
+use anyhow::Result;
+
+use crate::oracle::Oracle;
+use crate::sampler::DirectionSampler;
+use crate::tensor::{axpy, scal};
+
+/// Outcome of one estimation step.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    /// Oracle calls consumed by this step.
+    pub calls: u64,
+    /// Probe losses observed (diagnostics).
+    pub losses: Vec<f64>,
+    /// Index of the selected direction (Algorithm 2 line 4), if any.
+    pub selected: Option<usize>,
+    /// The finite-difference coefficient applied to the selected direction
+    /// (0 when `g` is an average).
+    pub fd_coeff: f64,
+}
+
+pub trait GradEstimator {
+    /// Estimate grad f(x) into `g` (len d).  The oracle's current batch
+    /// must be set by the caller.
+    fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate>;
+
+    /// Oracle calls one step consumes (for budget planning).
+    fn calls_per_step(&self) -> u64;
+
+    fn name(&self) -> &str;
+
+    /// Bytes of persistent estimator state (memory accounting): direction
+    /// buffers + sampler policy state.
+    fn state_bytes(&self) -> usize;
+}
+
+/// Classical ZO central difference with a single probe direction
+/// (MeZO-style; the "Gaussian, 2 forwards, more iterations" row of
+/// Table 1):  g = v * (f(x + tau v) - f(x - tau v)) / (2 tau).
+pub struct CentralK1Estimator<S: DirectionSampler> {
+    pub sampler: S,
+    pub tau: f32,
+    dir: Vec<f32>,
+}
+
+impl<S: DirectionSampler> CentralK1Estimator<S> {
+    pub fn new(sampler: S, tau: f32) -> Self {
+        let d = sampler.dim();
+        Self { sampler, tau, dir: vec![0.0; d] }
+    }
+}
+
+impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
+    fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate> {
+        self.sampler.sample(&mut self.dir, 1);
+        let fp = oracle.loss_dir(&self.dir, self.tau)?;
+        let fm = oracle.loss_dir(&self.dir, -self.tau)?;
+        let coeff = (fp - fm) / (2.0 * self.tau as f64);
+        g.iter_mut().for_each(|v| *v = 0.0);
+        axpy(coeff as f32, &self.dir, g);
+        Ok(Estimate { calls: 2, losses: vec![fp, fm], selected: Some(0), fd_coeff: coeff })
+    }
+
+    fn calls_per_step(&self) -> u64 {
+        2
+    }
+
+    fn name(&self) -> &str {
+        "central_k1"
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.dir.len() * 4 + self.sampler.state_bytes()
+    }
+}
+
+/// Monte-Carlo forward-difference averaging (eq. 5 with one-point probes;
+/// the "Gaussian, 6 forwards, same iterations" row):
+/// g = (1/K) sum_i v_i (f(x + tau v_i) - f(x)) / tau.
+pub struct ForwardAvgEstimator<S: DirectionSampler> {
+    pub sampler: S,
+    pub tau: f32,
+    pub k: usize,
+    dirs: Vec<f32>,
+    zero: Vec<f32>,
+}
+
+impl<S: DirectionSampler> ForwardAvgEstimator<S> {
+    pub fn new(sampler: S, tau: f32, k: usize) -> Self {
+        assert!(k >= 1);
+        let d = sampler.dim();
+        Self { sampler, tau, k, dirs: vec![0.0; k * d], zero: vec![0.0; d] }
+    }
+}
+
+impl<S: DirectionSampler> GradEstimator for ForwardAvgEstimator<S> {
+    fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate> {
+        let d = oracle.dim();
+        self.sampler.sample(&mut self.dirs, self.k);
+        let f_base = oracle.loss_dir(&self.zero, 0.0)?;
+        let losses = oracle.loss_k(&self.dirs, self.k, self.tau)?;
+        g.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.k {
+            let coeff = (losses[i] - f_base) / self.tau as f64;
+            axpy(coeff as f32, &self.dirs[i * d..(i + 1) * d], g);
+        }
+        scal(1.0 / self.k as f32, g);
+        let mut all = vec![f_base];
+        all.extend_from_slice(&losses);
+        Ok(Estimate {
+            calls: self.k as u64 + 1,
+            losses: all,
+            selected: None,
+            fd_coeff: 0.0,
+        })
+    }
+
+    fn calls_per_step(&self) -> u64 {
+        self.k as u64 + 1
+    }
+
+    fn name(&self) -> &str {
+        "forward_avg"
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.dirs.len() * 4 + self.sampler.state_bytes()
+    }
+}
+
+/// Algorithm 2 (ZO-LDSD): sample K candidates from the (learnable) policy,
+/// greedily select the probe with the lowest loss, take a central
+/// difference along it, and update the policy from all K probe losses.
+///
+/// Works with *any* [`DirectionSampler`]; with `GaussianSampler` it
+/// degenerates to best-of-K Gaussian selection (an ablation arm), with
+/// [`crate::sampler::LdsdSampler`] it is the paper's full method.
+pub struct LdsdEstimator<S: DirectionSampler> {
+    pub sampler: S,
+    pub tau: f32,
+    pub k: usize,
+    dirs: Vec<f32>,
+}
+
+impl<S: DirectionSampler> LdsdEstimator<S> {
+    pub fn new(sampler: S, tau: f32, k: usize) -> Self {
+        assert!(k >= 1);
+        let d = sampler.dim();
+        Self { sampler, tau, k, dirs: vec![0.0; k * d] }
+    }
+
+    pub fn sampler(&self) -> &S {
+        &self.sampler
+    }
+}
+
+impl<S: DirectionSampler> GradEstimator for LdsdEstimator<S> {
+    fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate> {
+        let d = oracle.dim();
+        self.sampler.sample(&mut self.dirs, self.k);
+        // K probes at +tau (one fused dispatch on the PJRT oracle)
+        let losses = oracle.loss_k(&self.dirs, self.k, self.tau)?;
+        // greedy selection (line 4)
+        let best = losses
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let vstar = &self.dirs[best * d..(best + 1) * d];
+        // central difference along v* (line 5); f(x + tau v*) is reused
+        let f_minus = oracle.loss_dir(vstar, -self.tau)?;
+        let coeff = (losses[best] - f_minus) / (2.0 * self.tau as f64);
+        g.iter_mut().for_each(|v| *v = 0.0);
+        axpy(coeff as f32, vstar, g);
+        // policy update from all K probes (lines 6/8)
+        self.sampler.observe(&self.dirs, &losses, self.k);
+        let mut all = losses;
+        all.push(f_minus);
+        Ok(Estimate {
+            calls: self.k as u64 + 1,
+            losses: all,
+            selected: Some(best),
+            fd_coeff: coeff,
+        })
+    }
+
+    fn calls_per_step(&self) -> u64 {
+        self.k as u64 + 1
+    }
+
+    fn name(&self) -> &str {
+        "ldsd_bestofk"
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.dirs.len() * 4 + self.sampler.state_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::QuadraticOracle;
+    use crate::sampler::{GaussianSampler, LdsdConfig, LdsdSampler};
+    use crate::tensor::cosine;
+
+    fn quad(d: usize) -> QuadraticOracle {
+        // f(x) = 0.5 ||x - 1||^2 from x = 0: grad = x - 1 = -1
+        QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d])
+    }
+
+    #[test]
+    fn central_k1_matches_directional_derivative() {
+        let d = 24;
+        let mut o = quad(d);
+        let mut est = CentralK1Estimator::new(GaussianSampler::new(d, 1), 1e-3);
+        let mut g = vec![0.0f32; d];
+        let e = est.estimate(&mut o, &mut g).unwrap();
+        assert_eq!(e.calls, 2);
+        // for the quadratic, fd along v is exact: coeff = <grad, v>
+        let true_grad = vec![-1.0f32; d];
+        let vdotg: f32 = true_grad
+            .iter()
+            .zip(est.dir.iter())
+            .map(|(a, b)| a * b)
+            .sum();
+        assert!(
+            ((e.fd_coeff as f32) - vdotg).abs() < 1e-2 * (1.0 + vdotg.abs()),
+            "coeff {} vs <g,v> {vdotg}",
+            e.fd_coeff
+        );
+    }
+
+    #[test]
+    fn forward_avg_unbiasedish_over_many_steps() {
+        let d = 8;
+        let mut o = quad(d);
+        let mut est = ForwardAvgEstimator::new(GaussianSampler::new(d, 2), 1e-3, 4);
+        let mut g = vec![0.0f32; d];
+        let mut acc = vec![0.0f32; d];
+        let reps = 400;
+        for _ in 0..reps {
+            est.estimate(&mut o, &mut g).unwrap();
+            axpy(1.0 / reps as f32, &g, &mut acc);
+        }
+        let true_grad = vec![-1.0f32; d];
+        let cos = cosine(&acc, &true_grad);
+        assert!(cos > 0.9, "averaged estimate should align with grad, cos={cos}");
+    }
+
+    #[test]
+    fn ldsd_selects_lowest_probe() {
+        let d = 16;
+        let mut o = quad(d);
+        let sampler = LdsdSampler::new(d, 3, LdsdConfig::default());
+        let mut est = LdsdEstimator::new(sampler, 1e-3, 5);
+        let mut g = vec![0.0f32; d];
+        let e = est.estimate(&mut o, &mut g).unwrap();
+        assert_eq!(e.calls, 6);
+        let probes = &e.losses[..5];
+        let best = e.selected.unwrap();
+        for p in probes {
+            assert!(probes[best] <= *p);
+        }
+    }
+
+    #[test]
+    fn ldsd_gradient_points_downhill() {
+        // A step along -g must not increase the quadratic's loss (descent
+        // direction on average); check over several steps.
+        let d = 32;
+        let mut o = quad(d);
+        let sampler = LdsdSampler::new(d, 5, LdsdConfig::default());
+        let mut est = LdsdEstimator::new(sampler, 1e-3, 5);
+        let mut g = vec![0.0f32; d];
+        let mut downhill = 0;
+        let reps = 30;
+        for _ in 0..reps {
+            est.estimate(&mut o, &mut g).unwrap();
+            let zero = vec![0.0f32; d];
+            let f0 = o.loss_dir(&zero, 0.0).unwrap();
+            let f1 = o.loss_dir(&g, -1e-2).unwrap();
+            if f1 <= f0 {
+                downhill += 1;
+            }
+        }
+        assert!(downhill >= reps * 2 / 3, "downhill {downhill}/{reps}");
+    }
+
+    #[test]
+    fn budget_accounting_exact() {
+        let d = 8;
+        let mut o = quad(d);
+        let mut est = LdsdEstimator::new(
+            LdsdSampler::new(d, 1, LdsdConfig::default()),
+            1e-3,
+            3,
+        );
+        let mut g = vec![0.0f32; d];
+        let before = o.oracle_calls();
+        let e = est.estimate(&mut o, &mut g).unwrap();
+        assert_eq!(o.oracle_calls() - before, e.calls);
+        assert_eq!(e.calls, est.calls_per_step());
+    }
+}

@@ -1,0 +1,76 @@
+//! First-order reference optimizers (memory-comparison table + pretrain
+//! parity checks).  These are *not* part of the ZO pipeline; they exist so
+//! the memory_table bench can report optimizer-state footprints of the
+//! backprop pipeline the paper compares against (§1).
+
+use super::optimizers::BaseOptimizer;
+
+/// Plain first-order SGD (momentum optional) — identical math to ZoSgd but
+/// kept as a distinct type so the memory table can label FO vs ZO rows.
+pub struct FoSgd(pub super::ZoSgd);
+
+impl FoSgd {
+    pub fn new(d: usize, momentum: f32) -> Self {
+        Self(super::ZoSgd::new(d, momentum))
+    }
+}
+
+impl BaseOptimizer for FoSgd {
+    fn step(&mut self, params: &mut [f32], g: &[f32], lr: f32) {
+        self.0.step(params, g, lr);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.0.state_bytes()
+    }
+
+    fn name(&self) -> &str {
+        "fo_sgd"
+    }
+}
+
+/// First-order Adam.
+pub struct FoAdam(pub super::ZoAdaMM);
+
+impl FoAdam {
+    pub fn new(d: usize) -> Self {
+        Self(super::ZoAdaMM::new(d, 0.9, 0.999))
+    }
+}
+
+impl BaseOptimizer for FoAdam {
+    fn step(&mut self, params: &mut [f32], g: &[f32], lr: f32) {
+        self.0.step(params, g, lr);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.0.state_bytes()
+    }
+
+    fn name(&self) -> &str {
+        "fo_adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fo_adam_state_is_2d_floats() {
+        let opt = FoAdam::new(100);
+        assert_eq!(opt.state_bytes(), 800);
+    }
+
+    #[test]
+    fn fo_sgd_converges() {
+        let mut opt = FoSgd::new(4, 0.9);
+        let mut x = vec![1.0f32; 4];
+        let mut g = vec![0.0f32; 4];
+        for _ in 0..500 {
+            g.copy_from_slice(&x);
+            opt.step(&mut x, &g, 0.05);
+        }
+        assert!(x.iter().all(|v| v.abs() < 1e-2));
+    }
+}

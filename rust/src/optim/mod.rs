@@ -1,0 +1,29 @@
+//! ZO optimization: gradient estimators x base optimizers.
+//!
+//! The paper's §4 modularity maps to two orthogonal traits:
+//! * [`GradEstimator`] — turns forward evaluations into a gradient
+//!   surrogate `g` (this is where sampling strategy + probe layout live:
+//!   central-difference K=1, forward-difference MC averaging, or the
+//!   paper's Algorithm 2 best-of-K with policy learning).
+//! * [`BaseOptimizer`] — consumes `g` exactly like a first-order method
+//!   (ZO-SGD momentum, ZO-AdaMM, JAGUAR SignSGD...).  Base optimizer
+//!   hyperparameters never change when the estimator is swapped — that is
+//!   the paper's controlled-comparison protocol (§5.1).
+//!
+//! `dgd.rs` holds the first-order directional-descent instantiation
+//! (Algorithm 1) used by the Fig. 2 toy experiment.
+
+pub mod dgd;
+mod estimator;
+mod first_order;
+mod mezo;
+mod optimizers;
+
+pub use dgd::{DgdConfig, DgdRunner, DgdVariant};
+pub use estimator::{
+    CentralK1Estimator, Estimate, ForwardAvgEstimator, GradEstimator,
+    LdsdEstimator,
+};
+pub use first_order::{FoAdam, FoSgd};
+pub use mezo::{MezoSgd, MezoStepInfo};
+pub use optimizers::{by_name as optimizers_by_name, BaseOptimizer, JaguarSignSgd, ZoAdaMM, ZoSgd};

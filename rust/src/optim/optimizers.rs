@@ -1,0 +1,206 @@
+//! Base ZO optimizers: consume a gradient surrogate like a first-order
+//! method.  Hyperparameters follow the paper's §A.2 (momentum 0.9, Adam
+//! betas (0.9, 0.999), JAGUAR beta 0.9).
+
+use crate::tensor::{axpy, sign_into};
+
+/// First-order-style update rule fed by a ZO gradient estimate.
+pub trait BaseOptimizer {
+    /// x -= lr * update(g)
+    fn step(&mut self, params: &mut [f32], g: &[f32], lr: f32);
+
+    /// Bytes of persistent optimizer state (memory-table accounting).
+    fn state_bytes(&self) -> usize;
+
+    fn name(&self) -> &str;
+}
+
+/// SGD with optional heavy-ball momentum (the paper's ZO-SGD baseline).
+pub struct ZoSgd {
+    pub momentum: f32,
+    buf: Vec<f32>,
+    active: bool,
+}
+
+impl ZoSgd {
+    pub fn new(d: usize, momentum: f32) -> Self {
+        let active = momentum != 0.0;
+        Self { momentum, buf: if active { vec![0.0; d] } else { Vec::new() }, active }
+    }
+}
+
+impl BaseOptimizer for ZoSgd {
+    fn step(&mut self, params: &mut [f32], g: &[f32], lr: f32) {
+        if self.active {
+            // m = beta m + g;  x -= lr m
+            for (m, gi) in self.buf.iter_mut().zip(g.iter()) {
+                *m = self.momentum * *m + *gi;
+            }
+            axpy(-lr, &self.buf, params);
+        } else {
+            axpy(-lr, g, params);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.buf.len() * 4
+    }
+
+    fn name(&self) -> &str {
+        "zo_sgd"
+    }
+}
+
+/// ZO-AdaMM (Chen et al., 2019): Adam moments driven by ZO estimates.
+pub struct ZoAdaMM {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl ZoAdaMM {
+    pub fn new(d: usize, beta1: f32, beta2: f32) -> Self {
+        Self { beta1, beta2, eps: 1e-8, m: vec![0.0; d], v: vec![0.0; d], t: 0 }
+    }
+}
+
+impl BaseOptimizer for ZoAdaMM {
+    fn step(&mut self, params: &mut [f32], g: &[f32], lr: f32) {
+        self.t += 1;
+        let b1c = 1.0 - self.beta1.powi(self.t as i32);
+        let b2c = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g[i] * g[i];
+            let mh = self.m[i] / b1c;
+            let vh = self.v[i] / b2c;
+            params[i] -= lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * 4
+    }
+
+    fn name(&self) -> &str {
+        "zo_adamm"
+    }
+}
+
+/// JAGUAR SignSGD (Veprikov et al. 2024 / Petrov et al. 2025): coordinate
+/// momentum h = beta h + (1 - beta) g, update x -= lr * sign(h).
+pub struct JaguarSignSgd {
+    pub beta: f32,
+    h: Vec<f32>,
+    sgn: Vec<f32>,
+}
+
+impl JaguarSignSgd {
+    pub fn new(d: usize, beta: f32) -> Self {
+        Self { beta, h: vec![0.0; d], sgn: vec![0.0; d] }
+    }
+}
+
+impl BaseOptimizer for JaguarSignSgd {
+    fn step(&mut self, params: &mut [f32], g: &[f32], lr: f32) {
+        for (hi, gi) in self.h.iter_mut().zip(g.iter()) {
+            *hi = self.beta * *hi + (1.0 - self.beta) * *gi;
+        }
+        sign_into(&mut self.sgn, &self.h);
+        axpy(-lr, &self.sgn, params);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.h.len() * 4 // sign scratch is transient
+    }
+
+    fn name(&self) -> &str {
+        "jaguar_signsgd"
+    }
+}
+
+/// Build a base optimizer by name ("zo_sgd" | "zo_adamm" | "jaguar").
+pub fn by_name(name: &str, d: usize) -> anyhow::Result<Box<dyn BaseOptimizer + Send>> {
+    match name {
+        "zo_sgd" => Ok(Box::new(ZoSgd::new(d, 0.9))),
+        "zo_sgd_plain" => Ok(Box::new(ZoSgd::new(d, 0.0))),
+        "zo_adamm" => Ok(Box::new(ZoAdaMM::new(d, 0.9, 0.999))),
+        "jaguar" | "jaguar_signsgd" => Ok(Box::new(JaguarSignSgd::new(d, 0.9))),
+        _ => anyhow::bail!("unknown optimizer '{name}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_plain_is_gradient_step() {
+        let mut opt = ZoSgd::new(3, 0.0);
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        opt.step(&mut x, &[1.0, 1.0, 1.0], 0.5);
+        assert_eq!(x, vec![0.5, 1.5, 2.5]);
+        assert_eq!(opt.state_bytes(), 0);
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let mut opt = ZoSgd::new(1, 0.9);
+        let mut x = vec![0.0f32];
+        opt.step(&mut x, &[1.0], 1.0); // m=1, x=-1
+        opt.step(&mut x, &[1.0], 1.0); // m=1.9, x=-2.9
+        assert!((x[0] + 2.9).abs() < 1e-6);
+        assert_eq!(opt.state_bytes(), 4);
+    }
+
+    #[test]
+    fn adamm_first_step_is_lr_sized() {
+        // with bias correction, |first step| ~ lr regardless of g scale
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let mut opt = ZoAdaMM::new(1, 0.9, 0.999);
+            let mut x = vec![0.0f32];
+            opt.step(&mut x, &[scale], 0.01);
+            assert!((x[0].abs() - 0.01).abs() < 1e-4, "scale {scale}: {}", x[0]);
+        }
+    }
+
+    #[test]
+    fn jaguar_steps_are_sign_sized() {
+        let mut opt = JaguarSignSgd::new(3, 0.0);
+        let mut x = vec![0.0f32; 3];
+        opt.step(&mut x, &[5.0, -3.0, 0.0], 0.1);
+        assert_eq!(x, vec![-0.1, 0.1, 0.0]);
+    }
+
+    #[test]
+    fn quadratic_converges_under_all_optimizers() {
+        // one exact-gradient descent sanity loop per optimizer
+        for name in ["zo_sgd", "zo_sgd_plain", "zo_adamm", "jaguar"] {
+            let d = 10;
+            let mut opt = by_name(name, d).unwrap();
+            let mut x = vec![5.0f32; d];
+            let lr = match name {
+                "zo_adamm" => 0.05,
+                "jaguar" => 0.01,
+                _ => 0.05,
+            };
+            let mut g = vec![0.0f32; d];
+            for _ in 0..2000 {
+                for i in 0..d {
+                    g[i] = x[i]; // grad of 0.5||x||^2
+                }
+                opt.step(&mut x, &g, lr);
+            }
+            let n: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!(n < 0.5, "{name} ended at ||x|| = {n}");
+        }
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(by_name("sgd9000", 4).is_err());
+    }
+}

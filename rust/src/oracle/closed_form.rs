@@ -1,0 +1,363 @@
+//! Closed-form oracle substrates: quadratic, linear regression, logistic
+//! regression.  Exact losses and gradients in pure rust — used by the toy
+//! experiment (Fig. 2), unit/property tests, and fast ablations.
+
+use anyhow::Result;
+
+use crate::data::Batch;
+use crate::tensor::{axpy_into, Matrix};
+
+use super::{GradOracle, Oracle};
+
+/// f(x) = 0.5 (x - c)^T A (x - c) with diagonal A — conditioning is
+/// controllable, optimum known, perfect for convergence tests.
+pub struct QuadraticOracle {
+    pub diag: Vec<f32>,
+    pub center: Vec<f32>,
+    x: Vec<f32>,
+    scratch: Vec<f32>,
+    calls: u64,
+}
+
+impl QuadraticOracle {
+    pub fn new(diag: Vec<f32>, center: Vec<f32>, x0: Vec<f32>) -> Self {
+        assert_eq!(diag.len(), center.len());
+        assert_eq!(diag.len(), x0.len());
+        let d = diag.len();
+        Self { diag, center, x: x0, scratch: vec![0.0; d], calls: 0 }
+    }
+
+    /// Isotropic instance: f(x) = 0.5 ||x||^2 from a given start.
+    pub fn isotropic(x0: Vec<f32>) -> Self {
+        let d = x0.len();
+        Self::new(vec![1.0; d], vec![0.0; d], x0)
+    }
+
+    fn value_at(&self, z: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..z.len() {
+            let r = (z[i] - self.center[i]) as f64;
+            acc += 0.5 * self.diag[i] as f64 * r * r;
+        }
+        acc
+    }
+}
+
+impl Oracle for QuadraticOracle {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn set_batch(&mut self, _batch: &Batch) -> Result<()> {
+        Ok(())
+    }
+
+    fn loss_dir(&mut self, dir: &[f32], scale: f32) -> Result<f64> {
+        self.calls += 1;
+        axpy_into(&mut self.scratch, &self.x, scale, dir);
+        // borrow dance: value_at needs &self
+        let z = std::mem::take(&mut self.scratch);
+        let v = self.value_at(&z);
+        self.scratch = z;
+        Ok(v)
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()> {
+        f(&mut self.x);
+        Ok(())
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.calls
+    }
+
+    fn name(&self) -> &str {
+        "quadratic"
+    }
+}
+
+impl GradOracle for QuadraticOracle {
+    fn grad(&mut self, out: &mut [f32]) -> Result<f64> {
+        for i in 0..self.x.len() {
+            out[i] = self.diag[i] * (self.x[i] - self.center[i]);
+        }
+        Ok(self.value_at(&self.x))
+    }
+}
+
+/// f(w) = 0.5/N ||Xw - y||^2 — the paper's toy objective on a9a.
+pub struct LinRegOracle {
+    pub x_data: Matrix,
+    pub y: Vec<f32>,
+    w: Vec<f32>,
+    resid: Vec<f32>,
+    wtmp: Vec<f32>,
+    calls: u64,
+}
+
+impl LinRegOracle {
+    pub fn new(x_data: Matrix, y: Vec<f32>, w0: Vec<f32>) -> Self {
+        assert_eq!(x_data.rows, y.len());
+        assert_eq!(x_data.cols, w0.len());
+        let n = y.len();
+        let d = w0.len();
+        Self { x_data, y, w: w0, resid: vec![0.0; n], wtmp: vec![0.0; d], calls: 0 }
+    }
+
+    fn loss_at(&mut self, w: &[f32]) -> f64 {
+        let n = self.x_data.rows;
+        self.x_data.matvec(w, &mut self.resid);
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            let r = (self.resid[i] - self.y[i]) as f64;
+            acc += r * r;
+        }
+        0.5 * acc / n as f64
+    }
+}
+
+impl Oracle for LinRegOracle {
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    fn set_batch(&mut self, _batch: &Batch) -> Result<()> {
+        Ok(())
+    }
+
+    fn loss_dir(&mut self, dir: &[f32], scale: f32) -> Result<f64> {
+        self.calls += 1;
+        let mut wtmp = std::mem::take(&mut self.wtmp);
+        axpy_into(&mut wtmp, &self.w, scale, dir);
+        let v = self.loss_at(&wtmp);
+        self.wtmp = wtmp;
+        Ok(v)
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.w
+    }
+
+    fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()> {
+        f(&mut self.w);
+        Ok(())
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.calls
+    }
+
+    fn name(&self) -> &str {
+        "linreg"
+    }
+}
+
+impl GradOracle for LinRegOracle {
+    fn grad(&mut self, out: &mut [f32]) -> Result<f64> {
+        let n = self.x_data.rows;
+        self.x_data.matvec(&self.w, &mut self.resid);
+        for i in 0..n {
+            self.resid[i] -= self.y[i];
+        }
+        let mut acc = 0.0f64;
+        for r in &self.resid {
+            acc += (*r as f64) * (*r as f64);
+        }
+        self.x_data.matvec_t(&self.resid, out);
+        for v in out.iter_mut() {
+            *v /= n as f32;
+        }
+        Ok(0.5 * acc / n as f64)
+    }
+}
+
+/// Binary logistic regression with labels in {-1, +1}:
+/// f(w) = 1/N sum log(1 + exp(-y_i x_i^T w)).
+pub struct LogRegOracle {
+    pub x_data: Matrix,
+    pub y: Vec<f32>,
+    w: Vec<f32>,
+    margin: Vec<f32>,
+    wtmp: Vec<f32>,
+    calls: u64,
+}
+
+impl LogRegOracle {
+    pub fn new(x_data: Matrix, y: Vec<f32>, w0: Vec<f32>) -> Self {
+        assert_eq!(x_data.rows, y.len());
+        assert_eq!(x_data.cols, w0.len());
+        for lab in &y {
+            assert!(*lab == 1.0 || *lab == -1.0, "labels must be +-1");
+        }
+        let n = y.len();
+        let d = w0.len();
+        Self { x_data, y, w: w0, margin: vec![0.0; n], wtmp: vec![0.0; d], calls: 0 }
+    }
+
+    fn loss_at(&mut self, w: &[f32]) -> f64 {
+        let n = self.x_data.rows;
+        self.x_data.matvec(w, &mut self.margin);
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            let m = (self.y[i] * self.margin[i]) as f64;
+            // log(1 + e^-m), stable
+            acc += if m > 0.0 { (-m).exp().ln_1p() } else { -m + m.exp().ln_1p() };
+        }
+        acc / n as f64
+    }
+}
+
+impl Oracle for LogRegOracle {
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    fn set_batch(&mut self, _batch: &Batch) -> Result<()> {
+        Ok(())
+    }
+
+    fn loss_dir(&mut self, dir: &[f32], scale: f32) -> Result<f64> {
+        self.calls += 1;
+        let mut wtmp = std::mem::take(&mut self.wtmp);
+        axpy_into(&mut wtmp, &self.w, scale, dir);
+        let v = self.loss_at(&wtmp);
+        self.wtmp = wtmp;
+        Ok(v)
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.w
+    }
+
+    fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()> {
+        f(&mut self.w);
+        Ok(())
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.calls
+    }
+
+    fn name(&self) -> &str {
+        "logreg"
+    }
+}
+
+impl GradOracle for LogRegOracle {
+    fn grad(&mut self, out: &mut [f32]) -> Result<f64> {
+        let n = self.x_data.rows;
+        self.x_data.matvec(&self.w, &mut self.margin);
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            let m = (self.y[i] * self.margin[i]) as f64;
+            acc += if m > 0.0 { (-m).exp().ln_1p() } else { -m + m.exp().ln_1p() };
+            // dl/dmargin_i = -y_i * sigmoid(-y_i m_i)
+            let s = 1.0 / (1.0 + m.exp());
+            self.margin[i] = -(self.y[i] as f64 * s) as f32;
+        }
+        self.x_data.matvec_t(&self.margin, out);
+        for v in out.iter_mut() {
+            *v /= n as f32;
+        }
+        Ok(acc / n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::nrm2;
+
+    fn fd_grad_check<O: GradOracle>(oracle: &mut O, tol: f64) {
+        let d = oracle.dim();
+        let mut g = vec![0.0f32; d];
+        oracle.grad(&mut g).unwrap();
+        let h = 1e-3f32;
+        for i in (0..d).step_by((d / 7).max(1)) {
+            let mut e = vec![0.0f32; d];
+            e[i] = 1.0;
+            let fp = oracle.loss_dir(&e, h).unwrap();
+            let fm = oracle.loss_dir(&e, -h).unwrap();
+            let fd = (fp - fm) / (2.0 * h as f64);
+            assert!(
+                (fd - g[i] as f64).abs() < tol * (1.0 + g[i].abs() as f64),
+                "coord {i}: fd {fd} vs grad {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn quadratic_grad_matches_fd() {
+        let d = 29;
+        let diag: Vec<f32> = (0..d).map(|i| 1.0 + i as f32 * 0.3).collect();
+        let center: Vec<f32> = (0..d).map(|i| (i as f32).sin()).collect();
+        let x0: Vec<f32> = (0..d).map(|i| (i as f32).cos()).collect();
+        let mut o = QuadraticOracle::new(diag, center, x0);
+        fd_grad_check(&mut o, 1e-3);
+    }
+
+    #[test]
+    fn quadratic_minimum_is_center() {
+        let mut o = QuadraticOracle::new(
+            vec![2.0, 3.0],
+            vec![1.0, -1.0],
+            vec![1.0, -1.0],
+        );
+        let zero = vec![0.0f32; 2];
+        assert!(o.loss_dir(&zero, 0.0).unwrap() < 1e-12);
+        let mut g = vec![0.0f32; 2];
+        o.grad(&mut g).unwrap();
+        assert!(nrm2(&g) < 1e-6);
+    }
+
+    #[test]
+    fn linreg_grad_matches_fd() {
+        let ds = crate::data::SyntheticRegression::a9a_like(64, 5);
+        let w0 = vec![0.1f32; 123];
+        let mut o = LinRegOracle::new(ds.x, ds.y, w0);
+        fd_grad_check(&mut o, 1e-2);
+    }
+
+    #[test]
+    fn linreg_loss_near_zero_at_truth_with_no_noise() {
+        let ds = crate::data::SyntheticRegression::generate(64, 20, 5, 0.0, 3);
+        let w = ds.w_true.clone();
+        let mut o = LinRegOracle::new(ds.x, ds.y, vec![0.0; 20]);
+        let mut dir = w;
+        let l_at_truth = o.loss_dir(&mut dir, 1.0).unwrap();
+        assert!(l_at_truth < 1e-9, "{l_at_truth}");
+    }
+
+    #[test]
+    fn logreg_grad_matches_fd() {
+        let ds = crate::data::SyntheticRegression::a9a_like(64, 11);
+        let y: Vec<f32> = ds.y.iter().map(|v| if *v > 0.0 { 1.0 } else { -1.0 }).collect();
+        let mut o = LogRegOracle::new(ds.x, y, vec![0.05f32; 123]);
+        fd_grad_check(&mut o, 1e-2);
+    }
+
+    #[test]
+    fn oracle_calls_counted() {
+        let mut o = QuadraticOracle::isotropic(vec![1.0; 4]);
+        let dir = vec![1.0f32, 0.0, 0.0, 0.0];
+        assert_eq!(o.oracle_calls(), 0);
+        o.loss_dir(&dir, 0.1).unwrap();
+        o.loss_dir(&dir, -0.1).unwrap();
+        assert_eq!(o.oracle_calls(), 2);
+        let dirs = vec![0.5f32; 8];
+        o.loss_k(&dirs, 2, 0.1).unwrap();
+        assert_eq!(o.oracle_calls(), 4);
+    }
+
+    #[test]
+    fn update_params_moves_iterate() {
+        let mut o = QuadraticOracle::isotropic(vec![1.0; 3]);
+        o.update_params(&mut |x| x[0] = 5.0).unwrap();
+        assert_eq!(o.params()[0], 5.0);
+    }
+}

@@ -1,0 +1,66 @@
+//! Loss oracles: the `f` in `min f(x)`.
+//!
+//! A ZO method sees the objective only through forward evaluations; this
+//! trait is that boundary.  Implementations:
+//! * [`PjrtOracle`] (in `pjrt.rs`) — the real thing: AOT-compiled
+//!   transformer loss executed via PJRT (one `loss_dir` call = one forward
+//!   pass of the model at `x + scale * dir`).
+//! * [`QuadraticOracle`], [`LinRegOracle`], [`LogRegOracle`] — closed-form
+//!   substrates for tests, the Fig. 2 toy experiment, and fast ablations.
+//!
+//! Every call increments an oracle-call counter: the paper's §5.1
+//! comparisons are at *fixed oracle budget*, so accounting lives at this
+//! boundary and is exact by construction.
+
+mod closed_form;
+mod pjrt;
+
+pub use closed_form::{LinRegOracle, LogRegOracle, QuadraticOracle};
+pub use pjrt::{read_f32_bin as read_params_bin, PjrtOracle};
+
+use anyhow::Result;
+
+use crate::data::Batch;
+
+/// Forward-evaluation interface.  The oracle owns the current iterate `x`
+/// (so PJRT implementations can keep it device-resident) and evaluates the
+/// objective at rank-1 perturbations of it.
+pub trait Oracle {
+    /// Trainable dimensionality d.
+    fn dim(&self) -> usize;
+
+    /// Point the oracle at the minibatch used for subsequent evaluations.
+    /// Builtin (full-batch) oracles ignore this.
+    fn set_batch(&mut self, batch: &Batch) -> Result<()>;
+
+    /// f(x + scale * dir).  `scale = 0` or an all-zero dir gives f(x).
+    fn loss_dir(&mut self, dir: &[f32], scale: f32) -> Result<f64>;
+
+    /// Losses at `x + tau * dirs[i]` for i in 0..k (dirs row-major K x d).
+    /// Default implementation loops `loss_dir`; the PJRT oracle overrides
+    /// it with the fused `loss_k` artifact (one dispatch for K probes).
+    fn loss_k(&mut self, dirs: &[f32], k: usize, tau: f32) -> Result<Vec<f64>> {
+        let d = self.dim();
+        assert_eq!(dirs.len(), k * d, "dirs must be K x d");
+        (0..k).map(|i| self.loss_dir(&dirs[i * d..(i + 1) * d], tau)).collect()
+    }
+
+    /// Read access to the current iterate.
+    fn params(&self) -> &[f32];
+
+    /// Mutate the iterate (optimizer step).  Implementations must
+    /// invalidate any device-resident copy.
+    fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()>;
+
+    /// Total forward evaluations so far (budget accounting).
+    fn oracle_calls(&self) -> u64;
+
+    fn name(&self) -> &str;
+}
+
+/// Oracles that can also expose the true gradient (first-order substrates
+/// used by the Fig. 2 toy experiment and by alignment diagnostics).
+pub trait GradOracle: Oracle {
+    /// out = grad f(x); returns f(x).
+    fn grad(&mut self, out: &mut [f32]) -> Result<f64>;
+}

@@ -1,0 +1,233 @@
+//! PJRT-backed loss oracle: forward passes of the AOT-compiled transformer.
+//!
+//! Perf-relevant structure (EXPERIMENTS.md §Perf):
+//! * trainable params are uploaded to the device once per optimizer update
+//!   (dirty-flag), not once per probe — K+1 probes reuse the buffer;
+//! * in LoRA mode the frozen base (d_ft floats) is uploaded exactly once
+//!   for the lifetime of the oracle;
+//! * the minibatch tensors are uploaded once per `set_batch`;
+//! * `loss_k` uses the fused K-probe artifact: one PJRT dispatch evaluates
+//!   all K candidate directions (Algorithm 2 line 4).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{ModelEntry, TrainMode};
+use crate::data::Batch;
+use crate::runtime::{Arg, DeviceBuffer, Executable, Runtime};
+
+use super::Oracle;
+
+pub struct PjrtOracle {
+    rt: Runtime,
+    entry: ModelEntry,
+    mode: TrainMode,
+    loss_dir_exe: Arc<Executable>,
+    loss_k_exe: Option<Arc<Executable>>,
+    /// current iterate (FT: full params; LoRA: adapter vector)
+    trainable: Vec<f32>,
+    trainable_dev: Option<DeviceBuffer>,
+    /// LoRA mode only: frozen base params, device-resident
+    base_dev: Option<DeviceBuffer>,
+    batch_dev: Option<(DeviceBuffer, DeviceBuffer, DeviceBuffer)>,
+    zero_dir: Vec<f32>,
+    calls: u64,
+    name: String,
+}
+
+impl PjrtOracle {
+    /// Build from the manifest entry.  Loads params/lora .bin files from the
+    /// runtime's artifact dir and compiles the loss artifacts.
+    pub fn new(rt: &Runtime, entry: &ModelEntry, mode: TrainMode) -> Result<Self> {
+        let dir = rt.artifact_dir().to_path_buf();
+        let base = read_f32_bin(&dir.join(&entry.params_file), entry.d_ft)?;
+        let (trainable, base_dev) = match mode {
+            TrainMode::Ft => (base, None),
+            TrainMode::Lora => {
+                let lora = read_f32_bin(
+                    &dir.join(&entry.lora_init_file),
+                    entry.d_lora,
+                )?;
+                let dev = rt
+                    .upload_f32(&base, &[entry.d_ft])
+                    .context("uploading frozen LoRA base")?;
+                (lora, Some(dev))
+            }
+        };
+        let loss_dir_exe = rt.load(&entry.artifact(mode, "loss_dir"))?;
+        // loss_k is an optimization; tolerate its absence (older manifests)
+        let loss_k_exe = rt.load(&entry.artifact(mode, "loss_k")).ok();
+        let d = trainable.len();
+        Ok(Self {
+            rt: rt.clone(),
+            entry: entry.clone(),
+            mode,
+            loss_dir_exe,
+            loss_k_exe,
+            trainable,
+            trainable_dev: None,
+            base_dev,
+            batch_dev: None,
+            zero_dir: vec![0.0; d],
+            calls: 0,
+            name: format!("pjrt:{}:{}", entry.name, mode.as_str()),
+        })
+    }
+
+    pub fn mode(&self) -> TrainMode {
+        self.mode
+    }
+
+    pub fn model(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    /// Replace the trainable vector wholesale (checkpoint restore).
+    pub fn load_trainable(&mut self, v: &[f32]) -> Result<()> {
+        if v.len() != self.trainable.len() {
+            bail!(
+                "trainable size mismatch: got {}, want {}",
+                v.len(),
+                self.trainable.len()
+            );
+        }
+        self.trainable.copy_from_slice(v);
+        self.trainable_dev = None;
+        Ok(())
+    }
+
+    fn ensure_trainable_dev(&mut self) -> Result<()> {
+        if self.trainable_dev.is_none() {
+            self.trainable_dev = Some(
+                self.rt
+                    .upload_f32(&self.trainable, &[self.trainable.len()])
+                    .context("uploading trainable params")?,
+            );
+        }
+        Ok(())
+    }
+
+    fn run_loss(
+        &mut self,
+        exe: Arc<Executable>,
+        dir: &[f32],
+        dir_dims: &[usize],
+        tau: f32,
+        n_out: usize,
+    ) -> Result<Vec<f64>> {
+        self.ensure_trainable_dev()?;
+        let (ids_dev, mask_dev, lab_dev) = self
+            .batch_dev
+            .as_ref()
+            .ok_or_else(|| anyhow!("{}: set_batch not called", self.name))?;
+        let t_dev = self.trainable_dev.as_ref().unwrap();
+        let dir_dev = self.rt.upload_f32(dir, dir_dims)?;
+        let tau_dev = self.rt.upload_f32(&[tau], &[])?;
+        let mut args: Vec<Arg<'_>> = Vec::with_capacity(7);
+        if let Some(bd) = &self.base_dev {
+            args.push(Arg::Device(bd));
+        }
+        args.push(Arg::Device(t_dev));
+        args.push(Arg::Device(&dir_dev));
+        args.push(Arg::Device(&tau_dev));
+        args.push(Arg::Device(ids_dev));
+        args.push(Arg::Device(mask_dev));
+        args.push(Arg::Device(lab_dev));
+        let out = exe.run_with_device(&args)?;
+        let losses = out
+            .first()
+            .ok_or_else(|| anyhow!("{}: empty output", exe.name))?;
+        if losses.len() != n_out {
+            bail!("{}: expected {n_out} losses, got {}", exe.name, losses.len());
+        }
+        Ok(losses.iter().map(|&x| x as f64).collect())
+    }
+}
+
+impl Oracle for PjrtOracle {
+    fn dim(&self) -> usize {
+        self.trainable.len()
+    }
+
+    fn set_batch(&mut self, batch: &Batch) -> Result<()> {
+        let s = self.entry.shapes;
+        if batch.batch != s.batch || batch.seq != s.seq {
+            bail!(
+                "batch shape [{}, {}] does not match artifact [{}, {}]",
+                batch.batch, batch.seq, s.batch, s.seq
+            );
+        }
+        let ids = self.rt.upload_i32(&batch.ids, &[batch.batch, batch.seq])?;
+        let mask = self.rt.upload_f32(&batch.mask, &[batch.batch, batch.seq])?;
+        let lab = self.rt.upload_i32(&batch.labels, &[batch.batch])?;
+        self.batch_dev = Some((ids, mask, lab));
+        Ok(())
+    }
+
+    fn loss_dir(&mut self, dir: &[f32], scale: f32) -> Result<f64> {
+        self.calls += 1;
+        let d = self.dim();
+        assert_eq!(dir.len(), d);
+        let exe = self.loss_dir_exe.clone();
+        Ok(self.run_loss(exe, dir, &[d], scale, 1)?[0])
+    }
+
+    fn loss_k(&mut self, dirs: &[f32], k: usize, tau: f32) -> Result<Vec<f64>> {
+        let d = self.dim();
+        assert_eq!(dirs.len(), k * d, "dirs must be K x d");
+        // the fused artifact is compiled for a fixed K
+        if k == self.entry.shapes.k {
+            if let Some(exe) = self.loss_k_exe.clone() {
+                self.calls += k as u64;
+                return self.run_loss(exe, dirs, &[k, d], tau, k);
+            }
+        }
+        // fall back to K separate dispatches
+        (0..k).map(|i| self.loss_dir(&dirs[i * d..(i + 1) * d], tau)).collect()
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.trainable
+    }
+
+    fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()> {
+        f(&mut self.trainable);
+        self.trainable_dev = None; // device copy is stale now
+        Ok(())
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.calls
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl PjrtOracle {
+    /// f(x) without perturbation (costs one oracle call).
+    pub fn loss_base(&mut self) -> Result<f64> {
+        let zeros = std::mem::take(&mut self.zero_dir);
+        let r = self.loss_dir(&zeros, 0.0);
+        self.zero_dir = zeros;
+        r
+    }
+}
+
+/// Read a little-endian f32 blob of exactly `expect` elements.
+pub fn read_f32_bin(path: &std::path::Path, expect: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expect * 4 {
+        bail!(
+            "{}: expected {} f32 ({} bytes), file has {} bytes",
+            path.display(), expect, expect * 4, bytes.len()
+        );
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

@@ -1,0 +1,161 @@
+//! Property-testing mini-framework (replaces the proptest crate).
+//!
+//! Seeded generators + a `check` driver that reports the failing case and
+//! the seed to reproduce it.  Shrinking is deliberately simple: on failure
+//! we retry with halved numeric magnitudes / shorter vectors a few times
+//! and report the smallest still-failing case.
+
+use crate::rng::Rng;
+
+/// A generator of random test inputs.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng) -> T;
+    /// Propose smaller variants of a failing value (best-effort shrink).
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the seed and the
+/// (possibly shrunk) counterexample on failure.
+pub fn check<T: std::fmt::Debug, G: Gen<T>, P: Fn(&T) -> bool>(
+    name: &str,
+    gen: &G,
+    cases: usize,
+    prop: P,
+) {
+    let base_seed = 0x5EED_CAFE ^ fxhash(name);
+    for case in 0..cases {
+        let mut rng = Rng::new(base_seed.wrapping_add(case as u64));
+        let value = gen.generate(&mut rng);
+        if !prop(&value) {
+            // try to shrink
+            let mut smallest = value;
+            'outer: for _ in 0..8 {
+                for cand in gen.shrink(&smallest) {
+                    if !prop(&cand) {
+                        smallest = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed at case {case} (seed {base_seed:#x}):\n{smallest:#?}"
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// f32 vectors with entries in [-scale, scale].
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Gen<Vec<f32>> for VecF32 {
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let span = (self.max_len - self.min_len + 1) as u64;
+        let len = self.min_len + rng.below(span) as usize;
+        (0..len)
+            .map(|_| ((rng.next_f64() as f32) * 2.0 - 1.0) * self.scale)
+            .collect()
+    }
+
+    fn shrink(&self, value: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if value.len() > self.min_len {
+            out.push(value[..value.len() / 2.max(self.min_len)].to_vec());
+        }
+        out.push(value.iter().map(|x| x / 2.0).collect());
+        out.retain(|v: &Vec<f32>| v.len() >= self.min_len);
+        out
+    }
+}
+
+/// Pairs of equal-length vectors.
+pub struct VecPairF32(pub VecF32);
+
+impl Gen<(Vec<f32>, Vec<f32>)> for VecPairF32 {
+    fn generate(&self, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+        let a = self.0.generate(rng);
+        let b: Vec<f32> = (0..a.len())
+            .map(|_| ((rng.next_f64() as f32) * 2.0 - 1.0) * self.0.scale)
+            .collect();
+        (a, b)
+    }
+
+    fn shrink(&self, value: &(Vec<f32>, Vec<f32>)) -> Vec<(Vec<f32>, Vec<f32>)> {
+        let (a, b) = value;
+        if a.len() > self.0.min_len {
+            let h = (a.len() / 2).max(self.0.min_len);
+            vec![(a[..h].to_vec(), b[..h].to_vec())]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Uniform u64 ranges (for seeds / indices).
+pub struct U64Range(pub u64, pub u64);
+
+impl Gen<u64> for U64Range {
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+
+    fn shrink(&self, value: &u64) -> Vec<u64> {
+        if *value > self.0 {
+            vec![self.0 + (value - self.0) / 2]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("len_bounded", &VecF32 { min_len: 1, max_len: 16, scale: 1.0 }, 200, |v| {
+            v.len() >= 1 && v.len() <= 16
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always_false")]
+    fn failing_property_panics_with_name() {
+        check("always_false", &U64Range(0, 10), 10, |_| false);
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_case() {
+        let gen = VecF32 { min_len: 2, max_len: 8, scale: 2.0 };
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        assert_eq!(gen.generate(&mut r1), gen.generate(&mut r2));
+    }
+
+    #[test]
+    fn pair_lengths_match() {
+        check(
+            "pair_lens",
+            &VecPairF32(VecF32 { min_len: 1, max_len: 32, scale: 1.0 }),
+            100,
+            |(a, b)| a.len() == b.len(),
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! Report emitters: markdown tables, CSV series, JSON result files.
+//!
+//! Every bench/example writes its numbers through this module so
+//! EXPERIMENTS.md entries and regenerated artifacts share one format.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::jsonio::{to_string_pretty, Json};
+
+/// A rectangular markdown table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths.iter()) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_markdown());
+    }
+}
+
+/// Write (x, series...) columns as CSV — the figure-regeneration format.
+pub fn write_csv(
+    path: &Path,
+    headers: &[&str],
+    columns: &[&[f64]],
+) -> Result<()> {
+    assert_eq!(headers.len(), columns.len(), "csv arity mismatch");
+    let n = columns.first().map(|c| c.len()).unwrap_or(0);
+    for c in columns {
+        assert_eq!(c.len(), n, "csv column length mismatch");
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "{}", headers.join(","))?;
+    for i in 0..n {
+        let row: Vec<String> = columns.iter().map(|c| format!("{}", c[i])).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write a JSON value to a file (pretty).
+pub fn write_json(path: &Path, value: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    std::fs::write(path, to_string_pretty(value))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Helpers for building Json values tersely.
+pub fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+pub fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+pub fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn jarr_f64(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_table_shape() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| a "));
+        assert!(md.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("zo_ldsd_test_csv");
+        let path = dir.join("x.csv");
+        write_csv(&path, &["step", "loss"], &[&[1.0, 2.0], &[0.5, 0.25]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().next().unwrap(), "step,loss");
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_builders() {
+        let v = jobj(vec![("a", jnum(1.0)), ("b", jarr_f64(&[1.0, 2.0]))]);
+        let s = to_string_pretty(&v);
+        assert!(s.contains("\"a\""));
+    }
+}

@@ -1,0 +1,147 @@
+//! Deterministic random-number substrate (replaces the `rand` crate).
+//!
+//! Two generators:
+//! * [`SplitMix64`] — the corpus/data ABI generator.  Must stay
+//!   bit-identical to `python/compile/corpus.py::SplitMix64`; the golden
+//!   tests in `rust/tests/` pin this.
+//! * [`Xoshiro256`] — the general-purpose stream used by samplers and
+//!   optimizers (seeded from SplitMix64 per the xoshiro authors'
+//!   recommendation).
+//!
+//! Gaussian variates come from [`Normal`], a Box–Muller transform with a
+//! cached spare, so direction sampling needs one generator state and no
+//! allocation.
+
+mod normal;
+mod splitmix;
+mod xoshiro;
+
+pub use normal::Normal;
+pub use splitmix::{SplitMix64, GOLDEN_GAMMA};
+pub use xoshiro::Xoshiro256;
+
+/// Convenience: a seeded xoshiro stream with Gaussian support.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    core: Xoshiro256,
+    normal: Normal,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { core: Xoshiro256::seeded(seed), normal: Normal::new() }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.core.next_u64()
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.core.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        self.core.next_u64() % n
+    }
+
+    /// Standard normal.
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        let core = &mut self.core;
+        self.normal.sample(|| core.next_u64())
+    }
+
+    /// Fill `out` with iid N(0, 1) samples (f32).
+    ///
+    /// Hot path: FT-mode LDSD draws K x d normals per step (6.6M for
+    /// roberta_mini), so this runs a tight pairwise Box–Muller loop with
+    /// one `sin_cos` per two outputs instead of going through the cached-
+    /// spare scalar path (§Perf in EXPERIMENTS.md).
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        const TWO_PI: f64 = 2.0 * std::f64::consts::PI;
+        const SCALE: f64 = 1.0 / (1u64 << 53) as f64;
+        let mut chunks = out.chunks_exact_mut(2);
+        for pair in &mut chunks {
+            let u1 = ((self.core.next_u64() >> 11) as f64 + 1.0) * SCALE;
+            let u2 = (self.core.next_u64() >> 11) as f64 * SCALE;
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (TWO_PI * u2).sin_cos();
+            pair[0] = (r * c) as f32;
+            pair[1] = (r * s) as f32;
+        }
+        if let [last] = chunks.into_remainder() {
+            *last = self.normal() as f32;
+        }
+    }
+
+    /// Derive an independent child stream (for per-trial seeding).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mut mixer = SplitMix64::new(self.next_u64() ^ tag.wrapping_mul(GOLDEN_GAMMA));
+        Rng::new(mixer.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_uniform_range() {
+        let mut r = Rng::new(42);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn rng_below_bound() {
+        let mut r = Rng::new(7);
+        for n in [1u64, 2, 3, 17, 1000] {
+            for _ in 0..100 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = Rng::new(123);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut r = Rng::new(1);
+        let mut a = r.fork(0);
+        let mut b = r.fork(1);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Box–Muller Gaussian sampling with a cached spare variate.
+
+#[derive(Clone, Debug, Default)]
+pub struct Normal {
+    spare: Option<f64>,
+}
+
+impl Normal {
+    pub fn new() -> Self {
+        Self { spare: None }
+    }
+
+    /// Draw one standard-normal sample, pulling u64s from `next`.
+    #[inline]
+    pub fn sample<F: FnMut() -> u64>(&mut self, mut next: F) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        // u1 in (0, 1] to keep ln() finite; u2 in [0, 1)
+        let u1 = ((next() >> 11) as f64 + 1.0) * (1.0 / (1u64 << 53) as f64);
+        let u2 = (next() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    #[test]
+    fn finite_and_symmetricish() {
+        let mut sm = SplitMix64::new(3);
+        let mut n = Normal::new();
+        let mut pos = 0usize;
+        let total = 100_000;
+        for _ in 0..total {
+            let z = n.sample(|| sm.next_u64());
+            assert!(z.is_finite());
+            if z > 0.0 {
+                pos += 1;
+            }
+        }
+        let frac = pos as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.01, "positive fraction {frac}");
+    }
+
+    #[test]
+    fn spare_is_used() {
+        let mut sm = SplitMix64::new(9);
+        let mut n = Normal::new();
+        let mut draws = 0usize;
+        let _a = n.sample(|| {
+            draws += 1;
+            sm.next_u64()
+        });
+        let _b = n.sample(|| {
+            draws += 1;
+            sm.next_u64()
+        });
+        assert_eq!(draws, 2, "second sample must come from the cached spare");
+    }
+}

@@ -1,0 +1,145 @@
+//! Executable wrapper + argument marshalling for PJRT execution.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A host-side view of one executable argument.
+///
+/// Shapes follow the artifact manifest; scalars are rank-0.
+#[derive(Clone, Copy, Debug)]
+pub enum ArgValue<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+    ScalarF32(f32),
+}
+
+/// A device-resident buffer (wrapper so callers never touch xla types).
+pub struct DeviceBuffer {
+    pub(crate) buf: xla::PjRtBuffer,
+    pub elements: usize,
+}
+
+/// One argument for the hot-path entry point: either already on device or a
+/// host view to upload for this call.
+pub enum Arg<'a> {
+    Device(&'a DeviceBuffer),
+    Host(ArgValue<'a>),
+}
+
+pub(crate) fn upload_f32(
+    client: &xla::PjRtClient,
+    data: &[f32],
+    dims: &[usize],
+) -> Result<DeviceBuffer> {
+    let buf = client
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow!("uploading f32{dims:?}: {e:?}"))?;
+    Ok(DeviceBuffer { buf, elements: data.len() })
+}
+
+pub(crate) fn upload_i32(
+    client: &xla::PjRtClient,
+    data: &[i32],
+    dims: &[usize],
+) -> Result<DeviceBuffer> {
+    let buf = client
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow!("uploading i32{dims:?}: {e:?}"))?;
+    Ok(DeviceBuffer { buf, elements: data.len() })
+}
+
+/// A compiled artifact.  All artifact graphs return a tuple (jax lowering
+/// uses `return_tuple=True`), so outputs decompose into flat f32 vectors.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    pub name: String,
+}
+
+impl Executable {
+    pub(crate) fn compile(
+        client: &xla::PjRtClient,
+        path: &Path,
+        name: &str,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile of {name}: {e:?}"))?;
+        Ok(Self { exe, client: client.clone(), name: name.to_string() })
+    }
+
+    /// Execute with host arguments only; returns each tuple element as a
+    /// flat f32 vector.
+    pub fn run(&self, args: &[ArgValue<'_>]) -> Result<Vec<Vec<f32>>> {
+        let wrapped: Vec<Arg<'_>> = args.iter().map(|a| Arg::Host(*a)).collect();
+        self.run_with_device(&wrapped)
+    }
+
+    /// Hot-path execute: mix of device-resident and host arguments.
+    pub fn run_with_device(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        // Temporary uploads must outlive the execute call.
+        let mut temps: Vec<DeviceBuffer> = Vec::new();
+        let mut order: Vec<usize> = Vec::new(); // index into temps or marker
+        const DEVICE: usize = usize::MAX;
+        for a in args {
+            match a {
+                Arg::Device(_) => order.push(DEVICE),
+                Arg::Host(h) => {
+                    let t = match h {
+                        ArgValue::F32(data, dims) => {
+                            upload_f32(&self.client, data, dims)?
+                        }
+                        ArgValue::I32(data, dims) => {
+                            upload_i32(&self.client, data, dims)?
+                        }
+                        ArgValue::ScalarF32(x) => {
+                            upload_f32(&self.client, &[*x], &[])?
+                        }
+                    };
+                    order.push(temps.len());
+                    temps.push(t);
+                }
+            }
+        }
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut ti = 0usize;
+        for (a, o) in args.iter().zip(order.iter()) {
+            match a {
+                Arg::Device(d) => bufs.push(&d.buf),
+                Arg::Host(_) => {
+                    bufs.push(&temps[*o].buf);
+                    ti += 1;
+                }
+            }
+        }
+        debug_assert_eq!(ti, temps.len());
+        let outs = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let first = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: no output buffers", self.name))?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: output download: {e:?}", self.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: output is not a tuple: {e:?}", self.name))?;
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| {
+                p.to_vec::<f32>().map_err(|e| {
+                    anyhow!("{}: output {i} is not f32: {e:?}", self.name)
+                })
+            })
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("collecting outputs of {}", self.name))
+    }
+}

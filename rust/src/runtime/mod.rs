@@ -1,0 +1,98 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate.  The interchange
+//! format is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see /opt/xla-example).
+//!
+//! Design notes:
+//! * [`Runtime`] owns the PJRT CPU client; [`Executable`]s are compiled
+//!   once and cached by artifact name ([`Runtime::load`] is idempotent).
+//! * Arguments go host->device through [`ArgValue`] views (no copies on
+//!   the rust side beyond the PJRT transfer itself).
+//! * For the hot loop, [`Executable::run_with_device`] accepts
+//!   pre-uploaded [`DeviceBuffer`]s so large constants (model parameters,
+//!   frozen LoRA bases) are transferred once per update, not per probe.
+
+mod exec;
+
+pub use exec::{Arg, ArgValue, DeviceBuffer, Executable};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client + compiled-executable cache.
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<RuntimeInner>,
+}
+
+struct RuntimeInner {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime rooted at the artifact directory.
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            inner: Arc::new(RuntimeInner {
+                client,
+                dir: artifact_dir.as_ref().to_path_buf(),
+                cache: Mutex::new(HashMap::new()),
+            }),
+        })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.inner.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached; concurrent calls compile once).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        {
+            let cache = self.inner.cache.lock().unwrap();
+            if let Some(e) = cache.get(name) {
+                return Ok(e.clone());
+            }
+        }
+        let path = self.inner.dir.join(format!("{name}.hlo.txt"));
+        let exe = Arc::new(
+            Executable::compile(&self.inner.client, &path, name)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        let mut cache = self.inner.cache.lock().unwrap();
+        Ok(cache.entry(name.to_string()).or_insert(exe).clone())
+    }
+
+    /// Upload a host f32 array to the device (kept resident until dropped).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuffer> {
+        exec::upload_f32(&self.inner.client, data, dims)
+    }
+
+    /// Upload a host i32 array to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<DeviceBuffer> {
+        exec::upload_i32(&self.inner.client, data, dims)
+    }
+
+    pub(crate) fn client(&self) -> &xla::PjRtClient {
+        &self.inner.client
+    }
+
+    /// Names of artifacts currently compiled into the cache.
+    pub fn loaded(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.inner.cache.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}

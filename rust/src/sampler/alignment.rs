@@ -1,0 +1,126 @@
+//! Gradient-alignment diagnostics: the paper's C^t = <v̄, ∇f̄>^2 and its
+//! expectation E[C^t | F^{t-1}] (Figs. 1-2, Lemma 2).
+
+use crate::rng::Rng;
+use crate::tensor::{cosine, nrm2};
+
+/// Monte-Carlo estimate of E[ <v̄, ḡ>^2 ] for v ~ N(mu, eps^2 I).
+/// This is the landscape function of Fig. 1 evaluated at one (mu, g).
+pub fn expected_alignment_mc(
+    mu: &[f32],
+    grad: &[f32],
+    eps: f32,
+    n_samples: usize,
+    seed: u64,
+) -> f64 {
+    assert_eq!(mu.len(), grad.len());
+    let d = mu.len();
+    let gn = nrm2(grad) as f64;
+    if gn <= f64::from(f32::MIN_POSITIVE) {
+        return 0.0;
+    }
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; d];
+    let mut acc = 0.0f64;
+    for _ in 0..n_samples {
+        rng.fill_normal(&mut v);
+        for (vi, mi) in v.iter_mut().zip(mu.iter()) {
+            *vi = mi + eps * *vi;
+        }
+        let c = cosine(&v, grad) as f64;
+        acc += c * c;
+    }
+    acc / n_samples as f64
+}
+
+/// Running statistics of the realized alignment cos(g_est, grad f) along a
+/// training trajectory (the Fig. 2 left panel series).
+#[derive(Clone, Debug, Default)]
+pub struct AlignmentTracker {
+    pub series: Vec<f32>,
+}
+
+impl AlignmentTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, estimate: &[f32], true_grad: &[f32]) -> f32 {
+        let c = cosine(estimate, true_grad);
+        self.series.push(c);
+        c
+    }
+
+    pub fn last(&self) -> Option<f32> {
+        self.series.last().copied()
+    }
+
+    /// Mean of the last `n` recorded alignments.
+    pub fn tail_mean(&self, n: usize) -> f32 {
+        if self.series.is_empty() {
+            return 0.0;
+        }
+        let start = self.series.len().saturating_sub(n);
+        let tail = &self.series[start..];
+        tail.iter().sum::<f32>() / tail.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Corollary 1: for mu = 0 the expected alignment is exactly 1/d.
+    #[test]
+    fn zero_mean_alignment_is_one_over_d() {
+        for d in [16usize, 64, 256] {
+            let mu = vec![0.0f32; d];
+            let mut g = vec![0.0f32; d];
+            g[0] = 1.0;
+            let c = expected_alignment_mc(&mu, &g, 1.0, 20_000, 42);
+            let expect = 1.0 / d as f64;
+            assert!(
+                (c - expect).abs() < 0.35 * expect + 2e-4,
+                "d={d}: mc {c} vs 1/d {expect}"
+            );
+        }
+    }
+
+    /// Aligned mu with small eps gives alignment near 1 — the O(1) regime
+    /// of Lemma 2.
+    #[test]
+    fn aligned_mean_alignment_near_one() {
+        let d = 128;
+        let mut mu = vec![0.0f32; d];
+        mu[0] = 1.0;
+        let mut g = vec![0.0f32; d];
+        g[0] = 2.0;
+        let c = expected_alignment_mc(&mu, &g, 0.01, 2_000, 7);
+        assert!(c > 0.98, "c = {c}");
+    }
+
+    /// Orthogonal mu with tiny eps gives alignment near 0 (the saddle
+    /// valley of Fig. 1).
+    #[test]
+    fn orthogonal_mean_alignment_near_zero() {
+        let d = 128;
+        let mut mu = vec![0.0f32; d];
+        mu[1] = 1.0;
+        let mut g = vec![0.0f32; d];
+        g[0] = 1.0;
+        let c = expected_alignment_mc(&mu, &g, 0.01, 2_000, 7);
+        assert!(c < 0.02, "c = {c}");
+    }
+
+    #[test]
+    fn tracker_tail_mean() {
+        let mut t = AlignmentTracker::new();
+        let g = [1.0f32, 0.0];
+        t.record(&[1.0, 0.0], &g);
+        t.record(&[0.0, 1.0], &g);
+        t.record(&[1.0, 0.0], &g);
+        assert_eq!(t.series.len(), 3);
+        assert!((t.tail_mean(2) - 0.5).abs() < 1e-6);
+        assert_eq!(t.last(), Some(1.0));
+    }
+}

@@ -1,0 +1,188 @@
+//! Policy-free baseline samplers.
+
+use crate::rng::Rng;
+use crate::tensor::normalize;
+
+use super::DirectionSampler;
+
+/// v ~ N(0, I): the classical ZO direction distribution
+/// (Nesterov–Spokoiny / Ghadimi–Lan / MeZO).
+pub struct GaussianSampler {
+    rng: Rng,
+    d: usize,
+}
+
+impl GaussianSampler {
+    pub fn new(d: usize, seed: u64) -> Self {
+        Self { rng: Rng::new(seed), d }
+    }
+}
+
+impl DirectionSampler for GaussianSampler {
+    fn sample(&mut self, dirs: &mut [f32], k: usize) {
+        assert_eq!(dirs.len(), k * self.d);
+        self.rng.fill_normal(dirs);
+    }
+
+    fn observe(&mut self, _dirs: &[f32], _losses: &[f64], _k: usize) {}
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn state_bytes(&self) -> usize {
+        0 // no per-parameter state
+    }
+
+    fn name(&self) -> &str {
+        "gaussian"
+    }
+}
+
+/// v uniform on the unit sphere RS(1): normalized Gaussian draws.
+pub struct SphereSampler {
+    rng: Rng,
+    d: usize,
+}
+
+impl SphereSampler {
+    pub fn new(d: usize, seed: u64) -> Self {
+        Self { rng: Rng::new(seed), d }
+    }
+}
+
+impl DirectionSampler for SphereSampler {
+    fn sample(&mut self, dirs: &mut [f32], k: usize) {
+        assert_eq!(dirs.len(), k * self.d);
+        for i in 0..k {
+            let row = &mut dirs[i * self.d..(i + 1) * self.d];
+            loop {
+                self.rng.fill_normal(row);
+                if normalize(row) > 0.0 {
+                    break;
+                }
+            }
+        }
+    }
+
+    fn observe(&mut self, _dirs: &[f32], _losses: &[f64], _k: usize) {}
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &str {
+        "sphere"
+    }
+}
+
+/// v = sqrt(d) * e_j with j uniform — the coordinate/one-hot distribution
+/// (Duchi et al.).  Scaled by sqrt(d) so E[v v^T] = I like the Gaussian.
+pub struct CoordinateSampler {
+    rng: Rng,
+    d: usize,
+    scale: f32,
+}
+
+impl CoordinateSampler {
+    pub fn new(d: usize, seed: u64) -> Self {
+        Self { rng: Rng::new(seed), d, scale: (d as f32).sqrt() }
+    }
+}
+
+impl DirectionSampler for CoordinateSampler {
+    fn sample(&mut self, dirs: &mut [f32], k: usize) {
+        assert_eq!(dirs.len(), k * self.d);
+        dirs.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..k {
+            let j = self.rng.below(self.d as u64) as usize;
+            dirs[i * self.d + j] = self.scale;
+        }
+    }
+
+    fn observe(&mut self, _dirs: &[f32], _losses: &[f64], _k: usize) {}
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &str {
+        "coordinate"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{dot, nrm2};
+
+    #[test]
+    fn gaussian_rows_roughly_unit_scale() {
+        let d = 4096;
+        let mut s = GaussianSampler::new(d, 1);
+        let mut dirs = vec![0.0f32; 3 * d];
+        s.sample(&mut dirs, 3);
+        for i in 0..3 {
+            let n = nrm2(&dirs[i * d..(i + 1) * d]);
+            // ||N(0, I_d)|| concentrates around sqrt(d)
+            assert!((n - (d as f32).sqrt()).abs() < 0.1 * (d as f32).sqrt());
+        }
+    }
+
+    #[test]
+    fn gaussian_rows_nearly_orthogonal() {
+        let d = 8192;
+        let mut s = GaussianSampler::new(d, 2);
+        let mut dirs = vec![0.0f32; 2 * d];
+        s.sample(&mut dirs, 2);
+        let (a, b) = dirs.split_at(d);
+        let cos = dot(a, b) / (nrm2(a) * nrm2(b));
+        assert!(cos.abs() < 0.05, "cos {cos}");
+    }
+
+    #[test]
+    fn sphere_rows_unit_norm() {
+        let d = 100;
+        let mut s = SphereSampler::new(d, 3);
+        let mut dirs = vec![0.0f32; 5 * d];
+        s.sample(&mut dirs, 5);
+        for i in 0..5 {
+            let n = nrm2(&dirs[i * d..(i + 1) * d]);
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn coordinate_rows_one_hot() {
+        let d = 64;
+        let mut s = CoordinateSampler::new(d, 4);
+        let mut dirs = vec![0.0f32; 10 * d];
+        s.sample(&mut dirs, 10);
+        for i in 0..10 {
+            let row = &dirs[i * d..(i + 1) * d];
+            let nnz = row.iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(nnz, 1);
+            assert!((nrm2(row) - (d as f32).sqrt()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn samplers_deterministic_by_seed() {
+        let d = 32;
+        let mut a = GaussianSampler::new(d, 9);
+        let mut b = GaussianSampler::new(d, 9);
+        let mut da = vec![0.0f32; d];
+        let mut db = vec![0.0f32; d];
+        a.sample(&mut da, 1);
+        b.sample(&mut db, 1);
+        assert_eq!(da, db);
+    }
+}

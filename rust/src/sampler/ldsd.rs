@@ -1,0 +1,318 @@
+//! LDSD: the learnable direction-sampling policy (Algorithms 1-2).
+//!
+//! Directions are drawn from N(mu, eps^2 I); after the K probe losses
+//! `f(x + tau v_i)` are observed, the policy mean is updated with the
+//! REINFORCE / leave-one-out estimator of Algorithm 2 line 6:
+//!
+//! ```text
+//! g_mu = (1/K) sum_i  w_i * (v_i - mu) / eps^2,
+//! w_i  = (K f_i - sum_j f_j) / (K - 1)        (leave-one-out advantage)
+//! mu  <- mu + gamma_mu * sign * g_mu
+//! ```
+//!
+//! **Sign note** (DESIGN.md §5): as printed, line 8 (`mu += gamma_mu g_mu`
+//! with w_i the loss-advantage) *ascends* E[f(x + tau v)], i.e. steers the
+//! policy toward high-loss directions — the opposite of the stated goal of
+//! concentrating mass on "empirically useful directions" and of the
+//! first-order Algorithm 1, which ascends the alignment reward.  We treat
+//! the printed sign as a typo: the default `reward_sign = -1.0` descends
+//! the loss (reward = -f).  Set `reward_sign = 1.0` to reproduce the
+//! literal paper update; the `fig3` ablation bench sweeps both.
+
+use crate::rng::Rng;
+use crate::tensor::{axpy, nrm2, scal};
+
+use super::DirectionSampler;
+
+#[derive(Clone, Debug)]
+pub struct LdsdConfig {
+    /// Std-dev of the sampling distribution (paper's epsilon; §A.2 uses 1).
+    pub eps: f32,
+    /// Policy learning rate (paper's gamma_mu; §A.2 uses 1e-3).
+    pub gamma_mu: f32,
+    /// -1.0 (default): reward = -loss (descend f).  +1.0: literal paper.
+    pub reward_sign: f32,
+    /// Initial ||mu||; mu0 is random isotropic at this norm.  Theorem 1
+    /// excludes mu0 = 0 (saddle of the alignment landscape), so this must
+    /// be positive.
+    pub init_norm: f32,
+    /// Optionally renormalize mu to `init_norm` after each update — the
+    /// paper's §3.5 closing remark suggests ||mu|| = 1 as a natural design
+    /// choice; we keep it optional and ablate it.
+    pub renormalize: bool,
+    /// Use the leave-one-out baseline (Algorithm 2).  `false` uses the
+    /// plain mean baseline of §3.6.
+    pub leave_one_out: bool,
+}
+
+impl Default for LdsdConfig {
+    fn default() -> Self {
+        Self {
+            eps: 1.0,
+            gamma_mu: 1e-3,
+            reward_sign: -1.0,
+            init_norm: 1.0,
+            renormalize: false,
+            leave_one_out: true,
+        }
+    }
+}
+
+pub struct LdsdSampler {
+    cfg: LdsdConfig,
+    mu: Vec<f32>,
+    rng: Rng,
+    /// scratch for the weighted reduce (kept across steps: zero-alloc loop)
+    weights: Vec<f32>,
+}
+
+impl LdsdSampler {
+    pub fn new(d: usize, seed: u64, cfg: LdsdConfig) -> Self {
+        assert!(cfg.eps > 0.0, "eps must be positive");
+        assert!(cfg.init_norm > 0.0, "mu0 = 0 is a saddle (Theorem 1)");
+        let mut rng = Rng::new(seed);
+        let mut mu = vec![0.0f32; d];
+        rng.fill_normal(&mut mu);
+        let n = nrm2(&mu);
+        if n > 0.0 {
+            scal(cfg.init_norm / n, &mut mu);
+        }
+        Self { cfg, mu, rng, weights: Vec::new() }
+    }
+
+    /// Warm-start the policy mean along a known direction (Lemma 3's
+    /// `mu^0 || grad f(x^0)` initialization).
+    pub fn set_mean(&mut self, mean: &[f32]) {
+        assert_eq!(mean.len(), self.mu.len());
+        self.mu.copy_from_slice(mean);
+    }
+
+    pub fn config(&self) -> &LdsdConfig {
+        &self.cfg
+    }
+
+    pub fn mu_norm(&self) -> f32 {
+        nrm2(&self.mu)
+    }
+}
+
+impl DirectionSampler for LdsdSampler {
+    fn sample(&mut self, dirs: &mut [f32], k: usize) {
+        let d = self.mu.len();
+        assert_eq!(dirs.len(), k * d);
+        self.rng.fill_normal(dirs);
+        let eps = self.cfg.eps;
+        for i in 0..k {
+            let row = &mut dirs[i * d..(i + 1) * d];
+            for (r, m) in row.iter_mut().zip(self.mu.iter()) {
+                *r = m + eps * *r;
+            }
+        }
+    }
+
+    fn observe(&mut self, dirs: &[f32], losses: &[f64], k: usize) {
+        let d = self.mu.len();
+        assert_eq!(dirs.len(), k * d);
+        assert_eq!(losses.len(), k);
+        if k < 2 {
+            // no baseline is possible; skip the policy update
+            return;
+        }
+        let sum: f64 = losses.iter().sum();
+        self.weights.clear();
+        for i in 0..k {
+            let adv = if self.cfg.leave_one_out {
+                (k as f64 * losses[i] - sum) / (k as f64 - 1.0)
+            } else {
+                losses[i] - sum / k as f64
+            };
+            self.weights.push(adv as f32);
+        }
+        // mu += gamma_mu * sign * (1/K) sum_i w_i (v_i - mu) / eps^2
+        let coef = self.cfg.gamma_mu * self.cfg.reward_sign
+            / (k as f32 * self.cfg.eps * self.cfg.eps);
+        // (v_i - mu) = dirs_i - mu:
+        //   mu_new = (1 - coef * wsum) * mu + coef * sum_i w_i dirs_i.
+        // Both baselines make the advantages sum to zero analytically
+        // (wsum ~ 0), but we keep the exact form: scale mu first, then
+        // accumulate the direction contributions.
+        let wsum: f32 = self.weights.iter().sum();
+        scal(1.0 - coef * wsum, &mut self.mu);
+        for i in 0..k {
+            let w = self.weights[i];
+            if w != 0.0 {
+                axpy(coef * w, &dirs[i * d..(i + 1) * d], &mut self.mu);
+            }
+        }
+        if self.cfg.renormalize {
+            let n = nrm2(&self.mu);
+            if n > f32::MIN_POSITIVE {
+                scal(self.cfg.init_norm / n, &mut self.mu);
+            }
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.mu.len()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.mu.len() * 4 // the O(d) policy mean — the paper's memory claim
+    }
+
+    fn name(&self) -> &str {
+        "ldsd"
+    }
+
+    fn policy_mean(&self) -> Option<&[f32]> {
+        Some(&self.mu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{cosine, dot};
+
+    #[test]
+    fn init_norm_respected() {
+        let s = LdsdSampler::new(512, 1, LdsdConfig { init_norm: 2.5, ..Default::default() });
+        assert!((s.mu_norm() - 2.5).abs() < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_init_rejected() {
+        let _ = LdsdSampler::new(8, 1, LdsdConfig { init_norm: 0.0, ..Default::default() });
+    }
+
+    #[test]
+    fn sample_mean_is_mu() {
+        let d = 64;
+        let mut s = LdsdSampler::new(
+            d, 7, LdsdConfig { eps: 0.5, init_norm: 3.0, ..Default::default() },
+        );
+        let k = 400;
+        let mut dirs = vec![0.0f32; k * d];
+        s.sample(&mut dirs, k);
+        let mut mean = vec![0.0f32; d];
+        for i in 0..k {
+            axpy(1.0 / k as f32, &dirs[i * d..(i + 1) * d], &mut mean);
+        }
+        let mu = s.policy_mean().unwrap();
+        let cos = cosine(&mean, mu);
+        assert!(cos > 0.95, "empirical mean should align with mu, cos={cos}");
+    }
+
+    #[test]
+    fn gamma_zero_keeps_policy_fixed() {
+        // LDSD with gamma_mu = 0 must behave as a frozen-mean sampler —
+        // observe() is a no-op on mu.
+        let d = 32;
+        let mut s = LdsdSampler::new(
+            d, 3, LdsdConfig { gamma_mu: 0.0, ..Default::default() },
+        );
+        let mu0 = s.policy_mean().unwrap().to_vec();
+        let k = 5;
+        let mut dirs = vec![0.0f32; k * d];
+        s.sample(&mut dirs, k);
+        let losses = vec![1.0f64, 2.0, 3.0, 4.0, 5.0];
+        s.observe(&dirs, &losses, k);
+        assert_eq!(s.policy_mean().unwrap(), &mu0[..]);
+    }
+
+    #[test]
+    fn policy_moves_toward_low_loss_direction() {
+        // Construct losses that are lowest for directions aligned with a
+        // target t; after many updates mu should rotate toward t.
+        let d = 16;
+        let mut s = LdsdSampler::new(
+            d,
+            11,
+            LdsdConfig { eps: 1.0, gamma_mu: 0.05, ..Default::default() },
+        );
+        let mut target = vec![0.0f32; d];
+        target[0] = 1.0;
+        let k = 8;
+        let mut dirs = vec![0.0f32; k * d];
+        let cos_before = cosine(s.policy_mean().unwrap(), &target).abs();
+        for _ in 0..300 {
+            s.sample(&mut dirs, k);
+            // loss decreases with alignment: f = -<v, t>
+            let losses: Vec<f64> = (0..k)
+                .map(|i| -dot(&dirs[i * d..(i + 1) * d], &target) as f64)
+                .collect();
+            s.observe(&dirs, &losses, k);
+        }
+        let cos_after = cosine(s.policy_mean().unwrap(), &target);
+        assert!(
+            cos_after > 0.9 && cos_after > cos_before,
+            "cos before {cos_before}, after {cos_after}"
+        );
+    }
+
+    #[test]
+    fn paper_sign_moves_away_from_low_loss() {
+        // reward_sign = +1 (the literal printed update) must do the
+        // opposite: mu drifts toward HIGH loss directions.
+        let d = 16;
+        let mut s = LdsdSampler::new(
+            d,
+            11,
+            LdsdConfig {
+                eps: 1.0,
+                gamma_mu: 0.05,
+                reward_sign: 1.0,
+                ..Default::default()
+            },
+        );
+        let mut target = vec![0.0f32; d];
+        target[0] = 1.0;
+        let k = 8;
+        let mut dirs = vec![0.0f32; k * d];
+        for _ in 0..300 {
+            s.sample(&mut dirs, k);
+            let losses: Vec<f64> = (0..k)
+                .map(|i| -dot(&dirs[i * d..(i + 1) * d], &target) as f64)
+                .collect();
+            s.observe(&dirs, &losses, k);
+        }
+        let cos_after = cosine(s.policy_mean().unwrap(), &target);
+        assert!(cos_after < -0.5, "expected anti-alignment, cos={cos_after}");
+    }
+
+    #[test]
+    fn k1_observe_is_noop() {
+        let d = 8;
+        let mut s = LdsdSampler::new(d, 2, LdsdConfig::default());
+        let mu0 = s.policy_mean().unwrap().to_vec();
+        let mut dirs = vec![0.0f32; d];
+        s.sample(&mut dirs, 1);
+        s.observe(&dirs, &[1.0], 1);
+        assert_eq!(s.policy_mean().unwrap(), &mu0[..]);
+    }
+
+    #[test]
+    fn renormalize_keeps_norm() {
+        let d = 32;
+        let mut s = LdsdSampler::new(
+            d,
+            5,
+            LdsdConfig {
+                renormalize: true,
+                init_norm: 1.0,
+                gamma_mu: 0.1,
+                ..Default::default()
+            },
+        );
+        let k = 4;
+        let mut dirs = vec![0.0f32; k * d];
+        for step in 0..20 {
+            s.sample(&mut dirs, k);
+            let losses: Vec<f64> =
+                (0..k).map(|i| (i + step) as f64 * 0.1).collect();
+            s.observe(&dirs, &losses, k);
+            assert!((s.mu_norm() - 1.0).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Direction sampling — the paper's contribution.
+//!
+//! A [`DirectionSampler`] produces the K candidate perturbation directions
+//! of Algorithm 2 line 3 and (optionally) learns from the observed probe
+//! losses (lines 6/8).  Implementations:
+//!
+//! * [`GaussianSampler`] — classical ZO: v ~ N(0, I) (MeZO / ZO-SGD
+//!   baseline; equivalently the paper's mu ≡ 0 case).
+//! * [`SphereSampler`] — uniform on the unit sphere (normalized Gaussian).
+//! * [`CoordinateSampler`] — uniform one-hot basis vectors (Duchi et al.).
+//! * [`LdsdSampler`] — the paper: v ~ N(mu, eps^2 I) with mu updated by a
+//!   REINFORCE / leave-one-out estimator from the probe losses.
+//!
+//! The sampler is deliberately decoupled from the base optimizer: the
+//! paper's §4 "plug-and-play" claim is this trait boundary.
+
+mod alignment;
+mod gaussian;
+mod ldsd;
+
+pub use alignment::{expected_alignment_mc, AlignmentTracker};
+pub use gaussian::{CoordinateSampler, GaussianSampler, SphereSampler};
+pub use ldsd::{LdsdConfig, LdsdSampler};
+
+/// Produces candidate directions and learns from probe feedback.
+pub trait DirectionSampler {
+    /// Fill `dirs` (row-major K x d) with K sampled directions.
+    fn sample(&mut self, dirs: &mut [f32], k: usize);
+
+    /// Observe the probe losses `f(x + tau * dirs[i])` for the directions
+    /// produced by the last `sample` call.  Policy-free samplers ignore it.
+    fn observe(&mut self, dirs: &[f32], losses: &[f64], k: usize);
+
+    /// Trainable dimensionality this sampler emits.
+    fn dim(&self) -> usize;
+
+    /// Bytes of persistent sampler state (memory-table accounting).
+    fn state_bytes(&self) -> usize;
+
+    fn name(&self) -> &str;
+
+    /// The learned policy mean, if any (diagnostics; LDSD only).
+    fn policy_mean(&self) -> Option<&[f32]> {
+        None
+    }
+}

@@ -1,0 +1,87 @@
+//! Host-side f32 vector/matrix math (replaces ndarray for the coordinator).
+//!
+//! The ZO hot loop is O(d) vector algebra: axpy, dot, norms, scaling.
+//! Everything here operates on plain `&[f32]` slices so optimizer state and
+//! parameter stores can share buffers without copies; the `Vector`
+//! new-type adds checked construction and convenience ops on top.
+
+mod ops;
+mod vector;
+
+pub use ops::*;
+pub use vector::Vector;
+
+/// A dense row-major matrix view used by the toy oracles (linreg / logreg).
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix size mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// y = A x  (A: rows x cols, x: cols)
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            y[r] = dot(self.row(r), x);
+        }
+    }
+
+    /// y = A^T x  (x: rows, y: cols)
+    pub fn matvec_t(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr != 0.0 {
+                axpy(xr, self.row(r), y);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_manual() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let x = [1.0f32, 0.5, -1.0];
+        let mut y = [0.0f32; 2];
+        a.matvec(&x, &mut y);
+        assert_eq!(y, [-1.0, 0.5]);
+    }
+
+    #[test]
+    fn matvec_t_matches_manual() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let x = [2.0f32, -1.0];
+        let mut y = [0.0f32; 3];
+        a.matvec_t(&x, &mut y);
+        assert_eq!(y, [-2.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_checked() {
+        let _ = Matrix::from_vec(2, 2, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,196 @@
+//! Slice-level kernels for the ZO hot loop.
+//!
+//! These are the L3 counterparts of the L1 Pallas axpy/reduce kernels: the
+//! coordinator uses them for sampler/optimizer state updates (O(d) or
+//! O(K d) per step).  Written as simple indexed loops over chunks so LLVM
+//! auto-vectorizes them; `perf_hotpath` benches track their throughput.
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// out = x + a * d  (out may not alias x or d)
+#[inline]
+pub fn axpy_into(out: &mut [f32], x: &[f32], a: f32, d: &[f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(d.len(), out.len());
+    for i in 0..out.len() {
+        out[i] = x[i] + a * d[i];
+    }
+}
+
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    // accumulate in f64 to keep alignment statistics stable for large d
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y.iter()) {
+        acc += (*a as f64) * (*b as f64);
+    }
+    acc as f32
+}
+
+#[inline]
+pub fn nrm2(x: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for a in x {
+        acc += (*a as f64) * (*a as f64);
+    }
+    acc.sqrt() as f32
+}
+
+/// x *= a
+#[inline]
+pub fn scal(a: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// x /= ||x||; returns the norm.  Leaves x untouched (and returns 0) if the
+/// norm underflows.
+pub fn normalize(x: &mut [f32]) -> f32 {
+    let n = nrm2(x);
+    if n > f32::MIN_POSITIVE {
+        scal(1.0 / n, x);
+        n
+    } else {
+        0.0
+    }
+}
+
+/// Cosine of the angle between x and y (0 if either is ~zero).
+pub fn cosine(x: &[f32], y: &[f32]) -> f32 {
+    let nx = nrm2(x);
+    let ny = nrm2(y);
+    if nx <= f32::MIN_POSITIVE || ny <= f32::MIN_POSITIVE {
+        return 0.0;
+    }
+    (dot(x, y) / (nx as f64 * ny as f64) as f32).clamp(-1.0, 1.0)
+}
+
+/// out = sum_i w[i] * rows[i]  where rows is a K x d row-major matrix.
+/// This is the REINFORCE mu-gradient reduce (Algorithm 2, line 6).
+pub fn weighted_row_sum(rows: &[f32], d: usize, w: &[f32], out: &mut [f32]) {
+    assert_eq!(rows.len(), w.len() * d, "rows must be K x d");
+    assert_eq!(out.len(), d);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for (k, wk) in w.iter().enumerate() {
+        if *wk != 0.0 {
+            axpy(*wk, &rows[k * d..(k + 1) * d], out);
+        }
+    }
+}
+
+/// Elementwise sign (0.0 stays 0.0) — used by JAGUAR SignSGD.
+#[inline]
+pub fn sign_into(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..out.len() {
+        out[i] = if x[i] > 0.0 {
+            1.0
+        } else if x[i] < 0.0 {
+            -1.0
+        } else {
+            0.0
+        };
+    }
+}
+
+/// Numerically-stable softmax over a small slice (eval-side utility).
+pub fn softmax_inplace(x: &mut [f32]) {
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        scal(1.0 / sum, x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpy_into_basic() {
+        let x = [1.0f32, 2.0];
+        let d = [10.0f32, -10.0];
+        let mut out = [0.0f32; 2];
+        axpy_into(&mut out, &x, 0.5, &d);
+        assert_eq!(out, [6.0, -3.0]);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let x = [3.0f32, 4.0];
+        assert_eq!(dot(&x, &x), 25.0);
+        assert_eq!(nrm2(&x), 5.0);
+    }
+
+    #[test]
+    fn normalize_unit() {
+        let mut x = [3.0f32, 4.0];
+        let n = normalize(&mut x);
+        assert_eq!(n, 5.0);
+        assert!((nrm2(&x) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_zero_vector_safe() {
+        let mut x = [0.0f32; 4];
+        assert_eq!(normalize(&mut x), 0.0);
+        assert_eq!(x, [0.0; 4]);
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let x = [1.0f32, 0.0];
+        let y = [1.0f32, 1.0];
+        let c = cosine(&x, &y);
+        assert!((c - std::f32::consts::FRAC_1_SQRT_2).abs() < 1e-6);
+        assert_eq!(cosine(&x, &x), 1.0);
+        assert_eq!(cosine(&x, &[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn weighted_row_sum_matches_manual() {
+        let rows = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0]; // 3 rows x d=2
+        let w = [1.0f32, 2.0, -1.0];
+        let mut out = [0.0f32; 2];
+        weighted_row_sum(&rows, 2, &w, &mut out);
+        assert_eq!(out, [0.0, 1.0]);
+    }
+
+    #[test]
+    fn sign_matches() {
+        let x = [-2.0f32, 0.0, 5.0];
+        let mut out = [9.0f32; 3];
+        sign_into(&mut out, &x);
+        assert_eq!(out, [-1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = [1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Owned f32 vector with checked math — the parameter/state container.
+
+use super::ops;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Vector(pub Vec<f32>);
+
+impl Vector {
+    pub fn zeros(n: usize) -> Self {
+        Self(vec![0.0; n])
+    }
+
+    pub fn from_vec(v: Vec<f32>) -> Self {
+        Self(v)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.0
+    }
+
+    pub fn dot(&self, other: &Vector) -> f32 {
+        ops::dot(&self.0, &other.0)
+    }
+
+    pub fn norm(&self) -> f32 {
+        ops::nrm2(&self.0)
+    }
+
+    pub fn scale(&mut self, a: f32) {
+        ops::scal(a, &mut self.0);
+    }
+
+    pub fn add_scaled(&mut self, a: f32, other: &Vector) {
+        ops::axpy(a, &other.0, &mut self.0);
+    }
+
+    pub fn normalize(&mut self) -> f32 {
+        ops::normalize(&mut self.0)
+    }
+
+    pub fn cosine(&self, other: &Vector) -> f32 {
+        ops::cosine(&self.0, &other.0)
+    }
+}
+
+impl std::ops::Index<usize> for Vector {
+    type Output = f32;
+    fn index(&self, i: usize) -> &f32 {
+        &self.0[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for Vector {
+    fn index_mut(&mut self, i: usize) -> &mut f32 {
+        &mut self.0[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_ops_roundtrip() {
+        let mut v = Vector::from_vec(vec![3.0, 4.0]);
+        assert_eq!(v.norm(), 5.0);
+        v.normalize();
+        assert!((v.norm() - 1.0).abs() < 1e-6);
+        let w = Vector::from_vec(vec![1.0, 0.0]);
+        assert!((v.cosine(&w) - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_scaled() {
+        let mut v = Vector::zeros(3);
+        let w = Vector::from_vec(vec![1.0, 2.0, 3.0]);
+        v.add_scaled(2.0, &w);
+        assert_eq!(v.as_slice(), &[2.0, 4.0, 6.0]);
+    }
+}

@@ -1,0 +1,428 @@
+//! Oracle-budgeted training loop (the paper's §5.1 protocol).
+//!
+//! Comparisons are *budget-fair*: every method gets the same number of
+//! forward evaluations, so a K=1 central-difference baseline runs 3x the
+//! iterations of a K=5 method.  The loop charges each step by the
+//! estimator's actual oracle calls and stops when the budget is exhausted.
+
+mod schedule;
+
+pub use schedule::{ConstantLr, CosineLr, LrSchedule};
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::eval::Evaluator;
+use crate::optim::{
+    BaseOptimizer, CentralK1Estimator, ForwardAvgEstimator, GradEstimator,
+    LdsdEstimator,
+};
+use crate::oracle::Oracle;
+use crate::sampler::{
+    CoordinateSampler, GaussianSampler, LdsdConfig, LdsdSampler, SphereSampler,
+};
+
+/// Which direction distribution feeds the estimator.
+#[derive(Clone, Debug)]
+pub enum SamplerKind {
+    Gaussian,
+    Sphere,
+    Coordinate,
+    Ldsd(LdsdConfig),
+}
+
+/// Which probe layout turns forwards into a gradient surrogate.
+#[derive(Clone, Debug)]
+pub enum EstimatorKind {
+    /// central difference, one direction, 2 calls/step
+    CentralK1(SamplerKind),
+    /// forward-difference MC average over K directions, K+1 calls/step
+    ForwardAvg { k: usize, sampler: SamplerKind },
+    /// Algorithm 2: best-of-K selection + central difference + policy
+    /// feedback, K+1 calls/step
+    BestOfK { k: usize, sampler: SamplerKind },
+}
+
+impl EstimatorKind {
+    pub fn calls_per_step(&self) -> u64 {
+        match self {
+            EstimatorKind::CentralK1(_) => 2,
+            EstimatorKind::ForwardAvg { k, .. } => *k as u64 + 1,
+            EstimatorKind::BestOfK { k, .. } => *k as u64 + 1,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            EstimatorKind::CentralK1(s) => format!("central_k1/{}", sampler_label(s)),
+            EstimatorKind::ForwardAvg { k, sampler } => {
+                format!("forward_avg_k{k}/{}", sampler_label(sampler))
+            }
+            EstimatorKind::BestOfK { k, sampler } => {
+                format!("bestofk{k}/{}", sampler_label(sampler))
+            }
+        }
+    }
+}
+
+fn sampler_label(s: &SamplerKind) -> &'static str {
+    match s {
+        SamplerKind::Gaussian => "gaussian",
+        SamplerKind::Sphere => "sphere",
+        SamplerKind::Coordinate => "coordinate",
+        SamplerKind::Ldsd(_) => "ldsd",
+    }
+}
+
+fn build_sampler(kind: &SamplerKind, d: usize, seed: u64) -> Box<dyn crate::sampler::DirectionSampler + Send> {
+    match kind {
+        SamplerKind::Gaussian => Box::new(GaussianSampler::new(d, seed)),
+        SamplerKind::Sphere => Box::new(SphereSampler::new(d, seed)),
+        SamplerKind::Coordinate => Box::new(CoordinateSampler::new(d, seed)),
+        SamplerKind::Ldsd(cfg) => Box::new(LdsdSampler::new(d, seed, cfg.clone())),
+    }
+}
+
+// DirectionSampler must be object-safe for the boxed path; estimators are
+// generic, so we wrap the boxed sampler in a forwarding impl.
+impl crate::sampler::DirectionSampler for Box<dyn crate::sampler::DirectionSampler + Send> {
+    fn sample(&mut self, dirs: &mut [f32], k: usize) {
+        (**self).sample(dirs, k)
+    }
+    fn observe(&mut self, dirs: &[f32], losses: &[f64], k: usize) {
+        (**self).observe(dirs, losses, k)
+    }
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+    fn state_bytes(&self) -> usize {
+        (**self).state_bytes()
+    }
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn policy_mean(&self) -> Option<&[f32]> {
+        (**self).policy_mean()
+    }
+}
+
+pub fn build_estimator(
+    kind: &EstimatorKind,
+    d: usize,
+    tau: f32,
+    seed: u64,
+) -> Box<dyn GradEstimator + Send> {
+    match kind {
+        EstimatorKind::CentralK1(s) => {
+            Box::new(CentralK1Estimator::new(build_sampler(s, d, seed), tau))
+        }
+        EstimatorKind::ForwardAvg { k, sampler } => Box::new(
+            ForwardAvgEstimator::new(build_sampler(sampler, d, seed), tau, *k),
+        ),
+        EstimatorKind::BestOfK { k, sampler } => {
+            Box::new(LdsdEstimator::new(build_sampler(sampler, d, seed), tau, *k))
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub estimator: EstimatorKind,
+    pub optimizer: String,
+    pub lr: f32,
+    pub tau: f32,
+    /// Total forward-evaluation budget (the §5.1 fairness unit).
+    pub budget: u64,
+    /// Evaluate every this many oracle calls (0 = only at the end).
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub cosine_schedule: bool,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// Table 1 row "Gaussian, 2 forwards, more iterations".
+    pub fn gaussian_2fwd(optimizer: &str, lr: f32, budget: u64) -> Self {
+        Self {
+            estimator: EstimatorKind::CentralK1(SamplerKind::Gaussian),
+            optimizer: optimizer.into(),
+            lr,
+            tau: 1e-3,
+            budget,
+            eval_every: 0,
+            eval_batches: 8,
+            cosine_schedule: true,
+            seed: 0,
+        }
+    }
+
+    /// Table 1 row "Gaussian, 6 forwards, same iterations" (K = 5).
+    pub fn gaussian_6fwd(optimizer: &str, lr: f32, budget: u64) -> Self {
+        Self {
+            estimator: EstimatorKind::ForwardAvg { k: 5, sampler: SamplerKind::Gaussian },
+            optimizer: optimizer.into(),
+            lr,
+            tau: 1e-3,
+            budget,
+            eval_every: 0,
+            eval_batches: 8,
+            cosine_schedule: true,
+            seed: 0,
+        }
+    }
+
+    /// Table 1 row "Algorithm 2" (K = 5, eps = 1, gamma_mu = 1e-3 per §A.2).
+    /// `renormalize` keeps ||mu|| = 1 — the paper's §3.5 "natural design
+    /// choice"; without it ||mu|| grows without bound and inflates the
+    /// effective x-step (we ablate this in fig3/examples/ablations).
+    pub fn algorithm2(optimizer: &str, lr: f32, budget: u64) -> Self {
+        Self {
+            estimator: EstimatorKind::BestOfK {
+                k: 5,
+                sampler: SamplerKind::Ldsd(LdsdConfig {
+                    eps: 1.0,
+                    gamma_mu: 1e-3,
+                    renormalize: true,
+                    ..Default::default()
+                }),
+            },
+            optimizer: optimizer.into(),
+            lr,
+            tau: 1e-3,
+            budget,
+            eval_every: 0,
+            eval_batches: 8,
+            cosine_schedule: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainOutcome {
+    /// (oracle calls, training-loss proxy) per step
+    pub loss_curve: Vec<(u64, f64)>,
+    /// (oracle calls, test accuracy) at each eval point
+    pub acc_curve: Vec<(u64, f64)>,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub steps: u64,
+    pub oracle_calls: u64,
+    pub wall_seconds: f64,
+    pub label: String,
+}
+
+/// The training loop: estimator x optimizer over a corpus stream, charged
+/// by oracle calls.
+pub struct Trainer<O: Oracle> {
+    pub cfg: TrainConfig,
+    oracle: O,
+    corpus: Corpus,
+    estimator: Box<dyn GradEstimator + Send>,
+    optimizer: Box<dyn BaseOptimizer + Send>,
+    g: Vec<f32>,
+}
+
+impl<O: Oracle> Trainer<O> {
+    pub fn new(cfg: TrainConfig, oracle: O, corpus: Corpus) -> Result<Self> {
+        let d = oracle.dim();
+        let estimator = build_estimator(&cfg.estimator, d, cfg.tau, cfg.seed);
+        let optimizer = crate::optim::optimizers_by_name(&cfg.optimizer, d)?;
+        Ok(Self { cfg, oracle, corpus, estimator, optimizer, g: vec![0.0; d] })
+    }
+
+    pub fn oracle(&self) -> &O {
+        &self.oracle
+    }
+
+    pub fn oracle_mut(&mut self) -> &mut O {
+        &mut self.oracle
+    }
+
+    pub fn estimator(&self) -> &dyn GradEstimator {
+        self.estimator.as_ref()
+    }
+
+    /// Run until the oracle budget is exhausted.  `eval` computes test
+    /// accuracy from the trainable vector (None for closed-form tests).
+    pub fn run(&mut self, eval: Option<&Evaluator>) -> Result<TrainOutcome> {
+        let t0 = std::time::Instant::now();
+        let calls_per_step = self.estimator.calls_per_step();
+        let planned_steps = (self.cfg.budget / calls_per_step.max(1)).max(1);
+        let schedule: Box<dyn LrSchedule> = if self.cfg.cosine_schedule {
+            Box::new(CosineLr::new(self.cfg.lr, planned_steps))
+        } else {
+            Box::new(ConstantLr(self.cfg.lr))
+        };
+
+        let mut out = TrainOutcome {
+            label: format!(
+                "{}+{}",
+                self.cfg.estimator.label(),
+                self.cfg.optimizer
+            ),
+            ..Default::default()
+        };
+        let start_calls = self.oracle.oracle_calls();
+        let mut step = 0u64;
+        let mut next_eval = self.cfg.eval_every;
+        let batch_size = self.corpus.spec.seq; // placeholder; actual batch from artifact
+        let _ = batch_size;
+
+        loop {
+            let used = self.oracle.oracle_calls() - start_calls;
+            if used + calls_per_step > self.cfg.budget {
+                break;
+            }
+            let batch = self.corpus.train_batch(step, self.train_batch_size());
+            self.oracle.set_batch(&batch)?;
+            let est = self.estimator.estimate(&mut self.oracle, &mut self.g)?;
+            let lr = schedule.lr(step);
+            // apply the base-optimizer update through the oracle so any
+            // device-resident copy is invalidated exactly once per step
+            let g = &self.g;
+            let opt = &mut self.optimizer;
+            self.oracle.update_params(&mut |x| opt.step(x, g, lr))?;
+            out.loss_curve
+                .push((self.oracle.oracle_calls() - start_calls, loss_proxy(&est)));
+            step += 1;
+
+            if self.cfg.eval_every > 0 {
+                let used_now = self.oracle.oracle_calls() - start_calls;
+                if used_now >= next_eval {
+                    next_eval += self.cfg.eval_every;
+                    if let Some(ev) = eval {
+                        let acc = ev.accuracy(
+                            self.oracle.params(),
+                            &self.corpus,
+                            self.cfg.eval_batches,
+                        )?;
+                        out.acc_curve.push((used_now, acc));
+                        out.best_accuracy = out.best_accuracy.max(acc);
+                    }
+                }
+            }
+        }
+
+        if let Some(ev) = eval {
+            let acc = ev.accuracy(
+                self.oracle.params(),
+                &self.corpus,
+                self.cfg.eval_batches,
+            )?;
+            out.acc_curve
+                .push((self.oracle.oracle_calls() - start_calls, acc));
+            out.final_accuracy = acc;
+            out.best_accuracy = out.best_accuracy.max(acc);
+        }
+        out.steps = step;
+        out.oracle_calls = self.oracle.oracle_calls() - start_calls;
+        out.wall_seconds = t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn train_batch_size(&self) -> usize {
+        8 // matches BuildPlan.batch; PJRT oracles validate on set_batch
+    }
+}
+
+/// A scalar per-step loss proxy from the probe losses.
+pub fn loss_proxy(est: &crate::optim::Estimate) -> f64 {
+    if est.losses.is_empty() {
+        return f64::NAN;
+    }
+    if let Some(sel) = est.selected {
+        if sel < est.losses.len() {
+            return est.losses[sel];
+        }
+    }
+    est.losses[0]
+}
+
+/// Small helper so train doesn't depend on optim internals.
+pub use crate::optim::Estimate;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusSpec;
+    use crate::oracle::QuadraticOracle;
+
+    fn mini_corpus() -> Corpus {
+        Corpus::new(CorpusSpec::default_mini())
+    }
+
+    fn quad(d: usize) -> QuadraticOracle {
+        QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d])
+    }
+
+    #[test]
+    fn budget_respected_exactly() {
+        let cfg = TrainConfig {
+            eval_every: 0,
+            cosine_schedule: false,
+            ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 61)
+        };
+        let mut t = Trainer::new(cfg, quad(16), mini_corpus()).unwrap();
+        let out = t.run(None).unwrap();
+        // 61 budget / 6 calls-per-step = 10 steps, 60 calls
+        assert_eq!(out.steps, 10);
+        assert_eq!(out.oracle_calls, 60);
+    }
+
+    #[test]
+    fn fixed_budget_means_more_steps_for_cheaper_estimator() {
+        let budget = 120;
+        let mk = |est: EstimatorKind| TrainConfig {
+            estimator: est,
+            optimizer: "zo_sgd_plain".into(),
+            lr: 0.02,
+            tau: 1e-3,
+            budget,
+            eval_every: 0,
+            eval_batches: 1,
+            cosine_schedule: false,
+            seed: 1,
+        };
+        let mut t2 = Trainer::new(
+            mk(EstimatorKind::CentralK1(SamplerKind::Gaussian)),
+            quad(8),
+            mini_corpus(),
+        )
+        .unwrap();
+        let mut t6 = Trainer::new(
+            mk(EstimatorKind::ForwardAvg { k: 5, sampler: SamplerKind::Gaussian }),
+            quad(8),
+            mini_corpus(),
+        )
+        .unwrap();
+        let o2 = t2.run(None).unwrap();
+        let o6 = t6.run(None).unwrap();
+        assert_eq!(o2.steps, 60);
+        assert_eq!(o6.steps, 20);
+    }
+
+    #[test]
+    fn quadratic_loss_decreases_under_algorithm2() {
+        let cfg = TrainConfig {
+            cosine_schedule: false,
+            ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 3000)
+        };
+        let mut t = Trainer::new(cfg, quad(24), mini_corpus()).unwrap();
+        let out = t.run(None).unwrap();
+        let first = out.loss_curve.first().unwrap().1;
+        let last = out.loss_curve.last().unwrap().1;
+        assert!(last < first * 0.5, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn outcome_label_describes_setup() {
+        let cfg = TrainConfig::algorithm2("zo_adamm", 1e-3, 12);
+        let mut t = Trainer::new(cfg, quad(4), mini_corpus()).unwrap();
+        let out = t.run(None).unwrap();
+        assert!(out.label.contains("bestofk5"));
+        assert!(out.label.contains("ldsd"));
+        assert!(out.label.contains("zo_adamm"));
+    }
+}

@@ -1,0 +1,65 @@
+//! Learning-rate schedules (§A.2: cosine schedule for gamma_x).
+
+pub trait LrSchedule {
+    fn lr(&self, step: u64) -> f32;
+}
+
+pub struct ConstantLr(pub f32);
+
+impl LrSchedule for ConstantLr {
+    fn lr(&self, _step: u64) -> f32 {
+        self.0
+    }
+}
+
+/// Cosine decay from `base` to ~0 over `total` steps (no restarts).
+pub struct CosineLr {
+    base: f32,
+    total: u64,
+}
+
+impl CosineLr {
+    pub fn new(base: f32, total: u64) -> Self {
+        Self { base, total: total.max(1) }
+    }
+}
+
+impl LrSchedule for CosineLr {
+    fn lr(&self, step: u64) -> f32 {
+        let t = (step.min(self.total) as f64) / (self.total as f64);
+        (self.base as f64 * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_starts_at_base_ends_near_zero() {
+        let s = CosineLr::new(1.0, 100);
+        assert!((s.lr(0) - 1.0).abs() < 1e-6);
+        assert!((s.lr(50) - 0.5).abs() < 1e-6);
+        assert!(s.lr(100) < 1e-6);
+        // clamped past the horizon
+        assert!(s.lr(1000) < 1e-6);
+    }
+
+    #[test]
+    fn cosine_monotone_decreasing() {
+        let s = CosineLr::new(0.1, 37);
+        let mut prev = f32::INFINITY;
+        for t in 0..=37 {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = ConstantLr(0.5);
+        assert_eq!(s.lr(0), 0.5);
+        assert_eq!(s.lr(999), 0.5);
+    }
+}

@@ -1,0 +1,189 @@
+//! Property-based tests over coordinator invariants, using the in-repo
+//! proptest substrate (DESIGN.md §3: the vendored set has no proptest).
+
+use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::optim::{BaseOptimizer, ZoAdaMM, ZoSgd};
+use zo_ldsd::proptest::{check, Gen, U64Range, VecF32, VecPairF32};
+use zo_ldsd::rng::Rng;
+use zo_ldsd::sampler::{DirectionSampler, GaussianSampler, LdsdConfig, LdsdSampler};
+use zo_ldsd::tensor::{axpy_into, cosine, dot, normalize, nrm2};
+
+const VEC: VecF32 = VecF32 { min_len: 1, max_len: 256, scale: 10.0 };
+
+#[test]
+fn prop_normalize_idempotent_and_unit() {
+    check("normalize_unit", &VEC, 300, |v| {
+        let mut x = v.clone();
+        let n = normalize(&mut x);
+        if n == 0.0 {
+            return x.iter().all(|&a| a == 0.0);
+        }
+        let n1 = nrm2(&x);
+        let mut y = x.clone();
+        normalize(&mut y);
+        (n1 - 1.0).abs() < 1e-4 && x.iter().zip(y.iter()).all(|(a, b)| (a - b).abs() < 1e-5)
+    });
+}
+
+#[test]
+fn prop_cosine_bounded_and_symmetric() {
+    check(
+        "cosine_bounds",
+        &VecPairF32(VEC),
+        300,
+        |(a, b)| {
+            let c1 = cosine(a, b);
+            let c2 = cosine(b, a);
+            (-1.0..=1.0).contains(&c1) && (c1 - c2).abs() < 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_cosine_scale_invariant() {
+    check("cosine_scale_invariant", &VecPairF32(VEC), 200, |(a, b)| {
+        let c1 = cosine(a, b);
+        let a2: Vec<f32> = a.iter().map(|x| x * 3.5).collect();
+        let c2 = cosine(&a2, b);
+        (c1 - c2).abs() < 1e-4
+    });
+}
+
+#[test]
+fn prop_axpy_into_linear() {
+    // f(x + s d) along s: axpy_into(s1+s2) == axpy_into applied twice
+    check("axpy_linear", &VecPairF32(VEC), 200, |(x, d)| {
+        let n = x.len();
+        let mut once = vec![0.0f32; n];
+        axpy_into(&mut once, x, 0.7, d);
+        let mut twice = vec![0.0f32; n];
+        axpy_into(&mut twice, x, 0.3, d);
+        let t2 = twice.clone();
+        axpy_into(&mut twice, &t2, 0.4, d);
+        once.iter().zip(twice.iter()).all(|(a, b)| (a - b).abs() < 1e-3)
+    });
+}
+
+#[test]
+fn prop_dot_cauchy_schwarz() {
+    check("cauchy_schwarz", &VecPairF32(VEC), 300, |(a, b)| {
+        dot(a, b).abs() <= nrm2(a) * nrm2(b) * (1.0 + 1e-4) + 1e-6
+    });
+}
+
+/// LDSD with gamma_mu = 0 must sample exactly like a frozen-mean Gaussian:
+/// the policy update is the ONLY difference the learning rate controls.
+#[test]
+fn prop_ldsd_gamma_zero_policy_frozen() {
+    check("ldsd_frozen_policy", &U64Range(0, 10_000), 50, |&seed| {
+        let d = 64;
+        let mut s = LdsdSampler::new(
+            d,
+            seed,
+            LdsdConfig { gamma_mu: 0.0, ..Default::default() },
+        );
+        let mu0 = s.policy_mean().unwrap().to_vec();
+        let mut dirs = vec![0.0f32; 5 * d];
+        for round in 0..5 {
+            s.sample(&mut dirs, 5);
+            let losses: Vec<f64> = (0..5).map(|i| (i + round) as f64).collect();
+            s.observe(&dirs, &losses, 5);
+        }
+        s.policy_mean().unwrap() == &mu0[..]
+    });
+}
+
+/// Sampler state-size claims (the paper's O(d) memory argument) hold for
+/// every d.
+#[test]
+fn prop_sampler_state_bytes() {
+    check("state_bytes", &U64Range(1, 4096), 60, |&d| {
+        let d = d as usize;
+        let g = GaussianSampler::new(d, 1);
+        let l = LdsdSampler::new(d, 1, LdsdConfig::default());
+        g.state_bytes() == 0 && l.state_bytes() == 4 * d
+    });
+}
+
+/// Optimizer updates are equivariant to permutations of coordinates
+/// (no hidden coordinate coupling).
+#[test]
+fn prop_optimizer_permutation_equivariant() {
+    check("optimizer_equivariance", &U64Range(0, 1000), 40, |&seed| {
+        let d = 16;
+        let mut rng = Rng::new(seed);
+        let x0: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let g: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        // permutation = reversal
+        let xr: Vec<f32> = x0.iter().rev().cloned().collect();
+        let gr: Vec<f32> = g.iter().rev().cloned().collect();
+        for mk in [0usize, 1] {
+            let (mut o1, mut o2): (Box<dyn BaseOptimizer>, Box<dyn BaseOptimizer>) =
+                match mk {
+                    0 => (Box::new(ZoSgd::new(d, 0.9)), Box::new(ZoSgd::new(d, 0.9))),
+                    _ => (
+                        Box::new(ZoAdaMM::new(d, 0.9, 0.999)),
+                        Box::new(ZoAdaMM::new(d, 0.9, 0.999)),
+                    ),
+                };
+            let mut a = x0.clone();
+            let mut b = xr.clone();
+            for _ in 0..3 {
+                o1.step(&mut a, &g, 0.01);
+                o2.step(&mut b, &gr, 0.01);
+            }
+            let ok = a
+                .iter()
+                .zip(b.iter().rev())
+                .all(|(p, q)| (p - q).abs() < 1e-5);
+            if !ok {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Corpus invariants hold for arbitrary indices, including the test range.
+#[test]
+fn prop_corpus_examples_well_formed() {
+    let corpus = Corpus::new(CorpusSpec::default_mini());
+    check("corpus_wf", &U64Range(0, 1 << 22), 300, |&idx| {
+        let ex = corpus.example(idx);
+        let len = ex.mask.iter().filter(|&&m| m == 1.0).count();
+        ex.ids[0] == 1
+            && (corpus.spec.min_len as usize..corpus.spec.seq).contains(&len)
+            && ex.ids[len..].iter().all(|&t| t == 0)
+            && ex.ids[..len].iter().all(|&t| t >= 1 && (t as u64) < corpus.spec.vocab)
+            && (ex.label == 0 || ex.label == 1)
+    });
+}
+
+/// Determinism: the corpus is a pure function of (seed, index).
+#[test]
+fn prop_corpus_deterministic() {
+    let a = Corpus::new(CorpusSpec::default_mini());
+    let b = Corpus::new(CorpusSpec::default_mini());
+    check("corpus_det", &U64Range(0, 1 << 30), 100, |&idx| {
+        let x = a.example(idx);
+        let y = b.example(idx);
+        x.ids == y.ids && x.mask == y.mask && x.label == y.label
+    });
+}
+
+/// A generator sanity property for the substrate itself: shrink produces
+/// strictly smaller cases.
+#[test]
+fn prop_shrink_shrinks() {
+    let gen = VecF32 { min_len: 2, max_len: 128, scale: 1.0 };
+    let mut rng = Rng::new(7);
+    for _ in 0..50 {
+        let v = gen.generate(&mut rng);
+        for s in gen.shrink(&v) {
+            assert!(
+                s.len() < v.len() || nrm2(&s) <= nrm2(&v) + 1e-6,
+                "shrink must not grow"
+            );
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Integration: AOT artifacts -> PJRT runtime -> golden parity.
+//!
+//! These tests pin the two language boundaries:
+//! 1. the rust corpus port generates byte-identical batches to python
+//!    (golden.json carries python-generated batches), and
+//! 2. the PJRT-executed artifacts reproduce the python-side loss values
+//!    and the pretrain-time eval accuracy.
+//!
+//! They require `make artifacts` to have run; they are skipped (with a
+//! loud message) when artifacts/ is missing so `cargo test` stays green
+//! on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use zo_ldsd::config::{Manifest, TrainMode};
+use zo_ldsd::data::Corpus;
+use zo_ldsd::eval::Evaluator;
+use zo_ldsd::jsonio::{parse, Json};
+use zo_ldsd::oracle::{read_params_bin, Oracle, PjrtOracle};
+use zo_ldsd::rng::SplitMix64;
+use zo_ldsd::runtime::{ArgValue, Runtime};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let candidates = ["artifacts", "../artifacts"];
+    for c in candidates {
+        let p = Path::new(c);
+        if p.join("manifest.json").exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+fn load_golden(dir: &Path) -> Json {
+    let text = std::fs::read_to_string(dir.join("golden.json")).unwrap();
+    parse(&text).unwrap()
+}
+
+#[test]
+fn corpus_matches_python_golden() {
+    let Some(dir) = artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let golden = load_golden(&dir);
+    for entry in golden.get("corpus").unwrap().as_arr().unwrap() {
+        let model = entry.get("model").unwrap().as_str().unwrap();
+        let spec = manifest.corpus(model).unwrap().clone();
+        let corpus = Corpus::new(spec);
+        let b = manifest.model(model).unwrap().shapes.batch;
+
+        let train = corpus.train_batch(0, b);
+        let test = corpus.test_batch(0, b);
+        let gids = entry.get("train_ids").unwrap().to_i32_vec_nested().unwrap();
+        assert_eq!(train.ids, gids, "{model}: train ids diverge from python");
+        let gmask = entry.get("train_mask").unwrap().to_f32_vec_nested().unwrap();
+        assert_eq!(train.mask, gmask, "{model}: train mask diverges");
+        let glab = entry.get("train_labels").unwrap().to_i32_vec_nested().unwrap();
+        assert_eq!(train.labels, glab, "{model}: train labels diverge");
+        let tids = entry.get("test_ids").unwrap().to_i32_vec_nested().unwrap();
+        assert_eq!(test.ids, tids, "{model}: test ids diverge");
+        let tlab = entry.get("test_labels").unwrap().to_i32_vec_nested().unwrap();
+        assert_eq!(test.labels, tlab, "{model}: test labels diverge");
+    }
+}
+
+#[test]
+fn pjrt_losses_match_python_golden() {
+    let Some(dir) = artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let golden = load_golden(&dir);
+    let losses = golden.get("losses").unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+
+    for (model, g) in losses.as_obj().unwrap() {
+        let entry = manifest.model(model).unwrap();
+        let corpus = Corpus::new(manifest.corpus(model).unwrap().clone());
+        let batch = corpus.train_batch(0, entry.shapes.batch);
+
+        // FT loss at the pretrained checkpoint
+        let mut ft = PjrtOracle::new(&rt, entry, TrainMode::Ft).unwrap();
+        ft.set_batch(&batch).unwrap();
+        let loss_ft = ft.loss_base().unwrap();
+        let want_ft = g.get("ft_loss_batch0").unwrap().as_f64().unwrap();
+        assert!(
+            (loss_ft - want_ft).abs() < 1e-4 * (1.0 + want_ft.abs()),
+            "{model} ft loss: rust {loss_ft} vs python {want_ft}"
+        );
+
+        // LoRA loss at init (B = 0 adapters + copied head): must equal FT
+        let mut lora = PjrtOracle::new(&rt, entry, TrainMode::Lora).unwrap();
+        lora.set_batch(&batch).unwrap();
+        let loss_lora = lora.loss_base().unwrap();
+        let want_lora = g.get("lora_loss_batch0").unwrap().as_f64().unwrap();
+        assert!(
+            (loss_lora - want_lora).abs() < 1e-4 * (1.0 + want_lora.abs()),
+            "{model} lora loss: rust {loss_lora} vs python {want_lora}"
+        );
+
+        // perturbed loss along the deterministic sin direction
+        let d = entry.d_ft;
+        let dir_vec: Vec<f32> =
+            (0..d).map(|i| (0.5 * (i as f64).sin()) as f32).collect();
+        let loss_dir = ft.loss_dir(&dir_vec, 1e-3).unwrap();
+        let want_dir = g
+            .get("ft_loss_dir_batch0_sin_tau1e-3")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(
+            (loss_dir - want_dir).abs() < 1e-4 * (1.0 + want_dir.abs()),
+            "{model} loss_dir: rust {loss_dir} vs python {want_dir}"
+        );
+        // the perturbation must actually change the loss
+        assert!((loss_dir - loss_ft).abs() > 1e-7);
+    }
+}
+
+#[test]
+fn loss_k_matches_k_loss_dir_calls() {
+    let Some(dir) = artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+    let entry = manifest.model("roberta_mini").unwrap();
+    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone());
+    let batch = corpus.train_batch(3, entry.shapes.batch);
+
+    let mut oracle = PjrtOracle::new(&rt, entry, TrainMode::Lora).unwrap();
+    oracle.set_batch(&batch).unwrap();
+    let d = oracle.dim();
+    let k = entry.shapes.k;
+    let mut sm = SplitMix64::new(42);
+    let dirs: Vec<f32> = (0..k * d)
+        .map(|_| (sm.next_f64() as f32 - 0.5) * 2.0)
+        .collect();
+    let fused = oracle.loss_k(&dirs, k, 1e-3).unwrap();
+    let looped: Vec<f64> = (0..k)
+        .map(|i| oracle.loss_dir(&dirs[i * d..(i + 1) * d], 1e-3).unwrap())
+        .collect();
+    for i in 0..k {
+        assert!(
+            (fused[i] - looped[i]).abs() < 1e-5 * (1.0 + looped[i].abs()),
+            "probe {i}: fused {} vs looped {}",
+            fused[i],
+            looped[i]
+        );
+    }
+}
+
+#[test]
+fn evaluator_reproduces_python_eval_accuracy() {
+    let Some(dir) = artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+    for (name, entry) in &manifest.models {
+        // python measured this on the shipped checkpoint (head re-init)
+        let Some(want) = entry.init_accuracy.or(entry.pretrain_accuracy) else {
+            continue;
+        };
+        let corpus = Corpus::new(manifest.corpus(name).unwrap().clone());
+        let evaluator = Evaluator::new(&rt, entry, TrainMode::Ft).unwrap();
+        let params =
+            read_params_bin(&dir.join(&entry.params_file), entry.d_ft).unwrap();
+        // python evaluated 4 batches of 64 test examples — same stream
+        let acc = evaluator.accuracy(&params, &corpus, 4).unwrap();
+        assert!(
+            (acc - want).abs() < 0.02,
+            "{name}: rust eval acc {acc} vs python {want}"
+        );
+    }
+}
+
+#[test]
+fn toy_artifact_matches_golden() {
+    let Some(dir) = artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let golden = load_golden(&dir);
+    let toy = golden.get("toy").unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("toy_linreg_grad").unwrap();
+
+    // regenerate w, X, y from the same SplitMix64(0xA9A) stream as aot.py
+    let (d, n) = (manifest.toy_d, manifest.toy_n);
+    let mut sm = SplitMix64::new(0xA9A);
+    let w: Vec<f32> = (0..d).map(|_| sm.next_f64() as f32 - 0.5).collect();
+    let x: Vec<f32> = (0..n * d).map(|_| sm.next_f64() as f32 - 0.5).collect();
+    let y: Vec<f32> = (0..n).map(|_| sm.next_f64() as f32 - 0.5).collect();
+
+    let out = exe
+        .run(&[
+            ArgValue::F32(&w, &[d]),
+            ArgValue::F32(&x, &[n, d]),
+            ArgValue::F32(&y, &[n]),
+        ])
+        .unwrap();
+    let grad = &out[0];
+    let loss = out[1][0] as f64;
+
+    let want_loss = toy.get("loss").unwrap().as_f64().unwrap();
+    assert!((loss - want_loss).abs() < 1e-5 * (1.0 + want_loss.abs()));
+    let want_head = toy.get("grad_head").unwrap().to_f32_vec().unwrap();
+    for (i, w_i) in want_head.iter().enumerate() {
+        assert!(
+            (grad[i] - w_i).abs() < 1e-5,
+            "grad[{i}]: rust {} vs python {w_i}",
+            grad[i]
+        );
+    }
+    let norm: f64 = grad.iter().map(|g| (*g as f64) * (*g as f64)).sum::<f64>().sqrt();
+    let want_norm = toy.get("grad_norm").unwrap().as_f64().unwrap();
+    assert!((norm - want_norm).abs() < 1e-4 * (1.0 + want_norm));
+}
+
+#[test]
+fn update_params_invalidate_device_copy() {
+    let Some(dir) = artifact_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+    let entry = manifest.model("roberta_mini").unwrap();
+    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone());
+    let batch = corpus.train_batch(0, entry.shapes.batch);
+    let mut oracle = PjrtOracle::new(&rt, entry, TrainMode::Lora).unwrap();
+    oracle.set_batch(&batch).unwrap();
+    let l0 = oracle.loss_base().unwrap();
+    // scramble the classifier head (shipped checkpoints zero it, so write
+    // nonzero values): loss must change on the next call
+    oracle
+        .update_params(&mut |x| {
+            let n = x.len();
+            for (i, v) in x[n - 258..].iter_mut().enumerate() {
+                *v = 0.05 * ((i as f32 * 0.7).sin() + 0.1);
+            }
+        })
+        .unwrap();
+    let l1 = oracle.loss_base().unwrap();
+    assert!((l0 - l1).abs() > 1e-6, "device param copy was not refreshed");
+}
