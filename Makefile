@@ -1,0 +1,28 @@
+# Build orchestration for the three-layer stack (see README.md).
+#
+#   make artifacts   run L2+L1: lower models + kernels to artifacts/
+#   make build       compile the L3 coordinator (release)
+#   make test        tier-1 verify: cargo build --release && cargo test -q
+#   make doc         API docs, warnings fatal (CI parity)
+#   make bench       regenerate tables/figures from the artifacts
+
+.PHONY: artifacts build test doc bench clean
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+build:
+	cargo build --release
+
+test: build
+	cargo test -q
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+bench:
+	cargo bench
+
+clean:
+	cargo clean
+	rm -rf artifacts

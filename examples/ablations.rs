@@ -47,6 +47,7 @@ fn main() -> Result<()> {
         mode: TrainMode::Lora,
         config,
         eval_batches: 8,
+        probe_dispatch: None,
     };
 
     if sweep == "k" || sweep == "all" {

@@ -62,6 +62,7 @@ fn main() -> Result<()> {
                         mode,
                         config: cfg,
                         eval_batches: 8,
+                        probe_dispatch: None,
                     });
                 }
             }

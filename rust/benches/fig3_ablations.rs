@@ -44,6 +44,7 @@ fn main() {
         mode: TrainMode::Lora,
         config: c,
         eval_batches: 8,
+        probe_dispatch: None,
     };
     if filter.is_empty() || filter == "k" {
         for k in [1usize, 5, 10] {

@@ -1,19 +1,21 @@
 //! Bench: hot-path decomposition (§Perf of EXPERIMENTS.md).
 //!
-//! Times every stage of one ZO training step on the PJRT oracle —
-//! sampling, fused K-probe dispatch vs K single dispatches, the central
-//! difference, the policy update, the optimizer axpy — plus the pure-rust
-//! O(d) kernels, so regressions localize immediately.
+//! Times every stage of one ZO training step — sampling, the batched
+//! K-probe dispatch vs K single dispatches (on both the closed-form and
+//! the PJRT oracles), the central difference, the policy update, the
+//! optimizer axpy — plus the pure-rust O(d) and O(K d) kernels, so
+//! regressions localize immediately.
 //!
 //!     cargo bench --bench perf_hotpath
 
 use zo_ldsd::bench::Bencher;
 use zo_ldsd::config::{Manifest, TrainMode};
 use zo_ldsd::data::Corpus;
-use zo_ldsd::oracle::{Oracle, PjrtOracle};
+use zo_ldsd::optim::{GradEstimator, LdsdEstimator};
+use zo_ldsd::oracle::{Oracle, PjrtOracle, QuadraticOracle};
 use zo_ldsd::runtime::Runtime;
 use zo_ldsd::sampler::{DirectionSampler, GaussianSampler, LdsdConfig, LdsdSampler};
-use zo_ldsd::tensor::{axpy, axpy_into, dot, nrm2};
+use zo_ldsd::tensor::{axpy, axpy_into, axpy_k, dot, nrm2, probe_combine};
 
 fn main() {
     let mut b = Bencher::new();
@@ -34,6 +36,27 @@ fn main() {
     b.bench("tensor/nrm2_1.3M", d as f64, || {
         std::hint::black_box(nrm2(&x));
     });
+
+    // --- blocked K x d probe-matrix kernels -------------------------------
+    // (the combine step of the batched estimation path)
+    {
+        let dk = 262_144usize; // 256k floats per row
+        let k = 5usize;
+        let rows = vec![0.01f32; k * dk];
+        let w = [0.3f32, -0.1, 0.2, 0.05, -0.4];
+        let mut g = vec![0.0f32; dk];
+        b.bench("tensor/probe_combine_k5_256k", (k * dk) as f64, || {
+            probe_combine(&rows, dk, &w, &mut g)
+        });
+        b.bench("tensor/axpy_k_fused_k5_256k", (k * dk) as f64, || {
+            axpy_k(&w, &rows, &mut g)
+        });
+        b.bench("tensor/axpy_k_looped_k5_256k", (k * dk) as f64, || {
+            for i in 0..k {
+                axpy(w[i], &rows[i * dk..(i + 1) * dk], &mut g);
+            }
+        });
+    }
 
     // --- RNG: scalar cached-spare path vs the pairwise hot loop -----------
     // (§Perf optimization #1: FT-mode LDSD draws K*d = 6.6M normals/step)
@@ -70,7 +93,46 @@ fn main() {
         ldsd.observe(&dirs5, &losses, 5)
     });
 
+    // --- batched vs per-probe K-probe estimation (closed-form oracle) -----
+    // The acceptance row for the batching refactor: one estimation step of
+    // the best-of-K estimator, dispatched (a) through the fused vectorized
+    // `loss_k` and (b) as K separate `loss_dir` calls, for K in {5, 10}.
+    // Throughput is probes/second; no artifacts are needed.
+    for k in [5usize, 10] {
+        let dq = 16_384usize;
+        let diag: Vec<f32> = (0..dq).map(|i| 1.0 + 0.5 * (i % 7) as f32).collect();
+        let center = vec![1.0f32; dq];
+        let mut oracle = QuadraticOracle::new(diag, center, vec![0.0; dq]);
+        let mut est = LdsdEstimator::new(
+            LdsdSampler::new(dq, 7, LdsdConfig::default()),
+            1e-3,
+            k,
+        );
+        let mut g = vec![0.0f32; dq];
+        b.bench(&format!("estimator/bestofk{k}_batched_16k"), (k + 1) as f64, || {
+            est.estimate(&mut oracle, &mut g).unwrap();
+        });
+        b.bench(&format!("estimator/bestofk{k}_perprobe_16k"), (k + 1) as f64, || {
+            let probe_losses: Vec<f64> = {
+                let batch = est.propose().unwrap();
+                (0..batch.k)
+                    .map(|i| {
+                        oracle
+                            .loss_dir(&batch.dirs[i * dq..(i + 1) * dq], batch.tau)
+                            .unwrap()
+                    })
+                    .collect()
+            };
+            est.consume(&mut oracle, &probe_losses, &mut g).unwrap();
+        });
+    }
+
     // --- PJRT oracle -------------------------------------------------------
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("(skipping PJRT benches: built without the pjrt feature)");
+        b.finish();
+        return;
+    }
     let Ok(manifest) = Manifest::load("artifacts") else {
         eprintln!("(skipping PJRT benches: artifacts/ not built)");
         b.finish();

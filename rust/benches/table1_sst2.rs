@@ -43,6 +43,7 @@ fn main() {
                 mode: TrainMode::Lora,
                 config: cfg,
                 eval_batches: 8,
+                probe_dispatch: None,
             });
         }
     }

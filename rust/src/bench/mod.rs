@@ -11,9 +11,13 @@ use crate::report::Table;
 
 /// Times closures and accumulates a result table.
 pub struct Bencher {
+    /// Untimed iterations before sampling starts.
     pub warmup_iters: usize,
+    /// Minimum timed iterations per benchmark.
     pub min_iters: usize,
+    /// Maximum timed iterations per benchmark.
     pub max_iters: usize,
+    /// Time budget per benchmark (soft; checked between iterations).
     pub max_seconds: f64,
     filter: Option<String>,
     table: Table,
@@ -26,6 +30,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// New harness with default limits; the filter comes from argv.
     pub fn new() -> Self {
         let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
         Self {
@@ -89,6 +94,7 @@ impl Bencher {
     }
 }
 
+/// Human-readable duration with an auto-selected unit (s/ms/us/ns).
 pub fn format_seconds(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3}s")

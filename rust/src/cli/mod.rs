@@ -8,9 +8,12 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+/// Parsed command line: subcommand, options, flags and positionals.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// The recognized first token, if any.
     pub subcommand: Option<String>,
+    /// Non-option tokens in order.
     pub positional: Vec<String>,
     options: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
@@ -72,14 +75,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process argv (excluding argv\[0\]).
     pub fn from_env(subcommands: &[&str]) -> Result<Self> {
         Self::parse(std::env::args().skip(1), subcommands)
     }
 
+    /// True if the boolean flag was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Last value of `--name` (last occurrence wins).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).and_then(|v| v.last()).map(String::as_str)
     }
@@ -92,14 +98,17 @@ impl Args {
             .unwrap_or_default()
     }
 
+    /// Like [`Args::get`] with a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Error if the option is absent.
     pub fn require(&self, name: &str) -> Result<&str> {
         self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
     }
 
+    /// Typed accessor: f64 with default.
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -107,6 +116,7 @@ impl Args {
         }
     }
 
+    /// Typed accessor: usize with default.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -114,6 +124,7 @@ impl Args {
         }
     }
 
+    /// Typed accessor: u64 with default.
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),

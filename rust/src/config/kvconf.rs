@@ -18,12 +18,14 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+/// Flattened `section.key -> value` config map.
 #[derive(Clone, Debug, Default)]
 pub struct KvConfig {
     entries: BTreeMap<String, String>,
 }
 
 impl KvConfig {
+    /// Parse config text (see the module docs for the format).
     pub fn parse(text: &str) -> Result<Self> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
@@ -60,6 +62,7 @@ impl KvConfig {
         Ok(Self { entries })
     }
 
+    /// Parse a config file from disk.
     pub fn load(path: &std::path::Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
@@ -75,22 +78,27 @@ impl KvConfig {
         Ok(())
     }
 
+    /// Set a key programmatically (CLI options layered over files).
     pub fn set(&mut self, key: &str, value: &str) {
         self.entries.insert(key.to_string(), value.to_string());
     }
 
+    /// Raw string value of a flattened key.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.entries.get(key).map(String::as_str)
     }
 
+    /// Like [`KvConfig::get`] with a default.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Error if the key is absent.
     pub fn require(&self, key: &str) -> Result<&str> {
         self.get(key).ok_or_else(|| anyhow!("missing config key '{key}'"))
     }
 
+    /// Typed accessor: f64 (None if absent, error if unparsable).
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
         match self.get(key) {
             None => Ok(None),
@@ -101,10 +109,12 @@ impl KvConfig {
         }
     }
 
+    /// Typed accessor: f64 with default.
     pub fn get_f64_or(&self, key: &str, default: f64) -> Result<f64> {
         Ok(self.get_f64(key)?.unwrap_or(default))
     }
 
+    /// Typed accessor: usize (None if absent, error if unparsable).
     pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
         match self.get(key) {
             None => Ok(None),
@@ -115,10 +125,12 @@ impl KvConfig {
         }
     }
 
+    /// Typed accessor: usize with default.
     pub fn get_usize_or(&self, key: &str, default: usize) -> Result<usize> {
         Ok(self.get_usize(key)?.unwrap_or(default))
     }
 
+    /// Typed accessor: u64 with default.
     pub fn get_u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -126,6 +138,7 @@ impl KvConfig {
         }
     }
 
+    /// Typed accessor: bool with default ("true"/"1"/"yes" etc.).
     pub fn get_bool_or(&self, key: &str, default: bool) -> Result<bool> {
         match self.get(key) {
             None => Ok(default),
@@ -135,6 +148,7 @@ impl KvConfig {
         }
     }
 
+    /// All flattened keys in sorted order.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(String::as_str)
     }

@@ -15,11 +15,14 @@ pub const SUPPORTED_VERSION: u64 = 3;
 /// Which parameter set is trainable (and therefore perturbed).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TrainMode {
+    /// Full fine-tuning: all d_ft parameters are trainable.
     Ft,
+    /// LoRA: only the d_lora adapter vector is trainable.
     Lora,
 }
 
 impl TrainMode {
+    /// Canonical lowercase name ("ft" | "lora").
     pub fn as_str(&self) -> &'static str {
         match self {
             TrainMode::Ft => "ft",
@@ -27,6 +30,7 @@ impl TrainMode {
         }
     }
 
+    /// Parse from a CLI/config string.
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "ft" => Ok(TrainMode::Ft),
@@ -36,50 +40,78 @@ impl TrainMode {
     }
 }
 
+/// One named tensor's slice of the flat parameter vector.
 #[derive(Clone, Debug)]
 pub struct LayoutEntry {
+    /// Tensor name (python-side pytree path).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Start offset into the flat vector.
     pub offset: usize,
+    /// Element count (product of shape).
     pub len: usize,
 }
 
+/// Inventory record for one lowered HLO artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactInfo {
+    /// File name inside the artifact directory.
     pub file: String,
+    /// File size in bytes (0 if unrecorded).
     pub bytes: usize,
 }
 
 /// Static shapes of a model's artifacts.
 #[derive(Clone, Copy, Debug)]
 pub struct ModelShapes {
+    /// Training batch size the loss graphs were lowered for.
     pub batch: usize,
+    /// Eval batch size the logits graph was lowered for.
     pub eval_batch: usize,
+    /// Sequence length.
     pub seq: usize,
+    /// Probe count K baked into the fused `loss_k` artifact.
     pub k: usize,
+    /// Classifier output classes.
     pub n_classes: usize,
 }
 
+/// One model's manifest entry: dimensions, layouts, artifact inventory.
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
+    /// Model name (manifest key).
     pub name: String,
+    /// Full fine-tuning dimensionality.
     pub d_ft: usize,
+    /// LoRA adapter dimensionality.
     pub d_lora: usize,
+    /// Static artifact shapes.
     pub shapes: ModelShapes,
+    /// Causal (decoder) vs bidirectional attention.
     pub causal: bool,
+    /// Pooling strategy for the classifier head ("cls" | "mean").
     pub pool: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Hidden width.
     pub d_model: usize,
+    /// Transformer depth.
     pub n_layers: usize,
+    /// Flat-vector layout of the full parameter set.
     pub layout_ft: Vec<LayoutEntry>,
+    /// Flat-vector layout of the LoRA adapter set.
     pub layout_lora: Vec<LayoutEntry>,
+    /// File holding the pretrained flat f32 parameters.
     pub params_file: String,
+    /// File holding the LoRA adapter initialization.
     pub lora_init_file: String,
     /// held-out accuracy of the pretrained checkpoint (trained head)
     pub pretrain_accuracy: Option<f64>,
     /// accuracy after head re-initialization (what rust fine-tuning starts
     /// from; ~chance level)
     pub init_accuracy: Option<f64>,
+    /// Artifact inventory by graph name.
     pub artifacts: BTreeMap<String, ArtifactInfo>,
 }
 
@@ -98,16 +130,23 @@ impl ModelEntry {
     }
 }
 
+/// Typed view of `artifacts/manifest.json` — the L2->L3 ABI.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Schema version (must equal [`SUPPORTED_VERSION`]).
     pub version: u64,
+    /// Model entries by name.
     pub models: BTreeMap<String, ModelEntry>,
+    /// Corpus specs keyed by model name.
     pub corpora: BTreeMap<String, CorpusSpec>,
+    /// Toy (Fig. 2) problem dimensionality.
     pub toy_d: usize,
+    /// Toy problem sample count.
     pub toy_n: usize,
 }
 
 impl Manifest {
+    /// Load `<dir>/manifest.json`.
     pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
         let path = dir.as_ref().join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -115,6 +154,7 @@ impl Manifest {
         Self::from_json_text(&text)
     }
 
+    /// Parse from JSON text (version-checked).
     pub fn from_json_text(text: &str) -> Result<Self> {
         let root = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
         let version = root
@@ -155,6 +195,7 @@ impl Manifest {
         Ok(Self { version, models, corpora, toy_d, toy_n })
     }
 
+    /// Look up a model entry (error lists known names).
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models
             .get(name)
@@ -162,6 +203,7 @@ impl Manifest {
                 self.models.keys().collect::<Vec<_>>()))
     }
 
+    /// Look up the corpus spec for a model.
     pub fn corpus(&self, model: &str) -> Result<&CorpusSpec> {
         self.corpora
             .get(model)

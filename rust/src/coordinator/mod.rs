@@ -13,21 +13,34 @@ use crate::eval::Evaluator;
 use crate::exec::ThreadPool;
 use crate::oracle::PjrtOracle;
 use crate::runtime::Runtime;
-use crate::train::{TrainConfig, TrainOutcome, Trainer};
+use crate::train::{ProbeDispatch, TrainConfig, TrainOutcome, Trainer};
 
 /// One training run to schedule.
 #[derive(Clone, Debug)]
 pub struct TrialSpec {
+    /// Stable identifier used to match results back to specs.
     pub id: String,
+    /// Manifest model name.
     pub model: String,
+    /// Full fine-tuning or LoRA.
     pub mode: TrainMode,
+    /// The training-run configuration.
     pub config: TrainConfig,
+    /// Test batches per evaluation point (overrides the config's value).
     pub eval_batches: usize,
+    /// Per-trial override of the probe-dispatch mode (None keeps the
+    /// config's).  The CLI `train --probe-dispatch` flag flows through
+    /// here; grids can use it to A/B fused vs per-probe dispatch without
+    /// cloning configs by hand.
+    pub probe_dispatch: Option<ProbeDispatch>,
 }
 
+/// Outcome of one scheduled trial.
 #[derive(Clone, Debug)]
 pub struct TrialResult {
+    /// The [`TrialSpec::id`] this result belongs to.
     pub spec_id: String,
+    /// The training-run outcome.
     pub outcome: TrainOutcome,
 }
 
@@ -45,6 +58,9 @@ pub fn run_trial(
     let evaluator = Evaluator::new(rt, entry, spec.mode)?;
     let mut cfg = spec.config.clone();
     cfg.eval_batches = spec.eval_batches;
+    if let Some(dispatch) = spec.probe_dispatch {
+        cfg.probe_dispatch = dispatch;
+    }
     let corpus = Corpus::new(corpus_spec);
     let mut trainer = Trainer::new(cfg, oracle, corpus)?;
     let outcome = trainer.run(Some(&evaluator))?;

@@ -9,22 +9,35 @@ use crate::rng::{SplitMix64, GOLDEN_GAMMA};
 
 use super::Batch;
 
+/// Padding token id.
 pub const PAD: i32 = 0;
+/// Leading classifier token id.
 pub const CLS: i32 = 1;
-/// Test examples live at indices >= this; train examples at [0, 2^20).
+/// Test examples live at indices >= this; train examples at `[0, 2^20)`.
 pub const TEST_INDEX_BASE: u64 = 1 << 20;
 
+/// Generation parameters of the synthetic corpus (ABI with python).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CorpusSpec {
+    /// Vocabulary size (ids 0/1 are PAD/CLS).
     pub vocab: u64,
+    /// Sequence length.
     pub seq: usize,
+    /// Number of classes (2: binary sentiment).
     pub n_classes: u64,
+    /// Tokens per class lexicon.
     pub lexicon: u64,
+    /// Minimum valid-token length per example.
     pub min_len: u64,
+    /// Minimum signal tokens per example.
     pub signal_min: u64,
+    /// Maximum signal tokens per example.
     pub signal_max: u64,
+    /// Probability a signal token comes from the wrong class lexicon.
     pub contra: f64,
+    /// Label-flip probability.
     pub noise: f64,
+    /// Base seed mixed with the example index.
     pub seed: u64,
 }
 
@@ -50,9 +63,12 @@ impl CorpusSpec {
     }
 }
 
+/// One generated example.
 #[derive(Clone, Debug)]
 pub struct Example {
+    /// Token ids (seq, PAD-padded).
     pub ids: Vec<i32>,
+    /// Validity mask (1.0 valid / 0.0 pad), a prefix.
     pub mask: Vec<f32>,
     /// label after noise (what training sees)
     pub label: i32,
@@ -63,10 +79,12 @@ pub struct Example {
 /// Stateless corpus view: any example index is generated on demand.
 #[derive(Clone, Debug)]
 pub struct Corpus {
+    /// The generation parameters.
     pub spec: CorpusSpec,
 }
 
 impl Corpus {
+    /// Validate the spec and build the (stateless) corpus view.
     pub fn new(spec: CorpusSpec) -> Self {
         assert!(spec.n_neutral() > 0, "vocab too small for lexicon");
         assert!(spec.min_len >= 2 && (spec.min_len as usize) < spec.seq);
@@ -77,6 +95,7 @@ impl Corpus {
         self.spec.seed ^ (index.wrapping_add(1)).wrapping_mul(GOLDEN_GAMMA)
     }
 
+    /// Generate the example at `index` (deterministic; ABI with python).
     pub fn example(&self, index: u64) -> Example {
         let s = &self.spec;
         let mut rng = SplitMix64::new(self.example_seed(index));
@@ -129,10 +148,12 @@ impl Corpus {
         out
     }
 
+    /// Training batch for a step (stream of disjoint index windows).
     pub fn train_batch(&self, step: u64, batch: usize) -> Batch {
         self.batch(step * batch as u64, batch)
     }
 
+    /// Held-out batch (indices offset by [`TEST_INDEX_BASE`]).
     pub fn test_batch(&self, step: u64, batch: usize) -> Batch {
         self.batch(TEST_INDEX_BASE + step * batch as u64, batch)
     }

@@ -11,7 +11,9 @@ use crate::tensor::Matrix;
 /// Parsed LIBSVM dataset: dense row-major features + labels.
 #[derive(Clone, Debug)]
 pub struct LibsvmDataset {
+    /// Dense features (N x d).
     pub x: Matrix,
+    /// Labels (length N).
     pub y: Vec<f32>,
 }
 
@@ -61,16 +63,22 @@ pub fn parse_libsvm(text: &str, dims: usize) -> Result<LibsvmDataset, String> {
 /// 123, like a9a's one-hot blocks), linear ground truth + noise.
 #[derive(Clone, Debug)]
 pub struct SyntheticRegression {
+    /// Sparse binary features (N x d).
     pub x: Matrix,
+    /// Noisy linear targets (length N).
     pub y: Vec<f32>,
+    /// The ground-truth weight vector.
     pub w_true: Vec<f32>,
 }
 
 impl SyntheticRegression {
+    /// a9a-shaped instance: d=123, 14 active features, noise 0.1.
     pub fn a9a_like(n: usize, seed: u64) -> Self {
         Self::generate(n, 123, 14, 0.1, seed)
     }
 
+    /// Generate `n` rows with `active` of `d` features set, targets
+    /// `<x, w_true> + noise * N(0,1)`.
     pub fn generate(
         n: usize, d: usize, active: usize, noise: f32, seed: u64,
     ) -> Self {

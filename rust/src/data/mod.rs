@@ -15,17 +15,20 @@ pub use libsvm::{parse_libsvm, LibsvmDataset, SyntheticRegression};
 /// One tokenized training/eval batch in the artifact ABI layout.
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// Examples per batch.
     pub batch: usize,
+    /// Sequence length.
     pub seq: usize,
-    /// row-major [batch, seq] i32
+    /// row-major `[batch, seq]` i32 token ids
     pub ids: Vec<i32>,
-    /// row-major [batch, seq] f32 (1.0 valid / 0.0 pad)
+    /// row-major `[batch, seq]` f32 (1.0 valid / 0.0 pad)
     pub mask: Vec<f32>,
-    /// [batch] i32
+    /// `[batch]` i32 labels
     pub labels: Vec<i32>,
 }
 
 impl Batch {
+    /// All-zero batch of the given shape (filled by the corpus).
     pub fn zeros(batch: usize, seq: usize) -> Self {
         Self {
             batch,

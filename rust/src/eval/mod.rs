@@ -20,6 +20,7 @@ pub struct Evaluator {
 }
 
 impl Evaluator {
+    /// Compile the logits artifact and stage the frozen base (LoRA mode).
     pub fn new(rt: &Runtime, entry: &ModelEntry, mode: TrainMode) -> Result<Self> {
         let exe = rt.load(&entry.artifact(mode, "logits"))?;
         let base_dev = match mode {
@@ -93,6 +94,7 @@ impl Evaluator {
     }
 }
 
+/// Index of the largest element (first wins on ties).
 pub fn argmax(row: &[f32]) -> usize {
     let mut best = 0usize;
     for (i, v) in row.iter().enumerate() {

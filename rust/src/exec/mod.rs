@@ -20,6 +20,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn `size` workers (at least one).
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -52,6 +53,7 @@ impl ThreadPool {
             .unwrap_or(4)
     }
 
+    /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.size
     }

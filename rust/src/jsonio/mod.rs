@@ -13,17 +13,25 @@ pub use write::to_string_pretty;
 
 use std::collections::BTreeMap;
 
+/// A parsed JSON value (numbers stored as f64, objects key-sorted).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (deterministic key order).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object field lookup (None for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -37,6 +45,7 @@ impl Json {
         self.get(key).ok_or_else(|| format!("missing field '{key}'"))
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -44,6 +53,7 @@ impl Json {
         }
     }
 
+    /// Exact non-negative integer value, if any.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
@@ -51,6 +61,7 @@ impl Json {
         }
     }
 
+    /// Exact non-negative integer value as u64, if any.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
@@ -58,6 +69,7 @@ impl Json {
         }
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -65,6 +77,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -72,6 +85,7 @@ impl Json {
         }
     }
 
+    /// Array view, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -79,6 +93,7 @@ impl Json {
         }
     }
 
+    /// Object view, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -115,6 +130,7 @@ impl Json {
         Some(out)
     }
 
+    /// Like [`Json::to_f32_vec_nested`] but truncating to i32.
     pub fn to_i32_vec_nested(&self) -> Option<Vec<i32>> {
         let f = self.to_f32_vec_nested()?;
         Some(f.into_iter().map(|x| x as i32).collect())

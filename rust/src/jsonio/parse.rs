@@ -4,9 +4,12 @@ use std::collections::BTreeMap;
 
 use super::Json;
 
+/// Parse failure with byte position.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset into the source where parsing failed.
     pub pos: usize,
+    /// What was expected / found.
     pub msg: String,
 }
 
@@ -18,6 +21,7 @@ impl std::fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Parse a complete JSON document (trailing data is an error).
 pub fn parse(src: &str) -> Result<Json, ParseError> {
     let mut p = Parser { bytes: src.as_bytes(), pos: 0 };
     p.skip_ws();

@@ -2,6 +2,7 @@
 
 use super::Json;
 
+/// Serialize with 1-space indentation and sorted object keys.
 pub fn to_string_pretty(v: &Json) -> String {
     let mut out = String::new();
     write_value(v, 0, &mut out);

@@ -17,7 +17,17 @@
 //!
 //! The [`runtime`] module loads the artifacts via PJRT; after
 //! `make artifacts` the rust binary is fully self-contained — python never
-//! runs on the training path.
+//! runs on the training path.  Built without the `pjrt` feature (the
+//! default), the runtime is an inert stub and the closed-form oracle stack
+//! carries all tests and benches.
+//!
+//! Estimation is organised around the batched K-probe pipeline: estimators
+//! `propose` a row-major K x d probe matrix, the oracle evaluates it in
+//! one fused `loss_k` dispatch, and estimators `consume` the losses with
+//! blocked combine kernels ([`tensor::probe_combine`] / [`tensor::axpy_k`]).
+//! See README.md for the module map and DESIGN.md for design rationale.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod cli;

@@ -31,6 +31,7 @@ commands:
   train --model M --mode ft|lora --method 2fwd|6fwd|alg2
         [--optimizer zo_sgd|zo_adamm|jaguar] [--lr F] [--budget N]
         [--eval-every N] [--seed N] [--artifacts DIR]
+        [--probe-dispatch batched|per-probe]
   toy   [--steps N] [--variant baseline|ldsd] [--seed N]
   landscape [--grid N] [--eps F]
   memory [--model M] [--artifacts DIR]
@@ -98,6 +99,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("model", "model"), ("mode", "mode"), ("method", "method"),
         ("optimizer.name", "optimizer"), ("optimizer.lr", "lr"),
         ("budget", "budget"), ("eval_every", "eval-every"), ("seed", "seed"),
+        ("probe_dispatch", "probe-dispatch"),
     ] {
         if let Some(v) = args.get(cli) {
             kv.set(key, v);
@@ -125,6 +127,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     cfg.eval_every = eval_every;
     cfg.seed = seed;
+    let dispatch =
+        zo_ldsd::train::ProbeDispatch::parse(kv.get_or("probe_dispatch", "batched"))?;
 
     let manifest = Manifest::load(&dir)?;
     let rt = Runtime::new(&dir)?;
@@ -134,6 +138,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         mode,
         config: cfg,
         eval_batches: args.get_usize("eval-batches", 8)?,
+        probe_dispatch: Some(dispatch),
     };
     println!("running {} (budget {budget} forwards)", spec.id);
     let result = run_trial(&dir, &manifest, &spec, &rt)?;

@@ -10,6 +10,7 @@
 /// Byte accounting for one fine-tuning method on one model.
 #[derive(Clone, Debug)]
 pub struct MethodMemory {
+    /// Method label ("fo_adam", "zo_sgd (gaussian)", ...).
     pub method: String,
     /// model weights (shared by everything)
     pub weights: usize,
@@ -26,6 +27,7 @@ pub struct MethodMemory {
 }
 
 impl MethodMemory {
+    /// Total bytes across all components.
     pub fn total(&self) -> usize {
         self.weights
             + self.gradients
@@ -66,6 +68,7 @@ pub fn activation_bytes(
 pub struct MemoryReport;
 
 impl MemoryReport {
+    /// Compute per-method footprints for one model configuration.
     #[allow(clippy::too_many_arguments)]
     pub fn build(
         d_trainable: usize,

@@ -1,5 +1,6 @@
 //! Small statistics helpers shared by benches and reports.
 
+/// Arithmetic mean (NaN for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -7,6 +8,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Sample standard deviation (0 for fewer than two samples).
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;
@@ -36,16 +38,24 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// Five-number-ish summary used by the bench harness tables.
 #[derive(Clone, Debug)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarize a sample set.
     pub fn of(xs: &[f64]) -> Self {
         Self {
             n: xs.len(),

@@ -17,8 +17,11 @@ const MAGIC: &str = "zock1";
 
 /// A named view into a flat parameter vector (from the manifest layout).
 pub struct ParamView<'a> {
+    /// Tensor name.
     pub name: &'a str,
+    /// Tensor shape.
     pub shape: &'a [usize],
+    /// The tensor's slice of the flat vector.
     pub data: &'a [f32],
 }
 
@@ -38,16 +41,23 @@ pub fn views<'a>(flat: &'a [f32], layout: &'a [LayoutEntry]) -> Result<Vec<Param
         .collect())
 }
 
+/// A saved trainable vector plus enough metadata to validate a restore.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
+    /// Model name the vector belongs to.
     pub model: String,
+    /// Train mode ("ft" | "lora").
     pub mode: String,
+    /// Optimizer step the snapshot was taken at.
     pub step: u64,
+    /// Oracle calls consumed when the snapshot was taken.
     pub oracle_calls: u64,
+    /// The trainable vector.
     pub data: Vec<f32>,
 }
 
 impl Checkpoint {
+    /// Write header + payload to `path` (parents created).
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let header = Json::Obj(
             [
@@ -78,6 +88,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read and validate a checkpoint from `path`.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
         let mut f = std::fs::File::open(&path)
             .with_context(|| format!("opening {}", path.as_ref().display()))?;

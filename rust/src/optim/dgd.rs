@@ -19,6 +19,7 @@ use crate::rng::Rng;
 use crate::sampler::AlignmentTracker;
 use crate::tensor::{axpy, cosine, dot, normalize, nrm2, scal};
 
+/// Which direction distribution feeds Algorithm 1.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DgdVariant {
     /// v ~ N(0, I), no policy (the paper's baseline, gamma_x = 200).
@@ -28,14 +29,22 @@ pub enum DgdVariant {
     Ldsd,
 }
 
+/// Hyperparameters of the Fig. 2 DGD run.
 #[derive(Clone, Debug)]
 pub struct DgdConfig {
+    /// Baseline (Gaussian) or LDSD (learnable-mean) sampling.
     pub variant: DgdVariant,
+    /// Directions per step.
     pub k: usize,
+    /// x-step size.
     pub gamma_x: f32,
+    /// Policy-mean step size (LDSD only).
     pub gamma_mu: f32,
+    /// Sampling std-dev around mu (LDSD only).
     pub eps: f32,
+    /// Iterations to run.
     pub steps: usize,
+    /// RNG seed.
     pub seed: u64,
     /// ||mu^0|| for the LDSD variant (random direction at this norm).
     pub mu_init_norm: f32,
@@ -84,13 +93,16 @@ pub struct DgdTrace {
     pub mu_alignment: Vec<f32>,
 }
 
+/// Runs Algorithm 1 against a [`GradOracle`] and records the Fig. 2 series.
 pub struct DgdRunner {
+    /// The run configuration.
     pub cfg: DgdConfig,
     rng: Rng,
     mu: Vec<f32>,
 }
 
 impl DgdRunner {
+    /// Initialize for dimensionality `d` (random mu at `mu_init_norm`).
     pub fn new(cfg: DgdConfig, d: usize) -> Self {
         let mut rng = Rng::new(cfg.seed);
         let mut mu = vec![0.0f32; d];
@@ -114,6 +126,7 @@ impl DgdRunner {
         }
     }
 
+    /// The current policy mean.
     pub fn mu(&self) -> &[f32] {
         &self.mu
     }

@@ -4,12 +4,46 @@
 //! base optimizers are strategy-agnostic (the paper's plug-in claim), and
 //! report exactly how many oracle calls they spent (the §5.1 budget-fair
 //! protocol charges estimators by calls, not iterations).
+//!
+//! # Two-phase batched estimation
+//!
+//! Estimation is split into a `propose`/`consume` flow around the K x d
+//! probe matrix:
+//!
+//! 1. [`GradEstimator::propose`] fills the estimator's reusable row-major
+//!    probe matrix from its [`DirectionSampler`] and returns it as a
+//!    [`ProbeBatch`] (no oracle calls yet);
+//! 2. the caller evaluates the whole batch — normally one fused
+//!    [`Oracle::loss_k`] dispatch, or K separate `loss_dir` calls for
+//!    per-probe A/B benchmarking (`ProbeDispatch` in [`crate::train`]);
+//! 3. [`GradEstimator::consume`] combines the probe losses into `g` with
+//!    the blocked [`probe_combine`] kernel (plus at most one follow-up
+//!    point evaluation: the forward-difference base loss, or Algorithm 2's
+//!    central-difference probe at `-tau` along the selected direction).
+//!
+//! [`GradEstimator::estimate`] is the one-call convenience that wires the
+//! three steps together; sharding or multi-backend dispatch can instead
+//! split the phases and route the probe matrix wherever it likes.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::oracle::Oracle;
 use crate::sampler::DirectionSampler;
-use crate::tensor::{axpy, scal};
+use crate::tensor::{axpy, probe_combine};
+
+/// One batch of probe evaluations requested by [`GradEstimator::propose`]:
+/// `k` rows of a row-major `k x d` direction matrix, each to be evaluated
+/// at `f(x + tau * dir)`.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeBatch<'a> {
+    /// Row-major `k x d` direction matrix (borrowed from the estimator's
+    /// reusable buffer; valid until the next `propose`).
+    pub dirs: &'a [f32],
+    /// Number of probe rows.
+    pub k: usize,
+    /// Finite-difference scale each row is evaluated at.
+    pub tau: f32,
+}
 
 /// Outcome of one estimation step.
 #[derive(Clone, Debug)]
@@ -25,14 +59,45 @@ pub struct Estimate {
     pub fd_coeff: f64,
 }
 
+/// Turns forward evaluations into a dense gradient surrogate.
 pub trait GradEstimator {
-    /// Estimate grad f(x) into `g` (len d).  The oracle's current batch
-    /// must be set by the caller.
-    fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate>;
+    /// Phase 1: sample this step's directions into the estimator's
+    /// reusable probe matrix and describe the required evaluations.
+    /// Performs no oracle calls.
+    fn propose(&mut self) -> Result<ProbeBatch<'_>>;
+
+    /// Phase 2: combine the `losses` of the last proposed batch (in row
+    /// order) into `g` (len d).  May spend extra oracle calls for point
+    /// evaluations that cannot be batched (see the module docs); the
+    /// returned [`Estimate::calls`] covers the whole step including the
+    /// batch itself.
+    ///
+    /// Each `consume` must be paired with a preceding call to
+    /// [`GradEstimator::propose`]: combining without one (or twice for
+    /// one propose) would silently read a stale or zero probe matrix,
+    /// so it is an error.
+    fn consume(
+        &mut self,
+        oracle: &mut dyn Oracle,
+        losses: &[f64],
+        g: &mut [f32],
+    ) -> Result<Estimate>;
+
+    /// Estimate grad f(x) into `g` (len d) in one call: propose, evaluate
+    /// the batch via one fused [`Oracle::loss_k`] dispatch, consume.  The
+    /// oracle's current batch must be set by the caller.
+    fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate> {
+        let losses = {
+            let batch = self.propose()?;
+            oracle.loss_k(batch.dirs, batch.k, batch.tau)?
+        };
+        self.consume(oracle, &losses, g)
+    }
 
     /// Oracle calls one step consumes (for budget planning).
     fn calls_per_step(&self) -> u64;
 
+    /// Short identifier used in run labels.
     fn name(&self) -> &str;
 
     /// Bytes of persistent estimator state (memory accounting): direction
@@ -43,27 +108,57 @@ pub trait GradEstimator {
 /// Classical ZO central difference with a single probe direction
 /// (MeZO-style; the "Gaussian, 2 forwards, more iterations" row of
 /// Table 1):  g = v * (f(x + tau v) - f(x - tau v)) / (2 tau).
+///
+/// Batched form: the probe matrix is `[v; -v]` (2 x d), so both sides of
+/// the central difference ride one `loss_k` dispatch.
 pub struct CentralK1Estimator<S: DirectionSampler> {
+    /// Direction source for the single probe v.
     pub sampler: S,
+    /// Finite-difference scale.
     pub tau: f32,
-    dir: Vec<f32>,
+    /// 2 x d probe matrix: row 0 is v, row 1 is -v.
+    dirs: Vec<f32>,
+    proposed: bool,
 }
 
 impl<S: DirectionSampler> CentralK1Estimator<S> {
+    /// Build with a direction sampler and finite-difference scale.
     pub fn new(sampler: S, tau: f32) -> Self {
         let d = sampler.dim();
-        Self { sampler, tau, dir: vec![0.0; d] }
+        Self { sampler, tau, dirs: vec![0.0; 2 * d], proposed: false }
     }
 }
 
 impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
-    fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate> {
-        self.sampler.sample(&mut self.dir, 1);
-        let fp = oracle.loss_dir(&self.dir, self.tau)?;
-        let fm = oracle.loss_dir(&self.dir, -self.tau)?;
+    fn propose(&mut self) -> Result<ProbeBatch<'_>> {
+        let d = self.sampler.dim();
+        let (v, neg) = self.dirs.split_at_mut(d);
+        self.sampler.sample(v, 1);
+        for (n, x) in neg.iter_mut().zip(v.iter()) {
+            *n = -*x;
+        }
+        self.proposed = true;
+        Ok(ProbeBatch { dirs: &self.dirs, k: 2, tau: self.tau })
+    }
+
+    fn consume(
+        &mut self,
+        _oracle: &mut dyn Oracle,
+        losses: &[f64],
+        g: &mut [f32],
+    ) -> Result<Estimate> {
+        if !self.proposed {
+            bail!("central_k1: consume without a matching propose");
+        }
+        if losses.len() != 2 {
+            bail!("central_k1: expected 2 probe losses, got {}", losses.len());
+        }
+        self.proposed = false;
+        let d = self.sampler.dim();
+        let (fp, fm) = (losses[0], losses[1]);
         let coeff = (fp - fm) / (2.0 * self.tau as f64);
         g.iter_mut().for_each(|v| *v = 0.0);
-        axpy(coeff as f32, &self.dir, g);
+        axpy(coeff as f32, &self.dirs[..d], g);
         Ok(Estimate { calls: 2, losses: vec![fp, fm], selected: Some(0), fd_coeff: coeff })
     }
 
@@ -76,43 +171,81 @@ impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
     }
 
     fn state_bytes(&self) -> usize {
-        self.dir.len() * 4 + self.sampler.state_bytes()
+        self.dirs.len() * 4 + self.sampler.state_bytes()
     }
 }
 
 /// Monte-Carlo forward-difference averaging (eq. 5 with one-point probes;
 /// the "Gaussian, 6 forwards, same iterations" row):
 /// g = (1/K) sum_i v_i (f(x + tau v_i) - f(x)) / tau.
+///
+/// Batched form: all K probes go through one `loss_k` dispatch; the base
+/// loss f(x) is the one point evaluation `consume` performs, and the
+/// combine is a single [`probe_combine`] reduce over the probe matrix.
 pub struct ForwardAvgEstimator<S: DirectionSampler> {
+    /// Direction source for the K probes.
     pub sampler: S,
+    /// Finite-difference scale.
     pub tau: f32,
+    /// Number of probe directions per step.
     pub k: usize,
     dirs: Vec<f32>,
+    weights: Vec<f32>,
     zero: Vec<f32>,
+    proposed: bool,
 }
 
 impl<S: DirectionSampler> ForwardAvgEstimator<S> {
+    /// Build with a direction sampler, finite-difference scale and probe
+    /// count (k >= 1).
     pub fn new(sampler: S, tau: f32, k: usize) -> Self {
         assert!(k >= 1);
         let d = sampler.dim();
-        Self { sampler, tau, k, dirs: vec![0.0; k * d], zero: vec![0.0; d] }
+        Self {
+            sampler,
+            tau,
+            k,
+            dirs: vec![0.0; k * d],
+            weights: Vec::with_capacity(k),
+            zero: vec![0.0; d],
+            proposed: false,
+        }
     }
 }
 
 impl<S: DirectionSampler> GradEstimator for ForwardAvgEstimator<S> {
-    fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate> {
-        let d = oracle.dim();
+    fn propose(&mut self) -> Result<ProbeBatch<'_>> {
         self.sampler.sample(&mut self.dirs, self.k);
-        let f_base = oracle.loss_dir(&self.zero, 0.0)?;
-        let losses = oracle.loss_k(&self.dirs, self.k, self.tau)?;
-        g.iter_mut().for_each(|v| *v = 0.0);
-        for i in 0..self.k {
-            let coeff = (losses[i] - f_base) / self.tau as f64;
-            axpy(coeff as f32, &self.dirs[i * d..(i + 1) * d], g);
+        self.proposed = true;
+        Ok(ProbeBatch { dirs: &self.dirs, k: self.k, tau: self.tau })
+    }
+
+    fn consume(
+        &mut self,
+        oracle: &mut dyn Oracle,
+        losses: &[f64],
+        g: &mut [f32],
+    ) -> Result<Estimate> {
+        if !self.proposed {
+            bail!("forward_avg: consume without a matching propose");
         }
-        scal(1.0 / self.k as f32, g);
+        if losses.len() != self.k {
+            bail!(
+                "forward_avg: expected {} probe losses, got {}",
+                self.k,
+                losses.len()
+            );
+        }
+        self.proposed = false;
+        let d = self.sampler.dim();
+        let f_base = oracle.loss_dir(&self.zero, 0.0)?;
+        let denom = self.k as f64 * self.tau as f64;
+        self.weights.clear();
+        self.weights
+            .extend(losses.iter().map(|l| ((l - f_base) / denom) as f32));
+        probe_combine(&self.dirs, d, &self.weights, g);
         let mut all = vec![f_base];
-        all.extend_from_slice(&losses);
+        all.extend_from_slice(losses);
         Ok(Estimate {
             calls: self.k as u64 + 1,
             losses: all,
@@ -130,7 +263,8 @@ impl<S: DirectionSampler> GradEstimator for ForwardAvgEstimator<S> {
     }
 
     fn state_bytes(&self) -> usize {
-        self.dirs.len() * 4 + self.sampler.state_bytes()
+        (self.dirs.len() + self.weights.capacity() + self.zero.len()) * 4
+            + self.sampler.state_bytes()
     }
 }
 
@@ -141,31 +275,63 @@ impl<S: DirectionSampler> GradEstimator for ForwardAvgEstimator<S> {
 /// Works with *any* [`DirectionSampler`]; with `GaussianSampler` it
 /// degenerates to best-of-K Gaussian selection (an ablation arm), with
 /// [`crate::sampler::LdsdSampler`] it is the paper's full method.
+///
+/// Batched form: the K candidate probes ride one `loss_k` dispatch;
+/// `consume` spends one extra `loss_dir` at `-tau` along the selected
+/// direction (line 5 reuses the `+tau` loss from the batch), then feeds
+/// the *same* probe matrix to the sampler's REINFORCE update — no second
+/// pass over K vectors.
 pub struct LdsdEstimator<S: DirectionSampler> {
+    /// Direction policy (learnable for [`crate::sampler::LdsdSampler`]).
     pub sampler: S,
+    /// Finite-difference scale.
     pub tau: f32,
+    /// Number of candidate directions per step.
     pub k: usize,
     dirs: Vec<f32>,
+    proposed: bool,
 }
 
 impl<S: DirectionSampler> LdsdEstimator<S> {
+    /// Build with a direction sampler, finite-difference scale and
+    /// candidate count (k >= 1).
     pub fn new(sampler: S, tau: f32, k: usize) -> Self {
         assert!(k >= 1);
         let d = sampler.dim();
-        Self { sampler, tau, k, dirs: vec![0.0; k * d] }
+        Self { sampler, tau, k, dirs: vec![0.0; k * d], proposed: false }
     }
 
+    /// The underlying direction sampler (policy diagnostics).
     pub fn sampler(&self) -> &S {
         &self.sampler
     }
 }
 
 impl<S: DirectionSampler> GradEstimator for LdsdEstimator<S> {
-    fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate> {
-        let d = oracle.dim();
+    fn propose(&mut self) -> Result<ProbeBatch<'_>> {
         self.sampler.sample(&mut self.dirs, self.k);
-        // K probes at +tau (one fused dispatch on the PJRT oracle)
-        let losses = oracle.loss_k(&self.dirs, self.k, self.tau)?;
+        self.proposed = true;
+        Ok(ProbeBatch { dirs: &self.dirs, k: self.k, tau: self.tau })
+    }
+
+    fn consume(
+        &mut self,
+        oracle: &mut dyn Oracle,
+        losses: &[f64],
+        g: &mut [f32],
+    ) -> Result<Estimate> {
+        if !self.proposed {
+            bail!("ldsd_bestofk: consume without a matching propose");
+        }
+        if losses.len() != self.k {
+            bail!(
+                "ldsd_bestofk: expected {} probe losses, got {}",
+                self.k,
+                losses.len()
+            );
+        }
+        self.proposed = false;
+        let d = self.sampler.dim();
         // greedy selection (line 4)
         let best = losses
             .iter()
@@ -179,9 +345,10 @@ impl<S: DirectionSampler> GradEstimator for LdsdEstimator<S> {
         let coeff = (losses[best] - f_minus) / (2.0 * self.tau as f64);
         g.iter_mut().for_each(|v| *v = 0.0);
         axpy(coeff as f32, vstar, g);
-        // policy update from all K probes (lines 6/8)
-        self.sampler.observe(&self.dirs, &losses, self.k);
-        let mut all = losses;
+        // policy update from all K probes (lines 6/8), reusing the probe
+        // matrix the batch was evaluated on
+        self.sampler.observe(&self.dirs, losses, self.k);
+        let mut all = losses.to_vec();
         all.push(f_minus);
         Ok(Estimate {
             calls: self.k as u64 + 1,
@@ -225,10 +392,11 @@ mod tests {
         let e = est.estimate(&mut o, &mut g).unwrap();
         assert_eq!(e.calls, 2);
         // for the quadratic, fd along v is exact: coeff = <grad, v>
+        // (est.dirs row 0 is v; zip stops at d)
         let true_grad = vec![-1.0f32; d];
         let vdotg: f32 = true_grad
             .iter()
-            .zip(est.dir.iter())
+            .zip(est.dirs.iter())
             .map(|(a, b)| a * b)
             .sum();
         assert!(
@@ -236,6 +404,18 @@ mod tests {
             "coeff {} vs <g,v> {vdotg}",
             e.fd_coeff
         );
+    }
+
+    #[test]
+    fn central_k1_probe_matrix_is_plus_minus_v() {
+        let d = 8;
+        let mut est = CentralK1Estimator::new(GaussianSampler::new(d, 3), 1e-3);
+        let batch = est.propose().unwrap();
+        assert_eq!(batch.k, 2);
+        assert_eq!(batch.dirs.len(), 2 * d);
+        for i in 0..d {
+            assert_eq!(batch.dirs[d + i], -batch.dirs[i]);
+        }
     }
 
     #[test]
@@ -253,6 +433,84 @@ mod tests {
         let true_grad = vec![-1.0f32; d];
         let cos = cosine(&acc, &true_grad);
         assert!(cos > 0.9, "averaged estimate should align with grad, cos={cos}");
+    }
+
+    #[test]
+    fn propose_consume_split_matches_estimate() {
+        // Driving the two phases by hand (per-probe loss_dir dispatch)
+        // must produce the same estimate as the fused path with the same
+        // sampler stream.
+        let d = 16;
+        let k = 5;
+        let mut o1 = quad(d);
+        let mut fused = LdsdEstimator::new(
+            LdsdSampler::new(d, 11, LdsdConfig::default()),
+            1e-3,
+            k,
+        );
+        let mut g1 = vec![0.0f32; d];
+        let e1 = fused.estimate(&mut o1, &mut g1).unwrap();
+
+        let mut o2 = quad(d);
+        let mut split = LdsdEstimator::new(
+            LdsdSampler::new(d, 11, LdsdConfig::default()),
+            1e-3,
+            k,
+        );
+        let mut g2 = vec![0.0f32; d];
+        let losses = {
+            let batch = split.propose().unwrap();
+            (0..batch.k)
+                .map(|i| {
+                    o2.loss_dir(&batch.dirs[i * d..(i + 1) * d], batch.tau)
+                        .unwrap()
+                })
+                .collect::<Vec<f64>>()
+        };
+        let e2 = split.consume(&mut o2, &losses, &mut g2).unwrap();
+
+        assert_eq!(e1.selected, e2.selected);
+        assert_eq!(e1.calls, e2.calls);
+        assert_eq!(o1.oracle_calls(), o2.oracle_calls());
+        for (a, b) in g1.iter().zip(g2.iter()) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn consume_rejects_wrong_loss_count() {
+        let d = 8;
+        let mut o = quad(d);
+        let mut est = LdsdEstimator::new(
+            LdsdSampler::new(d, 1, LdsdConfig::default()),
+            1e-3,
+            3,
+        );
+        let mut g = vec![0.0f32; d];
+        let _ = est.propose().unwrap();
+        assert!(est.consume(&mut o, &[0.1, 0.2], &mut g).is_err());
+    }
+
+    #[test]
+    fn consume_requires_propose() {
+        // Combining without a propose (or twice per propose) would read a
+        // stale/zero probe matrix; both must be rejected.
+        let d = 8;
+        let mut o = quad(d);
+        let mut est = LdsdEstimator::new(
+            LdsdSampler::new(d, 1, LdsdConfig::default()),
+            1e-3,
+            3,
+        );
+        let mut g = vec![0.0f32; d];
+        let losses = [0.1f64, 0.2, 0.3];
+        assert!(est.consume(&mut o, &losses, &mut g).is_err());
+        let _ = est.propose().unwrap();
+        assert!(est.consume(&mut o, &losses, &mut g).is_ok());
+        assert!(
+            est.consume(&mut o, &losses, &mut g).is_err(),
+            "second consume for one propose must be rejected"
+        );
     }
 
     #[test]

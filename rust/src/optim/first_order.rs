@@ -7,9 +7,13 @@ use super::optimizers::BaseOptimizer;
 
 /// Plain first-order SGD (momentum optional) — identical math to ZoSgd but
 /// kept as a distinct type so the memory table can label FO vs ZO rows.
-pub struct FoSgd(pub super::ZoSgd);
+pub struct FoSgd(
+    /// The shared update rule.
+    pub super::ZoSgd,
+);
 
 impl FoSgd {
+    /// Build for dimensionality `d` with heavy-ball `momentum`.
     pub fn new(d: usize, momentum: f32) -> Self {
         Self(super::ZoSgd::new(d, momentum))
     }
@@ -30,9 +34,13 @@ impl BaseOptimizer for FoSgd {
 }
 
 /// First-order Adam.
-pub struct FoAdam(pub super::ZoAdaMM);
+pub struct FoAdam(
+    /// The shared update rule.
+    pub super::ZoAdaMM,
+);
 
 impl FoAdam {
+    /// Build for dimensionality `d` with standard betas (0.9, 0.999).
     pub fn new(d: usize) -> Self {
         Self(super::ZoAdaMM::new(d, 0.9, 0.999))
     }

@@ -18,8 +18,11 @@ use anyhow::Result;
 use crate::oracle::Oracle;
 use crate::rng::Rng;
 
+/// Seeded in-place central-difference SGD with O(1) estimator state.
 pub struct MezoSgd {
+    /// Finite-difference scale.
     pub tau: f32,
+    /// Learning rate used by [`MezoSgd::run`].
     pub lr: f32,
     /// momentumless by design: momentum would need an O(d) buffer and
     /// defeat the trick
@@ -27,15 +30,21 @@ pub struct MezoSgd {
     base_seed: u64,
 }
 
+/// Diagnostics of one fused MeZO step.
 #[derive(Clone, Debug)]
 pub struct MezoStepInfo {
+    /// f(x + tau z).
     pub loss_plus: f64,
+    /// f(x - tau z).
     pub loss_minus: f64,
+    /// The central-difference coefficient applied along z.
     pub fd_coeff: f64,
+    /// Oracle calls spent (always 2).
     pub calls: u64,
 }
 
 impl MezoSgd {
+    /// Build with finite-difference scale, learning rate and base seed.
     pub fn new(tau: f32, lr: f32, seed: u64) -> Self {
         Self { tau, lr, seed_counter: 0, base_seed: seed }
     }

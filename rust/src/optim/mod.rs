@@ -22,7 +22,7 @@ mod optimizers;
 pub use dgd::{DgdConfig, DgdRunner, DgdVariant};
 pub use estimator::{
     CentralK1Estimator, Estimate, ForwardAvgEstimator, GradEstimator,
-    LdsdEstimator,
+    LdsdEstimator, ProbeBatch,
 };
 pub use first_order::{FoAdam, FoSgd};
 pub use mezo::{MezoSgd, MezoStepInfo};

@@ -12,17 +12,20 @@ pub trait BaseOptimizer {
     /// Bytes of persistent optimizer state (memory-table accounting).
     fn state_bytes(&self) -> usize;
 
+    /// Short identifier used in labels.
     fn name(&self) -> &str;
 }
 
 /// SGD with optional heavy-ball momentum (the paper's ZO-SGD baseline).
 pub struct ZoSgd {
+    /// Heavy-ball coefficient (0 disables the momentum buffer).
     pub momentum: f32,
     buf: Vec<f32>,
     active: bool,
 }
 
 impl ZoSgd {
+    /// Build for dimensionality `d`; `momentum = 0` allocates no state.
     pub fn new(d: usize, momentum: f32) -> Self {
         let active = momentum != 0.0;
         Self { momentum, buf: if active { vec![0.0; d] } else { Vec::new() }, active }
@@ -53,8 +56,11 @@ impl BaseOptimizer for ZoSgd {
 
 /// ZO-AdaMM (Chen et al., 2019): Adam moments driven by ZO estimates.
 pub struct ZoAdaMM {
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator stabilizer.
     pub eps: f32,
     m: Vec<f32>,
     v: Vec<f32>,
@@ -62,6 +68,7 @@ pub struct ZoAdaMM {
 }
 
 impl ZoAdaMM {
+    /// Build for dimensionality `d` with the given moment decays.
     pub fn new(d: usize, beta1: f32, beta2: f32) -> Self {
         Self { beta1, beta2, eps: 1e-8, m: vec![0.0; d], v: vec![0.0; d], t: 0 }
     }
@@ -93,12 +100,14 @@ impl BaseOptimizer for ZoAdaMM {
 /// JAGUAR SignSGD (Veprikov et al. 2024 / Petrov et al. 2025): coordinate
 /// momentum h = beta h + (1 - beta) g, update x -= lr * sign(h).
 pub struct JaguarSignSgd {
+    /// Coordinate-momentum decay.
     pub beta: f32,
     h: Vec<f32>,
     sgn: Vec<f32>,
 }
 
 impl JaguarSignSgd {
+    /// Build for dimensionality `d` with momentum decay `beta`.
     pub fn new(d: usize, beta: f32) -> Self {
         Self { beta, h: vec![0.0; d], sgn: vec![0.0; d] }
     }

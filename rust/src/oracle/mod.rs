@@ -7,10 +7,13 @@
 //!   pass of the model at `x + scale * dir`).
 //! * [`QuadraticOracle`], [`LinRegOracle`], [`LogRegOracle`] — closed-form
 //!   substrates for tests, the Fig. 2 toy experiment, and fast ablations.
+//!   Each overrides [`Oracle::loss_k`] with a vectorized batch evaluation
+//!   so the batched estimation path is exercised (and benchmarkable) even
+//!   without PJRT artifacts.
 //!
 //! Every call increments an oracle-call counter: the paper's §5.1
 //! comparisons are at *fixed oracle budget*, so accounting lives at this
-//! boundary and is exact by construction.
+//! boundary and is exact by construction (DESIGN.md §5).
 
 mod closed_form;
 mod pjrt;
@@ -18,7 +21,7 @@ mod pjrt;
 pub use closed_form::{LinRegOracle, LogRegOracle, QuadraticOracle};
 pub use pjrt::{read_f32_bin as read_params_bin, PjrtOracle};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::Batch;
 
@@ -37,9 +40,20 @@ pub trait Oracle {
     fn loss_dir(&mut self, dir: &[f32], scale: f32) -> Result<f64>;
 
     /// Losses at `x + tau * dirs[i]` for i in 0..k (dirs row-major K x d).
-    /// Default implementation loops `loss_dir`; the PJRT oracle overrides
-    /// it with the fused `loss_k` artifact (one dispatch for K probes).
+    ///
+    /// This is the batched K-probe entry point the estimators' two-phase
+    /// `propose`/`consume` flow dispatches through: one call evaluates the
+    /// whole probe matrix.  The PJRT oracle overrides it with the fused
+    /// `loss_k` artifact (one device dispatch for K probes); the
+    /// closed-form oracles override it with vectorized host loops.  The
+    /// default implementation loops [`Oracle::loss_dir`].
+    ///
+    /// `k == 0` is a caller bug (an empty probe matrix cannot produce an
+    /// estimate) and returns an error rather than a silently empty vector.
     fn loss_k(&mut self, dirs: &[f32], k: usize, tau: f32) -> Result<Vec<f64>> {
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
         let d = self.dim();
         assert_eq!(dirs.len(), k * d, "dirs must be K x d");
         (0..k).map(|i| self.loss_dir(&dirs[i * d..(i + 1) * d], tau)).collect()
@@ -55,6 +69,7 @@ pub trait Oracle {
     /// Total forward evaluations so far (budget accounting).
     fn oracle_calls(&self) -> u64;
 
+    /// Short identifier used in labels and error messages.
     fn name(&self) -> &str;
 }
 
@@ -63,4 +78,73 @@ pub trait Oracle {
 pub trait GradOracle: Oracle {
     /// out = grad f(x); returns f(x).
     fn grad(&mut self, out: &mut [f32]) -> Result<f64>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal oracle that relies on the *default* `loss_k` (unlike the
+    /// closed-form oracles, which override it).
+    struct SumOracle {
+        x: Vec<f32>,
+        calls: u64,
+    }
+
+    impl Oracle for SumOracle {
+        fn dim(&self) -> usize {
+            self.x.len()
+        }
+
+        fn set_batch(&mut self, _batch: &Batch) -> Result<()> {
+            Ok(())
+        }
+
+        fn loss_dir(&mut self, dir: &[f32], scale: f32) -> Result<f64> {
+            self.calls += 1;
+            Ok(self
+                .x
+                .iter()
+                .zip(dir.iter())
+                .map(|(a, b)| (*a + scale * *b) as f64)
+                .sum())
+        }
+
+        fn params(&self) -> &[f32] {
+            &self.x
+        }
+
+        fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()> {
+            f(&mut self.x);
+            Ok(())
+        }
+
+        fn oracle_calls(&self) -> u64 {
+            self.calls
+        }
+
+        fn name(&self) -> &str {
+            "sum"
+        }
+    }
+
+    #[test]
+    fn default_loss_k_rejects_k_zero() {
+        let mut o = SumOracle { x: vec![1.0; 4], calls: 0 };
+        let err = o.loss_k(&[], 0, 0.1).unwrap_err();
+        assert!(err.to_string().contains("k must be >= 1"), "{err}");
+        assert_eq!(o.oracle_calls(), 0, "a rejected call must not be charged");
+    }
+
+    #[test]
+    fn default_loss_k_matches_loss_dir_loop() {
+        let mut o = SumOracle { x: vec![1.0, 2.0], calls: 0 };
+        let dirs = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let batched = o.loss_k(&dirs, 3, 0.5).unwrap();
+        assert_eq!(o.oracle_calls(), 3);
+        let looped: Vec<f64> = (0..3)
+            .map(|i| o.loss_dir(&dirs[i * 2..(i + 1) * 2], 0.5).unwrap())
+            .collect();
+        assert_eq!(batched, looped);
+    }
 }

@@ -19,6 +19,8 @@ use crate::runtime::{Arg, DeviceBuffer, Executable, Runtime};
 
 use super::Oracle;
 
+/// Loss oracle backed by AOT-compiled transformer graphs executed via
+/// PJRT (requires the `pjrt` feature and built artifacts at runtime).
 pub struct PjrtOracle {
     rt: Runtime,
     entry: ModelEntry,
@@ -75,10 +77,12 @@ impl PjrtOracle {
         })
     }
 
+    /// The train mode this oracle perturbs (ft or lora).
     pub fn mode(&self) -> TrainMode {
         self.mode
     }
 
+    /// The manifest entry this oracle was built from.
     pub fn model(&self) -> &ModelEntry {
         &self.entry
     }
@@ -174,6 +178,9 @@ impl Oracle for PjrtOracle {
     }
 
     fn loss_k(&mut self, dirs: &[f32], k: usize, tau: f32) -> Result<Vec<f64>> {
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
         let d = self.dim();
         assert_eq!(dirs.len(), k * d, "dirs must be K x d");
         // the fused artifact is compiled for a fixed K

@@ -9,6 +9,7 @@ use crate::rng::Rng;
 
 /// A generator of random test inputs.
 pub trait Gen<T> {
+    /// Produce one random value.
     fn generate(&self, rng: &mut Rng) -> T;
     /// Propose smaller variants of a failing value (best-effort shrink).
     fn shrink(&self, value: &T) -> Vec<T> {
@@ -57,10 +58,13 @@ fn fxhash(s: &str) -> u64 {
     h
 }
 
-/// f32 vectors with entries in [-scale, scale].
+/// f32 vectors with entries in `[-scale, scale]`.
 pub struct VecF32 {
+    /// Shortest vector to generate.
     pub min_len: usize,
+    /// Longest vector to generate.
     pub max_len: usize,
+    /// Entry magnitude bound.
     pub scale: f32,
 }
 
@@ -85,7 +89,10 @@ impl Gen<Vec<f32>> for VecF32 {
 }
 
 /// Pairs of equal-length vectors.
-pub struct VecPairF32(pub VecF32);
+pub struct VecPairF32(
+    /// Generator for each component.
+    pub VecF32,
+);
 
 impl Gen<(Vec<f32>, Vec<f32>)> for VecPairF32 {
     fn generate(&self, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
@@ -108,7 +115,12 @@ impl Gen<(Vec<f32>, Vec<f32>)> for VecPairF32 {
 }
 
 /// Uniform u64 ranges (for seeds / indices).
-pub struct U64Range(pub u64, pub u64);
+pub struct U64Range(
+    /// Inclusive lower bound.
+    pub u64,
+    /// Inclusive upper bound.
+    pub u64,
+);
 
 impl Gen<u64> for U64Range {
     fn generate(&self, rng: &mut Rng) -> u64 {

@@ -13,12 +13,16 @@ use crate::jsonio::{to_string_pretty, Json};
 /// A rectangular markdown table.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Table heading (empty string suppresses it).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Cell rows (each the same arity as `headers`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// New empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -27,11 +31,13 @@ impl Table {
         }
     }
 
+    /// Append a row (arity-checked).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Render as a github-flavored markdown table.
     pub fn to_markdown(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -64,6 +70,7 @@ impl Table {
         out
     }
 
+    /// Print the markdown rendering to stdout.
     pub fn print(&self) {
         print!("{}", self.to_markdown());
     }
@@ -103,19 +110,22 @@ pub fn write_json(path: &Path, value: &Json) -> Result<()> {
     Ok(())
 }
 
-/// Helpers for building Json values tersely.
+/// Terse Json number builder.
 pub fn jnum(x: f64) -> Json {
     Json::Num(x)
 }
 
+/// Terse Json string builder.
 pub fn jstr(s: &str) -> Json {
     Json::Str(s.to_string())
 }
 
+/// Terse Json object builder from (key, value) pairs.
 pub fn jobj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Terse Json number-array builder.
 pub fn jarr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
 }

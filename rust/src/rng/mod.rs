@@ -28,10 +28,12 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a new stream (full 256-bit state derived via SplitMix64).
     pub fn new(seed: u64) -> Self {
         Self { core: Xoshiro256::seeded(seed), normal: Normal::new() }
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.core.next_u64()

@@ -1,11 +1,13 @@
 //! Box–Muller Gaussian sampling with a cached spare variate.
 
+/// Box–Muller transform state (caches the second variate of each pair).
 #[derive(Clone, Debug, Default)]
 pub struct Normal {
     spare: Option<f64>,
 }
 
 impl Normal {
+    /// New transform state with no cached spare.
     pub fn new() -> Self {
         Self { spare: None }
     }

@@ -4,18 +4,22 @@
 //! corpus is generated statelessly from (seed, example-index) on both sides
 //! of the language boundary and golden-tested for equality.
 
+/// Weyl-sequence increment (2^64 / golden ratio) shared with python.
 pub const GOLDEN_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
 
+/// The SplitMix64 generator (Steele et al.), 64-bit state.
 #[derive(Clone, Copy, Debug)]
 pub struct SplitMix64 {
     state: u64,
 }
 
 impl SplitMix64 {
+    /// Start a stream at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(GOLDEN_GAMMA);

@@ -2,6 +2,7 @@
 
 use super::splitmix::SplitMix64;
 
+/// The xoshiro256++ generator (Blackman & Vigna), 256-bit state.
 #[derive(Clone, Debug)]
 pub struct Xoshiro256 {
     s: [u64; 4],
@@ -15,6 +16,7 @@ impl Xoshiro256 {
         Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
     }
 
+    /// Next 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]

@@ -4,26 +4,35 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 /// A host-side view of one executable argument.
 ///
 /// Shapes follow the artifact manifest; scalars are rank-0.
 #[derive(Clone, Copy, Debug)]
 pub enum ArgValue<'a> {
+    /// f32 array view with dims.
     F32(&'a [f32], &'a [usize]),
+    /// i32 array view with dims.
     I32(&'a [i32], &'a [usize]),
+    /// rank-0 f32.
     ScalarF32(f32),
 }
 
 /// A device-resident buffer (wrapper so callers never touch xla types).
 pub struct DeviceBuffer {
     pub(crate) buf: xla::PjRtBuffer,
+    /// Element count of the uploaded array.
     pub elements: usize,
 }
 
 /// One argument for the hot-path entry point: either already on device or a
 /// host view to upload for this call.
 pub enum Arg<'a> {
+    /// Pre-uploaded device buffer (no transfer this call).
     Device(&'a DeviceBuffer),
+    /// Host view uploaded for this call only.
     Host(ArgValue<'a>),
 }
 
@@ -54,6 +63,7 @@ pub(crate) fn upload_i32(
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     client: xla::PjRtClient,
+    /// Artifact name (runtime cache key), used in error messages.
     pub name: String,
 }
 

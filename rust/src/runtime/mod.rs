@@ -16,6 +16,12 @@
 
 mod exec;
 
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla_stub;
+
+#[cfg(not(feature = "pjrt"))]
+use xla_stub as xla;
+
 pub use exec::{Arg, ArgValue, DeviceBuffer, Executable};
 
 use std::collections::HashMap;
@@ -49,10 +55,12 @@ impl Runtime {
         })
     }
 
+    /// The artifact directory this runtime loads from.
     pub fn artifact_dir(&self) -> &Path {
         &self.inner.dir
     }
 
+    /// PJRT platform name ("cpu", ...).
     pub fn platform(&self) -> String {
         self.inner.client.platform_name()
     }

@@ -37,20 +37,24 @@ pub fn expected_alignment_mc(
 /// training trajectory (the Fig. 2 left panel series).
 #[derive(Clone, Debug, Default)]
 pub struct AlignmentTracker {
+    /// All recorded cosines in order.
     pub series: Vec<f32>,
 }
 
 impl AlignmentTracker {
+    /// Empty tracker.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record cos(estimate, true_grad) and return it.
     pub fn record(&mut self, estimate: &[f32], true_grad: &[f32]) -> f32 {
         let c = cosine(estimate, true_grad);
         self.series.push(c);
         c
     }
 
+    /// Most recently recorded alignment.
     pub fn last(&self) -> Option<f32> {
         self.series.last().copied()
     }

@@ -13,6 +13,7 @@ pub struct GaussianSampler {
 }
 
 impl GaussianSampler {
+    /// Build for dimensionality `d` with a seeded stream.
     pub fn new(d: usize, seed: u64) -> Self {
         Self { rng: Rng::new(seed), d }
     }
@@ -46,6 +47,7 @@ pub struct SphereSampler {
 }
 
 impl SphereSampler {
+    /// Build for dimensionality `d` with a seeded stream.
     pub fn new(d: usize, seed: u64) -> Self {
         Self { rng: Rng::new(seed), d }
     }
@@ -89,6 +91,7 @@ pub struct CoordinateSampler {
 }
 
 impl CoordinateSampler {
+    /// Build for dimensionality `d` with a seeded stream.
     pub fn new(d: usize, seed: u64) -> Self {
         Self { rng: Rng::new(seed), d, scale: (d as f32).sqrt() }
     }

@@ -20,10 +20,11 @@
 //! literal paper update; the `fig3` ablation bench sweeps both.
 
 use crate::rng::Rng;
-use crate::tensor::{axpy, nrm2, scal};
+use crate::tensor::{axpy_k, nrm2, scal};
 
 use super::DirectionSampler;
 
+/// Hyperparameters of the LDSD policy (Algorithm 2 defaults in §A.2).
 #[derive(Clone, Debug)]
 pub struct LdsdConfig {
     /// Std-dev of the sampling distribution (paper's epsilon; §A.2 uses 1).
@@ -58,6 +59,8 @@ impl Default for LdsdConfig {
     }
 }
 
+/// The learnable direction policy: v ~ N(mu, eps^2 I) with REINFORCE
+/// updates of mu from observed probe losses.
 pub struct LdsdSampler {
     cfg: LdsdConfig,
     mu: Vec<f32>,
@@ -67,6 +70,8 @@ pub struct LdsdSampler {
 }
 
 impl LdsdSampler {
+    /// Build for dimensionality `d`; mu0 is random isotropic at
+    /// `cfg.init_norm` (which must be positive — Theorem 1).
     pub fn new(d: usize, seed: u64, cfg: LdsdConfig) -> Self {
         assert!(cfg.eps > 0.0, "eps must be positive");
         assert!(cfg.init_norm > 0.0, "mu0 = 0 is a saddle (Theorem 1)");
@@ -87,10 +92,12 @@ impl LdsdSampler {
         self.mu.copy_from_slice(mean);
     }
 
+    /// The policy configuration.
     pub fn config(&self) -> &LdsdConfig {
         &self.cfg
     }
 
+    /// Current ||mu||.
     pub fn mu_norm(&self) -> f32 {
         nrm2(&self.mu)
     }
@@ -135,15 +142,15 @@ impl DirectionSampler for LdsdSampler {
         //   mu_new = (1 - coef * wsum) * mu + coef * sum_i w_i dirs_i.
         // Both baselines make the advantages sum to zero analytically
         // (wsum ~ 0), but we keep the exact form: scale mu first, then
-        // accumulate the direction contributions.
+        // accumulate the direction contributions — reusing the estimator's
+        // probe matrix in one fused blocked pass (`axpy_k`) instead of K
+        // separate sweeps of mu.
         let wsum: f32 = self.weights.iter().sum();
         scal(1.0 - coef * wsum, &mut self.mu);
-        for i in 0..k {
-            let w = self.weights[i];
-            if w != 0.0 {
-                axpy(coef * w, &dirs[i * d..(i + 1) * d], &mut self.mu);
-            }
+        for w in self.weights.iter_mut() {
+            *w *= coef;
         }
+        axpy_k(&self.weights, dirs, &mut self.mu);
         if self.cfg.renormalize {
             let n = nrm2(&self.mu);
             if n > f32::MIN_POSITIVE {
@@ -172,7 +179,7 @@ impl DirectionSampler for LdsdSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensor::{cosine, dot};
+    use crate::tensor::{axpy, cosine, dot};
 
     #[test]
     fn init_norm_respected() {

@@ -37,6 +37,7 @@ pub trait DirectionSampler {
     /// Bytes of persistent sampler state (memory-table accounting).
     fn state_bytes(&self) -> usize;
 
+    /// Short identifier used in labels.
     fn name(&self) -> &str;
 
     /// The learned policy mean, if any (diagnostics; LDSD only).

@@ -14,21 +14,27 @@ pub use vector::Vector;
 /// A dense row-major matrix view used by the toy oracles (linreg / logreg).
 #[derive(Clone, Debug)]
 pub struct Matrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage (rows x cols).
     pub data: Vec<f32>,
 }
 
 impl Matrix {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap row-major storage (size-checked).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "matrix size mismatch");
         Self { rows, cols, data }
     }
 
+    /// Borrow row `r`.
     #[inline]
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]

@@ -4,8 +4,25 @@
 //! coordinator uses them for sampler/optimizer state updates (O(d) or
 //! O(K d) per step).  Written as simple indexed loops over chunks so LLVM
 //! auto-vectorizes them; `perf_hotpath` benches track their throughput.
+//!
+//! The K-probe batching refactor adds two blocked kernels operating on the
+//! row-major K x d probe matrix directly:
+//! * [`axpy_k`] — fused multi-direction axpy, `y += sum_i a[i] * rows[i]`,
+//!   one blocked pass instead of K full sweeps of `y`;
+//! * [`probe_combine`] — the gemv-style probe reduce `g = sum_i w[i] *
+//!   dirs[i]` used by the estimators' `consume` phase and the LDSD
+//!   REINFORCE update.
 
-/// y += a * x
+/// `y += a * x`
+///
+/// ```
+/// use zo_ldsd::tensor::axpy;
+///
+/// let x = [1.0f32, 2.0, 3.0];
+/// let mut y = [10.0f32, 20.0, 30.0];
+/// axpy(2.0, &x, &mut y);
+/// assert_eq!(y, [12.0, 24.0, 36.0]);
+/// ```
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
@@ -14,7 +31,7 @@ pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// out = x + a * d  (out may not alias x or d)
+/// `out = x + a * d`  (out may not alias x or d)
 #[inline]
 pub fn axpy_into(out: &mut [f32], x: &[f32], a: f32, d: &[f32]) {
     debug_assert_eq!(x.len(), out.len());
@@ -24,10 +41,57 @@ pub fn axpy_into(out: &mut [f32], x: &[f32], a: f32, d: &[f32]) {
     }
 }
 
+/// Column-block size for the multi-row kernels: the `y`/`g` block stays in
+/// L1 while all K probe rows stream through it once.
+const BLOCK: usize = 1024;
+
+/// Fused multi-direction axpy over a row-major K x d matrix:
+/// `y += sum_i a[i] * xs[i*d .. (i+1)*d]` with `d = y.len()`.
+///
+/// Equivalent to K separate [`axpy`] calls, but blocked so each column
+/// block of `y` is loaded into cache once per step instead of K times —
+/// the difference dominates once `K * d` floats exceed L2.
+///
+/// ```
+/// use zo_ldsd::tensor::axpy_k;
+///
+/// let rows = [1.0f32, 0.0, 0.0, 1.0]; // 2 rows x d=2
+/// let mut y = [10.0f32, 10.0];
+/// axpy_k(&[2.0, -1.0], &rows, &mut y);
+/// assert_eq!(y, [12.0, 9.0]);
+/// ```
+pub fn axpy_k(a: &[f32], xs: &[f32], y: &mut [f32]) {
+    let d = y.len();
+    assert_eq!(xs.len(), a.len() * d, "xs must be K x d");
+    let mut start = 0usize;
+    while start < d {
+        let end = (start + BLOCK).min(d);
+        for (k, ak) in a.iter().enumerate() {
+            if *ak == 0.0 {
+                continue;
+            }
+            let row = &xs[k * d + start..k * d + end];
+            let yb = &mut y[start..end];
+            for (yi, xi) in yb.iter_mut().zip(row.iter()) {
+                *yi += *ak * *xi;
+            }
+        }
+        start = end;
+    }
+}
+
+/// `dot(x, y)` with an f64 accumulator (keeps alignment statistics stable
+/// for large d).
+///
+/// ```
+/// use zo_ldsd::tensor::dot;
+///
+/// assert_eq!(dot(&[3.0, 4.0], &[3.0, 4.0]), 25.0);
+/// assert_eq!(dot(&[1.0, 0.0], &[0.0, 1.0]), 0.0);
+/// ```
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
-    // accumulate in f64 to keep alignment statistics stable for large d
     let mut acc = 0.0f64;
     for (a, b) in x.iter().zip(y.iter()) {
         acc += (*a as f64) * (*b as f64);
@@ -35,6 +99,7 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     acc as f32
 }
 
+/// Euclidean norm `||x||` (f64 accumulator).
 #[inline]
 pub fn nrm2(x: &[f32]) -> f32 {
     let mut acc = 0.0f64;
@@ -44,7 +109,7 @@ pub fn nrm2(x: &[f32]) -> f32 {
     acc.sqrt() as f32
 }
 
-/// x *= a
+/// `x *= a`
 #[inline]
 pub fn scal(a: f32, x: &mut [f32]) {
     for v in x.iter_mut() {
@@ -52,7 +117,7 @@ pub fn scal(a: f32, x: &mut [f32]) {
     }
 }
 
-/// x /= ||x||; returns the norm.  Leaves x untouched (and returns 0) if the
+/// `x /= ||x||`; returns the norm.  Leaves x untouched (and returns 0) if the
 /// norm underflows.
 pub fn normalize(x: &mut [f32]) -> f32 {
     let n = nrm2(x);
@@ -74,17 +139,28 @@ pub fn cosine(x: &[f32], y: &[f32]) -> f32 {
     (dot(x, y) / (nx as f64 * ny as f64) as f32).clamp(-1.0, 1.0)
 }
 
-/// out = sum_i w[i] * rows[i]  where rows is a K x d row-major matrix.
-/// This is the REINFORCE mu-gradient reduce (Algorithm 2, line 6).
-pub fn weighted_row_sum(rows: &[f32], d: usize, w: &[f32], out: &mut [f32]) {
-    assert_eq!(rows.len(), w.len() * d, "rows must be K x d");
-    assert_eq!(out.len(), d);
-    out.iter_mut().for_each(|v| *v = 0.0);
-    for (k, wk) in w.iter().enumerate() {
-        if *wk != 0.0 {
-            axpy(*wk, &rows[k * d..(k + 1) * d], out);
-        }
-    }
+/// Probe-matrix reduce: `g = sum_i w[i] * dirs[i*d .. (i+1)*d]` over a
+/// row-major K x d direction matrix — a gemv (`dirs^T w`) written as a
+/// blocked loop.
+///
+/// This is the combine step of the batched K-probe estimation path: the
+/// finite-difference (or REINFORCE-advantage) weights of all K probes are
+/// applied to the shared direction matrix in one pass (Algorithm 2 lines
+/// 5-6).
+///
+/// ```
+/// use zo_ldsd::tensor::probe_combine;
+///
+/// let dirs = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0]; // 3 rows x d=2
+/// let mut g = [99.0f32, 99.0];
+/// probe_combine(&dirs, 2, &[1.0, 2.0, -1.0], &mut g);
+/// assert_eq!(g, [0.0, 1.0]);
+/// ```
+pub fn probe_combine(dirs: &[f32], d: usize, w: &[f32], g: &mut [f32]) {
+    assert_eq!(dirs.len(), w.len() * d, "dirs must be K x d");
+    assert_eq!(g.len(), d);
+    g.iter_mut().for_each(|v| *v = 0.0);
+    axpy_k(w, dirs, g);
 }
 
 /// Elementwise sign (0.0 stays 0.0) — used by JAGUAR SignSGD.
@@ -169,12 +245,44 @@ mod tests {
     }
 
     #[test]
-    fn weighted_row_sum_matches_manual() {
+    fn probe_combine_matches_manual() {
         let rows = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0]; // 3 rows x d=2
         let w = [1.0f32, 2.0, -1.0];
         let mut out = [0.0f32; 2];
-        weighted_row_sum(&rows, 2, &w, &mut out);
+        probe_combine(&rows, 2, &w, &mut out);
         assert_eq!(out, [0.0, 1.0]);
+    }
+
+    #[test]
+    fn axpy_k_matches_k_axpys() {
+        // axpy_k over a K x d matrix must agree with K scalar axpy calls,
+        // including across the BLOCK boundary.
+        let d = BLOCK + 37;
+        let k = 4;
+        let rows: Vec<f32> = (0..k * d).map(|i| ((i % 13) as f32) - 6.0).collect();
+        let a = [0.5f32, -1.0, 0.0, 2.0];
+        let mut fused = vec![1.0f32; d];
+        let mut looped = vec![1.0f32; d];
+        axpy_k(&a, &rows, &mut fused);
+        for i in 0..k {
+            axpy(a[i], &rows[i * d..(i + 1) * d], &mut looped);
+        }
+        assert_eq!(fused, looped);
+    }
+
+    #[test]
+    fn probe_combine_zeroes_output_first() {
+        let dirs = [1.0f32, 1.0];
+        let mut g = [5.0f32, -5.0];
+        probe_combine(&dirs, 2, &[3.0], &mut g);
+        assert_eq!(g, [3.0, 3.0]);
+    }
+
+    #[test]
+    fn probe_combine_empty_k_gives_zero() {
+        let mut g = [7.0f32; 3];
+        probe_combine(&[], 3, &[], &mut g);
+        assert_eq!(g, [0.0; 3]);
     }
 
     #[test]

@@ -2,54 +2,70 @@
 
 use super::ops;
 
+/// Owned f32 vector wrapper with convenience math.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Vector(pub Vec<f32>);
+pub struct Vector(
+    /// The underlying storage.
+    pub Vec<f32>,
+);
 
 impl Vector {
+    /// All-zero vector of length `n`.
     pub fn zeros(n: usize) -> Self {
         Self(vec![0.0; n])
     }
 
+    /// Wrap an existing Vec.
     pub fn from_vec(v: Vec<f32>) -> Self {
         Self(v)
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.0.len()
     }
 
+    /// True for a zero-length vector.
     pub fn is_empty(&self) -> bool {
         self.0.is_empty()
     }
 
+    /// Borrow as a slice.
     pub fn as_slice(&self) -> &[f32] {
         &self.0
     }
 
+    /// Borrow as a mutable slice.
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
         &mut self.0
     }
 
+    /// Inner product with `other`.
     pub fn dot(&self, other: &Vector) -> f32 {
         ops::dot(&self.0, &other.0)
     }
 
+    /// Euclidean norm.
     pub fn norm(&self) -> f32 {
         ops::nrm2(&self.0)
     }
 
+    /// In-place scaling by `a`.
     pub fn scale(&mut self, a: f32) {
         ops::scal(a, &mut self.0);
     }
 
+    /// `self += a * other`.
     pub fn add_scaled(&mut self, a: f32, other: &Vector) {
         ops::axpy(a, &other.0, &mut self.0);
     }
 
+    /// Normalize in place; returns the previous norm.
     pub fn normalize(&mut self) -> f32 {
         ops::normalize(&mut self.0)
     }
 
+    /// Cosine similarity with `other`.
     pub fn cosine(&self, other: &Vector) -> f32 {
         ops::cosine(&self.0, &other.0)
     }

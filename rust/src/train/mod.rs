@@ -3,13 +3,21 @@
 //! Comparisons are *budget-fair*: every method gets the same number of
 //! forward evaluations, so a K=1 central-difference baseline runs 3x the
 //! iterations of a K=5 method.  The loop charges each step by the
-//! estimator's actual oracle calls and stops when the budget is exhausted.
+//! estimator's actual oracle calls and stops when the budget is exhausted
+//! (DESIGN.md §5).
+//!
+//! The loop drives the estimator through its two-phase `propose`/`consume`
+//! flow: with [`ProbeDispatch::Batched`] (the default) the whole K x d
+//! probe matrix is evaluated in one [`Oracle::loss_k`] dispatch;
+//! [`ProbeDispatch::PerProbe`] issues K separate `loss_dir` calls instead
+//! — same numbers, same accounting, kept for A/B throughput benchmarking
+//! (`perf_hotpath`).
 
 mod schedule;
 
 pub use schedule::{ConstantLr, CosineLr, LrSchedule};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::Corpus;
 use crate::eval::Evaluator;
@@ -25,9 +33,13 @@ use crate::sampler::{
 /// Which direction distribution feeds the estimator.
 #[derive(Clone, Debug)]
 pub enum SamplerKind {
+    /// v ~ N(0, I) (MeZO / ZO-SGD baseline).
     Gaussian,
+    /// v uniform on the unit sphere.
     Sphere,
+    /// one-hot coordinate directions scaled by sqrt(d).
     Coordinate,
+    /// the paper's learnable policy v ~ N(mu, eps^2 I).
     Ldsd(LdsdConfig),
 }
 
@@ -37,13 +49,56 @@ pub enum EstimatorKind {
     /// central difference, one direction, 2 calls/step
     CentralK1(SamplerKind),
     /// forward-difference MC average over K directions, K+1 calls/step
-    ForwardAvg { k: usize, sampler: SamplerKind },
+    ForwardAvg {
+        /// probe count K
+        k: usize,
+        /// direction distribution
+        sampler: SamplerKind,
+    },
     /// Algorithm 2: best-of-K selection + central difference + policy
     /// feedback, K+1 calls/step
-    BestOfK { k: usize, sampler: SamplerKind },
+    BestOfK {
+        /// candidate count K
+        k: usize,
+        /// direction distribution
+        sampler: SamplerKind,
+    },
+}
+
+/// How the probe matrix of one estimation step reaches the oracle.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ProbeDispatch {
+    /// One fused [`Oracle::loss_k`] dispatch for the whole K x d probe
+    /// matrix (default; the PJRT oracle turns this into a single device
+    /// dispatch, the closed-form oracles into one vectorized host pass).
+    #[default]
+    Batched,
+    /// K separate `loss_dir` dispatches — the pre-batching behavior, kept
+    /// for A/B benchmarking.  Identical numbers and oracle accounting.
+    PerProbe,
+}
+
+impl ProbeDispatch {
+    /// Parse from a CLI string ("batched" | "per-probe").
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "batched" => Ok(ProbeDispatch::Batched),
+            "per-probe" | "per_probe" | "perprobe" => Ok(ProbeDispatch::PerProbe),
+            other => bail!("unknown probe dispatch '{other}' (batched|per-probe)"),
+        }
+    }
+
+    /// Label fragment for tables and bench rows.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProbeDispatch::Batched => "batched",
+            ProbeDispatch::PerProbe => "per_probe",
+        }
+    }
 }
 
 impl EstimatorKind {
+    /// Oracle calls one step of this estimator consumes.
     pub fn calls_per_step(&self) -> u64 {
         match self {
             EstimatorKind::CentralK1(_) => 2,
@@ -52,6 +107,7 @@ impl EstimatorKind {
         }
     }
 
+    /// Human-readable label ("bestofk5/ldsd" etc.).
     pub fn label(&self) -> String {
         match self {
             EstimatorKind::CentralK1(s) => format!("central_k1/{}", sampler_label(s)),
@@ -106,6 +162,7 @@ impl crate::sampler::DirectionSampler for Box<dyn crate::sampler::DirectionSampl
     }
 }
 
+/// Instantiate the estimator described by `kind` for dimensionality `d`.
 pub fn build_estimator(
     kind: &EstimatorKind,
     d: usize,
@@ -125,19 +182,29 @@ pub fn build_estimator(
     }
 }
 
+/// Everything one training run needs (estimator x optimizer x budget).
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Probe layout + direction distribution.
     pub estimator: EstimatorKind,
+    /// Base-optimizer name (see `optimizers_by_name`).
     pub optimizer: String,
+    /// Base learning rate for the x-update.
     pub lr: f32,
+    /// Finite-difference scale tau.
     pub tau: f32,
     /// Total forward-evaluation budget (the §5.1 fairness unit).
     pub budget: u64,
     /// Evaluate every this many oracle calls (0 = only at the end).
     pub eval_every: u64,
+    /// Test batches per evaluation point.
     pub eval_batches: usize,
+    /// Cosine-decay the learning rate over the planned step count.
     pub cosine_schedule: bool,
+    /// Seed for samplers/estimators.
     pub seed: u64,
+    /// Fused vs per-probe oracle dispatch (numerically equivalent).
+    pub probe_dispatch: ProbeDispatch,
 }
 
 impl TrainConfig {
@@ -153,6 +220,7 @@ impl TrainConfig {
             eval_batches: 8,
             cosine_schedule: true,
             seed: 0,
+            probe_dispatch: ProbeDispatch::Batched,
         }
     }
 
@@ -168,6 +236,7 @@ impl TrainConfig {
             eval_batches: 8,
             cosine_schedule: true,
             seed: 0,
+            probe_dispatch: ProbeDispatch::Batched,
         }
     }
 
@@ -194,6 +263,7 @@ impl TrainConfig {
             eval_batches: 8,
             cosine_schedule: true,
             seed: 0,
+            probe_dispatch: ProbeDispatch::Batched,
         }
     }
 }
@@ -205,17 +275,24 @@ pub struct TrainOutcome {
     pub loss_curve: Vec<(u64, f64)>,
     /// (oracle calls, test accuracy) at each eval point
     pub acc_curve: Vec<(u64, f64)>,
+    /// Test accuracy at the end of the run.
     pub final_accuracy: f64,
+    /// Best test accuracy seen at any eval point.
     pub best_accuracy: f64,
+    /// Optimizer steps taken.
     pub steps: u64,
+    /// Forward evaluations consumed.
     pub oracle_calls: u64,
+    /// Wall-clock duration of the run.
     pub wall_seconds: f64,
+    /// Human-readable method label.
     pub label: String,
 }
 
 /// The training loop: estimator x optimizer over a corpus stream, charged
 /// by oracle calls.
 pub struct Trainer<O: Oracle> {
+    /// The run configuration (immutable during the run).
     pub cfg: TrainConfig,
     oracle: O,
     corpus: Corpus,
@@ -225,6 +302,7 @@ pub struct Trainer<O: Oracle> {
 }
 
 impl<O: Oracle> Trainer<O> {
+    /// Wire up estimator + optimizer for `oracle`'s dimensionality.
     pub fn new(cfg: TrainConfig, oracle: O, corpus: Corpus) -> Result<Self> {
         let d = oracle.dim();
         let estimator = build_estimator(&cfg.estimator, d, cfg.tau, cfg.seed);
@@ -232,16 +310,43 @@ impl<O: Oracle> Trainer<O> {
         Ok(Self { cfg, oracle, corpus, estimator, optimizer, g: vec![0.0; d] })
     }
 
+    /// Read access to the oracle (budget inspection).
     pub fn oracle(&self) -> &O {
         &self.oracle
     }
 
+    /// Mutable access to the oracle (checkpoint restore).
     pub fn oracle_mut(&mut self) -> &mut O {
         &mut self.oracle
     }
 
+    /// The estimator driving this run.
     pub fn estimator(&self) -> &dyn GradEstimator {
         self.estimator.as_ref()
+    }
+
+    /// One estimation step under the configured probe dispatch.
+    fn estimate_step(&mut self) -> Result<crate::optim::Estimate> {
+        match self.cfg.probe_dispatch {
+            ProbeDispatch::Batched => {
+                self.estimator.estimate(&mut self.oracle, &mut self.g)
+            }
+            ProbeDispatch::PerProbe => {
+                let d = self.oracle.dim();
+                let losses = {
+                    let batch = self.estimator.propose()?;
+                    let mut ls = Vec::with_capacity(batch.k);
+                    for i in 0..batch.k {
+                        ls.push(self.oracle.loss_dir(
+                            &batch.dirs[i * d..(i + 1) * d],
+                            batch.tau,
+                        )?);
+                    }
+                    ls
+                };
+                self.estimator.consume(&mut self.oracle, &losses, &mut self.g)
+            }
+        }
     }
 
     /// Run until the oracle budget is exhausted.  `eval` computes test
@@ -267,8 +372,6 @@ impl<O: Oracle> Trainer<O> {
         let start_calls = self.oracle.oracle_calls();
         let mut step = 0u64;
         let mut next_eval = self.cfg.eval_every;
-        let batch_size = self.corpus.spec.seq; // placeholder; actual batch from artifact
-        let _ = batch_size;
 
         loop {
             let used = self.oracle.oracle_calls() - start_calls;
@@ -277,7 +380,7 @@ impl<O: Oracle> Trainer<O> {
             }
             let batch = self.corpus.train_batch(step, self.train_batch_size());
             self.oracle.set_batch(&batch)?;
-            let est = self.estimator.estimate(&mut self.oracle, &mut self.g)?;
+            let est = self.estimate_step()?;
             let lr = schedule.lr(step);
             // apply the base-optimizer update through the oracle so any
             // device-resident copy is invalidated exactly once per step
@@ -384,6 +487,7 @@ mod tests {
             eval_batches: 1,
             cosine_schedule: false,
             seed: 1,
+            probe_dispatch: ProbeDispatch::Batched,
         };
         let mut t2 = Trainer::new(
             mk(EstimatorKind::CentralK1(SamplerKind::Gaussian)),
@@ -414,6 +518,44 @@ mod tests {
         let first = out.loss_curve.first().unwrap().1;
         let last = out.loss_curve.last().unwrap().1;
         assert!(last < first * 0.5, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn per_probe_dispatch_matches_batched() {
+        // Same seed, same estimator: the two dispatch modes must walk the
+        // same trajectory (same steps, same call accounting, and loss
+        // curves equal to float tolerance).
+        let mk = |dispatch: ProbeDispatch| TrainConfig {
+            cosine_schedule: false,
+            probe_dispatch: dispatch,
+            ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 600)
+        };
+        let mut tb = Trainer::new(mk(ProbeDispatch::Batched), quad(16), mini_corpus()).unwrap();
+        let mut tp = Trainer::new(mk(ProbeDispatch::PerProbe), quad(16), mini_corpus()).unwrap();
+        let ob = tb.run(None).unwrap();
+        let op = tp.run(None).unwrap();
+        assert_eq!(ob.steps, op.steps);
+        assert_eq!(ob.oracle_calls, op.oracle_calls);
+        // identical call axis everywhere; identical losses on step 1 (before
+        // f32 rounding differences can compound), co-descent at the end
+        for ((cb, _), (cp, _)) in ob.loss_curve.iter().zip(op.loss_curve.iter()) {
+            assert_eq!(cb, cp);
+        }
+        let (b0, p0) = (ob.loss_curve[0].1, op.loss_curve[0].1);
+        assert!((b0 - p0).abs() <= 1e-6 * (1.0 + b0.abs()), "{b0} vs {p0}");
+        let (bn, pn) = (
+            ob.loss_curve.last().unwrap().1,
+            op.loss_curve.last().unwrap().1,
+        );
+        assert!(bn < b0 * 0.9 && pn < p0 * 0.9, "both modes must descend");
+    }
+
+    #[test]
+    fn probe_dispatch_parse_roundtrip() {
+        assert_eq!(ProbeDispatch::parse("batched").unwrap(), ProbeDispatch::Batched);
+        assert_eq!(ProbeDispatch::parse("per-probe").unwrap(), ProbeDispatch::PerProbe);
+        assert!(ProbeDispatch::parse("warp").is_err());
+        assert_eq!(ProbeDispatch::default(), ProbeDispatch::Batched);
     }
 
     #[test]

@@ -1,10 +1,16 @@
 //! Learning-rate schedules (§A.2: cosine schedule for gamma_x).
 
+/// Maps an optimizer step index to a learning rate.
 pub trait LrSchedule {
+    /// Learning rate for step `step`.
     fn lr(&self, step: u64) -> f32;
 }
 
-pub struct ConstantLr(pub f32);
+/// A constant learning rate.
+pub struct ConstantLr(
+    /// The rate.
+    pub f32,
+);
 
 impl LrSchedule for ConstantLr {
     fn lr(&self, _step: u64) -> f32 {
@@ -19,6 +25,7 @@ pub struct CosineLr {
 }
 
 impl CosineLr {
+    /// Decay from `base` to ~0 over `total` steps.
     pub fn new(base: f32, total: u64) -> Self {
         Self { base, total: total.max(1) }
     }

@@ -21,6 +21,10 @@ use zo_ldsd::rng::SplitMix64;
 use zo_ldsd::runtime::{ArgValue, Runtime};
 
 fn artifact_dir() -> Option<PathBuf> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the pjrt feature (stub runtime)");
+        return None;
+    }
     let candidates = ["artifacts", "../artifacts"];
     for c in candidates {
         let p = Path::new(c);

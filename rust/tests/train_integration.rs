@@ -7,14 +7,14 @@ use zo_ldsd::data::SyntheticRegression;
 use zo_ldsd::eval::Evaluator;
 use zo_ldsd::oracle::{LinRegOracle, Oracle, PjrtOracle, QuadraticOracle};
 use zo_ldsd::runtime::Runtime;
-use zo_ldsd::train::{EstimatorKind, SamplerKind, TrainConfig, Trainer};
+use zo_ldsd::train::{EstimatorKind, ProbeDispatch, SamplerKind, TrainConfig, Trainer};
 
 fn mini_corpus() -> Corpus {
     Corpus::new(CorpusSpec::default_mini())
 }
 
 fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
+    cfg!(feature = "pjrt") && std::path::Path::new("artifacts/manifest.json").exists()
 }
 
 /// Budget-fair comparison on a known objective: all three Table-1 schemes
@@ -46,6 +46,57 @@ fn all_methods_descend_quadratic_within_budget() {
     }
 }
 
+/// Budget-fair accounting (§5.1 / DESIGN.md §5): at the same total budget,
+/// CentralK1 (2 calls/step) and BestOfK with K=5 (6 calls/step) must
+/// consume *identical* total oracle calls — the cheaper estimator just
+/// takes proportionally more steps.  This is the invariant every Table-1
+/// comparison rests on.
+#[test]
+fn central_and_bestofk_consume_identical_budget() {
+    let budget = 600u64; // divisible by both 2 and 6
+    let d = 16;
+    let mk = |est: EstimatorKind| TrainConfig {
+        estimator: est,
+        optimizer: "zo_sgd_plain".into(),
+        lr: 0.02,
+        tau: 1e-3,
+        budget,
+        eval_every: 0,
+        eval_batches: 1,
+        cosine_schedule: false,
+        seed: 5,
+        probe_dispatch: ProbeDispatch::Batched,
+    };
+    let oracle = || QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
+
+    let mut central = Trainer::new(
+        mk(EstimatorKind::CentralK1(SamplerKind::Gaussian)),
+        oracle(),
+        mini_corpus(),
+    )
+    .unwrap();
+    let mut bestofk = Trainer::new(
+        mk(EstimatorKind::BestOfK { k: 5, sampler: SamplerKind::Gaussian }),
+        oracle(),
+        mini_corpus(),
+    )
+    .unwrap();
+    let oc = central.run(None).unwrap();
+    let ob = bestofk.run(None).unwrap();
+
+    // identical totals, exactly the budget...
+    assert_eq!(oc.oracle_calls, budget);
+    assert_eq!(ob.oracle_calls, budget);
+    // ...reached through the per-step cost ratio in iterations
+    assert_eq!(oc.steps, 300);
+    assert_eq!(ob.steps, 100);
+    assert_eq!(oc.steps * 2, budget);
+    assert_eq!(ob.steps * 6, budget);
+    // the trainer never lets a method overdraw the shared budget
+    assert_eq!(central.oracle().oracle_calls(), budget);
+    assert_eq!(bestofk.oracle().oracle_calls(), budget);
+}
+
 /// The paper's headline mechanism on a controllable objective: on a
 /// quadratic whose gradient direction is *persistent* (x0 -> center along
 /// a fixed ray — the regime where a learnable mean pays off, cf. Lemma 2's
@@ -68,6 +119,7 @@ fn learnable_policy_beats_frozen_on_persistent_direction_quadratic() {
             eval_batches: 1,
             cosine_schedule: false,
             seed,
+            probe_dispatch: ProbeDispatch::Batched,
         };
         let oracle =
             QuadraticOracle::new(vec![1.0; d], center.clone(), vec![0.0; d]);

@@ -1,0 +1,190 @@
+//! Minimal vendored stand-in for the [`anyhow`](https://docs.rs/anyhow)
+//! crate, covering exactly the API surface this workspace uses:
+//!
+//! * [`Error`] — a context-chain error value (`{}` prints the outermost
+//!   message, `{:#}` the full `a: b: c` chain, like real anyhow).
+//! * [`Result<T>`] — `Result` with `Error` as the default error type.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on any `Result`
+//!   whose error converts into [`Error`].
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the usual macros.
+//!
+//! The build environment for this repository is fully offline, so the real
+//! crates-io dependency cannot be fetched; this shim keeps the crate's
+//! source code byte-compatible with the real `anyhow` for the subset it
+//! exercises (see DESIGN.md §3 on the vendored-substrate policy).
+
+use std::fmt;
+
+/// A boxed-free error value: an outermost message plus the `Display`
+/// renderings of every underlying source, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (like `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context (outermost).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The `Display` renderings of the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, exactly like real anyhow
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The same coherence trick real anyhow uses: `Error` deliberately does NOT
+// implement `std::error::Error`, so this blanket impl cannot overlap with
+// core's reflexive `From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            chain.push(s.to_string());
+            cur = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "inner")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("outer")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 3;
+        let e = anyhow!("value {x}");
+        assert_eq!(e.to_string(), "value 3");
+        let e = anyhow!("value {}", 4);
+        assert_eq!(e.to_string(), "value 4");
+        let e = anyhow!(String::from("plain"));
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was false");
+            bail!("always bails with {}", 7)
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(f(true).unwrap_err().to_string(), "always bails with 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "inner");
+    }
+}
