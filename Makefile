@@ -1,12 +1,13 @@
 # Build orchestration for the three-layer stack (see README.md).
 #
-#   make artifacts   run L2+L1: lower models + kernels to artifacts/
-#   make build       compile the L3 coordinator (release)
-#   make test        tier-1 verify: cargo build --release && cargo test -q
-#   make doc         API docs, warnings fatal (CI parity)
-#   make bench       regenerate tables/figures from the artifacts
+#   make artifacts     run L2+L1: lower models + kernels to artifacts/
+#   make build         compile the L3 coordinator (release)
+#   make test          tier-1 verify: cargo build --release && cargo test -q
+#   make doc           API docs, warnings fatal (CI parity)
+#   make bench         regenerate tables/figures from the artifacts
+#   make bench-smoke   compile + run ONE iteration of every bench (CI rot guard)
 
-.PHONY: artifacts build test doc bench clean
+.PHONY: artifacts build test doc bench bench-smoke clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -22,6 +23,9 @@ doc:
 
 bench:
 	cargo bench
+
+bench-smoke:
+	cargo bench -- --smoke
 
 clean:
 	cargo clean

@@ -91,7 +91,7 @@ fn main() -> Result<()> {
     ));
 
     println!("running {} ablation trials (budget {budget})", specs.len());
-    let results = run_grid(&dir, specs, workers);
+    let results = run_grid(&dir, specs, &zo_ldsd::exec::ExecContext::new(workers));
 
     let mut by_panel: std::collections::BTreeMap<String, Vec<(f64, f64)>> =
         Default::default();

@@ -71,7 +71,7 @@ fn main() -> Result<()> {
 
     println!("running {} trials (budget {budget} forwards each, {workers} workers)", specs.len());
     let t0 = std::time::Instant::now();
-    let results = run_grid(&dir, specs, workers);
+    let results = run_grid(&dir, specs, &zo_ldsd::exec::ExecContext::new(workers));
 
     let mut table = Table::new(
         &format!("Table 1 (budget {budget} forwards)"),

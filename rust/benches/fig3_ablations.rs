@@ -62,7 +62,7 @@ fn main() {
         }
     }
 
-    let results = run_grid(dir, specs, 3);
+    let results = run_grid(dir, specs, &zo_ldsd::exec::ExecContext::new(3));
     let mut t = Table::new(
         &format!("Fig. 3 ablations (bench subset, budget {budget})"),
         &["point", "accuracy", "steps"],

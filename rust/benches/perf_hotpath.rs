@@ -11,11 +11,14 @@
 use zo_ldsd::bench::Bencher;
 use zo_ldsd::config::{Manifest, TrainMode};
 use zo_ldsd::data::Corpus;
+use zo_ldsd::exec::ExecContext;
 use zo_ldsd::optim::{GradEstimator, LdsdEstimator};
 use zo_ldsd::oracle::{Oracle, PjrtOracle, QuadraticOracle};
 use zo_ldsd::runtime::Runtime;
 use zo_ldsd::sampler::{DirectionSampler, GaussianSampler, LdsdConfig, LdsdSampler};
-use zo_ldsd::tensor::{axpy, axpy_into, axpy_k, dot, nrm2, probe_combine};
+use zo_ldsd::tensor::{
+    axpy, axpy_into, axpy_k, axpy_k_ctx, dot, nrm2, probe_combine, probe_combine_ctx,
+};
 
 fn main() {
     let mut b = Bencher::new();
@@ -125,6 +128,52 @@ fn main() {
             };
             est.consume(&mut oracle, &probe_losses, &mut g).unwrap();
         });
+    }
+
+    // --- thread scaling: the shard-parallel execution engine ---------------
+    // Acceptance rows for the sharded-execution refactor: the O(K d)
+    // kernels and the closed-form `loss_k` at d = 2^20, for 1/2/4/8-thread
+    // contexts and K in {5, 10}.  Results are bitwise identical across the
+    // thread counts (pinned by tests/parallel_determinism.rs); these rows
+    // pin the throughput side.
+    {
+        let saved_max_seconds = b.max_seconds;
+        b.max_seconds = 1.5;
+        let dm = 1usize << 20;
+        for k in [5usize, 10] {
+            let rows = vec![0.01f32; k * dm];
+            let w: Vec<f32> = (0..k).map(|i| 0.1 * (i as f32 + 1.0)).collect();
+            let mut g = vec![0.0f32; dm];
+            let diag: Vec<f32> =
+                (0..dm).map(|i| 1.0 + 0.5 * (i % 7) as f32).collect();
+            for threads in [1usize, 2, 4, 8] {
+                let ctx = ExecContext::new(threads);
+                b.bench(
+                    &format!("scale/axpy_k_k{k}_d1M_t{threads}"),
+                    (k * dm) as f64,
+                    || axpy_k_ctx(&ctx, &w, &rows, &mut g),
+                );
+                b.bench(
+                    &format!("scale/probe_combine_k{k}_d1M_t{threads}"),
+                    (k * dm) as f64,
+                    || probe_combine_ctx(&ctx, &rows, dm, &w, &mut g),
+                );
+                let mut oracle = QuadraticOracle::new(
+                    diag.clone(),
+                    vec![1.0f32; dm],
+                    vec![0.0f32; dm],
+                );
+                oracle.set_exec(ctx.clone());
+                b.bench(
+                    &format!("scale/loss_k_closed_form_k{k}_d1M_t{threads}"),
+                    k as f64,
+                    || {
+                        std::hint::black_box(oracle.loss_k(&rows, k, 1e-3).unwrap());
+                    },
+                );
+            }
+        }
+        b.max_seconds = saved_max_seconds;
     }
 
     // --- PJRT oracle -------------------------------------------------------

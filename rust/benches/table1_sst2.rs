@@ -49,7 +49,7 @@ fn main() {
     }
 
     let t0 = std::time::Instant::now();
-    let results = run_grid(dir, specs, 3);
+    let results = run_grid(dir, specs, &zo_ldsd::exec::ExecContext::new(3));
     let mut table = Table::new(
         &format!("Table 1 (bench subset, budget {budget} forwards)"),
         &["trial", "accuracy", "steps", "secs"],

@@ -3,6 +3,11 @@
 //! `rust/benches/*.rs` are `harness = false` binaries built on this:
 //! warmup, timed iterations, and a markdown summary via [`Bencher`].
 //! Filters come from argv so `cargo bench -- <filter>` keeps working.
+//!
+//! Smoke mode (`cargo bench -- --smoke`, or `BENCH_SMOKE=1`) clamps every
+//! benchmark to exactly one untimed-warmup-free iteration: `make
+//! bench-smoke` uses it so CI compiles and executes every bench without
+//! paying for stable timings — the benches cannot silently rot.
 
 use std::time::Instant;
 
@@ -31,9 +36,15 @@ impl Default for Bencher {
 
 impl Bencher {
     /// New harness with default limits; the filter comes from argv.
+    /// `--smoke` (or `BENCH_SMOKE=1`) clamps every bench to one iteration.
     pub fn new() -> Self {
-        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
-        Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let smoke = argv.iter().any(|a| a == "--smoke")
+            || std::env::var("BENCH_SMOKE")
+                .map(|v| !v.is_empty() && v != "0")
+                .unwrap_or(false);
+        let filter = argv.into_iter().find(|a| !a.starts_with('-'));
+        let mut b = Self {
             warmup_iters: 3,
             min_iters: 10,
             max_iters: 1000,
@@ -43,7 +54,19 @@ impl Bencher {
                 "bench results",
                 &["name", "iters", "mean", "p50", "p95", "throughput"],
             ),
+        };
+        if smoke {
+            b.warmup_iters = 0;
+            b.min_iters = 1;
+            b.max_iters = 1;
         }
+        b
+    }
+
+    /// True when smoke mode clamps this harness to single iterations
+    /// (benches can use it to shrink auxiliary workloads too).
+    pub fn is_smoke(&self) -> bool {
+        self.max_iters == 1
     }
 
     /// Honour `cargo bench -- <filter>`.

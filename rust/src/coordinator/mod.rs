@@ -4,13 +4,19 @@
 //! PJRT clients are not `Send`, so each worker *creates its own
 //! [`Runtime`]* inside the thread; trials are chunked so one worker
 //! amortizes its artifact compilation over its whole chunk.
+//!
+//! Parallelism is budgeted through one shared [`ExecContext`]: trial-level
+//! workers come from the context's pool (created once, reused across
+//! grids — no per-grid pool churn), and each trial receives a
+//! [`ExecContext::partition`]ed shard-level context so total concurrency
+//! stays at the caller's budget instead of multiplying against it.
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{Manifest, TrainMode};
 use crate::data::Corpus;
 use crate::eval::Evaluator;
-use crate::exec::ThreadPool;
+use crate::exec::ExecContext;
 use crate::oracle::PjrtOracle;
 use crate::runtime::Runtime;
 use crate::train::{ProbeDispatch, TrainConfig, TrainOutcome, Trainer};
@@ -45,12 +51,14 @@ pub struct TrialResult {
 }
 
 /// Run one trial on the current thread (used by workers and by the
-/// single-threaded CLI path).
+/// single-threaded CLI path).  `exec` is the shard-level execution context
+/// the trial's train loop runs on.
 pub fn run_trial(
     artifact_dir: &str,
     manifest: &Manifest,
     spec: &TrialSpec,
     rt: &Runtime,
+    exec: &ExecContext,
 ) -> Result<TrialResult> {
     let entry = manifest.model(&spec.model)?;
     let corpus_spec = manifest.corpus(&spec.model)?.clone();
@@ -62,21 +70,25 @@ pub fn run_trial(
         cfg.probe_dispatch = dispatch;
     }
     let corpus = Corpus::new(corpus_spec);
-    let mut trainer = Trainer::new(cfg, oracle, corpus)?;
+    let mut trainer = Trainer::with_exec(cfg, oracle, corpus, exec.clone())?;
     let outcome = trainer.run(Some(&evaluator))?;
     let _ = artifact_dir;
     Ok(TrialResult { spec_id: spec.id.clone(), outcome })
 }
 
-/// Run a batch of trials across `workers` threads.  Results come back in
-/// spec order; per-trial failures are isolated into `Err` strings.
+/// Run a batch of trials on the shared execution context.  Trial-level
+/// workers come from `exec`'s pool (reused across grids); each trial gets
+/// a partitioned shard-level context so the two levels share one worker
+/// budget.  Results come back in spec order; per-trial failures are
+/// isolated into `Err` strings.
 pub fn run_grid(
     artifact_dir: &str,
     specs: Vec<TrialSpec>,
-    workers: usize,
+    exec: &ExecContext,
 ) -> Vec<Result<TrialResult>> {
-    let workers = workers.max(1).min(specs.len().max(1));
-    let pool = ThreadPool::new(workers);
+    let workers = exec.threads().max(1).min(specs.len().max(1));
+    let pool = exec.pool();
+    let shard_exec = exec.partition(workers);
     // chunk specs round-robin so each worker compiles its artifacts once
     let mut chunks: Vec<Vec<(usize, TrialSpec)>> = vec![Vec::new(); workers];
     for (i, spec) in specs.into_iter().enumerate() {
@@ -91,7 +103,7 @@ pub fn run_grid(
         match (&rt, &manifest) {
             (Ok(rt), Ok(manifest)) => {
                 for (i, spec) in chunk {
-                    let r = run_trial(&dir, manifest, &spec, rt)
+                    let r = run_trial(&dir, manifest, &spec, rt, &shard_exec)
                         .map_err(|e| format!("{e:#}"));
                     out.push((i, r));
                 }

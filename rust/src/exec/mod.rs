@@ -1,20 +1,33 @@
-//! Thread-pool execution substrate (replaces tokio for this workload).
+//! Execution substrate: a fixed worker pool for coarse task-level work and
+//! a shard-parallel [`ExecContext`] for the O(K d) kernel hot path.
 //!
-//! The coordinator's parallelism is coarse-grained — independent training
-//! trials, sweep points, eval batches — so a fixed worker pool with a
-//! simple channel-fed queue is the right tool.  [`ThreadPool::scope_map`]
-//! is the primary API: run a closure over a list of inputs in parallel and
-//! collect results in order.
+//! Two levels of parallelism live here (DESIGN.md §9):
+//!
+//! * **Task level** — independent training trials, sweep points, eval
+//!   batches.  [`ThreadPool::scope_map`] runs a `'static` closure over a
+//!   list of inputs on a fixed worker pool and collects results in order.
+//! * **Shard level** — the per-step O(K d) work inside one trial:
+//!   probe-matrix fills, blocked axpy/combine kernels, vectorized
+//!   `loss_k` rows.  These need *borrowing* closures (they touch the
+//!   probe matrix and parameter slices in place), so [`ExecContext`]
+//!   drives them with `std::thread::scope` workers instead of the pool.
+//!
+//! Shard geometry is deterministic: boundaries are fixed by
+//! [`ExecContext::shard_len`], never by worker count or schedule, and all
+//! per-shard reductions are combined in shard order — so every result is
+//! bitwise identical for 1 and N threads.  `ZO_THREADS` overrides the
+//! default worker budget (see [`ExecContext::from_env`]).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Fixed-size worker pool.
+/// Fixed-size worker pool (task-level parallelism).
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    tx: Option<Mutex<mpsc::Sender<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
     size: usize,
 }
@@ -43,7 +56,7 @@ impl ThreadPool {
                     .expect("spawning worker thread")
             })
             .collect();
-        Self { tx: Some(tx), workers, size }
+        Self { tx: Some(Mutex::new(tx)), workers, size }
     }
 
     /// Pool sized to the machine (leaving one core for the main thread).
@@ -63,6 +76,8 @@ impl ThreadPool {
         self.tx
             .as_ref()
             .expect("pool is shut down")
+            .lock()
+            .unwrap()
             .send(Box::new(f))
             .expect("worker pool hung up");
     }
@@ -118,6 +133,256 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Default shard length (f32 elements) for shard-parallel kernels: a
+/// multiple of the tensor kernels' cache block, large enough that a shard
+/// amortizes a scoped-thread handoff.  Shard boundaries are part of the
+/// deterministic sampling scheme (RNG substreams are keyed per shard), so
+/// this is a fixed constant, not a tuning knob derived from the machine.
+pub const DEFAULT_SHARD_LEN: usize = 1 << 16;
+
+/// Shard-parallel execution context: a lazily-built shared [`ThreadPool`]
+/// for task-level work plus a scoped-worker budget and fixed shard
+/// geometry for the kernel hot path.
+///
+/// Cloning is cheap and shares the pool.  Determinism contract: for a
+/// fixed `shard_len`, every operation driven through this context returns
+/// bitwise-identical results regardless of `threads` — shard boundaries
+/// depend only on `shard_len`, per-shard work is combined in shard order,
+/// and RNG substreams are keyed by (seed, step, shard).
+pub struct ExecContext {
+    pool: Arc<Mutex<Option<Arc<ThreadPool>>>>,
+    threads: usize,
+    shard_len: usize,
+}
+
+impl Clone for ExecContext {
+    fn clone(&self) -> Self {
+        Self {
+            pool: Arc::clone(&self.pool),
+            threads: self.threads,
+            shard_len: self.shard_len,
+        }
+    }
+}
+
+impl std::fmt::Debug for ExecContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecContext")
+            .field("threads", &self.threads)
+            .field("shard_len", &self.shard_len)
+            .finish()
+    }
+}
+
+impl ExecContext {
+    /// Context with a worker budget of `threads` (at least one) and the
+    /// default shard length.  No threads are spawned until used.
+    pub fn new(threads: usize) -> Self {
+        Self {
+            pool: Arc::new(Mutex::new(None)),
+            threads: threads.max(1),
+            shard_len: DEFAULT_SHARD_LEN,
+        }
+    }
+
+    /// Single-threaded context: every operation runs inline on the caller.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Context sized from the environment: `ZO_THREADS` if set (and a
+    /// positive integer), else one worker per core minus one for the main
+    /// thread.
+    pub fn from_env() -> Self {
+        let threads = std::env::var("ZO_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or_else(ThreadPool::default_size);
+        Self::new(threads)
+    }
+
+    /// Override the shard length (element count per shard; must be > 0).
+    /// Changing it changes sampler substream keying, so runs are only
+    /// reproducible at a fixed shard length.
+    pub fn with_shard_len(mut self, shard_len: usize) -> Self {
+        assert!(shard_len > 0, "shard_len must be positive");
+        self.shard_len = shard_len;
+        self
+    }
+
+    /// Worker budget for shard-level work.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Fixed shard length (f32 elements).
+    pub fn shard_len(&self) -> usize {
+        self.shard_len
+    }
+
+    /// Number of shards covering a buffer of `len` elements.
+    pub fn shard_count(&self, len: usize) -> usize {
+        // manual div_ceil: keeps the MSRV below the std stabilization
+        (len + self.shard_len - 1) / self.shard_len
+    }
+
+    /// The shared task-level pool, created on first use with `threads`
+    /// workers.  Reused by every clone of this context — callers must not
+    /// build their own pools per grid (that oversubscribes the machine).
+    pub fn pool(&self) -> Arc<ThreadPool> {
+        let mut guard = self.pool.lock().unwrap();
+        guard
+            .get_or_insert_with(|| Arc::new(ThreadPool::new(self.threads)))
+            .clone()
+    }
+
+    /// Derive the shard-level context for workers of a task-level section
+    /// running `concurrent` tasks at once: the worker budget is divided so
+    /// total concurrency stays at this context's level.  Shard length is
+    /// unchanged, so determinism keying is unchanged.  The derived context
+    /// gets its own (empty) pool slot: shard-level work runs on scoped
+    /// threads, and sharing the parent's lazy slot would let a partitioned
+    /// clone create the shared pool undersized.
+    pub fn partition(&self, concurrent: usize) -> ExecContext {
+        ExecContext {
+            pool: Arc::new(Mutex::new(None)),
+            threads: (self.threads / concurrent.max(1)).max(1),
+            shard_len: self.shard_len,
+        }
+    }
+
+    /// Scoped dynamic scheduler: run `task(i)` for `i in 0..n_tasks` on up
+    /// to `threads` borrowing workers.  Assignment order is arbitrary;
+    /// callers keep determinism by indexing all effects by `i`.
+    fn run_tasks(&self, n_tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        let workers = self.threads.min(n_tasks);
+        if workers <= 1 {
+            for i in 0..n_tasks {
+                task(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_tasks {
+                        break;
+                    }
+                    task(i);
+                });
+            }
+        });
+    }
+
+    /// Borrowing parallel-for over disjoint `shard_len` chunks of `data`:
+    /// `f(shard_index, start_offset, chunk)` runs once per shard, shards
+    /// possibly concurrent.  Boundaries depend only on `shard_len`, so the
+    /// write pattern is identical for any worker count.
+    pub fn for_each_shard_mut<F>(&self, data: &mut [f32], f: F)
+    where
+        F: Fn(usize, usize, &mut [f32]) + Sync,
+    {
+        if data.is_empty() {
+            return;
+        }
+        let sl = self.shard_len;
+        // serial fast path: no staging Vec, no mutexes — same shard
+        // geometry and call order, so numerics are unchanged
+        if self.threads <= 1 || data.len() <= sl {
+            for (i, chunk) in data.chunks_mut(sl).enumerate() {
+                f(i, i * sl, chunk);
+            }
+            return;
+        }
+        let chunks: Vec<Mutex<Option<(usize, &mut [f32])>>> = data
+            .chunks_mut(sl)
+            .enumerate()
+            .map(|(i, c)| Mutex::new(Some((i * sl, c))))
+            .collect();
+        let n = chunks.len();
+        self.run_tasks(n, &|i| {
+            let (start, chunk) =
+                chunks[i].lock().unwrap().take().expect("shard visited twice");
+            f(i, start, chunk);
+        });
+    }
+
+    /// Borrowing parallel-for over contiguous rows of a row-major matrix:
+    /// `f(row_index, row)` with `row.len() == row_len` (the final chunk may
+    /// be shorter if `data` is ragged — callers pass exact K x d buffers).
+    pub fn for_each_row_mut<F>(&self, data: &mut [f32], row_len: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        assert!(row_len > 0, "row_len must be positive");
+        if data.is_empty() {
+            return;
+        }
+        // serial fast path (see for_each_shard_mut)
+        if self.threads <= 1 || data.len() <= row_len {
+            for (i, row) in data.chunks_mut(row_len).enumerate() {
+                f(i, row);
+            }
+            return;
+        }
+        let rows: Vec<Mutex<Option<(usize, &mut [f32])>>> = data
+            .chunks_mut(row_len)
+            .enumerate()
+            .map(|(i, c)| Mutex::new(Some((i, c))))
+            .collect();
+        let n = rows.len();
+        self.run_tasks(n, &|i| {
+            let (idx, row) = rows[i].lock().unwrap().take().expect("row visited twice");
+            f(idx, row);
+        });
+    }
+
+    /// Map `f` over `0..n` work items (one item = one probe row, one
+    /// trial); results come back in item order.  Each item's computation is
+    /// self-contained, so numerics are identical for any worker count.
+    pub fn map_items<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if self.threads <= 1 || n <= 1 {
+            return (0..n).map(&f).collect();
+        }
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.run_tasks(n, &|i| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("missing item result"))
+            .collect()
+    }
+
+    /// [`ExecContext::map_items`] gated by per-item work: items smaller
+    /// than one shard run inline (scoped-thread handoff would dominate).
+    /// The gate only picks the schedule — numerics are identical.
+    pub fn map_items_sized<R, F>(&self, n: usize, per_item_work: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if per_item_work < self.shard_len {
+            (0..n).map(&f).collect()
+        } else {
+            self.map_items(n, f)
+        }
+    }
+}
+
+impl Default for ExecContext {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +430,85 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.submit(|| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn shard_boundaries_fixed_by_shard_len_not_threads() {
+        for threads in [1usize, 2, 7] {
+            let ctx = ExecContext::new(threads).with_shard_len(10);
+            assert_eq!(ctx.shard_count(0), 0);
+            assert_eq!(ctx.shard_count(9), 1);
+            assert_eq!(ctx.shard_count(10), 1);
+            assert_eq!(ctx.shard_count(11), 2);
+            assert_eq!(ctx.shard_count(100), 10);
+        }
+    }
+
+    #[test]
+    fn for_each_shard_mut_covers_every_element_once() {
+        for threads in [1usize, 4] {
+            let ctx = ExecContext::new(threads).with_shard_len(7);
+            let mut data = vec![0.0f32; 50];
+            ctx.for_each_shard_mut(&mut data, |_, start, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v += (start + i) as f32 + 1.0;
+                }
+            });
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i as f32 + 1.0, "element {i} touched wrongly");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_row_mut_sees_whole_rows() {
+        let ctx = ExecContext::new(4).with_shard_len(3);
+        let mut data = vec![0.0f32; 6 * 5]; // 6 rows x 5
+        ctx.for_each_row_mut(&mut data, 5, |row, chunk| {
+            assert_eq!(chunk.len(), 5);
+            for v in chunk.iter_mut() {
+                *v = row as f32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, (i / 5) as f32);
+        }
+    }
+
+    #[test]
+    fn map_items_ordered_for_any_thread_count() {
+        for threads in [1usize, 2, 8] {
+            let ctx = ExecContext::new(threads);
+            let out = ctx.map_items(37, |i| i * 3);
+            assert_eq!(out, (0..37).map(|i| i * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn partition_divides_worker_budget() {
+        let ctx = ExecContext::new(8).with_shard_len(99);
+        let shard = ctx.partition(4);
+        assert_eq!(shard.threads(), 2);
+        assert_eq!(shard.shard_len(), 99);
+        // never below one worker
+        assert_eq!(ctx.partition(100).threads(), 1);
+    }
+
+    #[test]
+    fn pool_is_shared_across_clones() {
+        let ctx = ExecContext::new(2);
+        let p1 = ctx.pool();
+        let p2 = ctx.clone().pool();
+        assert!(Arc::ptr_eq(&p1, &p2), "clones must reuse one pool");
+        assert_eq!(p1.size(), 2);
+    }
+
+    #[test]
+    fn empty_buffers_are_noops() {
+        let ctx = ExecContext::new(4);
+        let mut empty: Vec<f32> = Vec::new();
+        ctx.for_each_shard_mut(&mut empty, |_, _, _| panic!("no shards expected"));
+        ctx.for_each_row_mut(&mut empty, 3, |_, _| panic!("no rows expected"));
+        assert!(ctx.map_items(0, |i| i).is_empty());
     }
 }

@@ -25,6 +25,11 @@
 //! `propose` a row-major K x d probe matrix, the oracle evaluates it in
 //! one fused `loss_k` dispatch, and estimators `consume` the losses with
 //! blocked combine kernels ([`tensor::probe_combine`] / [`tensor::axpy_k`]).
+//! The whole O(K d) hot path runs shard-parallel on an
+//! [`exec::ExecContext`] (`--threads` / `ZO_THREADS`), with results
+//! bitwise identical for any worker count — shard boundaries, shard-order
+//! reductions, and per-(step, shard) RNG substreams are all fixed by the
+//! context's shard length, never by the schedule (DESIGN.md §9).
 //! See README.md for the module map and DESIGN.md for design rationale.
 
 #![warn(missing_docs)]

@@ -31,7 +31,7 @@ commands:
   train --model M --mode ft|lora --method 2fwd|6fwd|alg2
         [--optimizer zo_sgd|zo_adamm|jaguar] [--lr F] [--budget N]
         [--eval-every N] [--seed N] [--artifacts DIR]
-        [--probe-dispatch batched|per-probe]
+        [--probe-dispatch batched|per-probe] [--threads N]
   toy   [--steps N] [--variant baseline|ldsd] [--seed N]
   landscape [--grid N] [--eps F]
   memory [--model M] [--artifacts DIR]
@@ -99,7 +99,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("model", "model"), ("mode", "mode"), ("method", "method"),
         ("optimizer.name", "optimizer"), ("optimizer.lr", "lr"),
         ("budget", "budget"), ("eval_every", "eval-every"), ("seed", "seed"),
-        ("probe_dispatch", "probe-dispatch"),
+        ("probe_dispatch", "probe-dispatch"), ("threads", "threads"),
     ] {
         if let Some(v) = args.get(cli) {
             kv.set(key, v);
@@ -129,6 +129,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.seed = seed;
     let dispatch =
         zo_ldsd::train::ProbeDispatch::parse(kv.get_or("probe_dispatch", "batched"))?;
+    // --threads 0 (the default) means "size from the environment":
+    // ZO_THREADS if set, else cores - 1.  Results are bitwise identical
+    // for any thread count (DESIGN.md §9).
+    let threads = kv.get_u64_or("threads", 0)? as usize;
+    let exec = if threads == 0 {
+        zo_ldsd::exec::ExecContext::from_env()
+    } else {
+        zo_ldsd::exec::ExecContext::new(threads)
+    };
 
     let manifest = Manifest::load(&dir)?;
     let rt = Runtime::new(&dir)?;
@@ -140,8 +149,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_batches: args.get_usize("eval-batches", 8)?,
         probe_dispatch: Some(dispatch),
     };
-    println!("running {} (budget {budget} forwards)", spec.id);
-    let result = run_trial(&dir, &manifest, &spec, &rt)?;
+    println!(
+        "running {} (budget {budget} forwards, {} threads)",
+        spec.id,
+        exec.threads()
+    );
+    let result = run_trial(&dir, &manifest, &spec, &rt, &exec)?;
     let o = &result.outcome;
     for (calls, acc) in &o.acc_curve {
         println!("  calls {calls:>8}  accuracy {acc:.4}");

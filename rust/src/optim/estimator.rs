@@ -17,19 +17,27 @@
 //!    [`Oracle::loss_k`] dispatch, or K separate `loss_dir` calls for
 //!    per-probe A/B benchmarking (`ProbeDispatch` in [`crate::train`]);
 //! 3. [`GradEstimator::consume`] combines the probe losses into `g` with
-//!    the blocked [`probe_combine`] kernel (plus at most one follow-up
+//!    the blocked [`probe_combine_ctx`] kernel (plus at most one follow-up
 //!    point evaluation: the forward-difference base loss, or Algorithm 2's
 //!    central-difference probe at `-tau` along the selected direction).
 //!
 //! [`GradEstimator::estimate`] is the one-call convenience that wires the
-//! three steps together; sharding or multi-backend dispatch can instead
-//! split the phases and route the probe matrix wherever it likes.
+//! three steps together; [`GradEstimator::estimate_with`] is the hot-path
+//! variant that reuses a caller-provided probe-loss buffer across steps.
+//!
+//! Every O(d) and O(K d) pass goes through the estimator's installed
+//! [`ExecContext`], so combines run shard-parallel with results bitwise
+//! identical for any worker count (DESIGN.md §9).  The per-step probe
+//! losses are kept in a reusable buffer exposed via
+//! [`GradEstimator::last_losses`] — nothing on the per-step path allocates
+//! after warmup.
 
 use anyhow::{bail, Result};
 
+use crate::exec::ExecContext;
 use crate::oracle::Oracle;
 use crate::sampler::DirectionSampler;
-use crate::tensor::{axpy, probe_combine};
+use crate::tensor::probe_combine_ctx;
 
 /// One batch of probe evaluations requested by [`GradEstimator::propose`]:
 /// `k` rows of a row-major `k x d` direction matrix, each to be evaluated
@@ -46,12 +54,18 @@ pub struct ProbeBatch<'a> {
 }
 
 /// Outcome of one estimation step.
-#[derive(Clone, Debug)]
+///
+/// The full per-step loss vector lives in the estimator's reusable buffer
+/// ([`GradEstimator::last_losses`]); this struct carries only the scalars
+/// so the per-step path stays allocation-free.
+#[derive(Clone, Copy, Debug)]
 pub struct Estimate {
     /// Oracle calls consumed by this step.
     pub calls: u64,
-    /// Probe losses observed (diagnostics).
-    pub losses: Vec<f64>,
+    /// Scalar training-loss proxy for this step: the selected probe's
+    /// loss (Algorithm 2), the base loss (forward averaging), or the
+    /// `+tau` probe (central difference).
+    pub loss: f64,
     /// Index of the selected direction (Algorithm 2 line 4), if any.
     pub selected: Option<usize>,
     /// The finite-difference coefficient applied to the selected direction
@@ -87,11 +101,35 @@ pub trait GradEstimator {
     /// the batch via one fused [`Oracle::loss_k`] dispatch, consume.  The
     /// oracle's current batch must be set by the caller.
     fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate> {
-        let losses = {
+        let mut scratch = Vec::new();
+        self.estimate_with(oracle, g, &mut scratch)
+    }
+
+    /// [`GradEstimator::estimate`] with a caller-provided probe-loss
+    /// buffer, reused across steps on the train-loop hot path (no per-step
+    /// allocation).
+    fn estimate_with(
+        &mut self,
+        oracle: &mut dyn Oracle,
+        g: &mut [f32],
+        probe_losses: &mut Vec<f64>,
+    ) -> Result<Estimate> {
+        {
             let batch = self.propose()?;
-            oracle.loss_k(batch.dirs, batch.k, batch.tau)?
-        };
-        self.consume(oracle, &losses, g)
+            oracle.loss_k_into(batch.dirs, batch.k, batch.tau, probe_losses)?;
+        }
+        self.consume(oracle, probe_losses, g)
+    }
+
+    /// Install the shard-parallel execution context used by the combine
+    /// kernels, and forwarded to the estimator's direction sampler.
+    fn set_exec(&mut self, _ctx: ExecContext) {}
+
+    /// The probe losses of the last completed `consume` (diagnostics):
+    /// batch losses in row order, followed by any extra point evaluations
+    /// that step spent.  Borrowed from a buffer reused across steps.
+    fn last_losses(&self) -> &[f64] {
+        &[]
     }
 
     /// Oracle calls one step consumes (for budget planning).
@@ -118,6 +156,8 @@ pub struct CentralK1Estimator<S: DirectionSampler> {
     pub tau: f32,
     /// 2 x d probe matrix: row 0 is v, row 1 is -v.
     dirs: Vec<f32>,
+    losses: Vec<f64>,
+    exec: ExecContext,
     proposed: bool,
 }
 
@@ -125,7 +165,14 @@ impl<S: DirectionSampler> CentralK1Estimator<S> {
     /// Build with a direction sampler and finite-difference scale.
     pub fn new(sampler: S, tau: f32) -> Self {
         let d = sampler.dim();
-        Self { sampler, tau, dirs: vec![0.0; 2 * d], proposed: false }
+        Self {
+            sampler,
+            tau,
+            dirs: vec![0.0; 2 * d],
+            losses: Vec::with_capacity(2),
+            exec: ExecContext::serial(),
+            proposed: false,
+        }
     }
 }
 
@@ -134,9 +181,12 @@ impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
         let d = self.sampler.dim();
         let (v, neg) = self.dirs.split_at_mut(d);
         self.sampler.sample(v, 1);
-        for (n, x) in neg.iter_mut().zip(v.iter()) {
-            *n = -*x;
-        }
+        let v_ro: &[f32] = v;
+        self.exec.for_each_shard_mut(neg, |_, start, chunk| {
+            for (i, n) in chunk.iter_mut().enumerate() {
+                *n = -v_ro[start + i];
+            }
+        });
         self.proposed = true;
         Ok(ProbeBatch { dirs: &self.dirs, k: 2, tau: self.tau })
     }
@@ -157,9 +207,26 @@ impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
         let d = self.sampler.dim();
         let (fp, fm) = (losses[0], losses[1]);
         let coeff = (fp - fm) / (2.0 * self.tau as f64);
-        g.iter_mut().for_each(|v| *v = 0.0);
-        axpy(coeff as f32, &self.dirs[..d], g);
-        Ok(Estimate { calls: 2, losses: vec![fp, fm], selected: Some(0), fd_coeff: coeff })
+        let cf = coeff as f32;
+        let v = &self.dirs[..d];
+        self.exec.for_each_shard_mut(g, |_, start, gb| {
+            for (i, gi) in gb.iter_mut().enumerate() {
+                *gi = cf * v[start + i];
+            }
+        });
+        self.losses.clear();
+        self.losses.push(fp);
+        self.losses.push(fm);
+        Ok(Estimate { calls: 2, loss: fp, selected: Some(0), fd_coeff: coeff })
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.sampler.set_exec(ctx.clone());
+        self.exec = ctx;
+    }
+
+    fn last_losses(&self) -> &[f64] {
+        &self.losses
     }
 
     fn calls_per_step(&self) -> u64 {
@@ -181,7 +248,7 @@ impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
 ///
 /// Batched form: all K probes go through one `loss_k` dispatch; the base
 /// loss f(x) is the one point evaluation `consume` performs, and the
-/// combine is a single [`probe_combine`] reduce over the probe matrix.
+/// combine is a single [`probe_combine_ctx`] reduce over the probe matrix.
 pub struct ForwardAvgEstimator<S: DirectionSampler> {
     /// Direction source for the K probes.
     pub sampler: S,
@@ -191,7 +258,9 @@ pub struct ForwardAvgEstimator<S: DirectionSampler> {
     pub k: usize,
     dirs: Vec<f32>,
     weights: Vec<f32>,
+    losses: Vec<f64>,
     zero: Vec<f32>,
+    exec: ExecContext,
     proposed: bool,
 }
 
@@ -207,7 +276,9 @@ impl<S: DirectionSampler> ForwardAvgEstimator<S> {
             k,
             dirs: vec![0.0; k * d],
             weights: Vec::with_capacity(k),
+            losses: Vec::with_capacity(k + 1),
             zero: vec![0.0; d],
+            exec: ExecContext::serial(),
             proposed: false,
         }
     }
@@ -243,15 +314,27 @@ impl<S: DirectionSampler> GradEstimator for ForwardAvgEstimator<S> {
         self.weights.clear();
         self.weights
             .extend(losses.iter().map(|l| ((l - f_base) / denom) as f32));
-        probe_combine(&self.dirs, d, &self.weights, g);
-        let mut all = vec![f_base];
-        all.extend_from_slice(losses);
+        probe_combine_ctx(&self.exec, &self.dirs, d, &self.weights, g);
+        // trait contract: batch losses in row order first, then the extra
+        // point evaluation (here the forward-difference base loss)
+        self.losses.clear();
+        self.losses.extend_from_slice(losses);
+        self.losses.push(f_base);
         Ok(Estimate {
             calls: self.k as u64 + 1,
-            losses: all,
+            loss: f_base,
             selected: None,
             fd_coeff: 0.0,
         })
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.sampler.set_exec(ctx.clone());
+        self.exec = ctx;
+    }
+
+    fn last_losses(&self) -> &[f64] {
+        &self.losses
     }
 
     fn calls_per_step(&self) -> u64 {
@@ -289,6 +372,8 @@ pub struct LdsdEstimator<S: DirectionSampler> {
     /// Number of candidate directions per step.
     pub k: usize,
     dirs: Vec<f32>,
+    losses: Vec<f64>,
+    exec: ExecContext,
     proposed: bool,
 }
 
@@ -298,7 +383,15 @@ impl<S: DirectionSampler> LdsdEstimator<S> {
     pub fn new(sampler: S, tau: f32, k: usize) -> Self {
         assert!(k >= 1);
         let d = sampler.dim();
-        Self { sampler, tau, k, dirs: vec![0.0; k * d], proposed: false }
+        Self {
+            sampler,
+            tau,
+            k,
+            dirs: vec![0.0; k * d],
+            losses: Vec::with_capacity(k + 1),
+            exec: ExecContext::serial(),
+            proposed: false,
+        }
     }
 
     /// The underlying direction sampler (policy diagnostics).
@@ -343,19 +436,33 @@ impl<S: DirectionSampler> GradEstimator for LdsdEstimator<S> {
         // central difference along v* (line 5); f(x + tau v*) is reused
         let f_minus = oracle.loss_dir(vstar, -self.tau)?;
         let coeff = (losses[best] - f_minus) / (2.0 * self.tau as f64);
-        g.iter_mut().for_each(|v| *v = 0.0);
-        axpy(coeff as f32, vstar, g);
+        let cf = coeff as f32;
+        self.exec.for_each_shard_mut(g, |_, start, gb| {
+            for (i, gi) in gb.iter_mut().enumerate() {
+                *gi = cf * vstar[start + i];
+            }
+        });
         // policy update from all K probes (lines 6/8), reusing the probe
         // matrix the batch was evaluated on
         self.sampler.observe(&self.dirs, losses, self.k);
-        let mut all = losses.to_vec();
-        all.push(f_minus);
+        self.losses.clear();
+        self.losses.extend_from_slice(losses);
+        self.losses.push(f_minus);
         Ok(Estimate {
             calls: self.k as u64 + 1,
-            losses: all,
+            loss: losses[best],
             selected: Some(best),
             fd_coeff: coeff,
         })
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.sampler.set_exec(ctx.clone());
+        self.exec = ctx;
+    }
+
+    fn last_losses(&self) -> &[f64] {
+        &self.losses
     }
 
     fn calls_per_step(&self) -> u64 {
@@ -376,7 +483,7 @@ mod tests {
     use super::*;
     use crate::oracle::QuadraticOracle;
     use crate::sampler::{GaussianSampler, LdsdConfig, LdsdSampler};
-    use crate::tensor::cosine;
+    use crate::tensor::{axpy, cosine};
 
     fn quad(d: usize) -> QuadraticOracle {
         // f(x) = 0.5 ||x - 1||^2 from x = 0: grad = x - 1 = -1
@@ -478,6 +585,37 @@ mod tests {
     }
 
     #[test]
+    fn estimate_with_reuses_buffer_and_matches_estimate() {
+        let d = 16;
+        let mut o1 = quad(d);
+        let mut e1 = LdsdEstimator::new(
+            LdsdSampler::new(d, 4, LdsdConfig::default()),
+            1e-3,
+            3,
+        );
+        let mut o2 = quad(d);
+        let mut e2 = LdsdEstimator::new(
+            LdsdSampler::new(d, 4, LdsdConfig::default()),
+            1e-3,
+            3,
+        );
+        let mut g1 = vec![0.0f32; d];
+        let mut g2 = vec![0.0f32; d];
+        let mut buf = Vec::new();
+        for _ in 0..5 {
+            let a = e1.estimate(&mut o1, &mut g1).unwrap();
+            let b = e2.estimate_with(&mut o2, &mut g2, &mut buf).unwrap();
+            assert_eq!(a.selected, b.selected);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(g1, g2);
+            assert_eq!(buf.len(), 3, "buffer holds the K batch losses");
+        }
+        let cap = buf.capacity();
+        e2.estimate_with(&mut o2, &mut g2, &mut buf).unwrap();
+        assert_eq!(buf.capacity(), cap, "steady-state steps must not realloc");
+    }
+
+    #[test]
     fn consume_rejects_wrong_loss_count() {
         let d = 8;
         let mut o = quad(d);
@@ -493,8 +631,8 @@ mod tests {
 
     #[test]
     fn consume_requires_propose() {
-        // Combining without a propose (or twice per propose) would read a
-        // stale/zero probe matrix; both must be rejected.
+        // Combining without a propose (or twice for one propose) would
+        // read a stale/zero probe matrix; both must be rejected.
         let d = 8;
         let mut o = quad(d);
         let mut est = LdsdEstimator::new(
@@ -522,11 +660,14 @@ mod tests {
         let mut g = vec![0.0f32; d];
         let e = est.estimate(&mut o, &mut g).unwrap();
         assert_eq!(e.calls, 6);
-        let probes = &e.losses[..5];
+        // last_losses = the 5 batch probes + the follow-up -tau evaluation
+        assert_eq!(est.last_losses().len(), 6);
+        let probes = &est.last_losses()[..5];
         let best = e.selected.unwrap();
         for p in probes {
             assert!(probes[best] <= *p);
         }
+        assert_eq!(e.loss.to_bits(), probes[best].to_bits());
     }
 
     #[test]
@@ -566,5 +707,42 @@ mod tests {
         let e = est.estimate(&mut o, &mut g).unwrap();
         assert_eq!(o.oracle_calls() - before, e.calls);
         assert_eq!(e.calls, est.calls_per_step());
+    }
+
+    #[test]
+    fn estimators_bitwise_identical_across_thread_counts() {
+        // Same seed, same shard length: a serial and an 8-thread estimator
+        // must produce bit-identical gradients and probe losses.
+        let d = 3000;
+        let k = 5;
+        let mk = |threads: usize| {
+            let mut est = LdsdEstimator::new(
+                LdsdSampler::new(d, 21, LdsdConfig::default()),
+                1e-3,
+                k,
+            );
+            est.set_exec(
+                crate::exec::ExecContext::new(threads).with_shard_len(256),
+            );
+            est
+        };
+        let mut o1 = quad(d);
+        let mut o8 = quad(d);
+        let mut e1 = mk(1);
+        let mut e8 = mk(8);
+        let mut g1 = vec![0.0f32; d];
+        let mut g8 = vec![0.0f32; d];
+        for _ in 0..3 {
+            let a = e1.estimate(&mut o1, &mut g1).unwrap();
+            let b = e8.estimate(&mut o8, &mut g8).unwrap();
+            assert_eq!(a.selected, b.selected);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            for (x, y) in g1.iter().zip(g8.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in e1.last_losses().iter().zip(e8.last_losses().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 }

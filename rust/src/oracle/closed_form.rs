@@ -4,16 +4,20 @@
 //!
 //! Each oracle overrides [`Oracle::loss_k`] with a *vectorized* batch
 //! evaluation of the whole K x d probe matrix: shared per-iterate work
-//! (residuals, base margins) is computed once and each data row is loaded
-//! once for all K probes, instead of K independent `loss_dir` sweeps.
-//! This makes the batched estimation path measurably faster than the
-//! per-probe loop even without PJRT artifacts (`perf_hotpath` pins the
-//! ratio), and the batched/looped results agree to float tolerance
-//! (pinned by `loss_k_matches_loss_dir_*` below).
+//! (residuals, base margins) is computed once, then the K probe rows are
+//! evaluated independently — serial on a one-thread [`ExecContext`],
+//! row-parallel otherwise.  Each probe's accumulation runs in the same
+//! fixed order either way, so results are bitwise identical for any
+//! worker count.  This makes the batched estimation path measurably
+//! faster than the per-probe loop even without PJRT artifacts
+//! (`perf_hotpath` pins the ratio and the thread-scaling rows), and the
+//! batched/looped results agree to float tolerance (pinned by
+//! `loss_k_matches_loss_dir_*` below).
 
 use anyhow::{bail, Result};
 
 use crate::data::Batch;
+use crate::exec::ExecContext;
 use crate::tensor::{axpy_into, dot, Matrix};
 
 use super::{GradOracle, Oracle};
@@ -27,6 +31,7 @@ pub struct QuadraticOracle {
     pub center: Vec<f32>,
     x: Vec<f32>,
     scratch: Vec<f32>,
+    exec: ExecContext,
     calls: u64,
 }
 
@@ -36,7 +41,14 @@ impl QuadraticOracle {
         assert_eq!(diag.len(), center.len());
         assert_eq!(diag.len(), x0.len());
         let d = diag.len();
-        Self { diag, center, x: x0, scratch: vec![0.0; d], calls: 0 }
+        Self {
+            diag,
+            center,
+            x: x0,
+            scratch: vec![0.0; d],
+            exec: ExecContext::serial(),
+            calls: 0,
+        }
     }
 
     /// Isotropic instance: f(x) = 0.5 ||x||^2 from a given start.
@@ -52,6 +64,45 @@ impl QuadraticOracle {
             acc += 0.5 * self.diag[i] as f64 * r * r;
         }
         acc
+    }
+
+    /// Shared `loss_k`/`loss_k_into` core: hoist the iterate residual once,
+    /// then evaluate the K probe rows independently (row-parallel on the
+    /// installed context; each row's fused sum runs in index order, so the
+    /// output is bitwise identical for any worker count).
+    fn loss_k_impl(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
+        let d = self.x.len();
+        assert_eq!(dirs.len(), k * d, "dirs must be K x d");
+        self.calls += k as u64;
+        // hoist the iterate residual r = x - c out of the probe loop
+        // (sharded elementwise pass)
+        {
+            let x = &self.x;
+            let c = &self.center;
+            self.exec.for_each_shard_mut(&mut self.scratch, |_, start, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = x[start + i] - c[start + i];
+                }
+            });
+        }
+        // each probe is a single fused pass 0.5 * sum_i a_i (r_i + tau v_i)^2
+        let scratch = &self.scratch;
+        let diag = &self.diag;
+        let vals = self.exec.map_items_sized(k, d, |j| {
+            let row = &dirs[j * d..(j + 1) * d];
+            let mut acc = 0.0f64;
+            for i in 0..d {
+                let z = (scratch[i] + tau * row[i]) as f64;
+                acc += 0.5 * diag[i] as f64 * z * z;
+            }
+            acc
+        });
+        out.clear();
+        out.extend_from_slice(&vals);
+        Ok(())
     }
 }
 
@@ -75,27 +126,17 @@ impl Oracle for QuadraticOracle {
     }
 
     fn loss_k(&mut self, dirs: &[f32], k: usize, tau: f32) -> Result<Vec<f64>> {
-        if k == 0 {
-            bail!("loss_k: k must be >= 1 (empty probe matrix)");
-        }
-        let d = self.dim();
-        assert_eq!(dirs.len(), k * d, "dirs must be K x d");
-        self.calls += k as u64;
-        // hoist the iterate residual r = x - c out of the probe loop; each
-        // probe is then a single fused pass 0.5 * sum_i a_i (r_i + tau v_i)^2
-        for i in 0..d {
-            self.scratch[i] = self.x[i] - self.center[i];
-        }
         let mut out = Vec::with_capacity(k);
-        for row in dirs.chunks_exact(d) {
-            let mut acc = 0.0f64;
-            for i in 0..d {
-                let z = (self.scratch[i] + tau * row[i]) as f64;
-                acc += 0.5 * self.diag[i] as f64 * z * z;
-            }
-            out.push(acc);
-        }
+        self.loss_k_impl(dirs, k, tau, &mut out)?;
         Ok(out)
+    }
+
+    fn loss_k_into(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
+        self.loss_k_impl(dirs, k, tau, out)
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.exec = ctx;
     }
 
     fn params(&self) -> &[f32] {
@@ -134,6 +175,7 @@ pub struct LinRegOracle {
     w: Vec<f32>,
     resid: Vec<f32>,
     wtmp: Vec<f32>,
+    exec: ExecContext,
     calls: u64,
 }
 
@@ -144,7 +186,15 @@ impl LinRegOracle {
         assert_eq!(x_data.cols, w0.len());
         let n = y.len();
         let d = w0.len();
-        Self { x_data, y, w: w0, resid: vec![0.0; n], wtmp: vec![0.0; d], calls: 0 }
+        Self {
+            x_data,
+            y,
+            w: w0,
+            resid: vec![0.0; n],
+            wtmp: vec![0.0; d],
+            exec: ExecContext::serial(),
+            calls: 0,
+        }
     }
 
     fn loss_at(&mut self, w: &[f32]) -> f64 {
@@ -156,6 +206,38 @@ impl LinRegOracle {
             acc += r * r;
         }
         0.5 * acc / n as f64
+    }
+
+    /// Shared `loss_k`/`loss_k_into` core: base margins Xw once, then the
+    /// K probes evaluated independently (row-parallel on the installed
+    /// context).  Per probe the data rows accumulate in index order — the
+    /// same order as the serial kernel — so results are bitwise identical
+    /// for any worker count.
+    fn loss_k_impl(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
+        let d = self.w.len();
+        assert_eq!(dirs.len(), k * d, "dirs must be K x d");
+        self.calls += k as u64;
+        let n = self.x_data.rows;
+        self.x_data.matvec(&self.w, &mut self.resid);
+        let x_data = &self.x_data;
+        let resid = &self.resid;
+        let y = &self.y;
+        let vals = self.exec.map_items_sized(k, n.saturating_mul(d), |j| {
+            let dj = &dirs[j * d..(j + 1) * d];
+            let mut acc = 0.0f64;
+            for r in 0..n {
+                let pj = dot(x_data.row(r), dj);
+                let e = (resid[r] + tau * pj - y[r]) as f64;
+                acc += e * e;
+            }
+            0.5 * acc / n as f64
+        });
+        out.clear();
+        out.extend_from_slice(&vals);
+        Ok(())
     }
 }
 
@@ -178,27 +260,17 @@ impl Oracle for LinRegOracle {
     }
 
     fn loss_k(&mut self, dirs: &[f32], k: usize, tau: f32) -> Result<Vec<f64>> {
-        if k == 0 {
-            bail!("loss_k: k must be >= 1 (empty probe matrix)");
-        }
-        let d = self.dim();
-        assert_eq!(dirs.len(), k * d, "dirs must be K x d");
-        self.calls += k as u64;
-        let n = self.x_data.rows;
-        // base margins Xw once; then each data row is loaded once and
-        // dotted against all K probe rows (X stays hot across probes)
-        self.x_data.matvec(&self.w, &mut self.resid);
-        let mut acc = vec![0.0f64; k];
-        for r in 0..n {
-            let xrow = self.x_data.row(r);
-            let base = self.resid[r];
-            for (j, aj) in acc.iter_mut().enumerate() {
-                let pj = dot(xrow, &dirs[j * d..(j + 1) * d]);
-                let e = (base + tau * pj - self.y[r]) as f64;
-                *aj += e * e;
-            }
-        }
-        Ok(acc.into_iter().map(|a| 0.5 * a / n as f64).collect())
+        let mut out = Vec::with_capacity(k);
+        self.loss_k_impl(dirs, k, tau, &mut out)?;
+        Ok(out)
+    }
+
+    fn loss_k_into(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
+        self.loss_k_impl(dirs, k, tau, out)
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.exec = ctx;
     }
 
     fn params(&self) -> &[f32] {
@@ -248,6 +320,7 @@ pub struct LogRegOracle {
     w: Vec<f32>,
     margin: Vec<f32>,
     wtmp: Vec<f32>,
+    exec: ExecContext,
     calls: u64,
 }
 
@@ -271,7 +344,15 @@ impl LogRegOracle {
         }
         let n = y.len();
         let d = w0.len();
-        Self { x_data, y, w: w0, margin: vec![0.0; n], wtmp: vec![0.0; d], calls: 0 }
+        Self {
+            x_data,
+            y,
+            w: w0,
+            margin: vec![0.0; n],
+            wtmp: vec![0.0; d],
+            exec: ExecContext::serial(),
+            calls: 0,
+        }
     }
 
     fn loss_at(&mut self, w: &[f32]) -> f64 {
@@ -283,6 +364,35 @@ impl LogRegOracle {
             acc += log1p_exp_neg(m);
         }
         acc / n as f64
+    }
+
+    /// Shared `loss_k`/`loss_k_into` core (see [`LinRegOracle`]: same
+    /// structure, logistic link).
+    fn loss_k_impl(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
+        let d = self.w.len();
+        assert_eq!(dirs.len(), k * d, "dirs must be K x d");
+        self.calls += k as u64;
+        let n = self.x_data.rows;
+        self.x_data.matvec(&self.w, &mut self.margin);
+        let x_data = &self.x_data;
+        let margin = &self.margin;
+        let y = &self.y;
+        let vals = self.exec.map_items_sized(k, n.saturating_mul(d), |j| {
+            let dj = &dirs[j * d..(j + 1) * d];
+            let mut acc = 0.0f64;
+            for r in 0..n {
+                let pj = dot(x_data.row(r), dj);
+                let m = (y[r] * (margin[r] + tau * pj)) as f64;
+                acc += log1p_exp_neg(m);
+            }
+            acc / n as f64
+        });
+        out.clear();
+        out.extend_from_slice(&vals);
+        Ok(())
     }
 }
 
@@ -305,26 +415,17 @@ impl Oracle for LogRegOracle {
     }
 
     fn loss_k(&mut self, dirs: &[f32], k: usize, tau: f32) -> Result<Vec<f64>> {
-        if k == 0 {
-            bail!("loss_k: k must be >= 1 (empty probe matrix)");
-        }
-        let d = self.dim();
-        assert_eq!(dirs.len(), k * d, "dirs must be K x d");
-        self.calls += k as u64;
-        let n = self.x_data.rows;
-        self.x_data.matvec(&self.w, &mut self.margin);
-        let mut acc = vec![0.0f64; k];
-        for r in 0..n {
-            let xrow = self.x_data.row(r);
-            let base = self.margin[r];
-            let yr = self.y[r];
-            for (j, aj) in acc.iter_mut().enumerate() {
-                let pj = dot(xrow, &dirs[j * d..(j + 1) * d]);
-                let m = (yr * (base + tau * pj)) as f64;
-                *aj += log1p_exp_neg(m);
-            }
-        }
-        Ok(acc.into_iter().map(|a| a / n as f64).collect())
+        let mut out = Vec::with_capacity(k);
+        self.loss_k_impl(dirs, k, tau, &mut out)?;
+        Ok(out)
+    }
+
+    fn loss_k_into(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
+        self.loss_k_impl(dirs, k, tau, out)
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.exec = ctx;
     }
 
     fn params(&self) -> &[f32] {
@@ -494,6 +595,42 @@ mod tests {
         let y: Vec<f32> = ds.y.iter().map(|v| if *v > 0.0 { 1.0 } else { -1.0 }).collect();
         let mut o = LogRegOracle::new(ds.x, y, vec![0.05f32; 123]);
         fd_grad_check(&mut o, 1e-2);
+    }
+
+    #[test]
+    fn loss_k_parallel_bitwise_matches_serial() {
+        // same oracle, serial vs 8-thread context: the probe losses must
+        // be bit-for-bit equal (per-probe accumulation order is fixed)
+        let d = 512;
+        let k = 5;
+        let diag: Vec<f32> = (0..d).map(|i| 1.0 + 0.1 * (i % 5) as f32).collect();
+        let center: Vec<f32> = (0..d).map(|i| (i as f32 * 0.3).sin()).collect();
+        let x0: Vec<f32> = (0..d).map(|i| (i as f32 * 0.7).cos()).collect();
+        let mut rng = crate::rng::Rng::new(11);
+        let mut dirs = vec![0.0f32; k * d];
+        rng.fill_normal(&mut dirs);
+
+        let mut serial = QuadraticOracle::new(diag.clone(), center.clone(), x0.clone());
+        let mut par = QuadraticOracle::new(diag, center, x0);
+        par.set_exec(crate::exec::ExecContext::new(8).with_shard_len(64));
+        let a = serial.loss_k(&dirs, k, 1e-2).unwrap();
+        let b = par.loss_k(&dirs, k, 1e-2).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+
+        let ds = crate::data::SyntheticRegression::a9a_like(96, 9);
+        let w0: Vec<f32> = (0..123).map(|i| 0.01 * (i as f32).sin()).collect();
+        let mut lin_s = LinRegOracle::new(ds.x.clone(), ds.y.clone(), w0.clone());
+        let mut lin_p = LinRegOracle::new(ds.x, ds.y, w0);
+        lin_p.set_exec(crate::exec::ExecContext::new(4).with_shard_len(64));
+        let mut dirs2 = vec![0.0f32; 4 * 123];
+        rng.fill_normal(&mut dirs2);
+        let a2 = lin_s.loss_k(&dirs2, 4, 0.05).unwrap();
+        let b2 = lin_p.loss_k(&dirs2, 4, 0.05).unwrap();
+        for (x, y) in a2.iter().zip(b2.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub use pjrt::{read_f32_bin as read_params_bin, PjrtOracle};
 use anyhow::{bail, Result};
 
 use crate::data::Batch;
+use crate::exec::ExecContext;
 
 /// Forward-evaluation interface.  The oracle owns the current iterate `x`
 /// (so PJRT implementations can keep it device-resident) and evaluates the
@@ -57,6 +58,30 @@ pub trait Oracle {
         let d = self.dim();
         assert_eq!(dirs.len(), k * d, "dirs must be K x d");
         (0..k).map(|i| self.loss_dir(&dirs[i * d..(i + 1) * d], tau)).collect()
+    }
+
+    /// [`Oracle::loss_k`] into a caller-provided buffer — the train-loop
+    /// hot path reuses one `Vec<f64>` across steps instead of allocating
+    /// per dispatch.  The default delegates to `loss_k`; the closed-form
+    /// oracles override both through one shared implementation.
+    fn loss_k_into(
+        &mut self,
+        dirs: &[f32],
+        k: usize,
+        tau: f32,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        let losses = self.loss_k(dirs, k, tau)?;
+        out.clear();
+        out.extend_from_slice(&losses);
+        Ok(())
+    }
+
+    /// Install the shard-parallel execution context used by vectorized
+    /// evaluation paths (`loss_k` row parallelism on the closed-form
+    /// oracles).  Oracles that dispatch elsewhere (PJRT) ignore it.
+    fn set_exec(&mut self, ctx: ExecContext) {
+        let _ = ctx;
     }
 
     /// Read access to the current iterate.

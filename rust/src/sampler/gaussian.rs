@@ -1,28 +1,58 @@
 //! Policy-free baseline samplers.
+//!
+//! All fills go through `fill_normal_sharded`: each (step, shard) cell
+//! of the flat K x d buffer draws from its own SplitMix64-derived
+//! substream, so the probe matrix is a pure function of (seed, step,
+//! shard geometry) — shard-parallel on the installed [`ExecContext`] and
+//! bitwise identical for any worker count.
 
-use crate::rng::Rng;
+use crate::exec::ExecContext;
+use crate::rng::substream;
 use crate::tensor::normalize;
 
 use super::DirectionSampler;
 
+/// Substream tag space reserved for non-fill draws (row refills, index
+/// draws): keeps them disjoint from the shard tags `0..shard_count` used
+/// by the main fill.
+const AUX_TAG: u64 = 1 << 63;
+
+/// Shard-parallel iid N(0, 1) fill: shard `s` of the flat buffer draws
+/// from the substream keyed by `(seed, step, s)`.  Boundaries come from
+/// `exec.shard_len()`, never from worker count, so the output is
+/// deterministic under any schedule.
+pub(super) fn fill_normal_sharded(exec: &ExecContext, seed: u64, step: u64, out: &mut [f32]) {
+    exec.for_each_shard_mut(out, |shard, _, chunk| {
+        let mut rng = substream(seed, step, shard as u64);
+        rng.fill_normal(chunk);
+    });
+}
+
 /// v ~ N(0, I): the classical ZO direction distribution
 /// (Nesterov–Spokoiny / Ghadimi–Lan / MeZO).
 pub struct GaussianSampler {
-    rng: Rng,
     d: usize,
+    seed: u64,
+    step: u64,
+    exec: ExecContext,
 }
 
 impl GaussianSampler {
     /// Build for dimensionality `d` with a seeded stream.
     pub fn new(d: usize, seed: u64) -> Self {
-        Self { rng: Rng::new(seed), d }
+        Self { d, seed, step: 0, exec: ExecContext::serial() }
     }
 }
 
 impl DirectionSampler for GaussianSampler {
     fn sample(&mut self, dirs: &mut [f32], k: usize) {
         assert_eq!(dirs.len(), k * self.d);
-        self.rng.fill_normal(dirs);
+        fill_normal_sharded(&self.exec, self.seed, self.step, dirs);
+        self.step += 1;
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.exec = ctx;
     }
 
     fn observe(&mut self, _dirs: &[f32], _losses: &[f64], _k: usize) {}
@@ -42,29 +72,40 @@ impl DirectionSampler for GaussianSampler {
 
 /// v uniform on the unit sphere RS(1): normalized Gaussian draws.
 pub struct SphereSampler {
-    rng: Rng,
     d: usize,
+    seed: u64,
+    step: u64,
+    exec: ExecContext,
 }
 
 impl SphereSampler {
     /// Build for dimensionality `d` with a seeded stream.
     pub fn new(d: usize, seed: u64) -> Self {
-        Self { rng: Rng::new(seed), d }
+        Self { d, seed, step: 0, exec: ExecContext::serial() }
     }
 }
 
 impl DirectionSampler for SphereSampler {
     fn sample(&mut self, dirs: &mut [f32], k: usize) {
         assert_eq!(dirs.len(), k * self.d);
-        for i in 0..k {
-            let row = &mut dirs[i * self.d..(i + 1) * self.d];
-            loop {
-                self.rng.fill_normal(row);
-                if normalize(row) > 0.0 {
-                    break;
-                }
+        fill_normal_sharded(&self.exec, self.seed, self.step, dirs);
+        let (seed, step, d) = (self.seed, self.step, self.d);
+        self.exec.for_each_row_mut(dirs, d, |row, chunk| {
+            // astronomically rare: a zero-norm row redraws from a
+            // row-tagged substream until it normalizes
+            let mut attempt = 0u64;
+            while normalize(chunk) == 0.0 {
+                attempt += 1;
+                let tag = AUX_TAG | ((row as u64) << 16) | attempt;
+                let mut rng = substream(seed, step, tag);
+                rng.fill_normal(chunk);
             }
-        }
+        });
+        self.step += 1;
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.exec = ctx;
     }
 
     fn observe(&mut self, _dirs: &[f32], _losses: &[f64], _k: usize) {}
@@ -85,26 +126,37 @@ impl DirectionSampler for SphereSampler {
 /// v = sqrt(d) * e_j with j uniform — the coordinate/one-hot distribution
 /// (Duchi et al.).  Scaled by sqrt(d) so E[v v^T] = I like the Gaussian.
 pub struct CoordinateSampler {
-    rng: Rng,
     d: usize,
+    seed: u64,
+    step: u64,
     scale: f32,
+    exec: ExecContext,
 }
 
 impl CoordinateSampler {
     /// Build for dimensionality `d` with a seeded stream.
     pub fn new(d: usize, seed: u64) -> Self {
-        Self { rng: Rng::new(seed), d, scale: (d as f32).sqrt() }
+        Self { d, seed, step: 0, scale: (d as f32).sqrt(), exec: ExecContext::serial() }
     }
 }
 
 impl DirectionSampler for CoordinateSampler {
     fn sample(&mut self, dirs: &mut [f32], k: usize) {
         assert_eq!(dirs.len(), k * self.d);
-        dirs.iter_mut().for_each(|v| *v = 0.0);
+        // zero shard-parallel; the K index draws are O(K) and serial
+        self.exec.for_each_shard_mut(dirs, |_, _, chunk| {
+            chunk.iter_mut().for_each(|v| *v = 0.0);
+        });
+        let mut rng = substream(self.seed, self.step, AUX_TAG);
         for i in 0..k {
-            let j = self.rng.below(self.d as u64) as usize;
+            let j = rng.below(self.d as u64) as usize;
             dirs[i * self.d + j] = self.scale;
         }
+        self.step += 1;
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.exec = ctx;
     }
 
     fn observe(&mut self, _dirs: &[f32], _losses: &[f64], _k: usize) {}
@@ -149,6 +201,17 @@ mod tests {
         let (a, b) = dirs.split_at(d);
         let cos = dot(a, b) / (nrm2(a) * nrm2(b));
         assert!(cos.abs() < 0.05, "cos {cos}");
+    }
+
+    #[test]
+    fn gaussian_steps_produce_fresh_draws() {
+        let d = 64;
+        let mut s = GaussianSampler::new(d, 3);
+        let mut first = vec![0.0f32; d];
+        let mut second = vec![0.0f32; d];
+        s.sample(&mut first, 1);
+        s.sample(&mut second, 1);
+        assert_ne!(first, second, "per-step substreams must differ");
     }
 
     #[test]

@@ -19,9 +19,11 @@
 //! the loss (reward = -f).  Set `reward_sign = 1.0` to reproduce the
 //! literal paper update; the `fig3` ablation bench sweeps both.
 
+use crate::exec::ExecContext;
 use crate::rng::Rng;
-use crate::tensor::{axpy_k, nrm2, scal};
+use crate::tensor::{axpy_k_ctx, nrm2, scal};
 
+use super::gaussian::fill_normal_sharded;
 use super::DirectionSampler;
 
 /// Hyperparameters of the LDSD policy (Algorithm 2 defaults in §A.2).
@@ -64,7 +66,9 @@ impl Default for LdsdConfig {
 pub struct LdsdSampler {
     cfg: LdsdConfig,
     mu: Vec<f32>,
-    rng: Rng,
+    seed: u64,
+    step: u64,
+    exec: ExecContext,
     /// scratch for the weighted reduce (kept across steps: zero-alloc loop)
     weights: Vec<f32>,
 }
@@ -82,7 +86,7 @@ impl LdsdSampler {
         if n > 0.0 {
             scal(cfg.init_norm / n, &mut mu);
         }
-        Self { cfg, mu, rng, weights: Vec::new() }
+        Self { cfg, mu, seed, step: 0, exec: ExecContext::serial(), weights: Vec::new() }
     }
 
     /// Warm-start the policy mean along a known direction (Lemma 3's
@@ -107,14 +111,21 @@ impl DirectionSampler for LdsdSampler {
     fn sample(&mut self, dirs: &mut [f32], k: usize) {
         let d = self.mu.len();
         assert_eq!(dirs.len(), k * d);
-        self.rng.fill_normal(dirs);
+        // shard-parallel z ~ N(0, I) fill, then the affine v = mu + eps z
+        // row-parallel — both deterministic for any worker count
+        fill_normal_sharded(&self.exec, self.seed, self.step, dirs);
         let eps = self.cfg.eps;
-        for i in 0..k {
-            let row = &mut dirs[i * d..(i + 1) * d];
-            for (r, m) in row.iter_mut().zip(self.mu.iter()) {
+        let mu = &self.mu;
+        self.exec.for_each_row_mut(dirs, d, |_, row| {
+            for (r, m) in row.iter_mut().zip(mu.iter()) {
                 *r = m + eps * *r;
             }
-        }
+        });
+        self.step += 1;
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.exec = ctx;
     }
 
     fn observe(&mut self, dirs: &[f32], losses: &[f64], k: usize) {
@@ -143,14 +154,20 @@ impl DirectionSampler for LdsdSampler {
         // Both baselines make the advantages sum to zero analytically
         // (wsum ~ 0), but we keep the exact form: scale mu first, then
         // accumulate the direction contributions — reusing the estimator's
-        // probe matrix in one fused blocked pass (`axpy_k`) instead of K
-        // separate sweeps of mu.
+        // probe matrix in one fused blocked pass (`axpy_k_ctx`, shard-
+        // parallel on the installed context) instead of K separate sweeps
+        // of mu.
         let wsum: f32 = self.weights.iter().sum();
-        scal(1.0 - coef * wsum, &mut self.mu);
+        let mu_scale = 1.0 - coef * wsum;
+        self.exec.for_each_shard_mut(&mut self.mu, |_, _, chunk| {
+            for v in chunk.iter_mut() {
+                *v *= mu_scale;
+            }
+        });
         for w in self.weights.iter_mut() {
             *w *= coef;
         }
-        axpy_k(&self.weights, dirs, &mut self.mu);
+        axpy_k_ctx(&self.exec, &self.weights, dirs, &mut self.mu);
         if self.cfg.renormalize {
             let n = nrm2(&self.mu);
             if n > f32::MIN_POSITIVE {

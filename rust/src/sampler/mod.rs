@@ -25,7 +25,19 @@ pub use ldsd::{LdsdConfig, LdsdSampler};
 /// Produces candidate directions and learns from probe feedback.
 pub trait DirectionSampler {
     /// Fill `dirs` (row-major K x d) with K sampled directions.
+    ///
+    /// Fills are shard-parallel and deterministic: each (step, shard) cell
+    /// of the flat buffer draws from its own [`crate::rng::substream`],
+    /// with shard boundaries fixed by the installed context's `shard_len`
+    /// — the same directions come out for any worker count.
     fn sample(&mut self, dirs: &mut [f32], k: usize);
+
+    /// Install the shard-parallel execution context used by `sample` (and
+    /// by learnable policies' `observe` updates).  Samplers default to the
+    /// serial context.
+    fn set_exec(&mut self, ctx: crate::exec::ExecContext) {
+        let _ = ctx;
+    }
 
     /// Observe the probe losses `f(x + tau * dirs[i])` for the directions
     /// produced by the last `sample` call.  Policy-free samplers ignore it.

@@ -12,6 +12,18 @@
 //! * [`probe_combine`] — the gemv-style probe reduce `g = sum_i w[i] *
 //!   dirs[i]` used by the estimators' `consume` phase and the LDSD
 //!   REINFORCE update.
+//!
+//! The shard-parallel engine adds `_ctx` variants ([`axpy_k_ctx`],
+//! [`probe_combine_ctx`], [`axpy_into_ctx`]) that process disjoint column
+//! shards of the output concurrently on an [`ExecContext`].  Per output
+//! element the arithmetic and its order are exactly the serial kernel's
+//! (rows accumulate in row order within fixed cache blocks), and shard
+//! boundaries depend only on [`ExecContext::shard_len`], so the parallel
+//! variants are bitwise identical to their serial references for any
+//! worker count — `tests/properties.rs` pins this across random shapes
+//! and shard lengths.
+
+use crate::exec::ExecContext;
 
 /// `y += a * x`
 ///
@@ -63,21 +75,42 @@ const BLOCK: usize = 1024;
 pub fn axpy_k(a: &[f32], xs: &[f32], y: &mut [f32]) {
     let d = y.len();
     assert_eq!(xs.len(), a.len() * d, "xs must be K x d");
-    let mut start = 0usize;
-    while start < d {
-        let end = (start + BLOCK).min(d);
+    axpy_k_cols(a, xs, d, 0, y);
+}
+
+/// The blocked `axpy_k` loop restricted to the column window
+/// `[col0, col0 + yb.len())` of the full K x `d` matrix, accumulating into
+/// the window slice `yb`.  Shared by the serial kernel (whole range) and
+/// the shard-parallel variant (one shard per call); per column the row
+/// accumulation order is identical either way.
+fn axpy_k_cols(a: &[f32], xs: &[f32], d: usize, col0: usize, yb: &mut [f32]) {
+    let col_end = col0 + yb.len();
+    let mut start = col0;
+    while start < col_end {
+        let end = (start + BLOCK).min(col_end);
         for (k, ak) in a.iter().enumerate() {
             if *ak == 0.0 {
                 continue;
             }
             let row = &xs[k * d + start..k * d + end];
-            let yb = &mut y[start..end];
-            for (yi, xi) in yb.iter_mut().zip(row.iter()) {
+            let yw = &mut yb[start - col0..end - col0];
+            for (yi, xi) in yw.iter_mut().zip(row.iter()) {
                 *yi += *ak * *xi;
             }
         }
         start = end;
     }
+}
+
+/// Shard-parallel [`axpy_k`]: disjoint column shards of `y` accumulate
+/// concurrently, each with the serial kernel's blocked row-order loop —
+/// bitwise identical to [`axpy_k`] for any worker count and shard length.
+pub fn axpy_k_ctx(ctx: &ExecContext, a: &[f32], xs: &[f32], y: &mut [f32]) {
+    let d = y.len();
+    assert_eq!(xs.len(), a.len() * d, "xs must be K x d");
+    ctx.for_each_shard_mut(y, |_, start, yb| {
+        axpy_k_cols(a, xs, d, start, yb);
+    });
 }
 
 /// `dot(x, y)` with an f64 accumulator (keeps alignment statistics stable
@@ -161,6 +194,33 @@ pub fn probe_combine(dirs: &[f32], d: usize, w: &[f32], g: &mut [f32]) {
     assert_eq!(g.len(), d);
     g.iter_mut().for_each(|v| *v = 0.0);
     axpy_k(w, dirs, g);
+}
+
+/// Shard-parallel [`probe_combine`]: each column shard of `g` is zeroed
+/// and reduced over the K probe rows in one pass, shards concurrent.  The
+/// per-column reduction over rows runs in row order (the serial kernel's
+/// order), so the result is bitwise identical to [`probe_combine`].
+pub fn probe_combine_ctx(ctx: &ExecContext, dirs: &[f32], d: usize, w: &[f32], g: &mut [f32]) {
+    assert_eq!(dirs.len(), w.len() * d, "dirs must be K x d");
+    assert_eq!(g.len(), d);
+    ctx.for_each_shard_mut(g, |_, start, gb| {
+        gb.iter_mut().for_each(|v| *v = 0.0);
+        axpy_k_cols(w, dirs, d, start, gb);
+    });
+}
+
+/// Shard-parallel [`axpy_into`]: `out = x + a * d`, elementwise over
+/// disjoint shards — bitwise identical to the serial kernel.
+pub fn axpy_into_ctx(ctx: &ExecContext, out: &mut [f32], x: &[f32], a: f32, d: &[f32]) {
+    assert_eq!(x.len(), out.len());
+    assert_eq!(d.len(), out.len());
+    ctx.for_each_shard_mut(out, |_, start, ob| {
+        let xs = &x[start..start + ob.len()];
+        let ds = &d[start..start + ob.len()];
+        for i in 0..ob.len() {
+            ob[i] = xs[i] + a * ds[i];
+        }
+    });
 }
 
 /// Elementwise sign (0.0 stays 0.0) — used by JAGUAR SignSGD.
@@ -283,6 +343,37 @@ mod tests {
         let mut g = [7.0f32; 3];
         probe_combine(&[], 3, &[], &mut g);
         assert_eq!(g, [0.0; 3]);
+    }
+
+    #[test]
+    fn ctx_kernels_bitwise_match_serial_across_thread_counts() {
+        // same shapes as axpy_k_matches_k_axpys, plus odd shard lengths so
+        // shard and cache-block boundaries are misaligned on purpose
+        let d = BLOCK + 37;
+        let k = 4;
+        let rows: Vec<f32> = (0..k * d).map(|i| ((i % 13) as f32) - 6.0).collect();
+        let a = [0.5f32, -1.0, 0.0, 2.0];
+        let x: Vec<f32> = (0..d).map(|i| (i % 7) as f32 * 0.25).collect();
+        let mut y_serial = vec![1.0f32; d];
+        axpy_k(&a, &rows, &mut y_serial);
+        let mut g_serial = vec![0.0f32; d];
+        probe_combine(&rows, d, &a, &mut g_serial);
+        let mut o_serial = vec![0.0f32; d];
+        axpy_into(&mut o_serial, &x, 0.3, &g_serial);
+        for threads in [1usize, 3, 8] {
+            for shard_len in [33usize, BLOCK, d + 1] {
+                let ctx = ExecContext::new(threads).with_shard_len(shard_len);
+                let mut y = vec![1.0f32; d];
+                axpy_k_ctx(&ctx, &a, &rows, &mut y);
+                assert_eq!(y, y_serial, "axpy_k t={threads} sl={shard_len}");
+                let mut g = vec![9.0f32; d];
+                probe_combine_ctx(&ctx, &rows, d, &a, &mut g);
+                assert_eq!(g, g_serial, "probe_combine t={threads} sl={shard_len}");
+                let mut o = vec![0.0f32; d];
+                axpy_into_ctx(&ctx, &mut o, &x, 0.3, &g);
+                assert_eq!(o, o_serial, "axpy_into t={threads} sl={shard_len}");
+            }
+        }
     }
 
     #[test]

@@ -21,6 +21,7 @@ use anyhow::{bail, Result};
 
 use crate::data::Corpus;
 use crate::eval::Evaluator;
+use crate::exec::ExecContext;
 use crate::optim::{
     BaseOptimizer, CentralK1Estimator, ForwardAvgEstimator, GradEstimator,
     LdsdEstimator,
@@ -145,6 +146,9 @@ impl crate::sampler::DirectionSampler for Box<dyn crate::sampler::DirectionSampl
     fn sample(&mut self, dirs: &mut [f32], k: usize) {
         (**self).sample(dirs, k)
     }
+    fn set_exec(&mut self, ctx: ExecContext) {
+        (**self).set_exec(ctx)
+    }
     fn observe(&mut self, dirs: &[f32], losses: &[f64], k: usize) {
         (**self).observe(dirs, losses, k)
     }
@@ -162,14 +166,17 @@ impl crate::sampler::DirectionSampler for Box<dyn crate::sampler::DirectionSampl
     }
 }
 
-/// Instantiate the estimator described by `kind` for dimensionality `d`.
+/// Instantiate the estimator described by `kind` for dimensionality `d`,
+/// wired to the given shard-parallel execution context (the context
+/// cascades to the estimator's sampler).
 pub fn build_estimator(
     kind: &EstimatorKind,
     d: usize,
     tau: f32,
     seed: u64,
+    exec: &ExecContext,
 ) -> Box<dyn GradEstimator + Send> {
-    match kind {
+    let mut est: Box<dyn GradEstimator + Send> = match kind {
         EstimatorKind::CentralK1(s) => {
             Box::new(CentralK1Estimator::new(build_sampler(s, d, seed), tau))
         }
@@ -179,7 +186,9 @@ pub fn build_estimator(
         EstimatorKind::BestOfK { k, sampler } => {
             Box::new(LdsdEstimator::new(build_sampler(sampler, d, seed), tau, *k))
         }
-    }
+    };
+    est.set_exec(exec.clone());
+    est
 }
 
 /// Everything one training run needs (estimator x optimizer x budget).
@@ -299,15 +308,41 @@ pub struct Trainer<O: Oracle> {
     estimator: Box<dyn GradEstimator + Send>,
     optimizer: Box<dyn BaseOptimizer + Send>,
     g: Vec<f32>,
+    /// Probe-loss buffer reused across steps (no per-step allocation).
+    probe_losses: Vec<f64>,
 }
 
 impl<O: Oracle> Trainer<O> {
-    /// Wire up estimator + optimizer for `oracle`'s dimensionality.
+    /// Wire up estimator + optimizer for `oracle`'s dimensionality, with
+    /// the execution context taken from the environment
+    /// ([`ExecContext::from_env`]; `ZO_THREADS` overrides).  Results are
+    /// bitwise identical for any thread count (DESIGN.md §9).
     pub fn new(cfg: TrainConfig, oracle: O, corpus: Corpus) -> Result<Self> {
+        Self::with_exec(cfg, oracle, corpus, ExecContext::from_env())
+    }
+
+    /// [`Trainer::new`] with an explicit shard-parallel execution context:
+    /// the context cascades to the estimator, its sampler, and the oracle's
+    /// vectorized evaluation paths.
+    pub fn with_exec(
+        cfg: TrainConfig,
+        mut oracle: O,
+        corpus: Corpus,
+        exec: ExecContext,
+    ) -> Result<Self> {
         let d = oracle.dim();
-        let estimator = build_estimator(&cfg.estimator, d, cfg.tau, cfg.seed);
+        let estimator = build_estimator(&cfg.estimator, d, cfg.tau, cfg.seed, &exec);
         let optimizer = crate::optim::optimizers_by_name(&cfg.optimizer, d)?;
-        Ok(Self { cfg, oracle, corpus, estimator, optimizer, g: vec![0.0; d] })
+        oracle.set_exec(exec);
+        Ok(Self {
+            cfg,
+            oracle,
+            corpus,
+            estimator,
+            optimizer,
+            g: vec![0.0; d],
+            probe_losses: Vec::new(),
+        })
     }
 
     /// Read access to the oracle (budget inspection).
@@ -325,26 +360,31 @@ impl<O: Oracle> Trainer<O> {
         self.estimator.as_ref()
     }
 
-    /// One estimation step under the configured probe dispatch.
+    /// One estimation step under the configured probe dispatch.  Both
+    /// paths stage probe losses in the trainer's reusable buffer, so the
+    /// per-step hot path allocates nothing after warmup.
     fn estimate_step(&mut self) -> Result<crate::optim::Estimate> {
         match self.cfg.probe_dispatch {
-            ProbeDispatch::Batched => {
-                self.estimator.estimate(&mut self.oracle, &mut self.g)
-            }
+            ProbeDispatch::Batched => self.estimator.estimate_with(
+                &mut self.oracle,
+                &mut self.g,
+                &mut self.probe_losses,
+            ),
             ProbeDispatch::PerProbe => {
                 let d = self.oracle.dim();
-                let losses = {
+                {
                     let batch = self.estimator.propose()?;
-                    let mut ls = Vec::with_capacity(batch.k);
+                    self.probe_losses.clear();
                     for i in 0..batch.k {
-                        ls.push(self.oracle.loss_dir(
+                        let l = self.oracle.loss_dir(
                             &batch.dirs[i * d..(i + 1) * d],
                             batch.tau,
-                        )?);
+                        )?;
+                        self.probe_losses.push(l);
                     }
-                    ls
-                };
-                self.estimator.consume(&mut self.oracle, &losses, &mut self.g)
+                }
+                self.estimator
+                    .consume(&mut self.oracle, &self.probe_losses, &mut self.g)
             }
         }
     }
@@ -388,7 +428,7 @@ impl<O: Oracle> Trainer<O> {
             let opt = &mut self.optimizer;
             self.oracle.update_params(&mut |x| opt.step(x, g, lr))?;
             out.loss_curve
-                .push((self.oracle.oracle_calls() - start_calls, loss_proxy(&est)));
+                .push((self.oracle.oracle_calls() - start_calls, est.loss));
             step += 1;
 
             if self.cfg.eval_every > 0 {
@@ -428,19 +468,6 @@ impl<O: Oracle> Trainer<O> {
     fn train_batch_size(&self) -> usize {
         8 // matches BuildPlan.batch; PJRT oracles validate on set_batch
     }
-}
-
-/// A scalar per-step loss proxy from the probe losses.
-pub fn loss_proxy(est: &crate::optim::Estimate) -> f64 {
-    if est.losses.is_empty() {
-        return f64::NAN;
-    }
-    if let Some(sel) = est.selected {
-        if sel < est.losses.len() {
-            return est.losses[sel];
-        }
-    }
-    est.losses[0]
 }
 
 /// Small helper so train doesn't depend on optim internals.

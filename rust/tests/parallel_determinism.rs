@@ -1,0 +1,142 @@
+//! Determinism of the shard-parallel execution engine (DESIGN.md §9):
+//! the same configuration must produce bit-for-bit identical results on
+//! 1 and 8 threads — shard boundaries are fixed by `shard_len`, per-shard
+//! reductions combine in shard order, and sampler RNG substreams are
+//! keyed per (step, shard) cell.
+
+use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::oracle::{Oracle, QuadraticOracle};
+use zo_ldsd::sampler::{
+    CoordinateSampler, DirectionSampler, GaussianSampler, LdsdConfig, LdsdSampler,
+    SphereSampler,
+};
+use zo_ldsd::train::{TrainConfig, Trainer};
+
+fn ctx(threads: usize, shard_len: usize) -> ExecContext {
+    ExecContext::new(threads).with_shard_len(shard_len)
+}
+
+/// The headline acceptance test: a full Algorithm-2 training run on a
+/// closed-form oracle walks the *identical* trajectory under `--threads 1`
+/// and `--threads 8` — bitwise-equal loss curve and final parameters.
+#[test]
+fn train_loop_bitwise_identical_threads_1_vs_8() {
+    let d = 4096;
+    let run = |threads: usize| {
+        let cfg = TrainConfig {
+            cosine_schedule: false,
+            ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 600)
+        };
+        let oracle = QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
+        let corpus = Corpus::new(CorpusSpec::default_mini());
+        let mut t = Trainer::with_exec(cfg, oracle, corpus, ctx(threads, 512)).unwrap();
+        let out = t.run(None).unwrap();
+        (out.steps, out.loss_curve, t.oracle().params().to_vec())
+    };
+    let (s1, curve1, params1) = run(1);
+    let (s8, curve8, params8) = run(8);
+    assert_eq!(s1, s8, "step counts diverged");
+    assert_eq!(curve1.len(), curve8.len());
+    for (i, ((c1, l1), (c8, l8))) in curve1.iter().zip(curve8.iter()).enumerate() {
+        assert_eq!(c1, c8, "call axis diverged at step {i}");
+        assert_eq!(
+            l1.to_bits(),
+            l8.to_bits(),
+            "loss trajectory diverged at step {i}: {l1} vs {l8}"
+        );
+    }
+    for (i, (p1, p8)) in params1.iter().zip(params8.iter()).enumerate() {
+        assert_eq!(
+            p1.to_bits(),
+            p8.to_bits(),
+            "final parameters diverged at coordinate {i}: {p1} vs {p8}"
+        );
+    }
+}
+
+/// Every sampler's probe-matrix fill is a pure function of
+/// (seed, step, shard geometry): 1-thread and 8-thread contexts with the
+/// same shard length draw bit-identical direction matrices, step after
+/// step.
+#[test]
+fn sampler_fills_bitwise_identical_across_thread_counts() {
+    let d = 777; // odd length: shards and rows misalign on purpose
+    let k = 5;
+    let steps = 3;
+    let sample_all = |threads: usize| -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        let mut samplers: Vec<Box<dyn DirectionSampler>> = vec![
+            Box::new(GaussianSampler::new(d, 42)),
+            Box::new(SphereSampler::new(d, 42)),
+            Box::new(CoordinateSampler::new(d, 42)),
+            Box::new(LdsdSampler::new(d, 42, LdsdConfig::default())),
+        ];
+        for s in samplers.iter_mut() {
+            s.set_exec(ctx(threads, 128));
+            let mut dirs = vec![0.0f32; k * d];
+            for _ in 0..steps {
+                s.sample(&mut dirs, k);
+                out.push(dirs.clone());
+            }
+        }
+        out
+    };
+    let serial = sample_all(1);
+    let parallel = sample_all(8);
+    assert_eq!(serial.len(), parallel.len());
+    for (which, (a, b)) in serial.iter().zip(parallel.iter()).enumerate() {
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "fill {which} diverged at element {i}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+/// The LDSD policy update (shard-parallel scale + fused axpy_k reduce)
+/// keeps the learned mean bitwise identical across thread counts.
+#[test]
+fn ldsd_policy_updates_bitwise_identical_across_thread_counts() {
+    let d = 2000;
+    let k = 6;
+    let run = |threads: usize| -> Vec<f32> {
+        let mut s = LdsdSampler::new(d, 9, LdsdConfig::default());
+        s.set_exec(ctx(threads, 256));
+        let mut dirs = vec![0.0f32; k * d];
+        for step in 0..10 {
+            s.sample(&mut dirs, k);
+            let losses: Vec<f64> =
+                (0..k).map(|i| ((i * 7 + step) % 5) as f64 * 0.25).collect();
+            s.observe(&dirs, &losses, k);
+        }
+        s.policy_mean().unwrap().to_vec()
+    };
+    let mu1 = run(1);
+    let mu8 = run(8);
+    for (i, (a, b)) in mu1.iter().zip(mu8.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "mu diverged at {i}: {a} vs {b}");
+    }
+}
+
+/// Thread count must not change oracle-call accounting either — the
+/// budget-fair protocol is schedule-independent.
+#[test]
+fn budget_accounting_independent_of_thread_count() {
+    let d = 1024;
+    let run = |threads: usize| {
+        let cfg = TrainConfig {
+            cosine_schedule: false,
+            ..TrainConfig::gaussian_6fwd("zo_sgd_plain", 0.02, 180)
+        };
+        let oracle = QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
+        let corpus = Corpus::new(CorpusSpec::default_mini());
+        let mut t = Trainer::with_exec(cfg, oracle, corpus, ctx(threads, 200)).unwrap();
+        let out = t.run(None).unwrap();
+        (out.steps, out.oracle_calls)
+    };
+    assert_eq!(run(1), run(4));
+    assert_eq!(run(1), run(8));
+}

@@ -2,11 +2,15 @@
 //! proptest substrate (DESIGN.md §3: the vendored set has no proptest).
 
 use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::exec::ExecContext;
 use zo_ldsd::optim::{BaseOptimizer, ZoAdaMM, ZoSgd};
 use zo_ldsd::proptest::{check, Gen, U64Range, VecF32, VecPairF32};
 use zo_ldsd::rng::Rng;
 use zo_ldsd::sampler::{DirectionSampler, GaussianSampler, LdsdConfig, LdsdSampler};
-use zo_ldsd::tensor::{axpy_into, cosine, dot, normalize, nrm2};
+use zo_ldsd::tensor::{
+    axpy_into, axpy_into_ctx, axpy_k, axpy_k_ctx, cosine, dot, normalize, nrm2,
+    probe_combine, probe_combine_ctx,
+};
 
 const VEC: VecF32 = VecF32 { min_len: 1, max_len: 256, scale: 10.0 };
 
@@ -68,6 +72,66 @@ fn prop_axpy_into_linear() {
 fn prop_dot_cauchy_schwarz() {
     check("cauchy_schwarz", &VecPairF32(VEC), 300, |(a, b)| {
         dot(a, b).abs() <= nrm2(a) * nrm2(b) * (1.0 + 1e-4) + 1e-6
+    });
+}
+
+/// The shard-parallel kernels are bitwise identical to their serial
+/// references for *arbitrary* shapes, shard lengths and thread counts —
+/// the determinism contract of the sharded execution engine (DESIGN.md
+/// §9).  One seeded case draws (d, k, shard_len, threads) plus random
+/// contents and checks all three `_ctx` kernels at once.
+#[test]
+fn prop_parallel_kernels_bitwise_match_serial() {
+    check("parallel_kernels_match", &U64Range(0, 1 << 20), 60, |&s| {
+        let mut rng = Rng::new(s);
+        let d = 1 + rng.below(3000) as usize;
+        let k = 1 + rng.below(6) as usize;
+        let shard_len = 1 + rng.below(700) as usize;
+        let threads = 1 + rng.below(8) as usize;
+        let ctx = ExecContext::new(threads).with_shard_len(shard_len);
+
+        let mut rows = vec![0.0f32; k * d];
+        rng.fill_normal(&mut rows);
+        let mut w = vec![0.0f32; k];
+        rng.fill_normal(&mut w);
+        let mut base = vec![0.0f32; d];
+        rng.fill_normal(&mut base);
+
+        // axpy_k
+        let mut y_serial = base.clone();
+        axpy_k(&w, &rows, &mut y_serial);
+        let mut y_par = base.clone();
+        axpy_k_ctx(&ctx, &w, &rows, &mut y_par);
+        if y_serial
+            .iter()
+            .zip(y_par.iter())
+            .any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return false;
+        }
+
+        // probe_combine (output is overwritten, so garbage in is fine)
+        let mut g_serial = vec![7.0f32; d];
+        probe_combine(&rows, d, &w, &mut g_serial);
+        let mut g_par = vec![-3.0f32; d];
+        probe_combine_ctx(&ctx, &rows, d, &w, &mut g_par);
+        if g_serial
+            .iter()
+            .zip(g_par.iter())
+            .any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return false;
+        }
+
+        // axpy_into
+        let mut o_serial = vec![0.0f32; d];
+        axpy_into(&mut o_serial, &base, 0.37, &g_serial);
+        let mut o_par = vec![0.0f32; d];
+        axpy_into_ctx(&ctx, &mut o_par, &base, 0.37, &g_par);
+        o_serial
+            .iter()
+            .zip(o_par.iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits())
     });
 }
 
