@@ -1,13 +1,17 @@
 # Build orchestration for the three-layer stack (see README.md).
 #
-#   make artifacts     run L2+L1: lower models + kernels to artifacts/
-#   make build         compile the L3 coordinator (release)
-#   make test          tier-1 verify: cargo build --release && cargo test -q
-#   make doc           API docs, warnings fatal (CI parity)
-#   make bench         regenerate tables/figures from the artifacts
-#   make bench-smoke   compile + run ONE iteration of every bench (CI rot guard)
+#   make artifacts       run L2+L1: lower models + kernels to artifacts/
+#   make build           compile the L3 coordinator (release)
+#   make test            tier-1 verify: cargo build --release && cargo test -q
+#   make test-streamed   the test suite with streamed (seed-replay) probe
+#                        storage forced for every Trainer (CI parity)
+#   make lint            clippy, warnings fatal (CI parity; allow-list in ci.yml)
+#   make doc             API docs, warnings fatal (CI parity)
+#   make bench           regenerate tables/figures from the artifacts
+#   make bench-smoke     compile + run ONE iteration of every bench (CI rot
+#                        guard; includes one mem/* probe-storage row)
 
-.PHONY: artifacts build test doc bench bench-smoke clean
+.PHONY: artifacts build test test-streamed lint doc bench bench-smoke clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -18,12 +22,25 @@ build:
 test: build
 	cargo test -q
 
+test-streamed: build
+	ZO_PROBE_STORAGE=streamed cargo test -q
+
+lint:
+	cargo clippy --all-targets -- -D warnings \
+	  -A clippy::needless-range-loop -A clippy::manual-div-ceil \
+	  -A clippy::too-many-arguments -A clippy::new-without-default \
+	  -A clippy::manual-memcpy -A clippy::comparison-chain \
+	  -A clippy::type-complexity
+
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 bench:
 	cargo bench
 
+# smoke mode clamps every bench to one iteration; perf_hotpath keeps one
+# mem/bestofk5_d1M_{materialized,streamed} pair in smoke so the probe-
+# storage rows cannot rot
 bench-smoke:
 	cargo bench -- --smoke
 

@@ -48,6 +48,7 @@ fn main() -> Result<()> {
         config,
         eval_batches: 8,
         probe_dispatch: None,
+        probe_storage: None,
     };
 
     if sweep == "k" || sweep == "all" {

@@ -63,6 +63,7 @@ fn main() -> Result<()> {
                         config: cfg,
                         eval_batches: 8,
                         probe_dispatch: None,
+                        probe_storage: None,
                     });
                 }
             }
@@ -75,7 +76,7 @@ fn main() -> Result<()> {
 
     let mut table = Table::new(
         &format!("Table 1 (budget {budget} forwards)"),
-        &["model", "mode", "optimizer", "sampling", "accuracy"],
+        &["model", "mode", "optimizer", "sampling", "accuracy", "probe MiB"],
     );
     let mut json_rows = Vec::new();
     for r in &results {
@@ -86,12 +87,16 @@ fn main() -> Result<()> {
                     parts[0].into(), parts[1].into(), parts[2].into(),
                     parts[3].into(),
                     format!("{:.3}", tr.outcome.final_accuracy),
+                    // probe-state peak (grid-wide upper bound when the
+                    // grid runs trials concurrently; see TrialResult)
+                    format!("{:.1}", tr.probe_peak_bytes as f64 / (1 << 20) as f64),
                 ]);
                 json_rows.push(jobj(vec![
                     ("id", jstr(&tr.spec_id)),
                     ("accuracy", jnum(tr.outcome.final_accuracy)),
                     ("steps", jnum(tr.outcome.steps as f64)),
                     ("wall_seconds", jnum(tr.outcome.wall_seconds)),
+                    ("probe_peak_bytes", jnum(tr.probe_peak_bytes as f64)),
                 ]));
             }
             Err(e) => eprintln!("trial failed: {e:#}"),

@@ -45,6 +45,7 @@ fn main() {
         config: c,
         eval_batches: 8,
         probe_dispatch: None,
+        probe_storage: None,
     };
     if filter.is_empty() || filter == "k" {
         for k in [1usize, 5, 10] {

@@ -118,16 +118,87 @@ fn main() {
         b.bench(&format!("estimator/bestofk{k}_perprobe_16k"), (k + 1) as f64, || {
             let probe_losses: Vec<f64> = {
                 let batch = est.propose().unwrap();
+                let dirs = batch.dirs.expect("per-probe dispatch needs materialized probes");
                 (0..batch.k)
                     .map(|i| {
                         oracle
-                            .loss_dir(&batch.dirs[i * dq..(i + 1) * dq], batch.tau)
+                            .loss_dir(&dirs[i * dq..(i + 1) * dq], batch.tau)
                             .unwrap()
                     })
                     .collect()
             };
             est.consume(&mut oracle, &probe_losses, &mut g).unwrap();
         });
+    }
+
+    // --- probe storage: materialized vs streamed (the PR 3 tentpole) -------
+    // `mem/*` rows time one full best-of-K estimation step per storage mode
+    // and record the *measured* peak probe-state bytes (probe matrices +
+    // streaming scratch, via metrics::probe_tracker).  Streamed peaks are
+    // O(K * shard_len) per worker; materialized peaks are the K x d matrix,
+    // which is why d = 2^24 runs streamed-only.  Smoke mode keeps one
+    // d = 2^20 pair so CI always executes a mem row.
+    {
+        use zo_ldsd::metrics::probe_tracker;
+        use zo_ldsd::probe::ProbeStorage;
+        use zo_ldsd::report::Table;
+
+        let saved_max_seconds = b.max_seconds;
+        b.max_seconds = 1.5;
+        let mut mem_table = Table::new(
+            "probe-state peak memory (per estimate step)",
+            &["row", "storage", "peak MiB"],
+        );
+        let dims: &[usize] = if b.is_smoke() { &[1 << 20] } else { &[1 << 20, 1 << 22, 1 << 24] };
+        let ks: &[usize] = if b.is_smoke() { &[5] } else { &[5, 10] };
+        for &dm in dims {
+            for &k in ks {
+                for storage in [ProbeStorage::Materialized, ProbeStorage::Streamed] {
+                    // the K x d matrix alone is 320-640 MiB at 2^24:
+                    // that's the allocation this PR removes, so the
+                    // materialized arm stops at 2^22
+                    if storage == ProbeStorage::Materialized && dm >= 1 << 24 {
+                        continue;
+                    }
+                    let dlabel = match dm {
+                        x if x == 1 << 20 => "1M",
+                        x if x == 1 << 22 => "4M",
+                        _ => "16M",
+                    };
+                    let name = format!("mem/bestofk{k}_d{dlabel}_{}", storage.label());
+                    if !b.enabled(&name) {
+                        continue;
+                    }
+                    let ctx = ExecContext::new(4);
+                    let mut est = LdsdEstimator::with_storage(
+                        GaussianSampler::new(dm, 7),
+                        1e-3,
+                        k,
+                        storage,
+                    )
+                    .unwrap();
+                    est.set_exec(ctx.clone());
+                    let mut oracle = QuadraticOracle::new(
+                        vec![1.0f32; dm],
+                        vec![1.0f32; dm],
+                        vec![0.0f32; dm],
+                    );
+                    oracle.set_exec(ctx);
+                    let mut g = vec![0.0f32; dm];
+                    probe_tracker().reset();
+                    b.bench(&name, (k + 1) as f64, || {
+                        est.estimate(&mut oracle, &mut g).unwrap();
+                    });
+                    mem_table.row(vec![
+                        format!("bestofk{k}_d{dlabel}"),
+                        storage.label().to_string(),
+                        format!("{:.2}", probe_tracker().peak() as f64 / (1 << 20) as f64),
+                    ]);
+                }
+            }
+        }
+        mem_table.print();
+        b.max_seconds = saved_max_seconds;
     }
 
     // --- thread scaling: the shard-parallel execution engine ---------------

@@ -44,6 +44,7 @@ fn main() {
                 config: cfg,
                 eval_batches: 8,
                 probe_dispatch: None,
+                probe_storage: None,
             });
         }
     }
@@ -52,7 +53,7 @@ fn main() {
     let results = run_grid(dir, specs, &zo_ldsd::exec::ExecContext::new(3));
     let mut table = Table::new(
         &format!("Table 1 (bench subset, budget {budget} forwards)"),
-        &["trial", "accuracy", "steps", "secs"],
+        &["trial", "accuracy", "steps", "secs", "probe MiB"],
     );
     let mut accs = std::collections::BTreeMap::new();
     for r in &results {
@@ -63,6 +64,9 @@ fn main() {
                     format!("{:.4}", tr.outcome.final_accuracy),
                     tr.outcome.steps.to_string(),
                     format!("{:.1}", tr.outcome.wall_seconds),
+                    // probe-state peak (grid-wide upper bound when the
+                    // grid runs trials concurrently; see TrialResult)
+                    format!("{:.1}", tr.probe_peak_bytes as f64 / (1 << 20) as f64),
                 ]);
                 let method = tr.spec_id.rsplit('/').next().unwrap().to_string();
                 accs.entry(method).or_insert(tr.outcome.final_accuracy);

@@ -17,9 +17,10 @@ use crate::config::{Manifest, TrainMode};
 use crate::data::Corpus;
 use crate::eval::Evaluator;
 use crate::exec::ExecContext;
+use crate::metrics::probe_tracker;
 use crate::oracle::PjrtOracle;
 use crate::runtime::Runtime;
-use crate::train::{ProbeDispatch, TrainConfig, TrainOutcome, Trainer};
+use crate::train::{ProbeDispatch, ProbeStorage, TrainConfig, TrainOutcome, Trainer};
 
 /// One training run to schedule.
 #[derive(Clone, Debug)]
@@ -39,6 +40,10 @@ pub struct TrialSpec {
     /// here; grids can use it to A/B fused vs per-probe dispatch without
     /// cloning configs by hand.
     pub probe_dispatch: Option<ProbeDispatch>,
+    /// Per-trial override of the probe storage (None keeps the config's).
+    /// The CLI `train --probe-storage` flag flows through here; grids can
+    /// use it to A/B materialized vs streamed without cloning configs.
+    pub probe_storage: Option<ProbeStorage>,
 }
 
 /// Outcome of one scheduled trial.
@@ -48,17 +53,51 @@ pub struct TrialResult {
     pub spec_id: String,
     /// The training-run outcome.
     pub outcome: TrainOutcome,
+    /// The probe storage the run *resolved to* ("materialized" |
+    /// "streamed") after the env override, memory budget, and capability
+    /// fallbacks — which may differ from what the spec requested.
+    pub probe_storage: &'static str,
+    /// Measured peak probe-state bytes (probe matrices + streaming
+    /// scratch, from [`crate::metrics::probe_tracker`]).  For serial
+    /// schedules — [`run_trial`] and one-worker grids — the tracker is
+    /// reset at the start of the trial and this is the trial's exact
+    /// peak, never inheriting an earlier trial's high-water mark.  The
+    /// tracker is process-wide, so concurrent grids cannot attribute
+    /// peaks to individual trials; [`run_grid`] then reports the
+    /// *grid-wide* peak (one measurement window around the whole grid)
+    /// on every result — a shared upper bound rather than a per-trial
+    /// number.
+    pub probe_peak_bytes: usize,
 }
 
 /// Run one trial on the current thread (used by workers and by the
 /// single-threaded CLI path).  `exec` is the shard-level execution context
-/// the trial's train loop runs on.
+/// the trial's train loop runs on.  The probe-memory tracker is reset at
+/// trial start, so [`TrialResult::probe_peak_bytes`] is this trial's
+/// exact peak (serial-schedule measurement; concurrent grids go through
+/// [`run_grid`], which measures grid-wide instead).
 pub fn run_trial(
     artifact_dir: &str,
     manifest: &Manifest,
     spec: &TrialSpec,
     rt: &Runtime,
     exec: &ExecContext,
+) -> Result<TrialResult> {
+    run_trial_measured(artifact_dir, manifest, spec, rt, exec, true)
+}
+
+/// [`run_trial`] with the per-trial probe-memory window made optional:
+/// concurrent grid workers pass `measure = false` (a process-wide
+/// tracker cannot attribute peaks to one of several live trials — and a
+/// mid-grid reset would clamp a neighbour's transient peak away) and let
+/// [`run_grid`] bracket the whole grid with one measurement window.
+fn run_trial_measured(
+    artifact_dir: &str,
+    manifest: &Manifest,
+    spec: &TrialSpec,
+    rt: &Runtime,
+    exec: &ExecContext,
+    measure: bool,
 ) -> Result<TrialResult> {
     let entry = manifest.model(&spec.model)?;
     let corpus_spec = manifest.corpus(&spec.model)?.clone();
@@ -69,18 +108,31 @@ pub fn run_trial(
     if let Some(dispatch) = spec.probe_dispatch {
         cfg.probe_dispatch = dispatch;
     }
+    if let Some(storage) = spec.probe_storage {
+        cfg.probe_storage = storage;
+    }
     let corpus = Corpus::new(corpus_spec);
+    // per-trial probe-memory window: without this reset, every trial
+    // after the first reported the run's cumulative high-water mark
+    // instead of its own peak
+    if measure {
+        probe_tracker().reset();
+    }
     let mut trainer = Trainer::with_exec(cfg, oracle, corpus, exec.clone())?;
+    let probe_storage = trainer.estimator().probes().label();
     let outcome = trainer.run(Some(&evaluator))?;
+    let probe_peak_bytes = if measure { probe_tracker().peak() } else { 0 };
     let _ = artifact_dir;
-    Ok(TrialResult { spec_id: spec.id.clone(), outcome })
+    Ok(TrialResult { spec_id: spec.id.clone(), outcome, probe_storage, probe_peak_bytes })
 }
 
 /// Run a batch of trials on the shared execution context.  Trial-level
 /// workers come from `exec`'s pool (reused across grids); each trial gets
 /// a partitioned shard-level context so the two levels share one worker
 /// budget.  Results come back in spec order; per-trial failures are
-/// isolated into `Err` strings.
+/// isolated into `Err` strings.  Probe-memory peaks are exact per trial
+/// on one-worker grids and grid-wide (stamped on every result) otherwise
+/// — see [`TrialResult::probe_peak_bytes`].
 pub fn run_grid(
     artifact_dir: &str,
     specs: Vec<TrialSpec>,
@@ -89,6 +141,15 @@ pub fn run_grid(
     let workers = exec.threads().max(1).min(specs.len().max(1));
     let pool = exec.pool();
     let shard_exec = exec.partition(workers);
+    // Probe-memory measurement: with one worker, trials are serial and
+    // each gets its own exact per-trial window; with several, the
+    // process-wide tracker cannot attribute peaks per trial, so one
+    // grid-wide window brackets the whole grid and its peak is stamped
+    // on every result below (a shared upper bound).
+    let per_trial_peaks = workers <= 1;
+    if !per_trial_peaks {
+        probe_tracker().reset();
+    }
     // chunk specs round-robin so each worker compiles its artifacts once
     let mut chunks: Vec<Vec<(usize, TrialSpec)>> = vec![Vec::new(); workers];
     for (i, spec) in specs.into_iter().enumerate() {
@@ -103,8 +164,15 @@ pub fn run_grid(
         match (&rt, &manifest) {
             (Ok(rt), Ok(manifest)) => {
                 for (i, spec) in chunk {
-                    let r = run_trial(&dir, manifest, &spec, rt, &shard_exec)
-                        .map_err(|e| format!("{e:#}"));
+                    let r = run_trial_measured(
+                        &dir,
+                        manifest,
+                        &spec,
+                        rt,
+                        &shard_exec,
+                        per_trial_peaks,
+                    )
+                    .map_err(|e| format!("{e:#}"));
                     out.push((i, r));
                 }
             }
@@ -133,9 +201,18 @@ pub fn run_grid(
         }
     }
     indexed.sort_by_key(|(i, _)| *i);
+    let grid_peak = if per_trial_peaks { 0 } else { probe_tracker().peak() };
     indexed
         .into_iter()
-        .map(|(_, r)| r.map_err(|e| anyhow!(e)))
+        .map(|(_, r)| {
+            r.map(|mut tr| {
+                if !per_trial_peaks {
+                    tr.probe_peak_bytes = grid_peak;
+                }
+                tr
+            })
+            .map_err(|e| anyhow!(e))
+        })
         .collect()
 }
 
@@ -154,6 +231,8 @@ mod tests {
         let mk = |acc: f64| TrialResult {
             spec_id: "s".into(),
             outcome: TrainOutcome { final_accuracy: acc, ..Default::default() },
+            probe_storage: "materialized",
+            probe_peak_bytes: 0,
         };
         let a = mk(0.8);
         let b = mk(0.9);

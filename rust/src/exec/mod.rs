@@ -256,24 +256,78 @@ impl ExecContext {
     /// to `threads` borrowing workers.  Assignment order is arbitrary;
     /// callers keep determinism by indexing all effects by `i`.
     fn run_tasks(&self, n_tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        self.run_tasks_local(n_tasks, &|| (), &|_, i| task(i));
+    }
+
+    /// Scoped dynamic scheduler with worker-local state: like
+    /// [`ExecContext::run_tasks`], but each worker builds one `init()`
+    /// value at start-up and threads it through every task it executes.
+    /// The streamed probe engine uses this to give each worker its shard
+    /// regeneration scratch without allocating per shard.
+    fn run_tasks_local<S>(
+        &self,
+        n_tasks: usize,
+        init: &(dyn Fn() -> S + Sync),
+        task: &(dyn Fn(&mut S, usize) + Sync),
+    ) {
         let workers = self.threads.min(n_tasks);
         if workers <= 1 {
+            let mut scratch = init();
             for i in 0..n_tasks {
-                task(i);
+                task(&mut scratch, i);
             }
             return;
         }
         let next = AtomicUsize::new(0);
         thread::scope(|s| {
             for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n_tasks {
-                        break;
+                s.spawn(|| {
+                    let mut scratch = init();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_tasks {
+                            break;
+                        }
+                        task(&mut scratch, i);
                     }
-                    task(i);
                 });
             }
+        });
+    }
+
+    /// [`ExecContext::for_each_shard_mut`] with worker-local scratch:
+    /// `f(scratch, shard_index, start_offset, chunk)` where each worker's
+    /// `scratch` comes from one `mk_scratch()` call and is reused across
+    /// all shards that worker processes.  Shard geometry (and therefore
+    /// the write pattern) is identical to the scratch-free variant.
+    pub fn for_each_shard_mut_scratch<S, M, F>(&self, data: &mut [f32], mk_scratch: M, f: F)
+    where
+        M: Fn() -> S + Sync,
+        F: Fn(&mut S, usize, usize, &mut [f32]) + Sync,
+    {
+        if data.is_empty() {
+            return;
+        }
+        let sl = self.shard_len;
+        // serial fast path (see for_each_shard_mut): one scratch, shards
+        // in order
+        if self.threads <= 1 || data.len() <= sl {
+            let mut scratch = mk_scratch();
+            for (i, chunk) in data.chunks_mut(sl).enumerate() {
+                f(&mut scratch, i, i * sl, chunk);
+            }
+            return;
+        }
+        let chunks: Vec<Mutex<Option<(usize, &mut [f32])>>> = data
+            .chunks_mut(sl)
+            .enumerate()
+            .map(|(i, c)| Mutex::new(Some((i * sl, c))))
+            .collect();
+        let n = chunks.len();
+        self.run_tasks_local(n, &mk_scratch, &|scratch, i| {
+            let (start, chunk) =
+                chunks[i].lock().unwrap().take().expect("shard visited twice");
+            f(scratch, i, start, chunk);
         });
     }
 
@@ -373,6 +427,54 @@ impl ExecContext {
             (0..n).map(&f).collect()
         } else {
             self.map_items(n, f)
+        }
+    }
+
+    /// [`ExecContext::map_items`] with worker-local scratch: each worker
+    /// builds one `mk_scratch()` value and reuses it across every item it
+    /// processes (`f(scratch, item_index)`), so per-item state (streaming
+    /// cursors, projection accumulators) is allocated once per worker per
+    /// dispatch instead of once per item.
+    pub fn map_items_scratch<S, R, M, F>(&self, n: usize, mk_scratch: M, f: F) -> Vec<R>
+    where
+        R: Send,
+        M: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) -> R + Sync,
+    {
+        if self.threads <= 1 || n <= 1 {
+            let mut scratch = mk_scratch();
+            return (0..n).map(|i| f(&mut scratch, i)).collect();
+        }
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.run_tasks_local(n, &mk_scratch, &|scratch, i| {
+            *slots[i].lock().unwrap() = Some(f(scratch, i));
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("missing item result"))
+            .collect()
+    }
+
+    /// [`ExecContext::map_items_scratch`] gated by per-item work, like
+    /// [`ExecContext::map_items_sized`].  The gate only picks the schedule
+    /// — numerics are identical.
+    pub fn map_items_sized_scratch<S, R, M, F>(
+        &self,
+        n: usize,
+        per_item_work: usize,
+        mk_scratch: M,
+        f: F,
+    ) -> Vec<R>
+    where
+        R: Send,
+        M: Fn() -> S + Sync,
+        F: Fn(&mut S, usize) -> R + Sync,
+    {
+        if per_item_work < self.shard_len {
+            let mut scratch = mk_scratch();
+            (0..n).map(|i| f(&mut scratch, i)).collect()
+        } else {
+            self.map_items_scratch(n, mk_scratch, f)
         }
     }
 }
@@ -510,5 +612,47 @@ mod tests {
         ctx.for_each_shard_mut(&mut empty, |_, _, _| panic!("no shards expected"));
         ctx.for_each_row_mut(&mut empty, 3, |_, _| panic!("no rows expected"));
         assert!(ctx.map_items(0, |i| i).is_empty());
+        ctx.for_each_shard_mut_scratch(
+            &mut empty,
+            || (),
+            |_, _, _, _| panic!("no shards expected"),
+        );
+    }
+
+    #[test]
+    fn scratch_variant_covers_every_element_once() {
+        for threads in [1usize, 4] {
+            let ctx = ExecContext::new(threads).with_shard_len(7);
+            let mut data = vec![0.0f32; 50];
+            ctx.for_each_shard_mut_scratch(
+                &mut data,
+                || vec![0.0f32; 7],
+                |scratch, _, start, chunk| {
+                    // scratch is writable and at least shard-sized
+                    scratch[..chunk.len()].copy_from_slice(chunk);
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v += (start + i) as f32 + 1.0;
+                    }
+                },
+            );
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i as f32 + 1.0, "element {i} touched wrongly");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_allocated_once_per_worker() {
+        let made = Arc::new(AtomicUsize::new(0));
+        let ctx = ExecContext::new(3).with_shard_len(4);
+        let mut data = vec![0.0f32; 64]; // 16 shards
+        let m2 = Arc::clone(&made);
+        ctx.for_each_shard_mut_scratch(
+            &mut data,
+            move || m2.fetch_add(1, Ordering::SeqCst),
+            |_, _, _, _| {},
+        );
+        let n = made.load(Ordering::SeqCst);
+        assert!(n >= 1 && n <= 3, "one scratch per worker, got {n}");
     }
 }

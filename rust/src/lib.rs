@@ -30,6 +30,13 @@
 //! bitwise identical for any worker count — shard boundaries, shard-order
 //! reductions, and per-(step, shard) RNG substreams are all fixed by the
 //! context's shard length, never by the schedule (DESIGN.md §9).
+//!
+//! Probe *storage* is abstracted behind [`probe::ProbeSource`]
+//! (`--probe-storage materialized|streamed|auto`): the materialized path
+//! holds the K x d matrix, while the streamed path regenerates probe
+//! shards on demand from the samplers' RNG cells (MeZO-style seed
+//! replay), cutting probe state from O(K d) to O(K · shard_len) per
+//! worker with bitwise-identical trajectories (DESIGN.md §10).
 //! See README.md for the module map and DESIGN.md for design rationale.
 
 #![warn(missing_docs)]
@@ -46,6 +53,7 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod oracle;
+pub mod probe;
 pub mod proptest;
 pub mod report;
 pub mod rng;

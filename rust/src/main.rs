@@ -32,6 +32,7 @@ commands:
         [--optimizer zo_sgd|zo_adamm|jaguar] [--lr F] [--budget N]
         [--eval-every N] [--seed N] [--artifacts DIR]
         [--probe-dispatch batched|per-probe] [--threads N]
+        [--probe-storage auto|materialized|streamed]
   toy   [--steps N] [--variant baseline|ldsd] [--seed N]
   landscape [--grid N] [--eps F]
   memory [--model M] [--artifacts DIR]
@@ -100,6 +101,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("optimizer.name", "optimizer"), ("optimizer.lr", "lr"),
         ("budget", "budget"), ("eval_every", "eval-every"), ("seed", "seed"),
         ("probe_dispatch", "probe-dispatch"), ("threads", "threads"),
+        ("probe_storage", "probe-storage"),
     ] {
         if let Some(v) = args.get(cli) {
             kv.set(key, v);
@@ -129,6 +131,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.seed = seed;
     let dispatch =
         zo_ldsd::train::ProbeDispatch::parse(kv.get_or("probe_dispatch", "batched"))?;
+    // materialized K x d matrix, streamed seed replay, or auto-selection
+    // by memory budget; bitwise-identical trajectories (DESIGN.md §10)
+    let storage =
+        zo_ldsd::train::ProbeStorage::parse(kv.get_or("probe_storage", "auto"))?;
     // --threads 0 (the default) means "size from the environment":
     // ZO_THREADS if set, else cores - 1.  Results are bitwise identical
     // for any thread count (DESIGN.md §9).
@@ -148,20 +154,30 @@ fn cmd_train(args: &Args) -> Result<()> {
         config: cfg,
         eval_batches: args.get_usize("eval-batches", 8)?,
         probe_dispatch: Some(dispatch),
+        probe_storage: Some(storage),
     };
     println!(
-        "running {} (budget {budget} forwards, {} threads)",
+        "running {} (budget {budget} forwards, {} threads, {} probes requested)",
         spec.id,
-        exec.threads()
+        exec.threads(),
+        storage.label(),
     );
     let result = run_trial(&dir, &manifest, &spec, &rt, &exec)?;
     let o = &result.outcome;
     for (calls, acc) in &o.acc_curve {
         println!("  calls {calls:>8}  accuracy {acc:.4}");
     }
+    // probe storage reported from the result: what the run *resolved to*
+    // after the env override and capability fallbacks, not the request
     println!(
-        "done: steps {} calls {} final acc {:.4} best {:.4} ({:.1}s)",
-        o.steps, o.oracle_calls, o.final_accuracy, o.best_accuracy, o.wall_seconds
+        "done: steps {} calls {} final acc {:.4} best {:.4} ({:.1}s, {} probes, peak {:.1} MiB)",
+        o.steps,
+        o.oracle_calls,
+        o.final_accuracy,
+        o.best_accuracy,
+        o.wall_seconds,
+        result.probe_storage,
+        result.probe_peak_bytes as f64 / (1 << 20) as f64,
     );
     Ok(())
 }

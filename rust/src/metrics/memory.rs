@@ -6,6 +6,111 @@
 //! computes the per-method footprint from first principles so the
 //! `memory_table` bench can print a ZO-vs-FO comparison for our models —
 //! structured exactly like the paper's "12x more than inference" claim.
+//!
+//! Alongside the analytical report lives [`PeakTracker`], the *measured*
+//! side of the same claim: probe-state buffers (the materialized K x d
+//! matrix, or the streamed engine's per-worker shard scratch) register
+//! their allocations with the global [`probe_tracker`], and the
+//! coordinator resets it per trial so grid summaries report true per-trial
+//! peaks (DESIGN.md §10).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// High-water tracker for transient probe-state bytes.
+///
+/// `add`/`sub` maintain the currently-live byte count; `peak` is the
+/// maximum the live count has reached since the last [`PeakTracker::reset`].
+/// Reset clamps the peak back to the *currently live* bytes (not zero), so
+/// long-lived buffers allocated before a trial still count toward that
+/// trial's peak while high-water marks of earlier trials do not leak into
+/// later ones.
+#[derive(Debug, Default)]
+pub struct PeakTracker {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl PeakTracker {
+    /// An empty tracker.
+    pub const fn new() -> Self {
+        Self { current: AtomicUsize::new(0), peak: AtomicUsize::new(0) }
+    }
+
+    /// Register `bytes` of newly-allocated probe state.
+    pub fn add(&self, bytes: usize) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Unregister `bytes` of freed probe state.
+    pub fn sub(&self, bytes: usize) {
+        self.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Currently-live tracked bytes.
+    pub fn current(&self) -> usize {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark since the last reset.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Start a new measurement window: the peak becomes the currently-live
+    /// byte count.  The coordinator calls this at the start of every trial
+    /// so a trial never inherits the high-water mark of an earlier one.
+    pub fn reset(&self) {
+        self.peak.store(self.current.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// The process-wide tracker for probe-state buffers (probe matrices and
+/// streaming shard scratch).  Per-trial readings are exact for serial
+/// trial schedules; when the coordinator runs trials concurrently the
+/// shared state cuts both ways (a neighbour's buffers inflate a reading,
+/// a neighbour's reset can clamp a transient peak away), so
+/// concurrent-grid readings are indicative only.
+pub fn probe_tracker() -> &'static PeakTracker {
+    static TRACKER: PeakTracker = PeakTracker::new();
+    &TRACKER
+}
+
+/// RAII f32 buffer registered with the global [`probe_tracker`] for its
+/// lifetime.  Probe matrices and the streamed engine's per-worker shard
+/// scratch allocate through this, so measured per-trial peaks cover every
+/// probe-state byte — the instrumentation behind the "no K x d buffer
+/// when streaming" acceptance test.
+pub struct TrackedBuf {
+    buf: Vec<f32>,
+}
+
+impl TrackedBuf {
+    /// Allocate a zero-filled tracked buffer of `len` f32 elements.
+    pub fn zeroed(len: usize) -> Self {
+        probe_tracker().add(len * 4);
+        Self { buf: vec![0.0; len] }
+    }
+}
+
+impl Drop for TrackedBuf {
+    fn drop(&mut self) {
+        probe_tracker().sub(self.buf.len() * 4);
+    }
+}
+
+impl std::ops::Deref for TrackedBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for TrackedBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
 
 /// Byte accounting for one fine-tuning method on one model.
 #[derive(Clone, Debug)]
@@ -142,6 +247,21 @@ impl MemoryReport {
                 // mu policy (d) + K direction rows + g
                 method_state: 4 * d_trainable + 4 * k * d_trainable + g,
             },
+            MethodMemory {
+                method: format!("zo_sgd + LDSD (K={k}, streamed)"),
+                weights: w,
+                gradients: 0,
+                activations_backward: 0,
+                activations_forward: fwd,
+                optimizer_state: 4 * d_trainable,
+                // mu policy (d) + g; the K x d probe matrix is replaced by
+                // per-worker shard scratch regenerated from RNG cells
+                // (DESIGN.md §10) — (K + 1) shards per worker, one worker
+                // counted here (the analytical table is per-stream)
+                method_state: 4 * d_trainable
+                    + 4 * (k + 1) * crate::exec::DEFAULT_SHARD_LEN
+                    + g,
+            },
         ]
     }
 }
@@ -190,5 +310,54 @@ mod tests {
         let adam = lora.iter().find(|m| m.method == "fo_adam").unwrap();
         // optimizer state is tied to trainables, not total weights
         assert!(adam.optimizer_state < 4 * 1_321_986);
+    }
+
+    #[test]
+    fn streamed_ldsd_drops_the_kd_term() {
+        let r = report();
+        let mat = r.iter().find(|m| m.method == "zo_sgd + LDSD (K=5)").unwrap();
+        let st = r
+            .iter()
+            .find(|m| m.method == "zo_sgd + LDSD (K=5, streamed)")
+            .unwrap();
+        // K x d (26 MiB here) replaced by (K+1) shards (1.5 MiB)
+        assert!(st.method_state < mat.method_state);
+        assert_eq!(
+            mat.method_state - st.method_state,
+            4 * 5 * 1_321_986 - 4 * 6 * crate::exec::DEFAULT_SHARD_LEN
+        );
+    }
+
+    #[test]
+    fn peak_tracker_tracks_high_water() {
+        let t = PeakTracker::new();
+        t.add(100);
+        t.add(50);
+        t.sub(100);
+        assert_eq!(t.current(), 50);
+        assert_eq!(t.peak(), 150);
+    }
+
+    #[test]
+    fn peak_tracker_reset_is_per_trial() {
+        // the coordinator bug this guards against: without the per-trial
+        // reset, a later (smaller) trial reports the earlier trial's peak
+        let t = PeakTracker::new();
+        t.add(1000); // trial 1
+        t.sub(1000);
+        assert_eq!(t.peak(), 1000);
+        t.reset(); // trial 2 starts
+        assert_eq!(t.peak(), 0);
+        t.add(10);
+        t.sub(10);
+        assert_eq!(t.peak(), 10, "trial 2 must see its own peak, not 1000");
+    }
+
+    #[test]
+    fn peak_tracker_reset_keeps_live_bytes() {
+        let t = PeakTracker::new();
+        t.add(300); // long-lived buffer from before the trial
+        t.reset();
+        assert_eq!(t.peak(), 300, "live buffers still count after reset");
     }
 }

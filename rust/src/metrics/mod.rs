@@ -3,5 +3,5 @@
 mod memory;
 mod stats;
 
-pub use memory::{MemoryReport, MethodMemory};
+pub use memory::{probe_tracker, MemoryReport, MethodMemory, PeakTracker, TrackedBuf};
 pub use stats::{mean, percentile, stddev, Summary};

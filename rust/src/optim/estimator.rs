@@ -5,21 +5,24 @@
 //! report exactly how many oracle calls they spent (the §5.1 budget-fair
 //! protocol charges estimators by calls, not iterations).
 //!
-//! # Two-phase batched estimation
+//! # Two-phase batched estimation over a `ProbeSource`
 //!
 //! Estimation is split into a `propose`/`consume` flow around the K x d
-//! probe matrix:
+//! probe matrix, which lives behind a [`ProbeSource`] (DESIGN.md §10) —
+//! materialized (the stored matrix) or streamed (seed replay, no matrix):
 //!
-//! 1. [`GradEstimator::propose`] fills the estimator's reusable row-major
-//!    probe matrix from its [`DirectionSampler`] and returns it as a
-//!    [`ProbeBatch`] (no oracle calls yet);
-//! 2. the caller evaluates the whole batch — normally one fused
-//!    [`Oracle::loss_k`] dispatch, or K separate `loss_dir` calls for
-//!    per-probe A/B benchmarking (`ProbeDispatch` in [`crate::train`]);
-//! 3. [`GradEstimator::consume`] combines the probe losses into `g` with
-//!    the blocked [`probe_combine_ctx`] kernel (plus at most one follow-up
-//!    point evaluation: the forward-difference base loss, or Algorithm 2's
-//!    central-difference probe at `-tau` along the selected direction).
+//! 1. [`GradEstimator::propose`] advances the estimator's probe source to
+//!    this step's directions and describes the required evaluations (no
+//!    oracle calls yet);
+//! 2. the caller evaluates the batch — normally one fused
+//!    [`Oracle::loss_probes`] dispatch, or K separate `loss_dir` calls on
+//!    the materialized matrix for per-probe A/B benchmarking
+//!    (`ProbeDispatch` in [`crate::train`]);
+//! 3. [`GradEstimator::consume`] combines the probe losses into `g`
+//!    through the source's fused combine kernels (plus at most one
+//!    follow-up point evaluation: the forward-difference base loss, or
+//!    Algorithm 2's central-difference probe at `-tau` along the selected
+//!    direction).
 //!
 //! [`GradEstimator::estimate`] is the one-call convenience that wires the
 //! three steps together; [`GradEstimator::estimate_with`] is the hot-path
@@ -27,26 +30,29 @@
 //!
 //! Every O(d) and O(K d) pass goes through the estimator's installed
 //! [`ExecContext`], so combines run shard-parallel with results bitwise
-//! identical for any worker count (DESIGN.md §9).  The per-step probe
-//! losses are kept in a reusable buffer exposed via
-//! [`GradEstimator::last_losses`] — nothing on the per-step path allocates
-//! after warmup.
+//! identical for any worker count (DESIGN.md §9) — and, by the probe
+//! source contract, identical across storage modes too.  The per-step
+//! probe losses are kept in a reusable buffer exposed via
+//! [`GradEstimator::last_losses`].
 
 use anyhow::{bail, Result};
 
 use crate::exec::ExecContext;
 use crate::oracle::Oracle;
+use crate::probe::{
+    build_source, BoxedSampler, ProbeLayout, ProbeSource, ProbeStorage,
+};
 use crate::sampler::DirectionSampler;
-use crate::tensor::probe_combine_ctx;
 
 /// One batch of probe evaluations requested by [`GradEstimator::propose`]:
-/// `k` rows of a row-major `k x d` direction matrix, each to be evaluated
-/// at `f(x + tau * dir)`.
+/// `k` rows, each to be evaluated at `f(x + tau * dir)`.
 #[derive(Clone, Copy, Debug)]
 pub struct ProbeBatch<'a> {
-    /// Row-major `k x d` direction matrix (borrowed from the estimator's
-    /// reusable buffer; valid until the next `propose`).
-    pub dirs: &'a [f32],
+    /// Row-major `k x d` direction matrix when the estimator's probe
+    /// source materializes one (valid until the next `propose`); `None`
+    /// on the streamed path, where rows are replayed on demand through
+    /// [`GradEstimator::probes`].
+    pub dirs: Option<&'a [f32]>,
     /// Number of probe rows.
     pub k: usize,
     /// Finite-difference scale each row is evaluated at.
@@ -75,10 +81,13 @@ pub struct Estimate {
 
 /// Turns forward evaluations into a dense gradient surrogate.
 pub trait GradEstimator {
-    /// Phase 1: sample this step's directions into the estimator's
-    /// reusable probe matrix and describe the required evaluations.
-    /// Performs no oracle calls.
+    /// Phase 1: advance the probe source to this step's directions and
+    /// describe the required evaluations.  Performs no oracle calls.
     fn propose(&mut self) -> Result<ProbeBatch<'_>>;
+
+    /// The probe source holding (or replaying) the last proposed batch —
+    /// the handle [`Oracle::loss_probes`] evaluates against.
+    fn probes(&self) -> &dyn ProbeSource;
 
     /// Phase 2: combine the `losses` of the last proposed batch (in row
     /// order) into `g` (len d).  May spend extra oracle calls for point
@@ -88,8 +97,8 @@ pub trait GradEstimator {
     ///
     /// Each `consume` must be paired with a preceding call to
     /// [`GradEstimator::propose`]: combining without one (or twice for
-    /// one propose) would silently read a stale or zero probe matrix,
-    /// so it is an error.
+    /// one propose) would silently read a stale probe step, so it is an
+    /// error.
     fn consume(
         &mut self,
         oracle: &mut dyn Oracle,
@@ -98,31 +107,31 @@ pub trait GradEstimator {
     ) -> Result<Estimate>;
 
     /// Estimate grad f(x) into `g` (len d) in one call: propose, evaluate
-    /// the batch via one fused [`Oracle::loss_k`] dispatch, consume.  The
-    /// oracle's current batch must be set by the caller.
+    /// the batch via one fused [`Oracle::loss_probes`] dispatch, consume.
+    /// The oracle's current batch must be set by the caller.
     fn estimate(&mut self, oracle: &mut dyn Oracle, g: &mut [f32]) -> Result<Estimate> {
         let mut scratch = Vec::new();
         self.estimate_with(oracle, g, &mut scratch)
     }
 
     /// [`GradEstimator::estimate`] with a caller-provided probe-loss
-    /// buffer, reused across steps on the train-loop hot path (no per-step
-    /// allocation).
+    /// buffer, reused across steps on the train-loop hot path.
     fn estimate_with(
         &mut self,
         oracle: &mut dyn Oracle,
         g: &mut [f32],
         probe_losses: &mut Vec<f64>,
     ) -> Result<Estimate> {
-        {
+        let (k, tau) = {
             let batch = self.propose()?;
-            oracle.loss_k_into(batch.dirs, batch.k, batch.tau, probe_losses)?;
-        }
+            (batch.k, batch.tau)
+        };
+        oracle.loss_probes(self.probes(), k, tau, probe_losses)?;
         self.consume(oracle, probe_losses, g)
     }
 
     /// Install the shard-parallel execution context used by the combine
-    /// kernels, and forwarded to the estimator's direction sampler.
+    /// kernels, and forwarded to the estimator's probe source + sampler.
     fn set_exec(&mut self, _ctx: ExecContext) {}
 
     /// The probe losses of the last completed `consume` (diagnostics):
@@ -138,8 +147,8 @@ pub trait GradEstimator {
     /// Short identifier used in run labels.
     fn name(&self) -> &str;
 
-    /// Bytes of persistent estimator state (memory accounting): direction
-    /// buffers + sampler policy state.
+    /// Bytes of persistent estimator state (memory accounting): probe
+    /// representation + sampler policy state.
     fn state_bytes(&self) -> usize;
 }
 
@@ -147,48 +156,45 @@ pub trait GradEstimator {
 /// (MeZO-style; the "Gaussian, 2 forwards, more iterations" row of
 /// Table 1):  g = v * (f(x + tau v) - f(x - tau v)) / (2 tau).
 ///
-/// Batched form: the probe matrix is `[v; -v]` (2 x d), so both sides of
-/// the central difference ride one `loss_k` dispatch.
-pub struct CentralK1Estimator<S: DirectionSampler> {
-    /// Direction source for the single probe v.
-    pub sampler: S,
-    /// Finite-difference scale.
-    pub tau: f32,
-    /// 2 x d probe matrix: row 0 is v, row 1 is -v.
-    dirs: Vec<f32>,
+/// Batched form: the probe source presents `[v; -v]` (2 x d,
+/// [`ProbeLayout::CentralPair`]), so both sides of the central difference
+/// ride one batch dispatch.
+pub struct CentralK1Estimator {
+    probes: Box<dyn ProbeSource>,
+    tau: f32,
     losses: Vec<f64>,
-    exec: ExecContext,
     proposed: bool,
 }
 
-impl<S: DirectionSampler> CentralK1Estimator<S> {
-    /// Build with a direction sampler and finite-difference scale.
-    pub fn new(sampler: S, tau: f32) -> Self {
-        let d = sampler.dim();
-        Self {
-            sampler,
-            tau,
-            dirs: vec![0.0; 2 * d],
-            losses: Vec::with_capacity(2),
-            exec: ExecContext::serial(),
-            proposed: false,
-        }
+impl CentralK1Estimator {
+    /// Build with a direction sampler and finite-difference scale on the
+    /// materialized (reference) probe path.
+    pub fn new<S: DirectionSampler + Send + Sync + 'static>(sampler: S, tau: f32) -> Self {
+        Self::with_storage(sampler, tau, ProbeStorage::Materialized)
+            .expect("materialized probes are always constructible")
+    }
+
+    /// [`CentralK1Estimator::new`] with an explicit probe storage choice.
+    pub fn with_storage<S: DirectionSampler + Send + Sync + 'static>(
+        sampler: S,
+        tau: f32,
+        storage: ProbeStorage,
+    ) -> Result<Self> {
+        let sampler: BoxedSampler = Box::new(sampler);
+        let probes = build_source(storage, sampler, ProbeLayout::CentralPair, 2)?;
+        Ok(Self { probes, tau, losses: Vec::with_capacity(2), proposed: false })
     }
 }
 
-impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
+impl GradEstimator for CentralK1Estimator {
     fn propose(&mut self) -> Result<ProbeBatch<'_>> {
-        let d = self.sampler.dim();
-        let (v, neg) = self.dirs.split_at_mut(d);
-        self.sampler.sample(v, 1);
-        let v_ro: &[f32] = v;
-        self.exec.for_each_shard_mut(neg, |_, start, chunk| {
-            for (i, n) in chunk.iter_mut().enumerate() {
-                *n = -v_ro[start + i];
-            }
-        });
+        self.probes.advance();
         self.proposed = true;
-        Ok(ProbeBatch { dirs: &self.dirs, k: 2, tau: self.tau })
+        Ok(ProbeBatch { dirs: self.probes.dirs(), k: 2, tau: self.tau })
+    }
+
+    fn probes(&self) -> &dyn ProbeSource {
+        &*self.probes
     }
 
     fn consume(
@@ -204,16 +210,9 @@ impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
             bail!("central_k1: expected 2 probe losses, got {}", losses.len());
         }
         self.proposed = false;
-        let d = self.sampler.dim();
         let (fp, fm) = (losses[0], losses[1]);
         let coeff = (fp - fm) / (2.0 * self.tau as f64);
-        let cf = coeff as f32;
-        let v = &self.dirs[..d];
-        self.exec.for_each_shard_mut(g, |_, start, gb| {
-            for (i, gi) in gb.iter_mut().enumerate() {
-                *gi = cf * v[start + i];
-            }
-        });
+        self.probes.scaled_row(0, coeff as f32, g);
         self.losses.clear();
         self.losses.push(fp);
         self.losses.push(fm);
@@ -221,8 +220,7 @@ impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
     }
 
     fn set_exec(&mut self, ctx: ExecContext) {
-        self.sampler.set_exec(ctx.clone());
-        self.exec = ctx;
+        self.probes.set_exec(ctx);
     }
 
     fn last_losses(&self) -> &[f64] {
@@ -238,7 +236,7 @@ impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
     }
 
     fn state_bytes(&self) -> usize {
-        self.dirs.len() * 4 + self.sampler.state_bytes()
+        self.probes.probe_state_bytes() + self.probes.sampler().state_bytes()
     }
 }
 
@@ -246,49 +244,59 @@ impl<S: DirectionSampler> GradEstimator for CentralK1Estimator<S> {
 /// the "Gaussian, 6 forwards, same iterations" row):
 /// g = (1/K) sum_i v_i (f(x + tau v_i) - f(x)) / tau.
 ///
-/// Batched form: all K probes go through one `loss_k` dispatch; the base
+/// Batched form: all K probes go through one batch dispatch; the base
 /// loss f(x) is the one point evaluation `consume` performs, and the
-/// combine is a single [`probe_combine_ctx`] reduce over the probe matrix.
-pub struct ForwardAvgEstimator<S: DirectionSampler> {
-    /// Direction source for the K probes.
-    pub sampler: S,
-    /// Finite-difference scale.
-    pub tau: f32,
-    /// Number of probe directions per step.
-    pub k: usize,
-    dirs: Vec<f32>,
+/// combine is a single fused reduce over the probe source.
+pub struct ForwardAvgEstimator {
+    probes: Box<dyn ProbeSource>,
+    tau: f32,
+    k: usize,
     weights: Vec<f32>,
     losses: Vec<f64>,
     zero: Vec<f32>,
-    exec: ExecContext,
     proposed: bool,
 }
 
-impl<S: DirectionSampler> ForwardAvgEstimator<S> {
+impl ForwardAvgEstimator {
     /// Build with a direction sampler, finite-difference scale and probe
-    /// count (k >= 1).
-    pub fn new(sampler: S, tau: f32, k: usize) -> Self {
+    /// count (k >= 1) on the materialized (reference) probe path.
+    pub fn new<S: DirectionSampler + Send + Sync + 'static>(sampler: S, tau: f32, k: usize) -> Self {
+        Self::with_storage(sampler, tau, k, ProbeStorage::Materialized)
+            .expect("materialized probes are always constructible")
+    }
+
+    /// [`ForwardAvgEstimator::new`] with an explicit probe storage choice.
+    pub fn with_storage<S: DirectionSampler + Send + Sync + 'static>(
+        sampler: S,
+        tau: f32,
+        k: usize,
+        storage: ProbeStorage,
+    ) -> Result<Self> {
         assert!(k >= 1);
+        let sampler: BoxedSampler = Box::new(sampler);
         let d = sampler.dim();
-        Self {
-            sampler,
+        let probes = build_source(storage, sampler, ProbeLayout::Direct, k)?;
+        Ok(Self {
+            probes,
             tau,
             k,
-            dirs: vec![0.0; k * d],
             weights: Vec::with_capacity(k),
             losses: Vec::with_capacity(k + 1),
             zero: vec![0.0; d],
-            exec: ExecContext::serial(),
             proposed: false,
-        }
+        })
     }
 }
 
-impl<S: DirectionSampler> GradEstimator for ForwardAvgEstimator<S> {
+impl GradEstimator for ForwardAvgEstimator {
     fn propose(&mut self) -> Result<ProbeBatch<'_>> {
-        self.sampler.sample(&mut self.dirs, self.k);
+        self.probes.advance();
         self.proposed = true;
-        Ok(ProbeBatch { dirs: &self.dirs, k: self.k, tau: self.tau })
+        Ok(ProbeBatch { dirs: self.probes.dirs(), k: self.k, tau: self.tau })
+    }
+
+    fn probes(&self) -> &dyn ProbeSource {
+        &*self.probes
     }
 
     fn consume(
@@ -308,13 +316,12 @@ impl<S: DirectionSampler> GradEstimator for ForwardAvgEstimator<S> {
             );
         }
         self.proposed = false;
-        let d = self.sampler.dim();
         let f_base = oracle.loss_dir(&self.zero, 0.0)?;
         let denom = self.k as f64 * self.tau as f64;
         self.weights.clear();
         self.weights
             .extend(losses.iter().map(|l| ((l - f_base) / denom) as f32));
-        probe_combine_ctx(&self.exec, &self.dirs, d, &self.weights, g);
+        self.probes.combine(&self.weights, g);
         // trait contract: batch losses in row order first, then the extra
         // point evaluation (here the forward-difference base loss)
         self.losses.clear();
@@ -329,8 +336,7 @@ impl<S: DirectionSampler> GradEstimator for ForwardAvgEstimator<S> {
     }
 
     fn set_exec(&mut self, ctx: ExecContext) {
-        self.sampler.set_exec(ctx.clone());
-        self.exec = ctx;
+        self.probes.set_exec(ctx);
     }
 
     fn last_losses(&self) -> &[f64] {
@@ -346,8 +352,9 @@ impl<S: DirectionSampler> GradEstimator for ForwardAvgEstimator<S> {
     }
 
     fn state_bytes(&self) -> usize {
-        (self.dirs.len() + self.weights.capacity() + self.zero.len()) * 4
-            + self.sampler.state_bytes()
+        self.probes.probe_state_bytes()
+            + (self.weights.capacity() + self.zero.len()) * 4
+            + self.probes.sampler().state_bytes()
     }
 }
 
@@ -359,52 +366,65 @@ impl<S: DirectionSampler> GradEstimator for ForwardAvgEstimator<S> {
 /// degenerates to best-of-K Gaussian selection (an ablation arm), with
 /// [`crate::sampler::LdsdSampler`] it is the paper's full method.
 ///
-/// Batched form: the K candidate probes ride one `loss_k` dispatch;
-/// `consume` spends one extra `loss_dir` at `-tau` along the selected
-/// direction (line 5 reuses the `+tau` loss from the batch), then feeds
-/// the *same* probe matrix to the sampler's REINFORCE update — no second
-/// pass over K vectors.
-pub struct LdsdEstimator<S: DirectionSampler> {
-    /// Direction policy (learnable for [`crate::sampler::LdsdSampler`]).
-    pub sampler: S,
-    /// Finite-difference scale.
-    pub tau: f32,
-    /// Number of candidate directions per step.
-    pub k: usize,
-    dirs: Vec<f32>,
+/// Batched form: the K candidate probes ride one batch dispatch; `consume`
+/// spends one extra `loss_dir` at `-tau` along the selected direction
+/// (line 5 reuses the `+tau` loss from the batch), then feeds the same
+/// probe step to the sampler's REINFORCE update through the probe source —
+/// on the streamed path the update replays the probe shards instead of
+/// re-reading a stored matrix.
+pub struct LdsdEstimator {
+    probes: Box<dyn ProbeSource>,
+    tau: f32,
+    k: usize,
     losses: Vec<f64>,
     exec: ExecContext,
     proposed: bool,
 }
 
-impl<S: DirectionSampler> LdsdEstimator<S> {
+impl LdsdEstimator {
     /// Build with a direction sampler, finite-difference scale and
-    /// candidate count (k >= 1).
-    pub fn new(sampler: S, tau: f32, k: usize) -> Self {
+    /// candidate count (k >= 1) on the materialized (reference) probe
+    /// path.
+    pub fn new<S: DirectionSampler + Send + Sync + 'static>(sampler: S, tau: f32, k: usize) -> Self {
+        Self::with_storage(sampler, tau, k, ProbeStorage::Materialized)
+            .expect("materialized probes are always constructible")
+    }
+
+    /// [`LdsdEstimator::new`] with an explicit probe storage choice.
+    pub fn with_storage<S: DirectionSampler + Send + Sync + 'static>(
+        sampler: S,
+        tau: f32,
+        k: usize,
+        storage: ProbeStorage,
+    ) -> Result<Self> {
         assert!(k >= 1);
-        let d = sampler.dim();
-        Self {
-            sampler,
+        let sampler: BoxedSampler = Box::new(sampler);
+        let probes = build_source(storage, sampler, ProbeLayout::Direct, k)?;
+        Ok(Self {
+            probes,
             tau,
             k,
-            dirs: vec![0.0; k * d],
             losses: Vec::with_capacity(k + 1),
             exec: ExecContext::serial(),
             proposed: false,
-        }
+        })
     }
 
     /// The underlying direction sampler (policy diagnostics).
-    pub fn sampler(&self) -> &S {
-        &self.sampler
+    pub fn sampler(&self) -> &dyn DirectionSampler {
+        self.probes.sampler()
     }
 }
 
-impl<S: DirectionSampler> GradEstimator for LdsdEstimator<S> {
+impl GradEstimator for LdsdEstimator {
     fn propose(&mut self) -> Result<ProbeBatch<'_>> {
-        self.sampler.sample(&mut self.dirs, self.k);
+        self.probes.advance();
         self.proposed = true;
-        Ok(ProbeBatch { dirs: &self.dirs, k: self.k, tau: self.tau })
+        Ok(ProbeBatch { dirs: self.probes.dirs(), k: self.k, tau: self.tau })
+    }
+
+    fn probes(&self) -> &dyn ProbeSource {
+        &*self.probes
     }
 
     fn consume(
@@ -424,7 +444,7 @@ impl<S: DirectionSampler> GradEstimator for LdsdEstimator<S> {
             );
         }
         self.proposed = false;
-        let d = self.sampler.dim();
+        let d = self.probes.dim();
         // greedy selection (line 4)
         let best = losses
             .iter()
@@ -432,19 +452,34 @@ impl<S: DirectionSampler> GradEstimator for LdsdEstimator<S> {
             .min_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
             .map(|(i, _)| i)
             .unwrap_or(0);
-        let vstar = &self.dirs[best * d..(best + 1) * d];
-        // central difference along v* (line 5); f(x + tau v*) is reused
-        let f_minus = oracle.loss_dir(vstar, -self.tau)?;
+        // central difference along v* (line 5); f(x + tau v*) is reused.
+        // Materialized sources hand the oracle the stored row; streamed
+        // sources replay v* into the caller's g buffer (the one O(d)
+        // vector already in play) — no extra allocation either way.
+        let f_minus = match self.probes.dirs() {
+            Some(dirs) => oracle.loss_dir(&dirs[best * d..(best + 1) * d], -self.tau)?,
+            None => {
+                self.probes.scaled_row(best, 1.0, g);
+                oracle.loss_dir(g, -self.tau)?
+            }
+        };
         let coeff = (losses[best] - f_minus) / (2.0 * self.tau as f64);
         let cf = coeff as f32;
-        self.exec.for_each_shard_mut(g, |_, start, gb| {
-            for (i, gi) in gb.iter_mut().enumerate() {
-                *gi = cf * vstar[start + i];
+        match self.probes.dirs() {
+            Some(_) => self.probes.scaled_row(best, cf, g),
+            None => {
+                // g already holds v* (replayed above): scale in place, one
+                // multiply per element — same product as cf * v bitwise
+                self.exec.for_each_shard_mut(g, |_, _, gb| {
+                    for v in gb.iter_mut() {
+                        *v *= cf;
+                    }
+                });
             }
-        });
-        // policy update from all K probes (lines 6/8), reusing the probe
-        // matrix the batch was evaluated on
-        self.sampler.observe(&self.dirs, losses, self.k);
+        }
+        // policy update from all K probes (lines 6/8) through the probe
+        // source: materialized feeds the stored matrix, streamed replays
+        self.probes.observe(losses);
         self.losses.clear();
         self.losses.extend_from_slice(losses);
         self.losses.push(f_minus);
@@ -457,7 +492,7 @@ impl<S: DirectionSampler> GradEstimator for LdsdEstimator<S> {
     }
 
     fn set_exec(&mut self, ctx: ExecContext) {
-        self.sampler.set_exec(ctx.clone());
+        self.probes.set_exec(ctx.clone());
         self.exec = ctx;
     }
 
@@ -474,7 +509,7 @@ impl<S: DirectionSampler> GradEstimator for LdsdEstimator<S> {
     }
 
     fn state_bytes(&self) -> usize {
-        self.dirs.len() * 4 + self.sampler.state_bytes()
+        self.probes.probe_state_bytes() + self.probes.sampler().state_bytes()
     }
 }
 
@@ -499,13 +534,10 @@ mod tests {
         let e = est.estimate(&mut o, &mut g).unwrap();
         assert_eq!(e.calls, 2);
         // for the quadratic, fd along v is exact: coeff = <grad, v>
-        // (est.dirs row 0 is v; zip stops at d)
+        // (probe row 0 is v)
+        let v = est.probes().dirs().unwrap()[..d].to_vec();
         let true_grad = vec![-1.0f32; d];
-        let vdotg: f32 = true_grad
-            .iter()
-            .zip(est.dirs.iter())
-            .map(|(a, b)| a * b)
-            .sum();
+        let vdotg: f32 = true_grad.iter().zip(v.iter()).map(|(a, b)| a * b).sum();
         assert!(
             ((e.fd_coeff as f32) - vdotg).abs() < 1e-2 * (1.0 + vdotg.abs()),
             "coeff {} vs <g,v> {vdotg}",
@@ -519,9 +551,10 @@ mod tests {
         let mut est = CentralK1Estimator::new(GaussianSampler::new(d, 3), 1e-3);
         let batch = est.propose().unwrap();
         assert_eq!(batch.k, 2);
-        assert_eq!(batch.dirs.len(), 2 * d);
+        let dirs = batch.dirs.unwrap();
+        assert_eq!(dirs.len(), 2 * d);
         for i in 0..d {
-            assert_eq!(batch.dirs[d + i], -batch.dirs[i]);
+            assert_eq!(dirs[d + i], -dirs[i]);
         }
     }
 
@@ -567,11 +600,9 @@ mod tests {
         let mut g2 = vec![0.0f32; d];
         let losses = {
             let batch = split.propose().unwrap();
+            let dirs = batch.dirs.unwrap();
             (0..batch.k)
-                .map(|i| {
-                    o2.loss_dir(&batch.dirs[i * d..(i + 1) * d], batch.tau)
-                        .unwrap()
-                })
+                .map(|i| o2.loss_dir(&dirs[i * d..(i + 1) * d], batch.tau).unwrap())
                 .collect::<Vec<f64>>()
         };
         let e2 = split.consume(&mut o2, &losses, &mut g2).unwrap();
@@ -632,7 +663,7 @@ mod tests {
     #[test]
     fn consume_requires_propose() {
         // Combining without a propose (or twice for one propose) would
-        // read a stale/zero probe matrix; both must be rejected.
+        // read a stale probe step; both must be rejected.
         let d = 8;
         let mut o = quad(d);
         let mut est = LdsdEstimator::new(
@@ -741,6 +772,80 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
             for (x, y) in e1.last_losses().iter().zip(e8.last_losses().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_estimators_bitwise_match_materialized() {
+        // The PR 3 acceptance property at the estimator level: same seed,
+        // same shard geometry, both storage modes, any thread count — the
+        // Estimates, gradients and probe losses are bit-for-bit equal.
+        let d = 2000;
+        let k = 5;
+        let mk = |storage: ProbeStorage, threads: usize| {
+            let mut est = LdsdEstimator::with_storage(
+                LdsdSampler::new(d, 77, LdsdConfig::default()),
+                1e-3,
+                k,
+                storage,
+            )
+            .unwrap();
+            est.set_exec(crate::exec::ExecContext::new(threads).with_shard_len(192));
+            est
+        };
+        let mut om = quad(d);
+        let mut os = quad(d);
+        os.set_exec(crate::exec::ExecContext::new(4).with_shard_len(192));
+        let mut em = mk(ProbeStorage::Materialized, 1);
+        let mut es = mk(ProbeStorage::Streamed, 4);
+        assert_eq!(es.probes().label(), "streamed");
+        let mut gm = vec![0.0f32; d];
+        let mut gs = vec![0.0f32; d];
+        for _ in 0..4 {
+            let a = em.estimate(&mut om, &mut gm).unwrap();
+            let b = es.estimate(&mut os, &mut gs).unwrap();
+            assert_eq!(a.selected, b.selected);
+            assert_eq!(a.calls, b.calls);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.fd_coeff.to_bits(), b.fd_coeff.to_bits());
+            for (x, y) in gm.iter().zip(gs.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in em.last_losses().iter().zip(es.last_losses().iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // and the streamed estimator holds no K x d probe state
+        assert!(es.state_bytes() < k * d * 4, "streamed must not hold K x d");
+        assert_eq!(em.state_bytes(), k * d * 4 + d * 4); // matrix + mu
+    }
+
+    #[test]
+    fn streamed_central_k1_matches_materialized() {
+        let d = 600;
+        let mut om = quad(d);
+        let mut os = quad(d);
+        let mut em = CentralK1Estimator::new(GaussianSampler::new(d, 9), 1e-3);
+        let mut es = CentralK1Estimator::with_storage(
+            GaussianSampler::new(d, 9),
+            1e-3,
+            ProbeStorage::Streamed,
+        )
+        .unwrap();
+        let ctx = crate::exec::ExecContext::new(3).with_shard_len(128);
+        em.set_exec(ctx.clone());
+        es.set_exec(ctx.clone());
+        os.set_exec(ctx);
+        let mut gm = vec![0.0f32; d];
+        let mut gs = vec![0.0f32; d];
+        for _ in 0..3 {
+            let a = em.estimate(&mut om, &mut gm).unwrap();
+            let b = es.estimate(&mut os, &mut gs).unwrap();
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.fd_coeff.to_bits(), b.fd_coeff.to_bits());
+            for (x, y) in gm.iter().zip(gs.iter()) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }

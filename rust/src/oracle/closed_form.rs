@@ -18,9 +18,31 @@ use anyhow::{bail, Result};
 
 use crate::data::Batch;
 use crate::exec::ExecContext;
-use crate::tensor::{axpy_into, dot, Matrix};
+use crate::probe::{ProbeCursor, ProbeSource};
+use crate::tensor::{axpy_into, dot, perturb_eval, Matrix};
 
 use super::{GradOracle, Oracle};
+
+/// Shard-resumed probe projections for the data-matrix oracles: fold
+/// probe row `j`'s lazily-regenerated column shards into per-data-row
+/// f64 accumulators `proj[r] = <X_r, v_j>`.  Terms accumulate in column
+/// order across shard boundaries — the identical f64 sequence the slice
+/// kernels' full-row [`dot`] runs — so the downstream losses stay
+/// bitwise equal to the materialized path.  Shared by the linreg and
+/// logreg streamed `loss_probes` cores.
+fn stream_projections(cur: &mut ProbeCursor<'_>, x_data: &Matrix, j: usize, proj: &mut [f64]) {
+    proj.iter_mut().for_each(|p| *p = 0.0);
+    cur.visit_row(j, &mut |c0, piece| {
+        for (r, p) in proj.iter_mut().enumerate() {
+            let xrow = &x_data.row(r)[c0..c0 + piece.len()];
+            let mut acc = *p;
+            for (xi, vi) in xrow.iter().zip(piece.iter()) {
+                acc += (*xi as f64) * (*vi as f64);
+            }
+            *p = acc;
+        }
+    });
+}
 
 /// f(x) = 0.5 (x - c)^T A (x - c) with diagonal A — conditioning is
 /// controllable, optimum known, perfect for convergence tests.
@@ -133,6 +155,62 @@ impl Oracle for QuadraticOracle {
 
     fn loss_k_into(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
         self.loss_k_impl(dirs, k, tau, out)
+    }
+
+    fn loss_probes(
+        &mut self,
+        probes: &dyn ProbeSource,
+        k: usize,
+        tau: f32,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        if let Some(dirs) = probes.dirs() {
+            return self.loss_k_impl(dirs, k, tau, out);
+        }
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
+        let d = self.x.len();
+        assert_eq!(probes.dim(), d, "probe rows must be length d");
+        self.calls += k as u64;
+        // hoist the iterate residual exactly like loss_k_impl
+        {
+            let x = &self.x;
+            let c = &self.center;
+            self.exec.for_each_shard_mut(&mut self.scratch, |_, start, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = x[start + i] - c[start + i];
+                }
+            });
+        }
+        // per probe: one worker folds the row's lazily-regenerated column
+        // shards through a running f64 accumulator — the identical term
+        // sequence the slice kernel produces, so losses are bitwise equal.
+        // Cursors (and their shard scratch) are per worker, not per probe.
+        let scratch = &self.scratch;
+        let diag = &self.diag;
+        let vals = self.exec.map_items_sized_scratch(
+            k,
+            d,
+            || probes.cursor(),
+            |cur, j| {
+                let mut acc = 0.0f64;
+                cur.visit_row(j, &mut |c0, piece| {
+                    perturb_eval(&scratch[c0..c0 + piece.len()], tau, piece, |i, z| {
+                        let zf = z as f64;
+                        acc += 0.5 * diag[c0 + i] as f64 * zf * zf;
+                    });
+                });
+                acc
+            },
+        );
+        out.clear();
+        out.extend_from_slice(&vals);
+        Ok(())
+    }
+
+    fn supports_streamed_probes(&self) -> bool {
+        true
     }
 
     fn set_exec(&mut self, ctx: ExecContext) {
@@ -267,6 +345,57 @@ impl Oracle for LinRegOracle {
 
     fn loss_k_into(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
         self.loss_k_impl(dirs, k, tau, out)
+    }
+
+    fn loss_probes(
+        &mut self,
+        probes: &dyn ProbeSource,
+        k: usize,
+        tau: f32,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        if let Some(dirs) = probes.dirs() {
+            return self.loss_k_impl(dirs, k, tau, out);
+        }
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
+        let d = self.w.len();
+        assert_eq!(probes.dim(), d, "probe rows must be length d");
+        self.calls += k as u64;
+        let n = self.x_data.rows;
+        self.x_data.matvec(&self.w, &mut self.resid);
+        // per probe: the data-row projections X v_j accumulate across the
+        // row's column shards in column order — the same f64 term sequence
+        // as the slice kernel's full-row `dot`, paused and resumed at
+        // shard boundaries, so the losses are bitwise equal.  Cursor and
+        // projection accumulators are per worker, reset per probe.
+        let x_data = &self.x_data;
+        let resid = &self.resid;
+        let y = &self.y;
+        let vals = self.exec.map_items_sized_scratch(
+            k,
+            n.saturating_mul(d),
+            || (probes.cursor(), vec![0.0f64; n]),
+            |scratch, j| {
+                let (cur, proj) = scratch;
+                stream_projections(cur, x_data, j, proj);
+                let mut acc = 0.0f64;
+                for r in 0..n {
+                    let pj = proj[r] as f32;
+                    let e = (resid[r] + tau * pj - y[r]) as f64;
+                    acc += e * e;
+                }
+                0.5 * acc / n as f64
+            },
+        );
+        out.clear();
+        out.extend_from_slice(&vals);
+        Ok(())
+    }
+
+    fn supports_streamed_probes(&self) -> bool {
+        true
     }
 
     fn set_exec(&mut self, ctx: ExecContext) {
@@ -422,6 +551,55 @@ impl Oracle for LogRegOracle {
 
     fn loss_k_into(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
         self.loss_k_impl(dirs, k, tau, out)
+    }
+
+    fn loss_probes(
+        &mut self,
+        probes: &dyn ProbeSource,
+        k: usize,
+        tau: f32,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        if let Some(dirs) = probes.dirs() {
+            return self.loss_k_impl(dirs, k, tau, out);
+        }
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
+        let d = self.w.len();
+        assert_eq!(probes.dim(), d, "probe rows must be length d");
+        self.calls += k as u64;
+        let n = self.x_data.rows;
+        self.x_data.matvec(&self.w, &mut self.margin);
+        // see LinRegOracle::loss_probes: shard-resumed projections (per-
+        // worker cursor + accumulators), then the logistic link in
+        // data-row order — bitwise equal to the slice kernel
+        let x_data = &self.x_data;
+        let margin = &self.margin;
+        let y = &self.y;
+        let vals = self.exec.map_items_sized_scratch(
+            k,
+            n.saturating_mul(d),
+            || (probes.cursor(), vec![0.0f64; n]),
+            |scratch, j| {
+                let (cur, proj) = scratch;
+                stream_projections(cur, x_data, j, proj);
+                let mut acc = 0.0f64;
+                for r in 0..n {
+                    let pj = proj[r] as f32;
+                    let m = (y[r] * (margin[r] + tau * pj)) as f64;
+                    acc += log1p_exp_neg(m);
+                }
+                acc / n as f64
+            },
+        );
+        out.clear();
+        out.extend_from_slice(&vals);
+        Ok(())
+    }
+
+    fn supports_streamed_probes(&self) -> bool {
+        true
     }
 
     fn set_exec(&mut self, ctx: ExecContext) {
@@ -631,6 +809,72 @@ mod tests {
         for (x, y) in a2.iter().zip(b2.iter()) {
             assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn loss_probes_streamed_bitwise_matches_materialized() {
+        use crate::probe::{BoxedSampler, MaterializedProbes, ProbeLayout, ProbeSource, StreamedProbes};
+        use crate::sampler::{LdsdConfig, LdsdSampler};
+
+        let k = 4;
+        let tau = 1e-2f32;
+        let check = |mut mk_oracle: Box<dyn FnMut() -> Box<dyn Oracle>>, d: usize| {
+            for threads in [1usize, 4] {
+                let ctx = crate::exec::ExecContext::new(threads).with_shard_len(37);
+                let sampler =
+                    |seed| -> BoxedSampler { Box::new(LdsdSampler::new(d, seed, LdsdConfig::default())) };
+                let mut mat = MaterializedProbes::new(sampler(9), ProbeLayout::Direct, k);
+                mat.set_exec(ctx.clone());
+                let mut st = StreamedProbes::new(sampler(9), ProbeLayout::Direct, k);
+                st.set_exec(ctx.clone());
+                mat.advance();
+                st.advance();
+                let mut o1 = mk_oracle();
+                o1.set_exec(ctx.clone());
+                let mut o2 = mk_oracle();
+                o2.set_exec(ctx);
+                let mut l1 = Vec::new();
+                let mut l2 = Vec::new();
+                o1.loss_probes(&mat, k, tau, &mut l1).unwrap();
+                o2.loss_probes(&st, k, tau, &mut l2).unwrap();
+                assert_eq!(o1.oracle_calls(), o2.oracle_calls());
+                assert_eq!(l1.len(), k);
+                for (a, b) in l1.iter().zip(l2.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}: {a} vs {b}", o1.name());
+                }
+            }
+        };
+
+        let dq = 333;
+        check(
+            Box::new(move || {
+                let diag: Vec<f32> = (0..dq).map(|i| 1.0 + 0.1 * (i % 5) as f32).collect();
+                let center: Vec<f32> = (0..dq).map(|i| (i as f32 * 0.3).sin()).collect();
+                let x0: Vec<f32> = (0..dq).map(|i| (i as f32 * 0.7).cos()).collect();
+                let b: Box<dyn Oracle> = Box::new(QuadraticOracle::new(diag, center, x0));
+                b
+            }),
+            dq,
+        );
+        check(
+            Box::new(|| {
+                let ds = crate::data::SyntheticRegression::a9a_like(64, 9);
+                let w0: Vec<f32> = (0..123).map(|i| 0.01 * (i as f32).sin()).collect();
+                let b: Box<dyn Oracle> = Box::new(LinRegOracle::new(ds.x, ds.y, w0));
+                b
+            }),
+            123,
+        );
+        check(
+            Box::new(|| {
+                let ds = crate::data::SyntheticRegression::a9a_like(64, 10);
+                let y: Vec<f32> =
+                    ds.y.iter().map(|v| if *v > 0.0 { 1.0 } else { -1.0 }).collect();
+                let b: Box<dyn Oracle> = Box::new(LogRegOracle::new(ds.x, y, vec![0.05f32; 123]));
+                b
+            }),
+            123,
+        );
     }
 
     #[test]

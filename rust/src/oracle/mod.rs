@@ -25,6 +25,7 @@ use anyhow::{bail, Result};
 
 use crate::data::Batch;
 use crate::exec::ExecContext;
+use crate::probe::ProbeSource;
 
 /// Forward-evaluation interface.  The oracle owns the current iterate `x`
 /// (so PJRT implementations can keep it device-resident) and evaluates the
@@ -75,6 +76,42 @@ pub trait Oracle {
         out.clear();
         out.extend_from_slice(&losses);
         Ok(())
+    }
+
+    /// Evaluate one step's probe batch through a [`ProbeSource`]: losses
+    /// at `x + tau * row_i` for the source's `k` presented rows, into a
+    /// caller-reused buffer.
+    ///
+    /// For a materialized source this is exactly [`Oracle::loss_k_into`]
+    /// on the stored matrix.  Oracles that support streamed evaluation
+    /// (the closed-form substrates) override it to fold each row's
+    /// lazily-regenerated column shards through the same accumulation the
+    /// slice path runs, so the two storage modes return bitwise-identical
+    /// losses (DESIGN.md §10).  The default rejects streamed sources —
+    /// see [`Oracle::supports_streamed_probes`].
+    fn loss_probes(
+        &mut self,
+        probes: &dyn ProbeSource,
+        k: usize,
+        tau: f32,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        match probes.dirs() {
+            Some(dirs) => self.loss_k_into(dirs, k, tau, out),
+            None => bail!(
+                "oracle '{}' cannot evaluate streamed probes (needs a materialized \
+                 probe matrix; use --probe-storage materialized)",
+                self.name()
+            ),
+        }
+    }
+
+    /// True if [`Oracle::loss_probes`] can evaluate a streamed (matrix-
+    /// free) probe source.  The trainer uses this to auto-select probe
+    /// storage; oracles that need a host-side matrix (e.g. the PJRT
+    /// dispatch path) keep the default `false`.
+    fn supports_streamed_probes(&self) -> bool {
+        false
     }
 
     /// Install the shard-parallel execution context used by vectorized

@@ -1,0 +1,685 @@
+//! Probe representation: how one step's K x d direction matrix is stored,
+//! evaluated and combined (DESIGN.md §10).
+//!
+//! Estimators no longer own a probe buffer; they own a [`ProbeSource`]
+//! with two implementations:
+//!
+//! * [`MaterializedProbes`] — the reference path: the K x d matrix lives
+//!   in one tracked buffer, filled by the sampler each step.  O(K d)
+//!   probe state.
+//! * [`StreamedProbes`] — MeZO-style seed replay generalized to the
+//!   batched K-probe pipeline: no matrix is ever held.  Every consumer
+//!   regenerates the probe values it needs, one column shard at a time,
+//!   straight from the sampler's per-(seed, step, shard) RNG cells
+//!   ([`DirectionSampler::fill_row_range`]).  Probe state is
+//!   O(K · shard_len) *per worker* — one shard block — which is what
+//!   unlocks d >= 2^24 runs the materialized path cannot reach.
+//!
+//! The contract between the two is **bitwise identity**: the streamed
+//! path replays the exact RNG cells the materialized fill would have
+//! written, and every consumer (fused `loss_k`-style evaluation, the
+//! combine kernels, the LDSD policy update) applies per-element arithmetic
+//! in the same order.  A probe is regenerated once for the forward
+//! evaluations and once for the update passes (the "replay twice" cost:
+//! ~2x sampling compute traded for the O(K d) buffer).
+//!
+//! Probe-state buffers allocate through [`crate::metrics::TrackedBuf`], so
+//! the global [`crate::metrics::probe_tracker`] measures real per-trial
+//! peaks — the acceptance test pins that streaming never allocates a
+//! K x d buffer.
+
+use anyhow::{bail, Result};
+
+use crate::exec::ExecContext;
+use crate::metrics::TrackedBuf;
+use crate::sampler::DirectionSampler;
+use crate::tensor::{axpy_k_ctx, probe_combine_ctx, replay_axpy};
+
+/// A boxed direction sampler as owned by a probe source (`Sync` because
+/// streamed consumers replay rows from worker threads).
+pub type BoxedSampler = Box<dyn DirectionSampler + Send + Sync>;
+
+/// How one step's probe matrix is stored.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ProbeStorage {
+    /// Decide by memory budget: streamed when the K x d matrix would
+    /// exceed the budget (256 MiB, `ZO_PROBE_BUDGET_MB` overrides) and the
+    /// sampler supports seed replay; materialized otherwise.
+    #[default]
+    Auto,
+    /// Hold the full K x d matrix (the reference path).
+    Materialized,
+    /// Regenerate probe shards on demand from RNG cells (seed replay).
+    Streamed,
+}
+
+impl ProbeStorage {
+    /// Parse from a CLI string ("auto" | "materialized" | "streamed").
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(ProbeStorage::Auto),
+            "materialized" => Ok(ProbeStorage::Materialized),
+            "streamed" => Ok(ProbeStorage::Streamed),
+            other => bail!("unknown probe storage '{other}' (auto|materialized|streamed)"),
+        }
+    }
+
+    /// Label fragment for tables and bench rows.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProbeStorage::Auto => "auto",
+            ProbeStorage::Materialized => "materialized",
+            ProbeStorage::Streamed => "streamed",
+        }
+    }
+
+    /// The `ZO_PROBE_STORAGE` environment override, if set.  CI forces
+    /// `streamed` through this to run the whole suite on the replay path,
+    /// so an *invalid* value panics rather than silently un-forcing the
+    /// suite (a typo must fail loudly, not pass greenly on the default
+    /// path).
+    pub fn from_env() -> Option<Self> {
+        std::env::var("ZO_PROBE_STORAGE").ok().map(|v| {
+            Self::parse(&v).unwrap_or_else(|e| panic!("ZO_PROBE_STORAGE: {e}"))
+        })
+    }
+
+    /// Resolve `Auto` against the memory budget and the sampler's replay
+    /// capability.  Explicit choices pass through unchanged (an explicit
+    /// `Streamed` over a non-replayable sampler is rejected later, in
+    /// [`build_source`]).
+    pub fn resolve(self, d: usize, k: usize, replay_ok: bool) -> ProbeStorage {
+        match self {
+            ProbeStorage::Auto => {
+                let matrix_bytes = k.saturating_mul(d).saturating_mul(4);
+                if replay_ok && matrix_bytes > auto_budget_bytes() {
+                    ProbeStorage::Streamed
+                } else {
+                    ProbeStorage::Materialized
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+/// Probe-matrix budget for [`ProbeStorage::Auto`]: 256 MiB unless
+/// `ZO_PROBE_BUDGET_MB` overrides it.  An unparseable override panics —
+/// a silently-ignored budget would flip Auto runs onto the wrong storage
+/// without a trace.
+pub fn auto_budget_bytes() -> usize {
+    match std::env::var("ZO_PROBE_BUDGET_MB") {
+        Ok(v) => {
+            let mb: usize = v
+                .parse()
+                .unwrap_or_else(|e| panic!("ZO_PROBE_BUDGET_MB '{v}': {e}"));
+            mb.saturating_mul(1 << 20)
+        }
+        Err(_) => 256 << 20,
+    }
+}
+
+/// How presented probe rows map onto sampler rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeLayout {
+    /// Row i is sampler row i (K sampler rows).
+    Direct,
+    /// Two presented rows `[v; -v]` derived from one sampler row — the
+    /// central-difference pair.
+    CentralPair,
+}
+
+/// One step's K x d probe matrix, abstracted over storage.
+///
+/// `advance` resamples (no oracle calls); consumers then read the rows
+/// through [`ProbeSource::dirs`] (materialized fast path), a streaming
+/// [`ProbeSource::cursor`], or the fused combine entry points.  All paths
+/// are bitwise identical across storage modes and worker counts.
+pub trait ProbeSource: Send + Sync {
+    /// Presented probe rows K.
+    fn k(&self) -> usize;
+
+    /// Row length d.
+    fn dim(&self) -> usize;
+
+    /// Sample the next step's probes (no oracle calls).
+    fn advance(&mut self);
+
+    /// The materialized row-major K x d matrix, if this source holds one.
+    fn dirs(&self) -> Option<&[f32]>;
+
+    /// A per-worker cursor over this step's rows (column order).
+    fn cursor(&self) -> ProbeCursor<'_>;
+
+    /// `g = sum_i w[i] * row_i` (g is overwritten).
+    fn combine(&self, w: &[f32], g: &mut [f32]);
+
+    /// `y += sum_i w[i] * row_i`.
+    fn axpy_rows(&self, w: &[f32], y: &mut [f32]);
+
+    /// `out = c * row_i`.
+    fn scaled_row(&self, i: usize, c: f32, out: &mut [f32]);
+
+    /// Feed the step's probe losses back to the sampler's policy
+    /// (Algorithm 2 lines 6/8); no-op for policy-free samplers and
+    /// derived layouts.
+    fn observe(&mut self, losses: &[f64]);
+
+    /// Probe-representation bytes held across steps: the K x d matrix for
+    /// materialized, zero for streamed (its transient per-worker scratch
+    /// is bounded by (K + 1) * shard_len floats per worker and measured by
+    /// [`crate::metrics::probe_tracker`]).
+    fn probe_state_bytes(&self) -> usize;
+
+    /// The underlying direction sampler (diagnostics).
+    fn sampler(&self) -> &dyn DirectionSampler;
+
+    /// Install the execution context (cascades to the sampler).
+    fn set_exec(&mut self, ctx: ExecContext);
+
+    /// Storage label ("materialized" | "streamed").
+    fn label(&self) -> &'static str;
+}
+
+/// Per-worker streaming access to one step's probe rows.
+///
+/// Obtained from [`ProbeSource::cursor`]; each worker of a parallel
+/// evaluation holds its own cursor (the replayed variant owns the shard
+/// scratch regeneration writes into).
+pub enum ProbeCursor<'a> {
+    /// Rows borrowed from a materialized K x d matrix: `visit_row` yields
+    /// the whole row as one piece, no copies.
+    Borrowed {
+        /// The row-major K x d matrix.
+        dirs: &'a [f32],
+        /// Row length d.
+        d: usize,
+    },
+    /// Rows replayed shard-by-shard from the sampler's RNG cells.
+    Replayed {
+        /// The streamed source rows are replayed from.
+        src: &'a StreamedProbes,
+        /// Piece buffer handed to the visitor (one column shard).
+        piece: TrackedBuf,
+        /// Substream regeneration staging (one RNG cell).
+        stage: TrackedBuf,
+    },
+}
+
+impl ProbeCursor<'_> {
+    /// Visit the pieces of probe row `i` in column order:
+    /// `f(col0, values)`.  Running accumulations over the pieces are
+    /// bitwise independent of piece boundaries, so borrowed (one piece)
+    /// and replayed (one piece per column shard) cursors produce identical
+    /// results.
+    pub fn visit_row(&mut self, i: usize, f: &mut dyn FnMut(usize, &[f32])) {
+        match self {
+            ProbeCursor::Borrowed { dirs, d } => f(0, &dirs[i * *d..(i + 1) * *d]),
+            ProbeCursor::Replayed { src, piece, stage } => {
+                let d = src.d;
+                let sl = src.exec.shard_len();
+                let mut c0 = 0usize;
+                while c0 < d {
+                    let len = sl.min(d - c0);
+                    src.fill_piece(i, c0, &mut piece[..len], stage);
+                    f(c0, &piece[..len]);
+                    c0 += len;
+                }
+            }
+        }
+    }
+}
+
+/// The reference probe representation: the K x d matrix is held in one
+/// tracked buffer and refilled by the sampler each step.
+pub struct MaterializedProbes {
+    sampler: BoxedSampler,
+    dirs: TrackedBuf,
+    k: usize,
+    d: usize,
+    layout: ProbeLayout,
+    exec: ExecContext,
+}
+
+impl MaterializedProbes {
+    /// Build for `k` presented rows over `sampler`.  For
+    /// [`ProbeLayout::CentralPair`], `k` must be 2.
+    pub fn new(sampler: BoxedSampler, layout: ProbeLayout, k: usize) -> Self {
+        assert!(k >= 1);
+        if layout == ProbeLayout::CentralPair {
+            assert_eq!(k, 2, "central layout presents exactly [v; -v]");
+        }
+        let d = sampler.dim();
+        Self {
+            sampler,
+            dirs: TrackedBuf::zeroed(k * d),
+            k,
+            d,
+            layout,
+            exec: ExecContext::serial(),
+        }
+    }
+}
+
+impl ProbeSource for MaterializedProbes {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn advance(&mut self) {
+        match self.layout {
+            ProbeLayout::Direct => self.sampler.sample(&mut self.dirs, self.k),
+            ProbeLayout::CentralPair => {
+                let d = self.d;
+                let (v, neg) = self.dirs.split_at_mut(d);
+                self.sampler.sample(v, 1);
+                let v_ro: &[f32] = v;
+                self.exec.for_each_shard_mut(neg, |_, start, chunk| {
+                    for (i, n) in chunk.iter_mut().enumerate() {
+                        *n = -v_ro[start + i];
+                    }
+                });
+            }
+        }
+    }
+
+    fn dirs(&self) -> Option<&[f32]> {
+        Some(&self.dirs[..])
+    }
+
+    fn cursor(&self) -> ProbeCursor<'_> {
+        ProbeCursor::Borrowed { dirs: &self.dirs[..], d: self.d }
+    }
+
+    fn combine(&self, w: &[f32], g: &mut [f32]) {
+        assert_eq!(w.len(), self.k);
+        probe_combine_ctx(&self.exec, &self.dirs, self.d, w, g);
+    }
+
+    fn axpy_rows(&self, w: &[f32], y: &mut [f32]) {
+        assert_eq!(w.len(), self.k);
+        axpy_k_ctx(&self.exec, w, &self.dirs, y);
+    }
+
+    fn scaled_row(&self, i: usize, c: f32, out: &mut [f32]) {
+        assert!(i < self.k);
+        assert_eq!(out.len(), self.d);
+        let row = &self.dirs[i * self.d..(i + 1) * self.d];
+        self.exec.for_each_shard_mut(out, |_, start, gb| {
+            for (j, gi) in gb.iter_mut().enumerate() {
+                *gi = c * row[start + j];
+            }
+        });
+    }
+
+    fn observe(&mut self, losses: &[f64]) {
+        if self.layout == ProbeLayout::Direct {
+            self.sampler.observe(&self.dirs, losses, self.k);
+        }
+    }
+
+    fn probe_state_bytes(&self) -> usize {
+        self.dirs.len() * 4
+    }
+
+    fn sampler(&self) -> &dyn DirectionSampler {
+        &*self.sampler
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.sampler.set_exec(ctx.clone());
+        self.exec = ctx;
+    }
+
+    fn label(&self) -> &'static str {
+        "materialized"
+    }
+}
+
+/// Seed-replay probe representation: no matrix is held; every consumer
+/// regenerates the shards it needs from the sampler's RNG cells, at most
+/// one (K + 1)-shard block per worker at a time.
+pub struct StreamedProbes {
+    sampler: BoxedSampler,
+    k: usize,
+    d: usize,
+    layout: ProbeLayout,
+    exec: ExecContext,
+}
+
+impl StreamedProbes {
+    /// Build for `k` presented rows over a seed-replay sampler
+    /// ([`DirectionSampler::supports_replay`] must hold).  For
+    /// [`ProbeLayout::CentralPair`], `k` must be 2.
+    pub fn new(sampler: BoxedSampler, layout: ProbeLayout, k: usize) -> Self {
+        assert!(k >= 1);
+        assert!(
+            sampler.supports_replay(),
+            "streamed probes need a seed-replay sampler ({} cannot replay)",
+            sampler.name()
+        );
+        if layout == ProbeLayout::CentralPair {
+            assert_eq!(k, 2, "central layout presents exactly [v; -v]");
+        }
+        let d = sampler.dim();
+        Self { sampler, k, d, layout, exec: ExecContext::serial() }
+    }
+
+    /// Rows the sampler itself draws (the central pair derives both its
+    /// rows from one sampler row).
+    fn sampler_k(&self) -> usize {
+        match self.layout {
+            ProbeLayout::Direct => self.k,
+            ProbeLayout::CentralPair => 1,
+        }
+    }
+
+    /// Map a presented row to (sampler row, negate).
+    fn map_row(&self, i: usize) -> (usize, bool) {
+        match self.layout {
+            ProbeLayout::Direct => (i, false),
+            ProbeLayout::CentralPair => (0, i == 1),
+        }
+    }
+
+    /// Regenerate presented row `i`, columns `[col0, col0 + out.len())`.
+    fn fill_piece(&self, i: usize, col0: usize, out: &mut [f32], stage: &mut [f32]) {
+        let (srow, neg) = self.map_row(i);
+        self.sampler.fill_row_range(self.sampler_k(), srow, col0, out, stage);
+        if neg {
+            for v in out.iter_mut() {
+                *v = -*v;
+            }
+        }
+    }
+}
+
+impl ProbeSource for StreamedProbes {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn advance(&mut self) {
+        self.sampler.advance_step();
+    }
+
+    fn dirs(&self) -> Option<&[f32]> {
+        None
+    }
+
+    fn cursor(&self) -> ProbeCursor<'_> {
+        let sl = self.exec.shard_len().min(self.d.max(1));
+        ProbeCursor::Replayed {
+            src: self,
+            piece: TrackedBuf::zeroed(sl),
+            stage: TrackedBuf::zeroed(self.exec.shard_len()),
+        }
+    }
+
+    fn combine(&self, w: &[f32], g: &mut [f32]) {
+        assert_eq!(w.len(), self.k);
+        assert_eq!(g.len(), self.d);
+        let sl = self.exec.shard_len();
+        self.exec.for_each_shard_mut_scratch(
+            g,
+            || (TrackedBuf::zeroed(sl), TrackedBuf::zeroed(sl)),
+            |scratch, _, start, gb| {
+                let (row_buf, stage) = scratch;
+                gb.iter_mut().for_each(|v| *v = 0.0);
+                replay_axpy(w, row_buf, gb, |i, out| self.fill_piece(i, start, out, stage));
+            },
+        );
+    }
+
+    fn axpy_rows(&self, w: &[f32], y: &mut [f32]) {
+        assert_eq!(w.len(), self.k);
+        assert_eq!(y.len(), self.d);
+        let sl = self.exec.shard_len();
+        self.exec.for_each_shard_mut_scratch(
+            y,
+            || (TrackedBuf::zeroed(sl), TrackedBuf::zeroed(sl)),
+            |scratch, _, start, yb| {
+                let (row_buf, stage) = scratch;
+                replay_axpy(w, row_buf, yb, |i, out| self.fill_piece(i, start, out, stage));
+            },
+        );
+    }
+
+    fn scaled_row(&self, i: usize, c: f32, out: &mut [f32]) {
+        assert!(i < self.k);
+        assert_eq!(out.len(), self.d);
+        let sl = self.exec.shard_len();
+        self.exec.for_each_shard_mut_scratch(
+            out,
+            || TrackedBuf::zeroed(sl),
+            |stage, _, start, gb| {
+                self.fill_piece(i, start, gb, stage);
+                for v in gb.iter_mut() {
+                    *v *= c;
+                }
+            },
+        );
+    }
+
+    fn observe(&mut self, losses: &[f64]) {
+        if self.layout == ProbeLayout::Direct {
+            self.sampler.observe_replay(losses, self.k);
+        }
+    }
+
+    fn probe_state_bytes(&self) -> usize {
+        0
+    }
+
+    fn sampler(&self) -> &dyn DirectionSampler {
+        &*self.sampler
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.sampler.set_exec(ctx.clone());
+        self.exec = ctx;
+    }
+
+    fn label(&self) -> &'static str {
+        "streamed"
+    }
+}
+
+/// Build the probe source for `k` presented rows over `sampler`, resolving
+/// [`ProbeStorage::Auto`] by the memory budget.  Errors when `Streamed` is
+/// explicitly requested for a sampler that cannot seed-replay.
+pub fn build_source(
+    storage: ProbeStorage,
+    sampler: BoxedSampler,
+    layout: ProbeLayout,
+    k: usize,
+) -> Result<Box<dyn ProbeSource>> {
+    let resolved = storage.resolve(sampler.dim(), k, sampler.supports_replay());
+    match resolved {
+        ProbeStorage::Streamed => {
+            if !sampler.supports_replay() {
+                bail!(
+                    "probe storage 'streamed' needs a seed-replay sampler, but '{}' \
+                     cannot replay (use --probe-storage materialized)",
+                    sampler.name()
+                );
+            }
+            Ok(Box::new(StreamedProbes::new(sampler, layout, k)))
+        }
+        _ => Ok(Box::new(MaterializedProbes::new(sampler, layout, k))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::{GaussianSampler, LdsdConfig, LdsdSampler, SphereSampler};
+
+    fn pair(
+        d: usize,
+        k: usize,
+        layout: ProbeLayout,
+        threads: usize,
+        shard_len: usize,
+    ) -> (MaterializedProbes, StreamedProbes) {
+        let ctx = ExecContext::new(threads).with_shard_len(shard_len);
+        let mk = |seed| -> BoxedSampler { Box::new(LdsdSampler::new(d, seed, LdsdConfig::default())) };
+        let mut mat = MaterializedProbes::new(mk(33), layout, k);
+        mat.set_exec(ctx.clone());
+        let mut st = StreamedProbes::new(mk(33), layout, k);
+        st.set_exec(ctx);
+        (mat, st)
+    }
+
+    fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} diverged at {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn streamed_consumers_bitwise_match_materialized() {
+        for (layout, k) in [(ProbeLayout::Direct, 5), (ProbeLayout::CentralPair, 2)] {
+            for threads in [1usize, 4] {
+                let d = 777; // misaligned with the shard length on purpose
+                let (mut mat, mut st) = pair(d, k, layout, threads, 128);
+                for _ in 0..3 {
+                    mat.advance();
+                    st.advance();
+                    let w: Vec<f32> = (0..k).map(|i| 0.3 * i as f32 - 0.4).collect();
+                    let mut g1 = vec![0.0f32; d];
+                    let mut g2 = vec![0.0f32; d];
+                    mat.combine(&w, &mut g1);
+                    st.combine(&w, &mut g2);
+                    assert_bits(&g1, &g2, "combine");
+                    let mut y1 = vec![0.5f32; d];
+                    let mut y2 = vec![0.5f32; d];
+                    mat.axpy_rows(&w, &mut y1);
+                    st.axpy_rows(&w, &mut y2);
+                    assert_bits(&y1, &y2, "axpy_rows");
+                    mat.scaled_row(k - 1, -1.25, &mut g1);
+                    st.scaled_row(k - 1, -1.25, &mut g2);
+                    assert_bits(&g1, &g2, "scaled_row");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cursors_visit_identical_values() {
+        let d = 300;
+        let k = 3;
+        let (mut mat, mut st) = pair(d, k, ProbeLayout::Direct, 1, 64);
+        mat.advance();
+        st.advance();
+        for row in 0..k {
+            let mut from_mat = vec![0.0f32; d];
+            let mut from_st = vec![0.0f32; d];
+            mat.cursor().visit_row(row, &mut |c0, piece| {
+                from_mat[c0..c0 + piece.len()].copy_from_slice(piece);
+            });
+            st.cursor().visit_row(row, &mut |c0, piece| {
+                from_st[c0..c0 + piece.len()].copy_from_slice(piece);
+            });
+            assert_bits(&from_mat, &from_st, "cursor row");
+        }
+    }
+
+    #[test]
+    fn central_pair_presents_v_and_negated_v() {
+        let d = 90;
+        let (mut mat, mut st) = pair(d, 2, ProbeLayout::CentralPair, 1, 32);
+        mat.advance();
+        st.advance();
+        let dirs = mat.dirs().unwrap().to_vec();
+        for j in 0..d {
+            assert_eq!(dirs[d + j].to_bits(), (-dirs[j]).to_bits());
+        }
+        let mut row1 = vec![0.0f32; d];
+        st.scaled_row(1, 1.0, &mut row1);
+        assert_bits(&row1, &dirs[d..], "streamed negated row");
+    }
+
+    #[test]
+    fn observe_keeps_policies_in_lockstep() {
+        let d = 400;
+        let k = 4;
+        let (mut mat, mut st) = pair(d, k, ProbeLayout::Direct, 2, 96);
+        for step in 0..4 {
+            mat.advance();
+            st.advance();
+            let losses: Vec<f64> = (0..k).map(|i| ((i + step) % 3) as f64 * 0.5).collect();
+            mat.observe(&losses);
+            st.observe(&losses);
+            let a = mat.sampler().policy_mean().unwrap();
+            let b = st.sampler().policy_mean().unwrap();
+            assert_bits(a, b, "policy mean");
+        }
+    }
+
+    #[test]
+    fn auto_resolution_uses_budget_and_capability() {
+        // tiny matrix: stays materialized
+        assert_eq!(
+            ProbeStorage::Auto.resolve(1024, 5, true),
+            ProbeStorage::Materialized
+        );
+        // over-budget and replayable: streams
+        let huge = (auto_budget_bytes() / 4) + 1;
+        assert_eq!(ProbeStorage::Auto.resolve(huge, 1, true), ProbeStorage::Streamed);
+        // over-budget but not replayable: falls back to materialized
+        assert_eq!(
+            ProbeStorage::Auto.resolve(huge, 1, false),
+            ProbeStorage::Materialized
+        );
+        // explicit choices pass through
+        assert_eq!(
+            ProbeStorage::Streamed.resolve(4, 1, true),
+            ProbeStorage::Streamed
+        );
+    }
+
+    #[test]
+    fn explicit_streamed_rejects_non_replay_sampler() {
+        let sphere: BoxedSampler = Box::new(SphereSampler::new(16, 1));
+        let err = build_source(ProbeStorage::Streamed, sphere, ProbeLayout::Direct, 3)
+            .err()
+            .expect("sphere cannot stream");
+        assert!(err.to_string().contains("seed-replay"), "{err}");
+        // auto quietly falls back instead
+        let sphere2: BoxedSampler = Box::new(SphereSampler::new(16, 1));
+        let src = build_source(ProbeStorage::Auto, sphere2, ProbeLayout::Direct, 3).unwrap();
+        assert_eq!(src.label(), "materialized");
+    }
+
+    #[test]
+    fn storage_parse_roundtrip() {
+        assert_eq!(ProbeStorage::parse("auto").unwrap(), ProbeStorage::Auto);
+        assert_eq!(
+            ProbeStorage::parse("materialized").unwrap(),
+            ProbeStorage::Materialized
+        );
+        assert_eq!(ProbeStorage::parse("streamed").unwrap(), ProbeStorage::Streamed);
+        assert!(ProbeStorage::parse("warp").is_err());
+        assert_eq!(ProbeStorage::default(), ProbeStorage::Auto);
+    }
+
+    #[test]
+    fn streamed_holds_no_kd_state() {
+        let d = 1 << 16;
+        let k = 6;
+        let gauss = |seed| -> BoxedSampler { Box::new(GaussianSampler::new(d, seed)) };
+        let mat = MaterializedProbes::new(gauss(1), ProbeLayout::Direct, k);
+        assert_eq!(mat.probe_state_bytes(), k * d * 4);
+        let st = StreamedProbes::new(gauss(1), ProbeLayout::Direct, k);
+        assert_eq!(st.probe_state_bytes(), 0);
+    }
+}

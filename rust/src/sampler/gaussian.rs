@@ -28,6 +28,46 @@ pub(super) fn fill_normal_sharded(exec: &ExecContext, seed: u64, step: u64, out:
     });
 }
 
+/// Seed replay of [`fill_normal_sharded`]: regenerate the flat-buffer
+/// range `[lo, lo + out.len())` of a `total`-element fill with shard
+/// length `shard_len`, bitwise identical to what the materialized fill
+/// wrote there.  Each overlapping RNG cell is regenerated at its full
+/// shard length (`fill_normal`'s pairwise stream is positional within the
+/// cell, so a cell must be replayed whole); `scratch` (>= `shard_len`
+/// elements) stages cells the range only partially covers.
+pub(super) fn fill_replay_range(
+    shard_len: usize,
+    seed: u64,
+    step: u64,
+    total: usize,
+    lo: usize,
+    out: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let hi = lo + out.len();
+    debug_assert!(hi <= total, "replay range {lo}..{hi} out of {total}");
+    debug_assert!(scratch.len() >= shard_len.min(total));
+    let mut filled = 0usize;
+    let mut shard = lo / shard_len;
+    while filled < out.len() {
+        let s_start = shard * shard_len;
+        let s_len = shard_len.min(total - s_start);
+        let a = lo.max(s_start);
+        let b = hi.min(s_start + s_len);
+        let mut rng = substream(seed, step, shard as u64);
+        if a == s_start && b == s_start + s_len {
+            // range covers the whole cell: regenerate in place
+            rng.fill_normal(&mut out[filled..filled + s_len]);
+        } else {
+            let cell = &mut scratch[..s_len];
+            rng.fill_normal(cell);
+            out[filled..filled + (b - a)].copy_from_slice(&cell[a - s_start..b - s_start]);
+        }
+        filled += b - a;
+        shard += 1;
+    }
+}
+
 /// v ~ N(0, I): the classical ZO direction distribution
 /// (Nesterov–Spokoiny / Ghadimi–Lan / MeZO).
 pub struct GaussianSampler {
@@ -56,6 +96,34 @@ impl DirectionSampler for GaussianSampler {
     }
 
     fn observe(&mut self, _dirs: &[f32], _losses: &[f64], _k: usize) {}
+
+    fn supports_replay(&self) -> bool {
+        true
+    }
+
+    fn advance_step(&mut self) {
+        self.step += 1;
+    }
+
+    fn fill_row_range(
+        &self,
+        k: usize,
+        row: usize,
+        col0: usize,
+        out: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        debug_assert!(self.step > 0, "fill_row_range before any sample/advance");
+        fill_replay_range(
+            self.exec.shard_len(),
+            self.seed,
+            self.step - 1,
+            k * self.d,
+            row * self.d + col0,
+            out,
+            scratch,
+        );
+    }
 
     fn dim(&self) -> usize {
         self.d
@@ -161,6 +229,36 @@ impl DirectionSampler for CoordinateSampler {
 
     fn observe(&mut self, _dirs: &[f32], _losses: &[f64], _k: usize) {}
 
+    fn supports_replay(&self) -> bool {
+        true
+    }
+
+    fn advance_step(&mut self) {
+        self.step += 1;
+    }
+
+    fn fill_row_range(
+        &self,
+        _k: usize,
+        row: usize,
+        col0: usize,
+        out: &mut [f32],
+        _scratch: &mut [f32],
+    ) {
+        debug_assert!(self.step > 0, "fill_row_range before any sample/advance");
+        // replay the O(K) index draws of the last step's AUX substream;
+        // the row's single non-zero lands in the window iff j is in range
+        let mut rng = substream(self.seed, self.step - 1, AUX_TAG);
+        let mut j = 0usize;
+        for _ in 0..=row {
+            j = rng.below(self.d as u64) as usize;
+        }
+        out.iter_mut().for_each(|v| *v = 0.0);
+        if j >= col0 && j < col0 + out.len() {
+            out[j - col0] = self.scale;
+        }
+    }
+
     fn dim(&self) -> usize {
         self.d
     }
@@ -238,6 +336,69 @@ mod tests {
             assert_eq!(nnz, 1);
             assert!((nrm2(row) - (d as f32).sqrt()).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn gaussian_replay_bitwise_matches_sample() {
+        // materialize a K x d matrix, then replay arbitrary (row, column)
+        // windows on a twin sampler that only advanced its step counter:
+        // every piece must be bit-identical, including windows that cross
+        // shard-cell boundaries (d chosen to misalign with shard_len)
+        let d = 301;
+        let k = 3;
+        let ctx = crate::exec::ExecContext::new(1).with_shard_len(64);
+        let mut mat = GaussianSampler::new(d, 17);
+        mat.set_exec(ctx.clone());
+        let mut dirs = vec![0.0f32; k * d];
+        mat.sample(&mut dirs, k);
+        mat.sample(&mut dirs, k); // second step: replay must track steps
+
+        let mut rep = GaussianSampler::new(d, 17);
+        rep.set_exec(ctx);
+        rep.advance_step();
+        rep.advance_step();
+        let mut scratch = vec![0.0f32; 64];
+        for (row, col0, len) in [(0usize, 0usize, d), (1, 37, 101), (2, 290, 11), (1, 63, 2)] {
+            let mut piece = vec![0.0f32; len];
+            rep.fill_row_range(k, row, col0, &mut piece, &mut scratch);
+            for (i, v) in piece.iter().enumerate() {
+                let want = dirs[row * d + col0 + i];
+                assert_eq!(
+                    v.to_bits(),
+                    want.to_bits(),
+                    "row {row} col {} diverged: {v} vs {want}",
+                    col0 + i
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coordinate_replay_bitwise_matches_sample() {
+        let d = 50;
+        let k = 6;
+        let mut mat = CoordinateSampler::new(d, 5);
+        let mut dirs = vec![0.0f32; k * d];
+        mat.sample(&mut dirs, k);
+        let mut rep = CoordinateSampler::new(d, 5);
+        rep.advance_step();
+        let mut scratch = vec![0.0f32; 8];
+        for row in 0..k {
+            for (col0, len) in [(0usize, d), (13, 20)] {
+                let mut piece = vec![9.0f32; len];
+                rep.fill_row_range(k, row, col0, &mut piece, &mut scratch);
+                assert_eq!(&piece[..], &dirs[row * d + col0..row * d + col0 + len]);
+            }
+        }
+    }
+
+    #[test]
+    fn sphere_does_not_claim_replay() {
+        // normalization needs the full row before any element is final
+        let s = SphereSampler::new(16, 1);
+        assert!(!s.supports_replay());
+        assert!(GaussianSampler::new(16, 1).supports_replay());
+        assert!(CoordinateSampler::new(16, 1).supports_replay());
     }
 
     #[test]

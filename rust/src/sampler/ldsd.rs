@@ -23,7 +23,7 @@ use crate::exec::ExecContext;
 use crate::rng::Rng;
 use crate::tensor::{axpy_k_ctx, nrm2, scal};
 
-use super::gaussian::fill_normal_sharded;
+use super::gaussian::{fill_normal_sharded, fill_replay_range};
 use super::DirectionSampler;
 
 /// Hyperparameters of the LDSD policy (Algorithm 2 defaults in §A.2).
@@ -105,6 +105,45 @@ impl LdsdSampler {
     pub fn mu_norm(&self) -> f32 {
         nrm2(&self.mu)
     }
+
+    /// Compute the REINFORCE advantage weights scaled by the policy
+    /// coefficient into `self.weights` and return the multiplicative mu
+    /// scale of the update, or `None` when `k < 2` (no baseline possible).
+    /// Shared by the materialized and replayed observe paths so both apply
+    /// bit-identical updates.
+    fn update_weights(&mut self, losses: &[f64], k: usize) -> Option<f32> {
+        if k < 2 {
+            return None;
+        }
+        let sum: f64 = losses.iter().sum();
+        self.weights.clear();
+        for i in 0..k {
+            let adv = if self.cfg.leave_one_out {
+                (k as f64 * losses[i] - sum) / (k as f64 - 1.0)
+            } else {
+                losses[i] - sum / k as f64
+            };
+            self.weights.push(adv as f32);
+        }
+        let coef = self.cfg.gamma_mu * self.cfg.reward_sign
+            / (k as f32 * self.cfg.eps * self.cfg.eps);
+        let wsum: f32 = self.weights.iter().sum();
+        let mu_scale = 1.0 - coef * wsum;
+        for w in self.weights.iter_mut() {
+            *w *= coef;
+        }
+        Some(mu_scale)
+    }
+
+    /// Renormalize mu to `init_norm` if the config asks for it.
+    fn maybe_renormalize(&mut self) {
+        if self.cfg.renormalize {
+            let n = nrm2(&self.mu);
+            if n > f32::MIN_POSITIVE {
+                scal(self.cfg.init_norm / n, &mut self.mu);
+            }
+        }
+    }
 }
 
 impl DirectionSampler for LdsdSampler {
@@ -132,24 +171,8 @@ impl DirectionSampler for LdsdSampler {
         let d = self.mu.len();
         assert_eq!(dirs.len(), k * d);
         assert_eq!(losses.len(), k);
-        if k < 2 {
-            // no baseline is possible; skip the policy update
-            return;
-        }
-        let sum: f64 = losses.iter().sum();
-        self.weights.clear();
-        for i in 0..k {
-            let adv = if self.cfg.leave_one_out {
-                (k as f64 * losses[i] - sum) / (k as f64 - 1.0)
-            } else {
-                losses[i] - sum / k as f64
-            };
-            self.weights.push(adv as f32);
-        }
         // mu += gamma_mu * sign * (1/K) sum_i w_i (v_i - mu) / eps^2
-        let coef = self.cfg.gamma_mu * self.cfg.reward_sign
-            / (k as f32 * self.cfg.eps * self.cfg.eps);
-        // (v_i - mu) = dirs_i - mu:
+        // with (v_i - mu) = dirs_i - mu, i.e.
         //   mu_new = (1 - coef * wsum) * mu + coef * sum_i w_i dirs_i.
         // Both baselines make the advantages sum to zero analytically
         // (wsum ~ 0), but we keep the exact form: scale mu first, then
@@ -157,23 +180,111 @@ impl DirectionSampler for LdsdSampler {
         // probe matrix in one fused blocked pass (`axpy_k_ctx`, shard-
         // parallel on the installed context) instead of K separate sweeps
         // of mu.
-        let wsum: f32 = self.weights.iter().sum();
-        let mu_scale = 1.0 - coef * wsum;
+        let mu_scale = match self.update_weights(losses, k) {
+            Some(s) => s,
+            None => return, // k < 2: no baseline is possible, skip the update
+        };
         self.exec.for_each_shard_mut(&mut self.mu, |_, _, chunk| {
             for v in chunk.iter_mut() {
                 *v *= mu_scale;
             }
         });
-        for w in self.weights.iter_mut() {
-            *w *= coef;
-        }
         axpy_k_ctx(&self.exec, &self.weights, dirs, &mut self.mu);
-        if self.cfg.renormalize {
-            let n = nrm2(&self.mu);
-            if n > f32::MIN_POSITIVE {
-                scal(self.cfg.init_norm / n, &mut self.mu);
-            }
+        self.maybe_renormalize();
+    }
+
+    fn supports_replay(&self) -> bool {
+        true
+    }
+
+    fn advance_step(&mut self) {
+        self.step += 1;
+    }
+
+    fn fill_row_range(
+        &self,
+        k: usize,
+        row: usize,
+        col0: usize,
+        out: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        debug_assert!(self.step > 0, "fill_row_range before any sample/advance");
+        let d = self.mu.len();
+        // replay the z ~ N(0, 1) cell draws, then the same elementwise
+        // affine v = mu + eps z the materialized fill applies
+        fill_replay_range(
+            self.exec.shard_len(),
+            self.seed,
+            self.step - 1,
+            k * d,
+            row * d + col0,
+            out,
+            scratch,
+        );
+        let eps = self.cfg.eps;
+        for (j, v) in out.iter_mut().enumerate() {
+            *v = self.mu[col0 + j] + eps * *v;
         }
+    }
+
+    fn observe_replay(&mut self, losses: &[f64], k: usize) {
+        assert_eq!(losses.len(), k);
+        let mu_scale = match self.update_weights(losses, k) {
+            Some(s) => s,
+            None => return,
+        };
+        // Streamed form of `observe`: per mu shard, regenerate the K
+        // direction pieces from the *pre-update* mu (the affine transform
+        // is elementwise, so a shard only needs its own mu values), scale
+        // the shard, then accumulate rows in row order — per element the
+        // exact sequence of operations `observe` applies, so the learned
+        // mean is bitwise identical.  Peak probe state per worker is the
+        // (K + 1)-shard block, tracked for the memory acceptance test.
+        let d = self.mu.len();
+        let sl = self.exec.shard_len();
+        let seed = self.seed;
+        let step = self.step - 1;
+        let eps = self.cfg.eps;
+        let weights = std::mem::take(&mut self.weights);
+        let exec = self.exec.clone();
+        exec.for_each_shard_mut_scratch(
+            &mut self.mu,
+            || {
+                (
+                    crate::metrics::TrackedBuf::zeroed(k * sl),
+                    crate::metrics::TrackedBuf::zeroed(sl),
+                )
+            },
+            |scratch, _, start, mub| {
+                let (block, stage) = scratch;
+                let len = mub.len();
+                for (i, wi) in weights.iter().enumerate() {
+                    if *wi == 0.0 {
+                        continue; // axpy_k skips zero rows; match it
+                    }
+                    let piece = &mut block[i * sl..i * sl + len];
+                    fill_replay_range(sl, seed, step, k * d, i * d + start, piece, stage);
+                    for (j, v) in piece.iter_mut().enumerate() {
+                        *v = mub[j] + eps * *v;
+                    }
+                }
+                for v in mub.iter_mut() {
+                    *v *= mu_scale;
+                }
+                for (i, wi) in weights.iter().enumerate() {
+                    if *wi == 0.0 {
+                        continue;
+                    }
+                    let piece = &block[i * sl..i * sl + len];
+                    for (m, v) in mub.iter_mut().zip(piece.iter()) {
+                        *m += *wi * *v;
+                    }
+                }
+            },
+        );
+        self.weights = weights;
+        self.maybe_renormalize();
     }
 
     fn dim(&self) -> usize {
@@ -303,6 +414,60 @@ mod tests {
         }
         let cos_after = cosine(s.policy_mean().unwrap(), &target);
         assert!(cos_after < -0.5, "expected anti-alignment, cos={cos_after}");
+    }
+
+    #[test]
+    fn ldsd_replay_bitwise_matches_sample() {
+        let d = 233; // misaligned with shard_len on purpose
+        let k = 4;
+        let ctx = crate::exec::ExecContext::new(1).with_shard_len(64);
+        let mk = || {
+            let mut s = LdsdSampler::new(d, 13, LdsdConfig { eps: 0.7, ..Default::default() });
+            s.set_exec(ctx.clone());
+            s
+        };
+        let mut mat = mk();
+        let mut dirs = vec![0.0f32; k * d];
+        mat.sample(&mut dirs, k);
+        let mut rep = mk();
+        rep.advance_step();
+        let mut scratch = vec![0.0f32; 64];
+        for (row, col0, len) in [(0usize, 0usize, d), (3, 100, 64), (1, 230, 3)] {
+            let mut piece = vec![0.0f32; len];
+            rep.fill_row_range(k, row, col0, &mut piece, &mut scratch);
+            for (i, v) in piece.iter().enumerate() {
+                assert_eq!(v.to_bits(), dirs[row * d + col0 + i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn observe_replay_bitwise_matches_observe() {
+        // the streamed policy update must walk the identical mu trajectory
+        let d = 500;
+        let k = 5;
+        for threads in [1usize, 4] {
+            let ctx = crate::exec::ExecContext::new(threads).with_shard_len(96);
+            let mk = || {
+                let mut s = LdsdSampler::new(d, 21, LdsdConfig::default());
+                s.set_exec(ctx.clone());
+                s
+            };
+            let mut mat = mk();
+            let mut rep = mk();
+            let mut dirs = vec![0.0f32; k * d];
+            for step in 0..6 {
+                mat.sample(&mut dirs, k);
+                rep.advance_step();
+                let losses: Vec<f64> =
+                    (0..k).map(|i| ((i * 3 + step) % 7) as f64 * 0.2 - 0.5).collect();
+                mat.observe(&dirs, &losses, k);
+                rep.observe_replay(&losses, k);
+                for (a, b) in mat.policy_mean().unwrap().iter().zip(rep.policy_mean().unwrap()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "mu diverged (t={threads})");
+                }
+            }
+        }
     }
 
     #[test]

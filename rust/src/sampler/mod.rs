@@ -13,6 +13,12 @@
 //!
 //! The sampler is deliberately decoupled from the base optimizer: the
 //! paper's §4 "plug-and-play" claim is this trait boundary.
+//!
+//! Samplers whose fills are pure functions of their (seed, step, shard)
+//! RNG cells also support *seed replay*
+//! ([`DirectionSampler::fill_row_range`]): any piece of the probe matrix
+//! can be regenerated on demand without a backing buffer, which is what
+//! the streamed probe engine ([`crate::probe`]) builds on (DESIGN.md §10).
 
 mod alignment;
 mod gaussian;
@@ -42,6 +48,51 @@ pub trait DirectionSampler {
     /// Observe the probe losses `f(x + tau * dirs[i])` for the directions
     /// produced by the last `sample` call.  Policy-free samplers ignore it.
     fn observe(&mut self, dirs: &[f32], losses: &[f64], k: usize);
+
+    /// True if this sampler can regenerate any piece of its probe matrix
+    /// on demand from its RNG cells ([`DirectionSampler::fill_row_range`])
+    /// — the property the streamed probe engine relies on.  Samplers whose
+    /// rows need a full-row pass before any element is final (e.g. the
+    /// normalized sphere) return `false` and stay on the materialized
+    /// path.
+    fn supports_replay(&self) -> bool {
+        false
+    }
+
+    /// Advance the per-step substream counter without materializing a
+    /// probe matrix — the streamed engine's replacement for `sample`.
+    /// After this call, [`DirectionSampler::fill_row_range`] replays the
+    /// step a `sample` call here would have produced.
+    fn advance_step(&mut self) {
+        panic!("{}: seed replay not supported (supports_replay is false)", self.name());
+    }
+
+    /// Seed replay: write row `row`, columns `[col0, col0 + out.len())` of
+    /// the most recently sampled/advanced step's K x d probe matrix into
+    /// `out`, exactly as `sample` would have produced it.  `k` is the row
+    /// count of that matrix (part of the flat-buffer RNG geometry);
+    /// `scratch` must hold at least the installed context's `shard_len`
+    /// elements (substream regeneration staging).  Pure in the sampler
+    /// state: any number of calls return the same values.
+    fn fill_row_range(
+        &self,
+        k: usize,
+        row: usize,
+        col0: usize,
+        out: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let _ = (k, row, col0, out, scratch);
+        panic!("{}: seed replay not supported (supports_replay is false)", self.name());
+    }
+
+    /// Policy update where the step's directions are replayed on demand
+    /// instead of passed as a slice — the streamed equivalent of
+    /// [`DirectionSampler::observe`], bitwise identical to it.
+    /// Policy-free samplers ignore it.
+    fn observe_replay(&mut self, losses: &[f64], k: usize) {
+        let _ = (losses, k);
+    }
 
     /// Trainable dimensionality this sampler emits.
     fn dim(&self) -> usize;

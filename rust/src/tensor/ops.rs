@@ -209,6 +209,46 @@ pub fn probe_combine_ctx(ctx: &ExecContext, dirs: &[f32], d: usize, w: &[f32], g
     });
 }
 
+/// Fused perturb→evaluate pass for the streamed probe engine: calls
+/// `f(i, x[i] + tau * v[i])` for every index of the window without
+/// materializing the perturbed vector.  The perturbation arithmetic is
+/// the f32 expression the materialized `loss_k` kernels use, so oracles
+/// evaluating through this on regenerated probe shards produce bitwise
+/// the same losses as the slice path (DESIGN.md §10).
+#[inline]
+pub fn perturb_eval<F: FnMut(usize, f32)>(x: &[f32], tau: f32, v: &[f32], mut f: F) {
+    debug_assert_eq!(x.len(), v.len());
+    for (i, (xi, vi)) in x.iter().zip(v.iter()).enumerate() {
+        f(i, xi + tau * vi);
+    }
+}
+
+/// Seed-replay update kernel: `y += sum_i w[i] * row_i` over one column
+/// window, where each row's values are regenerated on demand into
+/// `scratch` by `fill(i, window)` instead of being read from a stored
+/// matrix.  Rows accumulate in row order and zero weights are skipped —
+/// exactly [`axpy_k`]'s per-element behavior, so the streamed update is
+/// bitwise identical to the materialized one.
+pub fn replay_axpy<F: FnMut(usize, &mut [f32])>(
+    w: &[f32],
+    scratch: &mut [f32],
+    y: &mut [f32],
+    mut fill: F,
+) {
+    let n = y.len();
+    debug_assert!(scratch.len() >= n, "scratch must cover the column window");
+    for (i, wi) in w.iter().enumerate() {
+        if *wi == 0.0 {
+            continue;
+        }
+        let row = &mut scratch[..n];
+        fill(i, row);
+        for (yi, ri) in y.iter_mut().zip(row.iter()) {
+            *yi += *wi * *ri;
+        }
+    }
+}
+
 /// Shard-parallel [`axpy_into`]: `out = x + a * d`, elementwise over
 /// disjoint shards — bitwise identical to the serial kernel.
 pub fn axpy_into_ctx(ctx: &ExecContext, out: &mut [f32], x: &[f32], a: f32, d: &[f32]) {
@@ -373,6 +413,43 @@ mod tests {
                 axpy_into_ctx(&ctx, &mut o, &x, 0.3, &g);
                 assert_eq!(o, o_serial, "axpy_into t={threads} sl={shard_len}");
             }
+        }
+    }
+
+    #[test]
+    fn perturb_eval_matches_axpy_into() {
+        let x = [1.0f32, -2.0, 0.5, 3.25];
+        let v = [0.5f32, 1.5, -4.0, 0.0];
+        let tau = 1e-3f32;
+        let mut out = [0.0f32; 4];
+        axpy_into(&mut out, &x, tau, &v);
+        let mut streamed = [0.0f32; 4];
+        perturb_eval(&x, tau, &v, |i, z| streamed[i] = z);
+        for (a, b) in out.iter().zip(streamed.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn replay_axpy_bitwise_matches_axpy_k() {
+        // regeneration closure serves rows of a reference matrix; the
+        // replayed accumulation must be bit-for-bit the fused kernel's
+        let d = BLOCK + 13;
+        let k = 4;
+        let rows: Vec<f32> = (0..k * d).map(|i| ((i % 11) as f32) * 0.3 - 1.5).collect();
+        let w = [0.25f32, 0.0, -1.0, 0.75];
+        let mut fused = vec![0.5f32; d];
+        axpy_k(&w, &rows, &mut fused);
+        let mut replayed = vec![0.5f32; d];
+        let mut scratch = vec![0.0f32; d];
+        let mut fills = 0usize;
+        replay_axpy(&w, &mut scratch, &mut replayed, |i, out| {
+            fills += 1;
+            out.copy_from_slice(&rows[i * d..(i + 1) * d]);
+        });
+        assert_eq!(fills, 3, "zero-weight rows must not be regenerated");
+        for (a, b) in fused.iter().zip(replayed.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

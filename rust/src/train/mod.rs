@@ -7,15 +7,21 @@
 //! (DESIGN.md §5).
 //!
 //! The loop drives the estimator through its two-phase `propose`/`consume`
-//! flow: with [`ProbeDispatch::Batched`] (the default) the whole K x d
-//! probe matrix is evaluated in one [`Oracle::loss_k`] dispatch;
-//! [`ProbeDispatch::PerProbe`] issues K separate `loss_dir` calls instead
-//! — same numbers, same accounting, kept for A/B throughput benchmarking
-//! (`perf_hotpath`).
+//! flow: with [`ProbeDispatch::Batched`] (the default) the whole K-probe
+//! batch is evaluated in one [`Oracle::loss_probes`] dispatch (the fused
+//! `loss_k` on a materialized matrix, the streamed shard-replay evaluation
+//! otherwise); [`ProbeDispatch::PerProbe`] issues K separate `loss_dir`
+//! calls instead — same numbers, same accounting, kept for A/B throughput
+//! benchmarking (`perf_hotpath`).  Probe storage itself is selected by
+//! [`TrainConfig::probe_storage`] / `--probe-storage` / `ZO_PROBE_STORAGE`
+//! (DESIGN.md §10).
 
 mod schedule;
 
 pub use schedule::{ConstantLr, CosineLr, LrSchedule};
+
+/// Probe-storage selection re-exported where the run configuration lives.
+pub use crate::probe::ProbeStorage;
 
 use anyhow::{bail, Result};
 
@@ -98,7 +104,25 @@ impl ProbeDispatch {
     }
 }
 
+impl SamplerKind {
+    /// True if this direction distribution supports seed replay (the
+    /// streamed probe path).  The sphere sampler normalizes whole rows, so
+    /// it cannot regenerate elements independently and stays materialized.
+    pub fn supports_replay(&self) -> bool {
+        !matches!(self, SamplerKind::Sphere)
+    }
+}
+
 impl EstimatorKind {
+    /// The direction distribution this estimator draws from.
+    pub fn sampler_kind(&self) -> &SamplerKind {
+        match self {
+            EstimatorKind::CentralK1(s) => s,
+            EstimatorKind::ForwardAvg { sampler, .. } => sampler,
+            EstimatorKind::BestOfK { sampler, .. } => sampler,
+        }
+    }
+
     /// Oracle calls one step of this estimator consumes.
     pub fn calls_per_step(&self) -> u64 {
         match self {
@@ -131,7 +155,7 @@ fn sampler_label(s: &SamplerKind) -> &'static str {
     }
 }
 
-fn build_sampler(kind: &SamplerKind, d: usize, seed: u64) -> Box<dyn crate::sampler::DirectionSampler + Send> {
+fn build_sampler(kind: &SamplerKind, d: usize, seed: u64) -> crate::probe::BoxedSampler {
     match kind {
         SamplerKind::Gaussian => Box::new(GaussianSampler::new(d, seed)),
         SamplerKind::Sphere => Box::new(SphereSampler::new(d, seed)),
@@ -142,7 +166,7 @@ fn build_sampler(kind: &SamplerKind, d: usize, seed: u64) -> Box<dyn crate::samp
 
 // DirectionSampler must be object-safe for the boxed path; estimators are
 // generic, so we wrap the boxed sampler in a forwarding impl.
-impl crate::sampler::DirectionSampler for Box<dyn crate::sampler::DirectionSampler + Send> {
+impl crate::sampler::DirectionSampler for crate::probe::BoxedSampler {
     fn sample(&mut self, dirs: &mut [f32], k: usize) {
         (**self).sample(dirs, k)
     }
@@ -151,6 +175,25 @@ impl crate::sampler::DirectionSampler for Box<dyn crate::sampler::DirectionSampl
     }
     fn observe(&mut self, dirs: &[f32], losses: &[f64], k: usize) {
         (**self).observe(dirs, losses, k)
+    }
+    fn supports_replay(&self) -> bool {
+        (**self).supports_replay()
+    }
+    fn advance_step(&mut self) {
+        (**self).advance_step()
+    }
+    fn fill_row_range(
+        &self,
+        k: usize,
+        row: usize,
+        col0: usize,
+        out: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        (**self).fill_row_range(k, row, col0, out, scratch)
+    }
+    fn observe_replay(&mut self, losses: &[f64], k: usize) {
+        (**self).observe_replay(losses, k)
     }
     fn dim(&self) -> usize {
         (**self).dim()
@@ -168,27 +211,34 @@ impl crate::sampler::DirectionSampler for Box<dyn crate::sampler::DirectionSampl
 
 /// Instantiate the estimator described by `kind` for dimensionality `d`,
 /// wired to the given shard-parallel execution context (the context
-/// cascades to the estimator's sampler).
+/// cascades to the estimator's probe source and sampler) and the given
+/// probe storage ([`ProbeStorage::Auto`] resolves by memory budget).
 pub fn build_estimator(
     kind: &EstimatorKind,
     d: usize,
     tau: f32,
     seed: u64,
     exec: &ExecContext,
-) -> Box<dyn GradEstimator + Send> {
+    storage: ProbeStorage,
+) -> Result<Box<dyn GradEstimator + Send>> {
     let mut est: Box<dyn GradEstimator + Send> = match kind {
-        EstimatorKind::CentralK1(s) => {
-            Box::new(CentralK1Estimator::new(build_sampler(s, d, seed), tau))
-        }
+        EstimatorKind::CentralK1(s) => Box::new(CentralK1Estimator::with_storage(
+            build_sampler(s, d, seed),
+            tau,
+            storage,
+        )?),
         EstimatorKind::ForwardAvg { k, sampler } => Box::new(
-            ForwardAvgEstimator::new(build_sampler(sampler, d, seed), tau, *k),
+            ForwardAvgEstimator::with_storage(build_sampler(sampler, d, seed), tau, *k, storage)?,
         ),
-        EstimatorKind::BestOfK { k, sampler } => {
-            Box::new(LdsdEstimator::new(build_sampler(sampler, d, seed), tau, *k))
-        }
+        EstimatorKind::BestOfK { k, sampler } => Box::new(LdsdEstimator::with_storage(
+            build_sampler(sampler, d, seed),
+            tau,
+            *k,
+            storage,
+        )?),
     };
     est.set_exec(exec.clone());
-    est
+    Ok(est)
 }
 
 /// Everything one training run needs (estimator x optimizer x budget).
@@ -214,6 +264,11 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Fused vs per-probe oracle dispatch (numerically equivalent).
     pub probe_dispatch: ProbeDispatch,
+    /// Probe-matrix storage: materialized K x d buffer, streamed seed
+    /// replay, or auto-selection by memory budget.  Bitwise-identical
+    /// trajectories either way (DESIGN.md §10); `ZO_PROBE_STORAGE`
+    /// overrides for whole-suite forcing.
+    pub probe_storage: ProbeStorage,
 }
 
 impl TrainConfig {
@@ -230,6 +285,7 @@ impl TrainConfig {
             cosine_schedule: true,
             seed: 0,
             probe_dispatch: ProbeDispatch::Batched,
+            probe_storage: ProbeStorage::Auto,
         }
     }
 
@@ -246,6 +302,7 @@ impl TrainConfig {
             cosine_schedule: true,
             seed: 0,
             probe_dispatch: ProbeDispatch::Batched,
+            probe_storage: ProbeStorage::Auto,
         }
     }
 
@@ -273,6 +330,7 @@ impl TrainConfig {
             cosine_schedule: true,
             seed: 0,
             probe_dispatch: ProbeDispatch::Batched,
+            probe_storage: ProbeStorage::Auto,
         }
     }
 }
@@ -331,7 +389,8 @@ impl<O: Oracle> Trainer<O> {
         exec: ExecContext,
     ) -> Result<Self> {
         let d = oracle.dim();
-        let estimator = build_estimator(&cfg.estimator, d, cfg.tau, cfg.seed, &exec);
+        let storage = Self::resolve_storage(&cfg, &oracle)?;
+        let estimator = build_estimator(&cfg.estimator, d, cfg.tau, cfg.seed, &exec, storage)?;
         let optimizer = crate::optim::optimizers_by_name(&cfg.optimizer, d)?;
         oracle.set_exec(exec);
         Ok(Self {
@@ -343,6 +402,44 @@ impl<O: Oracle> Trainer<O> {
             g: vec![0.0; d],
             probe_losses: Vec::new(),
         })
+    }
+
+    /// Resolve the run's probe storage: the `ZO_PROBE_STORAGE` environment
+    /// override (CI forces the whole suite onto one path with it) beats
+    /// the config, and streaming needs batched dispatch + a streaming-
+    /// capable oracle + a seed-replay sampler.  When those preconditions
+    /// fail, an env- or auto-derived `streamed` quietly falls back to
+    /// materialized (the two are bitwise identical, so the run is still
+    /// correct); an explicitly configured `streamed` errors instead so a
+    /// CLI user is not silently handed the path they opted out of.
+    fn resolve_storage(cfg: &TrainConfig, oracle: &O) -> Result<ProbeStorage> {
+        let env = ProbeStorage::from_env();
+        let requested = env.unwrap_or(cfg.probe_storage);
+        let streaming_ok = cfg.probe_dispatch == ProbeDispatch::Batched
+            && oracle.supports_streamed_probes()
+            && cfg.estimator.sampler_kind().supports_replay();
+        match requested {
+            ProbeStorage::Streamed if !streaming_ok => {
+                // env.is_none() here implies the config itself asked for
+                // streamed, which deserves the error below
+                if env.is_some() {
+                    Ok(ProbeStorage::Materialized)
+                } else {
+                    bail!(
+                        "probe storage 'streamed' needs batched dispatch ({}), a \
+                         streaming-capable oracle ({}: {}), and a seed-replay sampler \
+                         ({}: {})",
+                        cfg.probe_dispatch.label(),
+                        oracle.name(),
+                        oracle.supports_streamed_probes(),
+                        sampler_label(cfg.estimator.sampler_kind()),
+                        cfg.estimator.sampler_kind().supports_replay(),
+                    )
+                }
+            }
+            ProbeStorage::Auto if !streaming_ok => Ok(ProbeStorage::Materialized),
+            other => Ok(other),
+        }
     }
 
     /// Read access to the oracle (budget inspection).
@@ -361,8 +458,11 @@ impl<O: Oracle> Trainer<O> {
     }
 
     /// One estimation step under the configured probe dispatch.  Both
-    /// paths stage probe losses in the trainer's reusable buffer, so the
-    /// per-step hot path allocates nothing after warmup.
+    /// paths stage probe losses in the trainer's reusable buffer; on the
+    /// materialized path the per-step hot path allocates nothing after
+    /// warmup, while the streamed path allocates its bounded per-worker
+    /// shard scratch per dispatch (the deliberate O(K · shard_len) trade
+    /// of DESIGN.md §10).
     fn estimate_step(&mut self) -> Result<crate::optim::Estimate> {
         match self.cfg.probe_dispatch {
             ProbeDispatch::Batched => self.estimator.estimate_with(
@@ -374,12 +474,21 @@ impl<O: Oracle> Trainer<O> {
                 let d = self.oracle.dim();
                 {
                     let batch = self.estimator.propose()?;
+                    // per-probe dispatch reads row slices, so it requires
+                    // a materialized source — resolve_storage guarantees
+                    // streamed is never paired with it
+                    let dirs = match batch.dirs {
+                        Some(dirs) => dirs,
+                        None => bail!(
+                            "per-probe dispatch needs a materialized probe matrix \
+                             (probe storage is streamed)"
+                        ),
+                    };
                     self.probe_losses.clear();
                     for i in 0..batch.k {
-                        let l = self.oracle.loss_dir(
-                            &batch.dirs[i * d..(i + 1) * d],
-                            batch.tau,
-                        )?;
+                        let l = self
+                            .oracle
+                            .loss_dir(&dirs[i * d..(i + 1) * d], batch.tau)?;
                         self.probe_losses.push(l);
                     }
                 }
@@ -515,6 +624,7 @@ mod tests {
             cosine_schedule: false,
             seed: 1,
             probe_dispatch: ProbeDispatch::Batched,
+            probe_storage: ProbeStorage::Auto,
         };
         let mut t2 = Trainer::new(
             mk(EstimatorKind::CentralK1(SamplerKind::Gaussian)),
@@ -593,5 +703,76 @@ mod tests {
         assert!(out.label.contains("bestofk5"));
         assert!(out.label.contains("ldsd"));
         assert!(out.label.contains("zo_adamm"));
+    }
+
+    #[test]
+    fn streamed_storage_walks_identical_trajectory() {
+        // The PR 3 acceptance property at the trainer level: materialized
+        // and streamed probe storage produce bit-identical loss curves and
+        // final parameters (see also tests/probe_storage.rs for the
+        // randomized sweep).
+        let d = 512;
+        let run = |storage: ProbeStorage| {
+            let cfg = TrainConfig {
+                cosine_schedule: false,
+                probe_storage: storage,
+                ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 360)
+            };
+            let oracle = quad(d);
+            let corpus = mini_corpus();
+            let mut t = Trainer::with_exec(
+                cfg,
+                oracle,
+                corpus,
+                ExecContext::new(2).with_shard_len(100),
+            )
+            .unwrap();
+            let out = t.run(None).unwrap();
+            (out.loss_curve, t.oracle().params().to_vec())
+        };
+        let (curve_m, params_m) = run(ProbeStorage::Materialized);
+        let (curve_s, params_s) = run(ProbeStorage::Streamed);
+        assert_eq!(curve_m.len(), curve_s.len());
+        for ((cm, lm), (cs, ls)) in curve_m.iter().zip(curve_s.iter()) {
+            assert_eq!(cm, cs);
+            assert_eq!(lm.to_bits(), ls.to_bits(), "{lm} vs {ls}");
+        }
+        for (a, b) in params_m.iter().zip(params_s.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn per_probe_dispatch_forces_materialized() {
+        // explicit streamed + per-probe dispatch is contradictory: error
+        let cfg = TrainConfig {
+            probe_dispatch: ProbeDispatch::PerProbe,
+            probe_storage: ProbeStorage::Streamed,
+            ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 60)
+        };
+        if ProbeStorage::from_env().is_none() {
+            let err = Trainer::new(cfg, quad(8), mini_corpus()).err().unwrap();
+            assert!(err.to_string().contains("batched dispatch"), "{err}");
+        }
+        // auto + per-probe quietly stays materialized and runs
+        let cfg2 = TrainConfig {
+            probe_dispatch: ProbeDispatch::PerProbe,
+            probe_storage: ProbeStorage::Auto,
+            ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 60)
+        };
+        let mut t = Trainer::new(cfg2, quad(8), mini_corpus()).unwrap();
+        assert!(t.run(None).is_ok());
+    }
+
+    #[test]
+    fn explicit_streamed_over_sphere_sampler_errors() {
+        let cfg = TrainConfig {
+            estimator: EstimatorKind::BestOfK { k: 3, sampler: SamplerKind::Sphere },
+            probe_storage: ProbeStorage::Streamed,
+            ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 60)
+        };
+        if ProbeStorage::from_env().is_none() {
+            assert!(Trainer::new(cfg, quad(8), mini_corpus()).is_err());
+        }
     }
 }

@@ -121,6 +121,57 @@ fn ldsd_policy_updates_bitwise_identical_across_thread_counts() {
     }
 }
 
+/// The streamed probe engine rides the same determinism contract: a full
+/// Algorithm-2 run with seed-replay probes walks the identical trajectory
+/// on 1 and 8 threads — and matches the materialized run bit for bit
+/// (the PR 3 acceptance property; see DESIGN.md §10).
+#[test]
+fn streamed_train_loop_bitwise_identical_threads_1_vs_8() {
+    use zo_ldsd::train::ProbeStorage;
+    let d = 4096;
+    let run = |threads: usize, storage: ProbeStorage| {
+        let cfg = TrainConfig {
+            cosine_schedule: false,
+            probe_storage: storage,
+            ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 600)
+        };
+        let oracle = QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
+        let corpus = Corpus::new(CorpusSpec::default_mini());
+        let mut t = Trainer::with_exec(cfg, oracle, corpus, ctx(threads, 512)).unwrap();
+        let out = t.run(None).unwrap();
+        (out.steps, out.loss_curve, t.oracle().params().to_vec())
+    };
+    let (s1, curve1, params1) = run(1, ProbeStorage::Streamed);
+    let (s8, curve8, params8) = run(8, ProbeStorage::Streamed);
+    let (sm, curve_m, params_m) = run(8, ProbeStorage::Materialized);
+    assert_eq!(s1, s8, "streamed step counts diverged across threads");
+    assert_eq!(s1, sm, "streamed and materialized step counts diverged");
+    for (i, ((c1, l1), ((c8, l8), (cm, lm)))) in curve1
+        .iter()
+        .zip(curve8.iter().zip(curve_m.iter()))
+        .enumerate()
+    {
+        assert_eq!(c1, c8, "streamed call axis diverged at step {i}");
+        assert_eq!(c1, cm, "storage call axis diverged at step {i}");
+        assert_eq!(
+            l1.to_bits(),
+            l8.to_bits(),
+            "streamed loss diverged at step {i}: {l1} vs {l8}"
+        );
+        assert_eq!(
+            l1.to_bits(),
+            lm.to_bits(),
+            "storage loss diverged at step {i}: {l1} vs {lm}"
+        );
+    }
+    for (i, (p1, (p8, pm))) in
+        params1.iter().zip(params8.iter().zip(params_m.iter())).enumerate()
+    {
+        assert_eq!(p1.to_bits(), p8.to_bits(), "streamed params diverged at {i}");
+        assert_eq!(p1.to_bits(), pm.to_bits(), "storage params diverged at {i}");
+    }
+}
+
 /// Thread count must not change oracle-call accounting either — the
 /// budget-fair protocol is schedule-independent.
 #[test]

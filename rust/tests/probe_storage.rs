@@ -1,0 +1,222 @@
+//! Probe-storage equivalence (DESIGN.md §10): the streamed seed-replay
+//! engine must be a *bitwise* drop-in for the materialized K x d matrix —
+//! identical `Estimate`s, identical parameter trajectories — across random
+//! (d, K, shard_len, threads) configurations, and it must never allocate a
+//! K x d probe buffer (the memory claim the refactor exists for).
+
+use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::metrics::probe_tracker;
+use zo_ldsd::optim::{GradEstimator, LdsdEstimator};
+use zo_ldsd::oracle::{Oracle, QuadraticOracle};
+use zo_ldsd::probe::ProbeStorage;
+use zo_ldsd::proptest::{check, Gen, U64Range};
+use zo_ldsd::sampler::{GaussianSampler, LdsdConfig, LdsdSampler};
+use zo_ldsd::train::{EstimatorKind, SamplerKind, TrainConfig, Trainer};
+
+/// One random probe-storage configuration to cross-check.
+#[derive(Debug, Clone)]
+struct StorageCase {
+    d: usize,
+    k: usize,
+    shard_len: usize,
+    threads: usize,
+    seed: u64,
+}
+
+struct StorageCaseGen;
+
+impl Gen<StorageCase> for StorageCaseGen {
+    fn generate(&self, rng: &mut zo_ldsd::rng::Rng) -> StorageCase {
+        StorageCase {
+            d: 16 + rng.below(1200) as usize,
+            k: 1 + rng.below(7) as usize,
+            shard_len: 4 + rng.below(300) as usize,
+            threads: 1 + rng.below(8) as usize,
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, value: &StorageCase) -> Vec<StorageCase> {
+        let mut out = Vec::new();
+        if value.d > 16 {
+            out.push(StorageCase { d: (value.d / 2).max(16), ..value.clone() });
+        }
+        if value.k > 1 {
+            out.push(StorageCase { k: value.k / 2, ..value.clone() });
+        }
+        out
+    }
+}
+
+fn quad(d: usize) -> QuadraticOracle {
+    let diag: Vec<f32> = (0..d).map(|i| 1.0 + 0.2 * (i % 4) as f32).collect();
+    let center: Vec<f32> = (0..d).map(|i| (i as f32 * 0.3).sin()).collect();
+    QuadraticOracle::new(diag, center, vec![0.0; d])
+}
+
+/// Randomized sweep: materialized and streamed trainers with the same
+/// seed and shard geometry walk bit-identical trajectories at any thread
+/// count.
+#[test]
+fn prop_streamed_and_materialized_trajectories_bitwise_equal() {
+    check("probe_storage_equivalence", &StorageCaseGen, 12, |case| {
+        let run = |storage: ProbeStorage| {
+            let cfg = TrainConfig {
+                estimator: EstimatorKind::BestOfK {
+                    k: case.k,
+                    sampler: SamplerKind::Ldsd(LdsdConfig::default()),
+                },
+                optimizer: "zo_sgd_plain".into(),
+                lr: 0.02,
+                tau: 1e-3,
+                budget: (case.k as u64 + 1) * 6, // six steps
+                eval_every: 0,
+                eval_batches: 1,
+                cosine_schedule: false,
+                seed: case.seed,
+                probe_dispatch: Default::default(),
+                probe_storage: storage,
+            };
+            let ctx = ExecContext::new(case.threads).with_shard_len(case.shard_len);
+            let mut t = Trainer::with_exec(
+                cfg,
+                quad(case.d),
+                Corpus::new(CorpusSpec::default_mini()),
+                ctx,
+            )
+            .unwrap();
+            let out = t.run(None).unwrap();
+            (out.loss_curve, t.oracle().params().to_vec())
+        };
+        let (curve_m, params_m) = run(ProbeStorage::Materialized);
+        let (curve_s, params_s) = run(ProbeStorage::Streamed);
+        curve_m.len() == curve_s.len()
+            && curve_m
+                .iter()
+                .zip(curve_s.iter())
+                .all(|((cm, lm), (cs, ls))| cm == cs && lm.to_bits() == ls.to_bits())
+            && params_m
+                .iter()
+                .zip(params_s.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    });
+}
+
+/// Same property at the raw estimator level, where the `Estimate` scalars
+/// (selection, fd coefficient, losses) are directly visible.
+#[test]
+fn prop_streamed_estimates_bitwise_equal() {
+    check("probe_estimate_equivalence", &U64Range(0, u64::MAX / 2), 10, |seed| {
+        let d = 64 + (seed % 700) as usize;
+        let k = 2 + (seed % 5) as usize;
+        let shard_len = 8 + (seed % 120) as usize;
+        let mk = |storage: ProbeStorage, threads: usize| {
+            let mut est = LdsdEstimator::with_storage(
+                LdsdSampler::new(d, *seed, LdsdConfig::default()),
+                1e-3,
+                k,
+                storage,
+            )
+            .unwrap();
+            est.set_exec(ExecContext::new(threads).with_shard_len(shard_len));
+            est
+        };
+        let mut em = mk(ProbeStorage::Materialized, 1);
+        let mut es = mk(ProbeStorage::Streamed, 5);
+        let mut om = quad(d);
+        let mut os = quad(d);
+        os.set_exec(ExecContext::new(5).with_shard_len(shard_len));
+        let mut gm = vec![0.0f32; d];
+        let mut gs = vec![0.0f32; d];
+        for _ in 0..3 {
+            let a = em.estimate(&mut om, &mut gm).unwrap();
+            let b = es.estimate(&mut os, &mut gs).unwrap();
+            if a.selected != b.selected
+                || a.calls != b.calls
+                || a.loss.to_bits() != b.loss.to_bits()
+                || a.fd_coeff.to_bits() != b.fd_coeff.to_bits()
+            {
+                return false;
+            }
+            if gm.iter().zip(gs.iter()).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                return false;
+            }
+        }
+        om.oracle_calls() == os.oracle_calls()
+    });
+}
+
+/// The memory acceptance criterion: when streaming, no K x d probe buffer
+/// is ever allocated — the measured peak probe state stays at the
+/// O(K * shard_len)-per-worker scale, orders of magnitude below the
+/// matrix the materialized path holds.
+#[test]
+fn streamed_path_never_allocates_kd_probe_buffer() {
+    let d = 1 << 20; // 4 MiB per row: a K x d buffer would be >= 20 MiB
+    let k = 5;
+    let threads = 4;
+    let shard_len = 1 << 14;
+    let kd_bytes = k * d * 4;
+
+    // streamed: measured peak must stay far below K x d (worker scratch is
+    // threads * (K + 1) * shard_len floats, plus slack for concurrently
+    // running tests that also touch the global tracker)
+    {
+        let mut est = LdsdEstimator::with_storage(
+            GaussianSampler::new(d, 3),
+            1e-3,
+            k,
+            ProbeStorage::Streamed,
+        )
+        .unwrap();
+        est.set_exec(ExecContext::new(threads).with_shard_len(shard_len));
+        let mut oracle = QuadraticOracle::isotropic(vec![0.5; d]);
+        oracle.set_exec(ExecContext::new(threads).with_shard_len(shard_len));
+        let mut g = vec![0.0f32; d];
+        probe_tracker().reset();
+        for _ in 0..2 {
+            est.estimate(&mut oracle, &mut g).unwrap();
+        }
+        let peak = probe_tracker().peak();
+        assert!(peak > 0, "streaming scratch must be tracked");
+        assert!(
+            peak < kd_bytes / 4,
+            "streamed peak {peak} B is not O(K * shard_len) (K x d = {kd_bytes} B)"
+        );
+        assert_eq!(est.state_bytes(), 0, "gaussian streamed estimator holds no probe state");
+    }
+
+    // materialized reference: the tracker does see the K x d matrix
+    {
+        probe_tracker().reset();
+        let mut est = LdsdEstimator::with_storage(
+            GaussianSampler::new(d, 3),
+            1e-3,
+            k,
+            ProbeStorage::Materialized,
+        )
+        .unwrap();
+        est.set_exec(ExecContext::new(threads).with_shard_len(shard_len));
+        let mut oracle = QuadraticOracle::isotropic(vec![0.5; d]);
+        let mut g = vec![0.0f32; d];
+        est.estimate(&mut oracle, &mut g).unwrap();
+        assert!(
+            probe_tracker().peak() >= kd_bytes,
+            "materialized path must hold the K x d matrix"
+        );
+        assert_eq!(est.state_bytes(), kd_bytes);
+    }
+}
+
+/// Auto-selection picks streaming exactly when the matrix would blow the
+/// budget (and the pipeline supports replay).
+#[test]
+fn auto_selects_streamed_only_over_budget() {
+    let budget = zo_ldsd::probe::auto_budget_bytes();
+    let small = 1024usize;
+    assert_eq!(ProbeStorage::Auto.resolve(small, 5, true), ProbeStorage::Materialized);
+    let big = budget / 4 + 1;
+    assert_eq!(ProbeStorage::Auto.resolve(big, 1, true), ProbeStorage::Streamed);
+    assert_eq!(ProbeStorage::Auto.resolve(big, 1, false), ProbeStorage::Materialized);
+}

@@ -7,7 +7,7 @@ use zo_ldsd::data::SyntheticRegression;
 use zo_ldsd::eval::Evaluator;
 use zo_ldsd::oracle::{LinRegOracle, Oracle, PjrtOracle, QuadraticOracle};
 use zo_ldsd::runtime::Runtime;
-use zo_ldsd::train::{EstimatorKind, ProbeDispatch, SamplerKind, TrainConfig, Trainer};
+use zo_ldsd::train::{EstimatorKind, ProbeDispatch, ProbeStorage, SamplerKind, TrainConfig, Trainer};
 
 fn mini_corpus() -> Corpus {
     Corpus::new(CorpusSpec::default_mini())
@@ -66,6 +66,7 @@ fn central_and_bestofk_consume_identical_budget() {
         cosine_schedule: false,
         seed: 5,
         probe_dispatch: ProbeDispatch::Batched,
+        probe_storage: ProbeStorage::Auto,
     };
     let oracle = || QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
 
@@ -120,6 +121,7 @@ fn learnable_policy_beats_frozen_on_persistent_direction_quadratic() {
             cosine_schedule: false,
             seed,
             probe_dispatch: ProbeDispatch::Batched,
+            probe_storage: ProbeStorage::Auto,
         };
         let oracle =
             QuadraticOracle::new(vec![1.0; d], center.clone(), vec![0.0; d]);
