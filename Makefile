@@ -5,13 +5,15 @@
 #   make test            tier-1 verify: cargo build --release && cargo test -q
 #   make test-streamed   the test suite with streamed (seed-replay) probe
 #                        storage forced for every Trainer (CI parity)
+#   make test-resume     the interrupt-resume suite under both probe-
+#                        storage modes (CI parity for the resume-smoke job)
 #   make lint            clippy, warnings fatal (CI parity; allow-list in ci.yml)
 #   make doc             API docs, warnings fatal (CI parity)
 #   make bench           regenerate tables/figures from the artifacts
 #   make bench-smoke     compile + run ONE iteration of every bench (CI rot
 #                        guard; includes one mem/* probe-storage row)
 
-.PHONY: artifacts build test test-streamed lint doc bench bench-smoke clean
+.PHONY: artifacts build test test-streamed test-resume lint doc bench bench-smoke clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -24,6 +26,10 @@ test: build
 
 test-streamed: build
 	ZO_PROBE_STORAGE=streamed cargo test -q
+
+test-resume: build
+	ZO_PROBE_STORAGE=materialized cargo test -q --test checkpoint_resume
+	ZO_PROBE_STORAGE=streamed cargo test -q --test checkpoint_resume
 
 lint:
 	cargo clippy --all-targets -- -D warnings \

@@ -49,6 +49,7 @@ fn main() -> Result<()> {
         eval_batches: 8,
         probe_dispatch: None,
         probe_storage: None,
+        checkpoint: None,
     };
 
     if sweep == "k" || sweep == "all" {

@@ -26,7 +26,7 @@ fn main() -> Result<()> {
     let rt = Runtime::new(&dir)?;
     let manifest = Manifest::load(&dir)?;
     let model = manifest.model(&model_name)?;
-    let corpus = Corpus::new(manifest.corpus(&model_name)?.clone());
+    let corpus = Corpus::new(manifest.corpus(&model_name)?.clone())?;
 
     println!(
         "e2e: {} {} ({} trainable params), {} ZO steps (Algorithm 2, K = {})",

@@ -29,7 +29,7 @@ fn main() -> Result<()> {
     // LoRA fine-tuning with the paper's Algorithm 2 defaults
     let oracle = PjrtOracle::new(&rt, model, TrainMode::Lora)?;
     let evaluator = Evaluator::new(&rt, model, TrainMode::Lora)?;
-    let corpus = Corpus::new(manifest.corpus("roberta_mini")?.clone());
+    let corpus = Corpus::new(manifest.corpus("roberta_mini")?.clone())?;
 
     let mut cfg = TrainConfig::algorithm2("zo_sgd", 1e-4, 3000);
     cfg.eval_every = 600;

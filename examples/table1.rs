@@ -64,6 +64,7 @@ fn main() -> Result<()> {
                         eval_batches: 8,
                         probe_dispatch: None,
                         probe_storage: None,
+                        checkpoint: None,
                     });
                 }
             }

@@ -46,6 +46,7 @@ fn main() {
         eval_batches: 8,
         probe_dispatch: None,
         probe_storage: None,
+        checkpoint: None,
     };
     if filter.is_empty() || filter == "k" {
         for k in [1usize, 5, 10] {

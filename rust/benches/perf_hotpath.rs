@@ -260,7 +260,7 @@ fn main() {
     };
     let rt = Runtime::new("artifacts").unwrap();
     let entry = manifest.model("roberta_mini").unwrap();
-    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone());
+    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone()).unwrap();
     let batch = corpus.train_batch(0, entry.shapes.batch);
 
     for (mode, label) in [(TrainMode::Lora, "lora"), (TrainMode::Ft, "ft")] {

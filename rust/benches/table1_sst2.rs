@@ -45,6 +45,7 @@ fn main() {
                 eval_batches: 8,
                 probe_dispatch: None,
                 probe_storage: None,
+                checkpoint: None,
             });
         }
     }

@@ -97,6 +97,12 @@ impl Bencher {
             samples.push(t.elapsed().as_secs_f64());
         }
         let s = Summary::of(&samples);
+        if s.is_empty() {
+            // unreachable with min_iters >= 1, but never emit a row of
+            // NaNs (which jsonio would render as null) if limits are
+            // misconfigured
+            return Some(s);
+        }
         let throughput = if s.mean > 0.0 { work_units / s.mean } else { 0.0 };
         self.table.row(vec![
             name.to_string(),

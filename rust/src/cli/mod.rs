@@ -80,6 +80,13 @@ impl Args {
         Self::parse(std::env::args().skip(1), subcommands)
     }
 
+    /// [`Args::from_env`] with declared boolean flags (see
+    /// [`Args::parse_with_flags`]): a declared flag never swallows the
+    /// following token as its value.
+    pub fn from_env_with_flags(subcommands: &[&str], flags: &[&str]) -> Result<Self> {
+        Self::parse_with_flags(std::env::args().skip(1), subcommands, flags)
+    }
+
     /// True if the boolean flag was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)

@@ -10,6 +10,12 @@
 //! grids — no per-grid pool churn), and each trial receives a
 //! [`ExecContext::partition`]ed shard-level context so total concurrency
 //! stays at the caller's budget instead of multiplying against it.
+//!
+//! Grids are elastic (DESIGN.md §11): with a checkpoint directory
+//! configured, every trial snapshots into its own subdirectory, a killed
+//! grid resumed with [`crate::snapshot::CheckpointConfig::resume`] skips
+//! trials whose `completed/` outcome record is on disk, and in-flight
+//! trials continue bitwise-identically from their newest valid snapshot.
 
 use anyhow::{anyhow, Result};
 
@@ -20,6 +26,7 @@ use crate::exec::ExecContext;
 use crate::metrics::probe_tracker;
 use crate::oracle::PjrtOracle;
 use crate::runtime::Runtime;
+use crate::snapshot::{self, CheckpointConfig};
 use crate::train::{ProbeDispatch, ProbeStorage, TrainConfig, TrainOutcome, Trainer};
 
 /// One training run to schedule.
@@ -44,6 +51,12 @@ pub struct TrialSpec {
     /// The CLI `train --probe-storage` flag flows through here; grids can
     /// use it to A/B materialized vs streamed without cloning configs.
     pub probe_storage: Option<ProbeStorage>,
+    /// Per-trial override of the checkpoint/resume policy (None keeps the
+    /// config's).  Either way, a grid-level checkpoint directory is
+    /// rewritten to a per-trial subdirectory (`<dir>/<sanitized id>`)
+    /// before the trainer sees it, so trials never clobber each other's
+    /// snapshots.
+    pub checkpoint: Option<CheckpointConfig>,
 }
 
 /// Outcome of one scheduled trial.
@@ -101,8 +114,6 @@ fn run_trial_measured(
 ) -> Result<TrialResult> {
     let entry = manifest.model(&spec.model)?;
     let corpus_spec = manifest.corpus(&spec.model)?.clone();
-    let oracle = PjrtOracle::new(rt, entry, spec.mode)?;
-    let evaluator = Evaluator::new(rt, entry, spec.mode)?;
     let mut cfg = spec.config.clone();
     cfg.eval_batches = spec.eval_batches;
     if let Some(dispatch) = spec.probe_dispatch {
@@ -111,19 +122,89 @@ fn run_trial_measured(
     if let Some(storage) = spec.probe_storage {
         cfg.probe_storage = storage;
     }
-    let corpus = Corpus::new(corpus_spec);
+    if let Some(ck) = &spec.checkpoint {
+        cfg.checkpoint = ck.clone();
+    }
+    // Rewrite a grid-level checkpoint base to this trial's private
+    // subdirectory; a resumed grid short-circuits trials whose completed
+    // outcome record is already on disk.
+    let trial_ck_dir = cfg
+        .checkpoint
+        .dir
+        .as_ref()
+        .map(|base| std::path::Path::new(base).join(snapshot::sanitize_id(&spec.id)));
+    if let Some(tdir) = &trial_ck_dir {
+        cfg.checkpoint.dir = Some(tdir.to_string_lossy().into_owned());
+        if cfg.checkpoint.resume {
+            if let Some(rec) = snapshot::load_outcome(tdir) {
+                // Validate the record against the spec's configuration
+                // before reusing it — trial ids don't encode seed/budget/
+                // method, so a config edit between grid runs must re-run
+                // the trial, not silently serve stale numbers.  (The
+                // re-run then hits the same mismatch on any leftover
+                // snapshot via the trainer's fingerprint check, which
+                // errors loudly.)
+                let expected_label =
+                    format!("{}+{}", cfg.estimator.label(), cfg.optimizer);
+                if rec.outcome.label == expected_label
+                    && rec.seed == cfg.seed
+                    && rec.budget == cfg.budget
+                {
+                    return Ok(TrialResult {
+                        spec_id: spec.id.clone(),
+                        outcome: rec.outcome,
+                        probe_storage: storage_label_static(&rec.probe_storage),
+                        probe_peak_bytes: 0,
+                    });
+                }
+                eprintln!(
+                    "coordinator: completed record in {} is for {} (seed {}, \
+                     budget {}), run wants {expected_label} (seed {}, budget \
+                     {}) — re-running trial",
+                    tdir.display(),
+                    rec.outcome.label,
+                    rec.seed,
+                    rec.budget,
+                    cfg.seed,
+                    cfg.budget,
+                );
+            }
+        }
+    }
+    let oracle = PjrtOracle::new(rt, entry, spec.mode)?;
+    let evaluator = Evaluator::new(rt, entry, spec.mode)?;
+    let corpus = Corpus::new(corpus_spec)?;
     // per-trial probe-memory window: without this reset, every trial
     // after the first reported the run's cumulative high-water mark
     // instead of its own peak
     if measure {
         probe_tracker().reset();
     }
+    // (cfg moves into the trainer; keep the identity fields the completed
+    // record is stamped with)
+    let (cfg_seed, cfg_budget) = (cfg.seed, cfg.budget);
     let mut trainer = Trainer::with_exec(cfg, oracle, corpus, exec.clone())?;
     let probe_storage = trainer.estimator().probes().label();
     let outcome = trainer.run(Some(&evaluator))?;
     let probe_peak_bytes = if measure { probe_tracker().peak() } else { 0 };
+    if outcome.completed {
+        if let Some(tdir) = &trial_ck_dir {
+            // persist the finished trial so a resumed grid skips it
+            snapshot::write_outcome(tdir, &outcome, probe_storage, cfg_seed, cfg_budget)?;
+        }
+    }
     let _ = artifact_dir;
     Ok(TrialResult { spec_id: spec.id.clone(), outcome, probe_storage, probe_peak_bytes })
+}
+
+/// Map a stored probe-storage label back onto the static strings
+/// [`TrialResult::probe_storage`] carries.
+fn storage_label_static(label: &str) -> &'static str {
+    match label {
+        "streamed" => "streamed",
+        "auto" => "auto",
+        _ => "materialized",
+    }
 }
 
 /// Run a batch of trials on the shared execution context.  Trial-level
@@ -216,10 +297,42 @@ pub fn run_grid(
         .collect()
 }
 
+/// Accuracy aggregation across seed-replicated specs with an explicit
+/// sample count: an empty result slice yields `n = 0` and `None` stats
+/// instead of NaNs that would propagate into grid summaries (and turn
+/// into `null` in report JSON).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AccuracyAggregate {
+    /// Number of results aggregated.
+    pub n: usize,
+    /// Mean final accuracy (None when `n == 0`).
+    pub mean: Option<f64>,
+    /// Sample standard deviation (None when `n == 0`; 0 for `n == 1`).
+    pub std: Option<f64>,
+}
+
+impl AccuracyAggregate {
+    /// Render as `mean ± std (n)` or `n=0` for tables.
+    pub fn display(&self) -> String {
+        match (self.mean, self.std) {
+            (Some(m), Some(s)) => format!("{m:.4} ± {s:.4} (n={})", self.n),
+            _ => "n=0".to_string(),
+        }
+    }
+}
+
 /// Mean/std aggregation of final accuracy across seed-replicated specs.
-pub fn aggregate_accuracy(results: &[&TrialResult]) -> (f64, f64) {
+/// Empty input reports `n = 0` explicitly rather than NaN stats.
+pub fn aggregate_accuracy(results: &[&TrialResult]) -> AccuracyAggregate {
+    if results.is_empty() {
+        return AccuracyAggregate::default();
+    }
     let accs: Vec<f64> = results.iter().map(|r| r.outcome.final_accuracy).collect();
-    (crate::metrics::mean(&accs), crate::metrics::stddev(&accs))
+    AccuracyAggregate {
+        n: accs.len(),
+        mean: Some(crate::metrics::mean(&accs)),
+        std: Some(crate::metrics::stddev(&accs)),
+    }
 }
 
 #[cfg(test)]
@@ -236,8 +349,19 @@ mod tests {
         };
         let a = mk(0.8);
         let b = mk(0.9);
-        let (m, s) = aggregate_accuracy(&[&a, &b]);
-        assert!((m - 0.85).abs() < 1e-12);
-        assert!(s > 0.0);
+        let agg = aggregate_accuracy(&[&a, &b]);
+        assert_eq!(agg.n, 2);
+        assert!((agg.mean.unwrap() - 0.85).abs() < 1e-12);
+        assert!(agg.std.unwrap() > 0.0);
+        assert!(agg.display().contains("n=2"));
+    }
+
+    #[test]
+    fn aggregate_empty_reports_n_zero_not_nan() {
+        let agg = aggregate_accuracy(&[]);
+        assert_eq!(agg.n, 0);
+        assert_eq!(agg.mean, None);
+        assert_eq!(agg.std, None);
+        assert_eq!(agg.display(), "n=0");
     }
 }

@@ -5,6 +5,8 @@
 //! `artifacts/golden.json` carries python-generated batches that the
 //! integration tests compare against byte-for-byte.
 
+use anyhow::{bail, Result};
+
 use crate::rng::{SplitMix64, GOLDEN_GAMMA};
 
 use super::Batch;
@@ -84,11 +86,42 @@ pub struct Corpus {
 }
 
 impl Corpus {
-    /// Validate the spec and build the (stateless) corpus view.
-    pub fn new(spec: CorpusSpec) -> Self {
-        assert!(spec.n_neutral() > 0, "vocab too small for lexicon");
-        assert!(spec.min_len >= 2 && (spec.min_len as usize) < spec.seq);
-        Self { spec }
+    /// Validate the spec and build the (stateless) corpus view.  Invalid
+    /// specs (a bad CLI config, a hand-edited manifest) fail with a
+    /// contextual error instead of a panic.
+    pub fn new(spec: CorpusSpec) -> Result<Self> {
+        if spec.seq == 0 {
+            bail!("corpus spec: seq must be positive");
+        }
+        if spec.vocab <= 2 + 2 * spec.lexicon {
+            bail!(
+                "corpus spec: vocab {} too small for 2 lexicons of {} tokens \
+                 (+ PAD/CLS); need at least {}",
+                spec.vocab,
+                spec.lexicon,
+                2 + 2 * spec.lexicon + 1
+            );
+        }
+        if spec.min_len < 2 || spec.min_len as usize >= spec.seq {
+            bail!(
+                "corpus spec: min_len {} must be in [2, seq = {})",
+                spec.min_len,
+                spec.seq
+            );
+        }
+        if spec.signal_min > spec.signal_max {
+            bail!(
+                "corpus spec: signal_min {} > signal_max {}",
+                spec.signal_min,
+                spec.signal_max
+            );
+        }
+        for (name, p) in [("contra", spec.contra), ("noise", spec.noise)] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("corpus spec: {name} = {p} is not a probability");
+            }
+        }
+        Ok(Self { spec })
     }
 
     fn example_seed(&self, index: u64) -> u64 {
@@ -164,7 +197,28 @@ mod tests {
     use super::*;
 
     fn corpus() -> Corpus {
-        Corpus::new(CorpusSpec::default_mini())
+        Corpus::new(CorpusSpec::default_mini()).unwrap()
+    }
+
+    #[test]
+    fn invalid_specs_error_with_context_instead_of_panicking() {
+        let bad_vocab = CorpusSpec { vocab: 100, lexicon: 64, ..CorpusSpec::default_mini() };
+        let err = Corpus::new(bad_vocab).unwrap_err();
+        assert!(err.to_string().contains("vocab"), "{err}");
+
+        let bad_len = CorpusSpec { min_len: 40, ..CorpusSpec::default_mini() };
+        let err = Corpus::new(bad_len).unwrap_err();
+        assert!(err.to_string().contains("min_len"), "{err}");
+
+        let bad_signal =
+            CorpusSpec { signal_min: 7, signal_max: 2, ..CorpusSpec::default_mini() };
+        let err = Corpus::new(bad_signal).unwrap_err();
+        assert!(err.to_string().contains("signal"), "{err}");
+
+        let bad_noise = CorpusSpec { noise: 1.5, ..CorpusSpec::default_mini() };
+        assert!(Corpus::new(bad_noise).is_err());
+
+        assert!(Corpus::new(CorpusSpec::default_mini()).is_ok());
     }
 
     #[test]

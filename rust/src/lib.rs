@@ -37,6 +37,12 @@
 //! shards on demand from the samplers' RNG cells (MeZO-style seed
 //! replay), cutting probe state from O(K d) to O(K · shard_len) per
 //! worker with bitwise-identical trajectories (DESIGN.md §10).
+//!
+//! Runs are crash-safe and preemptible through the [`snapshot`]
+//! subsystem (`--checkpoint-dir` / `--checkpoint-every` / `--resume`):
+//! a snapshot is just params + optimizer moments + the LDSD policy mean
+//! + a few cursors, and a run interrupted at any step resumes
+//! bitwise-identically (DESIGN.md §11).
 //! See README.md for the module map and DESIGN.md for design rationale.
 
 #![warn(missing_docs)]
@@ -59,5 +65,6 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod sampler;
+pub mod snapshot;
 pub mod tensor;
 pub mod train;

@@ -33,6 +33,8 @@ commands:
         [--eval-every N] [--seed N] [--artifacts DIR]
         [--probe-dispatch batched|per-probe] [--threads N]
         [--probe-storage auto|materialized|streamed]
+        [--checkpoint-dir DIR] [--checkpoint-every N] [--resume]
+        [--max-run-steps N]
   toy   [--steps N] [--variant baseline|ldsd] [--seed N]
   landscape [--grid N] [--eps F]
   memory [--model M] [--artifacts DIR]
@@ -46,7 +48,10 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["info", "train", "toy", "landscape", "memory"])?;
+    let args = Args::from_env_with_flags(
+        &["info", "train", "toy", "landscape", "memory"],
+        &["resume"],
+    )?;
     match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("train") => cmd_train(&args),
@@ -102,6 +107,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("budget", "budget"), ("eval_every", "eval-every"), ("seed", "seed"),
         ("probe_dispatch", "probe-dispatch"), ("threads", "threads"),
         ("probe_storage", "probe-storage"),
+        ("checkpoint.dir", "checkpoint-dir"),
+        ("checkpoint.every", "checkpoint-every"),
+        ("checkpoint.max_run_steps", "max-run-steps"),
     ] {
         if let Some(v) = args.get(cli) {
             kv.set(key, v);
@@ -129,6 +137,27 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     cfg.eval_every = eval_every;
     cfg.seed = seed;
+    // Crash-safe checkpoint/resume (DESIGN.md §11): snapshots land under
+    // <checkpoint-dir>/<sanitized trial id>/; --resume picks up the newest
+    // valid one and continues bitwise-identically.  --max-run-steps is the
+    // cooperative-preemption point for elastic workers.
+    cfg.checkpoint = zo_ldsd::train::CheckpointConfig {
+        dir: kv.get("checkpoint.dir").map(String::from),
+        every: kv.get_u64_or("checkpoint.every", 0)?,
+        resume: args.flag("resume") || kv.get_bool_or("checkpoint.resume", false)?,
+        max_run_steps: kv.get_u64_or("checkpoint.max_run_steps", 0)?,
+    };
+    if cfg.checkpoint.every > 0 && cfg.checkpoint.dir.is_none() {
+        bail!("--checkpoint-every needs --checkpoint-dir");
+    }
+    if cfg.checkpoint.resume && cfg.checkpoint.dir.is_none() {
+        bail!("--resume needs --checkpoint-dir");
+    }
+    if cfg.checkpoint.max_run_steps > 0 && cfg.checkpoint.dir.is_none() {
+        // without a directory the halt snapshot has nowhere to go and the
+        // preempted progress would be unrecoverable
+        bail!("--max-run-steps needs --checkpoint-dir (the halt snapshot must land somewhere)");
+    }
     let dispatch =
         zo_ldsd::train::ProbeDispatch::parse(kv.get_or("probe_dispatch", "batched"))?;
     // materialized K x d matrix, streamed seed replay, or auto-selection
@@ -155,6 +184,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_batches: args.get_usize("eval-batches", 8)?,
         probe_dispatch: Some(dispatch),
         probe_storage: Some(storage),
+        checkpoint: None, // the config's policy applies
     };
     println!(
         "running {} (budget {budget} forwards, {} threads, {} probes requested)",
@@ -179,6 +209,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.probe_storage,
         result.probe_peak_bytes as f64 / (1 << 20) as f64,
     );
+    if !o.completed {
+        // cmd_train rejects --max-run-steps without --checkpoint-dir, so a
+        // halted session always has a snapshot on disk to resume from
+        println!(
+            "session halted at --max-run-steps; rerun with --resume to continue \
+             (bitwise-identical to an uninterrupted run)"
+        );
+    }
     Ok(())
 }
 

@@ -4,4 +4,4 @@ mod memory;
 mod stats;
 
 pub use memory::{probe_tracker, MemoryReport, MethodMemory, PeakTracker, TrackedBuf};
-pub use stats::{mean, percentile, stddev, Summary};
+pub use stats::{mean, percentile, percentile_sorted, stddev, Summary};

@@ -18,21 +18,36 @@ pub fn stddev(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// Linear-interpolated percentile, p in [0, 100].
+/// Linear-interpolated percentile, p in [0, 100].  Clones and sorts the
+/// sample set; callers taking several percentiles of one set should sort
+/// once and use [`percentile_sorted`] (as [`Summary::of`] does).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    sort_samples(&mut s);
+    percentile_sorted(&s, p)
+}
+
+/// Linear-interpolated percentile over an already ascending-sorted slice
+/// — no clone, no re-sort.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        s[lo]
+        sorted[lo]
     } else {
-        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
     }
+}
+
+fn sort_samples(s: &mut [f64]) {
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
 }
 
 /// Five-number-ish summary used by the bench harness tables.
@@ -55,17 +70,63 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Summarize a sample set.
+    /// Summarize a sample set (one sort, shared by both percentiles).
+    ///
+    /// An empty set yields an *explicit* empty summary: `n = 0` with every
+    /// statistic NaN — never the `min = +inf` / `max = -inf` fold
+    /// identities, which `jsonio` would silently render as `null` in
+    /// bench/report JSON.  Serialize through [`Summary::to_json`], which
+    /// keeps `n` and omits non-finite fields.
     pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self {
+                n: 0,
+                mean: f64::NAN,
+                std: f64::NAN,
+                p50: f64::NAN,
+                p95: f64::NAN,
+                min: f64::NAN,
+                max: f64::NAN,
+            };
+        }
+        let mut sorted = xs.to_vec();
+        sort_samples(&mut sorted);
         Self {
             n: xs.len(),
             mean: mean(xs),
             std: stddev(xs),
-            p50: percentile(xs, 50.0),
-            p95: percentile(xs, 95.0),
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
             min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
             max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
         }
+    }
+
+    /// True when this summarizes zero samples.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// JSON object with `n` always present and non-finite statistics
+    /// *omitted* — an empty summary serializes as `{"n": 0}` rather than
+    /// a row of `null` stand-ins.
+    pub fn to_json(&self) -> crate::jsonio::Json {
+        use crate::jsonio::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("n".to_string(), Json::Num(self.n as f64));
+        for (key, val) in [
+            ("mean", self.mean),
+            ("std", self.std),
+            ("p50", self.p50),
+            ("p95", self.p95),
+            ("min", self.min),
+            ("max", self.max),
+        ] {
+            if val.is_finite() {
+                m.insert(key.to_string(), Json::Num(val));
+            }
+        }
+        Json::Obj(m)
     }
 }
 
@@ -103,5 +164,42 @@ mod tests {
         assert!(mean(&[]).is_nan());
         assert_eq!(stddev(&[]), 0.0);
         assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile_sorted(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile() {
+        let xs = [4.0, 1.0, 3.0, 2.0, 9.5];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 12.5, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile(&xs, p).to_bits(), percentile_sorted(&sorted, p).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_summary_is_explicit_never_infinite() {
+        // regression: Summary::of(&[]) used to emit min = +inf / max =
+        // -inf, which jsonio turns into `null` in bench/report JSON
+        let s = Summary::of(&[]);
+        assert!(s.is_empty());
+        assert_eq!(s.n, 0);
+        for v in [s.mean, s.std, s.p50, s.p95, s.min, s.max] {
+            assert!(v.is_nan(), "empty-summary field must be NaN, got {v}");
+        }
+        let text = crate::jsonio::to_string_pretty(&s.to_json());
+        assert!(!text.contains("null"), "empty summary leaked null: {text}");
+        assert!(text.contains("\"n\": 0"), "{text}");
+    }
+
+    #[test]
+    fn summary_json_roundtrips_nonempty() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        let text = crate::jsonio::to_string_pretty(&s.to_json());
+        assert!(!text.contains("null"), "{text}");
+        let back = crate::jsonio::parse(&text).unwrap();
+        assert_eq!(back.get("n").unwrap().as_usize(), Some(3));
+        assert_eq!(back.get("min").unwrap().as_f64(), Some(1.0));
+        assert_eq!(back.get("max").unwrap().as_f64(), Some(3.0));
     }
 }

@@ -89,6 +89,11 @@ pub trait GradEstimator {
     /// the handle [`Oracle::loss_probes`] evaluates against.
     fn probes(&self) -> &dyn ProbeSource;
 
+    /// Mutable access to the probe source (snapshot restore: the trainer
+    /// reinstates the sampler's RNG step label and policy mean through
+    /// it).
+    fn probes_mut(&mut self) -> &mut dyn ProbeSource;
+
     /// Phase 2: combine the `losses` of the last proposed batch (in row
     /// order) into `g` (len d).  May spend extra oracle calls for point
     /// evaluations that cannot be batched (see the module docs); the
@@ -197,6 +202,10 @@ impl GradEstimator for CentralK1Estimator {
         &*self.probes
     }
 
+    fn probes_mut(&mut self) -> &mut dyn ProbeSource {
+        &mut *self.probes
+    }
+
     fn consume(
         &mut self,
         _oracle: &mut dyn Oracle,
@@ -297,6 +306,10 @@ impl GradEstimator for ForwardAvgEstimator {
 
     fn probes(&self) -> &dyn ProbeSource {
         &*self.probes
+    }
+
+    fn probes_mut(&mut self) -> &mut dyn ProbeSource {
+        &mut *self.probes
     }
 
     fn consume(
@@ -425,6 +438,10 @@ impl GradEstimator for LdsdEstimator {
 
     fn probes(&self) -> &dyn ProbeSource {
         &*self.probes
+    }
+
+    fn probes_mut(&mut self) -> &mut dyn ProbeSource {
+        &mut *self.probes
     }
 
     fn consume(

@@ -3,7 +3,7 @@
 //! the memory_table bench can report optimizer-state footprints of the
 //! backprop pipeline the paper compares against (§1).
 
-use super::optimizers::BaseOptimizer;
+use super::optimizers::{BaseOptimizer, OptimizerState};
 
 /// Plain first-order SGD (momentum optional) — identical math to ZoSgd but
 /// kept as a distinct type so the memory table can label FO vs ZO rows.
@@ -26,6 +26,14 @@ impl BaseOptimizer for FoSgd {
 
     fn state_bytes(&self) -> usize {
         self.0.state_bytes()
+    }
+
+    fn state(&self) -> OptimizerState {
+        self.0.state()
+    }
+
+    fn load_state(&mut self, state: &OptimizerState) -> anyhow::Result<()> {
+        self.0.load_state(state)
     }
 
     fn name(&self) -> &str {
@@ -53,6 +61,14 @@ impl BaseOptimizer for FoAdam {
 
     fn state_bytes(&self) -> usize {
         self.0.state_bytes()
+    }
+
+    fn state(&self) -> OptimizerState {
+        self.0.state()
+    }
+
+    fn load_state(&mut self, state: &OptimizerState) -> anyhow::Result<()> {
+        self.0.load_state(state)
     }
 
     fn name(&self) -> &str {

@@ -26,4 +26,7 @@ pub use estimator::{
 };
 pub use first_order::{FoAdam, FoSgd};
 pub use mezo::{MezoSgd, MezoStepInfo};
-pub use optimizers::{by_name as optimizers_by_name, BaseOptimizer, JaguarSignSgd, ZoAdaMM, ZoSgd};
+pub use optimizers::{
+    by_name as optimizers_by_name, BaseOptimizer, JaguarSignSgd, OptimizerState,
+    ZoAdaMM, ZoSgd,
+};

@@ -174,6 +174,10 @@ pub trait ProbeSource: Send + Sync {
     /// The underlying direction sampler (diagnostics).
     fn sampler(&self) -> &dyn DirectionSampler;
 
+    /// Mutable access to the underlying sampler (snapshot restore: the
+    /// trainer reinstates the RNG step label and policy mean through it).
+    fn sampler_mut(&mut self) -> &mut dyn DirectionSampler;
+
     /// Install the execution context (cascades to the sampler).
     fn set_exec(&mut self, ctx: ExecContext);
 
@@ -330,6 +334,10 @@ impl ProbeSource for MaterializedProbes {
         &*self.sampler
     }
 
+    fn sampler_mut(&mut self) -> &mut dyn DirectionSampler {
+        &mut *self.sampler
+    }
+
     fn set_exec(&mut self, ctx: ExecContext) {
         self.sampler.set_exec(ctx.clone());
         self.exec = ctx;
@@ -481,6 +489,10 @@ impl ProbeSource for StreamedProbes {
 
     fn sampler(&self) -> &dyn DirectionSampler {
         &*self.sampler
+    }
+
+    fn sampler_mut(&mut self) -> &mut dyn DirectionSampler {
+        &mut *self.sampler
     }
 
     fn set_exec(&mut self, ctx: ExecContext) {

@@ -125,6 +125,19 @@ impl DirectionSampler for GaussianSampler {
         );
     }
 
+    fn step_label(&self) -> u64 {
+        self.step
+    }
+
+    fn restore_state(
+        &mut self,
+        step: u64,
+        _policy_mean: Option<&[f32]>,
+    ) -> anyhow::Result<()> {
+        self.step = step;
+        Ok(())
+    }
+
     fn dim(&self) -> usize {
         self.d
     }
@@ -177,6 +190,21 @@ impl DirectionSampler for SphereSampler {
     }
 
     fn observe(&mut self, _dirs: &[f32], _losses: &[f64], _k: usize) {}
+
+    fn step_label(&self) -> u64 {
+        self.step
+    }
+
+    fn restore_state(
+        &mut self,
+        step: u64,
+        _policy_mean: Option<&[f32]>,
+    ) -> anyhow::Result<()> {
+        // no seed *replay* (rows normalize whole-row), but the per-step
+        // substream label still fully determines future draws
+        self.step = step;
+        Ok(())
+    }
 
     fn dim(&self) -> usize {
         self.d
@@ -257,6 +285,19 @@ impl DirectionSampler for CoordinateSampler {
         if j >= col0 && j < col0 + out.len() {
             out[j - col0] = self.scale;
         }
+    }
+
+    fn step_label(&self) -> u64 {
+        self.step
+    }
+
+    fn restore_state(
+        &mut self,
+        step: u64,
+        _policy_mean: Option<&[f32]>,
+    ) -> anyhow::Result<()> {
+        self.step = step;
+        Ok(())
     }
 
     fn dim(&self) -> usize {

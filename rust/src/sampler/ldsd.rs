@@ -287,6 +287,30 @@ impl DirectionSampler for LdsdSampler {
         self.maybe_renormalize();
     }
 
+    fn step_label(&self) -> u64 {
+        self.step
+    }
+
+    fn restore_state(
+        &mut self,
+        step: u64,
+        policy_mean: Option<&[f32]>,
+    ) -> anyhow::Result<()> {
+        let mean = policy_mean.ok_or_else(|| {
+            anyhow::anyhow!("ldsd: snapshot restore needs the policy mean")
+        })?;
+        if mean.len() != self.mu.len() {
+            anyhow::bail!(
+                "ldsd: snapshot policy mean holds {} f32, expected {}",
+                mean.len(),
+                self.mu.len()
+            );
+        }
+        self.mu.copy_from_slice(mean);
+        self.step = step;
+        Ok(())
+    }
+
     fn dim(&self) -> usize {
         self.mu.len()
     }
@@ -479,6 +503,43 @@ mod tests {
         s.sample(&mut dirs, 1);
         s.observe(&dirs, &[1.0], 1);
         assert_eq!(s.policy_mean().unwrap(), &mu0[..]);
+    }
+
+    #[test]
+    fn restore_state_continues_identically() {
+        // snapshot (step label + mu) after a few learning steps; a twin
+        // restored from it must sample the same directions and walk the
+        // same mu trajectory bit for bit
+        let d = 64;
+        let k = 4;
+        let mut a = LdsdSampler::new(d, 31, LdsdConfig::default());
+        let mut dirs = vec![0.0f32; k * d];
+        for step in 0..5 {
+            a.sample(&mut dirs, k);
+            let losses: Vec<f64> = (0..k).map(|i| ((i + step) % 3) as f64).collect();
+            a.observe(&dirs, &losses, k);
+        }
+        let (step_label, mu) = (a.step_label(), a.policy_mean().unwrap().to_vec());
+        assert_eq!(step_label, 5);
+        let mut b = LdsdSampler::new(d, 31, LdsdConfig::default());
+        b.restore_state(step_label, Some(&mu)).unwrap();
+        let mut da = vec![0.0f32; k * d];
+        let mut db = vec![0.0f32; k * d];
+        for step in 0..3 {
+            a.sample(&mut da, k);
+            b.sample(&mut db, k);
+            for (x, y) in da.iter().zip(db.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "directions diverged");
+            }
+            let losses: Vec<f64> = (0..k).map(|i| (i * step) as f64 * 0.1).collect();
+            a.observe(&da, &losses, k);
+            b.observe(&db, &losses, k);
+            for (x, y) in a.policy_mean().unwrap().iter().zip(b.policy_mean().unwrap()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "mu diverged");
+            }
+        }
+        // restoring without a mean is an error for a learnable policy
+        assert!(b.restore_state(1, None).is_err());
     }
 
     #[test]

@@ -94,6 +94,29 @@ pub trait DirectionSampler {
         let _ = (losses, k);
     }
 
+    /// The per-step RNG label: how many steps this sampler has drawn
+    /// (each `sample`/`advance_step` advances it by one).  Probe fills are
+    /// pure functions of (seed, step label, shard geometry), so together
+    /// with [`DirectionSampler::policy_mean`] this is the sampler's entire
+    /// snapshot state (crash-safe checkpointing, DESIGN.md §11).
+    fn step_label(&self) -> u64 {
+        0
+    }
+
+    /// Restore the per-step RNG label (and the learned policy state, for
+    /// samplers that have one) captured by a snapshot.  The restored
+    /// sampler draws the exact directions the snapshotted one would have
+    /// drawn next.  Samplers without replayable per-step state reject the
+    /// call.
+    fn restore_state(
+        &mut self,
+        step: u64,
+        policy_mean: Option<&[f32]>,
+    ) -> anyhow::Result<()> {
+        let _ = (step, policy_mean);
+        anyhow::bail!("{}: snapshot restore not supported", self.name())
+    }
+
     /// Trainable dimensionality this sampler emits.
     fn dim(&self) -> usize;
 

@@ -1,0 +1,798 @@
+//! Crash-safe training snapshots (DESIGN.md §11).
+//!
+//! A full training snapshot of a ZO run is tiny — that is the paper's own
+//! memory argument turned into an elasticity feature.  Because probe
+//! directions are pure functions of their per-(seed, step, shard) RNG
+//! cells (DESIGN.md §9/§10), nothing about the probe stream needs saving:
+//! a snapshot is just the iterate, the O(d) optimizer moments, the LDSD
+//! policy mean, and a handful of cursors (step, oracle calls, eval
+//! threshold, sampler step label).  Restoring one and continuing produces
+//! a **bitwise-identical** trajectory to the uninterrupted run, at any
+//! thread count and under both probe-storage modes — the property
+//! `tests/checkpoint_resume.rs` pins.
+//!
+//! # On-disk format (versioned)
+//!
+//! One snapshot is a directory `step-<NNNNNNNNNN>/` containing
+//! `manifest.json` (written last — a crash mid-write leaves no manifest,
+//! so the directory is simply invalid) plus raw little-endian blobs:
+//!
+//! * `params.bin` — the trainable vector (f32 LE);
+//! * `opt-<i>.bin` — the optimizer's persistent moment buffers (f32 LE);
+//! * `policy_mean.bin` — the LDSD policy mean, when the sampler has one;
+//! * `loss_curve.bin` / `acc_curve.bin` — (u64 calls, f64 loss-bits)
+//!   pairs, 16 bytes per entry.
+//!
+//! All floating-point state lives in blobs, never in JSON — JSON numbers
+//! round-trip through decimal and cannot carry NaN/Inf, and bit-exactness
+//! is the whole point.  The manifest stores u64 fields as fixed-width hex
+//! strings (seeds use the full 64-bit range, above JSON's 2^53 integer
+//! ceiling) and an FNV-1a checksum per blob, so corruption is detected at
+//! load and [`load_latest`] falls back to the previous snapshot.
+//!
+//! Writes are atomic: blobs + manifest land in a `.tmp-*` sibling that is
+//! `rename`d into place, and [`write_snapshot`] prunes all but the newest
+//! two snapshots (the fallback depth).
+//!
+//! Completed trials additionally persist their final [`TrainOutcome`] as a
+//! `completed/` record in the same container format, which lets
+//! [`crate::coordinator::run_grid`] skip finished trials on a resumed grid
+//! without re-running them.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonio::{parse, to_string_pretty, Json};
+use crate::optim::OptimizerState;
+use crate::train::TrainOutcome;
+
+/// Current snapshot container version.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+const SNAPSHOT_MAGIC: &str = "zosnap1";
+const OUTCOME_MAGIC: &str = "zodone1";
+
+/// Crash-safe checkpoint/resume policy for one training run.
+///
+/// Rides in [`crate::train::TrainConfig`] and threads from the CLI
+/// (`--checkpoint-dir`, `--checkpoint-every`, `--resume`,
+/// `--max-run-steps`) through `TrialSpec` to the trainer.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CheckpointConfig {
+    /// Snapshot directory for this run (None disables checkpointing).
+    /// The coordinator rewrites a grid-level base directory to a per-trial
+    /// subdirectory (`<base>/<sanitized trial id>`) before training.
+    pub dir: Option<String>,
+    /// Optimizer steps between snapshots (0 with a directory set: only
+    /// the halt-time snapshot is written).
+    pub every: u64,
+    /// Resume from the newest valid snapshot in `dir` before training
+    /// (no-op when none exists).
+    pub resume: bool,
+    /// Stop the session after this many optimizer steps (0 = run to
+    /// budget).  Cooperative preemption for elastic workers and crash
+    /// injection for the resume tests; a halted session writes a final
+    /// snapshot so no step is lost.
+    pub max_run_steps: u64,
+}
+
+/// Run-configuration identity a snapshot is only valid for.  Restoring
+/// under a different estimator/optimizer/seed/budget would silently walk a
+/// different trajectory, so mismatches are hard errors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnapshotFingerprint {
+    /// Method label (`estimator.label() + "+" + optimizer`).
+    pub label: String,
+    /// Sampler/estimator seed.
+    pub seed: u64,
+    /// Total oracle budget of the run.
+    pub budget: u64,
+    /// Trainable dimensionality.
+    pub dim: usize,
+}
+
+/// Everything needed to continue a training run bit-exactly: parameters,
+/// optimizer moments, the sampler's RNG step label + learned policy mean,
+/// and the run cursors (see the module docs for what deliberately does
+/// *not* need saving).
+#[derive(Clone, Debug)]
+pub struct TrainerSnapshot {
+    /// Container version ([`SNAPSHOT_VERSION`]).
+    pub version: u64,
+    /// The run configuration this snapshot belongs to.
+    pub fingerprint: SnapshotFingerprint,
+    /// Optimizer steps taken when the snapshot was captured.
+    pub step: u64,
+    /// Oracle calls consumed when the snapshot was captured.
+    pub oracle_calls_used: u64,
+    /// Next evaluation threshold (in oracle calls).
+    pub next_eval: u64,
+    /// The sampler's per-step RNG label (steps sampled so far).
+    pub sampler_step: u64,
+    /// Best test accuracy seen at any eval point so far.
+    pub best_accuracy: f64,
+    /// The trainable vector.
+    pub params: Vec<f32>,
+    /// The base optimizer's persistent state.
+    pub optimizer: OptimizerState,
+    /// The LDSD policy mean, when the sampler learns one.
+    pub policy_mean: Option<Vec<f32>>,
+    /// (oracle calls, training-loss proxy) per step so far.
+    pub loss_curve: Vec<(u64, f64)>,
+    /// (oracle calls, test accuracy) per eval point so far.
+    pub acc_curve: Vec<(u64, f64)>,
+}
+
+// --- low-level encoding helpers -------------------------------------------
+
+/// FNV-1a over a byte slice — the per-blob corruption check.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn hex64(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+fn parse_hex64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 '{s}'"))
+}
+
+fn jhex(x: u64) -> Json {
+    Json::Str(hex64(x))
+}
+
+fn get_hex(manifest: &Json, key: &str) -> Result<u64> {
+    let s = manifest
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest: missing hex field '{key}'"))?;
+    parse_hex64(s)
+}
+
+fn get_str<'a>(manifest: &'a Json, key: &str) -> Result<&'a str> {
+    manifest
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest: missing string field '{key}'"))
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("f32 blob length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn curve_to_bytes(curve: &[(u64, f64)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(curve.len() * 16);
+    for (calls, loss) in curve {
+        out.extend_from_slice(&calls.to_le_bytes());
+        out.extend_from_slice(&loss.to_bits().to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_curve(bytes: &[u8]) -> Result<Vec<(u64, f64)>> {
+    if bytes.len() % 16 != 0 {
+        bail!("curve blob length {} not a multiple of 16", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(16)
+        .map(|c| {
+            let mut a = [0u8; 8];
+            let mut b = [0u8; 8];
+            a.copy_from_slice(&c[..8]);
+            b.copy_from_slice(&c[8..]);
+            (u64::from_le_bytes(a), f64::from_bits(u64::from_le_bytes(b)))
+        })
+        .collect())
+}
+
+// --- blob container -------------------------------------------------------
+
+fn write_blob(
+    dir: &Path,
+    name: &str,
+    bytes: &[u8],
+    inventory: &mut BTreeMap<String, Json>,
+) -> Result<()> {
+    std::fs::write(dir.join(name), bytes)
+        .with_context(|| format!("writing blob {}", dir.join(name).display()))?;
+    let mut entry = BTreeMap::new();
+    entry.insert("bytes".to_string(), Json::Num(bytes.len() as f64));
+    entry.insert("fnv".to_string(), jhex(fnv64(bytes)));
+    inventory.insert(name.to_string(), Json::Obj(entry));
+    Ok(())
+}
+
+fn read_blob(dir: &Path, name: &str, inventory: &Json) -> Result<Vec<u8>> {
+    let entry = inventory
+        .get(name)
+        .ok_or_else(|| anyhow!("manifest: blob '{name}' not in inventory"))?;
+    let want_len = entry
+        .get("bytes")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest: blob '{name}' has no byte count"))?;
+    let want_fnv = parse_hex64(
+        entry
+            .get("fnv")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest: blob '{name}' has no checksum"))?,
+    )?;
+    let path = dir.join(name);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading blob {}", path.display()))?;
+    if bytes.len() != want_len {
+        bail!("blob {}: {} bytes, manifest says {want_len}", path.display(), bytes.len());
+    }
+    let got = fnv64(&bytes);
+    if got != want_fnv {
+        bail!(
+            "blob {}: checksum {} != manifest {} (corrupt snapshot)",
+            path.display(),
+            hex64(got),
+            hex64(want_fnv)
+        );
+    }
+    Ok(bytes)
+}
+
+fn read_manifest(dir: &Path, magic: &str) -> Result<Json> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let manifest = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    if manifest.get("magic").and_then(Json::as_str) != Some(magic) {
+        bail!("{}: bad magic (want {magic})", path.display());
+    }
+    Ok(manifest)
+}
+
+/// Write `manifest` + pre-staged blob dir atomically into `dir/name`:
+/// everything is staged under a `.tmp-*` sibling by the caller, the
+/// manifest goes in last, and the staged directory is renamed over the
+/// target (removing a stale same-name directory first).
+fn commit_dir(tmp: &Path, final_dir: &Path, manifest: Json) -> Result<()> {
+    std::fs::write(tmp.join("manifest.json"), to_string_pretty(&manifest))
+        .with_context(|| format!("writing {}", tmp.join("manifest.json").display()))?;
+    if final_dir.exists() {
+        std::fs::remove_dir_all(final_dir)
+            .with_context(|| format!("replacing {}", final_dir.display()))?;
+    }
+    std::fs::rename(tmp, final_dir).with_context(|| {
+        format!("renaming {} -> {}", tmp.display(), final_dir.display())
+    })?;
+    Ok(())
+}
+
+fn stage_dir(base: &Path, name: &str) -> Result<PathBuf> {
+    let tmp = base.join(format!(".tmp-{name}-{}", std::process::id()));
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+    std::fs::create_dir_all(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    Ok(tmp)
+}
+
+// --- snapshot write / load ------------------------------------------------
+
+/// Snapshots retained per run directory (the corrupt-snapshot fallback
+/// depth: the newest plus one predecessor).
+pub const SNAPSHOTS_KEPT: usize = 2;
+
+fn step_dir_name(step: u64) -> String {
+    format!("step-{step:010}")
+}
+
+/// Atomically write one snapshot under `dir` (created if missing) and
+/// prune all but the newest [`SNAPSHOTS_KEPT`].  Returns the committed
+/// snapshot directory.
+pub fn write_snapshot(dir: &Path, snap: &TrainerSnapshot) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let name = step_dir_name(snap.step);
+    let tmp = stage_dir(dir, &name)?;
+
+    let mut blobs = BTreeMap::new();
+    write_blob(&tmp, "params.bin", &f32s_to_bytes(&snap.params), &mut blobs)?;
+    for (i, buf) in snap.optimizer.buffers.iter().enumerate() {
+        write_blob(&tmp, &format!("opt-{i}.bin"), &f32s_to_bytes(buf), &mut blobs)?;
+    }
+    if let Some(mu) = &snap.policy_mean {
+        write_blob(&tmp, "policy_mean.bin", &f32s_to_bytes(mu), &mut blobs)?;
+    }
+    write_blob(&tmp, "loss_curve.bin", &curve_to_bytes(&snap.loss_curve), &mut blobs)?;
+    write_blob(&tmp, "acc_curve.bin", &curve_to_bytes(&snap.acc_curve), &mut blobs)?;
+
+    let mut m = BTreeMap::new();
+    m.insert("magic".to_string(), Json::Str(SNAPSHOT_MAGIC.into()));
+    m.insert("version".to_string(), jhex(snap.version));
+    m.insert("label".to_string(), Json::Str(snap.fingerprint.label.clone()));
+    m.insert("seed".to_string(), jhex(snap.fingerprint.seed));
+    m.insert("budget".to_string(), jhex(snap.fingerprint.budget));
+    m.insert("dim".to_string(), jhex(snap.fingerprint.dim as u64));
+    m.insert("step".to_string(), jhex(snap.step));
+    m.insert("oracle_calls_used".to_string(), jhex(snap.oracle_calls_used));
+    m.insert("next_eval".to_string(), jhex(snap.next_eval));
+    m.insert("sampler_step".to_string(), jhex(snap.sampler_step));
+    m.insert(
+        "best_accuracy_bits".to_string(),
+        jhex(snap.best_accuracy.to_bits()),
+    );
+    m.insert(
+        "opt_scalars".to_string(),
+        Json::Arr(snap.optimizer.scalars.iter().map(|s| jhex(*s)).collect()),
+    );
+    m.insert(
+        "opt_buffers".to_string(),
+        Json::Num(snap.optimizer.buffers.len() as f64),
+    );
+    m.insert(
+        "has_policy_mean".to_string(),
+        Json::Bool(snap.policy_mean.is_some()),
+    );
+    m.insert("blobs".to_string(), Json::Obj(blobs));
+
+    let final_dir = dir.join(&name);
+    commit_dir(&tmp, &final_dir, Json::Obj(m))?;
+    prune(dir, SNAPSHOTS_KEPT);
+    sweep_stale_staging(dir);
+    Ok(final_dir)
+}
+
+/// Load and fully validate the snapshot stored in `snap_dir` (manifest
+/// magic/version, blob lengths, checksums).
+pub fn load_snapshot(snap_dir: &Path) -> Result<TrainerSnapshot> {
+    let m = read_manifest(snap_dir, SNAPSHOT_MAGIC)?;
+    let version = get_hex(&m, "version")?;
+    if version != SNAPSHOT_VERSION {
+        bail!("snapshot version {version} (this build reads {SNAPSHOT_VERSION})");
+    }
+    let blobs = m
+        .get("blobs")
+        .ok_or_else(|| anyhow!("manifest: missing blob inventory"))?
+        .clone();
+    let dim = get_hex(&m, "dim")? as usize;
+    let params = bytes_to_f32s(&read_blob(snap_dir, "params.bin", &blobs)?)?;
+    if params.len() != dim {
+        bail!("params.bin holds {} f32, manifest says {dim}", params.len());
+    }
+    let n_buffers = m
+        .get("opt_buffers")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest: missing opt_buffers"))?;
+    let mut buffers = Vec::with_capacity(n_buffers);
+    for i in 0..n_buffers {
+        buffers.push(bytes_to_f32s(&read_blob(
+            snap_dir,
+            &format!("opt-{i}.bin"),
+            &blobs,
+        )?)?);
+    }
+    let scalars = m
+        .get("opt_scalars")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest: missing opt_scalars"))?
+        .iter()
+        .map(|s| {
+            s.as_str()
+                .ok_or_else(|| anyhow!("opt_scalars: non-string entry"))
+                .and_then(parse_hex64)
+        })
+        .collect::<Result<Vec<u64>>>()?;
+    let policy_mean = if m.get("has_policy_mean").and_then(Json::as_bool) == Some(true) {
+        Some(bytes_to_f32s(&read_blob(snap_dir, "policy_mean.bin", &blobs)?)?)
+    } else {
+        None
+    };
+    Ok(TrainerSnapshot {
+        version,
+        fingerprint: SnapshotFingerprint {
+            label: get_str(&m, "label")?.to_string(),
+            seed: get_hex(&m, "seed")?,
+            budget: get_hex(&m, "budget")?,
+            dim,
+        },
+        step: get_hex(&m, "step")?,
+        oracle_calls_used: get_hex(&m, "oracle_calls_used")?,
+        next_eval: get_hex(&m, "next_eval")?,
+        sampler_step: get_hex(&m, "sampler_step")?,
+        best_accuracy: f64::from_bits(get_hex(&m, "best_accuracy_bits")?),
+        params,
+        optimizer: OptimizerState { scalars, buffers },
+        policy_mean,
+        loss_curve: bytes_to_curve(&read_blob(snap_dir, "loss_curve.bin", &blobs)?)?,
+        acc_curve: bytes_to_curve(&read_blob(snap_dir, "acc_curve.bin", &blobs)?)?,
+    })
+}
+
+/// The `(step, path)` of every snapshot directory under `dir`, ascending
+/// by step.  Unreadable directories and staging leftovers are ignored.
+pub fn list_snapshots(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let mut out = Vec::new();
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(_) => return out,
+    };
+    for entry in rd.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(num) = name.strip_prefix("step-") {
+            if let Ok(step) = num.parse::<u64>() {
+                out.push((step, entry.path()));
+            }
+        }
+    }
+    out.sort_by_key(|(step, _)| *step);
+    out
+}
+
+/// Load the newest *valid* snapshot under `dir`: corrupt or half-written
+/// snapshots are skipped (with a note on stderr) and the previous one is
+/// tried — the crash-safety contract with [`write_snapshot`]'s atomic
+/// rename and retention of [`SNAPSHOTS_KEPT`] generations.
+pub fn load_latest(dir: &Path) -> Option<TrainerSnapshot> {
+    for (_, path) in list_snapshots(dir).iter().rev() {
+        match load_snapshot(path) {
+            Ok(snap) => return Some(snap),
+            Err(e) => {
+                eprintln!("snapshot: skipping {} ({e:#})", path.display());
+            }
+        }
+    }
+    None
+}
+
+fn prune(dir: &Path, keep: usize) {
+    let snaps = list_snapshots(dir);
+    if snaps.len() > keep {
+        for (_, path) in &snaps[..snaps.len() - keep] {
+            std::fs::remove_dir_all(path).ok();
+        }
+    }
+}
+
+/// Remove `.tmp-*` staging leftovers under `dir` — the garbage a process
+/// killed mid-write leaves behind (invalid by construction: their
+/// manifest, written last, never landed).  Called after every successful
+/// commit so preempt/resume cycles cannot accumulate checkpoint-sized
+/// debris.
+fn sweep_stale_staging(dir: &Path) {
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            if entry.file_name().to_string_lossy().starts_with(".tmp-") {
+                std::fs::remove_dir_all(entry.path()).ok();
+            }
+        }
+    }
+}
+
+// --- completed-trial outcome records --------------------------------------
+
+/// A completed trial's persisted [`TrainOutcome`] plus the identity it
+/// was produced under — enough for a resumed grid to refuse a record
+/// whose configuration no longer matches (seed/budget edits between grid
+/// runs must re-run the trial, not silently reuse stale numbers).
+#[derive(Clone, Debug)]
+pub struct OutcomeRecord {
+    /// The finished trial's outcome (always `completed`).
+    pub outcome: TrainOutcome,
+    /// The probe storage the run resolved to ("materialized"|"streamed").
+    pub probe_storage: String,
+    /// The run's sampler/estimator seed.
+    pub seed: u64,
+    /// The run's total oracle budget.
+    pub budget: u64,
+}
+
+/// Atomically persist a finished trial's [`TrainOutcome`] (plus the probe
+/// storage it resolved to and the run's seed/budget identity) as
+/// `dir/completed/`, in the same blob container format as snapshots.  A
+/// resumed grid returns this record instead of re-running the trial.
+pub fn write_outcome(
+    dir: &Path,
+    outcome: &TrainOutcome,
+    probe_storage: &str,
+    seed: u64,
+    budget: u64,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let tmp = stage_dir(dir, "completed")?;
+    let mut blobs = BTreeMap::new();
+    write_blob(&tmp, "loss_curve.bin", &curve_to_bytes(&outcome.loss_curve), &mut blobs)?;
+    write_blob(&tmp, "acc_curve.bin", &curve_to_bytes(&outcome.acc_curve), &mut blobs)?;
+    let mut m = BTreeMap::new();
+    m.insert("magic".to_string(), Json::Str(OUTCOME_MAGIC.into()));
+    m.insert("version".to_string(), jhex(SNAPSHOT_VERSION));
+    m.insert("label".to_string(), Json::Str(outcome.label.clone()));
+    m.insert("seed".to_string(), jhex(seed));
+    m.insert("budget".to_string(), jhex(budget));
+    m.insert("steps".to_string(), jhex(outcome.steps));
+    m.insert("oracle_calls".to_string(), jhex(outcome.oracle_calls));
+    m.insert(
+        "final_accuracy_bits".to_string(),
+        jhex(outcome.final_accuracy.to_bits()),
+    );
+    m.insert(
+        "best_accuracy_bits".to_string(),
+        jhex(outcome.best_accuracy.to_bits()),
+    );
+    m.insert(
+        "wall_seconds_bits".to_string(),
+        jhex(outcome.wall_seconds.to_bits()),
+    );
+    m.insert("probe_storage".to_string(), Json::Str(probe_storage.to_string()));
+    m.insert("blobs".to_string(), Json::Obj(blobs));
+    commit_dir(&tmp, &dir.join("completed"), Json::Obj(m))?;
+    sweep_stale_staging(dir);
+    Ok(())
+}
+
+/// Load a completed-trial record written by [`write_outcome`], if one
+/// exists and validates.  A corrupt record is reported and treated as
+/// absent (the trial just re-runs).
+pub fn load_outcome(dir: &Path) -> Option<OutcomeRecord> {
+    let cdir = dir.join("completed");
+    if !cdir.join("manifest.json").exists() {
+        return None;
+    }
+    match try_load_outcome(&cdir) {
+        Ok(v) => Some(v),
+        Err(e) => {
+            eprintln!("snapshot: ignoring {} ({e:#})", cdir.display());
+            None
+        }
+    }
+}
+
+fn try_load_outcome(cdir: &Path) -> Result<OutcomeRecord> {
+    let m = read_manifest(cdir, OUTCOME_MAGIC)?;
+    let version = get_hex(&m, "version")?;
+    if version != SNAPSHOT_VERSION {
+        bail!("outcome version {version} (this build reads {SNAPSHOT_VERSION})");
+    }
+    let blobs = m
+        .get("blobs")
+        .ok_or_else(|| anyhow!("manifest: missing blob inventory"))?
+        .clone();
+    let outcome = TrainOutcome {
+        loss_curve: bytes_to_curve(&read_blob(cdir, "loss_curve.bin", &blobs)?)?,
+        acc_curve: bytes_to_curve(&read_blob(cdir, "acc_curve.bin", &blobs)?)?,
+        final_accuracy: f64::from_bits(get_hex(&m, "final_accuracy_bits")?),
+        best_accuracy: f64::from_bits(get_hex(&m, "best_accuracy_bits")?),
+        steps: get_hex(&m, "steps")?,
+        oracle_calls: get_hex(&m, "oracle_calls")?,
+        wall_seconds: f64::from_bits(get_hex(&m, "wall_seconds_bits")?),
+        label: get_str(&m, "label")?.to_string(),
+        completed: true,
+    };
+    Ok(OutcomeRecord {
+        outcome,
+        probe_storage: get_str(&m, "probe_storage")?.to_string(),
+        seed: get_hex(&m, "seed")?,
+        budget: get_hex(&m, "budget")?,
+    })
+}
+
+/// Filesystem-safe, *injective* directory name for a trial id: the
+/// readable sanitized form plus a short FNV hash of the raw id, so two
+/// ids that sanitize to the same characters (`"a/b"` vs `"a_b"`) can
+/// never share a checkpoint directory.
+pub fn sanitize_id(id: &str) -> String {
+    let safe: String = id
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '-' | '.' | '_') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    format!("{safe}-{:08x}", fnv64(id.as_bytes()) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("zo_snap_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_snapshot(step: u64) -> TrainerSnapshot {
+        TrainerSnapshot {
+            version: SNAPSHOT_VERSION,
+            fingerprint: SnapshotFingerprint {
+                label: "bestofk5/ldsd+zo_sgd".into(),
+                seed: u64::MAX - 7, // above 2^53: must survive JSON
+                budget: 6000,
+                dim: 5,
+            },
+            step,
+            oracle_calls_used: step * 6,
+            next_eval: 1200,
+            sampler_step: step,
+            best_accuracy: 0.1 + step as f64,
+            params: vec![1.5, -2.25, f32::MIN_POSITIVE, 0.0, 3.0e-38],
+            optimizer: OptimizerState {
+                scalars: vec![step],
+                buffers: vec![vec![0.5; 5], vec![-0.25; 5]],
+            },
+            policy_mean: Some(vec![0.125; 5]),
+            loss_curve: vec![(6, 0.75), (12, f64::from_bits(0x3FF123456789ABCD))],
+            acc_curve: vec![(12, 0.5)],
+        }
+    }
+
+    fn assert_snapshots_equal(a: &TrainerSnapshot, b: &TrainerSnapshot) {
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.oracle_calls_used, b.oracle_calls_used);
+        assert_eq!(a.next_eval, b.next_eval);
+        assert_eq!(a.sampler_step, b.sampler_step);
+        assert_eq!(a.best_accuracy.to_bits(), b.best_accuracy.to_bits());
+        assert_eq!(a.params.len(), b.params.len());
+        for (x, y) in a.params.iter().zip(b.params.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.optimizer.scalars, b.optimizer.scalars);
+        assert_eq!(a.optimizer.buffers.len(), b.optimizer.buffers.len());
+        for (ba, bb) in a.optimizer.buffers.iter().zip(b.optimizer.buffers.iter()) {
+            for (x, y) in ba.iter().zip(bb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(a.policy_mean.is_some(), b.policy_mean.is_some());
+        assert_eq!(a.loss_curve.len(), b.loss_curve.len());
+        for ((ca, la), (cb, lb)) in a.loss_curve.iter().zip(b.loss_curve.iter()) {
+            assert_eq!(ca, cb);
+            assert_eq!(la.to_bits(), lb.to_bits());
+        }
+        assert_eq!(a.acc_curve.len(), b.acc_curve.len());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bit_exact() {
+        let dir = tmpdir("roundtrip");
+        let snap = sample_snapshot(42);
+        let path = write_snapshot(&dir, &snap).unwrap();
+        let back = load_snapshot(&path).unwrap();
+        assert_snapshots_equal(&snap, &back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_wins_and_retention_prunes() {
+        let dir = tmpdir("retention");
+        for step in [10u64, 20, 30] {
+            write_snapshot(&dir, &sample_snapshot(step)).unwrap();
+        }
+        let snaps = list_snapshots(&dir);
+        assert_eq!(
+            snaps.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+            vec![20, 30],
+            "only the newest {SNAPSHOTS_KEPT} are retained"
+        );
+        assert_eq!(load_latest(&dir).unwrap().step, 30);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous() {
+        let dir = tmpdir("fallback");
+        write_snapshot(&dir, &sample_snapshot(10)).unwrap();
+        let newest = write_snapshot(&dir, &sample_snapshot(20)).unwrap();
+        // flip a byte in the newest params blob: checksum must catch it
+        let pb = newest.join("params.bin");
+        let mut bytes = std::fs::read(&pb).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&pb, &bytes).unwrap();
+        let loaded = load_latest(&dir).unwrap();
+        assert_eq!(loaded.step, 10, "corrupt newest must fall back");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn half_written_snapshot_is_invisible() {
+        let dir = tmpdir("halfwrite");
+        write_snapshot(&dir, &sample_snapshot(5)).unwrap();
+        // a crash mid-write leaves a .tmp-* staging dir with no manifest
+        let staged = dir.join(".tmp-step-0000000009-dead");
+        std::fs::create_dir_all(&staged).unwrap();
+        std::fs::write(staged.join("params.bin"), [0u8; 8]).unwrap();
+        // and possibly a committed dir missing its manifest
+        let bare = dir.join("step-0000000099");
+        std::fs::create_dir_all(&bare).unwrap();
+        let loaded = load_latest(&dir).unwrap();
+        assert_eq!(loaded.step, 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn outcome_record_roundtrip() {
+        let dir = tmpdir("outcome");
+        let out = TrainOutcome {
+            loss_curve: vec![(6, 1.5), (12, 0.25)],
+            acc_curve: vec![(12, 0.625)],
+            final_accuracy: 0.625,
+            best_accuracy: 0.75,
+            steps: 2,
+            oracle_calls: 12,
+            wall_seconds: 0.125,
+            label: "bestofk5/ldsd+zo_sgd".into(),
+            completed: true,
+        };
+        assert!(load_outcome(&dir).is_none());
+        write_outcome(&dir, &out, "streamed", 41, 12).unwrap();
+        let rec = load_outcome(&dir).unwrap();
+        let back = &rec.outcome;
+        assert_eq!(rec.probe_storage, "streamed");
+        assert_eq!(rec.seed, 41);
+        assert_eq!(rec.budget, 12);
+        assert!(back.completed);
+        assert_eq!(back.steps, 2);
+        assert_eq!(back.final_accuracy.to_bits(), out.final_accuracy.to_bits());
+        assert_eq!(back.loss_curve.len(), 2);
+        for ((ca, la), (cb, lb)) in out.loss_curve.iter().zip(back.loss_curve.iter()) {
+            assert_eq!(ca, cb);
+            assert_eq!(la.to_bits(), lb.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sanitize_makes_ids_path_safe_and_injective() {
+        let s = sanitize_id("roberta_mini/lora/alg2+zo_sgd");
+        assert!(s.starts_with("roberta_mini_lora_alg2_zo_sgd-"), "{s}");
+        assert!(s.chars().all(|c| c.is_ascii_alphanumeric() || "-._".contains(c)));
+        // ids that sanitize to identical characters must not collide
+        assert_ne!(sanitize_id("a/b"), sanitize_id("a_b"));
+        assert_ne!(sanitize_id("a b"), sanitize_id("a+b"));
+        // and the mapping is deterministic
+        assert_eq!(sanitize_id("a/b"), sanitize_id("a/b"));
+    }
+
+    #[test]
+    fn commits_sweep_stale_staging_leftovers() {
+        let dir = tmpdir("sweep");
+        // a previous process died mid-write, leaving manifest-less staging
+        let stale = dir.join(".tmp-step-0000000003-12345");
+        std::fs::create_dir_all(&stale).unwrap();
+        std::fs::write(stale.join("params.bin"), [0u8; 16]).unwrap();
+        write_snapshot(&dir, &sample_snapshot(7)).unwrap();
+        assert!(!stale.exists(), "stale staging must be swept on commit");
+        assert_eq!(load_latest(&dir).unwrap().step, 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // golden values pin the on-disk checksum algorithm across builds
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -23,6 +23,9 @@ pub use schedule::{ConstantLr, CosineLr, LrSchedule};
 /// Probe-storage selection re-exported where the run configuration lives.
 pub use crate::probe::ProbeStorage;
 
+/// Checkpoint/resume policy re-exported where the run configuration lives.
+pub use crate::snapshot::CheckpointConfig;
+
 use anyhow::{bail, Result};
 
 use crate::data::Corpus;
@@ -195,6 +198,16 @@ impl crate::sampler::DirectionSampler for crate::probe::BoxedSampler {
     fn observe_replay(&mut self, losses: &[f64], k: usize) {
         (**self).observe_replay(losses, k)
     }
+    fn step_label(&self) -> u64 {
+        (**self).step_label()
+    }
+    fn restore_state(
+        &mut self,
+        step: u64,
+        policy_mean: Option<&[f32]>,
+    ) -> anyhow::Result<()> {
+        (**self).restore_state(step, policy_mean)
+    }
     fn dim(&self) -> usize {
         (**self).dim()
     }
@@ -269,6 +282,10 @@ pub struct TrainConfig {
     /// trajectories either way (DESIGN.md §10); `ZO_PROBE_STORAGE`
     /// overrides for whole-suite forcing.
     pub probe_storage: ProbeStorage,
+    /// Crash-safe checkpoint/resume policy (DESIGN.md §11).  The default
+    /// disables checkpointing; a resumed run is bitwise identical to the
+    /// uninterrupted one.
+    pub checkpoint: CheckpointConfig,
 }
 
 impl TrainConfig {
@@ -286,6 +303,7 @@ impl TrainConfig {
             seed: 0,
             probe_dispatch: ProbeDispatch::Batched,
             probe_storage: ProbeStorage::Auto,
+            checkpoint: CheckpointConfig::default(),
         }
     }
 
@@ -303,6 +321,7 @@ impl TrainConfig {
             seed: 0,
             probe_dispatch: ProbeDispatch::Batched,
             probe_storage: ProbeStorage::Auto,
+            checkpoint: CheckpointConfig::default(),
         }
     }
 
@@ -331,6 +350,7 @@ impl TrainConfig {
             seed: 0,
             probe_dispatch: ProbeDispatch::Batched,
             probe_storage: ProbeStorage::Auto,
+            checkpoint: CheckpointConfig::default(),
         }
     }
 }
@@ -354,6 +374,30 @@ pub struct TrainOutcome {
     pub wall_seconds: f64,
     /// Human-readable method label.
     pub label: String,
+    /// True when the budget was exhausted; false when the session halted
+    /// early ([`CheckpointConfig::max_run_steps`] cooperative preemption —
+    /// resume the run to continue it).
+    pub completed: bool,
+}
+
+/// Mid-run cursors captured by snapshots: everything [`Trainer::run`]
+/// needs to continue a run besides the parameters, optimizer moments and
+/// sampler state.  All counters span sessions (a resumed run picks up
+/// where the snapshot stopped).
+#[derive(Clone, Debug, Default)]
+pub struct RunProgress {
+    /// Optimizer steps taken so far.
+    pub step: u64,
+    /// Oracle calls consumed so far.
+    pub used: u64,
+    /// Next evaluation threshold (in oracle calls).
+    pub next_eval: u64,
+    /// (oracle calls, training-loss proxy) per step so far.
+    pub loss_curve: Vec<(u64, f64)>,
+    /// (oracle calls, test accuracy) per eval point so far.
+    pub acc_curve: Vec<(u64, f64)>,
+    /// Best test accuracy seen at any eval point so far.
+    pub best_accuracy: f64,
 }
 
 /// The training loop: estimator x optimizer over a corpus stream, charged
@@ -368,6 +412,8 @@ pub struct Trainer<O: Oracle> {
     g: Vec<f32>,
     /// Probe-loss buffer reused across steps (no per-step allocation).
     probe_losses: Vec<f64>,
+    /// Cross-session run cursors (what snapshots capture and restore).
+    progress: RunProgress,
 }
 
 impl<O: Oracle> Trainer<O> {
@@ -393,6 +439,7 @@ impl<O: Oracle> Trainer<O> {
         let estimator = build_estimator(&cfg.estimator, d, cfg.tau, cfg.seed, &exec, storage)?;
         let optimizer = crate::optim::optimizers_by_name(&cfg.optimizer, d)?;
         oracle.set_exec(exec);
+        let progress = RunProgress { next_eval: cfg.eval_every, ..Default::default() };
         Ok(Self {
             cfg,
             oracle,
@@ -401,6 +448,7 @@ impl<O: Oracle> Trainer<O> {
             optimizer,
             g: vec![0.0; d],
             probe_losses: Vec::new(),
+            progress,
         })
     }
 
@@ -457,6 +505,103 @@ impl<O: Oracle> Trainer<O> {
         self.estimator.as_ref()
     }
 
+    /// The cross-session run cursors (what snapshots capture).
+    pub fn progress(&self) -> &RunProgress {
+        &self.progress
+    }
+
+    /// The configuration identity snapshots of this run are stamped with
+    /// (and validated against on restore).
+    pub fn fingerprint(&self) -> crate::snapshot::SnapshotFingerprint {
+        crate::snapshot::SnapshotFingerprint {
+            label: format!("{}+{}", self.cfg.estimator.label(), self.cfg.optimizer),
+            seed: self.cfg.seed,
+            budget: self.cfg.budget,
+            dim: self.oracle.dim(),
+        }
+    }
+
+    /// Capture a full training snapshot at the current step boundary:
+    /// parameters, optimizer moments, the sampler's RNG step label +
+    /// policy mean, and the run cursors.  Restoring it (on this or a
+    /// freshly built trainer with the same configuration) and continuing
+    /// is bitwise identical to never having stopped — probe directions
+    /// are pure functions of (seed, step, shard) RNG cells, so no probe
+    /// state needs saving (DESIGN.md §11).
+    pub fn snapshot(&self) -> crate::snapshot::TrainerSnapshot {
+        let sampler = self.estimator.probes().sampler();
+        crate::snapshot::TrainerSnapshot {
+            version: crate::snapshot::SNAPSHOT_VERSION,
+            fingerprint: self.fingerprint(),
+            step: self.progress.step,
+            oracle_calls_used: self.progress.used,
+            next_eval: self.progress.next_eval,
+            sampler_step: sampler.step_label(),
+            best_accuracy: self.progress.best_accuracy,
+            params: self.oracle.params().to_vec(),
+            optimizer: self.optimizer.state(),
+            policy_mean: sampler.policy_mean().map(|m| m.to_vec()),
+            loss_curve: self.progress.loss_curve.clone(),
+            acc_curve: self.progress.acc_curve.clone(),
+        }
+    }
+
+    /// Restore a snapshot captured by [`Trainer::snapshot`] onto this
+    /// (freshly built, not-yet-run) trainer.  Validates the snapshot's
+    /// fingerprint against this run's configuration — resuming under a
+    /// different estimator/optimizer/seed/budget is a hard error, not a
+    /// silent divergence.
+    pub fn restore(&mut self, snap: &crate::snapshot::TrainerSnapshot) -> Result<()> {
+        if snap.version != crate::snapshot::SNAPSHOT_VERSION {
+            bail!(
+                "snapshot version {} (this build reads {})",
+                snap.version,
+                crate::snapshot::SNAPSHOT_VERSION
+            );
+        }
+        let fp = self.fingerprint();
+        if snap.fingerprint != fp {
+            bail!(
+                "snapshot fingerprint mismatch: snapshot is {:?}, this run is {:?}",
+                snap.fingerprint,
+                fp
+            );
+        }
+        if snap.params.len() != self.oracle.dim() {
+            bail!(
+                "snapshot params hold {} f32, oracle wants {}",
+                snap.params.len(),
+                self.oracle.dim()
+            );
+        }
+        let params = &snap.params;
+        self.oracle.update_params(&mut |x| x.copy_from_slice(params))?;
+        self.optimizer.load_state(&snap.optimizer)?;
+        self.estimator
+            .probes_mut()
+            .sampler_mut()
+            .restore_state(snap.sampler_step, snap.policy_mean.as_deref())?;
+        self.progress = RunProgress {
+            step: snap.step,
+            used: snap.oracle_calls_used,
+            next_eval: snap.next_eval,
+            loss_curve: snap.loss_curve.clone(),
+            acc_curve: snap.acc_curve.clone(),
+            best_accuracy: snap.best_accuracy,
+        };
+        Ok(())
+    }
+
+    /// Write a snapshot of the current step boundary into the configured
+    /// checkpoint directory (no-op when none is configured).
+    fn write_snapshot_now(&self) -> Result<()> {
+        if let Some(dir) = &self.cfg.checkpoint.dir {
+            let snap = self.snapshot();
+            crate::snapshot::write_snapshot(std::path::Path::new(dir), &snap)?;
+        }
+        Ok(())
+    }
+
     /// One estimation step under the configured probe dispatch.  Both
     /// paths stage probe losses in the trainer's reusable buffer; on the
     /// materialized path the per-step hot path allocates nothing after
@@ -498,11 +643,33 @@ impl<O: Oracle> Trainer<O> {
         }
     }
 
-    /// Run until the oracle budget is exhausted.  `eval` computes test
-    /// accuracy from the trainable vector (None for closed-form tests).
+    /// Run until the oracle budget is exhausted (or the session's
+    /// [`CheckpointConfig::max_run_steps`] preemption point).  `eval`
+    /// computes test accuracy from the trainable vector (None for
+    /// closed-form tests).
+    ///
+    /// With [`CheckpointConfig::resume`] set and a not-yet-started
+    /// trainer, the newest valid snapshot in the checkpoint directory is
+    /// restored first; with [`CheckpointConfig::every`] > 0, a snapshot
+    /// is written every that-many steps.  A run interrupted at any step
+    /// and resumed produces a bitwise-identical [`TrainOutcome`] (losses,
+    /// accuracy curve, final parameters) to the uninterrupted run —
+    /// `tests/checkpoint_resume.rs` pins this across thread counts and
+    /// probe-storage modes.
     pub fn run(&mut self, eval: Option<&Evaluator>) -> Result<TrainOutcome> {
         let t0 = std::time::Instant::now();
+        if self.cfg.checkpoint.resume && self.progress.step == 0 {
+            if let Some(dir) = self.cfg.checkpoint.dir.clone() {
+                if let Some(snap) =
+                    crate::snapshot::load_latest(std::path::Path::new(&dir))
+                {
+                    self.restore(&snap)?;
+                }
+            }
+        }
         let calls_per_step = self.estimator.calls_per_step();
+        // the schedule derives from the *configured* budget, so a resumed
+        // run sees the identical lr(step) function
         let planned_steps = (self.cfg.budget / calls_per_step.max(1)).max(1);
         let schedule: Box<dyn LrSchedule> = if self.cfg.cosine_schedule {
             Box::new(CosineLr::new(self.cfg.lr, planned_steps))
@@ -510,23 +677,26 @@ impl<O: Oracle> Trainer<O> {
             Box::new(ConstantLr(self.cfg.lr))
         };
 
-        let mut out = TrainOutcome {
-            label: format!(
-                "{}+{}",
-                self.cfg.estimator.label(),
-                self.cfg.optimizer
-            ),
-            ..Default::default()
-        };
+        let label = format!("{}+{}", self.cfg.estimator.label(), self.cfg.optimizer);
+        // all accounting is relative: a fresh oracle starts at 0 calls, a
+        // resumed session carries the snapshot's used-count as its base,
+        // so curve entries are identical either way
         let start_calls = self.oracle.oracle_calls();
-        let mut step = 0u64;
-        let mut next_eval = self.cfg.eval_every;
+        let base_used = self.progress.used;
+        let max_run_steps = self.cfg.checkpoint.max_run_steps;
+        let mut session_steps = 0u64;
+        let mut halted = false;
 
         loop {
-            let used = self.oracle.oracle_calls() - start_calls;
+            let used = base_used + (self.oracle.oracle_calls() - start_calls);
             if used + calls_per_step > self.cfg.budget {
                 break;
             }
+            if max_run_steps > 0 && session_steps >= max_run_steps {
+                halted = true;
+                break;
+            }
+            let step = self.progress.step;
             let batch = self.corpus.train_batch(step, self.train_batch_size());
             self.oracle.set_batch(&batch)?;
             let est = self.estimate_step()?;
@@ -536,40 +706,61 @@ impl<O: Oracle> Trainer<O> {
             let g = &self.g;
             let opt = &mut self.optimizer;
             self.oracle.update_params(&mut |x| opt.step(x, g, lr))?;
-            out.loss_curve
-                .push((self.oracle.oracle_calls() - start_calls, est.loss));
-            step += 1;
+            let used_now = base_used + (self.oracle.oracle_calls() - start_calls);
+            self.progress.loss_curve.push((used_now, est.loss));
+            self.progress.step += 1;
+            session_steps += 1;
 
-            if self.cfg.eval_every > 0 {
-                let used_now = self.oracle.oracle_calls() - start_calls;
-                if used_now >= next_eval {
-                    next_eval += self.cfg.eval_every;
-                    if let Some(ev) = eval {
-                        let acc = ev.accuracy(
-                            self.oracle.params(),
-                            &self.corpus,
-                            self.cfg.eval_batches,
-                        )?;
-                        out.acc_curve.push((used_now, acc));
-                        out.best_accuracy = out.best_accuracy.max(acc);
-                    }
+            if self.cfg.eval_every > 0 && used_now >= self.progress.next_eval {
+                self.progress.next_eval += self.cfg.eval_every;
+                if let Some(ev) = eval {
+                    let acc = ev.accuracy(
+                        self.oracle.params(),
+                        &self.corpus,
+                        self.cfg.eval_batches,
+                    )?;
+                    self.progress.acc_curve.push((used_now, acc));
+                    self.progress.best_accuracy =
+                        self.progress.best_accuracy.max(acc);
                 }
+            }
+
+            let every = self.cfg.checkpoint.every;
+            if every > 0 && self.progress.step % every == 0 {
+                self.progress.used = used_now;
+                self.write_snapshot_now()?;
             }
         }
 
-        if let Some(ev) = eval {
-            let acc = ev.accuracy(
-                self.oracle.params(),
-                &self.corpus,
-                self.cfg.eval_batches,
-            )?;
-            out.acc_curve
-                .push((self.oracle.oracle_calls() - start_calls, acc));
-            out.final_accuracy = acc;
-            out.best_accuracy = out.best_accuracy.max(acc);
+        self.progress.used = base_used + (self.oracle.oracle_calls() - start_calls);
+        if halted {
+            // preemption point: persist the boundary so nothing between
+            // snapshot cadences is lost
+            self.write_snapshot_now()?;
         }
-        out.steps = step;
-        out.oracle_calls = self.oracle.oracle_calls() - start_calls;
+
+        let mut out = TrainOutcome {
+            label,
+            loss_curve: self.progress.loss_curve.clone(),
+            acc_curve: self.progress.acc_curve.clone(),
+            best_accuracy: self.progress.best_accuracy,
+            steps: self.progress.step,
+            oracle_calls: self.progress.used,
+            completed: !halted,
+            ..Default::default()
+        };
+        if !halted {
+            if let Some(ev) = eval {
+                let acc = ev.accuracy(
+                    self.oracle.params(),
+                    &self.corpus,
+                    self.cfg.eval_batches,
+                )?;
+                out.acc_curve.push((self.progress.used, acc));
+                out.final_accuracy = acc;
+                out.best_accuracy = out.best_accuracy.max(acc);
+            }
+        }
         out.wall_seconds = t0.elapsed().as_secs_f64();
         Ok(out)
     }
@@ -589,7 +780,7 @@ mod tests {
     use crate::oracle::QuadraticOracle;
 
     fn mini_corpus() -> Corpus {
-        Corpus::new(CorpusSpec::default_mini())
+        Corpus::new(CorpusSpec::default_mini()).unwrap()
     }
 
     fn quad(d: usize) -> QuadraticOracle {
@@ -625,6 +816,7 @@ mod tests {
             seed: 1,
             probe_dispatch: ProbeDispatch::Batched,
             probe_storage: ProbeStorage::Auto,
+            checkpoint: CheckpointConfig::default(),
         };
         let mut t2 = Trainer::new(
             mk(EstimatorKind::CentralK1(SamplerKind::Gaussian)),
@@ -762,6 +954,135 @@ mod tests {
         };
         let mut t = Trainer::new(cfg2, quad(8), mini_corpus()).unwrap();
         assert!(t.run(None).is_ok());
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_exactly_in_memory() {
+        // one uninterrupted run vs snapshot-at-step-7 + restore onto a
+        // fresh trainer: identical loss curve and final parameters
+        let d = 64;
+        let cfg = || TrainConfig {
+            cosine_schedule: true,
+            ..TrainConfig::algorithm2("zo_adamm", 0.01, 240)
+        };
+        let mut full = Trainer::new(cfg(), quad(d), mini_corpus()).unwrap();
+        let full_out = full.run(None).unwrap();
+        assert!(full_out.completed);
+
+        let mut first = Trainer::new(
+            TrainConfig {
+                checkpoint: CheckpointConfig { max_run_steps: 7, ..Default::default() },
+                ..cfg()
+            },
+            quad(d),
+            mini_corpus(),
+        )
+        .unwrap();
+        let partial = first.run(None).unwrap();
+        assert!(!partial.completed);
+        assert_eq!(partial.steps, 7);
+        let snap = first.snapshot();
+
+        let mut second = Trainer::new(cfg(), quad(d), mini_corpus()).unwrap();
+        second.restore(&snap).unwrap();
+        let resumed = second.run(None).unwrap();
+        assert!(resumed.completed);
+        assert_eq!(resumed.steps, full_out.steps);
+        assert_eq!(resumed.oracle_calls, full_out.oracle_calls);
+        assert_eq!(resumed.loss_curve.len(), full_out.loss_curve.len());
+        for ((ca, la), (cb, lb)) in
+            full_out.loss_curve.iter().zip(resumed.loss_curve.iter())
+        {
+            assert_eq!(ca, cb);
+            assert_eq!(la.to_bits(), lb.to_bits(), "{la} vs {lb}");
+        }
+        for (a, b) in full.oracle().params().iter().zip(second.oracle().params()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_config() {
+        let d = 8;
+        let mut a =
+            Trainer::new(TrainConfig::algorithm2("zo_sgd_plain", 0.05, 120), quad(d), mini_corpus())
+                .unwrap();
+        let snap = a.snapshot();
+        // different optimizer -> different fingerprint label
+        let mut b =
+            Trainer::new(TrainConfig::algorithm2("zo_adamm", 0.05, 120), quad(d), mini_corpus())
+                .unwrap();
+        let err = b.restore(&snap).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        // different seed
+        let mut c = Trainer::new(
+            TrainConfig { seed: 9, ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 120) },
+            quad(d),
+            mini_corpus(),
+        )
+        .unwrap();
+        assert!(c.restore(&snap).is_err());
+        // same config restores fine
+        let mut ok =
+            Trainer::new(TrainConfig::algorithm2("zo_sgd_plain", 0.05, 120), quad(d), mini_corpus())
+                .unwrap();
+        ok.restore(&snap).unwrap();
+    }
+
+    #[test]
+    fn checkpointed_run_resumes_from_disk_via_config() {
+        // the config-driven path end to end: run with --checkpoint-every
+        // until preemption, then build a fresh trainer with --resume and
+        // finish; outcome must match the uninterrupted run bit for bit
+        let d = 48;
+        let dir = std::env::temp_dir().join(format!(
+            "zo_train_ck_{}_{}",
+            std::process::id(),
+            line!()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let base = || TrainConfig {
+            cosine_schedule: false,
+            ..TrainConfig::algorithm2("zo_sgd", 0.05, 300)
+        };
+        let mut full = Trainer::new(base(), quad(d), mini_corpus()).unwrap();
+        let full_out = full.run(None).unwrap();
+
+        let ck = |resume: bool, max_run_steps: u64| CheckpointConfig {
+            dir: Some(dir.to_string_lossy().into_owned()),
+            every: 3,
+            resume,
+            max_run_steps,
+        };
+        let mut first = Trainer::new(
+            TrainConfig { checkpoint: ck(false, 11), ..base() },
+            quad(d),
+            mini_corpus(),
+        )
+        .unwrap();
+        let partial = first.run(None).unwrap();
+        assert!(!partial.completed);
+        assert!(crate::snapshot::load_latest(&dir).is_some());
+
+        let mut second = Trainer::new(
+            TrainConfig { checkpoint: ck(true, 0), ..base() },
+            quad(d),
+            mini_corpus(),
+        )
+        .unwrap();
+        let resumed = second.run(None).unwrap();
+        assert!(resumed.completed);
+        assert_eq!(resumed.steps, full_out.steps);
+        for ((ca, la), (cb, lb)) in
+            full_out.loss_curve.iter().zip(resumed.loss_curve.iter())
+        {
+            assert_eq!(ca, cb);
+            assert_eq!(la.to_bits(), lb.to_bits());
+        }
+        for (a, b) in full.oracle().params().iter().zip(second.oracle().params()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

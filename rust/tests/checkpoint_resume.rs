@@ -1,0 +1,408 @@
+//! Crash-safe checkpoint/resume (DESIGN.md §11): a run interrupted at any
+//! step and resumed from its on-disk snapshot must reproduce the
+//! uninterrupted run's trajectory **bitwise** — loss curve, oracle-call
+//! axis, and final parameters — at any thread count and under both
+//! probe-storage modes.  The per-(seed, step, shard) RNG cells make probe
+//! streams pure functions of the restored step label, so nothing about
+//! the probes themselves is (or needs to be) persisted.
+
+use std::path::{Path, PathBuf};
+
+use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::oracle::{Oracle, QuadraticOracle};
+use zo_ldsd::proptest::{check, Gen};
+use zo_ldsd::sampler::LdsdConfig;
+use zo_ldsd::snapshot;
+use zo_ldsd::train::{
+    CheckpointConfig, EstimatorKind, ProbeStorage, SamplerKind, TrainConfig, Trainer,
+};
+
+fn mini_corpus() -> Corpus {
+    Corpus::new(CorpusSpec::default_mini()).unwrap()
+}
+
+fn quad(d: usize) -> QuadraticOracle {
+    let diag: Vec<f32> = (0..d).map(|i| 1.0 + 0.15 * (i % 5) as f32).collect();
+    let center: Vec<f32> = (0..d).map(|i| (i as f32 * 0.41).cos()).collect();
+    QuadraticOracle::new(diag, center, vec![0.0; d])
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "zo_ck_resume_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// One random interrupt-resume configuration to cross-check.
+#[derive(Debug, Clone)]
+struct ResumeCase {
+    d: usize,
+    k: usize,
+    threads: usize,
+    shard_len: usize,
+    seed: u64,
+    /// Step the first session is preempted at (1..steps-1).
+    interrupt: u64,
+    /// Total optimizer steps of the full run.
+    steps: u64,
+    optimizer: &'static str,
+    storage: ProbeStorage,
+}
+
+struct ResumeCaseGen;
+
+impl Gen<ResumeCase> for ResumeCaseGen {
+    fn generate(&self, rng: &mut zo_ldsd::rng::Rng) -> ResumeCase {
+        let steps = 6 + rng.below(8);
+        let optimizer = ["zo_sgd", "zo_adamm", "jaguar", "zo_sgd_plain"]
+            [rng.below(4) as usize];
+        let storage = if rng.below(2) == 0 {
+            ProbeStorage::Materialized
+        } else {
+            ProbeStorage::Streamed
+        };
+        ResumeCase {
+            d: 16 + rng.below(700) as usize,
+            k: 2 + rng.below(5) as usize,
+            threads: 1 + rng.below(8) as usize,
+            shard_len: 4 + rng.below(250) as usize,
+            seed: rng.next_u64(),
+            interrupt: 1 + rng.below(steps - 1),
+            steps,
+            optimizer,
+            storage,
+        }
+    }
+
+    fn shrink(&self, value: &ResumeCase) -> Vec<ResumeCase> {
+        let mut out = Vec::new();
+        if value.d > 16 {
+            out.push(ResumeCase { d: (value.d / 2).max(16), ..value.clone() });
+        }
+        if value.steps > 3 {
+            let steps = value.steps / 2;
+            out.push(ResumeCase {
+                steps,
+                interrupt: value.interrupt.min(steps - 1).max(1),
+                ..value.clone()
+            });
+        }
+        out
+    }
+}
+
+fn cfg_for(case: &ResumeCase, checkpoint: CheckpointConfig) -> TrainConfig {
+    TrainConfig {
+        estimator: EstimatorKind::BestOfK {
+            k: case.k,
+            sampler: SamplerKind::Ldsd(LdsdConfig::default()),
+        },
+        optimizer: case.optimizer.into(),
+        lr: 0.02,
+        tau: 1e-3,
+        budget: (case.k as u64 + 1) * case.steps,
+        eval_every: 0,
+        eval_batches: 1,
+        cosine_schedule: true, // exercises the schedule's step dependence
+        seed: case.seed,
+        probe_dispatch: Default::default(),
+        probe_storage: case.storage,
+        checkpoint,
+    }
+}
+
+fn run_to_end(case: &ResumeCase, checkpoint: CheckpointConfig) -> (Vec<(u64, f64)>, Vec<f32>, u64) {
+    let ctx = ExecContext::new(case.threads).with_shard_len(case.shard_len);
+    let mut t = Trainer::with_exec(
+        cfg_for(case, checkpoint),
+        quad(case.d),
+        mini_corpus(),
+        ctx,
+    )
+    .unwrap();
+    let out = t.run(None).unwrap();
+    assert!(out.completed);
+    (out.loss_curve, t.oracle().params().to_vec(), out.steps)
+}
+
+fn run_interrupted(case: &ResumeCase, dir: &Path) -> (Vec<(u64, f64)>, Vec<f32>, u64) {
+    let ctx = ExecContext::new(case.threads).with_shard_len(case.shard_len);
+    // session 1: snapshot every other step, preempt at `interrupt`
+    let ck1 = CheckpointConfig {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every: 2,
+        resume: false,
+        max_run_steps: case.interrupt,
+    };
+    let mut first =
+        Trainer::with_exec(cfg_for(case, ck1), quad(case.d), mini_corpus(), ctx.clone())
+            .unwrap();
+    let partial = first.run(None).unwrap();
+    assert!(!partial.completed, "interrupt must preempt before the budget");
+    assert_eq!(partial.steps, case.interrupt);
+    drop(first); // the first session's process is gone
+
+    // session 2: fresh trainer, resume from disk, run to completion
+    let ck2 = CheckpointConfig {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every: 2,
+        resume: true,
+        max_run_steps: 0,
+    };
+    let mut second =
+        Trainer::with_exec(cfg_for(case, ck2), quad(case.d), mini_corpus(), ctx).unwrap();
+    let out = second.run(None).unwrap();
+    assert!(out.completed);
+    (out.loss_curve, t_params(&second), out.steps)
+}
+
+fn t_params<O: Oracle>(t: &Trainer<O>) -> Vec<f32> {
+    t.oracle().params().to_vec()
+}
+
+fn curves_bitwise_equal(a: &[(u64, f64)], b: &[(u64, f64)]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b.iter())
+            .all(|((ca, la), (cb, lb))| ca == cb && la.to_bits() == lb.to_bits())
+}
+
+fn params_bitwise_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// The headline property: interrupt at a random step, resume from disk,
+/// and the whole trajectory is bit-for-bit the uninterrupted one — across
+/// random (d, K, threads, shard_len, optimizer, probe storage, interrupt
+/// point) configurations.
+#[test]
+fn prop_interrupted_resume_is_bitwise_identical() {
+    let case_no = std::cell::Cell::new(0usize);
+    check("checkpoint_resume_bitwise", &ResumeCaseGen, 10, |case| {
+        let n = case_no.get();
+        case_no.set(n + 1);
+        let dir = tmpdir(&format!("prop{n}"));
+        let (curve_full, params_full, steps_full) =
+            run_to_end(case, CheckpointConfig::default());
+        let (curve_res, params_res, steps_res) = run_interrupted(case, &dir);
+        std::fs::remove_dir_all(&dir).ok();
+        steps_full == steps_res
+            && curves_bitwise_equal(&curve_full, &curve_res)
+            && params_bitwise_equal(&params_full, &params_res)
+    });
+}
+
+/// The acceptance matrix pinned explicitly: 1 and 8 threads, materialized
+/// and streamed probe storage — a mid-run kill + resume reproduces the
+/// uninterrupted `TrainOutcome` bit for bit in every cell.
+#[test]
+fn resume_matrix_threads_x_storage() {
+    for threads in [1usize, 8] {
+        for storage in [ProbeStorage::Materialized, ProbeStorage::Streamed] {
+            let case = ResumeCase {
+                d: 257, // misaligned with the shard length on purpose
+                k: 5,
+                threads,
+                shard_len: 64,
+                seed: 0xC0FFEE,
+                interrupt: 5,
+                steps: 12,
+                optimizer: "zo_adamm",
+                storage,
+            };
+            let dir = tmpdir(&format!("matrix_t{threads}_{}", storage.label()));
+            let (curve_full, params_full, _) =
+                run_to_end(&case, CheckpointConfig::default());
+            let (curve_res, params_res, _) = run_interrupted(&case, &dir);
+            assert!(
+                curves_bitwise_equal(&curve_full, &curve_res),
+                "loss curve diverged (threads {threads}, {})",
+                storage.label()
+            );
+            assert!(
+                params_bitwise_equal(&params_full, &params_res),
+                "params diverged (threads {threads}, {})",
+                storage.label()
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// Two interruptions chained: kill at step 3, resume and kill again at
+/// step 8, resume to the end — still bitwise identical.
+#[test]
+fn double_interruption_still_bitwise_identical() {
+    let case = ResumeCase {
+        d: 120,
+        k: 3,
+        threads: 4,
+        shard_len: 48,
+        seed: 77,
+        interrupt: 3,
+        steps: 14,
+        optimizer: "zo_sgd",
+        storage: ProbeStorage::Materialized,
+    };
+    let dir = tmpdir("double");
+    let (curve_full, params_full, _) = run_to_end(&case, CheckpointConfig::default());
+
+    let ctx = || ExecContext::new(case.threads).with_shard_len(case.shard_len);
+    let ck = |resume: bool, max_run_steps: u64| CheckpointConfig {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every: 1,
+        resume,
+        max_run_steps,
+    };
+    let mut s1 =
+        Trainer::with_exec(cfg_for(&case, ck(false, 3)), quad(case.d), mini_corpus(), ctx())
+            .unwrap();
+    assert!(!s1.run(None).unwrap().completed);
+    let mut s2 =
+        Trainer::with_exec(cfg_for(&case, ck(true, 5)), quad(case.d), mini_corpus(), ctx())
+            .unwrap();
+    let mid = s2.run(None).unwrap();
+    assert!(!mid.completed);
+    assert_eq!(mid.steps, 8, "3 restored + 5 session steps");
+    let mut s3 =
+        Trainer::with_exec(cfg_for(&case, ck(true, 0)), quad(case.d), mini_corpus(), ctx())
+            .unwrap();
+    let fin = s3.run(None).unwrap();
+    assert!(fin.completed);
+    assert!(curves_bitwise_equal(&curve_full, &fin.loss_curve));
+    assert!(params_bitwise_equal(&params_full, &t_params(&s3)));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Snapshot container round-trip at the trainer level + on-disk format
+/// goldens: directory naming, manifest magic/fields, blob inventory.  The
+/// format is versioned; these goldens are the compatibility contract.
+#[test]
+fn snapshot_format_roundtrip_and_golden() {
+    let case = ResumeCase {
+        d: 33,
+        k: 2,
+        threads: 1,
+        shard_len: 16,
+        seed: 5,
+        interrupt: 4,
+        steps: 6,
+        optimizer: "zo_adamm",
+        storage: ProbeStorage::Materialized,
+    };
+    let dir = tmpdir("golden");
+    let ck = CheckpointConfig {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every: 2,
+        resume: false,
+        max_run_steps: case.interrupt,
+    };
+    let mut t = Trainer::with_exec(
+        cfg_for(&case, ck),
+        quad(case.d),
+        mini_corpus(),
+        ExecContext::new(1).with_shard_len(16),
+    )
+    .unwrap();
+    t.run(None).unwrap();
+
+    // golden: zero-padded step directories, newest = the halt snapshot
+    let snaps = snapshot::list_snapshots(&dir);
+    let (last_step, last_path) = snaps.last().unwrap().clone();
+    assert_eq!(last_step, 4);
+    assert!(last_path.ends_with("step-0000000004"), "{last_path:?}");
+
+    // golden: manifest magic + required fields + blob inventory
+    let text = std::fs::read_to_string(last_path.join("manifest.json")).unwrap();
+    let manifest = zo_ldsd::jsonio::parse(&text).unwrap();
+    assert_eq!(
+        manifest.get("magic").and_then(zo_ldsd::jsonio::Json::as_str),
+        Some("zosnap1")
+    );
+    for field in [
+        "version", "label", "seed", "budget", "dim", "step",
+        "oracle_calls_used", "next_eval", "sampler_step",
+        "best_accuracy_bits", "opt_scalars", "opt_buffers", "blobs",
+    ] {
+        assert!(manifest.get(field).is_some(), "manifest missing '{field}'");
+    }
+    let blobs = manifest.get("blobs").unwrap();
+    for blob in ["params.bin", "opt-0.bin", "opt-1.bin", "policy_mean.bin",
+                 "loss_curve.bin", "acc_curve.bin"] {
+        assert!(blobs.get(blob).is_some(), "inventory missing '{blob}'");
+        assert!(last_path.join(blob).exists(), "blob file missing '{blob}'");
+    }
+    // no nulls anywhere in the manifest (non-finite leak guard)
+    assert!(!text.contains("null"), "{text}");
+
+    // round-trip: load == what the trainer would snapshot now
+    let loaded = snapshot::load_latest(&dir).unwrap();
+    let live = t.snapshot();
+    assert_eq!(loaded.step, live.step);
+    assert_eq!(loaded.oracle_calls_used, live.oracle_calls_used);
+    assert_eq!(loaded.sampler_step, live.sampler_step);
+    assert_eq!(loaded.fingerprint, live.fingerprint);
+    assert_eq!(loaded.params.len(), live.params.len());
+    for (a, b) in loaded.params.iter().zip(live.params.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in loaded
+        .policy_mean
+        .as_deref()
+        .unwrap()
+        .iter()
+        .zip(live.policy_mean.as_deref().unwrap())
+    {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resuming with a mismatched configuration must fail loudly, not walk a
+/// silently different trajectory.
+#[test]
+fn resume_under_different_config_errors() {
+    let case = ResumeCase {
+        d: 24,
+        k: 3,
+        threads: 1,
+        shard_len: 32,
+        seed: 9,
+        interrupt: 2,
+        steps: 6,
+        optimizer: "zo_sgd",
+        storage: ProbeStorage::Materialized,
+    };
+    let dir = tmpdir("mismatch");
+    let ck = |resume: bool| CheckpointConfig {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every: 1,
+        resume,
+        max_run_steps: if resume { 0 } else { 2 },
+    };
+    let mut first = Trainer::with_exec(
+        cfg_for(&case, ck(false)),
+        quad(case.d),
+        mini_corpus(),
+        ExecContext::new(1).with_shard_len(32),
+    )
+    .unwrap();
+    first.run(None).unwrap();
+
+    // different seed -> fingerprint mismatch -> hard error on resume
+    let other = ResumeCase { seed: 10, ..case.clone() };
+    let mut wrong = Trainer::with_exec(
+        cfg_for(&other, ck(true)),
+        quad(case.d),
+        mini_corpus(),
+        ExecContext::new(1).with_shard_len(32),
+    )
+    .unwrap();
+    let err = wrong.run(None).unwrap_err();
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

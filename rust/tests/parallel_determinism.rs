@@ -29,7 +29,7 @@ fn train_loop_bitwise_identical_threads_1_vs_8() {
             ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 600)
         };
         let oracle = QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
-        let corpus = Corpus::new(CorpusSpec::default_mini());
+        let corpus = Corpus::new(CorpusSpec::default_mini()).unwrap();
         let mut t = Trainer::with_exec(cfg, oracle, corpus, ctx(threads, 512)).unwrap();
         let out = t.run(None).unwrap();
         (out.steps, out.loss_curve, t.oracle().params().to_vec())
@@ -136,7 +136,7 @@ fn streamed_train_loop_bitwise_identical_threads_1_vs_8() {
             ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 600)
         };
         let oracle = QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
-        let corpus = Corpus::new(CorpusSpec::default_mini());
+        let corpus = Corpus::new(CorpusSpec::default_mini()).unwrap();
         let mut t = Trainer::with_exec(cfg, oracle, corpus, ctx(threads, 512)).unwrap();
         let out = t.run(None).unwrap();
         (out.steps, out.loss_curve, t.oracle().params().to_vec())
@@ -183,7 +183,7 @@ fn budget_accounting_independent_of_thread_count() {
             ..TrainConfig::gaussian_6fwd("zo_sgd_plain", 0.02, 180)
         };
         let oracle = QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
-        let corpus = Corpus::new(CorpusSpec::default_mini());
+        let corpus = Corpus::new(CorpusSpec::default_mini()).unwrap();
         let mut t = Trainer::with_exec(cfg, oracle, corpus, ctx(threads, 200)).unwrap();
         let out = t.run(None).unwrap();
         (out.steps, out.oracle_calls)

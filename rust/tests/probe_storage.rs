@@ -77,12 +77,13 @@ fn prop_streamed_and_materialized_trajectories_bitwise_equal() {
                 seed: case.seed,
                 probe_dispatch: Default::default(),
                 probe_storage: storage,
+                checkpoint: Default::default(),
             };
             let ctx = ExecContext::new(case.threads).with_shard_len(case.shard_len);
             let mut t = Trainer::with_exec(
                 cfg,
                 quad(case.d),
-                Corpus::new(CorpusSpec::default_mini()),
+                Corpus::new(CorpusSpec::default_mini()).unwrap(),
                 ctx,
             )
             .unwrap();

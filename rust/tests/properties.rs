@@ -211,7 +211,7 @@ fn prop_optimizer_permutation_equivariant() {
 /// Corpus invariants hold for arbitrary indices, including the test range.
 #[test]
 fn prop_corpus_examples_well_formed() {
-    let corpus = Corpus::new(CorpusSpec::default_mini());
+    let corpus = Corpus::new(CorpusSpec::default_mini()).unwrap();
     check("corpus_wf", &U64Range(0, 1 << 22), 300, |&idx| {
         let ex = corpus.example(idx);
         let len = ex.mask.iter().filter(|&&m| m == 1.0).count();
@@ -226,8 +226,8 @@ fn prop_corpus_examples_well_formed() {
 /// Determinism: the corpus is a pure function of (seed, index).
 #[test]
 fn prop_corpus_deterministic() {
-    let a = Corpus::new(CorpusSpec::default_mini());
-    let b = Corpus::new(CorpusSpec::default_mini());
+    let a = Corpus::new(CorpusSpec::default_mini()).unwrap();
+    let b = Corpus::new(CorpusSpec::default_mini()).unwrap();
     check("corpus_det", &U64Range(0, 1 << 30), 100, |&idx| {
         let x = a.example(idx);
         let y = b.example(idx);

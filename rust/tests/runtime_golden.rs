@@ -49,7 +49,7 @@ fn corpus_matches_python_golden() {
     for entry in golden.get("corpus").unwrap().as_arr().unwrap() {
         let model = entry.get("model").unwrap().as_str().unwrap();
         let spec = manifest.corpus(model).unwrap().clone();
-        let corpus = Corpus::new(spec);
+        let corpus = Corpus::new(spec).unwrap();
         let b = manifest.model(model).unwrap().shapes.batch;
 
         let train = corpus.train_batch(0, b);
@@ -77,7 +77,7 @@ fn pjrt_losses_match_python_golden() {
 
     for (model, g) in losses.as_obj().unwrap() {
         let entry = manifest.model(model).unwrap();
-        let corpus = Corpus::new(manifest.corpus(model).unwrap().clone());
+        let corpus = Corpus::new(manifest.corpus(model).unwrap().clone()).unwrap();
         let batch = corpus.train_batch(0, entry.shapes.batch);
 
         // FT loss at the pretrained checkpoint
@@ -125,7 +125,7 @@ fn loss_k_matches_k_loss_dir_calls() {
     let manifest = Manifest::load(&dir).unwrap();
     let rt = Runtime::new(&dir).unwrap();
     let entry = manifest.model("roberta_mini").unwrap();
-    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone());
+    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone()).unwrap();
     let batch = corpus.train_batch(3, entry.shapes.batch);
 
     let mut oracle = PjrtOracle::new(&rt, entry, TrainMode::Lora).unwrap();
@@ -160,7 +160,7 @@ fn evaluator_reproduces_python_eval_accuracy() {
         let Some(want) = entry.init_accuracy.or(entry.pretrain_accuracy) else {
             continue;
         };
-        let corpus = Corpus::new(manifest.corpus(name).unwrap().clone());
+        let corpus = Corpus::new(manifest.corpus(name).unwrap().clone()).unwrap();
         let evaluator = Evaluator::new(&rt, entry, TrainMode::Ft).unwrap();
         let params =
             read_params_bin(&dir.join(&entry.params_file), entry.d_ft).unwrap();
@@ -220,7 +220,7 @@ fn update_params_invalidate_device_copy() {
     let manifest = Manifest::load(&dir).unwrap();
     let rt = Runtime::new(&dir).unwrap();
     let entry = manifest.model("roberta_mini").unwrap();
-    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone());
+    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone()).unwrap();
     let batch = corpus.train_batch(0, entry.shapes.batch);
     let mut oracle = PjrtOracle::new(&rt, entry, TrainMode::Lora).unwrap();
     oracle.set_batch(&batch).unwrap();

@@ -10,7 +10,7 @@ use zo_ldsd::runtime::Runtime;
 use zo_ldsd::train::{EstimatorKind, ProbeDispatch, ProbeStorage, SamplerKind, TrainConfig, Trainer};
 
 fn mini_corpus() -> Corpus {
-    Corpus::new(CorpusSpec::default_mini())
+    Corpus::new(CorpusSpec::default_mini()).unwrap()
 }
 
 fn have_artifacts() -> bool {
@@ -67,6 +67,7 @@ fn central_and_bestofk_consume_identical_budget() {
         seed: 5,
         probe_dispatch: ProbeDispatch::Batched,
         probe_storage: ProbeStorage::Auto,
+        checkpoint: Default::default(),
     };
     let oracle = || QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
 
@@ -122,6 +123,7 @@ fn learnable_policy_beats_frozen_on_persistent_direction_quadratic() {
             seed,
             probe_dispatch: ProbeDispatch::Batched,
             probe_storage: ProbeStorage::Auto,
+            checkpoint: Default::default(),
         };
         let oracle =
             QuadraticOracle::new(vec![1.0; d], center.clone(), vec![0.0; d]);
@@ -212,7 +214,7 @@ fn pjrt_short_lora_run_trains() {
     let rt = Runtime::new("artifacts").unwrap();
     let manifest = Manifest::load("artifacts").unwrap();
     let entry = manifest.model("roberta_mini").unwrap();
-    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone());
+    let corpus = Corpus::new(manifest.corpus("roberta_mini").unwrap().clone()).unwrap();
     let oracle = PjrtOracle::new(&rt, entry, TrainMode::Lora).unwrap();
     let evaluator = Evaluator::new(&rt, entry, TrainMode::Lora).unwrap();
 
