@@ -7,13 +7,37 @@
 #                        storage forced for every Trainer (CI parity)
 #   make test-resume     the interrupt-resume suite under both probe-
 #                        storage modes (CI parity for the resume-smoke job)
+#   make test-mlp        the MLP oracle integration suite under both
+#                        probe-storage modes (CI parity)
 #   make lint            clippy, warnings fatal (CI parity; allow-list in ci.yml)
+#   make fmt             rustfmt check only (CI parity)
 #   make doc             API docs, warnings fatal (CI parity)
 #   make bench           regenerate tables/figures from the artifacts
 #   make bench-smoke     compile + run ONE iteration of every bench (CI rot
-#                        guard; includes one mem/* probe-storage row)
+#                        guard; includes one mem/* probe-storage row) and
+#                        serialize the perf_hotpath rows to $(BENCH_OUT)
+#   make bench-baseline  regenerate the committed bench baseline (same
+#                        smoke mode as the gate compares against, so like
+#                        compares with like); run on the reference runner
+#                        and commit $(BENCH_BASELINE)
+#   make bench-gate      diff $(BENCH_OUT) against $(BENCH_BASELINE) with
+#                        +/-20% thresholds on the loss_k / axpy_k /
+#                        probe_combine / mlp / mem rows (ns/op + peak
+#                        bytes, separately tunable)
 
-.PHONY: artifacts build test test-streamed test-resume lint doc bench bench-smoke clean
+.PHONY: artifacts build test test-streamed test-resume test-mlp lint fmt doc \
+        bench bench-smoke bench-baseline bench-gate clean
+
+# Bench-regression gate knobs (DESIGN.md §12).  BENCH_JSON must reach the
+# bench binary as an absolute path: cargo runs benches with cwd = the
+# package root (rust/), while bench-gate and CI read from the repo root.
+BENCH_OUT ?= BENCH_current.json
+BENCH_BASELINE ?= rust/benches/BENCH_baseline.json
+BENCH_GATES ?= loss_k,axpy_k,probe_combine,mlp,mem/
+BENCH_THRESHOLD ?= 0.20
+BENCH_BYTES_THRESHOLD ?= 0.20
+BENCH_OUT_ABS = $(abspath $(BENCH_OUT))
+BENCH_BASELINE_ABS = $(abspath $(BENCH_BASELINE))
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -31,12 +55,19 @@ test-resume: build
 	ZO_PROBE_STORAGE=materialized cargo test -q --test checkpoint_resume
 	ZO_PROBE_STORAGE=streamed cargo test -q --test checkpoint_resume
 
+test-mlp: build
+	ZO_PROBE_STORAGE=materialized cargo test -q --test mlp_train
+	ZO_PROBE_STORAGE=streamed cargo test -q --test mlp_train
+
 lint:
 	cargo clippy --all-targets -- -D warnings \
 	  -A clippy::needless-range-loop -A clippy::manual-div-ceil \
 	  -A clippy::too-many-arguments -A clippy::new-without-default \
 	  -A clippy::manual-memcpy -A clippy::comparison-chain \
 	  -A clippy::type-complexity
+
+fmt:
+	cargo fmt --all -- --check
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
@@ -46,10 +77,22 @@ bench:
 
 # smoke mode clamps every bench to one iteration; perf_hotpath keeps one
 # mem/bestofk5_d1M_{materialized,streamed} pair in smoke so the probe-
-# storage rows cannot rot
+# storage rows cannot rot.  The second invocation re-runs perf_hotpath
+# with BENCH_JSON set so the regression gate has rows to diff.
 bench-smoke:
 	cargo bench -- --smoke
+	BENCH_JSON=$(BENCH_OUT_ABS) cargo bench --bench perf_hotpath -- --smoke
+
+bench-baseline:
+	BENCH_JSON=$(BENCH_BASELINE_ABS) cargo bench --bench perf_hotpath -- --smoke
+
+bench-gate: bench-smoke
+	cargo run --release --bin bench-gate -- \
+	  --baseline $(BENCH_BASELINE_ABS) --current $(BENCH_OUT_ABS) \
+	  --threshold $(BENCH_THRESHOLD) --bytes-threshold $(BENCH_BYTES_THRESHOLD) \
+	  --gate $(BENCH_GATES)
 
 clean:
 	cargo clean
 	rm -rf artifacts
+	rm -f BENCH_current.json

@@ -50,6 +50,7 @@ fn main() -> Result<()> {
         probe_dispatch: None,
         probe_storage: None,
         checkpoint: None,
+        oracle: zo_ldsd::coordinator::OracleSpec::Pjrt,
     };
 
     if sweep == "k" || sweep == "all" {

@@ -1,0 +1,81 @@
+//! End-to-end forward-only MLP fine-tuning (DESIGN.md §12): train the MLP
+//! classifier on the synthetic corpus with Algorithm 2 (LDSD best-of-K)
+//! under streamed probes and epoch-shuffled minibatches, logging the loss
+//! curve and test accuracy.  No artifacts or PJRT runtime needed.
+//!
+//!     cargo run --release --example mlp_e2e [-- --hidden 64,64 --budget 6000]
+
+use anyhow::Result;
+
+use zo_ldsd::cli::Args;
+use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::eval::{AccuracyEval, MlpEvaluator};
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::model::{Activation, MlpSpec};
+use zo_ldsd::oracle::{MlpOracle, Oracle};
+use zo_ldsd::train::{ProbeStorage, ShuffleSpec, TrainConfig, Trainer};
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let hidden = MlpSpec::parse_hidden(args.get_or("hidden", "64,64"))?;
+    let activation = Activation::parse(args.get_or("activation", "tanh"))?;
+    let in_dim = args.get_usize("in-dim", 128)?;
+    let budget = args.get_u64("budget", 6000)?;
+    let seed = args.get_u64("seed", 0)?;
+    let n_train = args.get_u64("train-examples", 4096)?;
+    let threads = args.get_usize("threads", 0)?;
+
+    let corpus_spec = CorpusSpec::default_mini();
+    let spec = MlpSpec::new(in_dim, hidden, corpus_spec.n_classes as usize, activation)?;
+    let corpus = Corpus::new(corpus_spec)?;
+    let oracle = MlpOracle::from_seed(spec.clone(), seed);
+    let evaluator = MlpEvaluator::new(spec.clone(), 32);
+
+    let mut cfg = TrainConfig::algorithm2("zo_sgd", 0.02, budget);
+    cfg.seed = seed;
+    cfg.eval_every = (budget / 6).max(1);
+    cfg.probe_storage = ProbeStorage::Streamed;
+    // --train-examples 0 keeps the sequential stream (same convention as
+    // the CLI)
+    if n_train > 0 {
+        cfg.shuffle = Some(ShuffleSpec { n_train });
+    }
+
+    let exec = if threads == 0 {
+        ExecContext::from_env()
+    } else {
+        ExecContext::new(threads)
+    };
+    let ordering = if n_train > 0 {
+        format!("epoch-shuffled over {n_train} examples")
+    } else {
+        "sequential stream".to_string()
+    };
+    println!(
+        "mlp e2e: {} (d = {}, in_dim {in_dim}), budget {budget} forwards, {} threads, \
+         {ordering}",
+        spec.label(),
+        spec.dim(),
+        exec.threads()
+    );
+
+    let pre_acc = evaluator.accuracy(oracle.params(), &corpus, 8)?;
+    println!("pre-training accuracy: {pre_acc:.4}");
+
+    let mut trainer = Trainer::with_exec(cfg, oracle, corpus, exec)?;
+    let out = trainer.run(Some(&evaluator))?;
+
+    let stride = (out.loss_curve.len() / 20).max(1);
+    println!("loss curve (best-probe training loss):");
+    for (calls, loss) in out.loss_curve.iter().step_by(stride) {
+        println!("  calls {calls:>7}  loss {loss:.4}");
+    }
+    for (calls, acc) in &out.acc_curve {
+        println!("  calls {calls:>7}  accuracy {acc:.4}");
+    }
+    println!(
+        "mlp e2e done: {} steps, {} forwards, acc {pre_acc:.4} -> {:.4} ({:.1}s)",
+        out.steps, out.oracle_calls, out.final_accuracy, out.wall_seconds
+    );
+    Ok(())
+}

@@ -65,6 +65,7 @@ fn main() -> Result<()> {
                         probe_dispatch: None,
                         probe_storage: None,
                         checkpoint: None,
+                        oracle: zo_ldsd::coordinator::OracleSpec::Pjrt,
                     });
                 }
             }

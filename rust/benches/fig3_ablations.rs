@@ -47,6 +47,7 @@ fn main() {
         probe_dispatch: None,
         probe_storage: None,
         checkpoint: None,
+        oracle: zo_ldsd::coordinator::OracleSpec::Pjrt,
     };
     if filter.is_empty() || filter == "k" {
         for k in [1usize, 5, 10] {

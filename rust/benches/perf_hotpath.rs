@@ -23,6 +23,9 @@ use zo_ldsd::tensor::{
 fn main() {
     let mut b = Bencher::new();
     b.max_seconds = 3.0;
+    // shared mini corpus for the host-side (artifact-free) workloads
+    let corpus_mini =
+        Corpus::new(zo_ldsd::data::CorpusSpec::default_mini()).unwrap();
 
     // --- pure-rust O(d) kernels ------------------------------------------
     let d = 1_321_986usize; // roberta_mini d_ft
@@ -189,6 +192,8 @@ fn main() {
                     b.bench(&name, (k + 1) as f64, || {
                         est.estimate(&mut oracle, &mut g).unwrap();
                     });
+                    // deterministic metric for the bench-regression gate
+                    b.annotate_peak_bytes(&name, probe_tracker().peak());
                     mem_table.row(vec![
                         format!("bestofk{k}_d{dlabel}"),
                         storage.label().to_string(),
@@ -243,6 +248,76 @@ fn main() {
                     },
                 );
             }
+        }
+        b.max_seconds = saved_max_seconds;
+    }
+
+    // --- MLP forward-only oracle (the first network workload) --------------
+    // `mlp/*` rows: the vectorized K-probe forward at 1 and 8 threads, a
+    // full streamed best-of-K estimation step (LDSD policy + seed
+    // replay), and the single-forward baseline.  All gated by the CI
+    // bench-regression job alongside loss_k/axpy_k/probe_combine.
+    {
+        use zo_ldsd::metrics::probe_tracker;
+        use zo_ldsd::model::{Activation, MlpSpec};
+        use zo_ldsd::oracle::MlpOracle;
+        use zo_ldsd::probe::ProbeStorage;
+
+        let saved_max_seconds = b.max_seconds;
+        b.max_seconds = 1.5;
+        let spec = MlpSpec::new(128, vec![64, 64], 2, Activation::Tanh).unwrap();
+        let dm = spec.dim();
+        let batch = corpus_mini.train_batch(0, 8);
+        let mut rng = zo_ldsd::rng::Rng::new(3);
+        for k in [5usize, 10] {
+            let mut dirs = vec![0.0f32; k * dm];
+            rng.fill_normal(&mut dirs);
+            for threads in [1usize, 8] {
+                let ctx = ExecContext::new(threads);
+                let mut oracle = MlpOracle::from_seed(spec.clone(), 7);
+                oracle.set_exec(ctx);
+                oracle.set_batch(&batch).unwrap();
+                b.bench(
+                    &format!("mlp/loss_k_h64x64_k{k}_t{threads}"),
+                    k as f64,
+                    || {
+                        std::hint::black_box(oracle.loss_k(&dirs, k, 1e-3).unwrap());
+                    },
+                );
+            }
+        }
+        // one full best-of-K estimation step on streamed (seed-replay)
+        // probes: the acceptance workload of DESIGN.md §12
+        {
+            let k = 5usize;
+            let ctx = ExecContext::new(4);
+            let mut est = LdsdEstimator::with_storage(
+                LdsdSampler::new(dm, 7, LdsdConfig::default()),
+                1e-3,
+                k,
+                ProbeStorage::Streamed,
+            )
+            .unwrap();
+            est.set_exec(ctx.clone());
+            let mut oracle = MlpOracle::from_seed(spec.clone(), 7);
+            oracle.set_exec(ctx);
+            oracle.set_batch(&batch).unwrap();
+            let mut g = vec![0.0f32; dm];
+            let name = "mlp/estimate_bestofk5_streamed_t4";
+            probe_tracker().reset();
+            b.bench(name, (k + 1) as f64, || {
+                est.estimate(&mut oracle, &mut g).unwrap();
+            });
+            b.annotate_peak_bytes(name, probe_tracker().peak());
+        }
+        {
+            let mut dir1 = vec![0.0f32; dm];
+            rng.fill_normal(&mut dir1);
+            let mut oracle = MlpOracle::from_seed(spec.clone(), 7);
+            oracle.set_batch(&batch).unwrap();
+            b.bench("mlp/loss_dir_1fwd", 1.0, || {
+                std::hint::black_box(oracle.loss_dir(&dir1, 1e-3).unwrap());
+            });
         }
         b.max_seconds = saved_max_seconds;
     }

@@ -46,6 +46,7 @@ fn main() {
                 probe_dispatch: None,
                 probe_storage: None,
                 checkpoint: None,
+                oracle: zo_ldsd::coordinator::OracleSpec::Pjrt,
             });
         }
     }

@@ -8,11 +8,28 @@
 //! benchmark to exactly one untimed-warmup-free iteration: `make
 //! bench-smoke` uses it so CI compiles and executes every bench without
 //! paying for stable timings — the benches cannot silently rot.
+//!
+//! JSON serialization (`BENCH_JSON=<path>`): [`Bencher::finish`] writes
+//! every timed row (ns/op plus any annotated peak bytes) to the given
+//! file; [`regression`] parses those files and diffs a current run
+//! against the committed baseline within a threshold — the CI
+//! bench-regression gate (see `make bench-gate` and the `bench-gate`
+//! binary).
+
+pub mod regression;
 
 use std::time::Instant;
 
 use crate::metrics::Summary;
 use crate::report::Table;
+
+/// One serialized bench row: the payload of the `BENCH_JSON` file the
+/// regression gate consumes.
+struct JsonRow {
+    name: String,
+    ns_per_op: f64,
+    peak_bytes: Option<usize>,
+}
 
 /// Times closures and accumulates a result table.
 pub struct Bencher {
@@ -26,6 +43,7 @@ pub struct Bencher {
     pub max_seconds: f64,
     filter: Option<String>,
     table: Table,
+    json_rows: Vec<JsonRow>,
 }
 
 impl Default for Bencher {
@@ -54,6 +72,7 @@ impl Bencher {
                 "bench results",
                 &["name", "iters", "mean", "p50", "p95", "throughput"],
             ),
+            json_rows: Vec::new(),
         };
         if smoke {
             b.warmup_iters = 0;
@@ -104,6 +123,11 @@ impl Bencher {
             return Some(s);
         }
         let throughput = if s.mean > 0.0 { work_units / s.mean } else { 0.0 };
+        self.json_rows.push(JsonRow {
+            name: name.to_string(),
+            ns_per_op: s.mean * 1e9,
+            peak_bytes: None,
+        });
         self.table.row(vec![
             name.to_string(),
             format!("{}", s.n),
@@ -115,11 +139,53 @@ impl Bencher {
         Some(s)
     }
 
-    /// Print the accumulated table (call once at the end of main).
+    /// Attach measured peak bytes to the named row (latest occurrence):
+    /// the regression gate diffs bytes with the same threshold as
+    /// timings, and — unlike timings — peaks are deterministic, so they
+    /// gate exactly.
+    pub fn annotate_peak_bytes(&mut self, name: &str, bytes: usize) {
+        if let Some(row) = self.json_rows.iter_mut().rev().find(|r| r.name == name) {
+            row.peak_bytes = Some(bytes);
+        }
+    }
+
+    /// Print the accumulated table (call once at the end of main) and,
+    /// when `BENCH_JSON=<path>` is set, serialize the rows for the
+    /// bench-regression gate ([`regression`]).
     pub fn finish(&self) {
         if !self.table.rows.is_empty() {
             self.table.print();
         }
+        if let Ok(path) = std::env::var("BENCH_JSON") {
+            if !path.is_empty() && !self.json_rows.is_empty() {
+                if let Err(e) = self.write_json(std::path::Path::new(&path)) {
+                    eprintln!("bench: failed writing {path}: {e:#}");
+                } else {
+                    eprintln!("bench: wrote {} rows to {path}", self.json_rows.len());
+                }
+            }
+        }
+    }
+
+    fn write_json(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use crate::jsonio::Json;
+        use std::collections::BTreeMap;
+        let rows: Vec<Json> = self
+            .json_rows
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(r.name.clone()));
+                m.insert("ns_per_op".to_string(), Json::Num(r.ns_per_op));
+                if let Some(b) = r.peak_bytes {
+                    m.insert("peak_bytes".to_string(), Json::Num(b as f64));
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("rows".to_string(), Json::Arr(rows));
+        crate::report::write_json(path, &Json::Obj(root))
     }
 }
 
@@ -151,6 +217,26 @@ mod tests {
         if let Some(s) = s {
             assert!(s.n >= 3);
             assert!(count >= 3 + b.warmup_iters);
+        }
+    }
+
+    #[test]
+    fn json_rows_record_timing_and_annotated_bytes() {
+        let mut b = Bencher::new();
+        b.max_seconds = 0.01;
+        b.min_iters = 1;
+        b.warmup_iters = 0;
+        let r = b.bench("gate/row", 1.0, || {});
+        // the argv-derived filter may disable the row under `cargo test`
+        if r.is_some() {
+            let row = b.json_rows.last().unwrap();
+            assert_eq!(row.name, "gate/row");
+            assert!(row.ns_per_op >= 0.0);
+            assert_eq!(row.peak_bytes, None);
+            b.annotate_peak_bytes("gate/row", 1234);
+            assert_eq!(b.json_rows.last().unwrap().peak_bytes, Some(1234));
+            // annotating an unknown row is a no-op
+            b.annotate_peak_bytes("gate/absent", 1);
         }
     }
 

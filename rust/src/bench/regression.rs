@@ -1,0 +1,234 @@
+//! Benchmark-regression gate: parse the `BENCH_*.json` row files written
+//! by [`crate::bench::Bencher::finish`] and diff a current run against
+//! the committed baseline within a fractional threshold.
+//!
+//! The gate is *one-sided*: only getting slower (or allocating more peak
+//! probe-state bytes) than `baseline * (1 + threshold)` fails; getting
+//! faster silently passes (and is the cue to re-run `make
+//! bench-baseline`).  Timings and bytes gate with *separate* thresholds:
+//! peak bytes are deterministic (exact allocation sizes), so they can be
+//! held tight, while smoke-mode single-iteration timings are noisy and
+//! need headroom.  A gated baseline row missing from the current run
+//! also fails — renaming a row must update the baseline, not silently
+//! drop coverage.  The `bench-gate` binary wraps this for the CI job
+//! (`.github/workflows/ci.yml`) and `make bench-gate`.
+
+use anyhow::{anyhow, Result};
+
+use crate::jsonio::{parse, Json};
+
+/// One benchmark row as serialized under the `rows` key of a
+/// `BENCH_*.json` file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRow {
+    /// Bench row name (e.g. "scale/loss_k_closed_form_k5_d1M_t4").
+    pub name: String,
+    /// Mean nanoseconds per timed iteration.
+    pub ns_per_op: f64,
+    /// Measured peak probe-state bytes, when the bench annotated one.
+    pub peak_bytes: Option<f64>,
+}
+
+/// Parse a bench JSON file's text into rows.
+pub fn parse_rows(text: &str) -> Result<Vec<BenchRow>> {
+    let root = parse(text).map_err(|e| anyhow!("bench json: {e}"))?;
+    let rows = root
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("bench json: missing 'rows' array"))?;
+    rows.iter()
+        .map(|r| {
+            Ok(BenchRow {
+                name: r
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("bench json: row without a name"))?
+                    .to_string(),
+                ns_per_op: r
+                    .get("ns_per_op")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("bench json: row without ns_per_op"))?,
+                peak_bytes: r.get("peak_bytes").and_then(Json::as_f64),
+            })
+        })
+        .collect()
+}
+
+/// One gated comparison that exceeded the threshold.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    /// The offending row name.
+    pub name: String,
+    /// Which metric regressed ("ns_per_op" | "peak_bytes").
+    pub metric: &'static str,
+    /// The committed baseline value.
+    pub baseline: f64,
+    /// The current run's value.
+    pub current: f64,
+    /// current / baseline.
+    pub ratio: f64,
+}
+
+/// Outcome of diffing a current bench run against the baseline.
+#[derive(Clone, Debug, Default)]
+pub struct GateReport {
+    /// Gated rows found in both files and compared.
+    pub compared: usize,
+    /// Gated baseline rows with no counterpart in the current run.
+    pub missing: Vec<String>,
+    /// Comparisons beyond the threshold (slower/larger than baseline).
+    pub regressions: Vec<Regression>,
+}
+
+impl GateReport {
+    /// True when nothing regressed and no gated row went missing.
+    pub fn is_green(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+}
+
+/// Diff `current` against `baseline`: every baseline row whose name
+/// contains one of the `gates` substrings must exist in `current` and
+/// stay within `ns_threshold` (fractional: 0.2 = +20%) on ns/op — and
+/// within `bytes_threshold` on peak bytes when both runs recorded one.
+/// Non-gated rows are ignored.
+pub fn gate(
+    baseline: &[BenchRow],
+    current: &[BenchRow],
+    ns_threshold: f64,
+    bytes_threshold: f64,
+    gates: &[&str],
+) -> GateReport {
+    let mut report = GateReport::default();
+    for b in baseline {
+        if !gates.iter().any(|g| b.name.contains(g)) {
+            continue;
+        }
+        let cur = match current.iter().find(|c| c.name == b.name) {
+            Some(c) => c,
+            None => {
+                report.missing.push(b.name.clone());
+                continue;
+            }
+        };
+        report.compared += 1;
+        let metrics = [
+            ("ns_per_op", Some(b.ns_per_op), Some(cur.ns_per_op), ns_threshold),
+            ("peak_bytes", b.peak_bytes, cur.peak_bytes, bytes_threshold),
+        ];
+        for (metric, bv, cv, threshold) in metrics {
+            let (bv, cv) = match (bv, cv) {
+                (Some(bv), Some(cv)) => (bv, cv),
+                _ => continue,
+            };
+            if bv <= 0.0 {
+                // a zero/negative baseline cannot anchor a ratio; skip
+                continue;
+            }
+            let ratio = cv / bv;
+            if ratio > 1.0 + threshold {
+                report.regressions.push(Regression {
+                    name: b.name.clone(),
+                    metric,
+                    baseline: bv,
+                    current: cv,
+                    ratio,
+                });
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(name: &str, ns: f64, bytes: Option<f64>) -> BenchRow {
+        BenchRow { name: name.into(), ns_per_op: ns, peak_bytes: bytes }
+    }
+
+    #[test]
+    fn parse_roundtrips_bencher_format() {
+        let text = r#"{
+          "rows": [
+            {"name": "scale/loss_k_k5", "ns_per_op": 1200.5},
+            {"name": "mem/bestofk5", "ns_per_op": 3.0, "peak_bytes": 4096}
+          ]
+        }"#;
+        let rows = parse_rows(text).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].name, "scale/loss_k_k5");
+        assert_eq!(rows[0].peak_bytes, None);
+        assert_eq!(rows[1].peak_bytes, Some(4096.0));
+        assert!(parse_rows("{}").is_err());
+        assert!(parse_rows(r#"{"rows": [{"ns_per_op": 1}]}"#).is_err());
+    }
+
+    #[test]
+    fn gate_passes_within_threshold_and_on_improvement() {
+        let base = [row("scale/loss_k", 1000.0, None), row("mlp/loss_k", 500.0, None)];
+        let cur = [
+            row("scale/loss_k", 1150.0, None), // +15% < +20%
+            row("mlp/loss_k", 200.0, None),    // faster: never fails
+        ];
+        let rep = gate(&base, &cur, 0.20, 0.20, &["loss_k", "mlp"]);
+        assert_eq!(rep.compared, 2);
+        assert!(rep.is_green(), "{rep:?}");
+    }
+
+    #[test]
+    fn gate_fails_on_regression_missing_row_and_byte_growth() {
+        let base = [
+            row("scale/loss_k", 1000.0, None),
+            row("mem/mlp_peak", 100.0, Some(1000.0)),
+            row("scale/axpy_k", 10.0, None),
+        ];
+        let cur = [
+            row("scale/loss_k", 1300.0, None),      // +30% ns: fails
+            row("mem/mlp_peak", 100.0, Some(1500.0)), // +50% bytes: fails
+                                                      // axpy_k missing: fails
+        ];
+        let rep = gate(&base, &cur, 0.20, 0.20, &["loss_k", "axpy_k", "mlp"]);
+        assert!(!rep.is_green());
+        assert_eq!(rep.missing, vec!["scale/axpy_k".to_string()]);
+        assert_eq!(rep.regressions.len(), 2);
+        let metrics: Vec<&str> = rep.regressions.iter().map(|r| r.metric).collect();
+        assert!(metrics.contains(&"ns_per_op"));
+        assert!(metrics.contains(&"peak_bytes"));
+        let r0 = rep
+            .regressions
+            .iter()
+            .find(|r| r.metric == "ns_per_op")
+            .unwrap();
+        assert!((r0.ratio - 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_gated_rows_are_ignored() {
+        let base = [row("rng/normal", 100.0, None)];
+        let cur = [row("rng/normal", 900.0, None)];
+        let rep = gate(&base, &cur, 0.20, 0.20, &["loss_k", "axpy_k", "probe_combine", "mlp"]);
+        assert_eq!(rep.compared, 0);
+        assert!(rep.is_green());
+    }
+
+    #[test]
+    fn thresholds_apply_per_metric() {
+        // +30% ns but a loose ns threshold passes, while the same +30%
+        // on deterministic bytes under a tight bytes threshold fails
+        let base = [row("mem/mlp_peak", 100.0, Some(1000.0))];
+        let cur = [row("mem/mlp_peak", 130.0, Some(1300.0))];
+        let rep = gate(&base, &cur, 0.50, 0.05, &["mem/"]);
+        assert_eq!(rep.regressions.len(), 1, "{rep:?}");
+        assert_eq!(rep.regressions[0].metric, "peak_bytes");
+    }
+
+    #[test]
+    fn byte_gate_skipped_when_either_side_lacks_bytes() {
+        let base = [row("mlp/loss_k", 100.0, Some(100.0))];
+        let cur = [row("mlp/loss_k", 100.0, None)];
+        let rep = gate(&base, &cur, 0.20, 0.20, &["mlp"]);
+        assert!(rep.is_green(), "bytes gate needs both sides: {rep:?}");
+    }
+}

@@ -1,0 +1,97 @@
+//! bench-gate: the CI benchmark-regression gate.
+//!
+//! Diffs a current `BENCH_*.json` (written by `make bench-smoke` via
+//! `BENCH_JSON=<path>`) against the committed baseline and fails —
+//! nonzero exit — when any gated row got slower (or grew its peak
+//! probe-state bytes) beyond the threshold, or disappeared.
+//!
+//!     bench-gate --baseline rust/benches/BENCH_baseline.json \
+//!                --current BENCH_current.json \
+//!                [--threshold 0.20] [--bytes-threshold 0.20]
+//!                [--gate loss_k,axpy_k,probe_combine,mlp,mem/]
+//!
+//! `--threshold` bounds the (noisy, hardware-dependent) ns/op ratios;
+//! `--bytes-threshold` bounds the deterministic peak-byte ratios and can
+//! be held much tighter.
+//!
+//! Regenerate the baseline on the reference runner with
+//! `make bench-baseline` and commit it (see DESIGN.md §12).
+
+use anyhow::{bail, Context, Result};
+
+use zo_ldsd::bench::regression::{gate, parse_rows};
+use zo_ldsd::cli::Args;
+use zo_ldsd::report::Table;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("bench-gate: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    args.reject_unknown(
+        &["baseline", "current", "threshold", "bytes-threshold", "gate"],
+        &[],
+    )?;
+    let baseline_path = args.require("baseline")?.to_string();
+    let current_path = args.require("current")?.to_string();
+    let threshold = args.get_f64("threshold", 0.20)?;
+    let bytes_threshold = args.get_f64("bytes-threshold", threshold)?;
+    let gates_raw = args
+        .get_or("gate", "loss_k,axpy_k,probe_combine,mlp,mem/")
+        .to_string();
+    let gates: Vec<&str> = gates_raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+
+    let baseline = parse_rows(
+        &std::fs::read_to_string(&baseline_path)
+            .with_context(|| format!("reading baseline {baseline_path}"))?,
+    )?;
+    let current = parse_rows(
+        &std::fs::read_to_string(&current_path)
+            .with_context(|| format!("reading current {current_path}"))?,
+    )?;
+
+    let report = gate(&baseline, &current, threshold, bytes_threshold, &gates);
+    println!(
+        "bench-gate: {} gated row(s) compared against {baseline_path} \
+         (ns +{:.0}%, bytes +{:.0}%, gates: {gates_raw})",
+        report.compared,
+        threshold * 100.0,
+        bytes_threshold * 100.0
+    );
+    for m in &report.missing {
+        println!("  MISSING from current run: {m}");
+    }
+    if !report.regressions.is_empty() {
+        let mut t = Table::new(
+            "bench regressions",
+            &["row", "metric", "baseline", "current", "ratio"],
+        );
+        for r in &report.regressions {
+            t.row(vec![
+                r.name.clone(),
+                r.metric.to_string(),
+                format!("{:.1}", r.baseline),
+                format!("{:.1}", r.current),
+                format!("{:.2}x", r.ratio),
+            ]);
+        }
+        t.print();
+    }
+    if !report.is_green() {
+        bail!(
+            "{} regression(s), {} missing gated row(s)",
+            report.regressions.len(),
+            report.missing.len()
+        );
+    }
+    println!("bench-gate: green");
+    Ok(())
+}

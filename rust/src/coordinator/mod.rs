@@ -11,6 +11,12 @@
 //! [`ExecContext::partition`]ed shard-level context so total concurrency
 //! stays at the caller's budget instead of multiplying against it.
 //!
+//! Trials choose their workload through [`OracleSpec`]: the PJRT
+//! transformer (needs artifacts + runtime) or the forward-only MLP
+//! classifier (host-side, artifact-free; DESIGN.md §12).  Grids may mix
+//! both — runtime/manifest failures only fail the trials that needed
+//! them.
+//!
 //! Grids are elastic (DESIGN.md §11): with a checkpoint directory
 //! configured, every trial snapshots into its own subdirectory, a killed
 //! grid resumed with [`crate::snapshot::CheckpointConfig::resume`] skips
@@ -20,23 +26,54 @@
 use anyhow::{anyhow, Result};
 
 use crate::config::{Manifest, TrainMode};
+use crate::data::corpus::CorpusSpec;
 use crate::data::Corpus;
-use crate::eval::Evaluator;
+use crate::eval::{AccuracyEval, Evaluator, MlpEvaluator};
 use crate::exec::ExecContext;
 use crate::metrics::probe_tracker;
-use crate::oracle::PjrtOracle;
+use crate::model::mlp::{Activation, MlpSpec};
+use crate::oracle::{MlpOracle, Oracle, PjrtOracle};
 use crate::runtime::Runtime;
 use crate::snapshot::{self, CheckpointConfig};
 use crate::train::{ProbeDispatch, ProbeStorage, TrainConfig, TrainOutcome, Trainer};
+
+/// The forward-only MLP trial configuration: architecture, featurizer
+/// width, the corpus it trains on, and the parameter-init seed.
+#[derive(Clone, Debug)]
+pub struct MlpTrial {
+    /// Hidden-layer widths (`--hidden 64,64`).
+    pub hidden: Vec<usize>,
+    /// Hidden activation (`--activation tanh|relu`).
+    pub activation: Activation,
+    /// Hashed bag-of-token feature width (`--in-dim`).
+    pub in_dim: usize,
+    /// The corpus the oracle trains and evaluates on.
+    pub corpus: CorpusSpec,
+    /// Seed for the deterministic parameter init.
+    pub init_seed: u64,
+    /// Test-batch size for accuracy evaluation.
+    pub eval_batch: usize,
+}
+
+/// Which oracle a trial runs against.
+#[derive(Clone, Debug, Default)]
+pub enum OracleSpec {
+    /// The AOT-compiled transformer via PJRT (needs `make artifacts` and
+    /// a live runtime).
+    #[default]
+    Pjrt,
+    /// The forward-only MLP classifier — host-side, artifact-free.
+    Mlp(MlpTrial),
+}
 
 /// One training run to schedule.
 #[derive(Clone, Debug)]
 pub struct TrialSpec {
     /// Stable identifier used to match results back to specs.
     pub id: String,
-    /// Manifest model name.
+    /// Manifest model name (PJRT trials; the MLP oracle ignores it).
     pub model: String,
-    /// Full fine-tuning or LoRA.
+    /// Full fine-tuning or LoRA (PJRT trials; the MLP oracle ignores it).
     pub mode: TrainMode,
     /// The training-run configuration.
     pub config: TrainConfig,
@@ -57,6 +94,9 @@ pub struct TrialSpec {
     /// before the trainer sees it, so trials never clobber each other's
     /// snapshots.
     pub checkpoint: Option<CheckpointConfig>,
+    /// The workload this trial evaluates ([`OracleSpec::Pjrt`] by
+    /// default).
+    pub oracle: OracleSpec,
 }
 
 /// Outcome of one scheduled trial.
@@ -96,7 +136,18 @@ pub fn run_trial(
     rt: &Runtime,
     exec: &ExecContext,
 ) -> Result<TrialResult> {
-    run_trial_measured(artifact_dir, manifest, spec, rt, exec, true)
+    run_trial_measured(artifact_dir, Some(manifest), spec, Some(rt), exec, true)
+}
+
+/// [`run_trial`] for trials that need no PJRT artifacts or runtime (the
+/// MLP oracle path) — the CLI `train --oracle mlp` entry point.  A
+/// [`OracleSpec::Pjrt`] spec errors here.
+pub fn run_local_trial(
+    artifact_dir: &str,
+    spec: &TrialSpec,
+    exec: &ExecContext,
+) -> Result<TrialResult> {
+    run_trial_measured(artifact_dir, None, spec, None, exec, true)
 }
 
 /// [`run_trial`] with the per-trial probe-memory window made optional:
@@ -104,16 +155,16 @@ pub fn run_trial(
 /// tracker cannot attribute peaks to one of several live trials — and a
 /// mid-grid reset would clamp a neighbour's transient peak away) and let
 /// [`run_grid`] bracket the whole grid with one measurement window.
+/// `manifest`/`rt` are optional because artifact-free workloads (the MLP
+/// oracle) never touch them.
 fn run_trial_measured(
     artifact_dir: &str,
-    manifest: &Manifest,
+    manifest: Option<&Manifest>,
     spec: &TrialSpec,
-    rt: &Runtime,
+    rt: Option<&Runtime>,
     exec: &ExecContext,
     measure: bool,
 ) -> Result<TrialResult> {
-    let entry = manifest.model(&spec.model)?;
-    let corpus_spec = manifest.corpus(&spec.model)?.clone();
     let mut cfg = spec.config.clone();
     cfg.eval_batches = spec.eval_batches;
     if let Some(dispatch) = spec.probe_dispatch {
@@ -171,9 +222,50 @@ fn run_trial_measured(
             }
         }
     }
-    let oracle = PjrtOracle::new(rt, entry, spec.mode)?;
-    let evaluator = Evaluator::new(rt, entry, spec.mode)?;
-    let corpus = Corpus::new(corpus_spec)?;
+    let _ = artifact_dir;
+    match &spec.oracle {
+        OracleSpec::Pjrt => {
+            let rt = rt.ok_or_else(|| {
+                anyhow!("trial '{}' needs a PJRT runtime (artifacts missing?)", spec.id)
+            })?;
+            let manifest = manifest.ok_or_else(|| {
+                anyhow!("trial '{}' needs the artifact manifest", spec.id)
+            })?;
+            let entry = manifest.model(&spec.model)?;
+            let corpus = Corpus::new(manifest.corpus(&spec.model)?.clone())?;
+            let oracle = PjrtOracle::new(rt, entry, spec.mode)?;
+            let evaluator = Evaluator::new(rt, entry, spec.mode)?;
+            finish_trial(spec, cfg, oracle, &evaluator, corpus, exec, measure, &trial_ck_dir)
+        }
+        OracleSpec::Mlp(m) => {
+            let corpus = Corpus::new(m.corpus.clone())?;
+            let mspec = MlpSpec::new(
+                m.in_dim,
+                m.hidden.clone(),
+                m.corpus.n_classes as usize,
+                m.activation,
+            )?;
+            let oracle = MlpOracle::from_seed(mspec.clone(), m.init_seed);
+            let evaluator = MlpEvaluator::new(mspec, m.eval_batch);
+            finish_trial(spec, cfg, oracle, &evaluator, corpus, exec, measure, &trial_ck_dir)
+        }
+    }
+}
+
+/// The oracle-generic tail of one trial: build the trainer on the trial's
+/// shard-level context, run it against the evaluator, and persist the
+/// completed-outcome record.
+#[allow(clippy::too_many_arguments)]
+fn finish_trial<O: Oracle>(
+    spec: &TrialSpec,
+    cfg: TrainConfig,
+    oracle: O,
+    evaluator: &dyn AccuracyEval,
+    corpus: Corpus,
+    exec: &ExecContext,
+    measure: bool,
+    trial_ck_dir: &Option<std::path::PathBuf>,
+) -> Result<TrialResult> {
     // per-trial probe-memory window: without this reset, every trial
     // after the first reported the run's cumulative high-water mark
     // instead of its own peak
@@ -185,15 +277,14 @@ fn run_trial_measured(
     let (cfg_seed, cfg_budget) = (cfg.seed, cfg.budget);
     let mut trainer = Trainer::with_exec(cfg, oracle, corpus, exec.clone())?;
     let probe_storage = trainer.estimator().probes().label();
-    let outcome = trainer.run(Some(&evaluator))?;
+    let outcome = trainer.run(Some(evaluator))?;
     let probe_peak_bytes = if measure { probe_tracker().peak() } else { 0 };
     if outcome.completed {
-        if let Some(tdir) = &trial_ck_dir {
+        if let Some(tdir) = trial_ck_dir {
             // persist the finished trial so a resumed grid skips it
             snapshot::write_outcome(tdir, &outcome, probe_storage, cfg_seed, cfg_budget)?;
         }
     }
-    let _ = artifact_dir;
     Ok(TrialResult { spec_id: spec.id.clone(), outcome, probe_storage, probe_peak_bytes })
 }
 
@@ -211,9 +302,11 @@ fn storage_label_static(label: &str) -> &'static str {
 /// workers come from `exec`'s pool (reused across grids); each trial gets
 /// a partitioned shard-level context so the two levels share one worker
 /// budget.  Results come back in spec order; per-trial failures are
-/// isolated into `Err` strings.  Probe-memory peaks are exact per trial
-/// on one-worker grids and grid-wide (stamped on every result) otherwise
-/// — see [`TrialResult::probe_peak_bytes`].
+/// isolated into `Err` strings.  Runtime/manifest initialization failures
+/// only fail the PJRT trials that needed them — artifact-free (MLP)
+/// trials in the same grid still run.  Probe-memory peaks are exact per
+/// trial on one-worker grids and grid-wide (stamped on every result)
+/// otherwise — see [`TrialResult::probe_peak_bytes`].
 pub fn run_grid(
     artifact_dir: &str,
     specs: Vec<TrialSpec>,
@@ -239,34 +332,38 @@ pub fn run_grid(
     let dir = artifact_dir.to_string();
     let chunk_results = pool.scope_map(chunks, move |chunk| {
         let mut out: Vec<(usize, Result<TrialResult, String>)> = Vec::new();
-        // one runtime + manifest per worker thread
-        let rt = Runtime::new(&dir);
-        let manifest = Manifest::load(&dir);
-        match (&rt, &manifest) {
-            (Ok(rt), Ok(manifest)) => {
-                for (i, spec) in chunk {
-                    let r = run_trial_measured(
-                        &dir,
-                        manifest,
-                        &spec,
-                        rt,
-                        &shard_exec,
-                        per_trial_peaks,
-                    )
-                    .map_err(|e| format!("{e:#}"));
-                    out.push((i, r));
-                }
-            }
-            (Err(e), _) => {
-                for (i, _) in chunk {
-                    out.push((i, Err(format!("runtime init: {e:#}"))));
-                }
-            }
-            (_, Err(e)) => {
-                for (i, _) in chunk {
-                    out.push((i, Err(format!("manifest load: {e:#}"))));
-                }
-            }
+        // one runtime + manifest per worker thread, built only when the
+        // chunk actually contains a PJRT trial (an all-MLP grid never
+        // pays for client init or a manifest parse); failures are kept
+        // as errors so artifact-free trials in the chunk still run
+        let needs_runtime = chunk
+            .iter()
+            .any(|(_, s)| matches!(s.oracle, OracleSpec::Pjrt));
+        let rt = if needs_runtime {
+            Runtime::new(&dir)
+        } else {
+            Err(anyhow!("no PJRT trial in this chunk"))
+        };
+        let manifest = if needs_runtime {
+            Manifest::load(&dir)
+        } else {
+            Err(anyhow!("no PJRT trial in this chunk"))
+        };
+        for (i, spec) in chunk {
+            let r = match (&spec.oracle, &rt, &manifest) {
+                (OracleSpec::Pjrt, Err(e), _) => Err(format!("runtime init: {e:#}")),
+                (OracleSpec::Pjrt, _, Err(e)) => Err(format!("manifest load: {e:#}")),
+                _ => run_trial_measured(
+                    &dir,
+                    manifest.as_ref().ok(),
+                    &spec,
+                    rt.as_ref().ok(),
+                    &shard_exec,
+                    per_trial_peaks,
+                )
+                .map_err(|e| format!("{e:#}")),
+            };
+            out.push((i, r));
         }
         out
     });
@@ -363,5 +460,41 @@ mod tests {
         assert_eq!(agg.mean, None);
         assert_eq!(agg.std, None);
         assert_eq!(agg.display(), "n=0");
+    }
+
+    #[test]
+    fn mlp_trial_runs_without_artifacts() {
+        use crate::train::TrainConfig;
+        let mut cfg = TrainConfig::algorithm2("zo_sgd_plain", 0.05, 120);
+        cfg.eval_every = 0;
+        let spec = TrialSpec {
+            id: "mlp/test".into(),
+            model: "mlp".into(),
+            mode: TrainMode::Ft,
+            config: cfg,
+            eval_batches: 1,
+            probe_dispatch: None,
+            probe_storage: None,
+            checkpoint: None,
+            oracle: OracleSpec::Mlp(MlpTrial {
+                hidden: vec![8],
+                activation: Activation::Tanh,
+                in_dim: 16,
+                corpus: CorpusSpec::default_mini(),
+                init_seed: 1,
+                eval_batch: 8,
+            }),
+        };
+        let result =
+            run_local_trial("no-artifacts-dir", &spec, &ExecContext::new(2)).unwrap();
+        assert_eq!(result.spec_id, "mlp/test");
+        assert!(result.outcome.completed);
+        assert_eq!(result.outcome.oracle_calls, 120);
+        assert!((0.0..=1.0).contains(&result.outcome.final_accuracy));
+        // PJRT trials refuse the artifact-free entry point
+        let pjrt = TrialSpec { oracle: OracleSpec::Pjrt, ..spec };
+        let err = run_local_trial("no-artifacts-dir", &pjrt, &ExecContext::new(1))
+            .unwrap_err();
+        assert!(err.to_string().contains("PJRT"), "{err}");
     }
 }

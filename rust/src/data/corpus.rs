@@ -181,6 +181,21 @@ impl Corpus {
         out
     }
 
+    /// Batch of arbitrary example indices (the epoch-shuffled stream's
+    /// entry point; see [`crate::data::TrainStream`]).
+    pub fn batch_at_indices(&self, indices: &[u64]) -> Batch {
+        let mut out = Batch::zeros(indices.len(), self.spec.seq);
+        for (b, &idx) in indices.iter().enumerate() {
+            let ex = self.example(idx);
+            out.ids[b * self.spec.seq..(b + 1) * self.spec.seq]
+                .copy_from_slice(&ex.ids);
+            out.mask[b * self.spec.seq..(b + 1) * self.spec.seq]
+                .copy_from_slice(&ex.mask);
+            out.labels[b] = ex.label;
+        }
+        out
+    }
+
     /// Training batch for a step (stream of disjoint index windows).
     pub fn train_batch(&self, step: u64, batch: usize) -> Batch {
         self.batch(step * batch as u64, batch)

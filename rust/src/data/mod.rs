@@ -1,16 +1,36 @@
-//! Data substrate: synthetic corpora, LIBSVM parsing, batching.
+//! Data substrate: synthetic corpora, LIBSVM parsing, batching, streams.
 //!
 //! * [`corpus`] — the synthetic SST-2-like sentiment stream, byte-identical
 //!   to `python/compile/corpus.py` (golden-tested).
 //! * [`libsvm`] — LIBSVM text format parser plus the a9a-like generator
 //!   used by the Fig. 2 toy experiment.
-//! * [`Batch`] — the (ids, mask, labels) triple fed to the PJRT oracles.
+//! * [`stream`] — deterministic minibatch streams: the sequential
+//!   disjoint-window stream and the finite-epoch shuffled stream the MLP
+//!   workload trains on (batch-cursor addressed, snapshot-resumable).
+//! * [`Batch`] — the (ids, mask, labels) triple fed to the PJRT oracles,
+//!   optionally carrying dense [`Features`] rows for feature-vector
+//!   oracles (the MLP over LIBSVM-style inputs).
 
 pub mod corpus;
 pub mod libsvm;
+pub mod stream;
 
 pub use corpus::{Corpus, CorpusSpec, Example, TEST_INDEX_BASE};
 pub use libsvm::{parse_libsvm, LibsvmDataset, SyntheticRegression};
+pub use stream::{EpochShuffle, TrainStream};
+
+/// Dense per-example feature rows riding along a [`Batch`]: row-major
+/// `[batch, dim]`.  Token oracles ignore them; feature-vector oracles
+/// (the MLP) consume them directly instead of featurizing the token ids
+/// — the bridge that lets LIBSVM datasets flow through the same
+/// `set_batch` interface (DESIGN.md §12).
+#[derive(Clone, Debug)]
+pub struct Features {
+    /// Feature dimensionality per example.
+    pub dim: usize,
+    /// Row-major `[batch, dim]` feature values.
+    pub data: Vec<f32>,
+}
 
 /// One tokenized training/eval batch in the artifact ABI layout.
 #[derive(Clone, Debug)]
@@ -25,6 +45,9 @@ pub struct Batch {
     pub mask: Vec<f32>,
     /// `[batch]` i32 labels
     pub labels: Vec<i32>,
+    /// Optional dense feature rows for feature-vector oracles (None for
+    /// corpus token batches; the MLP featurizes the ids instead).
+    pub features: Option<Features>,
 }
 
 impl Batch {
@@ -36,6 +59,21 @@ impl Batch {
             ids: vec![0; batch * seq],
             mask: vec![0.0; batch * seq],
             labels: vec![0; batch],
+            features: None,
+        }
+    }
+
+    /// A feature-vector batch (LIBSVM-style input): dense rows + labels,
+    /// with empty token/mask planes (`seq = 0`).
+    pub fn from_features(dim: usize, data: Vec<f32>, labels: Vec<i32>) -> Self {
+        assert_eq!(data.len(), labels.len() * dim, "features must be batch x dim");
+        Self {
+            batch: labels.len(),
+            seq: 0,
+            ids: Vec::new(),
+            mask: Vec::new(),
+            labels,
+            features: Some(Features { dim, data }),
         }
     }
 }

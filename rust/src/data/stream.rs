@@ -1,0 +1,254 @@
+//! Deterministic minibatch streams over the corpus (DESIGN.md §12).
+//!
+//! The trainer consumes examples through a [`TrainStream`] addressed by a
+//! single **batch cursor** — the count of training examples consumed so
+//! far.  Two orderings exist:
+//!
+//! * **sequential** — example index = cursor (the original disjoint-window
+//!   stream; the PJRT workloads keep using this);
+//! * **epoch-shuffled** — a finite prefix of `n_train` corpus examples is
+//!   visited once per epoch in a per-epoch pseudorandom order.
+//!
+//! The shuffled order is a *pure function* of (seed, epoch, slot): a
+//! 4-round Feistel network over the smallest even-bit power-of-two domain
+//! covering `n_train`, cycle-walked back into `[0, n_train)`.  No
+//! permutation array is ever materialized — O(1) state, any position is
+//! addressable directly — which is what makes the stream trivially
+//! snapshot/resumable: the batch cursor in
+//! [`crate::train::RunProgress`] is the *only* data-pipeline state a
+//! checkpoint needs (DESIGN.md §12).
+
+use anyhow::{bail, Result};
+
+use crate::rng::GOLDEN_GAMMA;
+
+use super::corpus::TEST_INDEX_BASE;
+use super::{Batch, Corpus};
+
+/// SplitMix64 finalizer: a fixed 64-bit mixing permutation used as the
+/// Feistel round function.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Stateless per-epoch permutation of `[0, n)`: position `pos` in the
+/// global example stream maps to example `permute(pos / n, pos % n)`.
+/// Every epoch visits each of the `n` examples exactly once, in an order
+/// keyed by (seed, epoch).
+#[derive(Clone, Debug)]
+pub struct EpochShuffle {
+    n: u64,
+    seed: u64,
+    half_bits: u32,
+    half_mask: u64,
+}
+
+impl EpochShuffle {
+    /// Permutation over `[0, n)` keyed by `seed` (`n >= 1`).
+    pub fn new(n: u64, seed: u64) -> Result<Self> {
+        if n == 0 {
+            bail!("epoch shuffle: need at least one example");
+        }
+        // smallest even bit count whose power-of-two domain covers n
+        let mut bits = 64 - (n - 1).max(1).leading_zeros();
+        if bits < 2 {
+            bits = 2;
+        }
+        if bits % 2 == 1 {
+            bits += 1;
+        }
+        let half_bits = bits / 2;
+        Ok(Self { n, seed, half_bits, half_mask: (1u64 << half_bits) - 1 })
+    }
+
+    /// Examples per epoch.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// The example index at global stream position `pos` (pure function).
+    pub fn index_at(&self, pos: u64) -> u64 {
+        self.permute(pos / self.n, pos % self.n)
+    }
+
+    #[inline]
+    fn round_key(&self, epoch: u64, round: u64) -> u64 {
+        mix64(
+            self.seed
+                ^ epoch.wrapping_mul(GOLDEN_GAMMA)
+                ^ round.wrapping_mul(0xD1B5_4A32_D192_ED03),
+        )
+    }
+
+    /// 4-round Feistel permutation of the 2^(2·half_bits) domain,
+    /// cycle-walked until the image lands back inside `[0, n)`.  Walking
+    /// terminates because a permutation's orbits are cycles and the start
+    /// point is inside the target range.
+    fn permute(&self, epoch: u64, slot: u64) -> u64 {
+        debug_assert!(slot < self.n);
+        let mut x = slot;
+        loop {
+            let mut l = x >> self.half_bits;
+            let mut r = x & self.half_mask;
+            for round in 0..4u64 {
+                let f = mix64(r ^ self.round_key(epoch, round)) & self.half_mask;
+                let next_r = l ^ f;
+                l = r;
+                r = next_r;
+            }
+            x = (l << self.half_bits) | r;
+            if x < self.n {
+                return x;
+            }
+        }
+    }
+}
+
+/// The trainer's view of the training data: a corpus plus an ordering,
+/// addressed by the run's batch cursor (examples consumed so far).
+#[derive(Clone, Debug)]
+pub struct TrainStream {
+    corpus: Corpus,
+    shuffle: Option<EpochShuffle>,
+}
+
+impl TrainStream {
+    /// Sequential stream: example index = cursor (disjoint index windows,
+    /// never repeating — the stateless synthetic corpus is effectively
+    /// infinite).
+    pub fn sequential(corpus: Corpus) -> Self {
+        Self { corpus, shuffle: None }
+    }
+
+    /// Epoch-shuffled stream over the first `n_train` corpus examples.
+    /// The prefix must stay below [`TEST_INDEX_BASE`] so training never
+    /// touches held-out indices.
+    pub fn shuffled(corpus: Corpus, n_train: u64, seed: u64) -> Result<Self> {
+        if n_train > TEST_INDEX_BASE {
+            bail!(
+                "epoch shuffle: n_train {n_train} overlaps the held-out index \
+                 range (must be <= {TEST_INDEX_BASE})"
+            );
+        }
+        Ok(Self { corpus, shuffle: Some(EpochShuffle::new(n_train, seed)?) })
+    }
+
+    /// The underlying corpus (evaluation reads test batches from it).
+    pub fn corpus(&self) -> &Corpus {
+        &self.corpus
+    }
+
+    /// True when this stream epoch-shuffles a finite prefix.
+    pub fn is_shuffled(&self) -> bool {
+        self.shuffle.is_some()
+    }
+
+    /// The training batch at batch cursor `cursor` (examples consumed so
+    /// far).  Pure function of (stream, cursor) — a resumed run that
+    /// restores the cursor sees the identical batch sequence.
+    pub fn train_batch(&self, cursor: u64, batch: usize) -> Batch {
+        match &self.shuffle {
+            None => self.corpus.batch(cursor, batch),
+            Some(sh) => {
+                let indices: Vec<u64> =
+                    (0..batch as u64).map(|i| sh.index_at(cursor + i)).collect();
+                self.corpus.batch_at_indices(&indices)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusSpec;
+
+    #[test]
+    fn every_epoch_is_a_permutation() {
+        for n in [1u64, 2, 3, 7, 8, 33, 100] {
+            let sh = EpochShuffle::new(n, 0xFEED).unwrap();
+            for epoch in [0u64, 1, 5] {
+                let mut seen = vec![false; n as usize];
+                for slot in 0..n {
+                    let idx = sh.index_at(epoch * n + slot);
+                    assert!(idx < n, "n={n} epoch={epoch}: index {idx} out of range");
+                    assert!(
+                        !seen[idx as usize],
+                        "n={n} epoch={epoch}: index {idx} repeated"
+                    );
+                    seen[idx as usize] = true;
+                }
+                assert!(seen.iter().all(|&s| s), "n={n} epoch={epoch}: not onto");
+            }
+        }
+    }
+
+    #[test]
+    fn epochs_are_reordered_and_deterministic() {
+        let n = 100u64;
+        let sh = EpochShuffle::new(n, 7).unwrap();
+        let e0: Vec<u64> = (0..n).map(|s| sh.index_at(s)).collect();
+        let e1: Vec<u64> = (0..n).map(|s| sh.index_at(n + s)).collect();
+        assert_ne!(e0, e1, "consecutive epochs must reshuffle");
+        assert!(
+            e0.iter().enumerate().any(|(s, &i)| i != s as u64),
+            "epoch 0 must not be the identity"
+        );
+        let again = EpochShuffle::new(n, 7).unwrap();
+        let e0b: Vec<u64> = (0..n).map(|s| again.index_at(s)).collect();
+        assert_eq!(e0, e0b, "same seed must give the same order");
+        let other = EpochShuffle::new(n, 8).unwrap();
+        let e0c: Vec<u64> = (0..n).map(|s| other.index_at(s)).collect();
+        assert_ne!(e0, e0c, "different seeds must give different orders");
+    }
+
+    #[test]
+    fn zero_examples_rejected() {
+        assert!(EpochShuffle::new(0, 1).is_err());
+    }
+
+    #[test]
+    fn sequential_stream_matches_corpus_windows() {
+        let corpus = Corpus::new(CorpusSpec::default_mini()).unwrap();
+        let stream = TrainStream::sequential(corpus.clone());
+        assert!(!stream.is_shuffled());
+        let a = stream.train_batch(16, 8);
+        let b = corpus.batch(16, 8);
+        assert_eq!(a.ids, b.ids);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn shuffled_stream_covers_the_prefix_each_epoch() {
+        let corpus = Corpus::new(CorpusSpec::default_mini()).unwrap();
+        let n_train = 24u64;
+        let stream = TrainStream::shuffled(corpus.clone(), n_train, 5).unwrap();
+        assert!(stream.is_shuffled());
+        // one epoch of batches re-labels exactly the first n_train examples
+        let mut labels_stream = Vec::new();
+        for step in 0..3u64 {
+            let b = stream.train_batch(step * 8, 8);
+            labels_stream.extend_from_slice(&b.labels);
+        }
+        let mut labels_seq: Vec<i32> =
+            (0..n_train).map(|i| corpus.example(i).label).collect();
+        labels_stream.sort_unstable();
+        labels_seq.sort_unstable();
+        assert_eq!(labels_stream, labels_seq);
+        // and the stream is a pure function of the cursor
+        let again = stream.train_batch(8, 8);
+        let first = stream.train_batch(8, 8);
+        assert_eq!(again.ids, first.ids);
+    }
+
+    #[test]
+    fn shuffled_prefix_must_not_reach_test_indices() {
+        let corpus = Corpus::new(CorpusSpec::default_mini()).unwrap();
+        assert!(TrainStream::shuffled(corpus, TEST_INDEX_BASE + 1, 0).is_err());
+    }
+}

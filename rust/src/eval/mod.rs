@@ -1,4 +1,6 @@
-//! Accuracy evaluation via the AOT `logits` artifact.
+//! Accuracy evaluation: the AOT `logits` artifact ([`Evaluator`]) and the
+//! host-side MLP forward ([`MlpEvaluator`]), behind one [`AccuracyEval`]
+//! interface the trainer scores through.
 
 use std::sync::Arc;
 
@@ -6,7 +8,17 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{ModelEntry, TrainMode};
 use crate::data::{Batch, Corpus};
+use crate::model::mlp::{forward_example, MlpSpec, MlpState};
+use crate::oracle::hash_features;
 use crate::runtime::{Arg, DeviceBuffer, Executable, Runtime};
+
+/// Test-set accuracy scoring, abstracted over the backend so the trainer
+/// works with both the PJRT logits artifact and host-side forward-only
+/// oracles (the MLP) — see [`crate::train::Trainer::run`].
+pub trait AccuracyEval {
+    /// Accuracy of `trainable` over `n_batches` test batches of `corpus`.
+    fn accuracy(&self, trainable: &[f32], corpus: &Corpus, n_batches: usize) -> Result<f64>;
+}
 
 /// Evaluates test-set accuracy for one (model, mode) pair.  Holds its own
 /// frozen-base device buffer (LoRA mode) so evaluation never perturbs the
@@ -94,6 +106,61 @@ impl Evaluator {
     }
 }
 
+impl AccuracyEval for Evaluator {
+    fn accuracy(&self, trainable: &[f32], corpus: &Corpus, n_batches: usize) -> Result<f64> {
+        Evaluator::accuracy(self, trainable, corpus, n_batches)
+    }
+}
+
+/// Host-side accuracy evaluation for the forward-only MLP oracle: hashed
+/// bag-of-token features, one forward per test example, argmax over the
+/// logits.  No artifacts or runtime needed.
+pub struct MlpEvaluator {
+    spec: MlpSpec,
+    eval_batch: usize,
+}
+
+impl MlpEvaluator {
+    /// Build for an MLP architecture and a test-batch size.
+    pub fn new(spec: MlpSpec, eval_batch: usize) -> Self {
+        Self { spec, eval_batch: eval_batch.max(1) }
+    }
+}
+
+impl AccuracyEval for MlpEvaluator {
+    fn accuracy(&self, trainable: &[f32], corpus: &Corpus, n_batches: usize) -> Result<f64> {
+        if trainable.len() != self.spec.dim() {
+            bail!(
+                "mlp eval: trainable len {} != spec dim {}",
+                trainable.len(),
+                self.spec.dim()
+            );
+        }
+        let in_dim = self.spec.in_dim;
+        let mut state = MlpState::new(&self.spec);
+        let mut row = vec![0.0f32; in_dim];
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..n_batches {
+            let batch = corpus.test_batch(bi as u64, self.eval_batch);
+            for b in 0..batch.batch {
+                hash_features(
+                    &batch.ids[b * batch.seq..(b + 1) * batch.seq],
+                    &batch.mask[b * batch.seq..(b + 1) * batch.seq],
+                    in_dim,
+                    &mut row,
+                );
+                let logits = forward_example(&self.spec, trainable, &row, &mut state);
+                if argmax(logits) == batch.labels[b] as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}
+
 /// Index of the largest element (first wins on ties).
 pub fn argmax(row: &[f32]) -> usize {
     let mut best = 0usize;
@@ -119,5 +186,21 @@ mod tests {
     #[test]
     fn argmax_ties_pick_first() {
         assert_eq!(argmax(&[0.5, 0.5]), 0);
+    }
+
+    #[test]
+    fn mlp_evaluator_scores_in_unit_interval() {
+        use crate::data::corpus::CorpusSpec;
+        use crate::model::mlp::{Activation, MlpSpec};
+        let spec = MlpSpec::new(16, vec![8], 2, Activation::Tanh).unwrap();
+        let ev = MlpEvaluator::new(spec.clone(), 8);
+        let corpus = Corpus::new(CorpusSpec::default_mini()).unwrap();
+        let acc = ev.accuracy(&spec.init_params(1), &corpus, 2).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        // size mismatches fail loudly
+        assert!(ev.accuracy(&[0.0; 3], &corpus, 1).is_err());
+        // the same params always score the same (pure function)
+        let again = ev.accuracy(&spec.init_params(1), &corpus, 2).unwrap();
+        assert_eq!(acc.to_bits(), again.to_bits());
     }
 }

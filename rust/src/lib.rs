@@ -43,6 +43,13 @@
 //! a snapshot is just params + optimizer moments + the LDSD policy mean
 //! + a few cursors, and a run interrupted at any step resumes
 //! bitwise-identically (DESIGN.md §11).
+//!
+//! The first *network* workload is the forward-only MLP classifier
+//! ([`oracle::MlpOracle`] over the [`model::mlp`] core, `--oracle mlp`):
+//! forward evaluation — not probe algebra — dominates its step, it rides
+//! the full batched/streamed probe pipeline, and it trains on the
+//! epoch-shuffled minibatch stream ([`data::TrainStream`]) whose batch
+//! cursor rides in snapshots (DESIGN.md §12).
 //! See README.md for the module map and DESIGN.md for design rationale.
 
 #![warn(missing_docs)]

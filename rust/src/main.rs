@@ -13,9 +13,10 @@ use anyhow::{bail, Result};
 
 use zo_ldsd::cli::Args;
 use zo_ldsd::config::{Manifest, TrainMode};
-use zo_ldsd::coordinator::{run_trial, TrialSpec};
-use zo_ldsd::data::SyntheticRegression;
+use zo_ldsd::coordinator::{run_local_trial, run_trial, MlpTrial, OracleSpec, TrialSpec};
+use zo_ldsd::data::{CorpusSpec, SyntheticRegression};
 use zo_ldsd::metrics::MemoryReport;
+use zo_ldsd::model::{Activation, MlpSpec};
 use zo_ldsd::optim::{DgdConfig, DgdRunner};
 use zo_ldsd::oracle::{LinRegOracle, Oracle};
 use zo_ldsd::report::Table;
@@ -29,6 +30,8 @@ zo-ldsd <command> [options]
 commands:
   info                         show manifest + runtime status
   train --model M --mode ft|lora --method 2fwd|6fwd|alg2
+        [--oracle pjrt|mlp] [--hidden 64,64] [--activation tanh|relu]
+        [--in-dim N] [--train-examples N]
         [--optimizer zo_sgd|zo_adamm|jaguar] [--lr F] [--budget N]
         [--eval-every N] [--seed N] [--artifacts DIR]
         [--probe-dispatch batched|per-probe] [--threads N]
@@ -38,6 +41,10 @@ commands:
   toy   [--steps N] [--variant baseline|ldsd] [--seed N]
   landscape [--grid N] [--eps F]
   memory [--model M] [--artifacts DIR]
+
+`--oracle mlp` trains the forward-only MLP classifier on the synthetic
+corpus — no artifacts needed; epoch-shuffled minibatches by default
+(--train-examples 4096, 0 = sequential).
 ";
 
 fn main() {
@@ -110,6 +117,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("checkpoint.dir", "checkpoint-dir"),
         ("checkpoint.every", "checkpoint-every"),
         ("checkpoint.max_run_steps", "max-run-steps"),
+        ("oracle", "oracle"),
+        ("mlp.hidden", "hidden"),
+        ("mlp.activation", "activation"),
+        ("mlp.in_dim", "in-dim"),
+        ("shuffle.n_train", "train-examples"),
     ] {
         if let Some(v) = args.get(cli) {
             kv.set(key, v);
@@ -120,6 +132,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     let dir = artifacts_dir(args);
+    let oracle_kind = kv.get_or("oracle", "pjrt").to_string();
     let model = kv.get_or("model", "roberta_mini").to_string();
     let mode = TrainMode::parse(kv.get_or("mode", "lora"))?;
     let method = kv.get_or("method", "alg2").to_string();
@@ -158,6 +171,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         // preempted progress would be unrecoverable
         bail!("--max-run-steps needs --checkpoint-dir (the halt snapshot must land somewhere)");
     }
+    // Minibatch ordering: the MLP workload epoch-shuffles a finite prefix
+    // by default; --train-examples 0 keeps the sequential stream (the
+    // PJRT default).  The batch cursor rides in snapshots, so shuffled
+    // runs resume bitwise-identically (DESIGN.md §12).
+    let n_train_default = if oracle_kind == "mlp" { 4096 } else { 0 };
+    let n_train = kv.get_u64_or("shuffle.n_train", n_train_default)?;
+    if n_train > 0 {
+        cfg.shuffle = Some(zo_ldsd::train::ShuffleSpec { n_train });
+    }
     let dispatch =
         zo_ldsd::train::ProbeDispatch::parse(kv.get_or("probe_dispatch", "batched"))?;
     // materialized K x d matrix, streamed seed replay, or auto-selection
@@ -174,17 +196,46 @@ fn cmd_train(args: &Args) -> Result<()> {
         zo_ldsd::exec::ExecContext::new(threads)
     };
 
-    let manifest = Manifest::load(&dir)?;
-    let rt = Runtime::new(&dir)?;
+    let eval_batches = args.get_usize("eval-batches", 8)?;
+    let (id, oracle) = match oracle_kind.as_str() {
+        // forward-only MLP over the synthetic corpus: no artifacts or
+        // runtime needed (DESIGN.md §12)
+        "mlp" => {
+            let hidden = MlpSpec::parse_hidden(kv.get_or("mlp.hidden", "64,64"))?;
+            let activation = Activation::parse(kv.get_or("mlp.activation", "tanh"))?;
+            let in_dim = kv.get_u64_or("mlp.in_dim", 128)? as usize;
+            let widths: Vec<String> = hidden.iter().map(|h| h.to_string()).collect();
+            let id = format!(
+                "mlp{}-{}/{method}/{optimizer}",
+                widths.join("x"),
+                activation.label()
+            );
+            let trial = MlpTrial {
+                hidden,
+                activation,
+                in_dim,
+                corpus: CorpusSpec::default_mini(),
+                init_seed: seed,
+                eval_batch: 32,
+            };
+            (id, OracleSpec::Mlp(trial))
+        }
+        "pjrt" => (
+            format!("{model}/{}/{method}/{optimizer}", mode.as_str()),
+            OracleSpec::Pjrt,
+        ),
+        other => bail!("unknown oracle '{other}' (pjrt|mlp)"),
+    };
     let spec = TrialSpec {
-        id: format!("{model}/{}/{method}/{optimizer}", mode.as_str()),
+        id,
         model,
         mode,
         config: cfg,
-        eval_batches: args.get_usize("eval-batches", 8)?,
+        eval_batches,
         probe_dispatch: Some(dispatch),
         probe_storage: Some(storage),
         checkpoint: None, // the config's policy applies
+        oracle,
     };
     println!(
         "running {} (budget {budget} forwards, {} threads, {} probes requested)",
@@ -192,7 +243,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         exec.threads(),
         storage.label(),
     );
-    let result = run_trial(&dir, &manifest, &spec, &rt, &exec)?;
+    let result = match &spec.oracle {
+        OracleSpec::Pjrt => {
+            let manifest = Manifest::load(&dir)?;
+            let rt = Runtime::new(&dir)?;
+            run_trial(&dir, &manifest, &spec, &rt, &exec)?
+        }
+        OracleSpec::Mlp(_) => run_local_trial(&dir, &spec, &exec)?,
+    };
     let o = &result.outcome;
     for (calls, acc) in &o.acc_curve {
         println!("  calls {calls:>8}  accuracy {acc:.4}");

@@ -1,0 +1,510 @@
+//! Forward-only MLP classifier core (DESIGN.md §12).
+//!
+//! The first *network* workload of the crate: a configurable multi-layer
+//! perceptron with tanh/relu hidden activations and a softmax
+//! cross-entropy head.  The trainable vector is flat f32, laid out via
+//! the same [`LayoutEntry`] manifest scheme the transformer models use —
+//! so [`crate::model::views`] and `.zock` checkpoints apply unchanged.
+//!
+//! Everything here is *per-example sequential, fixed-order* arithmetic:
+//! one forward (or backward) pass touches one example at a time and
+//! accumulates the batch loss in data-row order through an f64
+//! accumulator.  The MLP oracle parallelizes over *probes*, never inside
+//! one forward, so losses are bitwise identical for any worker count —
+//! the same determinism contract the closed-form oracles carry
+//! (DESIGN.md §9).
+//!
+//! The analytic [`batch_grad`] backprop exists for diagnostics and the
+//! finite-difference cross-checks in `tests/mlp_train.rs`; the training
+//! path itself is forward-only.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::LayoutEntry;
+use crate::tensor::{dot, Matrix};
+
+/// Hidden-layer nonlinearity of the MLP.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// tanh (smooth; the finite-difference reference activation).
+    Tanh,
+    /// rectified linear unit.
+    Relu,
+}
+
+impl Activation {
+    /// Parse from a CLI/config string ("tanh" | "relu").
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "tanh" => Ok(Activation::Tanh),
+            "relu" => Ok(Activation::Relu),
+            other => bail!("unknown activation '{other}' (tanh|relu)"),
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Activation::Tanh => "tanh",
+            Activation::Relu => "relu",
+        }
+    }
+
+    /// The nonlinearity itself.
+    #[inline]
+    pub fn apply(&self, z: f32) -> f32 {
+        match self {
+            Activation::Tanh => z.tanh(),
+            Activation::Relu => {
+                if z > 0.0 {
+                    z
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Derivative expressed through the *post-activation* value `a`
+    /// (tanh': 1 - a², relu': 1 for a > 0) — so backprop needs no stored
+    /// pre-activations.
+    #[inline]
+    pub fn deriv(&self, a: f32) -> f32 {
+        match self {
+            Activation::Tanh => 1.0 - a * a,
+            Activation::Relu => {
+                if a > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// Architecture of one MLP classifier: input width, hidden widths, class
+/// count and hidden activation.  The flat parameter vector concatenates
+/// per layer a `[out, in]` row-major weight matrix and an `[out]` bias.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MlpSpec {
+    /// Input feature dimensionality.
+    pub in_dim: usize,
+    /// Hidden-layer widths, input to output order (may be empty: a
+    /// softmax-regression head).
+    pub hidden: Vec<usize>,
+    /// Output classes (>= 2).
+    pub n_classes: usize,
+    /// Hidden-layer nonlinearity.
+    pub activation: Activation,
+}
+
+impl MlpSpec {
+    /// Validated constructor.
+    pub fn new(
+        in_dim: usize,
+        hidden: Vec<usize>,
+        n_classes: usize,
+        activation: Activation,
+    ) -> Result<Self> {
+        if in_dim == 0 {
+            bail!("mlp spec: in_dim must be positive");
+        }
+        if n_classes < 2 {
+            bail!("mlp spec: need at least 2 classes, got {n_classes}");
+        }
+        if let Some(h) = hidden.iter().find(|&&h| h == 0) {
+            bail!("mlp spec: hidden width must be positive, got {h}");
+        }
+        Ok(Self { in_dim, hidden, n_classes, activation })
+    }
+
+    /// Parse a `--hidden` CLI value ("64,64") into hidden widths.
+    pub fn parse_hidden(s: &str) -> Result<Vec<usize>> {
+        let mut out = Vec::new();
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let h: usize = tok
+                .parse()
+                .map_err(|e| anyhow!("--hidden '{tok}': {e}"))?;
+            if h == 0 {
+                bail!("--hidden: layer width must be positive");
+            }
+            out.push(h);
+        }
+        if out.is_empty() {
+            bail!("--hidden '{s}': expected comma-separated layer widths (e.g. 64,64)");
+        }
+        Ok(out)
+    }
+
+    /// (fan_in, fan_out) of every layer, input to output.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::with_capacity(self.hidden.len() + 1);
+        let mut prev = self.in_dim;
+        for &h in &self.hidden {
+            dims.push((prev, h));
+            prev = h;
+        }
+        dims.push((prev, self.n_classes));
+        dims
+    }
+
+    /// Flat-vector offset of every layer's parameter block.
+    pub fn layer_offsets(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut offset = 0usize;
+        for (fan_in, fan_out) in self.layer_dims() {
+            out.push(offset);
+            offset += (fan_in + 1) * fan_out;
+        }
+        out
+    }
+
+    /// Total trainable dimensionality d.
+    pub fn dim(&self) -> usize {
+        self.layer_dims()
+            .iter()
+            .map(|(fan_in, fan_out)| (fan_in + 1) * fan_out)
+            .sum()
+    }
+
+    /// The flat parameter vector's manifest layout — the same
+    /// [`LayoutEntry`] scheme the transformer manifests use, so
+    /// [`crate::model::views`] and `.zock` checkpoints apply to MLP
+    /// parameters unchanged.
+    pub fn layout(&self) -> Vec<LayoutEntry> {
+        let mut out = Vec::new();
+        let mut offset = 0usize;
+        for (l, (fan_in, fan_out)) in self.layer_dims().into_iter().enumerate() {
+            let wlen = fan_in * fan_out;
+            out.push(LayoutEntry {
+                name: format!("layer{l}.w"),
+                shape: vec![fan_out, fan_in],
+                offset,
+                len: wlen,
+            });
+            offset += wlen;
+            out.push(LayoutEntry {
+                name: format!("layer{l}.b"),
+                shape: vec![fan_out],
+                offset,
+                len: fan_out,
+            });
+            offset += fan_out;
+        }
+        out
+    }
+
+    /// Deterministic initialization: weights ~ N(0, 1/fan_in), biases
+    /// zero.  A pure function of (spec, seed).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        // mix a fixed tag so the init stream never aliases the direction
+        // samplers' streams at the same run seed
+        let mut rng = crate::rng::Rng::new(seed ^ 0x4D4C_5001);
+        let mut p = vec![0.0f32; self.dim()];
+        let offsets = self.layer_offsets();
+        for (l, (fan_in, fan_out)) in self.layer_dims().into_iter().enumerate() {
+            let woff = offsets[l];
+            let wlen = fan_in * fan_out;
+            let scale = 1.0 / (fan_in as f32).sqrt();
+            rng.fill_normal(&mut p[woff..woff + wlen]);
+            for v in &mut p[woff..woff + wlen] {
+                *v *= scale;
+            }
+        }
+        p
+    }
+
+    /// Short identifier for labels ("mlp64x64/tanh").
+    pub fn label(&self) -> String {
+        let widths: Vec<String> = self.hidden.iter().map(|h| h.to_string()).collect();
+        format!("mlp{}/{}", widths.join("x"), self.activation.label())
+    }
+}
+
+/// Per-worker forward/backward scratch: one post-activation buffer and one
+/// delta buffer per layer.  Workers of a parallel K-probe evaluation each
+/// own one (allocated once per dispatch, reused across that worker's
+/// probes).
+pub struct MlpState {
+    /// Post-activation values per layer (the last entry holds the logits).
+    acts: Vec<Vec<f32>>,
+    /// Backprop deltas per layer (same shapes as `acts`).
+    deltas: Vec<Vec<f32>>,
+}
+
+impl MlpState {
+    /// Scratch sized for `spec`.
+    pub fn new(spec: &MlpSpec) -> Self {
+        let acts: Vec<Vec<f32>> = spec
+            .layer_dims()
+            .iter()
+            .map(|(_, fan_out)| vec![0.0f32; *fan_out])
+            .collect();
+        let deltas = acts.clone();
+        Self { acts, deltas }
+    }
+
+    /// The logits of the last forward pass.
+    pub fn logits(&self) -> &[f32] {
+        self.acts.last().expect("spec has at least one layer")
+    }
+}
+
+/// One forward pass of a single example: fills `state`'s activations and
+/// returns the logits.  Fixed evaluation order — per output unit one
+/// [`dot`] over the input — so results are a pure function of
+/// (spec, params, x).
+pub fn forward_example<'a>(
+    spec: &MlpSpec,
+    params: &[f32],
+    x: &[f32],
+    state: &'a mut MlpState,
+) -> &'a [f32] {
+    debug_assert_eq!(params.len(), spec.dim(), "params must match spec.dim()");
+    assert_eq!(x.len(), spec.in_dim, "feature row must be in_dim wide");
+    let dims = spec.layer_dims();
+    let n_layers = dims.len();
+    let mut off = 0usize;
+    for (l, (fan_in, fan_out)) in dims.into_iter().enumerate() {
+        let w = &params[off..off + fan_in * fan_out];
+        let b = &params[off + fan_in * fan_out..off + (fan_in + 1) * fan_out];
+        off += (fan_in + 1) * fan_out;
+        let (done, todo) = state.acts.split_at_mut(l);
+        let input: &[f32] = if l == 0 { x } else { &done[l - 1] };
+        let out = &mut todo[0];
+        let last = l + 1 == n_layers;
+        for j in 0..fan_out {
+            let z = b[j] + dot(&w[j * fan_in..(j + 1) * fan_in], input);
+            out[j] = if last { z } else { spec.activation.apply(z) };
+        }
+    }
+    state.logits()
+}
+
+/// Softmax cross-entropy of one example from raw logits, computed in f64
+/// via a max-shifted log-sum-exp (stable for both logit signs).
+pub fn cross_entropy(logits: &[f32], label: i32) -> f64 {
+    let lab = label as usize;
+    debug_assert!(lab < logits.len(), "label must be a class index");
+    let mut m = f64::NEG_INFINITY;
+    for v in logits {
+        m = m.max(*v as f64);
+    }
+    let mut sum = 0.0f64;
+    for v in logits {
+        sum += ((*v as f64) - m).exp();
+    }
+    m + sum.ln() - logits[lab] as f64
+}
+
+/// Mean softmax cross-entropy of a feature minibatch: examples evaluated
+/// in data-row order, losses folded through one f64 accumulator — the
+/// fixed term sequence that keeps every evaluation path (loss_dir,
+/// vectorized loss_k, streamed loss_probes) bitwise identical.
+pub fn batch_loss(
+    spec: &MlpSpec,
+    params: &[f32],
+    feats: &Matrix,
+    labels: &[i32],
+    state: &mut MlpState,
+) -> f64 {
+    debug_assert_eq!(feats.rows, labels.len(), "one label per feature row");
+    let mut acc = 0.0f64;
+    for r in 0..feats.rows {
+        let logits = forward_example(spec, params, feats.row(r), state);
+        acc += cross_entropy(logits, labels[r]);
+    }
+    acc / feats.rows.max(1) as f64
+}
+
+/// Analytic mean-loss gradient over a feature minibatch (standard
+/// backprop; `grad` is overwritten, length [`MlpSpec::dim`]).  Returns the
+/// batch loss.  Diagnostics only — the training path never calls this.
+pub fn batch_grad(
+    spec: &MlpSpec,
+    params: &[f32],
+    feats: &Matrix,
+    labels: &[i32],
+    grad: &mut [f32],
+    state: &mut MlpState,
+) -> f64 {
+    assert_eq!(grad.len(), spec.dim(), "grad must be d long");
+    debug_assert_eq!(feats.rows, labels.len(), "one label per feature row");
+    grad.iter_mut().for_each(|g| *g = 0.0);
+    let dims = spec.layer_dims();
+    let offsets = spec.layer_offsets();
+    let n_layers = dims.len();
+    let inv_n = 1.0 / feats.rows.max(1) as f32;
+    let mut acc = 0.0f64;
+    for r in 0..feats.rows {
+        forward_example(spec, params, feats.row(r), state);
+        let label = labels[r] as usize;
+        // head delta = softmax(logits) - onehot(label)
+        {
+            let logits = &state.acts[n_layers - 1];
+            acc += cross_entropy(logits, labels[r]);
+            let mut m = f64::NEG_INFINITY;
+            for v in logits.iter() {
+                m = m.max(*v as f64);
+            }
+            let mut sum = 0.0f64;
+            for v in logits.iter() {
+                sum += ((*v as f64) - m).exp();
+            }
+            let delta = &mut state.deltas[n_layers - 1];
+            for (j, v) in logits.iter().enumerate() {
+                let p = ((((*v as f64) - m).exp()) / sum) as f32;
+                delta[j] = if j == label { p - 1.0 } else { p };
+            }
+        }
+        // walk the layers backwards: accumulate this example's weight and
+        // bias gradients, then push the delta one layer down
+        for l in (0..n_layers).rev() {
+            let (fan_in, fan_out) = dims[l];
+            let woff = offsets[l];
+            let boff = woff + fan_in * fan_out;
+            {
+                let input: &[f32] =
+                    if l == 0 { feats.row(r) } else { &state.acts[l - 1] };
+                let delta = &state.deltas[l];
+                for j in 0..fan_out {
+                    let dj = delta[j] * inv_n;
+                    let grow = &mut grad[woff + j * fan_in..woff + (j + 1) * fan_in];
+                    for i in 0..fan_in {
+                        grow[i] += dj * input[i];
+                    }
+                    grad[boff + j] += dj;
+                }
+            }
+            if l > 0 {
+                let w = &params[woff..boff];
+                let (below, from) = state.deltas.split_at_mut(l);
+                let dprev = &mut below[l - 1];
+                let delta = &from[0];
+                let a_prev = &state.acts[l - 1];
+                for i in 0..fan_in {
+                    let mut s = 0.0f32;
+                    for j in 0..fan_out {
+                        s += delta[j] * w[j * fan_in + i];
+                    }
+                    dprev[i] = s * spec.activation.deriv(a_prev[i]);
+                }
+            }
+        }
+    }
+    acc / feats.rows.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::views;
+
+    fn spec() -> MlpSpec {
+        MlpSpec::new(5, vec![4, 3], 2, Activation::Tanh).unwrap()
+    }
+
+    #[test]
+    fn dims_layout_and_offsets_agree() {
+        let s = spec();
+        // (5+1)*4 + (4+1)*3 + (3+1)*2 = 24 + 15 + 8 = 47
+        assert_eq!(s.dim(), 47);
+        assert_eq!(s.layer_dims(), vec![(5, 4), (4, 3), (3, 2)]);
+        assert_eq!(s.layer_offsets(), vec![0, 24, 39]);
+        let layout = s.layout();
+        assert_eq!(layout.len(), 6);
+        assert_eq!(layout[0].name, "layer0.w");
+        assert_eq!(layout[0].shape, vec![4, 5]);
+        assert_eq!(layout[5].name, "layer2.b");
+        let total: usize = layout.iter().map(|l| l.len).sum();
+        assert_eq!(total, s.dim());
+        // model::views slices the flat vector by this layout unchanged
+        let p = s.init_params(3);
+        let v = views(&p, &layout).unwrap();
+        assert_eq!(v.len(), 6);
+        assert_eq!(v[1].data.len(), 4);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_biases_zero() {
+        let s = spec();
+        let a = s.init_params(9);
+        let b = s.init_params(9);
+        assert_eq!(a, b);
+        assert_ne!(a, s.init_params(10));
+        // layer0 bias block is zero
+        assert!(a[20..24].iter().all(|&v| v == 0.0));
+        // weights are not all zero
+        assert!(a[..20].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn parse_hidden_roundtrip() {
+        assert_eq!(MlpSpec::parse_hidden("64,64").unwrap(), vec![64, 64]);
+        assert_eq!(MlpSpec::parse_hidden(" 8 , 4 ").unwrap(), vec![8, 4]);
+        assert_eq!(MlpSpec::parse_hidden("16").unwrap(), vec![16]);
+        assert!(MlpSpec::parse_hidden("").is_err());
+        assert!(MlpSpec::parse_hidden("8,0").is_err());
+        assert!(MlpSpec::parse_hidden("8,x").is_err());
+    }
+
+    #[test]
+    fn activation_parse_and_shapes() {
+        assert_eq!(Activation::parse("tanh").unwrap(), Activation::Tanh);
+        assert_eq!(Activation::parse("relu").unwrap(), Activation::Relu);
+        assert!(Activation::parse("gelu").is_err());
+        assert_eq!(Activation::Relu.apply(-1.0), 0.0);
+        assert_eq!(Activation::Relu.apply(2.0), 2.0);
+        assert!((Activation::Tanh.deriv(0.0) - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn cross_entropy_matches_closed_form() {
+        // two logits (0, 0): loss = ln 2 for either label
+        assert!((cross_entropy(&[0.0, 0.0], 0) - std::f64::consts::LN_2).abs() < 1e-12);
+        // a confidently correct prediction has near-zero loss
+        assert!(cross_entropy(&[20.0, -20.0], 0) < 1e-8);
+        // shift invariance of the stable log-sum-exp
+        let a = cross_entropy(&[1.0, -2.0, 0.5], 2);
+        let b = cross_entropy(&[101.0, 98.0, 100.5], 2);
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+
+    #[test]
+    fn forward_is_deterministic_across_states() {
+        let s = spec();
+        let p = s.init_params(4);
+        let x = [0.1f32, -0.2, 0.3, 0.0, 0.7];
+        let mut st1 = MlpState::new(&s);
+        let mut st2 = MlpState::new(&s);
+        let l1 = forward_example(&s, &p, &x, &mut st1).to_vec();
+        let l2 = forward_example(&s, &p, &x, &mut st2).to_vec();
+        assert_eq!(l1.len(), 2);
+        for (a, b) in l1.iter().zip(l2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_grad_returns_batch_loss() {
+        let s = spec();
+        let p = s.init_params(4);
+        let feats = Matrix::from_vec(
+            2,
+            5,
+            vec![0.1, -0.2, 0.3, 0.0, 0.7, -0.5, 0.2, 0.1, 0.9, -0.3],
+        );
+        let labels = [0, 1];
+        let mut st = MlpState::new(&s);
+        let loss = batch_loss(&s, &p, &feats, &labels, &mut st);
+        let mut g = vec![0.0f32; s.dim()];
+        let loss2 = batch_grad(&s, &p, &feats, &labels, &mut g, &mut st);
+        assert_eq!(loss.to_bits(), loss2.to_bits());
+        assert!(g.iter().any(|&v| v != 0.0));
+    }
+}

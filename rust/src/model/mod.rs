@@ -1,9 +1,18 @@
-//! Parameter store + checkpointing.
+//! Parameter store + checkpointing, plus the forward-only MLP model core.
 //!
 //! Checkpoint format (`.zock`): a small JSON header (magic, model, mode,
 //! d, step, metadata) followed by the raw little-endian f32 payload.
 //! Self-describing so restores validate against the manifest before
 //! touching the oracle.
+//!
+//! [`mlp`] holds the MLP classifier's forward/backward core; its flat
+//! parameter vector uses the same [`LayoutEntry`] layout scheme, so
+//! [`views`] and `.zock` checkpoints apply to it unchanged (DESIGN.md
+//! §12).
+
+pub mod mlp;
+
+pub use mlp::{Activation, MlpSpec, MlpState};
 
 use std::io::{Read, Write};
 use std::path::Path;

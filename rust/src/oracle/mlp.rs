@@ -1,0 +1,466 @@
+//! Forward-only MLP fine-tuning oracle (DESIGN.md §12).
+//!
+//! The first workload where *forward evaluation* — not probe algebra — is
+//! the per-step hot path the execution engine was built for.  One oracle
+//! call is one full minibatch forward of the
+//! [`crate::model::mlp`] classifier at `x + scale * v`; the K-probe batch
+//! paths parallelize **over probes** (each worker owns a perturbed
+//! parameter buffer and an activation scratch), never inside one forward,
+//! so losses are bitwise identical for any worker count.
+//!
+//! Streamed probes: unlike the linear substrates, an MLP loss is not a
+//! function of the scalar projections `<X_r, v>`, so the streamed path
+//! cannot fold probe shards through running projection accumulators.
+//! Instead each worker *materializes the perturbed parameter vector* —
+//! O(d) per worker, still independent of K — by visiting the probe row's
+//! regenerated column shards and applying the identical
+//! `w[i] = x[i] + tau * v[i]` expression the slice path uses.  Same
+//! floats in, same fixed-order forward after: bitwise-equal losses
+//! across storage modes (pinned by `tests/mlp_train.rs`).
+//!
+//! Minibatches arrive through [`Oracle::set_batch`] either as corpus
+//! token batches — hashed into bag-of-token features by
+//! [`hash_features`] — or as dense [`crate::data::Features`] rows
+//! (LIBSVM-style inputs).
+
+use anyhow::{bail, Result};
+
+use crate::data::Batch;
+use crate::exec::ExecContext;
+use crate::model::mlp::{batch_grad, batch_loss, MlpSpec, MlpState};
+use crate::probe::ProbeSource;
+use crate::tensor::{axpy_into, Matrix};
+
+use super::{GradOracle, Oracle};
+
+/// Deterministic hashed bag-of-tokens featurizer: every valid token of an
+/// example is multiplicatively hashed into one of `in_dim` buckets and
+/// the bucket counts are normalized by the example's valid length.  A
+/// pure function of (ids, mask, in_dim) — identical on every platform
+/// and thread count.
+pub fn hash_features(ids: &[i32], mask: &[f32], in_dim: usize, out_row: &mut [f32]) {
+    debug_assert_eq!(ids.len(), mask.len());
+    debug_assert_eq!(out_row.len(), in_dim);
+    out_row.iter_mut().for_each(|v| *v = 0.0);
+    let mut valid = 0u32;
+    for (t, m) in ids.iter().zip(mask.iter()) {
+        if *m == 0.0 {
+            continue;
+        }
+        valid += 1;
+        let h = (*t as u64)
+            .wrapping_add(1)
+            .wrapping_mul(crate::rng::GOLDEN_GAMMA);
+        out_row[(h >> 32) as usize % in_dim] += 1.0;
+    }
+    if valid > 0 {
+        let inv = 1.0 / valid as f32;
+        for v in out_row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Forward-only MLP classifier oracle: softmax cross-entropy of a
+/// configurable multi-layer perceptron over hashed token (or dense
+/// feature) minibatches.  Implements the full batched `Oracle` surface —
+/// vectorized [`Oracle::loss_k`], streamed [`Oracle::loss_probes`],
+/// shard/row parallelism via [`Oracle::set_exec`] — with exact call
+/// accounting.
+pub struct MlpOracle {
+    spec: MlpSpec,
+    /// The flat trainable vector (layout: [`MlpSpec::layout`]).
+    x: Vec<f32>,
+    /// Current minibatch features (B x in_dim).
+    feats: Matrix,
+    /// Current minibatch labels (length B).
+    labels: Vec<i32>,
+    /// Perturbed-parameter scratch for `loss_dir`.
+    wtmp: Vec<f32>,
+    /// Activation scratch for the serial evaluation paths.
+    state: MlpState,
+    exec: ExecContext,
+    calls: u64,
+    name: String,
+}
+
+impl MlpOracle {
+    /// Build from an architecture and an explicit parameter vector
+    /// (length must equal [`MlpSpec::dim`]).
+    pub fn new(spec: MlpSpec, params: Vec<f32>) -> Result<Self> {
+        if params.len() != spec.dim() {
+            bail!(
+                "mlp oracle: params hold {} f32, spec wants {}",
+                params.len(),
+                spec.dim()
+            );
+        }
+        let d = params.len();
+        let state = MlpState::new(&spec);
+        let name = format!("mlp:{}", spec.label());
+        Ok(Self {
+            spec,
+            x: params,
+            feats: Matrix::zeros(0, 0),
+            labels: Vec::new(),
+            wtmp: vec![0.0; d],
+            state,
+            exec: ExecContext::serial(),
+            calls: 0,
+            name,
+        })
+    }
+
+    /// Build with the deterministic [`MlpSpec::init_params`] init.
+    pub fn from_seed(spec: MlpSpec, seed: u64) -> Self {
+        let params = spec.init_params(seed);
+        Self::new(spec, params).expect("init_params sizes the vector")
+    }
+
+    /// The oracle's architecture.
+    pub fn spec(&self) -> &MlpSpec {
+        &self.spec
+    }
+
+    fn ensure_batch(&self) -> Result<()> {
+        if self.feats.rows == 0 {
+            bail!("{}: set_batch must be called before evaluation", self.name);
+        }
+        Ok(())
+    }
+
+    /// Shared `loss_k`/`loss_k_into` core: the K probes are evaluated
+    /// independently (row-parallel on the installed context); each worker
+    /// forms `w = x + tau * v_j` elementwise into its own O(d) buffer and
+    /// runs the fixed-order minibatch forward.  Per probe the arithmetic
+    /// is exactly `loss_dir`'s, so the batched and looped paths agree
+    /// bit for bit.
+    fn loss_k_impl(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
+        let d = self.x.len();
+        assert_eq!(dirs.len(), k * d, "dirs must be K x d");
+        self.ensure_batch()?;
+        self.calls += k as u64;
+        let spec = &self.spec;
+        let x = &self.x;
+        let feats = &self.feats;
+        let labels = &self.labels;
+        let per_item_work = d.saturating_mul(feats.rows.max(1));
+        let vals = self.exec.map_items_sized_scratch(
+            k,
+            per_item_work,
+            || (vec![0.0f32; d], MlpState::new(spec)),
+            |scratch, j| {
+                let (w, st) = scratch;
+                axpy_into(w, x, tau, &dirs[j * d..(j + 1) * d]);
+                batch_loss(spec, w, feats, labels, st)
+            },
+        );
+        out.clear();
+        out.extend_from_slice(&vals);
+        Ok(())
+    }
+}
+
+impl Oracle for MlpOracle {
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn set_batch(&mut self, batch: &Batch) -> Result<()> {
+        let in_dim = self.spec.in_dim;
+        match &batch.features {
+            Some(f) => {
+                if f.dim != in_dim {
+                    bail!(
+                        "{}: feature dim {} != spec in_dim {in_dim}",
+                        self.name,
+                        f.dim
+                    );
+                }
+                if f.data.len() != batch.batch * f.dim {
+                    bail!(
+                        "{}: features hold {} f32, batch wants {}",
+                        self.name,
+                        f.data.len(),
+                        batch.batch * f.dim
+                    );
+                }
+                self.feats = Matrix::from_vec(batch.batch, f.dim, f.data.clone());
+            }
+            None => {
+                if self.feats.rows != batch.batch || self.feats.cols != in_dim {
+                    self.feats = Matrix::zeros(batch.batch, in_dim);
+                }
+                for b in 0..batch.batch {
+                    let row =
+                        &mut self.feats.data[b * in_dim..(b + 1) * in_dim];
+                    hash_features(
+                        &batch.ids[b * batch.seq..(b + 1) * batch.seq],
+                        &batch.mask[b * batch.seq..(b + 1) * batch.seq],
+                        in_dim,
+                        row,
+                    );
+                }
+            }
+        }
+        self.labels.clear();
+        for &l in &batch.labels {
+            if l < 0 || l as usize >= self.spec.n_classes {
+                bail!(
+                    "{}: label {l} outside 0..{}",
+                    self.name,
+                    self.spec.n_classes
+                );
+            }
+            self.labels.push(l);
+        }
+        Ok(())
+    }
+
+    fn loss_dir(&mut self, dir: &[f32], scale: f32) -> Result<f64> {
+        self.ensure_batch()?;
+        self.calls += 1;
+        let mut wtmp = std::mem::take(&mut self.wtmp);
+        axpy_into(&mut wtmp, &self.x, scale, dir);
+        let v = batch_loss(&self.spec, &wtmp, &self.feats, &self.labels, &mut self.state);
+        self.wtmp = wtmp;
+        Ok(v)
+    }
+
+    fn loss_k(&mut self, dirs: &[f32], k: usize, tau: f32) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(k);
+        self.loss_k_impl(dirs, k, tau, &mut out)?;
+        Ok(out)
+    }
+
+    fn loss_k_into(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
+        self.loss_k_impl(dirs, k, tau, out)
+    }
+
+    fn loss_probes(
+        &mut self,
+        probes: &dyn ProbeSource,
+        k: usize,
+        tau: f32,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        if let Some(dirs) = probes.dirs() {
+            return self.loss_k_impl(dirs, k, tau, out);
+        }
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
+        let d = self.x.len();
+        assert_eq!(probes.dim(), d, "probe rows must be length d");
+        self.ensure_batch()?;
+        self.calls += k as u64;
+        // per probe: materialize w = x + tau * v from the row's
+        // regenerated column shards — the same elementwise expression the
+        // slice path applies, so the forward sees identical floats and
+        // the losses are bitwise equal.  Cursor, w and the activation
+        // scratch are per worker, reused across that worker's probes.
+        let spec = &self.spec;
+        let x = &self.x;
+        let feats = &self.feats;
+        let labels = &self.labels;
+        let per_item_work = d.saturating_mul(feats.rows.max(1));
+        let vals = self.exec.map_items_sized_scratch(
+            k,
+            per_item_work,
+            || (probes.cursor(), vec![0.0f32; d], MlpState::new(spec)),
+            |scratch, j| {
+                let (cur, w, st) = scratch;
+                cur.visit_row(j, &mut |c0, piece| {
+                    let xs = &x[c0..c0 + piece.len()];
+                    let wb = &mut w[c0..c0 + piece.len()];
+                    for i in 0..piece.len() {
+                        wb[i] = xs[i] + tau * piece[i];
+                    }
+                });
+                batch_loss(spec, w, feats, labels, st)
+            },
+        );
+        out.clear();
+        out.extend_from_slice(&vals);
+        Ok(())
+    }
+
+    fn supports_streamed_probes(&self) -> bool {
+        true
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.exec = ctx;
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.x
+    }
+
+    fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()> {
+        f(&mut self.x);
+        Ok(())
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.calls
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl GradOracle for MlpOracle {
+    fn grad(&mut self, out: &mut [f32]) -> Result<f64> {
+        self.ensure_batch()?;
+        Ok(batch_grad(
+            &self.spec,
+            &self.x,
+            &self.feats,
+            &self.labels,
+            out,
+            &mut self.state,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusSpec};
+    use crate::model::mlp::Activation;
+
+    fn small_spec() -> MlpSpec {
+        MlpSpec::new(16, vec![8], 2, Activation::Tanh).unwrap()
+    }
+
+    fn corpus_batch() -> Batch {
+        Corpus::new(CorpusSpec::default_mini()).unwrap().train_batch(0, 4)
+    }
+
+    #[test]
+    fn rejects_mismatched_params() {
+        assert!(MlpOracle::new(small_spec(), vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn evaluation_requires_a_batch() {
+        let mut o = MlpOracle::from_seed(small_spec(), 1);
+        let zeros = vec![0.0f32; o.dim()];
+        let err = o.loss_dir(&zeros, 0.0).unwrap_err();
+        assert!(err.to_string().contains("set_batch"), "{err}");
+        assert_eq!(o.oracle_calls(), 0, "a rejected call must not be charged");
+    }
+
+    #[test]
+    fn hash_features_is_normalized_and_deterministic() {
+        let ids = [1, 5, 9, 5, 0, 0];
+        let mask = [1.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![0.0f32; 8];
+        hash_features(&ids, &mask, 8, &mut a);
+        hash_features(&ids, &mask, 8, &mut b);
+        assert_eq!(a, b);
+        let sum: f32 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "bucket mass must sum to 1, got {sum}");
+        // padded positions must not contribute
+        let mut c = vec![0.0f32; 8];
+        hash_features(&ids[..4], &mask[..4], 8, &mut c);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn loss_at_init_is_near_chance_level() {
+        // near-zero init => logits near zero => loss ~ ln(n_classes)
+        let mut o = MlpOracle::from_seed(small_spec(), 3);
+        o.set_batch(&corpus_batch()).unwrap();
+        let zeros = vec![0.0f32; o.dim()];
+        let loss = o.loss_dir(&zeros, 0.0).unwrap();
+        assert!(
+            (loss - std::f64::consts::LN_2).abs() < 0.5,
+            "chance-level CE should be near ln 2, got {loss}"
+        );
+        assert_eq!(o.oracle_calls(), 1);
+    }
+
+    #[test]
+    fn feature_batches_flow_through_set_batch() {
+        let spec = small_spec();
+        let mut o = MlpOracle::from_seed(spec.clone(), 4);
+        let n = 3;
+        let mut rng = crate::rng::Rng::new(8);
+        let mut data = vec![0.0f32; n * spec.in_dim];
+        rng.fill_normal(&mut data);
+        let batch = Batch::from_features(spec.in_dim, data, vec![0, 1, 0]);
+        o.set_batch(&batch).unwrap();
+        let zeros = vec![0.0f32; o.dim()];
+        assert!(o.loss_dir(&zeros, 0.0).unwrap().is_finite());
+        // wrong feature dim is rejected
+        let bad = Batch::from_features(
+            spec.in_dim + 1,
+            vec![0.0; 2 * (spec.in_dim + 1)],
+            vec![0, 1],
+        );
+        assert!(o.set_batch(&bad).is_err());
+        // out-of-range labels are rejected
+        let bad_label =
+            Batch::from_features(spec.in_dim, vec![0.0; spec.in_dim], vec![2]);
+        assert!(o.set_batch(&bad_label).is_err());
+    }
+
+    #[test]
+    fn loss_k_charges_k_calls_and_rejects_zero() {
+        let mut o = MlpOracle::from_seed(small_spec(), 5);
+        o.set_batch(&corpus_batch()).unwrap();
+        let d = o.dim();
+        let mut rng = crate::rng::Rng::new(11);
+        let mut dirs = vec![0.0f32; 3 * d];
+        rng.fill_normal(&mut dirs);
+        let before = o.oracle_calls();
+        let losses = o.loss_k(&dirs, 3, 1e-3).unwrap();
+        assert_eq!(losses.len(), 3);
+        assert_eq!(o.oracle_calls() - before, 3);
+        assert!(o.loss_k(&[], 0, 1e-3).is_err());
+    }
+
+    #[test]
+    fn loss_k_matches_loss_dir_bitwise() {
+        let mut o = MlpOracle::from_seed(small_spec(), 6);
+        o.set_batch(&corpus_batch()).unwrap();
+        let d = o.dim();
+        let k = 4;
+        let mut rng = crate::rng::Rng::new(12);
+        let mut dirs = vec![0.0f32; k * d];
+        rng.fill_normal(&mut dirs);
+        let batched = o.loss_k(&dirs, k, 1e-2).unwrap();
+        for (i, b) in batched.iter().enumerate() {
+            let l = o.loss_dir(&dirs[i * d..(i + 1) * d], 1e-2).unwrap();
+            assert_eq!(b.to_bits(), l.to_bits(), "probe {i}: {b} vs {l}");
+        }
+    }
+
+    #[test]
+    fn loss_k_parallel_bitwise_matches_serial() {
+        let spec = small_spec();
+        let batch = corpus_batch();
+        let d = spec.dim();
+        let k = 5;
+        let mut rng = crate::rng::Rng::new(13);
+        let mut dirs = vec![0.0f32; k * d];
+        rng.fill_normal(&mut dirs);
+        let mut serial = MlpOracle::from_seed(spec.clone(), 7);
+        serial.set_batch(&batch).unwrap();
+        let mut par = MlpOracle::from_seed(spec, 7);
+        par.set_exec(ExecContext::new(8).with_shard_len(16));
+        par.set_batch(&batch).unwrap();
+        let a = serial.loss_k(&dirs, k, 1e-3).unwrap();
+        let b = par.loss_k(&dirs, k, 1e-3).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+}

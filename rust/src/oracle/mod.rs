@@ -5,6 +5,11 @@
 //! * [`PjrtOracle`] (in `pjrt.rs`) — the real thing: AOT-compiled
 //!   transformer loss executed via PJRT (one `loss_dir` call = one forward
 //!   pass of the model at `x + scale * dir`).
+//! * [`MlpOracle`] (in `mlp.rs`) — the forward-only MLP classifier: a
+//!   real network evaluated entirely on the host, where forward cost (not
+//!   probe algebra) dominates the step — the first workload of that shape
+//!   (DESIGN.md §12).  Implements the full batched surface including
+//!   streamed `loss_probes`.
 //! * [`QuadraticOracle`], [`LinRegOracle`], [`LogRegOracle`] — closed-form
 //!   substrates for tests, the Fig. 2 toy experiment, and fast ablations.
 //!   Each overrides [`Oracle::loss_k`] with a vectorized batch evaluation
@@ -16,9 +21,11 @@
 //! boundary and is exact by construction (DESIGN.md §5).
 
 mod closed_form;
+mod mlp;
 mod pjrt;
 
 pub use closed_form::{LinRegOracle, LogRegOracle, QuadraticOracle};
+pub use mlp::{hash_features, MlpOracle};
 pub use pjrt::{read_f32_bin as read_params_bin, PjrtOracle};
 
 use anyhow::{bail, Result};

@@ -48,8 +48,11 @@ use crate::jsonio::{parse, to_string_pretty, Json};
 use crate::optim::OptimizerState;
 use crate::train::TrainOutcome;
 
-/// Current snapshot container version.
-pub const SNAPSHOT_VERSION: u64 = 1;
+/// Current snapshot container version.  Version 2 added the
+/// `data_cursor` field (the minibatch stream's batch cursor; DESIGN.md
+/// §12) — version-1 snapshots predate the epoch-shuffled stream and are
+/// refused rather than silently resumed with a rewound data pipeline.
+pub const SNAPSHOT_VERSION: u64 = 2;
 
 const SNAPSHOT_MAGIC: &str = "zosnap1";
 const OUTCOME_MAGIC: &str = "zodone1";
@@ -109,6 +112,9 @@ pub struct TrainerSnapshot {
     pub oracle_calls_used: u64,
     /// Next evaluation threshold (in oracle calls).
     pub next_eval: u64,
+    /// Training examples consumed when the snapshot was captured — the
+    /// minibatch stream's batch cursor (DESIGN.md §12).
+    pub data_cursor: u64,
     /// The sampler's per-step RNG label (steps sampled so far).
     pub sampler_step: u64,
     /// Best test accuracy seen at any eval point so far.
@@ -334,6 +340,7 @@ pub fn write_snapshot(dir: &Path, snap: &TrainerSnapshot) -> Result<PathBuf> {
     m.insert("step".to_string(), jhex(snap.step));
     m.insert("oracle_calls_used".to_string(), jhex(snap.oracle_calls_used));
     m.insert("next_eval".to_string(), jhex(snap.next_eval));
+    m.insert("data_cursor".to_string(), jhex(snap.data_cursor));
     m.insert("sampler_step".to_string(), jhex(snap.sampler_step));
     m.insert(
         "best_accuracy_bits".to_string(),
@@ -416,6 +423,7 @@ pub fn load_snapshot(snap_dir: &Path) -> Result<TrainerSnapshot> {
         step: get_hex(&m, "step")?,
         oracle_calls_used: get_hex(&m, "oracle_calls_used")?,
         next_eval: get_hex(&m, "next_eval")?,
+        data_cursor: get_hex(&m, "data_cursor")?,
         sampler_step: get_hex(&m, "sampler_step")?,
         best_accuracy: f64::from_bits(get_hex(&m, "best_accuracy_bits")?),
         params,
@@ -635,6 +643,7 @@ mod tests {
             step,
             oracle_calls_used: step * 6,
             next_eval: 1200,
+            data_cursor: step * 8,
             sampler_step: step,
             best_accuracy: 0.1 + step as f64,
             params: vec![1.5, -2.25, f32::MIN_POSITIVE, 0.0, 3.0e-38],
@@ -653,6 +662,7 @@ mod tests {
         assert_eq!(a.step, b.step);
         assert_eq!(a.oracle_calls_used, b.oracle_calls_used);
         assert_eq!(a.next_eval, b.next_eval);
+        assert_eq!(a.data_cursor, b.data_cursor);
         assert_eq!(a.sampler_step, b.sampler_step);
         assert_eq!(a.best_accuracy.to_bits(), b.best_accuracy.to_bits());
         assert_eq!(a.params.len(), b.params.len());

@@ -28,8 +28,8 @@ pub use crate::snapshot::CheckpointConfig;
 
 use anyhow::{bail, Result};
 
-use crate::data::Corpus;
-use crate::eval::Evaluator;
+use crate::data::{Corpus, TrainStream};
+use crate::eval::AccuracyEval;
 use crate::exec::ExecContext;
 use crate::optim::{
     BaseOptimizer, CentralK1Estimator, ForwardAvgEstimator, GradEstimator,
@@ -254,6 +254,18 @@ pub fn build_estimator(
     Ok(est)
 }
 
+/// Deterministic epoch shuffling of a finite training prefix
+/// ([`crate::data::EpochShuffle`]): each epoch visits the first `n_train`
+/// corpus examples once, in a per-epoch pseudorandom order keyed by the
+/// run seed.  `None` keeps the original sequential disjoint-window
+/// stream.  The run's batch cursor rides in snapshots, so a resumed
+/// shuffled run sees the identical batch sequence (DESIGN.md §12).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShuffleSpec {
+    /// Corpus examples per epoch (must stay below the held-out range).
+    pub n_train: u64,
+}
+
 /// Everything one training run needs (estimator x optimizer x budget).
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -286,6 +298,10 @@ pub struct TrainConfig {
     /// disables checkpointing; a resumed run is bitwise identical to the
     /// uninterrupted one.
     pub checkpoint: CheckpointConfig,
+    /// Minibatch ordering: `None` = sequential disjoint windows (the
+    /// original stream), `Some` = deterministic epoch shuffling of a
+    /// finite prefix (the MLP workload's default; DESIGN.md §12).
+    pub shuffle: Option<ShuffleSpec>,
 }
 
 impl TrainConfig {
@@ -304,6 +320,7 @@ impl TrainConfig {
             probe_dispatch: ProbeDispatch::Batched,
             probe_storage: ProbeStorage::Auto,
             checkpoint: CheckpointConfig::default(),
+            shuffle: None,
         }
     }
 
@@ -322,6 +339,7 @@ impl TrainConfig {
             probe_dispatch: ProbeDispatch::Batched,
             probe_storage: ProbeStorage::Auto,
             checkpoint: CheckpointConfig::default(),
+            shuffle: None,
         }
     }
 
@@ -351,6 +369,7 @@ impl TrainConfig {
             probe_dispatch: ProbeDispatch::Batched,
             probe_storage: ProbeStorage::Auto,
             checkpoint: CheckpointConfig::default(),
+            shuffle: None,
         }
     }
 }
@@ -390,6 +409,11 @@ pub struct RunProgress {
     pub step: u64,
     /// Oracle calls consumed so far.
     pub used: u64,
+    /// Training examples consumed so far — the data-pipeline cursor the
+    /// minibatch stream is addressed by ([`crate::data::TrainStream`]).
+    /// Restoring it is all a resumed run needs to replay the identical
+    /// batch sequence, shuffled or not (DESIGN.md §12).
+    pub data_cursor: u64,
     /// Next evaluation threshold (in oracle calls).
     pub next_eval: u64,
     /// (oracle calls, training-loss proxy) per step so far.
@@ -406,7 +430,7 @@ pub struct Trainer<O: Oracle> {
     /// The run configuration (immutable during the run).
     pub cfg: TrainConfig,
     oracle: O,
-    corpus: Corpus,
+    stream: TrainStream,
     estimator: Box<dyn GradEstimator + Send>,
     optimizer: Box<dyn BaseOptimizer + Send>,
     g: Vec<f32>,
@@ -439,11 +463,17 @@ impl<O: Oracle> Trainer<O> {
         let estimator = build_estimator(&cfg.estimator, d, cfg.tau, cfg.seed, &exec, storage)?;
         let optimizer = crate::optim::optimizers_by_name(&cfg.optimizer, d)?;
         oracle.set_exec(exec);
+        // the minibatch ordering: sequential disjoint windows, or the
+        // deterministic epoch shuffle keyed by the run seed
+        let stream = match &cfg.shuffle {
+            None => TrainStream::sequential(corpus),
+            Some(s) => TrainStream::shuffled(corpus, s.n_train, cfg.seed)?,
+        };
         let progress = RunProgress { next_eval: cfg.eval_every, ..Default::default() };
         Ok(Self {
             cfg,
             oracle,
-            corpus,
+            stream,
             estimator,
             optimizer,
             g: vec![0.0; d],
@@ -513,8 +543,14 @@ impl<O: Oracle> Trainer<O> {
     /// The configuration identity snapshots of this run are stamped with
     /// (and validated against on restore).
     pub fn fingerprint(&self) -> crate::snapshot::SnapshotFingerprint {
+        // the data ordering walks into the trajectory, so it is part of
+        // the identity a snapshot may be restored under
+        let mut label = format!("{}+{}", self.cfg.estimator.label(), self.cfg.optimizer);
+        if let Some(s) = &self.cfg.shuffle {
+            label.push_str(&format!("+shuffle{}", s.n_train));
+        }
         crate::snapshot::SnapshotFingerprint {
-            label: format!("{}+{}", self.cfg.estimator.label(), self.cfg.optimizer),
+            label,
             seed: self.cfg.seed,
             budget: self.cfg.budget,
             dim: self.oracle.dim(),
@@ -536,6 +572,7 @@ impl<O: Oracle> Trainer<O> {
             step: self.progress.step,
             oracle_calls_used: self.progress.used,
             next_eval: self.progress.next_eval,
+            data_cursor: self.progress.data_cursor,
             sampler_step: sampler.step_label(),
             best_accuracy: self.progress.best_accuracy,
             params: self.oracle.params().to_vec(),
@@ -585,6 +622,7 @@ impl<O: Oracle> Trainer<O> {
             step: snap.step,
             used: snap.oracle_calls_used,
             next_eval: snap.next_eval,
+            data_cursor: snap.data_cursor,
             loss_curve: snap.loss_curve.clone(),
             acc_curve: snap.acc_curve.clone(),
             best_accuracy: snap.best_accuracy,
@@ -656,7 +694,7 @@ impl<O: Oracle> Trainer<O> {
     /// accuracy curve, final parameters) to the uninterrupted run —
     /// `tests/checkpoint_resume.rs` pins this across thread counts and
     /// probe-storage modes.
-    pub fn run(&mut self, eval: Option<&Evaluator>) -> Result<TrainOutcome> {
+    pub fn run(&mut self, eval: Option<&dyn AccuracyEval>) -> Result<TrainOutcome> {
         let t0 = std::time::Instant::now();
         if self.cfg.checkpoint.resume && self.progress.step == 0 {
             if let Some(dir) = self.cfg.checkpoint.dir.clone() {
@@ -697,7 +735,11 @@ impl<O: Oracle> Trainer<O> {
                 break;
             }
             let step = self.progress.step;
-            let batch = self.corpus.train_batch(step, self.train_batch_size());
+            let bsz = self.train_batch_size();
+            // the stream is addressed by the batch cursor (examples
+            // consumed), which snapshots carry — a resumed run replays
+            // the identical batch sequence, shuffled or sequential
+            let batch = self.stream.train_batch(self.progress.data_cursor, bsz);
             self.oracle.set_batch(&batch)?;
             let est = self.estimate_step()?;
             let lr = schedule.lr(step);
@@ -709,6 +751,7 @@ impl<O: Oracle> Trainer<O> {
             let used_now = base_used + (self.oracle.oracle_calls() - start_calls);
             self.progress.loss_curve.push((used_now, est.loss));
             self.progress.step += 1;
+            self.progress.data_cursor += bsz as u64;
             session_steps += 1;
 
             if self.cfg.eval_every > 0 && used_now >= self.progress.next_eval {
@@ -716,7 +759,7 @@ impl<O: Oracle> Trainer<O> {
                 if let Some(ev) = eval {
                     let acc = ev.accuracy(
                         self.oracle.params(),
-                        &self.corpus,
+                        self.stream.corpus(),
                         self.cfg.eval_batches,
                     )?;
                     self.progress.acc_curve.push((used_now, acc));
@@ -753,7 +796,7 @@ impl<O: Oracle> Trainer<O> {
             if let Some(ev) = eval {
                 let acc = ev.accuracy(
                     self.oracle.params(),
-                    &self.corpus,
+                    self.stream.corpus(),
                     self.cfg.eval_batches,
                 )?;
                 out.acc_curve.push((self.progress.used, acc));
@@ -817,6 +860,7 @@ mod tests {
             probe_dispatch: ProbeDispatch::Batched,
             probe_storage: ProbeStorage::Auto,
             checkpoint: CheckpointConfig::default(),
+            shuffle: None,
         };
         let mut t2 = Trainer::new(
             mk(EstimatorKind::CentralK1(SamplerKind::Gaussian)),
@@ -1083,6 +1127,61 @@ mod tests {
             assert_eq!(a.to_bits(), b.to_bits());
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shuffled_stream_resumes_bit_exactly_and_stamps_fingerprint() {
+        // cursor mechanics: a snapshot mid-epoch carries the batch cursor,
+        // a restored run continues bitwise (the data-dependent version of
+        // this property lives in tests/mlp_train.rs — the quadratic
+        // oracle ignores batches)
+        let d = 32;
+        let base = || TrainConfig {
+            cosine_schedule: false,
+            shuffle: Some(ShuffleSpec { n_train: 24 }),
+            ..TrainConfig::algorithm2("zo_sgd_plain", 0.05, 240)
+        };
+        let mut full = Trainer::new(base(), quad(d), mini_corpus()).unwrap();
+        let full_out = full.run(None).unwrap();
+
+        let mut first = Trainer::new(
+            TrainConfig {
+                checkpoint: CheckpointConfig { max_run_steps: 4, ..Default::default() },
+                ..base()
+            },
+            quad(d),
+            mini_corpus(),
+        )
+        .unwrap();
+        let partial = first.run(None).unwrap();
+        assert!(!partial.completed);
+        let snap = first.snapshot();
+        assert_eq!(snap.data_cursor, 4 * 8, "cursor counts examples consumed");
+        assert!(snap.fingerprint.label.contains("shuffle24"), "{:?}", snap.fingerprint);
+
+        let mut second = Trainer::new(base(), quad(d), mini_corpus()).unwrap();
+        second.restore(&snap).unwrap();
+        assert_eq!(second.progress().data_cursor, 32);
+        let resumed = second.run(None).unwrap();
+        assert_eq!(resumed.steps, full_out.steps);
+        for ((ca, la), (cb, lb)) in
+            full_out.loss_curve.iter().zip(resumed.loss_curve.iter())
+        {
+            assert_eq!(ca, cb);
+            assert_eq!(la.to_bits(), lb.to_bits());
+        }
+        for (a, b) in full.oracle().params().iter().zip(second.oracle().params()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // a sequential run must refuse this shuffled snapshot
+        let mut seq = Trainer::new(
+            TrainConfig { shuffle: None, ..base() },
+            quad(d),
+            mini_corpus(),
+        )
+        .unwrap();
+        assert!(seq.restore(&snap).is_err());
     }
 
     #[test]

@@ -112,6 +112,7 @@ fn cfg_for(case: &ResumeCase, checkpoint: CheckpointConfig) -> TrainConfig {
         probe_dispatch: Default::default(),
         probe_storage: case.storage,
         checkpoint,
+        shuffle: None,
     }
 }
 
@@ -325,7 +326,7 @@ fn snapshot_format_roundtrip_and_golden() {
     );
     for field in [
         "version", "label", "seed", "budget", "dim", "step",
-        "oracle_calls_used", "next_eval", "sampler_step",
+        "oracle_calls_used", "next_eval", "data_cursor", "sampler_step",
         "best_accuracy_bits", "opt_scalars", "opt_buffers", "blobs",
     ] {
         assert!(manifest.get(field).is_some(), "manifest missing '{field}'");

@@ -1,0 +1,337 @@
+//! The forward-only MLP fine-tuning oracle end to end (DESIGN.md §12):
+//! analytic gradients vs finite differences, 1-vs-8-thread and
+//! materialized-vs-streamed bitwise determinism, layout/`.zock`
+//! compatibility, and mid-epoch checkpoint/resume over the
+//! epoch-shuffled minibatch stream.  CI runs this suite under both
+//! `ZO_PROBE_STORAGE` modes.
+
+use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::data::Batch;
+use zo_ldsd::eval::MlpEvaluator;
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::model::{views, Activation, MlpSpec};
+use zo_ldsd::oracle::{GradOracle, MlpOracle, Oracle};
+use zo_ldsd::probe::{BoxedSampler, MaterializedProbes, ProbeLayout, ProbeSource, StreamedProbes};
+use zo_ldsd::sampler::{LdsdConfig, LdsdSampler};
+use zo_ldsd::train::{
+    CheckpointConfig, EstimatorKind, ProbeStorage, SamplerKind, ShuffleSpec,
+    TrainConfig, Trainer,
+};
+
+fn mini_corpus() -> Corpus {
+    Corpus::new(CorpusSpec::default_mini()).unwrap()
+}
+
+/// A dense random feature minibatch delivered through `Batch.features`
+/// (the LIBSVM-style input path).
+fn feature_batch(in_dim: usize, n: usize, n_classes: u64, seed: u64) -> Batch {
+    let mut rng = zo_ldsd::rng::Rng::new(seed);
+    let mut data = vec![0.0f32; n * in_dim];
+    rng.fill_normal(&mut data);
+    let labels: Vec<i32> = (0..n).map(|_| rng.below(n_classes) as i32).collect();
+    Batch::from_features(in_dim, data, labels)
+}
+
+fn train_cfg(k: usize, budget: u64, seed: u64, storage: ProbeStorage) -> TrainConfig {
+    TrainConfig {
+        estimator: EstimatorKind::BestOfK {
+            k,
+            sampler: SamplerKind::Ldsd(LdsdConfig::default()),
+        },
+        optimizer: "zo_sgd_plain".into(),
+        lr: 0.05,
+        tau: 1e-3,
+        budget,
+        eval_every: 0,
+        eval_batches: 2,
+        cosine_schedule: false,
+        seed,
+        probe_dispatch: Default::default(),
+        probe_storage: storage,
+        checkpoint: CheckpointConfig::default(),
+        shuffle: Some(ShuffleSpec { n_train: 24 }),
+    }
+}
+
+fn mlp_oracle(seed: u64) -> MlpOracle {
+    let spec = MlpSpec::new(32, vec![16], 2, Activation::Tanh).unwrap();
+    MlpOracle::from_seed(spec, seed)
+}
+
+/// Analytic backprop vs central finite differences on a tiny
+/// architecture — the correctness anchor for the forward core.
+#[test]
+fn mlp_grad_matches_finite_difference() {
+    let spec = MlpSpec::new(9, vec![7, 5], 3, Activation::Tanh).unwrap();
+    let mut o = MlpOracle::from_seed(spec.clone(), 2);
+    o.set_batch(&feature_batch(9, 6, 3, 11)).unwrap();
+    let d = o.dim();
+    let mut g = vec![0.0f32; d];
+    o.grad(&mut g).unwrap();
+    let h = 1e-3f32;
+    let mut checked = 0usize;
+    for i in (0..d).step_by((d / 23).max(1)) {
+        let mut e = vec![0.0f32; d];
+        e[i] = 1.0;
+        let fp = o.loss_dir(&e, h).unwrap();
+        let fm = o.loss_dir(&e, -h).unwrap();
+        let fd = (fp - fm) / (2.0 * h as f64);
+        assert!(
+            (fd - g[i] as f64).abs() < 2e-2 * (1.0 + g[i].abs() as f64),
+            "coord {i}: fd {fd} vs grad {}",
+            g[i]
+        );
+        checked += 1;
+    }
+    assert!(checked >= 10, "sampled too few coordinates ({checked})");
+}
+
+/// The vectorized batch path is bitwise `loss_dir`'s loop — same
+/// perturbation expression, same forward — at any thread count.
+#[test]
+fn mlp_loss_k_bitwise_matches_loss_dir_at_any_thread_count() {
+    let batch = mini_corpus().train_batch(3, 8);
+    let mut reference = mlp_oracle(5);
+    reference.set_batch(&batch).unwrap();
+    let d = reference.dim();
+    let k = 5;
+    let mut rng = zo_ldsd::rng::Rng::new(21);
+    let mut dirs = vec![0.0f32; k * d];
+    rng.fill_normal(&mut dirs);
+    let looped: Vec<f64> = (0..k)
+        .map(|i| reference.loss_dir(&dirs[i * d..(i + 1) * d], 1e-2).unwrap())
+        .collect();
+    for threads in [1usize, 8] {
+        let mut o = mlp_oracle(5);
+        o.set_exec(ExecContext::new(threads).with_shard_len(64));
+        o.set_batch(&batch).unwrap();
+        let batched = o.loss_k(&dirs, k, 1e-2).unwrap();
+        for (i, (b, l)) in batched.iter().zip(looped.iter()).enumerate() {
+            assert_eq!(
+                b.to_bits(),
+                l.to_bits(),
+                "threads {threads}, probe {i}: {b} vs {l}"
+            );
+        }
+    }
+}
+
+/// Streamed (seed-replay) probe evaluation is bitwise the materialized
+/// slice path, for 1 and 4 workers.
+#[test]
+fn mlp_streamed_loss_probes_bitwise_matches_materialized() {
+    let batch = mini_corpus().train_batch(0, 8);
+    let k = 4;
+    let tau = 1e-2f32;
+    let d = mlp_oracle(0).dim();
+    for threads in [1usize, 4] {
+        let ctx = ExecContext::new(threads).with_shard_len(37);
+        let sampler = |seed| -> BoxedSampler {
+            Box::new(LdsdSampler::new(d, seed, LdsdConfig::default()))
+        };
+        let mut mat = MaterializedProbes::new(sampler(9), ProbeLayout::Direct, k);
+        mat.set_exec(ctx.clone());
+        let mut st = StreamedProbes::new(sampler(9), ProbeLayout::Direct, k);
+        st.set_exec(ctx.clone());
+        mat.advance();
+        st.advance();
+        let mut o1 = mlp_oracle(7);
+        o1.set_exec(ctx.clone());
+        o1.set_batch(&batch).unwrap();
+        let mut o2 = mlp_oracle(7);
+        o2.set_exec(ctx);
+        o2.set_batch(&batch).unwrap();
+        let mut l1 = Vec::new();
+        let mut l2 = Vec::new();
+        o1.loss_probes(&mat, k, tau, &mut l1).unwrap();
+        o2.loss_probes(&st, k, tau, &mut l2).unwrap();
+        assert_eq!(o1.oracle_calls(), o2.oracle_calls());
+        assert_eq!(l1.len(), k);
+        for (a, b) in l1.iter().zip(l2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads {threads}: {a} vs {b}");
+        }
+    }
+}
+
+/// The acceptance run: LDSD over the MLP with streamed probes on the
+/// shuffled stream walks a bitwise-identical trajectory on 1 and 8
+/// threads — and matches the materialized run bit for bit.
+#[test]
+fn mlp_train_bitwise_identical_across_threads_and_storage() {
+    let run = |threads: usize, storage: ProbeStorage| {
+        let mut t = Trainer::with_exec(
+            train_cfg(5, 120, 13, storage),
+            mlp_oracle(13),
+            mini_corpus(),
+            ExecContext::new(threads).with_shard_len(64),
+        )
+        .unwrap();
+        let out = t.run(None).unwrap();
+        (out.loss_curve, t.oracle().params().to_vec())
+    };
+    let (c1, p1) = run(1, ProbeStorage::Streamed);
+    let (c8, p8) = run(8, ProbeStorage::Streamed);
+    let (cm, pm) = run(8, ProbeStorage::Materialized);
+    assert_eq!(c1.len(), c8.len());
+    assert_eq!(c1.len(), cm.len());
+    for (i, ((a1, l1), ((a8, l8), (am, lm)))) in
+        c1.iter().zip(c8.iter().zip(cm.iter())).enumerate()
+    {
+        assert_eq!(a1, a8, "call axis diverged at step {i}");
+        assert_eq!(a1, am, "storage call axis diverged at step {i}");
+        assert_eq!(l1.to_bits(), l8.to_bits(), "thread loss diverged at {i}");
+        assert_eq!(l1.to_bits(), lm.to_bits(), "storage loss diverged at {i}");
+    }
+    for (i, (a, (b, c))) in p1.iter().zip(p8.iter().zip(pm.iter())).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "thread params diverged at {i}");
+        assert_eq!(a.to_bits(), c.to_bits(), "storage params diverged at {i}");
+    }
+}
+
+/// Mid-epoch interrupt + resume over the shuffled stream: with
+/// `n_train = 24` and batch 8 an epoch is 3 steps, so preempting at step
+/// 4 stops one step into epoch 2 — the resumed session must replay the
+/// identical shuffled batches via the restored batch cursor.
+#[test]
+fn mlp_checkpoint_resume_mid_epoch_is_bitwise_identical() {
+    let dir = std::env::temp_dir().join(format!(
+        "zo_mlp_resume_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let ctx = || ExecContext::new(4).with_shard_len(64);
+    let storage = ProbeStorage::Auto;
+
+    let mut full =
+        Trainer::with_exec(train_cfg(5, 120, 29, storage), mlp_oracle(29), mini_corpus(), ctx())
+            .unwrap();
+    let full_out = full.run(None).unwrap();
+    assert!(full_out.completed);
+
+    let ck = |resume: bool, max_run_steps: u64| CheckpointConfig {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every: 2,
+        resume,
+        max_run_steps,
+    };
+    let mut first = Trainer::with_exec(
+        TrainConfig { checkpoint: ck(false, 4), ..train_cfg(5, 120, 29, storage) },
+        mlp_oracle(29),
+        mini_corpus(),
+        ctx(),
+    )
+    .unwrap();
+    let partial = first.run(None).unwrap();
+    assert!(!partial.completed);
+    assert_eq!(partial.steps, 4);
+    assert_eq!(first.progress().data_cursor, 32, "mid-epoch cursor");
+    drop(first);
+
+    let mut second = Trainer::with_exec(
+        TrainConfig { checkpoint: ck(true, 0), ..train_cfg(5, 120, 29, storage) },
+        mlp_oracle(29),
+        mini_corpus(),
+        ctx(),
+    )
+    .unwrap();
+    let resumed = second.run(None).unwrap();
+    assert!(resumed.completed);
+    assert_eq!(resumed.steps, full_out.steps);
+    assert_eq!(resumed.loss_curve.len(), full_out.loss_curve.len());
+    for ((ca, la), (cb, lb)) in
+        full_out.loss_curve.iter().zip(resumed.loss_curve.iter())
+    {
+        assert_eq!(ca, cb);
+        assert_eq!(la.to_bits(), lb.to_bits(), "{la} vs {lb}");
+    }
+    for (a, b) in full.oracle().params().iter().zip(second.oracle().params()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Training actually optimizes: the loss of a *fixed* probe batch —
+/// evaluated at the initial and the trained parameters, so minibatch
+/// noise cannot blur the comparison — drops over a 3000-forward LDSD
+/// run, and the evaluator scores the trained parameters
+/// deterministically.
+#[test]
+fn mlp_training_reduces_loss_end_to_end() {
+    let spec = MlpSpec::new(16, vec![8], 2, Activation::Tanh).unwrap();
+    let corpus = mini_corpus();
+    let fixed = corpus.train_batch(0, 8);
+    let zeros = vec![0.0f32; spec.dim()];
+
+    let mut before_oracle = MlpOracle::from_seed(spec.clone(), 3);
+    before_oracle.set_batch(&fixed).unwrap();
+    let before = before_oracle.loss_dir(&zeros, 0.0).unwrap();
+
+    let mut cfg = train_cfg(5, 3000, 3, ProbeStorage::Auto);
+    cfg.lr = 0.02;
+    cfg.shuffle = Some(ShuffleSpec { n_train: 64 });
+    let mut t =
+        Trainer::new(cfg, MlpOracle::from_seed(spec.clone(), 3), corpus).unwrap();
+    let evaluator = MlpEvaluator::new(spec.clone(), 32);
+    let out = t.run(Some(&evaluator)).unwrap();
+    assert_eq!(out.oracle_calls, 3000);
+    assert!(out.loss_curve.iter().all(|(_, l)| l.is_finite()));
+    assert!((0.0..=1.0).contains(&out.final_accuracy));
+
+    t.oracle_mut().set_batch(&fixed).unwrap();
+    let after = t.oracle_mut().loss_dir(&zeros, 0.0).unwrap();
+    assert!(
+        after < before,
+        "training must reduce the fixed-batch loss: {before} -> {after}"
+    );
+
+    // same run again: bitwise-identical outcome (everything is seeded)
+    let mut cfg2 = train_cfg(5, 3000, 3, ProbeStorage::Auto);
+    cfg2.lr = 0.02;
+    cfg2.shuffle = Some(ShuffleSpec { n_train: 64 });
+    let mut t2 = Trainer::new(
+        cfg2,
+        MlpOracle::from_seed(spec.clone(), 3),
+        mini_corpus(),
+    )
+    .unwrap();
+    let out2 = t2.run(Some(&MlpEvaluator::new(spec, 32))).unwrap();
+    assert_eq!(out.final_accuracy.to_bits(), out2.final_accuracy.to_bits());
+    for ((ca, la), (cb, lb)) in out.loss_curve.iter().zip(out2.loss_curve.iter()) {
+        assert_eq!(ca, cb);
+        assert_eq!(la.to_bits(), lb.to_bits());
+    }
+}
+
+/// The MLP's flat parameter vector rides the existing layout manifest
+/// machinery: `model::views` slices it and `.zock` checkpoints
+/// round-trip it unchanged.
+#[test]
+fn mlp_layout_views_and_zock_checkpoint_apply_unchanged() {
+    let spec = MlpSpec::new(12, vec![6, 4], 3, Activation::Relu).unwrap();
+    let params = spec.init_params(8);
+    let layout = spec.layout();
+    let v = views(&params, &layout).unwrap();
+    assert_eq!(v.len(), 6); // (w, b) x 3 layers
+    assert_eq!(v[0].name, "layer0.w");
+    assert_eq!(v[0].shape, &[6, 12]);
+    assert_eq!(v[4].shape, &[3, 4]);
+    let total: usize = layout.iter().map(|l| l.len).sum();
+    assert_eq!(total, spec.dim());
+
+    let ck = zo_ldsd::model::Checkpoint {
+        model: spec.label(),
+        mode: "ft".into(),
+        step: 5,
+        oracle_calls: 30,
+        data: params.clone(),
+    };
+    let dir = std::env::temp_dir().join(format!("zo_mlp_zock_{}", std::process::id()));
+    let path = dir.join("mlp.zock");
+    ck.save(&path).unwrap();
+    let back = zo_ldsd::model::Checkpoint::load(&path).unwrap();
+    assert_eq!(back.data.len(), spec.dim());
+    for (a, b) in params.iter().zip(back.data.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -78,6 +78,7 @@ fn prop_streamed_and_materialized_trajectories_bitwise_equal() {
                 probe_dispatch: Default::default(),
                 probe_storage: storage,
                 checkpoint: Default::default(),
+                shuffle: None,
             };
             let ctx = ExecContext::new(case.threads).with_shard_len(case.shard_len);
             let mut t = Trainer::with_exec(

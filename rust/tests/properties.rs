@@ -2,8 +2,11 @@
 //! proptest substrate (DESIGN.md §3: the vendored set has no proptest).
 
 use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::data::{Batch, SyntheticRegression};
 use zo_ldsd::exec::ExecContext;
+use zo_ldsd::model::{Activation, MlpSpec};
 use zo_ldsd::optim::{BaseOptimizer, ZoAdaMM, ZoSgd};
+use zo_ldsd::oracle::{LinRegOracle, LogRegOracle, MlpOracle, Oracle, QuadraticOracle};
 use zo_ldsd::proptest::{check, Gen, U64Range, VecF32, VecPairF32};
 use zo_ldsd::rng::Rng;
 use zo_ldsd::sampler::{DirectionSampler, GaussianSampler, LdsdConfig, LdsdSampler};
@@ -250,4 +253,65 @@ fn prop_shrink_shrinks() {
             );
         }
     }
+}
+
+/// [`Oracle::loss_dir`] documents that `scale = 0` (or an all-zero
+/// direction) gives f(x).  Pin the contract **bitwise** for every oracle
+/// — closed-form substrates and the MLP alike — over random iterates and
+/// directions: `loss_dir(v, 0)` must equal both `loss_dir(0, 0)` and
+/// `loss_dir(0, 1)`.
+#[test]
+fn prop_loss_dir_scale_zero_is_f_of_x_for_every_oracle() {
+    check("loss_dir_scale_zero", &U64Range(0, 1 << 20), 30, |&seed| {
+        let mut rng = Rng::new(seed ^ 0x5CA1E0);
+        let mut oracles: Vec<Box<dyn Oracle>> = Vec::new();
+        // quadratic with random conditioning and iterate
+        {
+            let d = 8 + rng.below(40) as usize;
+            let diag: Vec<f32> = (0..d).map(|_| 0.5 + rng.next_f64() as f32).collect();
+            let center: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let x0: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            oracles.push(Box::new(QuadraticOracle::new(diag, center, x0)));
+        }
+        // linreg / logreg on an a9a-like draw
+        {
+            let ds = SyntheticRegression::a9a_like(32, seed);
+            let w0: Vec<f32> = (0..123).map(|_| 0.05 * rng.normal() as f32).collect();
+            oracles.push(Box::new(LinRegOracle::new(ds.x.clone(), ds.y.clone(), w0.clone())));
+            let y: Vec<f32> =
+                ds.y.iter().map(|v| if *v > 0.0 { 1.0 } else { -1.0 }).collect();
+            oracles.push(Box::new(LogRegOracle::new(ds.x, y, w0)));
+        }
+        // the MLP over a dense feature minibatch
+        {
+            let spec = MlpSpec::new(10, vec![6], 3, Activation::Tanh).unwrap();
+            let mut o = MlpOracle::from_seed(spec.clone(), seed);
+            let n = 4;
+            let mut data = vec![0.0f32; n * spec.in_dim];
+            rng.fill_normal(&mut data);
+            let labels: Vec<i32> = (0..n).map(|_| rng.below(3) as i32).collect();
+            o.set_batch(&Batch::from_features(spec.in_dim, data, labels)).unwrap();
+            oracles.push(Box::new(o));
+        }
+        for mut o in oracles {
+            let d = o.dim();
+            let mut dir = vec![0.0f32; d];
+            rng.fill_normal(&mut dir);
+            let zeros = vec![0.0f32; d];
+            let at_zero_scale = o.loss_dir(&dir, 0.0).unwrap();
+            let at_zero_dir = o.loss_dir(&zeros, 0.0).unwrap();
+            let at_zero_dir_unit_scale = o.loss_dir(&zeros, 1.0).unwrap();
+            if at_zero_scale.to_bits() != at_zero_dir.to_bits()
+                || at_zero_dir.to_bits() != at_zero_dir_unit_scale.to_bits()
+            {
+                eprintln!(
+                    "{}: scale-0 contract broken: {at_zero_scale} vs {at_zero_dir} vs \
+                     {at_zero_dir_unit_scale}",
+                    o.name()
+                );
+                return false;
+            }
+        }
+        true
+    });
 }

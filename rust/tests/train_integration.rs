@@ -68,6 +68,7 @@ fn central_and_bestofk_consume_identical_budget() {
         probe_dispatch: ProbeDispatch::Batched,
         probe_storage: ProbeStorage::Auto,
         checkpoint: Default::default(),
+        shuffle: None,
     };
     let oracle = || QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
 
@@ -124,6 +125,7 @@ fn learnable_policy_beats_frozen_on_persistent_direction_quadratic() {
             probe_dispatch: ProbeDispatch::Batched,
             probe_storage: ProbeStorage::Auto,
             checkpoint: Default::default(),
+            shuffle: None,
         };
         let oracle =
             QuadraticOracle::new(vec![1.0; d], center.clone(), vec![0.0; d]);
