@@ -9,6 +9,9 @@
 #                        storage modes (CI parity for the resume-smoke job)
 #   make test-mlp        the MLP oracle integration suite under both
 #                        probe-storage modes (CI parity)
+#   make test-transformer  the transformer + LoRA oracle suite (reference
+#                        parity golden + train matrix) under both probe-
+#                        storage modes (CI parity for the table1-smoke job)
 #   make lint            clippy, warnings fatal (CI parity; allow-list in ci.yml)
 #   make fmt             rustfmt check only (CI parity)
 #   make doc             API docs, warnings fatal (CI parity)
@@ -22,10 +25,11 @@
 #                        and commit $(BENCH_BASELINE)
 #   make bench-gate      diff $(BENCH_OUT) against $(BENCH_BASELINE) with
 #                        +/-20% thresholds on the loss_k / axpy_k /
-#                        probe_combine / mlp / mem rows (ns/op + peak
-#                        bytes, separately tunable)
+#                        probe_combine / mlp / transformer / mem rows
+#                        (ns/op + peak bytes, separately tunable)
 
-.PHONY: artifacts build test test-streamed test-resume test-mlp lint fmt doc \
+.PHONY: artifacts build test test-streamed test-resume test-mlp \
+        test-transformer lint fmt doc \
         bench bench-smoke bench-baseline bench-gate clean
 
 # Bench-regression gate knobs (DESIGN.md §12).  BENCH_JSON must reach the
@@ -33,7 +37,7 @@
 # package root (rust/), while bench-gate and CI read from the repo root.
 BENCH_OUT ?= BENCH_current.json
 BENCH_BASELINE ?= rust/benches/BENCH_baseline.json
-BENCH_GATES ?= loss_k,axpy_k,probe_combine,mlp,mem/
+BENCH_GATES ?= loss_k,axpy_k,probe_combine,mlp,transformer,mem/
 BENCH_THRESHOLD ?= 0.20
 BENCH_BYTES_THRESHOLD ?= 0.20
 BENCH_OUT_ABS = $(abspath $(BENCH_OUT))
@@ -58,6 +62,10 @@ test-resume: build
 test-mlp: build
 	ZO_PROBE_STORAGE=materialized cargo test -q --test mlp_train
 	ZO_PROBE_STORAGE=streamed cargo test -q --test mlp_train
+
+test-transformer: build
+	ZO_PROBE_STORAGE=materialized cargo test -q --test transformer_golden --test transformer_train
+	ZO_PROBE_STORAGE=streamed cargo test -q --test transformer_golden --test transformer_train
 
 lint:
 	cargo clippy --all-targets -- -D warnings \

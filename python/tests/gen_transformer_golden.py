@@ -1,0 +1,131 @@
+"""Generate the transformer reference-parity golden for the rust oracle.
+
+Runs the pure-jnp reference forward (`compile.model.forward_pure`) on two
+tiny pinned configs — encoder-style (cls pool, bidirectional) and
+decoder-style (last pool, causal) — over a fixed batch with padding, in
+both FT and LoRA modes, and writes parameters, inputs and expected
+logits/losses to rust/tests/golden/transformer_parity.json.
+
+The rust test `transformer_golden.rs` replays the same forward from the
+committed vectors and must match within 1e-5 (f32 forward, different
+accumulation orders).  Regenerate with:
+
+    cd python && PYTHONPATH=. python tests/gen_transformer_golden.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model as M, params as P
+from compile.configs import ModelConfig
+
+OUT = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "golden",
+    "transformer_parity.json",
+)
+
+TINY_ENC = ModelConfig(
+    name="tiny_enc", vocab=32, d_model=8, n_layers=2, n_heads=2, d_ff=16,
+    max_seq=4, n_classes=2, causal=False, pool="cls", lora_rank=2,
+    lora_scale=2.0,
+)
+TINY_DEC = ModelConfig(
+    name="tiny_dec", vocab=32, d_model=8, n_layers=2, n_heads=2, d_ff=16,
+    max_seq=4, n_classes=2, causal=True, pool="last", lora_rank=2,
+    lora_scale=2.0,
+)
+
+
+def init_flat(layout, rng, lora=False):
+    """Deterministic dense init: every tensor nonzero so parity exercises
+    each term (unlike the training init, where lora B = 0 would zero the
+    adapter delta entirely)."""
+    parts = []
+    for name, shape in layout:
+        n = int(np.prod(shape))
+        if name.endswith(".g"):
+            vals = 1.0 + 0.1 * rng.standard_normal(n)
+        elif lora:
+            vals = 0.3 * rng.standard_normal(n)
+        elif name.startswith(("tok_emb", "pos_emb")):
+            vals = 0.5 * rng.standard_normal(n)
+        else:
+            vals = 0.2 * rng.standard_normal(n)
+        parts.append(vals.astype(np.float32))
+    return np.concatenate(parts)
+
+
+def case(cfg: ModelConfig, seed: int):
+    rng = np.random.default_rng(seed)
+    base = init_flat(P.ft_layout(cfg), rng)
+    lora = init_flat(P.lora_layout(cfg), rng, lora=True)
+    b, s = 3, cfg.max_seq
+    ids = rng.integers(1, cfg.vocab, size=(b, s)).astype(np.int32)
+    mask = np.ones((b, s), np.float32)
+    mask[1, 3:] = 0.0
+    mask[2, 2:] = 0.0
+    ids[mask == 0.0] = 0  # PAD
+    labels = np.array([0, 1, 0], np.int32)
+
+    jids, jmask, jlabels = jnp.asarray(ids), jnp.asarray(mask), jnp.asarray(labels)
+    p = P.unflatten(jnp.asarray(base), P.ft_layout(cfg))
+    lp = P.unflatten(jnp.asarray(lora), P.lora_layout(cfg))
+
+    ft_logits = M.forward_pure(cfg, p, jids, jmask)
+    ft_loss = M.cross_entropy(ft_logits, jlabels)
+    lo_logits = M.forward_pure(cfg, p, jids, jmask, lora=lp)
+    lo_loss = M.cross_entropy(lo_logits, jlabels)
+
+    return {
+        "name": cfg.name,
+        "spec": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "n_classes": cfg.n_classes, "causal": cfg.causal,
+            "pool": cfg.pool, "lora_rank": cfg.lora_rank,
+            "lora_scale": cfg.lora_scale, "lora_targets": "qv",
+        },
+        "batch": {
+            "b": b, "seq": s,
+            "ids": ids.reshape(-1).tolist(),
+            "mask": mask.reshape(-1).tolist(),
+            "labels": labels.tolist(),
+        },
+        "base": [float(v) for v in base],
+        "lora": [float(v) for v in lora],
+        "ft": {
+            "logits": [float(v) for v in np.asarray(ft_logits).reshape(-1)],
+            "loss": float(ft_loss),
+        },
+        "lora_mode": {
+            "logits": [float(v) for v in np.asarray(lo_logits).reshape(-1)],
+            "loss": float(lo_loss),
+        },
+    }
+
+
+def main():
+    doc = {
+        "generator": "python/tests/gen_transformer_golden.py "
+                     "(compile.model.forward_pure, jax f32)",
+        "tolerance": 1e-5,
+        "cases": [case(TINY_ENC, 0xC0FFEE), case(TINY_DEC, 0xBEEF)],
+    }
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(doc, f, separators=(",", ":"))
+        f.write("\n")
+    for c in doc["cases"]:
+        print(c["name"], "ft", c["ft"]["logits"][:2], c["ft"]["loss"],
+              "lora", c["lora_mode"]["loss"])
+    print("wrote", os.path.normpath(OUT))
+
+
+if __name__ == "__main__":
+    main()

@@ -322,6 +322,96 @@ fn main() {
         b.max_seconds = saved_max_seconds;
     }
 
+    // --- transformer + LoRA oracle (the Table 1 workload shape) ------------
+    // `transformer/*` rows: the probe-parallel K-forward on the LoRA
+    // subspace (d = adapter + head params) and on the full FT flat
+    // vector, a full streamed best-of-K estimation step on the LoRA
+    // subspace, and the single-forward baseline.  Gated by the CI
+    // bench-regression job alongside the mlp/* rows.
+    {
+        use zo_ldsd::metrics::probe_tracker;
+        use zo_ldsd::model::{Pool, TransformerSpec};
+        use zo_ldsd::oracle::TransformerOracle;
+        use zo_ldsd::probe::ProbeStorage;
+
+        let saved_max_seconds = b.max_seconds;
+        b.max_seconds = 1.5;
+        let cspec = zo_ldsd::data::CorpusSpec {
+            vocab: 64,
+            seq: 8,
+            lexicon: 16,
+            min_len: 4,
+            signal_min: 1,
+            signal_max: 3,
+            ..zo_ldsd::data::CorpusSpec::default_mini()
+        };
+        let corpus_tfm = Corpus::new(cspec).unwrap();
+        let spec =
+            TransformerSpec::new(64, 16, 2, 2, 32, 8, 2, false, Pool::Cls, 2).unwrap();
+        let batch = corpus_tfm.train_batch(0, 8);
+        let mut rng = zo_ldsd::rng::Rng::new(5);
+        let k = 5usize;
+        for (mode, mlabel, threads_list) in [
+            (TrainMode::Lora, "lora", &[1usize, 8][..]),
+            (TrainMode::Ft, "ft", &[1usize][..]),
+        ] {
+            let dm = match mode {
+                TrainMode::Lora => spec.d_lora(),
+                TrainMode::Ft => spec.d_ft(),
+            };
+            let mut dirs = vec![0.0f32; k * dm];
+            rng.fill_normal(&mut dirs);
+            for &threads in threads_list {
+                let ctx = ExecContext::new(threads);
+                let mut oracle = TransformerOracle::from_seed(spec.clone(), mode, 7);
+                oracle.set_exec(ctx);
+                oracle.set_batch(&batch).unwrap();
+                b.bench(
+                    &format!("transformer/loss_k_tfm2x2d16_{mlabel}_k{k}_t{threads}"),
+                    k as f64,
+                    || {
+                        std::hint::black_box(oracle.loss_k(&dirs, k, 1e-3).unwrap());
+                    },
+                );
+            }
+        }
+        // one full best-of-K estimation step on streamed (seed-replay)
+        // probes over the LoRA subspace: the Table 1 acceptance workload
+        {
+            let ctx = ExecContext::new(4);
+            let mut est = LdsdEstimator::with_storage(
+                LdsdSampler::new(spec.d_lora(), 7, LdsdConfig::default()),
+                1e-3,
+                k,
+                ProbeStorage::Streamed,
+            )
+            .unwrap();
+            est.set_exec(ctx.clone());
+            let mut oracle =
+                TransformerOracle::from_seed(spec.clone(), TrainMode::Lora, 7);
+            oracle.set_exec(ctx);
+            oracle.set_batch(&batch).unwrap();
+            let mut g = vec![0.0f32; spec.d_lora()];
+            let name = "transformer/estimate_bestofk5_lora_streamed_t4";
+            probe_tracker().reset();
+            b.bench(name, (k + 1) as f64, || {
+                est.estimate(&mut oracle, &mut g).unwrap();
+            });
+            b.annotate_peak_bytes(name, probe_tracker().peak());
+        }
+        {
+            let mut dir1 = vec![0.0f32; spec.d_lora()];
+            rng.fill_normal(&mut dir1);
+            let mut oracle =
+                TransformerOracle::from_seed(spec.clone(), TrainMode::Lora, 7);
+            oracle.set_batch(&batch).unwrap();
+            b.bench("transformer/loss_dir_lora_1fwd", 1.0, || {
+                std::hint::black_box(oracle.loss_dir(&dir1, 1e-3).unwrap());
+            });
+        }
+        b.max_seconds = saved_max_seconds;
+    }
+
     // --- PJRT oracle -------------------------------------------------------
     if cfg!(not(feature = "pjrt")) {
         eprintln!("(skipping PJRT benches: built without the pjrt feature)");

@@ -1,33 +1,82 @@
-//! Bench: a scaled-down Table 1 — the three sampling schemes under one
-//! base optimizer per run, fixed oracle budget, on the PJRT-backed models.
-//! (The full grid lives in `examples/table1.rs`; this bench keeps `cargo
-//! bench` affordable while still exercising the ordering claim.)
+//! Bench: a scaled-down Table 1 on the paper's workload shape — the
+//! three sampling schemes under one base optimizer per run, fixed oracle
+//! budget, on the host-side transformer + LoRA oracle.  Artifact-free:
+//! the grid runs through the coordinator with no PJRT runtime, so it
+//! executes everywhere the test suite does (the PJRT variant of the full
+//! grid lives in `examples/table1.rs`).
 //!
-//!     cargo bench --bench table1_sst2            # zo_sgd, roberta_mini/LoRA
-//!     cargo bench --bench table1_sst2 -- full    # all optimizers
+//!     cargo bench --bench table1_sst2              # zo_sgd, LoRA rank 4
+//!     cargo bench --bench table1_sst2 -- full      # all optimizers
+//!     cargo bench --bench table1_sst2 -- --smoke   # CI: tiny budget
+//!
+//! `T1_BUDGET` overrides the per-trial forward budget; `BENCH_JSON=<path>`
+//! serializes one row per trial (`ns_per_op` = wall ns per oracle call,
+//! plus accuracy/steps/peak probe bytes) — the `table1-smoke` CI job
+//! uploads that file as its artifact.
 
-use zo_ldsd::config::{Manifest, TrainMode};
-use zo_ldsd::coordinator::{run_grid, TrialSpec};
+use std::collections::BTreeMap;
+
+use zo_ldsd::config::TrainMode;
+use zo_ldsd::coordinator::{run_grid, OracleSpec, TransformerTrial, TrialSpec};
+use zo_ldsd::data::CorpusSpec;
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::jsonio::Json;
+use zo_ldsd::model::{LoraTargets, Pool};
 use zo_ldsd::report::Table;
 use zo_ldsd::train::TrainConfig;
 
 fn main() {
-    let dir = "artifacts";
-    if Manifest::load(dir).is_err() {
-        eprintln!("SKIP table1 bench: artifacts/ not built (run `make artifacts`)");
-        return;
-    }
-    let full = std::env::args().any(|a| a == "full");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let full = argv.iter().any(|a| a == "full");
+    let smoke = argv.iter().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
     let budget = std::env::var("T1_BUDGET")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(1200u64);
+        .unwrap_or(if smoke { 120u64 } else { 2400 });
 
-    // calibrated LoRA learning rates (see EXPERIMENTS.md / examples/table1.rs)
+    // The SST-2 stand-in: the synthetic sentiment corpus at a seq/vocab
+    // the host forward handles in bench time, under a small causal
+    // decoder with rank-4 q/v adapters (probe dimension = adapter + head
+    // params — the paper's LoRA fine-tuning shape).
+    let corpus = CorpusSpec {
+        vocab: 256,
+        seq: 16,
+        lexicon: 32,
+        min_len: 8,
+        signal_min: 2,
+        signal_max: 4,
+        ..CorpusSpec::default_mini()
+    };
+    let trial = TransformerTrial {
+        layers: 2,
+        heads: 2,
+        d_model: 32,
+        d_ff: 64,
+        lora_rank: 4,
+        lora_targets: LoraTargets::qv(),
+        causal: true,
+        pool: Pool::Last,
+        corpus,
+        init_seed: 7,
+        eval_batch: 64,
+    };
+    let tspec = trial.model_spec().unwrap();
+    println!(
+        "table1 bench: {} lora (d = {} of {} ft params), budget {budget} forwards",
+        tspec.label(),
+        tspec.d_lora(),
+        tspec.d_ft()
+    );
+
+    // LoRA learning rates calibrated on the mini corpus (the adapter
+    // subspace tolerates much larger steps than the PJRT FT runs)
     let optimizers: &[(&str, f32)] = if full {
-        &[("zo_sgd", 1e-4), ("zo_adamm", 1e-3), ("jaguar", 5e-5)]
+        &[("zo_sgd", 0.02), ("zo_sgd_plain", 0.02), ("zo_adamm", 1e-3)]
     } else {
-        &[("zo_sgd", 1e-4)]
+        &[("zo_sgd", 0.02)]
     };
 
     let mut specs = Vec::new();
@@ -38,26 +87,27 @@ fn main() {
             ("alg2", TrainConfig::algorithm2(optimizer, *lr, budget)),
         ] {
             specs.push(TrialSpec {
-                id: format!("roberta_mini/lora/{optimizer}/{method}"),
-                model: "roberta_mini".into(),
+                id: format!("{}/lora/{optimizer}/{method}", tspec.label()),
+                model: tspec.label(),
                 mode: TrainMode::Lora,
                 config: cfg,
-                eval_batches: 8,
+                eval_batches: if smoke { 2 } else { 8 },
                 probe_dispatch: None,
                 probe_storage: None,
                 checkpoint: None,
-                oracle: zo_ldsd::coordinator::OracleSpec::Pjrt,
+                oracle: OracleSpec::Transformer(trial.clone()),
             });
         }
     }
 
     let t0 = std::time::Instant::now();
-    let results = run_grid(dir, specs, &zo_ldsd::exec::ExecContext::new(3));
+    let results = run_grid("artifacts", specs, &ExecContext::new(3));
     let mut table = Table::new(
         &format!("Table 1 (bench subset, budget {budget} forwards)"),
-        &["trial", "accuracy", "steps", "secs", "probe MiB"],
+        &["trial", "accuracy", "steps", "secs", "probe KiB"],
     );
-    let mut accs = std::collections::BTreeMap::new();
+    let mut accs = BTreeMap::new();
+    let mut json_rows: Vec<Json> = Vec::new();
     for r in &results {
         match r {
             Ok(tr) => {
@@ -68,10 +118,26 @@ fn main() {
                     format!("{:.1}", tr.outcome.wall_seconds),
                     // probe-state peak (grid-wide upper bound when the
                     // grid runs trials concurrently; see TrialResult)
-                    format!("{:.1}", tr.probe_peak_bytes as f64 / (1 << 20) as f64),
+                    format!("{:.1}", tr.probe_peak_bytes as f64 / 1024.0),
                 ]);
                 let method = tr.spec_id.rsplit('/').next().unwrap().to_string();
                 accs.entry(method).or_insert(tr.outcome.final_accuracy);
+                let mut row = BTreeMap::new();
+                row.insert(
+                    "name".to_string(),
+                    Json::Str(format!("table1/{}", tr.spec_id)),
+                );
+                row.insert(
+                    "ns_per_op".to_string(),
+                    Json::Num(tr.outcome.wall_seconds * 1e9 / budget.max(1) as f64),
+                );
+                row.insert("accuracy".to_string(), Json::Num(tr.outcome.final_accuracy));
+                row.insert("steps".to_string(), Json::Num(tr.outcome.steps as f64));
+                row.insert(
+                    "peak_bytes".to_string(),
+                    Json::Num(tr.probe_peak_bytes as f64),
+                );
+                json_rows.push(Json::Obj(row));
             }
             Err(e) => eprintln!("trial failed: {e:#}"),
         }
@@ -83,6 +149,17 @@ fn main() {
         println!(
             "\nordering check (paper: alg2 best, 6fwd <= 2fwd): alg2 {a2:.4}, 2fwd {g2:.4}, 6fwd {g6:.4}"
         );
+    }
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        if !path.is_empty() {
+            let mut root = BTreeMap::new();
+            root.insert("rows".to_string(), Json::Arr(json_rows));
+            match zo_ldsd::report::write_json(std::path::Path::new(&path), &Json::Obj(root))
+            {
+                Ok(()) => eprintln!("bench: wrote trial rows to {path}"),
+                Err(e) => eprintln!("bench: failed writing {path}: {e:#}"),
+            }
+        }
     }
     println!("total {:.0}s", t0.elapsed().as_secs_f64());
 }

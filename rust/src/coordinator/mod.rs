@@ -28,11 +28,12 @@ use anyhow::{anyhow, Result};
 use crate::config::{Manifest, TrainMode};
 use crate::data::corpus::CorpusSpec;
 use crate::data::Corpus;
-use crate::eval::{AccuracyEval, Evaluator, MlpEvaluator};
+use crate::eval::{AccuracyEval, Evaluator, MlpEvaluator, TransformerEvaluator};
 use crate::exec::ExecContext;
 use crate::metrics::probe_tracker;
 use crate::model::mlp::{Activation, MlpSpec};
-use crate::oracle::{MlpOracle, Oracle, PjrtOracle};
+use crate::model::{LoraTargets, Pool, TransformerSpec};
+use crate::oracle::{MlpOracle, Oracle, PjrtOracle, TransformerOracle};
 use crate::runtime::Runtime;
 use crate::snapshot::{self, CheckpointConfig};
 use crate::train::{ProbeDispatch, ProbeStorage, TrainConfig, TrainOutcome, Trainer};
@@ -55,6 +56,58 @@ pub struct MlpTrial {
     pub eval_batch: usize,
 }
 
+/// The host-side transformer trial configuration: architecture + LoRA
+/// subspace geometry, the corpus it trains on, and the init seed.  The
+/// trainable subspace (FT or LoRA) comes from [`TrialSpec::mode`];
+/// vocab, sequence length and class count come from the corpus so the
+/// model always matches its data.
+#[derive(Clone, Debug)]
+pub struct TransformerTrial {
+    /// Transformer depth (`--layers`).
+    pub layers: usize,
+    /// Attention heads (`--heads`; must divide `d_model`).
+    pub heads: usize,
+    /// Hidden width (`--d-model`).
+    pub d_model: usize,
+    /// MLP-block hidden width (`--d-ff`).
+    pub d_ff: usize,
+    /// LoRA adapter rank (`--lora-rank`).
+    pub lora_rank: usize,
+    /// Which attention projections carry adapters (`--lora-targets`).
+    pub lora_targets: LoraTargets,
+    /// Causal (decoder) vs bidirectional attention.
+    pub causal: bool,
+    /// Classifier pooling strategy.
+    pub pool: Pool,
+    /// The corpus the oracle trains and evaluates on.
+    pub corpus: CorpusSpec,
+    /// Seed for the deterministic base + adapter init.
+    pub init_seed: u64,
+    /// Test-batch size for accuracy evaluation.
+    pub eval_batch: usize,
+}
+
+impl TransformerTrial {
+    /// The validated [`TransformerSpec`] this trial instantiates
+    /// (vocab/seq/classes taken from the corpus).
+    pub fn model_spec(&self) -> Result<TransformerSpec> {
+        let mut spec = TransformerSpec::new(
+            self.corpus.vocab as usize,
+            self.d_model,
+            self.layers,
+            self.heads,
+            self.d_ff,
+            self.corpus.seq,
+            self.corpus.n_classes as usize,
+            self.causal,
+            self.pool,
+            self.lora_rank,
+        )?;
+        spec.lora_targets = self.lora_targets;
+        Ok(spec)
+    }
+}
+
 /// Which oracle a trial runs against.
 #[derive(Clone, Debug, Default)]
 pub enum OracleSpec {
@@ -64,6 +117,9 @@ pub enum OracleSpec {
     Pjrt,
     /// The forward-only MLP classifier — host-side, artifact-free.
     Mlp(MlpTrial),
+    /// The host-side transformer + LoRA oracle — artifact-free
+    /// (DESIGN.md §13).
+    Transformer(TransformerTrial),
 }
 
 /// One training run to schedule.
@@ -71,9 +127,10 @@ pub enum OracleSpec {
 pub struct TrialSpec {
     /// Stable identifier used to match results back to specs.
     pub id: String,
-    /// Manifest model name (PJRT trials; the MLP oracle ignores it).
+    /// Manifest model name (PJRT trials; the host oracles ignore it).
     pub model: String,
-    /// Full fine-tuning or LoRA (PJRT trials; the MLP oracle ignores it).
+    /// Full fine-tuning or LoRA (PJRT and transformer trials; the MLP
+    /// oracle ignores it).
     pub mode: TrainMode,
     /// The training-run configuration.
     pub config: TrainConfig,
@@ -247,6 +304,18 @@ fn run_trial_measured(
             )?;
             let oracle = MlpOracle::from_seed(mspec.clone(), m.init_seed);
             let evaluator = MlpEvaluator::new(mspec, m.eval_batch);
+            finish_trial(spec, cfg, oracle, &evaluator, corpus, exec, measure, &trial_ck_dir)
+        }
+        OracleSpec::Transformer(t) => {
+            let corpus = Corpus::new(t.corpus.clone())?;
+            let tspec = t.model_spec()?;
+            let oracle = TransformerOracle::from_seed(tspec.clone(), spec.mode, t.init_seed);
+            let evaluator = TransformerEvaluator::new(
+                tspec,
+                spec.mode,
+                oracle.base().to_vec(),
+                t.eval_batch,
+            )?;
             finish_trial(spec, cfg, oracle, &evaluator, corpus, exec, measure, &trial_ck_dir)
         }
     }
@@ -496,5 +565,51 @@ mod tests {
         let err = run_local_trial("no-artifacts-dir", &pjrt, &ExecContext::new(1))
             .unwrap_err();
         assert!(err.to_string().contains("PJRT"), "{err}");
+    }
+
+    #[test]
+    fn transformer_trial_runs_without_artifacts() {
+        use crate::train::TrainConfig;
+        let mut cfg = TrainConfig::algorithm2("zo_sgd_plain", 0.05, 60);
+        cfg.eval_every = 0;
+        let corpus = CorpusSpec {
+            vocab: 64,
+            seq: 8,
+            lexicon: 16,
+            min_len: 4,
+            signal_min: 1,
+            signal_max: 3,
+            ..CorpusSpec::default_mini()
+        };
+        let trial = TransformerTrial {
+            layers: 2,
+            heads: 2,
+            d_model: 16,
+            d_ff: 32,
+            lora_rank: 2,
+            lora_targets: LoraTargets::qv(),
+            causal: false,
+            pool: Pool::Cls,
+            corpus,
+            init_seed: 1,
+            eval_batch: 8,
+        };
+        let spec = TrialSpec {
+            id: "tfm/test".into(),
+            model: "transformer".into(),
+            mode: TrainMode::Lora,
+            config: cfg,
+            eval_batches: 1,
+            probe_dispatch: None,
+            probe_storage: None,
+            checkpoint: None,
+            oracle: OracleSpec::Transformer(trial),
+        };
+        let result =
+            run_local_trial("no-artifacts-dir", &spec, &ExecContext::new(2)).unwrap();
+        assert_eq!(result.spec_id, "tfm/test");
+        assert!(result.outcome.completed);
+        assert_eq!(result.outcome.oracle_calls, 60);
+        assert!((0.0..=1.0).contains(&result.outcome.final_accuracy));
     }
 }

@@ -1,6 +1,7 @@
 //! Accuracy evaluation: the AOT `logits` artifact ([`Evaluator`]) and the
-//! host-side MLP forward ([`MlpEvaluator`]), behind one [`AccuracyEval`]
-//! interface the trainer scores through.
+//! host-side MLP/transformer forwards ([`MlpEvaluator`],
+//! [`TransformerEvaluator`]), behind one [`AccuracyEval`] interface the
+//! trainer scores through.
 
 use std::sync::Arc;
 
@@ -9,6 +10,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{ModelEntry, TrainMode};
 use crate::data::{Batch, Corpus};
 use crate::model::mlp::{forward_example, MlpSpec, MlpState};
+use crate::model::transformer::{self, TransformerSpec, TransformerState};
 use crate::oracle::hash_features;
 use crate::runtime::{Arg, DeviceBuffer, Executable, Runtime};
 
@@ -161,6 +163,89 @@ impl AccuracyEval for MlpEvaluator {
     }
 }
 
+/// Host-side accuracy evaluation for the transformer oracle: one forward
+/// per test example, argmax over the logits.  Holds its own frozen base
+/// clone (LoRA mode) so evaluation never perturbs the training oracle's
+/// state; in FT mode the trainable vector *is* the base and the stored
+/// copy is unused.
+pub struct TransformerEvaluator {
+    spec: TransformerSpec,
+    mode: TrainMode,
+    /// Frozen base vector (consulted in LoRA mode only).
+    base: Vec<f32>,
+    eval_batch: usize,
+}
+
+impl TransformerEvaluator {
+    /// Build for an architecture, mode, frozen base and test-batch size.
+    pub fn new(
+        spec: TransformerSpec,
+        mode: TrainMode,
+        base: Vec<f32>,
+        eval_batch: usize,
+    ) -> Result<Self> {
+        if base.len() != spec.d_ft() {
+            bail!(
+                "transformer eval: base holds {} f32, spec wants d_ft {}",
+                base.len(),
+                spec.d_ft()
+            );
+        }
+        Ok(Self { spec, mode, base, eval_batch: eval_batch.max(1) })
+    }
+}
+
+impl AccuracyEval for TransformerEvaluator {
+    fn accuracy(&self, trainable: &[f32], corpus: &Corpus, n_batches: usize) -> Result<f64> {
+        let d_expect = match self.mode {
+            TrainMode::Ft => self.spec.d_ft(),
+            TrainMode::Lora => self.spec.d_lora(),
+        };
+        if trainable.len() != d_expect {
+            bail!(
+                "transformer eval: trainable len {} != expected {d_expect} for mode {}",
+                trainable.len(),
+                self.mode.as_str()
+            );
+        }
+        if corpus.spec.seq > self.spec.max_seq {
+            bail!(
+                "transformer eval: corpus seq {} exceeds max_seq {}",
+                corpus.spec.seq,
+                self.spec.max_seq
+            );
+        }
+        let mut state = TransformerState::new(&self.spec);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..n_batches {
+            let batch = corpus.test_batch(bi as u64, self.eval_batch);
+            for b in 0..batch.batch {
+                let ids = &batch.ids[b * batch.seq..(b + 1) * batch.seq];
+                let mask = &batch.mask[b * batch.seq..(b + 1) * batch.seq];
+                let logits = match self.mode {
+                    TrainMode::Ft => transformer::forward_example(
+                        &self.spec, trainable, None, ids, mask, &mut state,
+                    ),
+                    TrainMode::Lora => transformer::forward_example(
+                        &self.spec,
+                        &self.base,
+                        Some(trainable),
+                        ids,
+                        mask,
+                        &mut state,
+                    ),
+                };
+                if argmax(logits) == batch.labels[b] as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}
+
 /// Index of the largest element (first wins on ties).
 pub fn argmax(row: &[f32]) -> usize {
     let mut best = 0usize;
@@ -186,6 +271,44 @@ mod tests {
     #[test]
     fn argmax_ties_pick_first() {
         assert_eq!(argmax(&[0.5, 0.5]), 0);
+    }
+
+    #[test]
+    fn transformer_evaluator_scores_in_unit_interval() {
+        use crate::data::corpus::CorpusSpec;
+        use crate::model::Pool;
+        let spec =
+            TransformerSpec::new(64, 16, 2, 2, 32, 8, 2, false, Pool::Cls, 2).unwrap();
+        let base = spec.init_base(1);
+        let lora = spec.init_lora(1, Some(&base));
+        let ev =
+            TransformerEvaluator::new(spec.clone(), TrainMode::Lora, base.clone(), 8)
+                .unwrap();
+        let corpus_spec = CorpusSpec {
+            vocab: 64,
+            seq: 8,
+            lexicon: 16,
+            min_len: 4,
+            signal_min: 1,
+            signal_max: 3,
+            ..CorpusSpec::default_mini()
+        };
+        let corpus = Corpus::new(corpus_spec).unwrap();
+        let acc = ev.accuracy(&lora, &corpus, 2).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        // size mismatches fail loudly
+        assert!(ev.accuracy(&base, &corpus, 1).is_err());
+        // pure function: same trainable, same score
+        let again = ev.accuracy(&lora, &corpus, 2).unwrap();
+        assert_eq!(acc.to_bits(), again.to_bits());
+        // a too-long corpus sequence is rejected up front
+        let long = Corpus::new(CorpusSpec {
+            vocab: 64,
+            lexicon: 16,
+            ..CorpusSpec::default_mini()
+        })
+        .unwrap();
+        assert!(ev.accuracy(&lora, &long, 1).is_err());
     }
 
     #[test]

@@ -13,10 +13,12 @@ use anyhow::{bail, Result};
 
 use zo_ldsd::cli::Args;
 use zo_ldsd::config::{Manifest, TrainMode};
-use zo_ldsd::coordinator::{run_local_trial, run_trial, MlpTrial, OracleSpec, TrialSpec};
+use zo_ldsd::coordinator::{
+    run_local_trial, run_trial, MlpTrial, OracleSpec, TransformerTrial, TrialSpec,
+};
 use zo_ldsd::data::{CorpusSpec, SyntheticRegression};
 use zo_ldsd::metrics::MemoryReport;
-use zo_ldsd::model::{Activation, MlpSpec};
+use zo_ldsd::model::{Activation, LoraTargets, MlpSpec, Pool};
 use zo_ldsd::optim::{DgdConfig, DgdRunner};
 use zo_ldsd::oracle::{LinRegOracle, Oracle};
 use zo_ldsd::report::Table;
@@ -30,8 +32,11 @@ zo-ldsd <command> [options]
 commands:
   info                         show manifest + runtime status
   train --model M --mode ft|lora --method 2fwd|6fwd|alg2
-        [--oracle pjrt|mlp] [--hidden 64,64] [--activation tanh|relu]
-        [--in-dim N] [--train-examples N]
+        [--oracle pjrt|mlp|transformer]
+        [--hidden 64,64] [--activation tanh|relu] [--in-dim N]
+        [--layers N] [--heads N] [--d-model N] [--d-ff N]
+        [--lora-rank N] [--lora-targets qv|qkvo|...]
+        [--pool cls|last] [--causal 0|1] [--train-examples N]
         [--optimizer zo_sgd|zo_adamm|jaguar] [--lr F] [--budget N]
         [--eval-every N] [--seed N] [--artifacts DIR]
         [--probe-dispatch batched|per-probe] [--threads N]
@@ -45,6 +50,9 @@ commands:
 `--oracle mlp` trains the forward-only MLP classifier on the synthetic
 corpus — no artifacts needed; epoch-shuffled minibatches by default
 (--train-examples 4096, 0 = sequential).
+`--oracle transformer` trains the host-side decoder transformer on the
+same corpus — also artifact-free; --mode lora restricts the trainable
+subspace to the LoRA adapters + head (probe dimension = adapter count).
 ";
 
 fn main() {
@@ -121,6 +129,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("mlp.hidden", "hidden"),
         ("mlp.activation", "activation"),
         ("mlp.in_dim", "in-dim"),
+        ("transformer.layers", "layers"),
+        ("transformer.heads", "heads"),
+        ("transformer.d_model", "d-model"),
+        ("transformer.d_ff", "d-ff"),
+        ("transformer.lora_rank", "lora-rank"),
+        ("transformer.lora_targets", "lora-targets"),
+        ("transformer.pool", "pool"),
+        ("transformer.causal", "causal"),
         ("shuffle.n_train", "train-examples"),
     ] {
         if let Some(v) = args.get(cli) {
@@ -175,7 +191,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     // by default; --train-examples 0 keeps the sequential stream (the
     // PJRT default).  The batch cursor rides in snapshots, so shuffled
     // runs resume bitwise-identically (DESIGN.md §12).
-    let n_train_default = if oracle_kind == "mlp" { 4096 } else { 0 };
+    let n_train_default =
+        if matches!(oracle_kind.as_str(), "mlp" | "transformer") { 4096 } else { 0 };
     let n_train = kv.get_u64_or("shuffle.n_train", n_train_default)?;
     if n_train > 0 {
         cfg.shuffle = Some(zo_ldsd::train::ShuffleSpec { n_train });
@@ -220,11 +237,43 @@ fn cmd_train(args: &Args) -> Result<()> {
             };
             (id, OracleSpec::Mlp(trial))
         }
+        // host-side transformer + LoRA over the same corpus: the paper's
+        // workload shape without artifacts (DESIGN.md §13)
+        "transformer" => {
+            let layers = kv.get_u64_or("transformer.layers", 4)? as usize;
+            let heads = kv.get_u64_or("transformer.heads", 4)? as usize;
+            let d_model = kv.get_u64_or("transformer.d_model", 128)? as usize;
+            let d_ff = kv.get_u64_or("transformer.d_ff", 4 * d_model as u64)? as usize;
+            let lora_rank = kv.get_u64_or("transformer.lora_rank", 8)? as usize;
+            let lora_targets =
+                LoraTargets::parse(kv.get_or("transformer.lora_targets", "qv"))?;
+            let pool = Pool::parse(kv.get_or("transformer.pool", "cls"))?;
+            let causal = kv.get_bool_or("transformer.causal", false)?;
+            let trial = TransformerTrial {
+                layers,
+                heads,
+                d_model,
+                d_ff,
+                lora_rank,
+                lora_targets,
+                causal,
+                pool,
+                corpus: CorpusSpec::default_mini(),
+                init_seed: seed,
+                eval_batch: 32,
+            };
+            // validate the architecture up front so flag errors surface
+            // before any training state is built
+            let tspec = trial.model_spec()?;
+            let id =
+                format!("{}/{}/{method}/{optimizer}", tspec.label(), mode.as_str());
+            (id, OracleSpec::Transformer(trial))
+        }
         "pjrt" => (
             format!("{model}/{}/{method}/{optimizer}", mode.as_str()),
             OracleSpec::Pjrt,
         ),
-        other => bail!("unknown oracle '{other}' (pjrt|mlp)"),
+        other => bail!("unknown oracle '{other}' (pjrt|mlp|transformer)"),
     };
     let spec = TrialSpec {
         id,
@@ -249,7 +298,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             let rt = Runtime::new(&dir)?;
             run_trial(&dir, &manifest, &spec, &rt, &exec)?
         }
-        OracleSpec::Mlp(_) => run_local_trial(&dir, &spec, &exec)?,
+        OracleSpec::Mlp(_) | OracleSpec::Transformer(_) => {
+            run_local_trial(&dir, &spec, &exec)?
+        }
     };
     let o = &result.outcome;
     for (calls, acc) in &o.acc_curve {

@@ -5,14 +5,17 @@
 //! Self-describing so restores validate against the manifest before
 //! touching the oracle.
 //!
-//! [`mlp`] holds the MLP classifier's forward/backward core; its flat
-//! parameter vector uses the same [`LayoutEntry`] layout scheme, so
-//! [`views`] and `.zock` checkpoints apply to it unchanged (DESIGN.md
-//! §12).
+//! [`mlp`] holds the MLP classifier's forward/backward core and
+//! [`transformer`] the decoder-transformer + LoRA forward; both flat
+//! parameter vectors use the same [`LayoutEntry`] layout scheme, so
+//! [`views`] and `.zock` checkpoints apply to them unchanged (DESIGN.md
+//! §12–§13).
 
 pub mod mlp;
+pub mod transformer;
 
 pub use mlp::{Activation, MlpSpec, MlpState};
+pub use transformer::{LoraTargets, Pool, TransformerSpec, TransformerState};
 
 use std::io::{Read, Write};
 use std::path::Path;

@@ -1,0 +1,1571 @@
+//! Pure-Rust decoder-transformer forward + LoRA subspace (DESIGN.md §13).
+//!
+//! The paper's actual workload shape: a pre-LN residual transformer
+//! classifier (token+position embeddings, multi-head attention, GELU MLP
+//! blocks, layernorm, linear head) evaluated *forward-only* on the host.
+//! The flat parameter vector uses the same [`LayoutEntry`] manifest
+//! scheme as the PJRT artifacts and the MLP — names, shapes and order
+//! mirror `python/compile/params.py` exactly, so [`crate::model::views`],
+//! `.zock` checkpoints and snapshots apply unchanged, and a flat vector
+//! is interchangeable between the Rust and JAX forwards (the golden
+//! parity test in `tests/transformer_golden.rs` pins this).
+//!
+//! LoRA mode restricts the trainable vector to rank-r adapter factors on
+//! a configurable subset of the attention projections (default W_q/W_v,
+//! the reference layout) plus the classifier head, so the probe dimension
+//! `d` is the adapter count — the small-`d` regime where LDSD's learned
+//! sampling and the streamed probe engine compound.
+//!
+//! Determinism contract (DESIGN.md §9): everything here is per-example
+//! sequential fixed-order arithmetic — matmuls accumulate input-major in
+//! ascending index order, layernorm statistics and softmax partition
+//! functions fold through f64, batch losses fold in data-row order.  The
+//! oracle parallelizes over *probes*, never inside one forward, so losses
+//! are bitwise identical for any worker count.
+//!
+//! Numerics mirror `python/compile/model.py::forward_pure`: layernorm
+//! eps 1e-5, additive -1e9 key-padding mask, where-style causal mask,
+//! tanh-approximation GELU (`jax.nn.gelu`'s default), "cls" (position 0)
+//! or "last" (final valid position) pooling.
+//!
+//! [`batch_dir_derivative`] is an analytic forward-mode (JVP) directional
+//! derivative used by the fd-vs-analytic cross-checks in
+//! `tests/transformer_train.rs`; the training path never calls it.
+
+use anyhow::{bail, Result};
+
+use crate::config::LayoutEntry;
+use crate::model::mlp::cross_entropy;
+
+/// The additive key-padding mask value (mirrors `kernels/ref.py::NEG_INF`).
+const NEG_INF: f32 = -1e9;
+
+/// Classifier pooling strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pool {
+    /// Pool position 0 (RoBERTa-style CLS token).
+    Cls,
+    /// Pool the final valid position per example (OPT-style decoder).
+    Last,
+}
+
+impl Pool {
+    /// Parse from a CLI/config string ("cls" | "last").
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "cls" => Ok(Pool::Cls),
+            "last" => Ok(Pool::Last),
+            other => bail!("unknown pool '{other}' (cls|last)"),
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Pool::Cls => "cls",
+            Pool::Last => "last",
+        }
+    }
+}
+
+/// Which attention projections carry LoRA adapters.  The reference layout
+/// (`python/compile/params.py::lora_layout`) adapts W_q and W_v; the
+/// other combinations generalize the same scheme (canonical layout order
+/// is always q, k, v, o).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoraTargets {
+    /// Adapt the query projection W_q.
+    pub q: bool,
+    /// Adapt the key projection W_k.
+    pub k: bool,
+    /// Adapt the value projection W_v.
+    pub v: bool,
+    /// Adapt the output projection W_o.
+    pub o: bool,
+}
+
+impl LoraTargets {
+    /// The reference target set: W_q + W_v (the python ABI layout).
+    pub fn qv() -> Self {
+        Self { q: true, k: false, v: true, o: false }
+    }
+
+    /// Parse from a CLI string: any subset of the letters q/k/v/o
+    /// (commas optional), e.g. "qv", "q,v", "qkvo".
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut t = Self { q: false, k: false, v: false, o: false };
+        for c in s.chars() {
+            match c {
+                'q' => t.q = true,
+                'k' => t.k = true,
+                'v' => t.v = true,
+                'o' => t.o = true,
+                ',' | ' ' => {}
+                other => bail!("unknown lora target '{other}' (subset of qkvo)"),
+            }
+        }
+        if !(t.q || t.k || t.v || t.o) {
+            bail!("lora targets '{s}': need at least one of q/k/v/o");
+        }
+        Ok(t)
+    }
+
+    /// Canonical label ("qv", "qkvo", ...), always in q,k,v,o order.
+    pub fn label(&self) -> String {
+        let mut out = String::new();
+        for (on, c) in [(self.q, 'q'), (self.k, 'k'), (self.v, 'v'), (self.o, 'o')] {
+            if on {
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    /// Adapted projections per layer.
+    fn count(&self) -> usize {
+        [self.q, self.k, self.v, self.o].iter().filter(|&&b| b).count()
+    }
+}
+
+/// Architecture of one transformer classifier plus its LoRA subspace
+/// geometry.  Mirrors `python/compile/configs.py::ModelConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransformerSpec {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Hidden width.
+    pub d_model: usize,
+    /// Transformer depth.
+    pub n_layers: usize,
+    /// Attention heads (must divide `d_model`).
+    pub n_heads: usize,
+    /// MLP-block hidden width.
+    pub d_ff: usize,
+    /// Maximum sequence length (position-embedding table size).
+    pub max_seq: usize,
+    /// Classifier output classes (>= 2).
+    pub n_classes: usize,
+    /// Causal (decoder) vs bidirectional attention.
+    pub causal: bool,
+    /// Classifier pooling strategy.
+    pub pool: Pool,
+    /// LoRA adapter rank r.
+    pub lora_rank: usize,
+    /// LoRA delta scale (alpha / r; 2.0 in the reference configs).
+    pub lora_scale: f32,
+    /// Which attention projections carry adapters.
+    pub lora_targets: LoraTargets,
+}
+
+impl TransformerSpec {
+    /// Validated constructor.
+    pub fn new(
+        vocab: usize,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        d_ff: usize,
+        max_seq: usize,
+        n_classes: usize,
+        causal: bool,
+        pool: Pool,
+        lora_rank: usize,
+    ) -> Result<Self> {
+        if vocab < 2 {
+            bail!("transformer spec: vocab must be >= 2");
+        }
+        if d_model == 0 || n_heads == 0 || d_model % n_heads != 0 {
+            bail!(
+                "transformer spec: n_heads {n_heads} must divide d_model {d_model}"
+            );
+        }
+        if n_layers == 0 || d_ff == 0 || max_seq == 0 {
+            bail!("transformer spec: n_layers, d_ff and max_seq must be positive");
+        }
+        if n_classes < 2 {
+            bail!("transformer spec: need at least 2 classes, got {n_classes}");
+        }
+        if lora_rank == 0 {
+            bail!("transformer spec: lora_rank must be >= 1");
+        }
+        Ok(Self {
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            d_ff,
+            max_seq,
+            n_classes,
+            causal,
+            pool,
+            lora_rank,
+            lora_scale: 2.0,
+            lora_targets: LoraTargets::qv(),
+        })
+    }
+
+    /// The `roberta_mini` reference config (configs.py).
+    pub fn roberta_mini() -> Self {
+        Self::new(4096, 128, 4, 4, 512, 32, 2, false, Pool::Cls, 8)
+            .expect("reference config is valid")
+    }
+
+    /// The `opt_mini` reference config (configs.py).
+    pub fn opt_mini() -> Self {
+        Self::new(4096, 160, 4, 4, 640, 32, 2, true, Pool::Last, 8)
+            .expect("reference config is valid")
+    }
+
+    /// Per-head width.
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Full fine-tuning dimensionality d_ft.
+    pub fn d_ft(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 2 * d          // ln1
+            + 4 * (d * d + d)          // wq/bq wk/bk wv/bv wo/bo
+            + 2 * d                    // ln2
+            + d * self.d_ff + self.d_ff // wf1/bf1
+            + self.d_ff * d + d; // wf2/bf2
+        (self.vocab + self.max_seq) * d
+            + self.n_layers * per_layer
+            + 2 * d
+            + d * self.n_classes
+            + self.n_classes
+    }
+
+    /// LoRA trainable dimensionality d_lora (adapters + head).
+    pub fn d_lora(&self) -> usize {
+        let d = self.d_model;
+        self.n_layers * self.lora_targets.count() * 2 * d * self.lora_rank
+            + d * self.n_classes
+            + self.n_classes
+    }
+
+    /// Full fine-tuning flat-vector layout — names, shapes and order
+    /// mirror `python/compile/params.py::ft_layout` (weights are stored
+    /// input-major `[d_in, d_out]`, y = x W).
+    pub fn ft_layout(&self) -> Vec<LayoutEntry> {
+        let d = self.d_model;
+        let f = self.d_ff;
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        let mut push = |name: String, shape: Vec<usize>| {
+            let len: usize = shape.iter().product();
+            out.push(LayoutEntry { name, shape, offset: off, len });
+            off += len;
+        };
+        push("tok_emb".into(), vec![self.vocab, d]);
+        push("pos_emb".into(), vec![self.max_seq, d]);
+        for i in 0..self.n_layers {
+            let p = format!("layer{i}.");
+            push(format!("{p}ln1.g"), vec![d]);
+            push(format!("{p}ln1.b"), vec![d]);
+            push(format!("{p}wq"), vec![d, d]);
+            push(format!("{p}bq"), vec![d]);
+            push(format!("{p}wk"), vec![d, d]);
+            push(format!("{p}bk"), vec![d]);
+            push(format!("{p}wv"), vec![d, d]);
+            push(format!("{p}bv"), vec![d]);
+            push(format!("{p}wo"), vec![d, d]);
+            push(format!("{p}bo"), vec![d]);
+            push(format!("{p}ln2.g"), vec![d]);
+            push(format!("{p}ln2.b"), vec![d]);
+            push(format!("{p}wf1"), vec![d, f]);
+            push(format!("{p}bf1"), vec![f]);
+            push(format!("{p}wf2"), vec![f, d]);
+            push(format!("{p}bf2"), vec![d]);
+        }
+        push("final_ln.g".into(), vec![d]);
+        push("final_ln.b".into(), vec![d]);
+        push("head.w".into(), vec![d, self.n_classes]);
+        push("head.b".into(), vec![self.n_classes]);
+        out
+    }
+
+    /// LoRA flat-vector layout: per layer, rank-r A/B factors for each
+    /// adapted projection (canonical q,k,v,o order), then the classifier
+    /// head.  With the default q+v targets this equals
+    /// `python/compile/params.py::lora_layout` name for name.
+    pub fn lora_layout(&self) -> Vec<LayoutEntry> {
+        let d = self.d_model;
+        let r = self.lora_rank;
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        let mut push = |name: String, shape: Vec<usize>| {
+            let len: usize = shape.iter().product();
+            out.push(LayoutEntry { name, shape, offset: off, len });
+            off += len;
+        };
+        let t = self.lora_targets;
+        for i in 0..self.n_layers {
+            let p = format!("layer{i}.");
+            for (on, tag) in [(t.q, "q"), (t.k, "k"), (t.v, "v"), (t.o, "o")] {
+                if on {
+                    push(format!("{p}lora_{tag}.a"), vec![d, r]);
+                    push(format!("{p}lora_{tag}.b"), vec![r, d]);
+                }
+            }
+        }
+        push("head.w".into(), vec![d, self.n_classes]);
+        push("head.b".into(), vec![self.n_classes]);
+        out
+    }
+
+    /// Deterministic base-model init: layernorm gains 1, biases 0, all
+    /// other weights ~ N(0, 0.02) — the `params.py::init_ft` recipe,
+    /// drawn from this crate's own RNG.  A pure function of (spec, seed).
+    pub fn init_base(&self, seed: u64) -> Vec<f32> {
+        // fixed tag so the init stream never aliases the samplers' streams
+        let mut rng = crate::rng::Rng::new(seed ^ 0x5452_464D);
+        let mut p = vec![0.0f32; self.d_ft()];
+        for e in self.ft_layout() {
+            let block = &mut p[e.offset..e.offset + e.len];
+            if e.name.ends_with(".g") {
+                block.iter_mut().for_each(|v| *v = 1.0);
+            } else if is_ft_bias(&e.name) {
+                // already zero
+            } else {
+                rng.fill_normal(block);
+                block.iter_mut().for_each(|v| *v *= 0.02);
+            }
+        }
+        p
+    }
+
+    /// Deterministic LoRA init: A ~ N(0, 0.01), B = 0 (the delta starts
+    /// at zero), head copied from `base` when given (the fine-tuning
+    /// practice `params.py::init_lora` mirrors) else ~ N(0, 0.02).
+    pub fn init_lora(&self, seed: u64, base: Option<&[f32]>) -> Vec<f32> {
+        let mut rng = crate::rng::Rng::new(seed ^ 0x4C4F_5241);
+        let mut p = vec![0.0f32; self.d_lora()];
+        for e in self.lora_layout() {
+            let block = &mut p[e.offset..e.offset + e.len];
+            if e.name.ends_with(".a") {
+                rng.fill_normal(block);
+                block.iter_mut().for_each(|v| *v *= 0.01);
+            } else if e.name == "head.w" {
+                match base {
+                    Some(b) => {
+                        let fo = FtOffsets::new(self);
+                        block.copy_from_slice(&b[fo.head_w..fo.head_w + e.len]);
+                    }
+                    None => {
+                        rng.fill_normal(block);
+                        block.iter_mut().for_each(|v| *v *= 0.02);
+                    }
+                }
+            }
+            // lora .b factors and head.b stay zero
+        }
+        p
+    }
+
+    /// Rough forward cost (MACs) of one example at sequence length `seq`
+    /// — the work estimate the execution engine sizes dispatches by.
+    pub fn forward_work(&self, seq: usize) -> usize {
+        let d = self.d_model;
+        let per_pos = 4 * d * d + 2 * d * self.d_ff + 2 * seq * d;
+        self.n_layers * per_pos * seq + d * self.n_classes
+    }
+
+    /// Short identifier for labels ("tfm2x2d32").
+    pub fn label(&self) -> String {
+        format!("tfm{}x{}d{}", self.n_layers, self.n_heads, self.d_model)
+    }
+}
+
+/// True for the base-layout bias blocks (zero-initialized).
+fn is_ft_bias(name: &str) -> bool {
+    name.ends_with(".b")
+        || name.ends_with("bq")
+        || name.ends_with("bk")
+        || name.ends_with("bv")
+        || name.ends_with("bo")
+        || name.ends_with("bf1")
+        || name.ends_with("bf2")
+}
+
+/// Numeric offsets of one layer's blocks in the base flat vector.
+#[derive(Clone, Copy, Debug)]
+struct FtLayer {
+    ln1_g: usize,
+    ln1_b: usize,
+    wq: usize,
+    bq: usize,
+    wk: usize,
+    bk: usize,
+    wv: usize,
+    bv: usize,
+    wo: usize,
+    bo: usize,
+    ln2_g: usize,
+    ln2_b: usize,
+    wf1: usize,
+    bf1: usize,
+    wf2: usize,
+    bf2: usize,
+}
+
+/// Numeric offsets of the full base layout (derived from
+/// [`TransformerSpec::ft_layout`], held by the per-worker state so the
+/// forward never does name lookups).
+#[derive(Clone, Debug)]
+struct FtOffsets {
+    tok_emb: usize,
+    pos_emb: usize,
+    layers: Vec<FtLayer>,
+    final_ln_g: usize,
+    final_ln_b: usize,
+    head_w: usize,
+    head_b: usize,
+    total: usize,
+}
+
+impl FtOffsets {
+    fn new(spec: &TransformerSpec) -> Self {
+        let d = spec.d_model;
+        let f = spec.d_ff;
+        let mut off = 0usize;
+        let mut take = |len: usize| {
+            let at = off;
+            off += len;
+            at
+        };
+        let tok_emb = take(spec.vocab * d);
+        let pos_emb = take(spec.max_seq * d);
+        let layers = (0..spec.n_layers)
+            .map(|_| FtLayer {
+                ln1_g: take(d),
+                ln1_b: take(d),
+                wq: take(d * d),
+                bq: take(d),
+                wk: take(d * d),
+                bk: take(d),
+                wv: take(d * d),
+                bv: take(d),
+                wo: take(d * d),
+                bo: take(d),
+                ln2_g: take(d),
+                ln2_b: take(d),
+                wf1: take(d * f),
+                bf1: take(f),
+                wf2: take(f * d),
+                bf2: take(d),
+            })
+            .collect();
+        let final_ln_g = take(d);
+        let final_ln_b = take(d);
+        let head_w = take(d * spec.n_classes);
+        let head_b = take(spec.n_classes);
+        Self {
+            tok_emb,
+            pos_emb,
+            layers,
+            final_ln_g,
+            final_ln_b,
+            head_w,
+            head_b,
+            total: off,
+        }
+    }
+}
+
+/// (A offset, B offset) of one adapted projection, None if unadapted.
+type LoraPair = Option<(usize, usize)>;
+
+/// Per-layer adapter offsets in the LoRA flat vector.
+#[derive(Clone, Copy, Debug)]
+struct LoraLayer {
+    q: LoraPair,
+    k: LoraPair,
+    v: LoraPair,
+    o: LoraPair,
+}
+
+/// Numeric offsets of the LoRA layout.
+#[derive(Clone, Debug)]
+struct LoraOffsets {
+    layers: Vec<LoraLayer>,
+    head_w: usize,
+    head_b: usize,
+    total: usize,
+}
+
+impl LoraOffsets {
+    fn new(spec: &TransformerSpec) -> Self {
+        let d = spec.d_model;
+        let r = spec.lora_rank;
+        let t = spec.lora_targets;
+        let mut off = 0usize;
+        let mut pair = |on: bool| -> LoraPair {
+            if on {
+                let a = off;
+                off += d * r;
+                let b = off;
+                off += r * d;
+                Some((a, b))
+            } else {
+                None
+            }
+        };
+        let layers = (0..spec.n_layers)
+            .map(|_| LoraLayer {
+                q: pair(t.q),
+                k: pair(t.k),
+                v: pair(t.v),
+                o: pair(t.o),
+            })
+            .collect();
+        let head_w = off;
+        off += d * spec.n_classes;
+        let head_b = off;
+        off += spec.n_classes;
+        Self { layers, head_w, head_b, total: off }
+    }
+}
+
+/// Per-worker forward scratch: layout offsets + activation buffers sized
+/// for `max_seq`.  Workers of a parallel K-probe evaluation each own one
+/// (allocated once per dispatch, reused across that worker's probes).
+pub struct TransformerState {
+    ft: FtOffsets,
+    lora: LoraOffsets,
+    /// residual stream [seq, d]
+    x: Vec<f32>,
+    /// layernormed stream [seq, d]
+    xn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// merged attention output [seq, d]
+    attn: Vec<f32>,
+    /// per-query attention scores/probs [seq]
+    probs: Vec<f32>,
+    /// d-wide matmul staging
+    tmp_d: Vec<f32>,
+    /// second d-wide staging (LoRA delta on the output projection)
+    tmp_d2: Vec<f32>,
+    /// rank-r LoRA staging
+    tmp_r: Vec<f32>,
+    /// d_ff-wide MLP hidden staging
+    hid: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl TransformerState {
+    /// Scratch sized for `spec`.
+    pub fn new(spec: &TransformerSpec) -> Self {
+        let sd = spec.max_seq * spec.d_model;
+        Self {
+            ft: FtOffsets::new(spec),
+            lora: LoraOffsets::new(spec),
+            x: vec![0.0; sd],
+            xn: vec![0.0; sd],
+            q: vec![0.0; sd],
+            k: vec![0.0; sd],
+            v: vec![0.0; sd],
+            attn: vec![0.0; sd],
+            probs: vec![0.0; spec.max_seq],
+            tmp_d: vec![0.0; spec.d_model],
+            tmp_d2: vec![0.0; spec.d_model],
+            tmp_r: vec![0.0; spec.lora_rank],
+            hid: vec![0.0; spec.d_ff],
+            logits: vec![0.0; spec.n_classes],
+        }
+    }
+
+    /// The logits of the last forward pass.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+}
+
+/// `out = x W (+ b)` with W stored input-major `[d_in, d_out]` — the
+/// python `x @ W` convention.  Accumulates over inputs in ascending index
+/// order (per output element the identical f32 addition sequence as a
+/// per-output dot), so results are a pure function of the operands.
+fn matmul(x: &[f32], w: &[f32], b: Option<&[f32]>, out: &mut [f32]) {
+    let d_out = out.len();
+    debug_assert_eq!(w.len(), x.len() * d_out);
+    match b {
+        Some(b) => out.copy_from_slice(b),
+        None => out.iter_mut().for_each(|v| *v = 0.0),
+    }
+    for (i, &xi) in x.iter().enumerate() {
+        let wr = &w[i * d_out..(i + 1) * d_out];
+        for j in 0..d_out {
+            out[j] += xi * wr[j];
+        }
+    }
+}
+
+/// `out = scale * ((x A) B)` — the additive LoRA delta, A `[d_in, r]`,
+/// B `[r, d_out]` (mirrors `forward_pure`'s `scale * ((xn @ A) @ B)`).
+fn lora_delta(
+    x: &[f32],
+    a: &[f32],
+    bmat: &[f32],
+    r: usize,
+    scale: f32,
+    tmp_r: &mut [f32],
+    out: &mut [f32],
+) {
+    let tr = &mut tmp_r[..r];
+    tr.iter_mut().for_each(|v| *v = 0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        let ar = &a[i * r..(i + 1) * r];
+        for c in 0..r {
+            tr[c] += xi * ar[c];
+        }
+    }
+    let d_out = out.len();
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for c in 0..r {
+        let br = &bmat[c * d_out..(c + 1) * d_out];
+        let tc = tr[c];
+        for j in 0..d_out {
+            out[j] += tc * br[j];
+        }
+    }
+    for j in 0..d_out {
+        out[j] *= scale;
+    }
+}
+
+/// Row layernorm, eps 1e-5: statistics fold through f64 (fixed order),
+/// then `out = (x - mean) * rsqrt(var + eps) * g + b` in f32.
+fn layernorm_row(xr: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = xr.len() as f64;
+    let mut mean = 0.0f64;
+    for &v in xr {
+        mean += v as f64;
+    }
+    mean /= n;
+    let mut var = 0.0f64;
+    for &v in xr {
+        let c = v as f64 - mean;
+        var += c * c;
+    }
+    var /= n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for j in 0..xr.len() {
+        out[j] = (((xr[j] as f64 - mean) * inv) as f32) * g[j] + b[j];
+    }
+}
+
+/// tanh-approximation GELU (`jax.nn.gelu`'s default `approximate=True`).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_560_802_865_4_f64 as f32; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// The pooled position: 0 for CLS, `max(sum(mask) - 1, 0)` for last.
+fn pooled_position(pool: Pool, mask: &[f32]) -> usize {
+    match pool {
+        Pool::Cls => 0,
+        Pool::Last => {
+            let sum: f32 = mask.iter().sum();
+            (sum as i64 - 1).max(0) as usize
+        }
+    }
+}
+
+/// One forward pass of a single example: fills `state` and returns the
+/// logits.  `lora = None` runs the base model (FT mode); `Some` applies
+/// the rank-r deltas to the adapted projections and takes the classifier
+/// head from the LoRA vector (the base head is ignored), exactly like
+/// the reference `forward_pure`.
+pub fn forward_example<'a>(
+    spec: &TransformerSpec,
+    base: &[f32],
+    lora: Option<&[f32]>,
+    ids: &[i32],
+    mask: &[f32],
+    state: &'a mut TransformerState,
+) -> &'a [f32] {
+    let s = ids.len();
+    let d = spec.d_model;
+    let dh = spec.head_dim();
+    let r = spec.lora_rank;
+    assert!(
+        (1..=spec.max_seq).contains(&s),
+        "seq {s} outside 1..={}",
+        spec.max_seq
+    );
+    assert_eq!(mask.len(), s, "one mask value per token");
+    debug_assert_eq!(base.len(), state.ft.total, "base must match spec layout");
+    if let Some(lv) = lora {
+        debug_assert_eq!(lv.len(), state.lora.total, "lora must match spec layout");
+    }
+
+    // token + position embeddings
+    for t in 0..s {
+        let id = ids[t];
+        assert!(
+            id >= 0 && (id as usize) < spec.vocab,
+            "token id {id} outside vocab {}",
+            spec.vocab
+        );
+        let tok = &base[state.ft.tok_emb + id as usize * d..][..d];
+        let pos = &base[state.ft.pos_emb + t * d..][..d];
+        let xr = &mut state.x[t * d..(t + 1) * d];
+        for j in 0..d {
+            xr[j] = tok[j] + pos[j];
+        }
+    }
+
+    let denom = (dh as f32).sqrt();
+    for li in 0..spec.n_layers {
+        let lo = state.ft.layers[li];
+        let ll = state.lora.layers.get(li).copied();
+
+        // pre-LN + q/k/v projections (LoRA deltas on the adapted ones)
+        for t in 0..s {
+            layernorm_row(
+                &state.x[t * d..(t + 1) * d],
+                &base[lo.ln1_g..][..d],
+                &base[lo.ln1_b..][..d],
+                &mut state.xn[t * d..(t + 1) * d],
+            );
+        }
+        for t in 0..s {
+            let xr = &state.xn[t * d..(t + 1) * d];
+            matmul(xr, &base[lo.wq..][..d * d], Some(&base[lo.bq..][..d]), &mut state.q[t * d..(t + 1) * d]);
+            matmul(xr, &base[lo.wk..][..d * d], Some(&base[lo.bk..][..d]), &mut state.k[t * d..(t + 1) * d]);
+            matmul(xr, &base[lo.wv..][..d * d], Some(&base[lo.bv..][..d]), &mut state.v[t * d..(t + 1) * d]);
+        }
+        if let (Some(lv), Some(ll)) = (lora, ll) {
+            for t in 0..s {
+                for (pair, buf) in [
+                    (ll.q, &mut state.q),
+                    (ll.k, &mut state.k),
+                    (ll.v, &mut state.v),
+                ] {
+                    if let Some((ao, bo)) = pair {
+                        lora_delta(
+                            &state.xn[t * d..(t + 1) * d],
+                            &lv[ao..][..d * r],
+                            &lv[bo..][..r * d],
+                            r,
+                            spec.lora_scale,
+                            &mut state.tmp_r,
+                            &mut state.tmp_d,
+                        );
+                        let row = &mut buf[t * d..(t + 1) * d];
+                        for j in 0..d {
+                            row[j] += state.tmp_d[j];
+                        }
+                    }
+                }
+            }
+        }
+
+        // multi-head attention: additive -1e9 padding mask, where-style
+        // causal mask, max-shifted softmax with an f64 partition function
+        for hh in 0..spec.n_heads {
+            let hd0 = hh * dh;
+            for t in 0..s {
+                for j in 0..s {
+                    let qrow = &state.q[t * d + hd0..t * d + hd0 + dh];
+                    let krow = &state.k[j * d + hd0..j * d + hd0 + dh];
+                    let mut sc = crate::tensor::dot(qrow, krow) / denom;
+                    sc += (1.0 - mask[j]) * NEG_INF;
+                    if spec.causal && j > t {
+                        sc = NEG_INF;
+                    }
+                    state.probs[j] = sc;
+                }
+                let mut m = f32::NEG_INFINITY;
+                for j in 0..s {
+                    m = m.max(state.probs[j]);
+                }
+                let mut z = 0.0f64;
+                for j in 0..s {
+                    z += ((state.probs[j] - m) as f64).exp();
+                }
+                for j in 0..s {
+                    state.probs[j] = (((state.probs[j] - m) as f64).exp() / z) as f32;
+                }
+                let ar = &mut state.attn[t * d + hd0..t * d + hd0 + dh];
+                ar.iter_mut().for_each(|v| *v = 0.0);
+                for j in 0..s {
+                    let p = state.probs[j];
+                    let vr = &state.v[j * d + hd0..j * d + hd0 + dh];
+                    for c in 0..dh {
+                        ar[c] += p * vr[c];
+                    }
+                }
+            }
+        }
+
+        // output projection (+ optional LoRA delta) + residual
+        for t in 0..s {
+            let arow = &state.attn[t * d..(t + 1) * d];
+            matmul(arow, &base[lo.wo..][..d * d], Some(&base[lo.bo..][..d]), &mut state.tmp_d);
+            if let (Some(lv), Some(ll)) = (lora, ll) {
+                if let Some((ao, bo)) = ll.o {
+                    lora_delta(
+                        arow,
+                        &lv[ao..][..d * r],
+                        &lv[bo..][..r * d],
+                        r,
+                        spec.lora_scale,
+                        &mut state.tmp_r,
+                        &mut state.tmp_d2,
+                    );
+                    for j in 0..d {
+                        state.tmp_d[j] += state.tmp_d2[j];
+                    }
+                }
+            }
+            let xr = &mut state.x[t * d..(t + 1) * d];
+            for j in 0..d {
+                xr[j] += state.tmp_d[j];
+            }
+        }
+
+        // pre-LN MLP block with tanh-GELU + residual
+        for t in 0..s {
+            layernorm_row(
+                &state.x[t * d..(t + 1) * d],
+                &base[lo.ln2_g..][..d],
+                &base[lo.ln2_b..][..d],
+                &mut state.xn[t * d..(t + 1) * d],
+            );
+        }
+        for t in 0..s {
+            matmul(
+                &state.xn[t * d..(t + 1) * d],
+                &base[lo.wf1..][..d * spec.d_ff],
+                Some(&base[lo.bf1..][..spec.d_ff]),
+                &mut state.hid,
+            );
+            state.hid.iter_mut().for_each(|v| *v = gelu(*v));
+            matmul(
+                &state.hid,
+                &base[lo.wf2..][..spec.d_ff * d],
+                Some(&base[lo.bf2..][..d]),
+                &mut state.tmp_d,
+            );
+            let xr = &mut state.x[t * d..(t + 1) * d];
+            for j in 0..d {
+                xr[j] += state.tmp_d[j];
+            }
+        }
+    }
+
+    // final LN, pooling, classifier head (LoRA head in LoRA mode)
+    for t in 0..s {
+        layernorm_row(
+            &state.x[t * d..(t + 1) * d],
+            &base[state.ft.final_ln_g..][..d],
+            &base[state.ft.final_ln_b..][..d],
+            &mut state.xn[t * d..(t + 1) * d],
+        );
+    }
+    let pt = pooled_position(spec.pool, mask).min(s - 1);
+    let c = spec.n_classes;
+    let (hw, hb): (&[f32], &[f32]) = match lora {
+        Some(lv) => (
+            &lv[state.lora.head_w..][..d * c],
+            &lv[state.lora.head_b..][..c],
+        ),
+        None => (
+            &base[state.ft.head_w..][..d * c],
+            &base[state.ft.head_b..][..c],
+        ),
+    };
+    matmul(&state.xn[pt * d..(pt + 1) * d], hw, Some(hb), &mut state.logits);
+    &state.logits
+}
+
+/// Mean softmax cross-entropy of a token minibatch: examples evaluated in
+/// data-row order, losses folded through one f64 accumulator — the fixed
+/// term sequence that keeps every evaluation path (loss_dir, vectorized
+/// loss_k, streamed loss_probes) bitwise identical.
+pub fn batch_loss(
+    spec: &TransformerSpec,
+    base: &[f32],
+    lora: Option<&[f32]>,
+    ids: &[i32],
+    mask: &[f32],
+    seq: usize,
+    labels: &[i32],
+    state: &mut TransformerState,
+) -> f64 {
+    let b = labels.len();
+    debug_assert_eq!(ids.len(), b * seq, "one id row per label");
+    debug_assert_eq!(mask.len(), b * seq, "one mask row per label");
+    let mut acc = 0.0f64;
+    for row in 0..b {
+        let logits = forward_example(
+            spec,
+            base,
+            lora,
+            &ids[row * seq..(row + 1) * seq],
+            &mask[row * seq..(row + 1) * seq],
+            state,
+        );
+        acc += cross_entropy(logits, labels[row]);
+    }
+    acc / b.max(1) as f64
+}
+
+// ---------------------------------------------------------------------------
+// Analytic directional derivative (forward-mode JVP), diagnostics only
+// ---------------------------------------------------------------------------
+
+/// f64 dual buffers for one JVP forward (values + tangents side by side).
+struct Dual {
+    x: Vec<f64>,
+    dx: Vec<f64>,
+}
+
+impl Dual {
+    fn new(n: usize) -> Self {
+        Self { x: vec![0.0; n], dx: vec![0.0; n] }
+    }
+}
+
+/// `out = x W + b`, `dout = dx W + x dW + db` (f64, input-major W).
+fn mm_dual(
+    x: &[f64],
+    dx: &[f64],
+    w: &[f64],
+    dw: Option<&[f64]>,
+    b: Option<(&[f64], Option<&[f64]>)>,
+    out: &mut [f64],
+    dout: &mut [f64],
+) {
+    let d_out = out.len();
+    match b {
+        Some((bv, dbv)) => {
+            out.copy_from_slice(bv);
+            match dbv {
+                Some(dbv) => dout.copy_from_slice(dbv),
+                None => dout.iter_mut().for_each(|v| *v = 0.0),
+            }
+        }
+        None => {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            dout.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+    for i in 0..x.len() {
+        let wr = &w[i * d_out..(i + 1) * d_out];
+        for j in 0..d_out {
+            out[j] += x[i] * wr[j];
+            dout[j] += dx[i] * wr[j];
+        }
+        if let Some(dw) = dw {
+            let dwr = &dw[i * d_out..(i + 1) * d_out];
+            for j in 0..d_out {
+                dout[j] += x[i] * dwr[j];
+            }
+        }
+    }
+}
+
+/// Layernorm JVP (gain/bias are constants here: the base model is either
+/// the trainable vector itself — handled by passing `dg`/`db` — or
+/// frozen).
+fn ln_dual(
+    x: &[f64],
+    dx: &[f64],
+    g: &[f64],
+    dg: Option<&[f64]>,
+    b: &[f64],
+    db: Option<&[f64]>,
+    out: &mut [f64],
+    dout: &mut [f64],
+) {
+    let n = x.len() as f64;
+    let mut mu = 0.0;
+    let mut dmu = 0.0;
+    for i in 0..x.len() {
+        mu += x[i];
+        dmu += dx[i];
+    }
+    mu /= n;
+    dmu /= n;
+    let mut var = 0.0;
+    let mut dvar = 0.0;
+    for i in 0..x.len() {
+        let c = x[i] - mu;
+        var += c * c;
+        dvar += 2.0 * c * (dx[i] - dmu);
+    }
+    var /= n;
+    dvar /= n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    let dinv = -0.5 * inv * inv * inv * dvar;
+    for i in 0..x.len() {
+        let xh = (x[i] - mu) * inv;
+        let dxh = (dx[i] - dmu) * inv + (x[i] - mu) * dinv;
+        out[i] = xh * g[i] + b[i];
+        dout[i] = dxh * g[i];
+        if let Some(dg) = dg {
+            dout[i] += xh * dg[i];
+        }
+        if let Some(db) = db {
+            dout[i] += db[i];
+        }
+    }
+}
+
+/// LoRA delta JVP: `out = s * ((x A) B)`; `dout` carries all three
+/// product-rule terms (the A/B tangents come from the trainable LoRA
+/// vector at offsets `ao`/`bo` in `l64`/`dl64`).
+fn lora_dual(
+    xr: &[f64],
+    dxr: &[f64],
+    ao: usize,
+    bo: usize,
+    r: usize,
+    scale: f64,
+    l64: &[f64],
+    dl64: &[f64],
+    tr: &mut Dual,
+    out: &mut Dual,
+) {
+    let a = &l64[ao..ao + xr.len() * r];
+    let da = &dl64[ao..ao + xr.len() * r];
+    let d_out = out.x.len();
+    let bm = &l64[bo..bo + r * d_out];
+    let dbm = &dl64[bo..bo + r * d_out];
+    for cc in 0..r {
+        tr.x[cc] = 0.0;
+        tr.dx[cc] = 0.0;
+    }
+    for i in 0..xr.len() {
+        for cc in 0..r {
+            tr.x[cc] += xr[i] * a[i * r + cc];
+            tr.dx[cc] += dxr[i] * a[i * r + cc] + xr[i] * da[i * r + cc];
+        }
+    }
+    for j in 0..d_out {
+        out.x[j] = 0.0;
+        out.dx[j] = 0.0;
+    }
+    for cc in 0..r {
+        for j in 0..d_out {
+            out.x[j] += tr.x[cc] * bm[cc * d_out + j];
+            out.dx[j] += tr.dx[cc] * bm[cc * d_out + j] + tr.x[cc] * dbm[cc * d_out + j];
+        }
+    }
+    for j in 0..d_out {
+        out.x[j] *= scale;
+        out.dx[j] *= scale;
+    }
+}
+
+/// GELU (tanh approximation) value + derivative at `x`.
+fn gelu_dual(x: f64, dx: f64) -> (f64, f64) {
+    let c = (2.0 / std::f64::consts::PI).sqrt();
+    let u = c * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let y = 0.5 * x * (1.0 + t);
+    let du = c * (1.0 + 3.0 * 0.044715 * x * x) * dx;
+    let dy = 0.5 * (1.0 + t) * dx + 0.5 * x * (1.0 - t * t) * du;
+    (y, dy)
+}
+
+/// Analytic directional derivative of the batch loss along `dir`, via a
+/// full forward-mode (JVP) pass in f64.  In LoRA mode (`lora = Some`)
+/// the tangent rides the LoRA vector; in FT mode it rides the base.
+/// Returns `(loss, d loss / d tau at tau = 0)` — the reference the
+/// finite-difference cross-checks in `tests/transformer_train.rs`
+/// compare `loss_dir` against.  Diagnostics only: f64 throughout, no
+/// claim of bitwise agreement with the f32 training forward.
+pub fn batch_dir_derivative(
+    spec: &TransformerSpec,
+    base: &[f32],
+    lora: Option<&[f32]>,
+    dir: &[f32],
+    ids: &[i32],
+    mask: &[f32],
+    seq: usize,
+    labels: &[i32],
+) -> (f64, f64) {
+    let d = spec.d_model;
+    let dh = spec.head_dim();
+    let r = spec.lora_rank;
+    let c = spec.n_classes;
+    let nb = labels.len();
+    let fo = FtOffsets::new(spec);
+    let lo_all = LoraOffsets::new(spec);
+    assert_eq!(base.len(), fo.total, "base must match spec layout");
+
+    let b64: Vec<f64> = base.iter().map(|&v| v as f64).collect();
+    // the tangent lives on whichever vector is trainable
+    let (l64, db64, dl64): (Vec<f64>, Vec<f64>, Vec<f64>) = match lora {
+        Some(lv) => {
+            assert_eq!(lv.len(), lo_all.total, "lora must match spec layout");
+            assert_eq!(dir.len(), lo_all.total, "dir must match d_lora");
+            (
+                lv.iter().map(|&v| v as f64).collect(),
+                vec![0.0; fo.total],
+                dir.iter().map(|&v| v as f64).collect(),
+            )
+        }
+        None => {
+            assert_eq!(dir.len(), fo.total, "dir must match d_ft");
+            (
+                Vec::new(),
+                dir.iter().map(|&v| v as f64).collect(),
+                Vec::new(),
+            )
+        }
+    };
+    let lora_mode = lora.is_some();
+
+    let sd = seq * d;
+    let mut x = Dual::new(sd);
+    let mut xn = Dual::new(sd);
+    let mut q = Dual::new(sd);
+    let mut k = Dual::new(sd);
+    let mut v = Dual::new(sd);
+    let mut attn = Dual::new(sd);
+    let mut scores = Dual::new(seq);
+    let mut tmp = Dual::new(d);
+    let mut tmp2 = Dual::new(d);
+    let mut tr = Dual::new(r);
+    let mut hid = Dual::new(spec.d_ff);
+    let mut logits = Dual::new(c);
+
+    let scale64 = spec.lora_scale as f64;
+
+    let mut loss = 0.0f64;
+    let mut dloss = 0.0f64;
+    for row in 0..nb {
+        let rids = &ids[row * seq..(row + 1) * seq];
+        let rmask = &mask[row * seq..(row + 1) * seq];
+        // embeddings
+        for t in 0..seq {
+            let id = rids[t] as usize;
+            for j in 0..d {
+                x.x[t * d + j] = b64[fo.tok_emb + id * d + j] + b64[fo.pos_emb + t * d + j];
+                x.dx[t * d + j] =
+                    db64[fo.tok_emb + id * d + j] + db64[fo.pos_emb + t * d + j];
+            }
+        }
+        for li in 0..spec.n_layers {
+            let lo = fo.layers[li];
+            let ll = lo_all.layers.get(li).copied();
+            for t in 0..seq {
+                ln_dual(
+                    &x.x[t * d..(t + 1) * d],
+                    &x.dx[t * d..(t + 1) * d],
+                    &b64[lo.ln1_g..lo.ln1_g + d],
+                    Some(&db64[lo.ln1_g..lo.ln1_g + d]),
+                    &b64[lo.ln1_b..lo.ln1_b + d],
+                    Some(&db64[lo.ln1_b..lo.ln1_b + d]),
+                    &mut xn.x[t * d..(t + 1) * d],
+                    &mut xn.dx[t * d..(t + 1) * d],
+                );
+            }
+            for t in 0..seq {
+                let xr = &xn.x[t * d..(t + 1) * d];
+                let dxr = &xn.dx[t * d..(t + 1) * d];
+                for (w0, b0, buf) in [
+                    (lo.wq, lo.bq, &mut q),
+                    (lo.wk, lo.bk, &mut k),
+                    (lo.wv, lo.bv, &mut v),
+                ] {
+                    mm_dual(
+                        xr,
+                        dxr,
+                        &b64[w0..w0 + d * d],
+                        Some(&db64[w0..w0 + d * d]),
+                        Some((&b64[b0..b0 + d], Some(&db64[b0..b0 + d]))),
+                        &mut buf.x[t * d..(t + 1) * d],
+                        &mut buf.dx[t * d..(t + 1) * d],
+                    );
+                }
+                if lora_mode {
+                    if let Some(ll) = ll {
+                        for (pair, buf) in
+                            [(ll.q, &mut q), (ll.k, &mut k), (ll.v, &mut v)]
+                        {
+                            if let Some((ao, bo)) = pair {
+                                lora_dual(
+                                    xr, dxr, ao, bo, r, scale64, &l64, &dl64, &mut tr, &mut tmp,
+                                );
+                                for j in 0..d {
+                                    buf.x[t * d + j] += tmp.x[j];
+                                    buf.dx[t * d + j] += tmp.dx[j];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // attention JVP
+            let denom = (dh as f64).sqrt();
+            for hh in 0..spec.n_heads {
+                let hd0 = hh * dh;
+                for t in 0..seq {
+                    for j in 0..seq {
+                        let mut sc = 0.0;
+                        let mut dsc = 0.0;
+                        for cc in 0..dh {
+                            let qq = q.x[t * d + hd0 + cc];
+                            let kk = k.x[j * d + hd0 + cc];
+                            sc += qq * kk;
+                            dsc +=
+                                q.dx[t * d + hd0 + cc] * kk + qq * k.dx[j * d + hd0 + cc];
+                        }
+                        sc /= denom;
+                        dsc /= denom;
+                        sc += (1.0 - rmask[j] as f64) * NEG_INF as f64;
+                        if spec.causal && j > t {
+                            sc = NEG_INF as f64;
+                            dsc = 0.0;
+                        }
+                        scores.x[j] = sc;
+                        scores.dx[j] = dsc;
+                    }
+                    let mut m = f64::NEG_INFINITY;
+                    for j in 0..seq {
+                        m = m.max(scores.x[j]);
+                    }
+                    let mut z = 0.0;
+                    for j in 0..seq {
+                        z += (scores.x[j] - m).exp();
+                    }
+                    let mut sdot = 0.0;
+                    for j in 0..seq {
+                        scores.x[j] = (scores.x[j] - m).exp() / z; // now probs
+                        sdot += scores.x[j] * scores.dx[j];
+                    }
+                    for cc in 0..dh {
+                        let mut o = 0.0;
+                        let mut doo = 0.0;
+                        for j in 0..seq {
+                            let p = scores.x[j];
+                            let dp = p * (scores.dx[j] - sdot);
+                            o += p * v.x[j * d + hd0 + cc];
+                            doo += dp * v.x[j * d + hd0 + cc] + p * v.dx[j * d + hd0 + cc];
+                        }
+                        attn.x[t * d + hd0 + cc] = o;
+                        attn.dx[t * d + hd0 + cc] = doo;
+                    }
+                }
+            }
+            for t in 0..seq {
+                mm_dual(
+                    &attn.x[t * d..(t + 1) * d],
+                    &attn.dx[t * d..(t + 1) * d],
+                    &b64[lo.wo..lo.wo + d * d],
+                    Some(&db64[lo.wo..lo.wo + d * d]),
+                    Some((&b64[lo.bo..lo.bo + d], Some(&db64[lo.bo..lo.bo + d]))),
+                    &mut tmp.x,
+                    &mut tmp.dx,
+                );
+                if lora_mode {
+                    if let Some(Some((ao, bo))) = ll.map(|l| l.o) {
+                        lora_dual(
+                            &attn.x[t * d..(t + 1) * d],
+                            &attn.dx[t * d..(t + 1) * d],
+                            ao,
+                            bo,
+                            r,
+                            scale64,
+                            &l64,
+                            &dl64,
+                            &mut tr,
+                            &mut tmp2,
+                        );
+                        for j in 0..d {
+                            tmp.x[j] += tmp2.x[j];
+                            tmp.dx[j] += tmp2.dx[j];
+                        }
+                    }
+                }
+                for j in 0..d {
+                    x.x[t * d + j] += tmp.x[j];
+                    x.dx[t * d + j] += tmp.dx[j];
+                }
+            }
+            for t in 0..seq {
+                ln_dual(
+                    &x.x[t * d..(t + 1) * d],
+                    &x.dx[t * d..(t + 1) * d],
+                    &b64[lo.ln2_g..lo.ln2_g + d],
+                    Some(&db64[lo.ln2_g..lo.ln2_g + d]),
+                    &b64[lo.ln2_b..lo.ln2_b + d],
+                    Some(&db64[lo.ln2_b..lo.ln2_b + d]),
+                    &mut xn.x[t * d..(t + 1) * d],
+                    &mut xn.dx[t * d..(t + 1) * d],
+                );
+                mm_dual(
+                    &xn.x[t * d..(t + 1) * d],
+                    &xn.dx[t * d..(t + 1) * d],
+                    &b64[lo.wf1..lo.wf1 + d * spec.d_ff],
+                    Some(&db64[lo.wf1..lo.wf1 + d * spec.d_ff]),
+                    Some((
+                        &b64[lo.bf1..lo.bf1 + spec.d_ff],
+                        Some(&db64[lo.bf1..lo.bf1 + spec.d_ff]),
+                    )),
+                    &mut hid.x,
+                    &mut hid.dx,
+                );
+                for e in 0..spec.d_ff {
+                    let (y, dy) = gelu_dual(hid.x[e], hid.dx[e]);
+                    hid.x[e] = y;
+                    hid.dx[e] = dy;
+                }
+                mm_dual(
+                    &hid.x,
+                    &hid.dx,
+                    &b64[lo.wf2..lo.wf2 + spec.d_ff * d],
+                    Some(&db64[lo.wf2..lo.wf2 + spec.d_ff * d]),
+                    Some((&b64[lo.bf2..lo.bf2 + d], Some(&db64[lo.bf2..lo.bf2 + d]))),
+                    &mut tmp.x,
+                    &mut tmp.dx,
+                );
+                for j in 0..d {
+                    x.x[t * d + j] += tmp.x[j];
+                    x.dx[t * d + j] += tmp.dx[j];
+                }
+            }
+        }
+        for t in 0..seq {
+            ln_dual(
+                &x.x[t * d..(t + 1) * d],
+                &x.dx[t * d..(t + 1) * d],
+                &b64[fo.final_ln_g..fo.final_ln_g + d],
+                Some(&db64[fo.final_ln_g..fo.final_ln_g + d]),
+                &b64[fo.final_ln_b..fo.final_ln_b + d],
+                Some(&db64[fo.final_ln_b..fo.final_ln_b + d]),
+                &mut xn.x[t * d..(t + 1) * d],
+                &mut xn.dx[t * d..(t + 1) * d],
+            );
+        }
+        let pt = pooled_position(spec.pool, rmask).min(seq - 1);
+        if lora_mode {
+            mm_dual(
+                &xn.x[pt * d..(pt + 1) * d],
+                &xn.dx[pt * d..(pt + 1) * d],
+                &l64[lo_all.head_w..lo_all.head_w + d * c],
+                Some(&dl64[lo_all.head_w..lo_all.head_w + d * c]),
+                Some((
+                    &l64[lo_all.head_b..lo_all.head_b + c],
+                    Some(&dl64[lo_all.head_b..lo_all.head_b + c]),
+                )),
+                &mut logits.x,
+                &mut logits.dx,
+            );
+        } else {
+            mm_dual(
+                &xn.x[pt * d..(pt + 1) * d],
+                &xn.dx[pt * d..(pt + 1) * d],
+                &b64[fo.head_w..fo.head_w + d * c],
+                Some(&db64[fo.head_w..fo.head_w + d * c]),
+                Some((
+                    &b64[fo.head_b..fo.head_b + c],
+                    Some(&db64[fo.head_b..fo.head_b + c]),
+                )),
+                &mut logits.x,
+                &mut logits.dx,
+            );
+        }
+        // cross-entropy JVP: dL = sum_j (softmax_j - onehot_j) dz_j
+        let lab = labels[row] as usize;
+        let mut m = f64::NEG_INFINITY;
+        for j in 0..c {
+            m = m.max(logits.x[j]);
+        }
+        let mut z = 0.0;
+        for j in 0..c {
+            z += (logits.x[j] - m).exp();
+        }
+        loss += m + z.ln() - logits.x[lab];
+        for j in 0..c {
+            let p = (logits.x[j] - m).exp() / z;
+            let ind = if j == lab { 1.0 } else { 0.0 };
+            dloss += (p - ind) * logits.dx[j];
+        }
+    }
+    (loss / nb.max(1) as f64, dloss / nb.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::views;
+
+    fn tiny() -> TransformerSpec {
+        TransformerSpec::new(64, 16, 2, 2, 32, 8, 2, false, Pool::Cls, 2).unwrap()
+    }
+
+    #[test]
+    fn layouts_match_python_names_and_sizes() {
+        let s = tiny();
+        let ft = s.ft_layout();
+        assert_eq!(ft[0].name, "tok_emb");
+        assert_eq!(ft[0].shape, vec![64, 16]);
+        assert_eq!(ft[1].name, "pos_emb");
+        assert_eq!(ft[2].name, "layer0.ln1.g");
+        assert_eq!(ft.last().unwrap().name, "head.b");
+        let total: usize = ft.iter().map(|l| l.len).sum();
+        assert_eq!(total, s.d_ft());
+
+        let lora = s.lora_layout();
+        // reference q+v targets: per layer a/b for q then v
+        assert_eq!(lora[0].name, "layer0.lora_q.a");
+        assert_eq!(lora[0].shape, vec![16, 2]);
+        assert_eq!(lora[1].name, "layer0.lora_q.b");
+        assert_eq!(lora[1].shape, vec![2, 16]);
+        assert_eq!(lora[2].name, "layer0.lora_v.a");
+        assert_eq!(lora[3].name, "layer0.lora_v.b");
+        assert_eq!(lora[lora.len() - 2].name, "head.w");
+        assert_eq!(lora.last().unwrap().name, "head.b");
+        let total: usize = lora.iter().map(|l| l.len).sum();
+        assert_eq!(total, s.d_lora());
+        // model::views slices both flat vectors by these layouts unchanged
+        let base = s.init_base(1);
+        assert!(views(&base, &ft).is_ok());
+        let lv = s.init_lora(1, Some(&base));
+        assert!(views(&lv, &lora).is_ok());
+    }
+
+    #[test]
+    fn init_is_deterministic_with_reference_structure() {
+        let s = tiny();
+        let a = s.init_base(7);
+        assert_eq!(a, s.init_base(7));
+        assert_ne!(a, s.init_base(8));
+        let fo = FtOffsets::new(&s);
+        // layernorm gains 1, biases 0
+        assert!(a[fo.layers[0].ln1_g..fo.layers[0].ln1_g + 16].iter().all(|&v| v == 1.0));
+        assert!(a[fo.layers[0].bq..fo.layers[0].bq + 16].iter().all(|&v| v == 0.0));
+        assert!(a[fo.head_b..fo.head_b + 2].iter().all(|&v| v == 0.0));
+        // weights are small but nonzero
+        assert!(a[fo.layers[0].wq..fo.layers[0].wq + 256].iter().any(|&v| v != 0.0));
+
+        let l = s.init_lora(7, Some(&a));
+        assert_eq!(l, s.init_lora(7, Some(&a)));
+        let lo = LoraOffsets::new(&s);
+        // B factors zero (the delta starts at 0), head copied from base
+        let (_, qb) = lo.layers[0].q.unwrap();
+        assert!(l[qb..qb + 32].iter().all(|&v| v == 0.0));
+        assert_eq!(&l[lo.head_w..lo.head_w + 32], &a[fo.head_w..fo.head_w + 32]);
+    }
+
+    #[test]
+    fn lora_targets_parse_and_layout_order() {
+        assert_eq!(LoraTargets::parse("qv").unwrap(), LoraTargets::qv());
+        assert_eq!(LoraTargets::parse("v,q").unwrap(), LoraTargets::qv());
+        let all = LoraTargets::parse("qkvo").unwrap();
+        assert_eq!(all.label(), "qkvo");
+        assert!(LoraTargets::parse("").is_err());
+        assert!(LoraTargets::parse("x").is_err());
+        let mut s = tiny();
+        s.lora_targets = all;
+        let lora = s.lora_layout();
+        assert_eq!(lora[0].name, "layer0.lora_q.a");
+        assert_eq!(lora[2].name, "layer0.lora_k.a");
+        assert_eq!(lora[4].name, "layer0.lora_v.a");
+        assert_eq!(lora[6].name, "layer0.lora_o.a");
+        assert_eq!(s.d_lora(), 2 * 4 * 2 * 16 * 2 + 16 * 2 + 2);
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_zero_lora_delta_changes_only_head() {
+        let s = tiny();
+        let base = s.init_base(3);
+        let ids = [1i32, 5, 9, 2];
+        let mask = [1.0f32, 1.0, 1.0, 1.0];
+        let mut st1 = TransformerState::new(&s);
+        let mut st2 = TransformerState::new(&s);
+        let a = forward_example(&s, &base, None, &ids, &mask, &mut st1).to_vec();
+        let b = forward_example(&s, &base, None, &ids, &mask, &mut st2).to_vec();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // B = 0 => adapter delta is exactly 0; with the head copied from
+        // the base, LoRA-mode logits equal FT-mode logits bit for bit
+        let lv = s.init_lora(3, Some(&base));
+        let c = forward_example(&s, &base, Some(&lv), &ids, &mask, &mut st1).to_vec();
+        for (x, y) in a.iter().zip(c.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn padded_positions_do_not_affect_cls_logits() {
+        let s = tiny();
+        let base = s.init_base(11);
+        let mut st = TransformerState::new(&s);
+        let ids_short = [1i32, 7, 3];
+        let mask_short = [1.0f32, 1.0, 1.0];
+        let a = forward_example(&s, &base, None, &ids_short, &mask_short, &mut st).to_vec();
+        // same example padded out with ids that must not leak through
+        let ids_pad = [1i32, 7, 3, 63, 62];
+        let mask_pad = [1.0f32, 1.0, 1.0, 0.0, 0.0];
+        let b = forward_example(&s, &base, None, &ids_pad, &mask_pad, &mut st).to_vec();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn causal_masking_blocks_future_tokens() {
+        let mut s = tiny();
+        s.causal = true;
+        s.pool = Pool::Last;
+        let base = s.init_base(5);
+        let mut st = TransformerState::new(&s);
+        // pooled position is 2 (3 valid tokens); the masked-off position 3
+        // carries different ids in the two calls and must not leak
+        let a = forward_example(&s, &base, None, &[1, 4, 9, 13], &[1.0, 1.0, 1.0, 0.0], &mut st)
+            .to_vec();
+        let b = forward_example(&s, &base, None, &[1, 4, 9, 44], &[1.0, 1.0, 1.0, 0.0], &mut st)
+            .to_vec();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn jvp_matches_finite_difference_on_lora_subspace() {
+        let s = tiny();
+        let base = s.init_base(17);
+        let mut lv = s.init_lora(17, Some(&base));
+        // move off the B = 0 init so the adapters actually contribute
+        let mut rng = crate::rng::Rng::new(23);
+        for vv in lv.iter_mut() {
+            *vv += 0.05 * rng.normal() as f32;
+        }
+        let mut dir = vec![0.0f32; s.d_lora()];
+        rng.fill_normal(&mut dir);
+        let ids = [1i32, 3, 8, 21];
+        let mask = [1.0f32, 1.0, 1.0, 1.0];
+        let labels = [0i32, 1];
+        let all_ids = [ids, [1, 9, 2, 4]].concat();
+        let all_mask = [mask, mask].concat();
+        let (loss, dd) = batch_dir_derivative(
+            &s, &base, Some(&lv), &dir, &all_ids, &all_mask, 4, &labels,
+        );
+        assert!(loss.is_finite());
+        // central finite difference of the f64 JVP loss itself
+        let eps = 1e-3f32;
+        let perturb = |scale: f32| {
+            let lp: Vec<f32> =
+                lv.iter().zip(dir.iter()).map(|(a, b)| a + scale * b).collect();
+            let zero = vec![0.0f32; s.d_lora()];
+            batch_dir_derivative(&s, &base, Some(&lp), &zero, &all_ids, &all_mask, 4, &labels).0
+        };
+        let fd = (perturb(eps) - perturb(-eps)) / (2.0 * eps as f64);
+        let denom = dd.abs().max(1e-8);
+        assert!(
+            (fd - dd).abs() / denom < 2e-2,
+            "analytic {dd} vs fd {fd}"
+        );
+    }
+}

@@ -10,6 +10,10 @@
 //!   probe algebra) dominates the step — the first workload of that shape
 //!   (DESIGN.md §12).  Implements the full batched surface including
 //!   streamed `loss_probes`.
+//! * [`TransformerOracle`] (in `transformer.rs`) — the paper's workload
+//!   shape: a host-evaluated decoder-transformer classifier with an
+//!   FT or LoRA-restricted trainable subspace (DESIGN.md §13).  Same
+//!   full batched surface as the MLP.
 //! * [`QuadraticOracle`], [`LinRegOracle`], [`LogRegOracle`] — closed-form
 //!   substrates for tests, the Fig. 2 toy experiment, and fast ablations.
 //!   Each overrides [`Oracle::loss_k`] with a vectorized batch evaluation
@@ -23,10 +27,12 @@
 mod closed_form;
 mod mlp;
 mod pjrt;
+mod transformer;
 
 pub use closed_form::{LinRegOracle, LogRegOracle, QuadraticOracle};
 pub use mlp::{hash_features, MlpOracle};
 pub use pjrt::{read_f32_bin as read_params_bin, PjrtOracle};
+pub use transformer::TransformerOracle;
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,551 @@
+//! Transformer + LoRA fine-tuning oracle (DESIGN.md §13).
+//!
+//! The paper's empirical setting: ZO fine-tuning of a decoder-transformer
+//! classifier through a LoRA-restricted trainable subspace.  One oracle
+//! call is one minibatch forward of the [`crate::model::transformer`]
+//! core at the perturbed trainable vector; the K-probe paths parallelize
+//! **over probes** (each worker owns a perturbed trainable buffer and an
+//! activation scratch), never inside one forward, so losses are bitwise
+//! identical for any worker count.
+//!
+//! Two train modes share one oracle:
+//! * [`TrainMode::Ft`] — the full base vector (d_ft parameters) is
+//!   trainable and perturbed.
+//! * [`TrainMode::Lora`] — only the rank-r adapter factors + classifier
+//!   head (d_lora parameters) are trainable; the base stays frozen.  This
+//!   is the small-`d` regime where LDSD's learned sampler and the
+//!   streamed probe engine compound (the pairing studied in
+//!   arXiv 2402.11592).
+//!
+//! Streamed probes: a transformer loss is not a function of scalar
+//! projections, so — exactly like the MLP oracle — each worker
+//! *materializes the perturbed trainable vector* (O(d) per worker,
+//! independent of K) by visiting the probe row's regenerated column
+//! shards and applying the identical `w[i] = x[i] + tau * v[i]`
+//! expression the slice path uses.  Same floats in, same fixed-order
+//! forward after: bitwise-equal losses across storage modes (pinned by
+//! `tests/transformer_train.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::config::TrainMode;
+use crate::data::Batch;
+use crate::exec::ExecContext;
+use crate::model::transformer::{
+    batch_dir_derivative, batch_loss, TransformerSpec, TransformerState,
+};
+use crate::probe::ProbeSource;
+use crate::tensor::axpy_into;
+
+use super::Oracle;
+
+/// Decoder-transformer classifier oracle with a LoRA-restricted (or full)
+/// trainable subspace.  Implements the full batched `Oracle` surface —
+/// probe-parallel [`Oracle::loss_k`], streamed [`Oracle::loss_probes`],
+/// worker dispatch via [`Oracle::set_exec`] — with exact call accounting.
+pub struct TransformerOracle {
+    spec: TransformerSpec,
+    mode: TrainMode,
+    /// Full base vector (layout: [`TransformerSpec::ft_layout`]).  In FT
+    /// mode this *is* the trainable vector.
+    base: Vec<f32>,
+    /// LoRA vector (layout: [`TransformerSpec::lora_layout`]); empty in
+    /// FT mode.
+    lora: Vec<f32>,
+    /// Current minibatch token ids (B x seq).
+    ids: Vec<i32>,
+    /// Current minibatch key-padding mask (B x seq).
+    mask: Vec<f32>,
+    /// Current minibatch labels (length B).
+    labels: Vec<i32>,
+    /// Current minibatch sequence length.
+    seq: usize,
+    /// Perturbed-trainable scratch for `loss_dir`.
+    wtmp: Vec<f32>,
+    /// Activation scratch for the serial evaluation paths.
+    state: TransformerState,
+    exec: ExecContext,
+    calls: u64,
+    name: String,
+}
+
+impl TransformerOracle {
+    /// Build from an architecture, mode and explicit vectors.  `base`
+    /// must hold [`TransformerSpec::d_ft`] f32; in LoRA mode `lora` must
+    /// hold [`TransformerSpec::d_lora`] (in FT mode it must be empty).
+    pub fn new(
+        spec: TransformerSpec,
+        mode: TrainMode,
+        base: Vec<f32>,
+        lora: Vec<f32>,
+    ) -> Result<Self> {
+        if base.len() != spec.d_ft() {
+            bail!(
+                "transformer oracle: base holds {} f32, spec wants d_ft {}",
+                base.len(),
+                spec.d_ft()
+            );
+        }
+        match mode {
+            TrainMode::Lora => {
+                if lora.len() != spec.d_lora() {
+                    bail!(
+                        "transformer oracle: lora holds {} f32, spec wants d_lora {}",
+                        lora.len(),
+                        spec.d_lora()
+                    );
+                }
+            }
+            TrainMode::Ft => {
+                if !lora.is_empty() {
+                    bail!("transformer oracle: FT mode takes no lora vector");
+                }
+            }
+        }
+        let d = match mode {
+            TrainMode::Ft => base.len(),
+            TrainMode::Lora => lora.len(),
+        };
+        let state = TransformerState::new(&spec);
+        let name = format!("transformer:{}:{}", spec.label(), mode.as_str());
+        Ok(Self {
+            spec,
+            mode,
+            base,
+            lora,
+            ids: Vec::new(),
+            mask: Vec::new(),
+            labels: Vec::new(),
+            seq: 0,
+            wtmp: vec![0.0; d],
+            state,
+            exec: ExecContext::serial(),
+            calls: 0,
+            name,
+        })
+    }
+
+    /// Build with the deterministic reference init: base from
+    /// [`TransformerSpec::init_base`], and in LoRA mode adapters from
+    /// [`TransformerSpec::init_lora`] (head copied from the base).
+    pub fn from_seed(spec: TransformerSpec, mode: TrainMode, seed: u64) -> Self {
+        let base = spec.init_base(seed);
+        let lora = match mode {
+            TrainMode::Ft => Vec::new(),
+            TrainMode::Lora => spec.init_lora(seed, Some(&base)),
+        };
+        Self::new(spec, mode, base, lora).expect("reference init sizes the vectors")
+    }
+
+    /// The oracle's architecture.
+    pub fn spec(&self) -> &TransformerSpec {
+        &self.spec
+    }
+
+    /// The oracle's train mode.
+    pub fn mode(&self) -> TrainMode {
+        self.mode
+    }
+
+    /// The frozen/full base vector (FT mode: the trainable itself).
+    pub fn base(&self) -> &[f32] {
+        &self.base
+    }
+
+    fn ensure_batch(&self) -> Result<()> {
+        if self.labels.is_empty() {
+            bail!("{}: set_batch must be called before evaluation", self.name);
+        }
+        Ok(())
+    }
+
+    /// Analytic directional derivative of the current-batch loss along
+    /// `dir` on the trainable subspace, via the f64 forward-mode JVP
+    /// ([`batch_dir_derivative`]).  Returns `(loss, dloss/dtau)`.
+    /// Diagnostics only — the fd-vs-analytic cross-checks in
+    /// `tests/transformer_train.rs`; the training path never calls it.
+    pub fn dir_derivative(&self, dir: &[f32]) -> Result<(f64, f64)> {
+        self.ensure_batch()?;
+        let lora = match self.mode {
+            TrainMode::Ft => None,
+            TrainMode::Lora => Some(&self.lora[..]),
+        };
+        Ok(batch_dir_derivative(
+            &self.spec,
+            &self.base,
+            lora,
+            dir,
+            &self.ids,
+            &self.mask,
+            self.seq,
+            &self.labels,
+        ))
+    }
+
+    /// Shared `loss_k`/`loss_k_into` core: the K probes are evaluated
+    /// independently (probe-parallel on the installed context); each
+    /// worker forms `w = x + tau * v_j` into its own O(d) buffer and runs
+    /// the fixed-order minibatch forward.  Per probe the arithmetic is
+    /// exactly `loss_dir`'s, so the batched and looped paths agree bit
+    /// for bit.
+    fn loss_k_impl(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
+        let d = self.dim();
+        assert_eq!(dirs.len(), k * d, "dirs must be K x d");
+        self.ensure_batch()?;
+        self.calls += k as u64;
+        let spec = &self.spec;
+        let base = &self.base;
+        let lora_mode = self.mode == TrainMode::Lora;
+        let x: &[f32] = match self.mode {
+            TrainMode::Ft => &self.base,
+            TrainMode::Lora => &self.lora,
+        };
+        let ids = &self.ids;
+        let mask = &self.mask;
+        let labels = &self.labels;
+        let seq = self.seq;
+        let per_item_work = spec.forward_work(seq).saturating_mul(labels.len().max(1));
+        let vals = self.exec.map_items_sized_scratch(
+            k,
+            per_item_work,
+            || (vec![0.0f32; d], TransformerState::new(spec)),
+            |scratch, j| {
+                let (w, st) = scratch;
+                axpy_into(w, x, tau, &dirs[j * d..(j + 1) * d]);
+                if lora_mode {
+                    batch_loss(spec, base, Some(w), ids, mask, seq, labels, st)
+                } else {
+                    batch_loss(spec, w, None, ids, mask, seq, labels, st)
+                }
+            },
+        );
+        out.clear();
+        out.extend_from_slice(&vals);
+        Ok(())
+    }
+}
+
+impl Oracle for TransformerOracle {
+    fn dim(&self) -> usize {
+        match self.mode {
+            TrainMode::Ft => self.base.len(),
+            TrainMode::Lora => self.lora.len(),
+        }
+    }
+
+    fn set_batch(&mut self, batch: &Batch) -> Result<()> {
+        if batch.features.is_some() || batch.seq == 0 {
+            bail!(
+                "{}: needs token minibatches (feature batches have no sequence)",
+                self.name
+            );
+        }
+        if batch.seq > self.spec.max_seq {
+            bail!(
+                "{}: batch seq {} exceeds max_seq {}",
+                self.name,
+                batch.seq,
+                self.spec.max_seq
+            );
+        }
+        if batch.ids.len() != batch.batch * batch.seq
+            || batch.mask.len() != batch.batch * batch.seq
+            || batch.labels.len() != batch.batch
+        {
+            bail!("{}: inconsistent batch geometry", self.name);
+        }
+        for &id in &batch.ids {
+            if id < 0 || id as usize >= self.spec.vocab {
+                bail!(
+                    "{}: token id {id} outside vocab {}",
+                    self.name,
+                    self.spec.vocab
+                );
+            }
+        }
+        for &l in &batch.labels {
+            if l < 0 || l as usize >= self.spec.n_classes {
+                bail!(
+                    "{}: label {l} outside 0..{}",
+                    self.name,
+                    self.spec.n_classes
+                );
+            }
+        }
+        self.ids.clear();
+        self.ids.extend_from_slice(&batch.ids);
+        self.mask.clear();
+        self.mask.extend_from_slice(&batch.mask);
+        self.labels.clear();
+        self.labels.extend_from_slice(&batch.labels);
+        self.seq = batch.seq;
+        Ok(())
+    }
+
+    fn loss_dir(&mut self, dir: &[f32], scale: f32) -> Result<f64> {
+        self.ensure_batch()?;
+        self.calls += 1;
+        let mut wtmp = std::mem::take(&mut self.wtmp);
+        let mut state = std::mem::replace(&mut self.state, TransformerState::new(&self.spec));
+        {
+            let x: &[f32] = match self.mode {
+                TrainMode::Ft => &self.base,
+                TrainMode::Lora => &self.lora,
+            };
+            axpy_into(&mut wtmp, x, scale, dir);
+        }
+        let v = match self.mode {
+            TrainMode::Ft => batch_loss(
+                &self.spec,
+                &wtmp,
+                None,
+                &self.ids,
+                &self.mask,
+                self.seq,
+                &self.labels,
+                &mut state,
+            ),
+            TrainMode::Lora => batch_loss(
+                &self.spec,
+                &self.base,
+                Some(&wtmp),
+                &self.ids,
+                &self.mask,
+                self.seq,
+                &self.labels,
+                &mut state,
+            ),
+        };
+        self.wtmp = wtmp;
+        self.state = state;
+        Ok(v)
+    }
+
+    fn loss_k(&mut self, dirs: &[f32], k: usize, tau: f32) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(k);
+        self.loss_k_impl(dirs, k, tau, &mut out)?;
+        Ok(out)
+    }
+
+    fn loss_k_into(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
+        self.loss_k_impl(dirs, k, tau, out)
+    }
+
+    fn loss_probes(
+        &mut self,
+        probes: &dyn ProbeSource,
+        k: usize,
+        tau: f32,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        if let Some(dirs) = probes.dirs() {
+            return self.loss_k_impl(dirs, k, tau, out);
+        }
+        if k == 0 {
+            bail!("loss_k: k must be >= 1 (empty probe matrix)");
+        }
+        let d = self.dim();
+        assert_eq!(probes.dim(), d, "probe rows must be length d");
+        self.ensure_batch()?;
+        self.calls += k as u64;
+        // per probe: materialize w = x + tau * v from the row's
+        // regenerated column shards — the same elementwise expression the
+        // slice path applies, so the forward sees identical floats and
+        // the losses are bitwise equal.  Cursor, w and the activation
+        // scratch are per worker, reused across that worker's probes.
+        let spec = &self.spec;
+        let base = &self.base;
+        let lora_mode = self.mode == TrainMode::Lora;
+        let x: &[f32] = match self.mode {
+            TrainMode::Ft => &self.base,
+            TrainMode::Lora => &self.lora,
+        };
+        let ids = &self.ids;
+        let mask = &self.mask;
+        let labels = &self.labels;
+        let seq = self.seq;
+        let per_item_work = spec.forward_work(seq).saturating_mul(labels.len().max(1));
+        let vals = self.exec.map_items_sized_scratch(
+            k,
+            per_item_work,
+            || (probes.cursor(), vec![0.0f32; d], TransformerState::new(spec)),
+            |scratch, j| {
+                let (cur, w, st) = scratch;
+                cur.visit_row(j, &mut |c0, piece| {
+                    let xs = &x[c0..c0 + piece.len()];
+                    let wb = &mut w[c0..c0 + piece.len()];
+                    for i in 0..piece.len() {
+                        wb[i] = xs[i] + tau * piece[i];
+                    }
+                });
+                if lora_mode {
+                    batch_loss(spec, base, Some(w), ids, mask, seq, labels, st)
+                } else {
+                    batch_loss(spec, w, None, ids, mask, seq, labels, st)
+                }
+            },
+        );
+        out.clear();
+        out.extend_from_slice(&vals);
+        Ok(())
+    }
+
+    fn supports_streamed_probes(&self) -> bool {
+        true
+    }
+
+    fn set_exec(&mut self, ctx: ExecContext) {
+        self.exec = ctx;
+    }
+
+    fn params(&self) -> &[f32] {
+        match self.mode {
+            TrainMode::Ft => &self.base,
+            TrainMode::Lora => &self.lora,
+        }
+    }
+
+    fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()> {
+        match self.mode {
+            TrainMode::Ft => f(&mut self.base),
+            TrainMode::Lora => f(&mut self.lora),
+        }
+        Ok(())
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.calls
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusSpec};
+
+    fn tiny_spec() -> TransformerSpec {
+        TransformerSpec::new(64, 16, 2, 2, 32, 8, 2, false, crate::model::Pool::Cls, 2).unwrap()
+    }
+
+    fn corpus_batch() -> Batch {
+        // shrunk to the tiny spec's vocab/max_seq (validation: vocab must
+        // exceed 2 + 2*lexicon, min_len < seq, n_signal <= min_len)
+        let spec = CorpusSpec {
+            vocab: 64,
+            seq: 8,
+            lexicon: 16,
+            min_len: 4,
+            signal_min: 1,
+            signal_max: 3,
+            ..CorpusSpec::default_mini()
+        };
+        Corpus::new(spec).unwrap().train_batch(0, 4)
+    }
+
+    #[test]
+    fn rejects_mismatched_vectors() {
+        let s = tiny_spec();
+        assert!(TransformerOracle::new(s.clone(), TrainMode::Ft, vec![0.0; 3], Vec::new())
+            .is_err());
+        let base = s.init_base(1);
+        assert!(
+            TransformerOracle::new(s.clone(), TrainMode::Lora, base.clone(), vec![0.0; 3])
+                .is_err()
+        );
+        assert!(TransformerOracle::new(s, TrainMode::Ft, base, vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn evaluation_requires_a_batch() {
+        let mut o = TransformerOracle::from_seed(tiny_spec(), TrainMode::Lora, 1);
+        let zeros = vec![0.0f32; o.dim()];
+        let err = o.loss_dir(&zeros, 0.0).unwrap_err();
+        assert!(err.to_string().contains("set_batch"), "{err}");
+        assert_eq!(o.oracle_calls(), 0, "a rejected call must not be charged");
+    }
+
+    #[test]
+    fn lora_dim_is_the_adapter_count() {
+        let s = tiny_spec();
+        let ft = TransformerOracle::from_seed(s.clone(), TrainMode::Ft, 2);
+        let lora = TransformerOracle::from_seed(s.clone(), TrainMode::Lora, 2);
+        assert_eq!(ft.dim(), s.d_ft());
+        assert_eq!(lora.dim(), s.d_lora());
+        assert!(lora.dim() < ft.dim() / 10, "LoRA must shrink d by >10x here");
+    }
+
+    #[test]
+    fn set_batch_validates_tokens_and_labels() {
+        let mut o = TransformerOracle::from_seed(tiny_spec(), TrainMode::Lora, 3);
+        let mut b = corpus_batch();
+        o.set_batch(&b).unwrap();
+        b.ids[0] = 64; // outside vocab
+        assert!(o.set_batch(&b).is_err());
+        b.ids[0] = 1;
+        b.labels[0] = 5;
+        assert!(o.set_batch(&b).is_err());
+        // feature batches have no token sequence to attend over
+        let fb = Batch::from_features(4, vec![0.0; 8], vec![0, 1]);
+        assert!(o.set_batch(&fb).is_err());
+    }
+
+    #[test]
+    fn loss_at_init_is_near_chance_level() {
+        let mut o = TransformerOracle::from_seed(tiny_spec(), TrainMode::Lora, 4);
+        o.set_batch(&corpus_batch()).unwrap();
+        let zeros = vec![0.0f32; o.dim()];
+        let loss = o.loss_dir(&zeros, 0.0).unwrap();
+        assert!(
+            (loss - std::f64::consts::LN_2).abs() < 0.5,
+            "chance-level CE should be near ln 2, got {loss}"
+        );
+        assert_eq!(o.oracle_calls(), 1);
+    }
+
+    #[test]
+    fn loss_k_matches_loss_dir_bitwise_in_both_modes() {
+        for mode in [TrainMode::Ft, TrainMode::Lora] {
+            let mut o = TransformerOracle::from_seed(tiny_spec(), mode, 5);
+            o.set_batch(&corpus_batch()).unwrap();
+            let d = o.dim();
+            let k = 3;
+            let mut rng = crate::rng::Rng::new(12);
+            let mut dirs = vec![0.0f32; k * d];
+            rng.fill_normal(&mut dirs);
+            let batched = o.loss_k(&dirs, k, 1e-2).unwrap();
+            for (i, b) in batched.iter().enumerate() {
+                let l = o.loss_dir(&dirs[i * d..(i + 1) * d], 1e-2).unwrap();
+                assert_eq!(b.to_bits(), l.to_bits(), "{mode:?} probe {i}: {b} vs {l}");
+            }
+            assert!(o.loss_k(&[], 0, 1e-3).is_err());
+        }
+    }
+
+    #[test]
+    fn loss_k_parallel_bitwise_matches_serial() {
+        let spec = tiny_spec();
+        let batch = corpus_batch();
+        let k = 5;
+        let mut serial = TransformerOracle::from_seed(spec.clone(), TrainMode::Lora, 7);
+        serial.set_batch(&batch).unwrap();
+        let d = serial.dim();
+        let mut rng = crate::rng::Rng::new(13);
+        let mut dirs = vec![0.0f32; k * d];
+        rng.fill_normal(&mut dirs);
+        let mut par = TransformerOracle::from_seed(spec, TrainMode::Lora, 7);
+        par.set_exec(ExecContext::new(8).with_shard_len(16));
+        par.set_batch(&batch).unwrap();
+        let a = serial.loss_k(&dirs, k, 1e-3).unwrap();
+        let b = par.loss_k(&dirs, k, 1e-3).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+}

@@ -167,8 +167,8 @@ pub trait ProbeSource: Send + Sync {
 
     /// Probe-representation bytes held across steps: the K x d matrix for
     /// materialized, zero for streamed (its transient per-worker scratch
-    /// is bounded by (K + 1) * shard_len floats per worker and measured by
-    /// [`crate::metrics::probe_tracker`]).
+    /// is bounded by (K + 1) * min(shard_len, d) floats per worker and
+    /// measured by [`crate::metrics::probe_tracker`]).
     fn probe_state_bytes(&self) -> usize;
 
     /// The underlying direction sampler (diagnostics).
@@ -394,6 +394,21 @@ impl StreamedProbes {
         }
     }
 
+    /// Per-worker row-piece scratch: one column shard, clamped to d so a
+    /// small trainable subspace (LoRA: d well under `shard_len`) never
+    /// over-allocates.
+    fn piece_len(&self) -> usize {
+        self.exec.shard_len().min(self.d.max(1))
+    }
+
+    /// Per-worker substream staging: [`DirectionSampler::fill_row_range`]
+    /// needs `shard_len.min(k * d)` elements (the sampler's flat-buffer
+    /// RNG cells cover `k * d` values total, so the final cell — and with
+    /// `k * d < shard_len` the *only* cell — is that short).
+    fn stage_len(&self) -> usize {
+        self.exec.shard_len().min((self.sampler_k() * self.d).max(1))
+    }
+
     /// Regenerate presented row `i`, columns `[col0, col0 + out.len())`.
     fn fill_piece(&self, i: usize, col0: usize, out: &mut [f32], stage: &mut [f32]) {
         let (srow, neg) = self.map_row(i);
@@ -424,21 +439,20 @@ impl ProbeSource for StreamedProbes {
     }
 
     fn cursor(&self) -> ProbeCursor<'_> {
-        let sl = self.exec.shard_len().min(self.d.max(1));
         ProbeCursor::Replayed {
             src: self,
-            piece: TrackedBuf::zeroed(sl),
-            stage: TrackedBuf::zeroed(self.exec.shard_len()),
+            piece: TrackedBuf::zeroed(self.piece_len()),
+            stage: TrackedBuf::zeroed(self.stage_len()),
         }
     }
 
     fn combine(&self, w: &[f32], g: &mut [f32]) {
         assert_eq!(w.len(), self.k);
         assert_eq!(g.len(), self.d);
-        let sl = self.exec.shard_len();
+        let (pl, stl) = (self.piece_len(), self.stage_len());
         self.exec.for_each_shard_mut_scratch(
             g,
-            || (TrackedBuf::zeroed(sl), TrackedBuf::zeroed(sl)),
+            || (TrackedBuf::zeroed(pl), TrackedBuf::zeroed(stl)),
             |scratch, _, start, gb| {
                 let (row_buf, stage) = scratch;
                 gb.iter_mut().for_each(|v| *v = 0.0);
@@ -450,10 +464,10 @@ impl ProbeSource for StreamedProbes {
     fn axpy_rows(&self, w: &[f32], y: &mut [f32]) {
         assert_eq!(w.len(), self.k);
         assert_eq!(y.len(), self.d);
-        let sl = self.exec.shard_len();
+        let (pl, stl) = (self.piece_len(), self.stage_len());
         self.exec.for_each_shard_mut_scratch(
             y,
-            || (TrackedBuf::zeroed(sl), TrackedBuf::zeroed(sl)),
+            || (TrackedBuf::zeroed(pl), TrackedBuf::zeroed(stl)),
             |scratch, _, start, yb| {
                 let (row_buf, stage) = scratch;
                 replay_axpy(w, row_buf, yb, |i, out| self.fill_piece(i, start, out, stage));
@@ -464,10 +478,10 @@ impl ProbeSource for StreamedProbes {
     fn scaled_row(&self, i: usize, c: f32, out: &mut [f32]) {
         assert!(i < self.k);
         assert_eq!(out.len(), self.d);
-        let sl = self.exec.shard_len();
+        let stl = self.stage_len();
         self.exec.for_each_shard_mut_scratch(
             out,
-            || TrackedBuf::zeroed(sl),
+            || TrackedBuf::zeroed(stl),
             |stage, _, start, gb| {
                 self.fill_piece(i, start, gb, stage);
                 for v in gb.iter_mut() {
@@ -602,6 +616,57 @@ mod tests {
                 from_st[c0..c0 + piece.len()].copy_from_slice(piece);
             });
             assert_bits(&from_mat, &from_st, "cursor row");
+        }
+    }
+
+    #[test]
+    fn small_unaligned_d_bitwise_matches_materialized() {
+        // regression: d far below shard_len and not dividing it (the LoRA
+        // subspace shape) — every streamed consumer must still replay the
+        // exact materialized values, and the clamped scratch must cover
+        // the single short RNG cell
+        let d = 37;
+        let k = 5;
+        for threads in [1usize, 4] {
+            let (mut mat, mut st) = pair(d, k, ProbeLayout::Direct, threads, 64);
+            for step in 0..3 {
+                mat.advance();
+                st.advance();
+                let w: Vec<f32> = (0..k).map(|i| 0.7 - 0.2 * i as f32).collect();
+                let mut g1 = vec![0.0f32; d];
+                let mut g2 = vec![0.0f32; d];
+                mat.combine(&w, &mut g1);
+                st.combine(&w, &mut g2);
+                assert_bits(&g1, &g2, "combine (small d)");
+                let mut y1 = vec![-0.25f32; d];
+                let mut y2 = vec![-0.25f32; d];
+                mat.axpy_rows(&w, &mut y1);
+                st.axpy_rows(&w, &mut y2);
+                assert_bits(&y1, &y2, "axpy_rows (small d)");
+                mat.scaled_row(0, 2.0, &mut g1);
+                st.scaled_row(0, 2.0, &mut g2);
+                assert_bits(&g1, &g2, "scaled_row (small d)");
+                for row in 0..k {
+                    let mut a = vec![0.0f32; d];
+                    let mut b = vec![0.0f32; d];
+                    mat.cursor().visit_row(row, &mut |c0, piece| {
+                        a[c0..c0 + piece.len()].copy_from_slice(piece);
+                    });
+                    st.cursor().visit_row(row, &mut |c0, piece| {
+                        b[c0..c0 + piece.len()].copy_from_slice(piece);
+                    });
+                    assert_bits(&a, &b, "cursor row (small d)");
+                }
+                let losses: Vec<f64> =
+                    (0..k).map(|i| 0.25 * ((i + step) % 4) as f64).collect();
+                mat.observe(&losses);
+                st.observe(&losses);
+                assert_bits(
+                    mat.sampler().policy_mean().unwrap(),
+                    st.sampler().policy_mean().unwrap(),
+                    "policy mean (small d)",
+                );
+            }
         }
     }
 

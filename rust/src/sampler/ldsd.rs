@@ -243,6 +243,11 @@ impl DirectionSampler for LdsdSampler {
         // (K + 1)-shard block, tracked for the memory acceptance test.
         let d = self.mu.len();
         let sl = self.exec.shard_len();
+        // per-row block stride and substream staging, clamped to the
+        // actual geometry so a small d (LoRA subspaces) never allocates
+        // full shard_len-sized scratch per worker
+        let bl = sl.min(d.max(1));
+        let stl = sl.min((k * d).max(1));
         let seed = self.seed;
         let step = self.step - 1;
         let eps = self.cfg.eps;
@@ -252,8 +257,8 @@ impl DirectionSampler for LdsdSampler {
             &mut self.mu,
             || {
                 (
-                    crate::metrics::TrackedBuf::zeroed(k * sl),
-                    crate::metrics::TrackedBuf::zeroed(sl),
+                    crate::metrics::TrackedBuf::zeroed(k * bl),
+                    crate::metrics::TrackedBuf::zeroed(stl),
                 )
             },
             |scratch, _, start, mub| {
@@ -263,7 +268,7 @@ impl DirectionSampler for LdsdSampler {
                     if *wi == 0.0 {
                         continue; // axpy_k skips zero rows; match it
                     }
-                    let piece = &mut block[i * sl..i * sl + len];
+                    let piece = &mut block[i * bl..i * bl + len];
                     fill_replay_range(sl, seed, step, k * d, i * d + start, piece, stage);
                     for (j, v) in piece.iter_mut().enumerate() {
                         *v = mub[j] + eps * *v;
@@ -276,7 +281,7 @@ impl DirectionSampler for LdsdSampler {
                     if *wi == 0.0 {
                         continue;
                     }
-                    let piece = &block[i * sl..i * sl + len];
+                    let piece = &block[i * bl..i * bl + len];
                     for (m, v) in mub.iter_mut().zip(piece.iter()) {
                         *m += *wi * *v;
                     }

@@ -71,9 +71,12 @@ pub trait DirectionSampler {
     /// the most recently sampled/advanced step's K x d probe matrix into
     /// `out`, exactly as `sample` would have produced it.  `k` is the row
     /// count of that matrix (part of the flat-buffer RNG geometry);
-    /// `scratch` must hold at least the installed context's `shard_len`
-    /// elements (substream regeneration staging).  Pure in the sampler
-    /// state: any number of calls return the same values.
+    /// `scratch` must hold at least `shard_len.min(k * d)` elements, where
+    /// `shard_len` is the installed context's shard length (substream
+    /// staging: RNG cells tile the `k * d` flat buffer, so no cell — and
+    /// hence no staged regeneration — ever exceeds that bound; `d` need
+    /// not be shard-aligned).  Pure in the sampler state: any number of
+    /// calls return the same values.
     fn fill_row_range(
         &self,
         k: usize,

@@ -1,0 +1,346 @@
+//! The transformer + LoRA oracle end to end (DESIGN.md §13): analytic
+//! (JVP) directional derivatives vs finite differences on the LoRA
+//! subspace, 1-vs-8-thread and materialized-vs-streamed bitwise
+//! determinism, mid-run checkpoint/resume over the shuffled minibatch
+//! stream, and LoRA layout/`.zock` compatibility — the same property
+//! matrix `mlp_train.rs` pins for the MLP oracle.  CI runs this suite
+//! under both `ZO_PROBE_STORAGE` modes.
+
+use zo_ldsd::config::TrainMode;
+use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::eval::TransformerEvaluator;
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::model::{views, Pool, TransformerSpec};
+use zo_ldsd::oracle::{Oracle, TransformerOracle};
+use zo_ldsd::probe::{
+    BoxedSampler, MaterializedProbes, ProbeLayout, ProbeSource, StreamedProbes,
+};
+use zo_ldsd::sampler::{LdsdConfig, LdsdSampler};
+use zo_ldsd::train::{
+    CheckpointConfig, EstimatorKind, ProbeStorage, SamplerKind, ShuffleSpec,
+    TrainConfig, Trainer,
+};
+
+/// A corpus small enough for the tiny architecture below (vocab 64,
+/// sequences of 8 tokens).
+fn tiny_corpus() -> Corpus {
+    Corpus::new(CorpusSpec {
+        vocab: 64,
+        seq: 8,
+        lexicon: 16,
+        min_len: 4,
+        signal_min: 1,
+        signal_max: 3,
+        ..CorpusSpec::default_mini()
+    })
+    .unwrap()
+}
+
+/// 2-layer, 2-head, d_model 16 decoder with rank-2 q/v adapters:
+/// d_lora = 290 trainables against d_ft = 5666 frozen base weights.
+fn tiny_spec() -> TransformerSpec {
+    TransformerSpec::new(64, 16, 2, 2, 32, 8, 2, false, Pool::Cls, 2).unwrap()
+}
+
+fn lora_oracle(seed: u64) -> TransformerOracle {
+    TransformerOracle::from_seed(tiny_spec(), TrainMode::Lora, seed)
+}
+
+fn train_cfg(k: usize, budget: u64, seed: u64, storage: ProbeStorage) -> TrainConfig {
+    TrainConfig {
+        estimator: EstimatorKind::BestOfK {
+            k,
+            sampler: SamplerKind::Ldsd(LdsdConfig::default()),
+        },
+        optimizer: "zo_sgd_plain".into(),
+        lr: 0.05,
+        tau: 1e-3,
+        budget,
+        eval_every: 0,
+        eval_batches: 2,
+        cosine_schedule: false,
+        seed,
+        probe_dispatch: Default::default(),
+        probe_storage: storage,
+        checkpoint: CheckpointConfig::default(),
+        shuffle: Some(ShuffleSpec { n_train: 24 }),
+    }
+}
+
+/// The f64 forward-mode JVP vs central finite differences along random
+/// directions of the LoRA subspace — the correctness anchor tying the
+/// perturbation geometry to the actual loss surface.
+#[test]
+fn jvp_matches_finite_difference_on_the_lora_subspace() {
+    let mut o = lora_oracle(2);
+    o.set_batch(&tiny_corpus().train_batch(1, 6)).unwrap();
+    let d = o.dim();
+    assert_eq!(d, tiny_spec().d_lora());
+    let mut rng = zo_ldsd::rng::Rng::new(17);
+    for trial in 0..4 {
+        let mut dir = vec![0.0f32; d];
+        rng.fill_normal(&mut dir);
+        let (loss, analytic) = o.dir_derivative(&dir).unwrap();
+        assert!(loss.is_finite());
+        let h = 1e-3f32;
+        let fp = o.loss_dir(&dir, h).unwrap();
+        let fm = o.loss_dir(&dir, -h).unwrap();
+        let fd = (fp - fm) / (2.0 * h as f64);
+        assert!(
+            (fd - analytic).abs() < 2e-2 * (1.0 + analytic.abs()),
+            "trial {trial}: fd {fd} vs analytic {analytic}"
+        );
+    }
+}
+
+/// FT mode exposes the full d_ft subspace through the same JVP.
+#[test]
+fn jvp_matches_finite_difference_in_ft_mode() {
+    let mut o = TransformerOracle::from_seed(tiny_spec(), TrainMode::Ft, 4);
+    o.set_batch(&tiny_corpus().train_batch(0, 4)).unwrap();
+    let d = o.dim();
+    assert_eq!(d, tiny_spec().d_ft());
+    let mut dir = vec![0.0f32; d];
+    zo_ldsd::rng::Rng::new(23).fill_normal(&mut dir);
+    let (_, analytic) = o.dir_derivative(&dir).unwrap();
+    let h = 1e-3f32;
+    let fd = (o.loss_dir(&dir, h).unwrap() - o.loss_dir(&dir, -h).unwrap())
+        / (2.0 * h as f64);
+    assert!(
+        (fd - analytic).abs() < 2e-2 * (1.0 + analytic.abs()),
+        "fd {fd} vs analytic {analytic}"
+    );
+}
+
+/// Streamed (seed-replay) probe evaluation is bitwise the materialized
+/// slice path, for 1 and 4 workers, on the LoRA subspace (d = 290 is far
+/// below — and misaligned with — the 64-element shard length).
+#[test]
+fn transformer_streamed_loss_probes_bitwise_matches_materialized() {
+    let batch = tiny_corpus().train_batch(0, 6);
+    let k = 4;
+    let tau = 1e-2f32;
+    let d = lora_oracle(0).dim();
+    for threads in [1usize, 4] {
+        let ctx = ExecContext::new(threads).with_shard_len(64);
+        let sampler = |seed| -> BoxedSampler {
+            Box::new(LdsdSampler::new(d, seed, LdsdConfig::default()))
+        };
+        let mut mat = MaterializedProbes::new(sampler(9), ProbeLayout::Direct, k);
+        mat.set_exec(ctx.clone());
+        let mut st = StreamedProbes::new(sampler(9), ProbeLayout::Direct, k);
+        st.set_exec(ctx.clone());
+        mat.advance();
+        st.advance();
+        let mut o1 = lora_oracle(7);
+        o1.set_exec(ctx.clone());
+        o1.set_batch(&batch).unwrap();
+        let mut o2 = lora_oracle(7);
+        o2.set_exec(ctx);
+        o2.set_batch(&batch).unwrap();
+        let mut l1 = Vec::new();
+        let mut l2 = Vec::new();
+        o1.loss_probes(&mat, k, tau, &mut l1).unwrap();
+        o2.loss_probes(&st, k, tau, &mut l2).unwrap();
+        assert_eq!(o1.oracle_calls(), o2.oracle_calls());
+        assert_eq!(l1.len(), k);
+        for (a, b) in l1.iter().zip(l2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads {threads}: {a} vs {b}");
+        }
+    }
+}
+
+/// The acceptance run: LDSD over the LoRA subspace with streamed probes
+/// on the shuffled stream walks a bitwise-identical trajectory on 1 and
+/// 8 threads — and matches the materialized run bit for bit.
+#[test]
+fn transformer_train_bitwise_identical_across_threads_and_storage() {
+    let run = |threads: usize, storage: ProbeStorage| {
+        let mut t = Trainer::with_exec(
+            train_cfg(5, 60, 13, storage),
+            lora_oracle(13),
+            tiny_corpus(),
+            ExecContext::new(threads).with_shard_len(64),
+        )
+        .unwrap();
+        let out = t.run(None).unwrap();
+        (out.loss_curve, t.oracle().params().to_vec())
+    };
+    let (c1, p1) = run(1, ProbeStorage::Streamed);
+    let (c8, p8) = run(8, ProbeStorage::Streamed);
+    let (cm, pm) = run(8, ProbeStorage::Materialized);
+    assert_eq!(c1.len(), c8.len());
+    assert_eq!(c1.len(), cm.len());
+    for (i, ((a1, l1), ((a8, l8), (am, lm)))) in
+        c1.iter().zip(c8.iter().zip(cm.iter())).enumerate()
+    {
+        assert_eq!(a1, a8, "call axis diverged at step {i}");
+        assert_eq!(a1, am, "storage call axis diverged at step {i}");
+        assert_eq!(l1.to_bits(), l8.to_bits(), "thread loss diverged at {i}");
+        assert_eq!(l1.to_bits(), lm.to_bits(), "storage loss diverged at {i}");
+    }
+    for (i, (a, (b, c))) in p1.iter().zip(p8.iter().zip(pm.iter())).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "thread params diverged at {i}");
+        assert_eq!(a.to_bits(), c.to_bits(), "storage params diverged at {i}");
+    }
+}
+
+/// Mid-epoch interrupt + resume over the shuffled stream: with
+/// `n_train = 24` and batch 8 an epoch is 3 steps, so preempting at step
+/// 4 stops one step into epoch 2 — the resumed session must replay the
+/// identical shuffled batches via the restored batch cursor.
+#[test]
+fn transformer_checkpoint_resume_mid_epoch_is_bitwise_identical() {
+    let dir = std::env::temp_dir().join(format!(
+        "zo_tfm_resume_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let ctx = || ExecContext::new(4).with_shard_len(64);
+    let storage = ProbeStorage::Auto;
+
+    let mut full = Trainer::with_exec(
+        train_cfg(5, 60, 29, storage),
+        lora_oracle(29),
+        tiny_corpus(),
+        ctx(),
+    )
+    .unwrap();
+    let full_out = full.run(None).unwrap();
+    assert!(full_out.completed);
+
+    let ck = |resume: bool, max_run_steps: u64| CheckpointConfig {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every: 2,
+        resume,
+        max_run_steps,
+    };
+    let mut first = Trainer::with_exec(
+        TrainConfig { checkpoint: ck(false, 4), ..train_cfg(5, 60, 29, storage) },
+        lora_oracle(29),
+        tiny_corpus(),
+        ctx(),
+    )
+    .unwrap();
+    let partial = first.run(None).unwrap();
+    assert!(!partial.completed);
+    assert_eq!(partial.steps, 4);
+    assert_eq!(first.progress().data_cursor, 32, "mid-epoch cursor");
+    drop(first);
+
+    let mut second = Trainer::with_exec(
+        TrainConfig { checkpoint: ck(true, 0), ..train_cfg(5, 60, 29, storage) },
+        lora_oracle(29),
+        tiny_corpus(),
+        ctx(),
+    )
+    .unwrap();
+    let resumed = second.run(None).unwrap();
+    assert!(resumed.completed);
+    assert_eq!(resumed.steps, full_out.steps);
+    assert_eq!(resumed.loss_curve.len(), full_out.loss_curve.len());
+    for ((ca, la), (cb, lb)) in
+        full_out.loss_curve.iter().zip(resumed.loss_curve.iter())
+    {
+        assert_eq!(ca, cb);
+        assert_eq!(la.to_bits(), lb.to_bits(), "{la} vs {lb}");
+    }
+    for (a, b) in full.oracle().params().iter().zip(second.oracle().params()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Training actually optimizes: the loss of a *fixed* batch — evaluated
+/// at the initial and the trained adapters, so minibatch noise cannot
+/// blur the comparison — drops over a 3000-forward LDSD run, and the
+/// whole run repeats bitwise (everything is seeded).
+#[test]
+fn transformer_training_reduces_loss_end_to_end() {
+    let corpus = tiny_corpus();
+    let fixed = corpus.train_batch(0, 8);
+    let zeros = vec![0.0f32; lora_oracle(3).dim()];
+
+    let mut before_oracle = lora_oracle(3);
+    before_oracle.set_batch(&fixed).unwrap();
+    let before = before_oracle.loss_dir(&zeros, 0.0).unwrap();
+
+    let run = || {
+        let mut cfg = train_cfg(5, 3000, 3, ProbeStorage::Auto);
+        cfg.lr = 0.02;
+        cfg.shuffle = Some(ShuffleSpec { n_train: 64 });
+        let mut t = Trainer::new(cfg, lora_oracle(3), tiny_corpus()).unwrap();
+        let evaluator = TransformerEvaluator::new(
+            tiny_spec(),
+            TrainMode::Lora,
+            lora_oracle(3).base().to_vec(),
+            16,
+        )
+        .unwrap();
+        let out = t.run(Some(&evaluator)).unwrap();
+        (out, t)
+    };
+    let (out, mut t) = run();
+    assert_eq!(out.oracle_calls, 3000);
+    assert!(out.loss_curve.iter().all(|(_, l)| l.is_finite()));
+    assert!((0.0..=1.0).contains(&out.final_accuracy));
+
+    t.oracle_mut().set_batch(&fixed).unwrap();
+    let after = t.oracle_mut().loss_dir(&zeros, 0.0).unwrap();
+    assert!(
+        after < before,
+        "training must reduce the fixed-batch loss: {before} -> {after}"
+    );
+
+    let (out2, _) = run();
+    assert_eq!(out.final_accuracy.to_bits(), out2.final_accuracy.to_bits());
+    for ((ca, la), (cb, lb)) in out.loss_curve.iter().zip(out2.loss_curve.iter()) {
+        assert_eq!(ca, cb);
+        assert_eq!(la.to_bits(), lb.to_bits());
+    }
+}
+
+/// The LoRA trainable vector rides the existing layout manifest
+/// machinery: `model::views` slices it by the python ABI names and
+/// `.zock` checkpoints round-trip it unchanged.
+#[test]
+fn lora_layout_views_and_zock_checkpoint_apply_unchanged() {
+    let spec = tiny_spec();
+    let base = spec.init_base(8);
+    let lora = spec.init_lora(8, Some(&base));
+
+    let layout = spec.lora_layout();
+    let v = views(&lora, &layout).unwrap();
+    // 4 adapter factors per layer (q and v, A and B each) + head.w/head.b
+    assert_eq!(v.len(), spec.n_layers * 4 + 2);
+    assert_eq!(v[0].name, "layer0.lora_q.a");
+    assert_eq!(v[0].shape, &[spec.d_model, spec.lora_rank]);
+    assert_eq!(v[1].name, "layer0.lora_q.b");
+    assert_eq!(v[1].shape, &[spec.lora_rank, spec.d_model]);
+    assert_eq!(v[v.len() - 2].name, "head.w");
+    assert_eq!(v[v.len() - 2].shape, &[spec.d_model, spec.n_classes]);
+    let total: usize = layout.iter().map(|l| l.len).sum();
+    assert_eq!(total, spec.d_lora());
+
+    // the FT layout covers the full base the same way
+    let ft_total: usize = spec.ft_layout().iter().map(|l| l.len).sum();
+    assert_eq!(ft_total, spec.d_ft());
+
+    let ck = zo_ldsd::model::Checkpoint {
+        model: spec.label(),
+        mode: "lora".into(),
+        step: 5,
+        oracle_calls: 30,
+        data: lora.clone(),
+    };
+    let dir = std::env::temp_dir().join(format!("zo_tfm_zock_{}", std::process::id()));
+    let path = dir.join("tfm.zock");
+    ck.save(&path).unwrap();
+    let back = zo_ldsd::model::Checkpoint::load(&path).unwrap();
+    assert_eq!(back.mode, "lora");
+    assert_eq!(back.data.len(), spec.d_lora());
+    for (a, b) in lora.iter().zip(back.data.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
