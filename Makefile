@@ -12,6 +12,11 @@
 #   make test-transformer  the transformer + LoRA oracle suite (reference
 #                        parity golden + train matrix) under both probe-
 #                        storage modes (CI parity for the table1-smoke job)
+#   make test-lanes      the full test suite under ZO_LANES=scalar and
+#                        ZO_LANES=wide — the lane-accumulation contract
+#                        (DESIGN.md §14) says every result is bitwise
+#                        identical either way, so both runs must pass
+#                        identically (CI parity)
 #   make lint            clippy, warnings fatal (CI parity; allow-list in ci.yml)
 #   make fmt             rustfmt check only (CI parity)
 #   make doc             API docs, warnings fatal (CI parity)
@@ -25,11 +30,16 @@
 #                        and commit $(BENCH_BASELINE)
 #   make bench-gate      diff $(BENCH_OUT) against $(BENCH_BASELINE) with
 #                        +/-20% thresholds on the loss_k / axpy_k /
-#                        probe_combine / mlp / transformer / mem rows
-#                        (ns/op + peak bytes, separately tunable)
+#                        probe_combine / mlp / transformer / mem / lanes /
+#                        qstore rows (ns/op + peak bytes, separately
+#                        tunable), plus the intra-run lanes/* scalar-vs-
+#                        wide A/B ratio check (wide must run in at most
+#                        $(BENCH_AB_MAX_RATIO)x the scalar time — i.e. a
+#                        >= 1.5x speedup — measured within one run, so no
+#                        stored timing anchor is involved)
 
 .PHONY: artifacts build test test-streamed test-resume test-mlp \
-        test-transformer lint fmt doc \
+        test-transformer test-lanes lint fmt doc \
         bench bench-smoke bench-baseline bench-gate clean
 
 # Bench-regression gate knobs (DESIGN.md §12).  BENCH_JSON must reach the
@@ -37,9 +47,11 @@
 # package root (rust/), while bench-gate and CI read from the repo root.
 BENCH_OUT ?= BENCH_current.json
 BENCH_BASELINE ?= rust/benches/BENCH_baseline.json
-BENCH_GATES ?= loss_k,axpy_k,probe_combine,mlp,transformer,mem/
+BENCH_GATES ?= loss_k,axpy_k,probe_combine,mlp,transformer,mem/,lanes/,qstore/
 BENCH_THRESHOLD ?= 0.20
 BENCH_BYTES_THRESHOLD ?= 0.20
+BENCH_AB_MAX_RATIO ?= 0.67
+BENCH_AB_PREFIX ?= lanes/
 BENCH_OUT_ABS = $(abspath $(BENCH_OUT))
 BENCH_BASELINE_ABS = $(abspath $(BENCH_BASELINE))
 
@@ -66,6 +78,10 @@ test-mlp: build
 test-transformer: build
 	ZO_PROBE_STORAGE=materialized cargo test -q --test transformer_golden --test transformer_train
 	ZO_PROBE_STORAGE=streamed cargo test -q --test transformer_golden --test transformer_train
+
+test-lanes: build
+	ZO_LANES=scalar cargo test -q
+	ZO_LANES=wide cargo test -q
 
 lint:
 	cargo clippy --all-targets -- -D warnings \
@@ -98,7 +114,8 @@ bench-gate: bench-smoke
 	cargo run --release --bin bench-gate -- \
 	  --baseline $(BENCH_BASELINE_ABS) --current $(BENCH_OUT_ABS) \
 	  --threshold $(BENCH_THRESHOLD) --bytes-threshold $(BENCH_BYTES_THRESHOLD) \
-	  --gate $(BENCH_GATES)
+	  --gate $(BENCH_GATES) \
+	  --ab-max-ratio $(BENCH_AB_MAX_RATIO) --ab-prefix $(BENCH_AB_PREFIX)
 
 clean:
 	cargo clean

@@ -46,6 +46,7 @@ fn main() {
         eval_batches: 8,
         probe_dispatch: None,
         probe_storage: None,
+        param_store: None,
         checkpoint: None,
         oracle: zo_ldsd::coordinator::OracleSpec::Pjrt,
     };

@@ -4,10 +4,51 @@
 //!     cargo bench --bench memory_table
 
 use zo_ldsd::config::Manifest;
-use zo_ldsd::metrics::MemoryReport;
+use zo_ldsd::metrics::{param_tracker, MemoryReport};
 use zo_ldsd::report::Table;
+use zo_ldsd::tensor::{ParamStore, ParamStoreMode};
+
+/// Resident parameter bytes per storage mode (DESIGN.md §14), measured —
+/// each store is actually built and its bytes read back from the global
+/// parameter tracker, so the table reports what a Trainer would hold
+/// resident, not a formula.
+fn param_store_table() {
+    const MODES: [ParamStoreMode; 3] =
+        [ParamStoreMode::F32, ParamStoreMode::F16, ParamStoreMode::Int8];
+    for exp in [20u32, 24] {
+        let d = 1usize << exp;
+        let xs: Vec<f32> = (0..d).map(|i| 0.25 + 0.001 * (i % 97) as f32).collect();
+        let mut t = Table::new(
+            &format!("param store residency (d = 2^{exp} = {d})"),
+            &["mode", "resident MiB", "bytes/param", "vs f32", "tracker peak MiB"],
+        );
+        let f32_bytes = 4 * d;
+        for mode in MODES {
+            // nothing else holds a store in this process, so a per-mode
+            // reset makes the tracker peak THIS store's annotated peak
+            param_tracker().reset();
+            let store = ParamStore::from_f32(mode, &xs);
+            let bytes = store.resident_bytes();
+            // the tracker's registered bytes must match the store's own
+            // accounting — the peak the trainer's memory rows report
+            assert_eq!(param_tracker().current(), bytes, "tracker drift ({})", mode.label());
+            let peak_mib = param_tracker().peak() as f64 / (1 << 20) as f64;
+            t.row(vec![
+                mode.label().to_string(),
+                format!("{:.2}", bytes as f64 / (1 << 20) as f64),
+                format!("{:.3}", bytes as f64 / d as f64),
+                format!("{:.2}x", bytes as f64 / f32_bytes as f64),
+                format!("{peak_mib:.2}"),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+}
 
 fn main() {
+    // artifact-free: the quantized-store residency table needs no manifest
+    param_store_table();
     let Ok(manifest) = Manifest::load("artifacts") else {
         eprintln!("SKIP memory bench: artifacts/ not built");
         return;

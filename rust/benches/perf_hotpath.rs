@@ -64,6 +64,59 @@ fn main() {
         });
     }
 
+    // --- lane-vectorized kernels: scalar vs wide A/B (tensor::lanes) ------
+    // The acceptance rows for the SIMD tentpole: the same axpy_k /
+    // probe_combine calls forced onto the scalar and the wide lane path
+    // within one run.  The bench gate's intra-run A/B check
+    // (`--ab-max-ratio`) asserts wide ≤ ratio x scalar, so the speedup is
+    // enforced by measurement, not by a stored anchor.  Both paths return
+    // bitwise-identical results (the tensor::lanes contract).
+    {
+        use zo_ldsd::tensor::lanes::{force_mode, LaneMode};
+        let saved_max_seconds = b.max_seconds;
+        b.max_seconds = 1.5;
+        let dm = 1usize << 20;
+        let k = 5usize;
+        let rows = vec![0.01f32; k * dm];
+        let w: Vec<f32> = (0..k).map(|i| 0.1 * (i as f32 + 1.0)).collect();
+        let mut g = vec![0.0f32; dm];
+        for (mode, label) in [(LaneMode::Scalar, "scalar"), (LaneMode::Wide, "wide")] {
+            force_mode(Some(mode));
+            b.bench(&format!("lanes/axpy_k_k5_d1M_{label}"), (k * dm) as f64, || {
+                axpy_k(&w, &rows, &mut g)
+            });
+            b.bench(
+                &format!("lanes/probe_combine_k5_d1M_{label}"),
+                (k * dm) as f64,
+                || probe_combine(&rows, dm, &w, &mut g),
+            );
+        }
+        force_mode(None);
+        b.max_seconds = saved_max_seconds;
+    }
+
+    // --- quantized parameter stores: fused dequant+perturb per mode --------
+    // `qstore/*` rows time w = x + tau * v through each ParamStore mode at
+    // d = 2^20 and record the store's resident parameter bytes as the
+    // deterministic peak metric (f32 4 B/param, f16 2 B/param, int8
+    // ~1.06 B/param) — the memory the quantized modes buy back.
+    {
+        use zo_ldsd::tensor::{ParamStore, ParamStoreMode};
+        let saved_max_seconds = b.max_seconds;
+        b.max_seconds = 1.5;
+        let dm = 1usize << 20;
+        let xs: Vec<f32> = (0..dm).map(|i| 0.25 + 0.001 * (i % 97) as f32).collect();
+        let v = vec![0.01f32; dm];
+        let mut w = vec![0.0f32; dm];
+        for mode in [ParamStoreMode::F32, ParamStoreMode::F16, ParamStoreMode::Int8] {
+            let store = ParamStore::from_f32(mode, &xs);
+            let name = format!("qstore/perturb_into_d1M_{}", mode.label());
+            b.bench(&name, dm as f64, || store.perturb_into(1e-3, &v, &mut w));
+            b.annotate_peak_bytes(&name, store.resident_bytes());
+        }
+        b.max_seconds = saved_max_seconds;
+    }
+
     // --- RNG: scalar cached-spare path vs the pairwise hot loop -----------
     // (§Perf optimization #1: FT-mode LDSD draws K*d = 6.6M normals/step)
     {

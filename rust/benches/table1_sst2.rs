@@ -94,6 +94,7 @@ fn main() {
                 eval_batches: if smoke { 2 } else { 8 },
                 probe_dispatch: None,
                 probe_storage: None,
+                param_store: None,
                 checkpoint: None,
                 oracle: OracleSpec::Transformer(trial.clone()),
             });

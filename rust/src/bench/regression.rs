@@ -140,6 +140,81 @@ pub fn gate(
     report
 }
 
+/// One intra-run A/B pair whose vectorized arm missed the required
+/// speedup (or lost its counterpart row).
+#[derive(Clone, Debug)]
+pub struct AbViolation {
+    /// The scalar-arm row name.
+    pub scalar: String,
+    /// The wide-arm row name.
+    pub wide: String,
+    /// Scalar-arm ns/op.
+    pub scalar_ns: f64,
+    /// Wide-arm ns/op (NaN when the wide row is missing).
+    pub wide_ns: f64,
+    /// wide / scalar (NaN when the wide row is missing).
+    pub ratio: f64,
+}
+
+/// Outcome of the intra-run A/B check ([`ab_gate`]).
+#[derive(Clone, Debug, Default)]
+pub struct AbReport {
+    /// A/B pairs found and compared.
+    pub compared: usize,
+    /// Pairs whose ratio exceeded the bound, or whose wide row vanished.
+    pub violations: Vec<AbViolation>,
+}
+
+impl AbReport {
+    /// True when every pair met the required ratio.
+    pub fn is_green(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Intra-run A/B speedup check: for every `current` row named
+/// `<prefix><stem>_scalar`, the sibling `<prefix><stem>_wide` must exist
+/// and satisfy `wide_ns <= max_ratio * scalar_ns`.  Both arms come from
+/// the *same* run on the same hardware, so — unlike the stored-baseline
+/// timing gate — the ratio bound is portable: it enforces the vectorized
+/// kernels' speedup by measurement wherever the gate runs.
+pub fn ab_gate(current: &[BenchRow], prefix: &str, max_ratio: f64) -> AbReport {
+    let mut report = AbReport::default();
+    for c in current {
+        let stem = match c
+            .name
+            .strip_prefix(prefix)
+            .and_then(|rest| rest.strip_suffix("_scalar"))
+        {
+            Some(stem) => stem,
+            None => continue,
+        };
+        let wide_name = format!("{prefix}{stem}_wide");
+        let violation = match current.iter().find(|r| r.name == wide_name) {
+            Some(wide) => {
+                report.compared += 1;
+                let ratio = wide.ns_per_op / c.ns_per_op;
+                (c.ns_per_op > 0.0 && ratio > max_ratio).then(|| AbViolation {
+                    scalar: c.name.clone(),
+                    wide: wide_name.clone(),
+                    scalar_ns: c.ns_per_op,
+                    wide_ns: wide.ns_per_op,
+                    ratio,
+                })
+            }
+            None => Some(AbViolation {
+                scalar: c.name.clone(),
+                wide: wide_name.clone(),
+                scalar_ns: c.ns_per_op,
+                wide_ns: f64::NAN,
+                ratio: f64::NAN,
+            }),
+        };
+        report.violations.extend(violation);
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,5 +305,30 @@ mod tests {
         let cur = [row("mlp/loss_k", 100.0, None)];
         let rep = gate(&base, &cur, 0.20, 0.20, &["mlp"]);
         assert!(rep.is_green(), "bytes gate needs both sides: {rep:?}");
+    }
+
+    #[test]
+    fn ab_gate_enforces_intra_run_speedup() {
+        let cur = [
+            row("lanes/axpy_k_k5_d1M_scalar", 1000.0, None),
+            row("lanes/axpy_k_k5_d1M_wide", 300.0, None), // 0.3 <= 0.67
+            row("lanes/probe_combine_k5_d1M_scalar", 1000.0, None),
+            row("lanes/probe_combine_k5_d1M_wide", 900.0, None), // 0.9: fails
+            row("tensor/axpy_1.3M", 50.0, None),                 // no prefix: ignored
+        ];
+        let rep = ab_gate(&cur, "lanes/", 0.67);
+        assert_eq!(rep.compared, 2);
+        assert_eq!(rep.violations.len(), 1, "{rep:?}");
+        assert_eq!(rep.violations[0].wide, "lanes/probe_combine_k5_d1M_wide");
+        assert!((rep.violations[0].ratio - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ab_gate_flags_missing_wide_counterpart() {
+        let cur = [row("lanes/axpy_k_k5_d1M_scalar", 1000.0, None)];
+        let rep = ab_gate(&cur, "lanes/", 0.67);
+        assert_eq!(rep.compared, 0);
+        assert_eq!(rep.violations.len(), 1);
+        assert!(rep.violations[0].wide_ns.is_nan());
     }
 }

@@ -9,17 +9,27 @@
 //!                --current BENCH_current.json \
 //!                [--threshold 0.20] [--bytes-threshold 0.20]
 //!                [--gate loss_k,axpy_k,probe_combine,mlp,mem/]
+//!                [--ab-max-ratio 0.67] [--ab-prefix lanes/]
 //!
 //! `--threshold` bounds the (noisy, hardware-dependent) ns/op ratios;
 //! `--bytes-threshold` bounds the deterministic peak-byte ratios and can
-//! be held much tighter.
+//! be held much tighter.  `--ab-max-ratio` additionally enforces the
+//! intra-run scalar-vs-wide speedup on every `--ab-prefix` row pair
+//! (`<prefix><stem>_scalar` / `_wide`): both arms come from the same
+//! run, so the bound is hardware-portable and needs no stored anchor
+//! (0 disables the check).
+//!
+//! Every failing row is reported in one invocation — the gate collects
+//! all regressions, A/B violations and missing rows before exiting
+//! nonzero — and each table row prints the bound it was held to next to
+//! the observed ratio.
 //!
 //! Regenerate the baseline on the reference runner with
 //! `make bench-baseline` and commit it (see DESIGN.md §12).
 
 use anyhow::{bail, Context, Result};
 
-use zo_ldsd::bench::regression::{gate, parse_rows};
+use zo_ldsd::bench::regression::{ab_gate, gate, parse_rows};
 use zo_ldsd::cli::Args;
 use zo_ldsd::report::Table;
 
@@ -33,13 +43,23 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::from_env(&[])?;
     args.reject_unknown(
-        &["baseline", "current", "threshold", "bytes-threshold", "gate"],
+        &[
+            "baseline",
+            "current",
+            "threshold",
+            "bytes-threshold",
+            "gate",
+            "ab-max-ratio",
+            "ab-prefix",
+        ],
         &[],
     )?;
     let baseline_path = args.require("baseline")?.to_string();
     let current_path = args.require("current")?.to_string();
     let threshold = args.get_f64("threshold", 0.20)?;
     let bytes_threshold = args.get_f64("bytes-threshold", threshold)?;
+    let ab_max_ratio = args.get_f64("ab-max-ratio", 0.0)?;
+    let ab_prefix = args.get_or("ab-prefix", "lanes/").to_string();
     let gates_raw = args
         .get_or("gate", "loss_k,axpy_k,probe_combine,mlp,mem/")
         .to_string();
@@ -72,24 +92,65 @@ fn run() -> Result<()> {
     if !report.regressions.is_empty() {
         let mut t = Table::new(
             "bench regressions",
-            &["row", "metric", "baseline", "current", "ratio"],
+            &["row", "metric", "baseline", "current", "ratio", "limit"],
         );
         for r in &report.regressions {
+            let limit = match r.metric {
+                "peak_bytes" => bytes_threshold,
+                _ => threshold,
+            };
             t.row(vec![
                 r.name.clone(),
                 r.metric.to_string(),
                 format!("{:.1}", r.baseline),
                 format!("{:.1}", r.current),
                 format!("{:.2}x", r.ratio),
+                format!("<= {:.2}x", 1.0 + limit),
             ]);
         }
         t.print();
     }
-    if !report.is_green() {
+
+    // intra-run scalar-vs-wide speedup (hardware-portable: both arms are
+    // measured in the same run, so no stored anchor is involved)
+    let ab = if ab_max_ratio > 0.0 {
+        let ab = ab_gate(&current, &ab_prefix, ab_max_ratio);
+        println!(
+            "bench-gate: {} A/B pair(s) checked (prefix {ab_prefix}, wide <= {lim:.2}x scalar)",
+            ab.compared,
+            lim = ab_max_ratio
+        );
+        if !ab.violations.is_empty() {
+            let mut t = Table::new(
+                "A/B speedup violations",
+                &["scalar row", "scalar ns", "wide ns", "ratio", "limit"],
+            );
+            for v in &ab.violations {
+                t.row(vec![
+                    v.scalar.clone(),
+                    format!("{:.1}", v.scalar_ns),
+                    if v.wide_ns.is_nan() {
+                        "MISSING".to_string()
+                    } else {
+                        format!("{:.1}", v.wide_ns)
+                    },
+                    format!("{:.2}x", v.ratio),
+                    format!("<= {ab_max_ratio:.2}x"),
+                ]);
+            }
+            t.print();
+        }
+        ab
+    } else {
+        Default::default()
+    };
+
+    if !report.is_green() || !ab.is_green() {
         bail!(
-            "{} regression(s), {} missing gated row(s)",
+            "{} regression(s), {} missing gated row(s), {} A/B violation(s)",
             report.regressions.len(),
-            report.missing.len()
+            report.missing.len(),
+            ab.violations.len()
         );
     }
     println!("bench-gate: green");

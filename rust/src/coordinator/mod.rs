@@ -36,7 +36,9 @@ use crate::model::{LoraTargets, Pool, TransformerSpec};
 use crate::oracle::{MlpOracle, Oracle, PjrtOracle, TransformerOracle};
 use crate::runtime::Runtime;
 use crate::snapshot::{self, CheckpointConfig};
-use crate::train::{ProbeDispatch, ProbeStorage, TrainConfig, TrainOutcome, Trainer};
+use crate::train::{
+    ParamStoreMode, ProbeDispatch, ProbeStorage, TrainConfig, TrainOutcome, Trainer,
+};
 
 /// The forward-only MLP trial configuration: architecture, featurizer
 /// width, the corpus it trains on, and the parameter-init seed.
@@ -145,6 +147,11 @@ pub struct TrialSpec {
     /// The CLI `train --probe-storage` flag flows through here; grids can
     /// use it to A/B materialized vs streamed without cloning configs.
     pub probe_storage: Option<ProbeStorage>,
+    /// Per-trial override of the parameter-storage mode (None keeps the
+    /// config's).  The CLI `train --param-store` flag flows through here;
+    /// grids can use it to A/B f32 vs quantized stores without cloning
+    /// configs (DESIGN.md §14).
+    pub param_store: Option<ParamStoreMode>,
     /// Per-trial override of the checkpoint/resume policy (None keeps the
     /// config's).  Either way, a grid-level checkpoint directory is
     /// rewritten to a per-trial subdirectory (`<dir>/<sanitized id>`)
@@ -229,6 +236,9 @@ fn run_trial_measured(
     }
     if let Some(storage) = spec.probe_storage {
         cfg.probe_storage = storage;
+    }
+    if let Some(store) = spec.param_store {
+        cfg.param_store = store;
     }
     if let Some(ck) = &spec.checkpoint {
         cfg.checkpoint = ck.clone();
@@ -544,6 +554,7 @@ mod tests {
             eval_batches: 1,
             probe_dispatch: None,
             probe_storage: None,
+            param_store: None,
             checkpoint: None,
             oracle: OracleSpec::Mlp(MlpTrial {
                 hidden: vec![8],
@@ -602,6 +613,7 @@ mod tests {
             eval_batches: 1,
             probe_dispatch: None,
             probe_storage: None,
+            param_store: None,
             checkpoint: None,
             oracle: OracleSpec::Transformer(trial),
         };

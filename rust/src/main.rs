@@ -41,6 +41,7 @@ commands:
         [--eval-every N] [--seed N] [--artifacts DIR]
         [--probe-dispatch batched|per-probe] [--threads N]
         [--probe-storage auto|materialized|streamed]
+        [--param-store f32|f16|int8]
         [--checkpoint-dir DIR] [--checkpoint-every N] [--resume]
         [--max-run-steps N]
   toy   [--steps N] [--variant baseline|ldsd] [--seed N]
@@ -122,6 +123,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("budget", "budget"), ("eval_every", "eval-every"), ("seed", "seed"),
         ("probe_dispatch", "probe-dispatch"), ("threads", "threads"),
         ("probe_storage", "probe-storage"),
+        ("param_store", "param-store"),
         ("checkpoint.dir", "checkpoint-dir"),
         ("checkpoint.every", "checkpoint-every"),
         ("checkpoint.max_run_steps", "max-run-steps"),
@@ -203,6 +205,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     // by memory budget; bitwise-identical trajectories (DESIGN.md §10)
     let storage =
         zo_ldsd::train::ProbeStorage::parse(kv.get_or("probe_storage", "auto"))?;
+    // resident parameter storage: f32, or a quantized (f16/int8) store
+    // evaluated through fused dequant kernels (DESIGN.md §14)
+    let param_store = {
+        let s = kv.get_or("param_store", "f32");
+        match zo_ldsd::train::ParamStoreMode::parse(s) {
+            Some(m) => m,
+            None => bail!("unknown param store '{s}' (f32|f16|int8)"),
+        }
+    };
     // --threads 0 (the default) means "size from the environment":
     // ZO_THREADS if set, else cores - 1.  Results are bitwise identical
     // for any thread count (DESIGN.md §9).
@@ -283,6 +294,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_batches,
         probe_dispatch: Some(dispatch),
         probe_storage: Some(storage),
+        param_store: Some(param_store),
         checkpoint: None, // the config's policy applies
         oracle,
     };

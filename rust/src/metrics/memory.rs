@@ -76,6 +76,17 @@ pub fn probe_tracker() -> &'static PeakTracker {
     &TRACKER
 }
 
+/// The process-wide tracker for resident parameter bytes.  Every
+/// [`crate::tensor::ParamStore`] registers its representation bytes here
+/// for its lifetime, so the memory-table bench can report *measured*
+/// f32-vs-f16-vs-int8 residency alongside the analytical table.  Kept
+/// separate from [`probe_tracker`] because parameters are long-lived
+/// (their "peak" is just residency) while probe state is transient.
+pub fn param_tracker() -> &'static PeakTracker {
+    static TRACKER: PeakTracker = PeakTracker::new();
+    &TRACKER
+}
+
 /// RAII f32 buffer registered with the global [`probe_tracker`] for its
 /// lifetime.  Probe matrices and the streamed engine's per-worker shard
 /// scratch allocate through this, so measured per-trial peaks cover every

@@ -3,5 +3,7 @@
 mod memory;
 mod stats;
 
-pub use memory::{probe_tracker, MemoryReport, MethodMemory, PeakTracker, TrackedBuf};
+pub use memory::{
+    param_tracker, probe_tracker, MemoryReport, MethodMemory, PeakTracker, TrackedBuf,
+};
 pub use stats::{mean, percentile, percentile_sorted, stddev, Summary};

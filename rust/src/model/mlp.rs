@@ -21,7 +21,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::LayoutEntry;
-use crate::tensor::{dot, Matrix};
+use crate::tensor::{dot_lanes, Matrix};
 
 /// Hidden-layer nonlinearity of the MLP.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -257,8 +257,9 @@ impl MlpState {
 
 /// One forward pass of a single example: fills `state`'s activations and
 /// returns the logits.  Fixed evaluation order — per output unit one
-/// [`dot`] over the input — so results are a pure function of
-/// (spec, params, x).
+/// [`dot_lanes`] reduction over the input (lane partials in the pinned
+/// element-to-lane assignment, so scalar and wide modes agree bitwise) —
+/// so results are a pure function of (spec, params, x).
 pub fn forward_example<'a>(
     spec: &MlpSpec,
     params: &[f32],
@@ -279,7 +280,7 @@ pub fn forward_example<'a>(
         let out = &mut todo[0];
         let last = l + 1 == n_layers;
         for j in 0..fan_out {
-            let z = b[j] + dot(&w[j * fan_in..(j + 1) * fan_in], input);
+            let z = b[j] + dot_lanes(&w[j * fan_in..(j + 1) * fan_in], input) as f32;
             out[j] = if last { z } else { spec.activation.apply(z) };
         }
     }

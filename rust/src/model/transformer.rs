@@ -36,6 +36,7 @@ use anyhow::{bail, Result};
 
 use crate::config::LayoutEntry;
 use crate::model::mlp::cross_entropy;
+use crate::tensor::lanes::accum_row;
 
 /// The additive key-padding mask value (mirrors `kernels/ref.py::NEG_INF`).
 const NEG_INF: f32 = -1e9;
@@ -586,7 +587,10 @@ impl TransformerState {
 /// `out = x W (+ b)` with W stored input-major `[d_in, d_out]` — the
 /// python `x @ W` convention.  Accumulates over inputs in ascending index
 /// order (per output element the identical f32 addition sequence as a
-/// per-output dot), so results are a pure function of the operands.
+/// per-output dot), so results are a pure function of the operands.  The
+/// inner row update runs through [`crate::tensor::lanes::accum_row`],
+/// whose unfused mul-then-add arithmetic is exactly this loop's — the
+/// committed f32 forward golden stays valid in both lane modes.
 fn matmul(x: &[f32], w: &[f32], b: Option<&[f32]>, out: &mut [f32]) {
     let d_out = out.len();
     debug_assert_eq!(w.len(), x.len() * d_out);
@@ -596,9 +600,7 @@ fn matmul(x: &[f32], w: &[f32], b: Option<&[f32]>, out: &mut [f32]) {
     }
     for (i, &xi) in x.iter().enumerate() {
         let wr = &w[i * d_out..(i + 1) * d_out];
-        for j in 0..d_out {
-            out[j] += xi * wr[j];
-        }
+        accum_row(xi, wr, out);
     }
 }
 
@@ -617,18 +619,13 @@ fn lora_delta(
     tr.iter_mut().for_each(|v| *v = 0.0);
     for (i, &xi) in x.iter().enumerate() {
         let ar = &a[i * r..(i + 1) * r];
-        for c in 0..r {
-            tr[c] += xi * ar[c];
-        }
+        accum_row(xi, ar, tr);
     }
     let d_out = out.len();
     out.iter_mut().for_each(|v| *v = 0.0);
     for c in 0..r {
         let br = &bmat[c * d_out..(c + 1) * d_out];
-        let tc = tr[c];
-        for j in 0..d_out {
-            out[j] += tc * br[j];
-        }
+        accum_row(tr[c], br, out);
     }
     for j in 0..d_out {
         out[j] *= scale;

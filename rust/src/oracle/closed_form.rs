@@ -117,7 +117,9 @@ impl QuadraticOracle {
             let row = &dirs[j * d..(j + 1) * d];
             let mut acc = 0.0f64;
             for i in 0..d {
-                let z = (scratch[i] + tau * row[i]) as f64;
+                // fused, matching the perturb_eval kernel the streamed
+                // path runs (tensor::lanes contract)
+                let z = tau.mul_add(row[i], scratch[i]) as f64;
                 acc += 0.5 * diag[i] as f64 * z * z;
             }
             acc

@@ -13,10 +13,11 @@
 //! cannot fold probe shards through running projection accumulators.
 //! Instead each worker *materializes the perturbed parameter vector* —
 //! O(d) per worker, still independent of K — by visiting the probe row's
-//! regenerated column shards and applying the identical
-//! `w[i] = x[i] + tau * v[i]` expression the slice path uses.  Same
-//! floats in, same fixed-order forward after: bitwise-equal losses
-//! across storage modes (pinned by `tests/mlp_train.rs`).
+//! regenerated column shards and applying the identical fused
+//! `w[i] = tau.mul_add(v[i], x[i])` kernel the slice path uses
+//! ([`crate::tensor::ParamStore::perturb_range_into`]).  Same floats in,
+//! same fixed-order forward after: bitwise-equal losses across storage
+//! modes (pinned by `tests/mlp_train.rs`).
 //!
 //! Minibatches arrive through [`Oracle::set_batch`] either as corpus
 //! token batches — hashed into bag-of-token features by
@@ -29,7 +30,7 @@ use crate::data::Batch;
 use crate::exec::ExecContext;
 use crate::model::mlp::{batch_grad, batch_loss, MlpSpec, MlpState};
 use crate::probe::ProbeSource;
-use crate::tensor::{axpy_into, Matrix};
+use crate::tensor::{Matrix, ParamStore, ParamStoreMode};
 
 use super::{GradOracle, Oracle};
 
@@ -69,8 +70,12 @@ pub fn hash_features(ids: &[i32], mask: &[f32], in_dim: usize, out_row: &mut [f3
 /// accounting.
 pub struct MlpOracle {
     spec: MlpSpec,
-    /// The flat trainable vector (layout: [`MlpSpec::layout`]).
-    x: Vec<f32>,
+    /// The flat trainable vector (layout: [`MlpSpec::layout`]), resident
+    /// in the configured [`ParamStoreMode`] — quantized modes hold *only*
+    /// the compressed representation (the memory saving is real) and
+    /// every evaluation dequantizes on the fly inside the fused perturb
+    /// kernels, which is bitwise identical to materializing first.
+    store: ParamStore,
     /// Current minibatch features (B x in_dim).
     feats: Matrix,
     /// Current minibatch labels (length B).
@@ -100,7 +105,7 @@ impl MlpOracle {
         let name = format!("mlp:{}", spec.label());
         Ok(Self {
             spec,
-            x: params,
+            store: ParamStore::from_f32(ParamStoreMode::F32, &params),
             feats: Matrix::zeros(0, 0),
             labels: Vec::new(),
             wtmp: vec![0.0; d],
@@ -139,12 +144,12 @@ impl MlpOracle {
         if k == 0 {
             bail!("loss_k: k must be >= 1 (empty probe matrix)");
         }
-        let d = self.x.len();
+        let d = self.store.len();
         assert_eq!(dirs.len(), k * d, "dirs must be K x d");
         self.ensure_batch()?;
         self.calls += k as u64;
         let spec = &self.spec;
-        let x = &self.x;
+        let store = &self.store;
         let feats = &self.feats;
         let labels = &self.labels;
         let per_item_work = d.saturating_mul(feats.rows.max(1));
@@ -154,7 +159,7 @@ impl MlpOracle {
             || (vec![0.0f32; d], MlpState::new(spec)),
             |scratch, j| {
                 let (w, st) = scratch;
-                axpy_into(w, x, tau, &dirs[j * d..(j + 1) * d]);
+                store.perturb_into(tau, &dirs[j * d..(j + 1) * d], w);
                 batch_loss(spec, w, feats, labels, st)
             },
         );
@@ -166,7 +171,7 @@ impl MlpOracle {
 
 impl Oracle for MlpOracle {
     fn dim(&self) -> usize {
-        self.x.len()
+        self.store.len()
     }
 
     fn set_batch(&mut self, batch: &Batch) -> Result<()> {
@@ -224,7 +229,7 @@ impl Oracle for MlpOracle {
         self.ensure_batch()?;
         self.calls += 1;
         let mut wtmp = std::mem::take(&mut self.wtmp);
-        axpy_into(&mut wtmp, &self.x, scale, dir);
+        self.store.perturb_into(scale, dir, &mut wtmp);
         let v = batch_loss(&self.spec, &wtmp, &self.feats, &self.labels, &mut self.state);
         self.wtmp = wtmp;
         Ok(v)
@@ -253,17 +258,18 @@ impl Oracle for MlpOracle {
         if k == 0 {
             bail!("loss_k: k must be >= 1 (empty probe matrix)");
         }
-        let d = self.x.len();
+        let d = self.store.len();
         assert_eq!(probes.dim(), d, "probe rows must be length d");
         self.ensure_batch()?;
         self.calls += k as u64;
         // per probe: materialize w = x + tau * v from the row's
-        // regenerated column shards — the same elementwise expression the
-        // slice path applies, so the forward sees identical floats and
-        // the losses are bitwise equal.  Cursor, w and the activation
-        // scratch are per worker, reused across that worker's probes.
+        // regenerated column shards through the store's fused
+        // perturb-window kernel — the same `tau.mul_add(v, x)` the slice
+        // path applies, so the forward sees identical floats and the
+        // losses are bitwise equal.  Cursor, w and the activation scratch
+        // are per worker, reused across that worker's probes.
         let spec = &self.spec;
-        let x = &self.x;
+        let store = &self.store;
         let feats = &self.feats;
         let labels = &self.labels;
         let per_item_work = d.saturating_mul(feats.rows.max(1));
@@ -274,11 +280,7 @@ impl Oracle for MlpOracle {
             |scratch, j| {
                 let (cur, w, st) = scratch;
                 cur.visit_row(j, &mut |c0, piece| {
-                    let xs = &x[c0..c0 + piece.len()];
-                    let wb = &mut w[c0..c0 + piece.len()];
-                    for i in 0..piece.len() {
-                        wb[i] = xs[i] + tau * piece[i];
-                    }
+                    store.perturb_range_into(c0, tau, piece, &mut w[c0..c0 + piece.len()]);
                 });
                 batch_loss(spec, w, feats, labels, st)
             },
@@ -297,11 +299,38 @@ impl Oracle for MlpOracle {
     }
 
     fn params(&self) -> &[f32] {
-        &self.x
+        self.store.as_f32()
+    }
+
+    fn params_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.store.len(), 0.0);
+        self.store.dequant_into(out);
+    }
+
+    fn set_param_store(&mut self, mode: ParamStoreMode) -> Result<()> {
+        if mode != self.store.mode() {
+            self.store = self.store.convert(mode);
+        }
+        Ok(())
+    }
+
+    fn supports_param_store(&self) -> bool {
+        true
     }
 
     fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()> {
-        f(&mut self.x);
+        if self.store.mode() == ParamStoreMode::F32 {
+            f(self.store.as_f32_mut());
+            return Ok(());
+        }
+        // dequant -> mutate -> requant; exact round-trip when f is the
+        // identity, so restores reproduce the store bit-for-bit
+        let mut tmp = std::mem::take(&mut self.wtmp);
+        self.store.dequant_into(&mut tmp);
+        f(&mut tmp);
+        self.store.store_from(&tmp);
+        self.wtmp = tmp;
         Ok(())
     }
 
@@ -317,9 +346,10 @@ impl Oracle for MlpOracle {
 impl GradOracle for MlpOracle {
     fn grad(&mut self, out: &mut [f32]) -> Result<f64> {
         self.ensure_batch()?;
+        // diagnostics path: f32 storage only (as_f32 panics otherwise)
         Ok(batch_grad(
             &self.spec,
-            &self.x,
+            self.store.as_f32(),
             &self.feats,
             &self.labels,
             out,
@@ -440,6 +470,41 @@ mod tests {
         for (i, b) in batched.iter().enumerate() {
             let l = o.loss_dir(&dirs[i * d..(i + 1) * d], 1e-2).unwrap();
             assert_eq!(b.to_bits(), l.to_bits(), "probe {i}: {b} vs {l}");
+        }
+    }
+
+    #[test]
+    fn quantized_store_matches_materialized_dequant_bitwise() {
+        // the qstore contract at the oracle level: evaluating through the
+        // fused on-the-fly dequant kernels equals materializing the
+        // dequantized f32 vector and evaluating that, bit for bit
+        let spec = small_spec();
+        let batch = corpus_batch();
+        let d = spec.dim();
+        let k = 3;
+        let mut rng = crate::rng::Rng::new(21);
+        let mut dirs = vec![0.0f32; k * d];
+        rng.fill_normal(&mut dirs);
+        for mode in [ParamStoreMode::F16, ParamStoreMode::Int8] {
+            let mut q = MlpOracle::from_seed(spec.clone(), 9);
+            q.set_param_store(mode).unwrap();
+            let mut deq = Vec::new();
+            q.params_into(&mut deq);
+            let mut r = MlpOracle::new(spec.clone(), deq).unwrap();
+            q.set_batch(&batch).unwrap();
+            r.set_batch(&batch).unwrap();
+            let a = q.loss_k(&dirs, k, 1e-2).unwrap();
+            let b = r.loss_k(&dirs, k, 1e-2).unwrap();
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{mode:?}");
+            }
+            // identity update must leave the store bitwise intact
+            let before = a.clone();
+            q.update_params(&mut |_| {}).unwrap();
+            let after = q.loss_k(&dirs, k, 1e-2).unwrap();
+            for (x, y) in before.iter().zip(after.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{mode:?} identity update");
+            }
         }
     }
 

@@ -135,10 +135,51 @@ pub trait Oracle {
     }
 
     /// Read access to the current iterate.
+    ///
+    /// Oracles running a quantized parameter store
+    /// ([`Oracle::set_param_store`]) keep no resident f32 image and panic
+    /// here — callers that only need a copy should use
+    /// [`Oracle::params_into`], which works in every storage mode.
     fn params(&self) -> &[f32];
 
+    /// Copy the current iterate (dequantized if needed) into `out` —
+    /// the storage-agnostic read path used by snapshots and eval.  The
+    /// default clones [`Oracle::params`]; quantized-store oracles
+    /// override it with an exact dequantization.
+    fn params_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(self.params());
+    }
+
+    /// Switch the resident parameter representation
+    /// ([`crate::tensor::ParamStoreMode`]).  Quantized modes are only
+    /// meaningful for forward-only oracles that evaluate through fused
+    /// dequant kernels; the default accepts `F32` (a no-op) and rejects
+    /// the rest — see [`Oracle::supports_param_store`].
+    fn set_param_store(&mut self, mode: crate::tensor::ParamStoreMode) -> Result<()> {
+        if mode == crate::tensor::ParamStoreMode::F32 {
+            Ok(())
+        } else {
+            bail!(
+                "oracle '{}' does not support --param-store {} (f32 only)",
+                self.name(),
+                mode.label()
+            )
+        }
+    }
+
+    /// True if [`Oracle::set_param_store`] accepts quantized (f16/int8)
+    /// modes.  The trainer uses this to fall back quietly when an env
+    /// override requests quantization on an unsupporting oracle.
+    fn supports_param_store(&self) -> bool {
+        false
+    }
+
     /// Mutate the iterate (optimizer step).  Implementations must
-    /// invalidate any device-resident copy.
+    /// invalidate any device-resident copy.  Quantized-store oracles
+    /// dequantize into scratch, apply `f`, and requantize — so `f` always
+    /// sees exact current values and the store round-trips bitwise when
+    /// `f` is the identity.
     fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()>;
 
     /// Total forward evaluations so far (budget accounting).

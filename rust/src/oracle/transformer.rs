@@ -21,10 +21,17 @@
 //! projections, so — exactly like the MLP oracle — each worker
 //! *materializes the perturbed trainable vector* (O(d) per worker,
 //! independent of K) by visiting the probe row's regenerated column
-//! shards and applying the identical `w[i] = x[i] + tau * v[i]`
-//! expression the slice path uses.  Same floats in, same fixed-order
-//! forward after: bitwise-equal losses across storage modes (pinned by
-//! `tests/transformer_train.rs`).
+//! shards and applying the identical fused `w[i] = tau.mul_add(v[i],
+//! x[i])` kernel the slice path uses
+//! ([`crate::tensor::ParamStore::perturb_range_into`]).  Same floats in,
+//! same fixed-order forward after: bitwise-equal losses across storage
+//! modes (pinned by `tests/transformer_train.rs`).
+//!
+//! The trainable vector lives in a [`ParamStore`] (DESIGN.md §14): in
+//! quantized (f16/int8) modes only the compressed representation is
+//! resident — in LoRA mode the frozen base stays f32 (it feeds every
+//! forward unperturbed), while the adapter vector quantizes; in FT mode
+//! the whole base quantizes.
 
 use anyhow::{bail, Result};
 
@@ -35,7 +42,7 @@ use crate::model::transformer::{
     batch_dir_derivative, batch_loss, TransformerSpec, TransformerState,
 };
 use crate::probe::ProbeSource;
-use crate::tensor::axpy_into;
+use crate::tensor::{ParamStore, ParamStoreMode};
 
 use super::Oracle;
 
@@ -46,12 +53,15 @@ use super::Oracle;
 pub struct TransformerOracle {
     spec: TransformerSpec,
     mode: TrainMode,
-    /// Full base vector (layout: [`TransformerSpec::ft_layout`]).  In FT
-    /// mode this *is* the trainable vector.
-    base: Vec<f32>,
-    /// LoRA vector (layout: [`TransformerSpec::lora_layout`]); empty in
-    /// FT mode.
-    lora: Vec<f32>,
+    /// Trainable vector: the full base (layout
+    /// [`TransformerSpec::ft_layout`]) in FT mode, the LoRA vector
+    /// (layout [`TransformerSpec::lora_layout`]) in LoRA mode.  In
+    /// quantized modes only the compressed representation is resident.
+    store: ParamStore,
+    /// Frozen base vector in LoRA mode (always f32 — it feeds every
+    /// forward unperturbed); empty in FT mode, where the base *is* the
+    /// trainable and lives in `store`.
+    frozen_base: Vec<f32>,
     /// Current minibatch token ids (B x seq).
     ids: Vec<i32>,
     /// Current minibatch key-padding mask (B x seq).
@@ -102,17 +112,23 @@ impl TransformerOracle {
                 }
             }
         }
-        let d = match mode {
-            TrainMode::Ft => base.len(),
-            TrainMode::Lora => lora.len(),
+        let (store, frozen_base, d) = match mode {
+            TrainMode::Ft => {
+                let d = base.len();
+                (ParamStore::from_f32(ParamStoreMode::F32, &base), Vec::new(), d)
+            }
+            TrainMode::Lora => {
+                let d = lora.len();
+                (ParamStore::from_f32(ParamStoreMode::F32, &lora), base, d)
+            }
         };
         let state = TransformerState::new(&spec);
         let name = format!("transformer:{}:{}", spec.label(), mode.as_str());
         Ok(Self {
             spec,
             mode,
-            base,
-            lora,
+            store,
+            frozen_base,
             ids: Vec::new(),
             mask: Vec::new(),
             labels: Vec::new(),
@@ -148,8 +164,16 @@ impl TransformerOracle {
     }
 
     /// The frozen/full base vector (FT mode: the trainable itself).
+    ///
+    /// In FT mode this reads the resident f32 image and therefore panics
+    /// under a quantized store — callers (evaluator construction, the
+    /// diagnostics paths) run before or without
+    /// [`Oracle::set_param_store`].
     pub fn base(&self) -> &[f32] {
-        &self.base
+        match self.mode {
+            TrainMode::Ft => self.store.as_f32(),
+            TrainMode::Lora => &self.frozen_base,
+        }
     }
 
     fn ensure_batch(&self) -> Result<()> {
@@ -164,15 +188,17 @@ impl TransformerOracle {
     /// ([`batch_dir_derivative`]).  Returns `(loss, dloss/dtau)`.
     /// Diagnostics only — the fd-vs-analytic cross-checks in
     /// `tests/transformer_train.rs`; the training path never calls it.
+    /// Reads the resident f32 image, so it panics under a quantized
+    /// store (the diagnostics tests run f32 storage only).
     pub fn dir_derivative(&self, dir: &[f32]) -> Result<(f64, f64)> {
         self.ensure_batch()?;
-        let lora = match self.mode {
-            TrainMode::Ft => None,
-            TrainMode::Lora => Some(&self.lora[..]),
+        let (base, lora) = match self.mode {
+            TrainMode::Ft => (self.store.as_f32(), None),
+            TrainMode::Lora => (&self.frozen_base[..], Some(self.store.as_f32())),
         };
         Ok(batch_dir_derivative(
             &self.spec,
-            &self.base,
+            base,
             lora,
             dir,
             &self.ids,
@@ -184,10 +210,11 @@ impl TransformerOracle {
 
     /// Shared `loss_k`/`loss_k_into` core: the K probes are evaluated
     /// independently (probe-parallel on the installed context); each
-    /// worker forms `w = x + tau * v_j` into its own O(d) buffer and runs
-    /// the fixed-order minibatch forward.  Per probe the arithmetic is
-    /// exactly `loss_dir`'s, so the batched and looped paths agree bit
-    /// for bit.
+    /// worker forms `w = x + tau * v_j` into its own O(d) buffer via
+    /// [`ParamStore::perturb_into`] (fused dequant+axpy in quantized
+    /// modes) and runs the fixed-order minibatch forward.  Per probe the
+    /// arithmetic is exactly `loss_dir`'s, so the batched and looped
+    /// paths agree bit for bit.
     fn loss_k_impl(&mut self, dirs: &[f32], k: usize, tau: f32, out: &mut Vec<f64>) -> Result<()> {
         if k == 0 {
             bail!("loss_k: k must be >= 1 (empty probe matrix)");
@@ -197,12 +224,9 @@ impl TransformerOracle {
         self.ensure_batch()?;
         self.calls += k as u64;
         let spec = &self.spec;
-        let base = &self.base;
+        let store = &self.store;
+        let frozen_base = &self.frozen_base;
         let lora_mode = self.mode == TrainMode::Lora;
-        let x: &[f32] = match self.mode {
-            TrainMode::Ft => &self.base,
-            TrainMode::Lora => &self.lora,
-        };
         let ids = &self.ids;
         let mask = &self.mask;
         let labels = &self.labels;
@@ -214,9 +238,9 @@ impl TransformerOracle {
             || (vec![0.0f32; d], TransformerState::new(spec)),
             |scratch, j| {
                 let (w, st) = scratch;
-                axpy_into(w, x, tau, &dirs[j * d..(j + 1) * d]);
+                store.perturb_into(tau, &dirs[j * d..(j + 1) * d], w);
                 if lora_mode {
-                    batch_loss(spec, base, Some(w), ids, mask, seq, labels, st)
+                    batch_loss(spec, frozen_base, Some(w), ids, mask, seq, labels, st)
                 } else {
                     batch_loss(spec, w, None, ids, mask, seq, labels, st)
                 }
@@ -230,10 +254,7 @@ impl TransformerOracle {
 
 impl Oracle for TransformerOracle {
     fn dim(&self) -> usize {
-        match self.mode {
-            TrainMode::Ft => self.base.len(),
-            TrainMode::Lora => self.lora.len(),
-        }
+        self.store.len()
     }
 
     fn set_batch(&mut self, batch: &Batch) -> Result<()> {
@@ -290,13 +311,7 @@ impl Oracle for TransformerOracle {
         self.calls += 1;
         let mut wtmp = std::mem::take(&mut self.wtmp);
         let mut state = std::mem::replace(&mut self.state, TransformerState::new(&self.spec));
-        {
-            let x: &[f32] = match self.mode {
-                TrainMode::Ft => &self.base,
-                TrainMode::Lora => &self.lora,
-            };
-            axpy_into(&mut wtmp, x, scale, dir);
-        }
+        self.store.perturb_into(scale, dir, &mut wtmp);
         let v = match self.mode {
             TrainMode::Ft => batch_loss(
                 &self.spec,
@@ -310,7 +325,7 @@ impl Oracle for TransformerOracle {
             ),
             TrainMode::Lora => batch_loss(
                 &self.spec,
-                &self.base,
+                &self.frozen_base,
                 Some(&wtmp),
                 &self.ids,
                 &self.mask,
@@ -352,17 +367,14 @@ impl Oracle for TransformerOracle {
         self.ensure_batch()?;
         self.calls += k as u64;
         // per probe: materialize w = x + tau * v from the row's
-        // regenerated column shards — the same elementwise expression the
+        // regenerated column shards — the same fused perturb kernel the
         // slice path applies, so the forward sees identical floats and
         // the losses are bitwise equal.  Cursor, w and the activation
         // scratch are per worker, reused across that worker's probes.
         let spec = &self.spec;
-        let base = &self.base;
+        let store = &self.store;
+        let frozen_base = &self.frozen_base;
         let lora_mode = self.mode == TrainMode::Lora;
-        let x: &[f32] = match self.mode {
-            TrainMode::Ft => &self.base,
-            TrainMode::Lora => &self.lora,
-        };
         let ids = &self.ids;
         let mask = &self.mask;
         let labels = &self.labels;
@@ -375,14 +387,10 @@ impl Oracle for TransformerOracle {
             |scratch, j| {
                 let (cur, w, st) = scratch;
                 cur.visit_row(j, &mut |c0, piece| {
-                    let xs = &x[c0..c0 + piece.len()];
-                    let wb = &mut w[c0..c0 + piece.len()];
-                    for i in 0..piece.len() {
-                        wb[i] = xs[i] + tau * piece[i];
-                    }
+                    store.perturb_range_into(c0, tau, piece, &mut w[c0..c0 + piece.len()]);
                 });
                 if lora_mode {
-                    batch_loss(spec, base, Some(w), ids, mask, seq, labels, st)
+                    batch_loss(spec, frozen_base, Some(w), ids, mask, seq, labels, st)
                 } else {
                     batch_loss(spec, w, None, ids, mask, seq, labels, st)
                 }
@@ -402,17 +410,38 @@ impl Oracle for TransformerOracle {
     }
 
     fn params(&self) -> &[f32] {
-        match self.mode {
-            TrainMode::Ft => &self.base,
-            TrainMode::Lora => &self.lora,
+        self.store.as_f32()
+    }
+
+    fn params_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.store.len(), 0.0);
+        self.store.dequant_into(out);
+    }
+
+    fn set_param_store(&mut self, mode: ParamStoreMode) -> Result<()> {
+        if mode != self.store.mode() {
+            self.store = self.store.convert(mode);
         }
+        Ok(())
+    }
+
+    fn supports_param_store(&self) -> bool {
+        true
     }
 
     fn update_params(&mut self, f: &mut dyn FnMut(&mut [f32])) -> Result<()> {
-        match self.mode {
-            TrainMode::Ft => f(&mut self.base),
-            TrainMode::Lora => f(&mut self.lora),
+        if self.store.mode() == ParamStoreMode::F32 {
+            f(self.store.as_f32_mut());
+            return Ok(());
         }
+        // dequant -> mutate -> requant; exact round-trip when f is the
+        // identity, so restores reproduce the store bit-for-bit
+        let mut tmp = std::mem::take(&mut self.wtmp);
+        self.store.dequant_into(&mut tmp);
+        f(&mut tmp);
+        self.store.store_from(&tmp);
+        self.wtmp = tmp;
         Ok(())
     }
 
@@ -525,6 +554,53 @@ mod tests {
                 assert_eq!(b.to_bits(), l.to_bits(), "{mode:?} probe {i}: {b} vs {l}");
             }
             assert!(o.loss_k(&[], 0, 1e-3).is_err());
+        }
+    }
+
+    #[test]
+    fn quantized_store_matches_materialized_dequant_bitwise() {
+        // the qstore contract at the oracle level, in both train modes:
+        // evaluating through the fused on-the-fly dequant kernels equals
+        // rebuilding an f32 oracle from the dequantized trainable vector
+        // and evaluating that, bit for bit (the frozen base stays f32 in
+        // LoRA mode, so it is shared verbatim)
+        let spec = tiny_spec();
+        let batch = corpus_batch();
+        let k = 3;
+        for tm in [TrainMode::Ft, TrainMode::Lora] {
+            for qm in [ParamStoreMode::F16, ParamStoreMode::Int8] {
+                let mut q = TransformerOracle::from_seed(spec.clone(), tm, 9);
+                let base = match tm {
+                    TrainMode::Ft => Vec::new(),
+                    TrainMode::Lora => q.base().to_vec(),
+                };
+                q.set_param_store(qm).unwrap();
+                let d = q.dim();
+                let mut rng = crate::rng::Rng::new(21);
+                let mut dirs = vec![0.0f32; k * d];
+                rng.fill_normal(&mut dirs);
+                let mut deq = Vec::new();
+                q.params_into(&mut deq);
+                let mut r = match tm {
+                    TrainMode::Ft => {
+                        TransformerOracle::new(spec.clone(), tm, deq, Vec::new()).unwrap()
+                    }
+                    TrainMode::Lora => TransformerOracle::new(spec.clone(), tm, base, deq).unwrap(),
+                };
+                q.set_batch(&batch).unwrap();
+                r.set_batch(&batch).unwrap();
+                let a = q.loss_k(&dirs, k, 1e-2).unwrap();
+                let b = r.loss_k(&dirs, k, 1e-2).unwrap();
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{tm:?} {qm:?}");
+                }
+                // identity update must leave the store bitwise intact
+                q.update_params(&mut |_| {}).unwrap();
+                let after = q.loss_k(&dirs, k, 1e-2).unwrap();
+                for (x, y) in a.iter().zip(after.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{tm:?} {qm:?} identity update");
+                }
+            }
         }
     }
 

@@ -282,8 +282,10 @@ impl DirectionSampler for LdsdSampler {
                         continue;
                     }
                     let piece = &block[i * bl..i * bl + len];
+                    // fused, matching the fma_axpy kernel that observe()
+                    // runs via axpy_k_ctx (tensor::lanes contract)
                     for (m, v) in mub.iter_mut().zip(piece.iter()) {
-                        *m += *wi * *v;
+                        *m = wi.mul_add(*v, *m);
                     }
                 }
             },

@@ -1,0 +1,388 @@
+//! Explicitly vectorized wide-lane kernels with a bitwise lane contract
+//! (DESIGN.md §14).
+//!
+//! Every kernel here exists in two compiled forms sharing ONE body:
+//! * **scalar** — the body compiled with the crate's baseline target
+//!   features; fused multiplies go through [`f32::mul_add`], which lowers
+//!   to the correctly-rounded `fmaf` libcall.
+//! * **wide** — the *same body* compiled inside an
+//!   `#[target_feature(enable = "avx2", enable = "fma")]` clone, where
+//!   LLVM vectorizes the `mul_add` loops into 8-lane `vfmadd` and the
+//!   plain mul/add loops into 8-lane `vmul`/`vadd`.
+//!
+//! The bitwise contract rests on two facts: IEEE-754 `fusedMultiplyAdd`
+//! is correctly rounded, so the libcall and the hardware instruction
+//! return identical bits for every input; and rustc never enables
+//! floating-point contraction, so plain `a * b + c` expressions are never
+//! silently fused under `target_feature`.  Kernels whose arithmetic is
+//! elementwise (axpy family) are trivially chunking-invariant; the one
+//! reducing kernel ([`dot_lanes`]) accumulates into [`LANES`] fixed f64
+//! partials in a pinned element-to-lane assignment and reduces them in
+//! pinned index order, mirroring the shard contract — so results are
+//! bit-identical at any lane width, thread count, and probe-storage mode.
+//!
+//! Mode selection: `ZO_LANES=scalar|wide` (invalid values panic loudly),
+//! defaulting to wide when the CPU supports avx2+fma.  Forcing `wide` on
+//! a CPU without those features falls back to the scalar body — which is
+//! bit-identical by the contract, so the request is honored semantically.
+//! [`force_mode`] overrides both for A/B benches and property tests; the
+//! race it could theoretically lose is harmless because both modes return
+//! identical bits.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Lane width of the wide kernels (8 f32 lanes = one AVX2 register).
+pub const LANES: usize = 8;
+
+/// Which kernel family executes: the scalar bodies or their
+/// `target_feature` wide clones.  Both return identical bits; the mode
+/// only changes speed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneMode {
+    /// Baseline-feature bodies (`mul_add` = `fmaf` libcall).
+    Scalar,
+    /// avx2+fma clones (vectorized `vfmadd`), when the CPU has them.
+    Wide,
+}
+
+impl LaneMode {
+    /// Parse `"scalar"` / `"wide"`.
+    pub fn parse(s: &str) -> Option<LaneMode> {
+        match s {
+            "scalar" => Some(LaneMode::Scalar),
+            "wide" => Some(LaneMode::Wide),
+            _ => None,
+        }
+    }
+
+    /// The label used in env vars and bench row names.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LaneMode::Scalar => "scalar",
+            LaneMode::Wide => "wide",
+        }
+    }
+}
+
+// 0 = uninitialized, 1 = scalar, 2 = wide (idempotent lazy init — a race
+// recomputes the same value).
+static ENV_MODE: AtomicU8 = AtomicU8::new(0);
+// 0 = uninitialized, 1 = no, 2 = yes
+static CPU_WIDE: AtomicU8 = AtomicU8::new(0);
+// 0 = no override, 1 = forced scalar, 2 = forced wide
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+fn cpu_wide() -> bool {
+    match CPU_WIDE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            let has = is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+            #[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+            let has = false;
+            CPU_WIDE.store(if has { 2 } else { 1 }, Ordering::Relaxed);
+            has
+        }
+    }
+}
+
+/// The configured lane mode: `ZO_LANES` if set (panicking on anything but
+/// `scalar`/`wide` — a typo must not silently change the benchmark), else
+/// [`LaneMode::Wide`] when the CPU supports it.
+pub fn lane_mode() -> LaneMode {
+    match ENV_MODE.load(Ordering::Relaxed) {
+        1 => LaneMode::Scalar,
+        2 => LaneMode::Wide,
+        _ => {
+            let mode = match std::env::var("ZO_LANES") {
+                Ok(v) => LaneMode::parse(&v).unwrap_or_else(|| {
+                    panic!("ZO_LANES must be 'scalar' or 'wide', got '{v}'")
+                }),
+                Err(_) => {
+                    if cpu_wide() {
+                        LaneMode::Wide
+                    } else {
+                        LaneMode::Scalar
+                    }
+                }
+            };
+            ENV_MODE.store(
+                match mode {
+                    LaneMode::Scalar => 1,
+                    LaneMode::Wide => 2,
+                },
+                Ordering::Relaxed,
+            );
+            mode
+        }
+    }
+}
+
+/// Process-wide mode override for A/B benches and scalar-vs-wide property
+/// tests; `None` restores the `ZO_LANES`/detection default.  Safe to flip
+/// at any time — the two modes are bit-identical, so a concurrently
+/// running kernel can only change speed, never results.
+pub fn force_mode(mode: Option<LaneMode>) {
+    FORCED.store(
+        match mode {
+            None => 0,
+            Some(LaneMode::Scalar) => 1,
+            Some(LaneMode::Wide) => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// The mode kernels dispatch on right now ([`force_mode`] override, else
+/// [`lane_mode`]).
+pub fn effective_mode() -> LaneMode {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => LaneMode::Scalar,
+        2 => LaneMode::Wide,
+        _ => lane_mode(),
+    }
+}
+
+#[inline]
+fn wide_active() -> bool {
+    effective_mode() == LaneMode::Wide && cpu_wide()
+}
+
+/// Generate the public dispatcher + the avx2/fma wide clone for one
+/// kernel body.  The clone's body IS the scalar body (inlined into the
+/// `target_feature` context), so the two forms cannot drift.
+macro_rules! lane_kernel {
+    ($(#[$doc:meta])* $name:ident / $wide:ident => $body:ident
+     ($($arg:ident: $ty:ty),*) $(-> $ret:ty)?) => {
+        $(#[$doc])*
+        #[inline]
+        pub fn $name($($arg: $ty),*) $(-> $ret)? {
+            #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+            {
+                if wide_active() {
+                    // SAFETY: wide_active() is true only after runtime
+                    // detection of avx2+fma on this CPU.
+                    unsafe {
+                        return $wide($($arg),*);
+                    }
+                }
+            }
+            $body($($arg),*)
+        }
+
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        #[target_feature(enable = "avx2", enable = "fma")]
+        unsafe fn $wide($($arg: $ty),*) $(-> $ret)? {
+            $body($($arg),*)
+        }
+    };
+}
+
+#[inline(always)]
+fn fma_axpy_body(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = a.mul_add(*xi, *yi);
+    }
+}
+
+#[inline(always)]
+fn fma_axpy_into_body(out: &mut [f32], x: &[f32], a: f32, d: &[f32]) {
+    for i in 0..out.len() {
+        out[i] = a.mul_add(d[i], x[i]);
+    }
+}
+
+#[inline(always)]
+fn fma_perturb_fill_body(x: &[f32], tau: f32, v: &[f32], z: &mut [f32]) {
+    for i in 0..z.len() {
+        z[i] = tau.mul_add(v[i], x[i]);
+    }
+}
+
+#[inline(always)]
+fn accum_row_body(xi: f32, w: &[f32], out: &mut [f32]) {
+    for (o, wv) in out.iter_mut().zip(w.iter()) {
+        *o += xi * *wv;
+    }
+}
+
+#[inline(always)]
+fn dot_lanes_body(x: &[f32], y: &[f32]) -> f64 {
+    let n = x.len();
+    let mut acc = [0.0f64; LANES];
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for j in 0..LANES {
+            acc[j] += x[base + j] as f64 * y[base + j] as f64;
+        }
+    }
+    let tail = chunks * LANES;
+    for j in 0..n - tail {
+        acc[j] += x[tail + j] as f64 * y[tail + j] as f64;
+    }
+    // pinned index-order reduce of the lane partials
+    let mut s = 0.0f64;
+    for a in acc.iter() {
+        s += *a;
+    }
+    s
+}
+
+lane_kernel! {
+    /// y += a * x, fused: `y[i] = a.mul_add(x[i], y[i])`.  The shared
+    /// accumulation primitive behind `axpy`, the `axpy_k` row loop and
+    /// `replay_axpy` — all three run this exact body, which is what makes
+    /// the fused/looped/replayed paths bit-identical.
+    fma_axpy / fma_axpy_wide => fma_axpy_body(a: f32, x: &[f32], y: &mut [f32])
+}
+
+lane_kernel! {
+    /// out = x + a * d, fused: `out[i] = a.mul_add(d[i], x[i])`.  The
+    /// perturbed-iterate primitive behind `axpy_into` and every oracle's
+    /// `w = x + tau * v` materialization (slice and streamed alike).
+    fma_axpy_into / fma_axpy_into_wide =>
+        fma_axpy_into_body(out: &mut [f32], x: &[f32], a: f32, d: &[f32])
+}
+
+lane_kernel! {
+    /// z = x + tau * v into a caller chunk buffer, fused — the vectorized
+    /// core of `perturb_eval` (the streamed closed-form path computes z in
+    /// chunks here, then feeds elements to the visitor in index order).
+    fma_perturb_fill / fma_perturb_fill_wide =>
+        fma_perturb_fill_body(x: &[f32], tau: f32, v: &[f32], z: &mut [f32])
+}
+
+lane_kernel! {
+    /// out += xi * w, UNfused (separate mul and add) — the transformer
+    /// matmul / LoRA inner row update.  Kept free of `mul_add` on purpose:
+    /// the committed bitwise forward golden pins the unfused arithmetic,
+    /// and rustc never contracts it, so the wide clone only widens the
+    /// elementwise loop without changing any rounding.
+    accum_row / accum_row_wide => accum_row_body(xi: f32, w: &[f32], out: &mut [f32])
+}
+
+lane_kernel! {
+    /// Lane-partitioned f32 dot product with f64 accumulation: element i
+    /// feeds lane partial `i % LANES`, partials reduce in pinned index
+    /// order.  NOT bit-compatible with the sequential [`super::dot`] —
+    /// use it only where no contract pins the sequential order (the MLP
+    /// forward's per-unit reduction).  Both lane modes run this same
+    /// body, so the result is bit-identical across modes by construction.
+    dot_lanes / dot_lanes_wide => dot_lanes_body(x: &[f32], y: &[f32]) -> f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v);
+        v
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        assert_eq!(LaneMode::parse("scalar"), Some(LaneMode::Scalar));
+        assert_eq!(LaneMode::parse("wide"), Some(LaneMode::Wide));
+        assert_eq!(LaneMode::parse("turbo"), None);
+        assert_eq!(LaneMode::Scalar.label(), "scalar");
+        assert_eq!(LaneMode::Wide.label(), "wide");
+    }
+
+    #[test]
+    fn scalar_vs_wide_bitwise_identical() {
+        // the lane contract itself: every kernel returns identical bits in
+        // both modes (vacuously true on CPUs without avx2+fma, where wide
+        // falls back to the scalar body)
+        let mut rng = Rng::new(42);
+        for n in [1usize, 7, 8, 9, 64, 1000, 4099] {
+            let x = fill(&mut rng, n);
+            let d = fill(&mut rng, n);
+            let y0 = fill(&mut rng, n);
+            let a = 0.37f32;
+
+            let run = |mode: LaneMode| {
+                force_mode(Some(mode));
+                let mut y = y0.clone();
+                fma_axpy(a, &x, &mut y);
+                let mut o = vec![0.0f32; n];
+                fma_axpy_into(&mut o, &x, a, &d);
+                let mut z = vec![0.0f32; n];
+                fma_perturb_fill(&x, a, &d, &mut z);
+                let mut r = y0.clone();
+                accum_row(a, &x, &mut r);
+                let dp = dot_lanes(&x, &d);
+                force_mode(None);
+                (y, o, z, r, dp)
+            };
+            let (ys, os, zs, rs, ds) = run(LaneMode::Scalar);
+            let (yw, ow, zw, rw, dw) = run(LaneMode::Wide);
+            for (a, b) in ys.iter().zip(yw.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fma_axpy n={n}");
+            }
+            for (a, b) in os.iter().zip(ow.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fma_axpy_into n={n}");
+            }
+            for (a, b) in zs.iter().zip(zw.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fma_perturb_fill n={n}");
+            }
+            for (a, b) in rs.iter().zip(rw.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "accum_row n={n}");
+            }
+            assert_eq!(ds.to_bits(), dw.to_bits(), "dot_lanes n={n}");
+        }
+    }
+
+    #[test]
+    fn fma_axpy_is_fused() {
+        // pick values where fused and unfused rounding differ: with
+        // a = 1 + 2^-12, x = 1 + 2^-12, y = -1, the product 1 + 2^-11 +
+        // 2^-24 is not representable in f32, so the unfused path rounds
+        // it before adding while fma keeps the 2^-24 term
+        let a = 1.0f32 + 2.0f32.powi(-12);
+        let x = [a];
+        let mut y = [-1.0f32];
+        fma_axpy(a, &x, &mut y);
+        let fused = a.mul_add(a, -1.0f32);
+        let unfused = a * a - 1.0f32;
+        assert_eq!(y[0].to_bits(), fused.to_bits());
+        assert_ne!(
+            fused.to_bits(),
+            unfused.to_bits(),
+            "test values must distinguish fused from unfused rounding"
+        );
+    }
+
+    #[test]
+    fn dot_lanes_matches_lane_partial_reference() {
+        let mut rng = Rng::new(7);
+        let n = 1003;
+        let x = fill(&mut rng, n);
+        let y = fill(&mut rng, n);
+        // independent reference: the documented lane-partial recurrence
+        let mut acc = [0.0f64; LANES];
+        for i in 0..n {
+            acc[i % LANES] += x[i] as f64 * y[i] as f64;
+        }
+        let mut want = 0.0f64;
+        for a in acc.iter() {
+            want += *a;
+        }
+        assert_eq!(dot_lanes(&x, &y).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn accum_row_stays_unfused() {
+        // the golden-pinned transformer arithmetic: out[j] + xi*w[j] with
+        // an intermediate rounding of the product
+        let xi = 1.0f32 + 2.0f32.powi(-12);
+        let w = [xi];
+        let mut out = [-1.0f32];
+        accum_row(xi, &w, &mut out);
+        assert_eq!(out[0].to_bits(), (xi * xi - 1.0f32).to_bits());
+    }
+}

@@ -5,10 +5,14 @@
 //! parameter stores can share buffers without copies; the `Vector`
 //! new-type adds checked construction and convenience ops on top.
 
+pub mod lanes;
 mod ops;
+pub mod qstore;
 mod vector;
 
+pub use lanes::{dot_lanes, LaneMode};
 pub use ops::*;
+pub use qstore::{ParamStore, ParamStoreMode};
 pub use vector::Vector;
 
 /// A dense row-major matrix view used by the toy oracles (linreg / logreg).

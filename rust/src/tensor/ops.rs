@@ -2,8 +2,10 @@
 //!
 //! These are the L3 counterparts of the L1 Pallas axpy/reduce kernels: the
 //! coordinator uses them for sampler/optimizer state updates (O(d) or
-//! O(K d) per step).  Written as simple indexed loops over chunks so LLVM
-//! auto-vectorizes them; `perf_hotpath` benches track their throughput.
+//! O(K d) per step).  The axpy family dispatches through the
+//! [`super::lanes`] kernels (DESIGN.md §14): fused `mul_add` arithmetic
+//! whose scalar and avx2+fma wide forms are bit-identical, selected by
+//! `ZO_LANES`; `perf_hotpath` benches the two forms side by side.
 //!
 //! The K-probe batching refactor adds two blocked kernels operating on the
 //! row-major K x d probe matrix directly:
@@ -23,9 +25,10 @@
 //! worker count — `tests/properties.rs` pins this across random shapes
 //! and shard lengths.
 
+use super::lanes;
 use crate::exec::ExecContext;
 
-/// `y += a * x`
+/// `y += a * x`, fused (`y[i] = a.mul_add(x[i], y[i])`).
 ///
 /// ```
 /// use zo_ldsd::tensor::axpy;
@@ -38,19 +41,15 @@ use crate::exec::ExecContext;
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += a * *xi;
-    }
+    lanes::fma_axpy(a, x, y);
 }
 
-/// `out = x + a * d`  (out may not alias x or d)
+/// `out = x + a * d`, fused (out may not alias x or d).
 #[inline]
 pub fn axpy_into(out: &mut [f32], x: &[f32], a: f32, d: &[f32]) {
     debug_assert_eq!(x.len(), out.len());
     debug_assert_eq!(d.len(), out.len());
-    for i in 0..out.len() {
-        out[i] = x[i] + a * d[i];
-    }
+    lanes::fma_axpy_into(out, x, a, d);
 }
 
 /// Column-block size for the multi-row kernels: the `y`/`g` block stays in
@@ -94,9 +93,7 @@ fn axpy_k_cols(a: &[f32], xs: &[f32], d: usize, col0: usize, yb: &mut [f32]) {
             }
             let row = &xs[k * d + start..k * d + end];
             let yw = &mut yb[start - col0..end - col0];
-            for (yi, xi) in yw.iter_mut().zip(row.iter()) {
-                *yi += *ak * *xi;
-            }
+            lanes::fma_axpy(*ak, row, yw);
         }
         start = end;
     }
@@ -210,16 +207,27 @@ pub fn probe_combine_ctx(ctx: &ExecContext, dirs: &[f32], d: usize, w: &[f32], g
 }
 
 /// Fused perturb→evaluate pass for the streamed probe engine: calls
-/// `f(i, x[i] + tau * v[i])` for every index of the window without
+/// `f(i, tau.mul_add(v[i], x[i]))` for every index of the window without
 /// materializing the perturbed vector.  The perturbation arithmetic is
-/// the f32 expression the materialized `loss_k` kernels use, so oracles
-/// evaluating through this on regenerated probe shards produce bitwise
-/// the same losses as the slice path (DESIGN.md §10).
+/// the fused expression the materialized `loss_k` kernels use
+/// ([`lanes::fma_axpy_into`]), so oracles evaluating through this on
+/// regenerated probe shards produce bitwise the same losses as the slice
+/// path (DESIGN.md §10).  z values are computed in vectorizable chunks,
+/// then delivered to the visitor in index order — elementwise arithmetic,
+/// so chunking cannot change any bit.
 #[inline]
 pub fn perturb_eval<F: FnMut(usize, f32)>(x: &[f32], tau: f32, v: &[f32], mut f: F) {
     debug_assert_eq!(x.len(), v.len());
-    for (i, (xi, vi)) in x.iter().zip(v.iter()).enumerate() {
-        f(i, xi + tau * vi);
+    const CHUNK: usize = 256;
+    let mut z = [0.0f32; CHUNK];
+    let mut start = 0;
+    while start < x.len() {
+        let m = (x.len() - start).min(CHUNK);
+        lanes::fma_perturb_fill(&x[start..start + m], tau, &v[start..start + m], &mut z[..m]);
+        for (j, zj) in z[..m].iter().enumerate() {
+            f(start + j, *zj);
+        }
+        start += m;
     }
 }
 
@@ -243,9 +251,7 @@ pub fn replay_axpy<F: FnMut(usize, &mut [f32])>(
         }
         let row = &mut scratch[..n];
         fill(i, row);
-        for (yi, ri) in y.iter_mut().zip(row.iter()) {
-            *yi += *wi * *ri;
-        }
+        lanes::fma_axpy(*wi, row, y);
     }
 }
 
@@ -257,9 +263,7 @@ pub fn axpy_into_ctx(ctx: &ExecContext, out: &mut [f32], x: &[f32], a: f32, d: &
     ctx.for_each_shard_mut(out, |_, start, ob| {
         let xs = &x[start..start + ob.len()];
         let ds = &d[start..start + ob.len()];
-        for i in 0..ob.len() {
-            ob[i] = xs[i] + a * ds[i];
-        }
+        lanes::fma_axpy_into(ob, xs, a, ds);
     });
 }
 

@@ -23,6 +23,10 @@ pub use schedule::{ConstantLr, CosineLr, LrSchedule};
 /// Probe-storage selection re-exported where the run configuration lives.
 pub use crate::probe::ProbeStorage;
 
+/// Parameter-storage selection re-exported where the run configuration
+/// lives (DESIGN.md §14).
+pub use crate::tensor::ParamStoreMode;
+
 /// Checkpoint/resume policy re-exported where the run configuration lives.
 pub use crate::snapshot::CheckpointConfig;
 
@@ -302,6 +306,12 @@ pub struct TrainConfig {
     /// original stream), `Some` = deterministic epoch shuffling of a
     /// finite prefix (the MLP workload's default; DESIGN.md §12).
     pub shuffle: Option<ShuffleSpec>,
+    /// Resident parameter storage: full-precision f32 (default) or a
+    /// quantized (f16/int8) store evaluated through fused dequant kernels
+    /// (DESIGN.md §14).  `ZO_PARAM_STORE` overrides for whole-suite
+    /// forcing; quantized modes need a supporting oracle
+    /// ([`crate::oracle::Oracle::supports_param_store`]).
+    pub param_store: ParamStoreMode,
 }
 
 impl TrainConfig {
@@ -321,6 +331,7 @@ impl TrainConfig {
             probe_storage: ProbeStorage::Auto,
             checkpoint: CheckpointConfig::default(),
             shuffle: None,
+            param_store: ParamStoreMode::F32,
         }
     }
 
@@ -340,6 +351,7 @@ impl TrainConfig {
             probe_storage: ProbeStorage::Auto,
             checkpoint: CheckpointConfig::default(),
             shuffle: None,
+            param_store: ParamStoreMode::F32,
         }
     }
 
@@ -370,6 +382,7 @@ impl TrainConfig {
             probe_storage: ProbeStorage::Auto,
             checkpoint: CheckpointConfig::default(),
             shuffle: None,
+            param_store: ParamStoreMode::F32,
         }
     }
 }
@@ -436,6 +449,12 @@ pub struct Trainer<O: Oracle> {
     g: Vec<f32>,
     /// Probe-loss buffer reused across steps (no per-step allocation).
     probe_losses: Vec<f64>,
+    /// Dequantized-parameter buffer reused by eval points (the oracle may
+    /// keep no resident f32 image; see [`TrainConfig::param_store`]).
+    ptmp: Vec<f32>,
+    /// Resolved parameter-storage mode (config + `ZO_PARAM_STORE`), part
+    /// of the snapshot fingerprint.
+    param_store: ParamStoreMode,
     /// Cross-session run cursors (what snapshots capture and restore).
     progress: RunProgress,
 }
@@ -460,9 +479,11 @@ impl<O: Oracle> Trainer<O> {
     ) -> Result<Self> {
         let d = oracle.dim();
         let storage = Self::resolve_storage(&cfg, &oracle)?;
+        let param_store = Self::resolve_param_store(&cfg, &oracle)?;
         let estimator = build_estimator(&cfg.estimator, d, cfg.tau, cfg.seed, &exec, storage)?;
         let optimizer = crate::optim::optimizers_by_name(&cfg.optimizer, d)?;
         oracle.set_exec(exec);
+        oracle.set_param_store(param_store)?;
         // the minibatch ordering: sequential disjoint windows, or the
         // deterministic epoch shuffle keyed by the run seed
         let stream = match &cfg.shuffle {
@@ -478,8 +499,45 @@ impl<O: Oracle> Trainer<O> {
             optimizer,
             g: vec![0.0; d],
             probe_losses: Vec::new(),
+            ptmp: Vec::new(),
+            param_store,
             progress,
         })
+    }
+
+    /// Resolve the run's parameter storage: the `ZO_PARAM_STORE`
+    /// environment override (CI forces the whole suite onto one mode with
+    /// it) beats the config.  A quantized mode needs a supporting oracle
+    /// ([`Oracle::supports_param_store`]): when the request came from the
+    /// environment the run quietly keeps f32 (so suite-wide forcing skips
+    /// the closed-form substrates), while an explicitly configured
+    /// quantized mode errors instead of silently widening.
+    fn resolve_param_store(cfg: &TrainConfig, oracle: &O) -> Result<ParamStoreMode> {
+        let env = match std::env::var("ZO_PARAM_STORE") {
+            Ok(s) => match ParamStoreMode::parse(&s) {
+                Some(m) => Some(m),
+                None => bail!("ZO_PARAM_STORE='{s}' (expected f32|f16|int8)"),
+            },
+            Err(_) => None,
+        };
+        let requested = env.unwrap_or(cfg.param_store);
+        if requested == ParamStoreMode::F32 || oracle.supports_param_store() {
+            return Ok(requested);
+        }
+        if env.is_some() && cfg.param_store == ParamStoreMode::F32 {
+            eprintln!(
+                "ZO_PARAM_STORE={}: oracle '{}' keeps f32 parameter storage \
+                 (quantized stores unsupported)",
+                requested.label(),
+                oracle.name()
+            );
+            return Ok(ParamStoreMode::F32);
+        }
+        bail!(
+            "oracle '{}' does not support --param-store {} (f32 only)",
+            oracle.name(),
+            requested.label()
+        )
     }
 
     /// Resolve the run's probe storage: the `ZO_PROBE_STORAGE` environment
@@ -549,6 +607,11 @@ impl<O: Oracle> Trainer<O> {
         if let Some(s) = &self.cfg.shuffle {
             label.push_str(&format!("+shuffle{}", s.n_train));
         }
+        // so does the parameter-storage mode: a quantized run walks a
+        // different (requantized) trajectory than the f32 run
+        if self.param_store != ParamStoreMode::F32 {
+            label.push_str(&format!("+{}", self.param_store.label()));
+        }
         crate::snapshot::SnapshotFingerprint {
             label,
             seed: self.cfg.seed,
@@ -575,7 +638,13 @@ impl<O: Oracle> Trainer<O> {
             data_cursor: self.progress.data_cursor,
             sampler_step: sampler.step_label(),
             best_accuracy: self.progress.best_accuracy,
-            params: self.oracle.params().to_vec(),
+            params: {
+                // dequantized image: restore requantizes it, which is
+                // exact on the dequant grid (DESIGN.md §14)
+                let mut p = Vec::new();
+                self.oracle.params_into(&mut p);
+                p
+            },
             optimizer: self.optimizer.state(),
             policy_mean: sampler.policy_mean().map(|m| m.to_vec()),
             loss_curve: self.progress.loss_curve.clone(),
@@ -757,8 +826,9 @@ impl<O: Oracle> Trainer<O> {
             if self.cfg.eval_every > 0 && used_now >= self.progress.next_eval {
                 self.progress.next_eval += self.cfg.eval_every;
                 if let Some(ev) = eval {
+                    self.oracle.params_into(&mut self.ptmp);
                     let acc = ev.accuracy(
-                        self.oracle.params(),
+                        &self.ptmp,
                         self.stream.corpus(),
                         self.cfg.eval_batches,
                     )?;
@@ -794,8 +864,9 @@ impl<O: Oracle> Trainer<O> {
         };
         if !halted {
             if let Some(ev) = eval {
+                self.oracle.params_into(&mut self.ptmp);
                 let acc = ev.accuracy(
-                    self.oracle.params(),
+                    &self.ptmp,
                     self.stream.corpus(),
                     self.cfg.eval_batches,
                 )?;
@@ -861,6 +932,7 @@ mod tests {
             probe_storage: ProbeStorage::Auto,
             checkpoint: CheckpointConfig::default(),
             shuffle: None,
+            param_store: ParamStoreMode::F32,
         };
         let mut t2 = Trainer::new(
             mk(EstimatorKind::CentralK1(SamplerKind::Gaussian)),

@@ -15,7 +15,8 @@ use zo_ldsd::proptest::{check, Gen};
 use zo_ldsd::sampler::LdsdConfig;
 use zo_ldsd::snapshot;
 use zo_ldsd::train::{
-    CheckpointConfig, EstimatorKind, ProbeStorage, SamplerKind, TrainConfig, Trainer,
+    CheckpointConfig, EstimatorKind, ParamStoreMode, ProbeStorage, SamplerKind, TrainConfig,
+    Trainer,
 };
 
 fn mini_corpus() -> Corpus {
@@ -113,6 +114,7 @@ fn cfg_for(case: &ResumeCase, checkpoint: CheckpointConfig) -> TrainConfig {
         probe_storage: case.storage,
         checkpoint,
         shuffle: None,
+        param_store: ParamStoreMode::F32,
     }
 }
 

@@ -14,7 +14,7 @@ use zo_ldsd::oracle::{GradOracle, MlpOracle, Oracle};
 use zo_ldsd::probe::{BoxedSampler, MaterializedProbes, ProbeLayout, ProbeSource, StreamedProbes};
 use zo_ldsd::sampler::{LdsdConfig, LdsdSampler};
 use zo_ldsd::train::{
-    CheckpointConfig, EstimatorKind, ProbeStorage, SamplerKind, ShuffleSpec,
+    CheckpointConfig, EstimatorKind, ParamStoreMode, ProbeStorage, SamplerKind, ShuffleSpec,
     TrainConfig, Trainer,
 };
 
@@ -50,6 +50,7 @@ fn train_cfg(k: usize, budget: u64, seed: u64, storage: ProbeStorage) -> TrainCo
         probe_storage: storage,
         checkpoint: CheckpointConfig::default(),
         shuffle: Some(ShuffleSpec { n_train: 24 }),
+        param_store: ParamStoreMode::F32,
     }
 }
 
@@ -167,7 +168,11 @@ fn mlp_train_bitwise_identical_across_threads_and_storage() {
         )
         .unwrap();
         let out = t.run(None).unwrap();
-        (out.loss_curve, t.oracle().params().to_vec())
+        // params_into, not params(): agnostic to a ZO_PARAM_STORE-forced
+        // quantized store (params() has no f32 slice to return there)
+        let mut p = Vec::new();
+        t.oracle().params_into(&mut p);
+        (out.loss_curve, p)
     };
     let (c1, p1) = run(1, ProbeStorage::Streamed);
     let (c8, p8) = run(8, ProbeStorage::Streamed);
@@ -244,7 +249,10 @@ fn mlp_checkpoint_resume_mid_epoch_is_bitwise_identical() {
         assert_eq!(ca, cb);
         assert_eq!(la.to_bits(), lb.to_bits(), "{la} vs {lb}");
     }
-    for (a, b) in full.oracle().params().iter().zip(second.oracle().params()) {
+    let (mut pa, mut pb) = (Vec::new(), Vec::new());
+    full.oracle().params_into(&mut pa);
+    second.oracle().params_into(&mut pb);
+    for (a, b) in pa.iter().zip(pb.iter()) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
     std::fs::remove_dir_all(&dir).ok();

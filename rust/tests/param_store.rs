@@ -1,0 +1,270 @@
+//! Quantized parameter storage (DESIGN.md §14) at the oracle and trainer
+//! level: a quantized store must behave exactly like an f32 oracle
+//! holding the dequantized image — bitwise, at any thread count and under
+//! both probe-storage modes — and a quantized training run must survive
+//! snapshot → restore → continue bit for bit (restore requantizes the
+//! dequantized snapshot exactly, because requantization is idempotent on
+//! the dequant image).
+
+use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::model::{Activation, MlpSpec};
+use zo_ldsd::oracle::{MlpOracle, Oracle};
+use zo_ldsd::probe::{BoxedSampler, ProbeLayout, ProbeSource, StreamedProbes};
+use zo_ldsd::sampler::{LdsdConfig, LdsdSampler};
+use zo_ldsd::train::{
+    CheckpointConfig, EstimatorKind, ParamStoreMode, ProbeStorage, SamplerKind, ShuffleSpec,
+    TrainConfig, Trainer,
+};
+
+const QUANT_MODES: [ParamStoreMode; 2] = [ParamStoreMode::F16, ParamStoreMode::Int8];
+
+fn mini_corpus() -> Corpus {
+    Corpus::new(CorpusSpec::default_mini()).unwrap()
+}
+
+fn mlp_oracle(seed: u64) -> MlpOracle {
+    let spec = MlpSpec::new(32, vec![16], 2, Activation::Tanh).unwrap();
+    MlpOracle::from_seed(spec, seed)
+}
+
+fn train_cfg(store: ParamStoreMode, storage: ProbeStorage, seed: u64) -> TrainConfig {
+    TrainConfig {
+        estimator: EstimatorKind::BestOfK {
+            k: 5,
+            sampler: SamplerKind::Ldsd(LdsdConfig::default()),
+        },
+        optimizer: "zo_sgd_plain".into(),
+        lr: 0.05,
+        tau: 1e-3,
+        budget: 120,
+        eval_every: 0,
+        eval_batches: 2,
+        cosine_schedule: false,
+        seed,
+        probe_dispatch: Default::default(),
+        probe_storage: storage,
+        checkpoint: CheckpointConfig::default(),
+        shuffle: Some(ShuffleSpec { n_train: 24 }),
+        param_store: store,
+    }
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// The f32-vs-quantized-dequant contract at the oracle level: a quantized
+/// MLP oracle returns bitwise the losses of an f32 oracle holding the
+/// dequantized parameter image — for every quantized mode, at 1 and 8
+/// threads, through the materialized (`loss_k`) and the streamed
+/// (seed-replay `loss_probes`) evaluation paths.
+#[test]
+fn mlp_quantized_matches_dequant_f32_across_threads_and_storage() {
+    let batch = mini_corpus().train_batch(3, 8);
+    let k = 5usize;
+    let tau = 1e-2f32;
+    for qm in QUANT_MODES {
+        // quantized oracle + its dequantized image in a plain f32 oracle
+        let mut q = mlp_oracle(11);
+        q.set_param_store(qm).unwrap();
+        let mut deq = Vec::new();
+        q.params_into(&mut deq);
+        let mut f = mlp_oracle(11);
+        f.update_params(&mut |w| w.copy_from_slice(&deq)).unwrap();
+
+        let d = q.dim();
+        let mut rng = zo_ldsd::rng::Rng::new(23);
+        let mut dirs = vec![0.0f32; k * d];
+        rng.fill_normal(&mut dirs);
+
+        for threads in [1usize, 8] {
+            let ctx = ExecContext::new(threads).with_shard_len(37);
+            for o in [&mut q, &mut f] {
+                o.set_exec(ctx.clone());
+                o.set_batch(&batch).unwrap();
+            }
+            // materialized slice path
+            let lq = q.loss_k(&dirs, k, tau).unwrap();
+            let lf = f.loss_k(&dirs, k, tau).unwrap();
+            for (i, (a, b)) in lq.iter().zip(lf.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} loss_k probe {i} (threads {threads}): {a} vs {b}",
+                    qm.label()
+                );
+            }
+            // streamed (seed-replay) path
+            let sampler = |seed| -> BoxedSampler {
+                Box::new(LdsdSampler::new(d, seed, LdsdConfig::default()))
+            };
+            let run_streamed = |o: &mut MlpOracle| {
+                let mut st = StreamedProbes::new(sampler(9), ProbeLayout::Direct, k);
+                st.set_exec(ctx.clone());
+                st.advance();
+                let mut losses = Vec::new();
+                o.loss_probes(&st, k, tau, &mut losses).unwrap();
+                losses
+            };
+            let sq = run_streamed(&mut q);
+            let sf = run_streamed(&mut f);
+            for (i, (a, b)) in sq.iter().zip(sf.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} streamed probe {i} (threads {threads}): {a} vs {b}",
+                    qm.label()
+                );
+            }
+        }
+    }
+}
+
+/// A quantized training run keeps the engine's determinism contract: the
+/// trajectory is bitwise identical at 1 vs 8 threads and under
+/// materialized vs streamed probe storage, for both quantized modes.
+#[test]
+fn quantized_train_bitwise_identical_across_threads_and_storage() {
+    for qm in QUANT_MODES {
+        let run = |threads: usize, storage: ProbeStorage| {
+            let mut t = Trainer::with_exec(
+                train_cfg(qm, storage, 13),
+                mlp_oracle(13),
+                mini_corpus(),
+                ExecContext::new(threads).with_shard_len(64),
+            )
+            .unwrap();
+            let out = t.run(None).unwrap();
+            let mut p = Vec::new();
+            t.oracle().params_into(&mut p);
+            (out.loss_curve, p)
+        };
+        let (c1, p1) = run(1, ProbeStorage::Streamed);
+        let (c8, p8) = run(8, ProbeStorage::Streamed);
+        let (cm, pm) = run(8, ProbeStorage::Materialized);
+        assert_eq!(c1.len(), c8.len());
+        assert_eq!(c1.len(), cm.len());
+        for (i, ((a1, l1), ((a8, l8), (am, lm)))) in
+            c1.iter().zip(c8.iter().zip(cm.iter())).enumerate()
+        {
+            assert_eq!(a1, a8, "{}: call axis diverged at step {i}", qm.label());
+            assert_eq!(a1, am, "{}: storage call axis diverged at {i}", qm.label());
+            assert_eq!(l1.to_bits(), l8.to_bits(), "{}: thread loss at {i}", qm.label());
+            assert_eq!(l1.to_bits(), lm.to_bits(), "{}: storage loss at {i}", qm.label());
+        }
+        assert!(bits_eq(&p1, &p8), "{}: thread params diverged", qm.label());
+        assert!(bits_eq(&p1, &pm), "{}: storage params diverged", qm.label());
+    }
+}
+
+/// Snapshot → restore → continue under a quantized store, bit for bit:
+/// the snapshot persists the *dequantized* f32 image, and restore
+/// requantizes it exactly (requantization is idempotent on the dequant
+/// image), so the resumed trajectory is the uninterrupted one.
+#[test]
+fn quantized_snapshot_restore_continue_is_bitwise_identical() {
+    for qm in QUANT_MODES {
+        let dir = std::env::temp_dir().join(format!(
+            "zo_param_store_resume_{}_{}",
+            qm.label(),
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let ctx = || ExecContext::new(4).with_shard_len(64);
+
+        let mut full = Trainer::with_exec(
+            train_cfg(qm, ProbeStorage::Auto, 29),
+            mlp_oracle(29),
+            mini_corpus(),
+            ctx(),
+        )
+        .unwrap();
+        let full_out = full.run(None).unwrap();
+        assert!(full_out.completed);
+
+        let ck = |resume: bool, max_run_steps: u64| CheckpointConfig {
+            dir: Some(dir.to_string_lossy().into_owned()),
+            every: 2,
+            resume,
+            max_run_steps,
+        };
+        let mut first = Trainer::with_exec(
+            TrainConfig { checkpoint: ck(false, 4), ..train_cfg(qm, ProbeStorage::Auto, 29) },
+            mlp_oracle(29),
+            mini_corpus(),
+            ctx(),
+        )
+        .unwrap();
+        let partial = first.run(None).unwrap();
+        assert!(!partial.completed, "{}: interrupt must preempt", qm.label());
+        assert_eq!(partial.steps, 4);
+        drop(first);
+
+        let mut second = Trainer::with_exec(
+            TrainConfig { checkpoint: ck(true, 0), ..train_cfg(qm, ProbeStorage::Auto, 29) },
+            mlp_oracle(29),
+            mini_corpus(),
+            ctx(),
+        )
+        .unwrap();
+        let resumed = second.run(None).unwrap();
+        assert!(resumed.completed);
+        assert_eq!(resumed.steps, full_out.steps);
+        assert_eq!(resumed.loss_curve.len(), full_out.loss_curve.len());
+        for ((ca, la), (cb, lb)) in full_out.loss_curve.iter().zip(resumed.loss_curve.iter()) {
+            assert_eq!(ca, cb, "{}: oracle-call axis diverged", qm.label());
+            assert_eq!(la.to_bits(), lb.to_bits(), "{}: {la} vs {lb}", qm.label());
+        }
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        full.oracle().params_into(&mut pa);
+        second.oracle().params_into(&mut pb);
+        assert!(bits_eq(&pa, &pb), "{}: resumed params diverged", qm.label());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// The param-store mode is part of the snapshot fingerprint: resuming an
+/// int8 run with an f16 configuration must fail loudly, not silently
+/// continue on a different storage grid.  (Skipped when `ZO_PARAM_STORE`
+/// is set: the env override legitimately forces both sessions onto one
+/// mode, so no mismatch exists.)
+#[test]
+fn quantized_fingerprint_guards_resume_across_modes() {
+    if std::env::var("ZO_PARAM_STORE").is_ok() {
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!(
+        "zo_param_store_mismatch_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let ck = |resume: bool| CheckpointConfig {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every: 1,
+        resume,
+        max_run_steps: if resume { 0 } else { 2 },
+    };
+    let ctx = || ExecContext::new(1).with_shard_len(64);
+    let int8 = train_cfg(ParamStoreMode::Int8, ProbeStorage::Auto, 7);
+    let mut first = Trainer::with_exec(
+        TrainConfig { checkpoint: ck(false), ..int8 },
+        mlp_oracle(7),
+        mini_corpus(),
+        ctx(),
+    )
+    .unwrap();
+    first.run(None).unwrap();
+
+    let f16 = train_cfg(ParamStoreMode::F16, ProbeStorage::Auto, 7);
+    let mut wrong = Trainer::with_exec(
+        TrainConfig { checkpoint: ck(true), ..f16 },
+        mlp_oracle(7),
+        mini_corpus(),
+        ctx(),
+    )
+    .unwrap();
+    let err = wrong.run(None).unwrap_err();
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

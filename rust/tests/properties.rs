@@ -10,9 +10,10 @@ use zo_ldsd::oracle::{LinRegOracle, LogRegOracle, MlpOracle, Oracle, QuadraticOr
 use zo_ldsd::proptest::{check, Gen, U64Range, VecF32, VecPairF32};
 use zo_ldsd::rng::Rng;
 use zo_ldsd::sampler::{DirectionSampler, GaussianSampler, LdsdConfig, LdsdSampler};
+use zo_ldsd::tensor::lanes::{fma_axpy_into, force_mode, LaneMode};
 use zo_ldsd::tensor::{
     axpy_into, axpy_into_ctx, axpy_k, axpy_k_ctx, cosine, dot, normalize, nrm2,
-    probe_combine, probe_combine_ctx,
+    probe_combine, probe_combine_ctx, ParamStore, ParamStoreMode,
 };
 
 const VEC: VecF32 = VecF32 { min_len: 1, max_len: 256, scale: 10.0 };
@@ -309,6 +310,109 @@ fn prop_loss_dir_scale_zero_is_f_of_x_for_every_oracle() {
                      {at_zero_dir_unit_scale}",
                     o.name()
                 );
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// The lane contract (DESIGN.md §14) at the ops layer: the scalar and the
+/// wide (SIMD) kernel families return identical bits for *arbitrary*
+/// shapes, shard lengths and thread counts — forcing the mode changes
+/// speed, never results.  One seeded case draws (d, k, shard_len,
+/// threads) plus random contents and runs the whole hot-path family —
+/// serial and `_ctx` sharded forms — under both forced modes.
+#[test]
+fn prop_lane_modes_bitwise_identical_across_shapes() {
+    check("lanes_bitwise", &U64Range(0, 1 << 20), 50, |&s| {
+        let mut rng = Rng::new(s ^ 0xA5A5);
+        let d = 1 + rng.below(3000) as usize;
+        let k = 1 + rng.below(6) as usize;
+        let shard_len = 1 + rng.below(700) as usize;
+        let threads = 1 + rng.below(8) as usize;
+        let ctx = ExecContext::new(threads).with_shard_len(shard_len);
+
+        let mut rows = vec![0.0f32; k * d];
+        rng.fill_normal(&mut rows);
+        let mut w = vec![0.0f32; k];
+        rng.fill_normal(&mut w);
+        let mut base = vec![0.0f32; d];
+        rng.fill_normal(&mut base);
+
+        let run = |mode: LaneMode| {
+            force_mode(Some(mode));
+            let mut y = base.clone();
+            axpy_k(&w, &rows, &mut y);
+            let mut yc = base.clone();
+            axpy_k_ctx(&ctx, &w, &rows, &mut yc);
+            let mut g = vec![7.0f32; d];
+            probe_combine(&rows, d, &w, &mut g);
+            let mut gc = vec![-3.0f32; d];
+            probe_combine_ctx(&ctx, &rows, d, &w, &mut gc);
+            let mut o = vec![0.0f32; d];
+            axpy_into(&mut o, &base, 0.37, &g);
+            force_mode(None);
+            (y, yc, g, gc, o)
+        };
+        let a = run(LaneMode::Scalar);
+        let b = run(LaneMode::Wide);
+        let eq = |x: &[f32], y: &[f32]| {
+            x.iter().zip(y.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+        };
+        eq(&a.0, &b.0) && eq(&a.1, &b.1) && eq(&a.2, &b.2) && eq(&a.3, &b.3) && eq(&a.4, &b.4)
+    });
+}
+
+/// Quantized parameter stores (DESIGN.md §14) over random contents and
+/// lengths, for every mode: requantizing the dequant image is an exact
+/// round-trip (the property snapshot/restore relies on), the fused
+/// `perturb_into` is bitwise the same as materializing the dequantized
+/// f32 image and running the fma axpy kernel, and any window of
+/// `perturb_range_into` agrees with the corresponding slice of the full
+/// fused result.
+#[test]
+fn prop_param_store_requant_idempotent_and_perturb_fused() {
+    check("param_store_roundtrip", &U64Range(0, 1 << 20), 40, |&s| {
+        let mut rng = Rng::new(s ^ 0x9E37);
+        let d = 1 + rng.below(800) as usize;
+        let mut xs = vec![0.0f32; d];
+        rng.fill_normal(&mut xs);
+        let mut v = vec![0.0f32; d];
+        rng.fill_normal(&mut v);
+        let tau = 1e-3f32;
+        for mode in [ParamStoreMode::F32, ParamStoreMode::F16, ParamStoreMode::Int8] {
+            let store = ParamStore::from_f32(mode, &xs);
+            let mut deq = vec![0.0f32; d];
+            store.dequant_into(&mut deq);
+
+            // requant idempotence: quantizing the dequant image changes no bits
+            let store2 = ParamStore::from_f32(mode, &deq);
+            let mut deq2 = vec![0.0f32; d];
+            store2.dequant_into(&mut deq2);
+            if deq.iter().zip(deq2.iter()).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return false;
+            }
+
+            // fused perturb == dequant-then-fma (the lane axpy kernel)
+            let mut fused = vec![0.0f32; d];
+            store.perturb_into(tau, &v, &mut fused);
+            let mut reference = vec![0.0f32; d];
+            fma_axpy_into(&mut reference, &deq, tau, &v);
+            if fused.iter().zip(reference.iter()).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return false;
+            }
+
+            // windowed perturb agrees with the full fused image
+            let start = rng.below(d as u64) as usize;
+            let m = 1 + rng.below((d - start) as u64) as usize;
+            let mut win = vec![0.0f32; m];
+            store.perturb_range_into(start, tau, &v[start..start + m], &mut win);
+            if win
+                .iter()
+                .zip(fused[start..start + m].iter())
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+            {
                 return false;
             }
         }

@@ -7,7 +7,9 @@ use zo_ldsd::data::SyntheticRegression;
 use zo_ldsd::eval::Evaluator;
 use zo_ldsd::oracle::{LinRegOracle, Oracle, PjrtOracle, QuadraticOracle};
 use zo_ldsd::runtime::Runtime;
-use zo_ldsd::train::{EstimatorKind, ProbeDispatch, ProbeStorage, SamplerKind, TrainConfig, Trainer};
+use zo_ldsd::train::{
+    EstimatorKind, ParamStoreMode, ProbeDispatch, ProbeStorage, SamplerKind, TrainConfig, Trainer,
+};
 
 fn mini_corpus() -> Corpus {
     Corpus::new(CorpusSpec::default_mini()).unwrap()
@@ -69,6 +71,7 @@ fn central_and_bestofk_consume_identical_budget() {
         probe_storage: ProbeStorage::Auto,
         checkpoint: Default::default(),
         shuffle: None,
+        param_store: ParamStoreMode::F32,
     };
     let oracle = || QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
 
@@ -126,6 +129,7 @@ fn learnable_policy_beats_frozen_on_persistent_direction_quadratic() {
             probe_storage: ProbeStorage::Auto,
             checkpoint: Default::default(),
             shuffle: None,
+            param_store: ParamStoreMode::F32,
         };
         let oracle =
             QuadraticOracle::new(vec![1.0; d], center.clone(), vec![0.0; d]);
