@@ -17,6 +17,11 @@
 #                        (DESIGN.md §14) says every result is bitwise
 #                        identical either way, so both runs must pass
 #                        identically (CI parity)
+#   make test-gemm       the GEMM-heavy suites (gemm contract + mlp +
+#                        transformer) under ZO_GEMM=reference and under
+#                        ZO_GEMM=blocked + ZO_LANES=wide — the tiling
+#                        contract (DESIGN.md §15) says every result is
+#                        bitwise identical either way (CI parity)
 #   make lint            clippy, warnings fatal (CI parity; allow-list in ci.yml)
 #   make fmt             rustfmt check only (CI parity)
 #   make doc             API docs, warnings fatal (CI parity)
@@ -36,10 +41,14 @@
 #                        wide A/B ratio check (wide must run in at most
 #                        $(BENCH_AB_MAX_RATIO)x the scalar time — i.e. a
 #                        >= 1.5x speedup — measured within one run, so no
-#                        stored timing anchor is involved)
+#                        stored timing anchor is involved) and the
+#                        per-family $(BENCH_AB_SPECS) pairs — every
+#                        gemm/*_blocked row must beat its *_reference
+#                        sibling from the same run (the GEMM engine's
+#                        enforced speedup, DESIGN.md §15)
 
 .PHONY: artifacts build test test-streamed test-resume test-mlp \
-        test-transformer test-lanes lint fmt doc \
+        test-transformer test-lanes test-gemm lint fmt doc \
         bench bench-smoke bench-baseline bench-gate clean
 
 # Bench-regression gate knobs (DESIGN.md §12).  BENCH_JSON must reach the
@@ -47,11 +56,15 @@
 # package root (rust/), while bench-gate and CI read from the repo root.
 BENCH_OUT ?= BENCH_current.json
 BENCH_BASELINE ?= rust/benches/BENCH_baseline.json
-BENCH_GATES ?= loss_k,axpy_k,probe_combine,mlp,transformer,mem/,lanes/,qstore/
+BENCH_GATES ?= loss_k,axpy_k,probe_combine,mlp,transformer,mem/,lanes/,qstore/,gemm/
 BENCH_THRESHOLD ?= 0.20
 BENCH_BYTES_THRESHOLD ?= 0.20
 BENCH_AB_MAX_RATIO ?= 0.67
 BENCH_AB_PREFIX ?= lanes/
+# Intra-run slow/fast families (prefix:slow:fast:ratio).  gemm/tfm_* is
+# the tentpole acceptance bound: blocked must run in at most 0.5x the
+# reference time (>= 2x speedup) at the transformer projection shape.
+BENCH_AB_SPECS ?= gemm/tfm:reference:blocked:0.5,gemm/mlp:reference:blocked:0.67
 BENCH_OUT_ABS = $(abspath $(BENCH_OUT))
 BENCH_BASELINE_ABS = $(abspath $(BENCH_BASELINE))
 
@@ -82,6 +95,10 @@ test-transformer: build
 test-lanes: build
 	ZO_LANES=scalar cargo test -q
 	ZO_LANES=wide cargo test -q
+
+test-gemm: build
+	ZO_GEMM=reference cargo test -q --test gemm_contract --test mlp_train --test transformer_golden --test transformer_train
+	ZO_GEMM=blocked ZO_LANES=wide cargo test -q --test gemm_contract --test mlp_train --test transformer_golden --test transformer_train
 
 lint:
 	cargo clippy --all-targets -- -D warnings \
@@ -115,7 +132,8 @@ bench-gate: bench-smoke
 	  --baseline $(BENCH_BASELINE_ABS) --current $(BENCH_OUT_ABS) \
 	  --threshold $(BENCH_THRESHOLD) --bytes-threshold $(BENCH_BYTES_THRESHOLD) \
 	  --gate $(BENCH_GATES) \
-	  --ab-max-ratio $(BENCH_AB_MAX_RATIO) --ab-prefix $(BENCH_AB_PREFIX)
+	  --ab-max-ratio $(BENCH_AB_MAX_RATIO) --ab-prefix $(BENCH_AB_PREFIX) \
+	  --ab-specs $(BENCH_AB_SPECS)
 
 clean:
 	cargo clean

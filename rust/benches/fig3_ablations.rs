@@ -47,6 +47,7 @@ fn main() {
         probe_dispatch: None,
         probe_storage: None,
         param_store: None,
+        gemm: None,
         checkpoint: None,
         oracle: zo_ldsd::coordinator::OracleSpec::Pjrt,
     };

@@ -95,6 +95,53 @@ fn main() {
         b.max_seconds = saved_max_seconds;
     }
 
+    // --- blocked GEMM engine: reference vs blocked A/B (tensor::gemm) ------
+    // The acceptance rows for the GEMM tentpole: the same batched matmul
+    // (C = A x B + bias) through the row-at-a-time reference loop and the
+    // cache-blocked packed kernel, at the transformer projection shape
+    // and the MLP hidden-layer shape.  The bench gate's `--ab-specs`
+    // check asserts blocked <= ratio x reference within this run, so the
+    // speedup is enforced by measurement, not by a stored anchor.  Both
+    // engines return identical bits (the DESIGN.md §15 tiling contract),
+    // which the section re-asserts after timing.
+    {
+        use zo_ldsd::tensor::gemm::{gemm_blocked, gemm_reference, PackedB};
+        let saved_max_seconds = b.max_seconds;
+        b.max_seconds = 1.5;
+        for (m, kk, n, stem) in [
+            (256usize, 768usize, 768usize, "tfm_qkv_256x768x768"),
+            (256, 784, 256, "mlp_fc_256x784x256"),
+        ] {
+            let mut rng = zo_ldsd::rng::Rng::new(11);
+            let mut a = vec![0.0f32; m * kk];
+            let mut w = vec![0.0f32; kk * n];
+            let mut bias = vec![0.0f32; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut w);
+            rng.fill_normal(&mut bias);
+            let mut out = vec![0.0f32; m * n];
+            let macs = (m * kk * n) as f64;
+            b.bench(&format!("gemm/{stem}_reference"), macs, || {
+                gemm_reference(&a, m, kk, &w, n, Some(&bias), &mut out)
+            });
+            // the weight-pack cache: packing happens once, outside the
+            // timed loop, exactly as the oracles reuse packs across
+            // rows/probes (LoRA base weights pack once per run)
+            let pb = PackedB::pack(&w, kk, n);
+            b.bench(&format!("gemm/{stem}_blocked"), macs, || {
+                gemm_blocked(&a, m, kk, &pb, Some(&bias), &mut out)
+            });
+            let mut check = vec![0.0f32; m * n];
+            gemm_reference(&a, m, kk, &w, n, Some(&bias), &mut check);
+            gemm_blocked(&a, m, kk, &pb, Some(&bias), &mut out);
+            assert!(
+                out.iter().zip(check.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "gemm/{stem}: blocked engine diverged from reference bits"
+            );
+        }
+        b.max_seconds = saved_max_seconds;
+    }
+
     // --- quantized parameter stores: fused dequant+perturb per mode --------
     // `qstore/*` rows time w = x + tau * v through each ParamStore mode at
     // d = 2^20 and record the store's resident parameter bytes as the
@@ -461,6 +508,29 @@ fn main() {
             b.bench("transformer/loss_dir_lora_1fwd", 1.0, || {
                 std::hint::black_box(oracle.loss_dir(&dir1, 1e-3).unwrap());
             });
+        }
+        // the batched forward under each GEMM engine: one 8-example
+        // evaluation through the per-example reference fold and through
+        // the flattened [batch*seq, d] blocked path (identical bits;
+        // DESIGN.md §15).  Coverage rows — the enforced reference-vs-
+        // blocked speedup lives in the gemm/* A/B pairs above, at shapes
+        // where the GEMM dominates.
+        {
+            use zo_ldsd::tensor::gemm::{force_gemm_mode, GemmMode};
+            let mut dir1 = vec![0.0f32; spec.d_lora()];
+            rng.fill_normal(&mut dir1);
+            for (gmode, glabel) in
+                [(GemmMode::Reference, "reference"), (GemmMode::Blocked, "blocked")]
+            {
+                force_gemm_mode(Some(gmode));
+                let mut oracle =
+                    TransformerOracle::from_seed(spec.clone(), TrainMode::Lora, 7);
+                oracle.set_batch(&batch).unwrap();
+                b.bench(&format!("transformer/forward_b8_{glabel}"), 8.0, || {
+                    std::hint::black_box(oracle.loss_dir(&dir1, 1e-3).unwrap());
+                });
+            }
+            force_gemm_mode(None);
         }
         b.max_seconds = saved_max_seconds;
     }

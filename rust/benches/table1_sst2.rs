@@ -95,6 +95,7 @@ fn main() {
                 probe_dispatch: None,
                 probe_storage: None,
                 param_store: None,
+                gemm: None,
                 checkpoint: None,
                 oracle: OracleSpec::Transformer(trial.clone()),
             });

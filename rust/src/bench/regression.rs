@@ -140,19 +140,19 @@ pub fn gate(
     report
 }
 
-/// One intra-run A/B pair whose vectorized arm missed the required
-/// speedup (or lost its counterpart row).
+/// One intra-run A/B pair whose fast arm missed the required speedup
+/// (or lost its counterpart row).
 #[derive(Clone, Debug)]
 pub struct AbViolation {
-    /// The scalar-arm row name.
+    /// The slow-arm row name (e.g. `lanes/axpy_k_..._scalar`).
     pub scalar: String,
-    /// The wide-arm row name.
+    /// The fast-arm row name (e.g. `lanes/axpy_k_..._wide`).
     pub wide: String,
-    /// Scalar-arm ns/op.
+    /// Slow-arm ns/op.
     pub scalar_ns: f64,
-    /// Wide-arm ns/op (NaN when the wide row is missing).
+    /// Fast-arm ns/op (NaN when the fast row is missing).
     pub wide_ns: f64,
-    /// wide / scalar (NaN when the wide row is missing).
+    /// fast / slow (NaN when the fast row is missing).
     pub ratio: f64,
 }
 
@@ -172,39 +172,48 @@ impl AbReport {
     }
 }
 
-/// Intra-run A/B speedup check: for every `current` row named
-/// `<prefix><stem>_scalar`, the sibling `<prefix><stem>_wide` must exist
-/// and satisfy `wide_ns <= max_ratio * scalar_ns`.  Both arms come from
-/// the *same* run on the same hardware, so — unlike the stored-baseline
-/// timing gate — the ratio bound is portable: it enforces the vectorized
-/// kernels' speedup by measurement wherever the gate runs.
-pub fn ab_gate(current: &[BenchRow], prefix: &str, max_ratio: f64) -> AbReport {
+/// Intra-run A/B speedup check with configurable arm suffixes: for every
+/// `current` row named `<prefix><stem><slow_suffix>`, the sibling
+/// `<prefix><stem><fast_suffix>` must exist and satisfy
+/// `fast_ns <= max_ratio * slow_ns`.  Both arms come from the *same* run
+/// on the same hardware, so — unlike the stored-baseline timing gate —
+/// the ratio bound is portable: it enforces the fast arm's speedup by
+/// measurement wherever the gate runs.  The lane gate pairs
+/// `_scalar`/`_wide` rows; the GEMM gate pairs `_reference`/`_blocked`
+/// rows (DESIGN.md §15).
+pub fn ab_gate_suffixed(
+    current: &[BenchRow],
+    prefix: &str,
+    slow_suffix: &str,
+    fast_suffix: &str,
+    max_ratio: f64,
+) -> AbReport {
     let mut report = AbReport::default();
     for c in current {
         let stem = match c
             .name
             .strip_prefix(prefix)
-            .and_then(|rest| rest.strip_suffix("_scalar"))
+            .and_then(|rest| rest.strip_suffix(slow_suffix))
         {
             Some(stem) => stem,
             None => continue,
         };
-        let wide_name = format!("{prefix}{stem}_wide");
-        let violation = match current.iter().find(|r| r.name == wide_name) {
-            Some(wide) => {
+        let fast_name = format!("{prefix}{stem}{fast_suffix}");
+        let violation = match current.iter().find(|r| r.name == fast_name) {
+            Some(fast) => {
                 report.compared += 1;
-                let ratio = wide.ns_per_op / c.ns_per_op;
+                let ratio = fast.ns_per_op / c.ns_per_op;
                 (c.ns_per_op > 0.0 && ratio > max_ratio).then(|| AbViolation {
                     scalar: c.name.clone(),
-                    wide: wide_name.clone(),
+                    wide: fast_name.clone(),
                     scalar_ns: c.ns_per_op,
-                    wide_ns: wide.ns_per_op,
+                    wide_ns: fast.ns_per_op,
                     ratio,
                 })
             }
             None => Some(AbViolation {
                 scalar: c.name.clone(),
-                wide: wide_name.clone(),
+                wide: fast_name.clone(),
                 scalar_ns: c.ns_per_op,
                 wide_ns: f64::NAN,
                 ratio: f64::NAN,
@@ -213,6 +222,57 @@ pub fn ab_gate(current: &[BenchRow], prefix: &str, max_ratio: f64) -> AbReport {
         report.violations.extend(violation);
     }
     report
+}
+
+/// [`ab_gate_suffixed`] specialized to the original `_scalar`/`_wide`
+/// lane-kernel pairing.
+pub fn ab_gate(current: &[BenchRow], prefix: &str, max_ratio: f64) -> AbReport {
+    ab_gate_suffixed(current, prefix, "_scalar", "_wide", max_ratio)
+}
+
+/// One parsed `--ab-specs` entry: which row family to pair and the
+/// required intra-run speedup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AbSpec {
+    /// Row-name prefix selecting the family (e.g. "lanes/", "gemm/").
+    pub prefix: String,
+    /// Slow-arm suffix (e.g. "_scalar", "_reference").
+    pub slow_suffix: String,
+    /// Fast-arm suffix (e.g. "_wide", "_blocked").
+    pub fast_suffix: String,
+    /// Required bound: `fast_ns <= max_ratio * slow_ns`.
+    pub max_ratio: f64,
+}
+
+/// Parse a comma-separated `--ab-specs` value.  Each entry is
+/// `prefix:slow:fast:ratio` — e.g.
+/// `lanes/:scalar:wide:0.67,gemm/:reference:blocked:0.5` — where the
+/// suffixes are given without their leading underscore.
+pub fn parse_ab_specs(raw: &str) -> Result<Vec<AbSpec>> {
+    raw.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|entry| {
+            let parts: Vec<&str> = entry.split(':').collect();
+            let [prefix, slow, fast, ratio] = parts.as_slice() else {
+                return Err(anyhow!(
+                    "ab spec '{entry}' (expected prefix:slow:fast:ratio)"
+                ));
+            };
+            let max_ratio: f64 = ratio
+                .parse()
+                .map_err(|_| anyhow!("ab spec '{entry}': bad ratio '{ratio}'"))?;
+            if max_ratio <= 0.0 {
+                return Err(anyhow!("ab spec '{entry}': ratio must be > 0"));
+            }
+            Ok(AbSpec {
+                prefix: prefix.to_string(),
+                slow_suffix: format!("_{slow}"),
+                fast_suffix: format!("_{fast}"),
+                max_ratio,
+            })
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -330,5 +390,43 @@ mod tests {
         assert_eq!(rep.compared, 0);
         assert_eq!(rep.violations.len(), 1);
         assert!(rep.violations[0].wide_ns.is_nan());
+    }
+
+    #[test]
+    fn ab_gate_suffixed_pairs_reference_blocked() {
+        let cur = [
+            row("gemm/tfm_qkv_256x768x768_reference", 1000.0, None),
+            row("gemm/tfm_qkv_256x768x768_blocked", 400.0, None), // 0.4 <= 0.5
+            row("gemm/mlp_256x784x256_reference", 1000.0, None),
+            row("gemm/mlp_256x784x256_blocked", 700.0, None), // 0.7: fails
+            row("lanes/axpy_k_k5_d1M_scalar", 10.0, None),    // other family
+        ];
+        let rep = ab_gate_suffixed(&cur, "gemm/", "_reference", "_blocked", 0.5);
+        assert_eq!(rep.compared, 2);
+        assert_eq!(rep.violations.len(), 1, "{rep:?}");
+        assert_eq!(rep.violations[0].wide, "gemm/mlp_256x784x256_blocked");
+        // a reference row with no blocked sibling is itself a violation
+        let orphan = [row("gemm/tfm_wo_reference", 1000.0, None)];
+        let rep = ab_gate_suffixed(&orphan, "gemm/", "_reference", "_blocked", 0.5);
+        assert_eq!(rep.violations.len(), 1);
+        assert!(rep.violations[0].wide_ns.is_nan());
+    }
+
+    #[test]
+    fn ab_specs_parse_and_reject_malformed() {
+        let specs =
+            parse_ab_specs("lanes/:scalar:wide:0.67, gemm/:reference:blocked:0.5").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].prefix, "lanes/");
+        assert_eq!(specs[0].slow_suffix, "_scalar");
+        assert_eq!(specs[0].fast_suffix, "_wide");
+        assert!((specs[0].max_ratio - 0.67).abs() < 1e-12);
+        assert_eq!(specs[1].prefix, "gemm/");
+        assert_eq!(specs[1].slow_suffix, "_reference");
+        assert_eq!(specs[1].fast_suffix, "_blocked");
+        assert!(parse_ab_specs("").unwrap().is_empty());
+        assert!(parse_ab_specs("gemm/:reference:blocked").is_err());
+        assert!(parse_ab_specs("gemm/:reference:blocked:fast").is_err());
+        assert!(parse_ab_specs("gemm/:reference:blocked:0").is_err());
     }
 }

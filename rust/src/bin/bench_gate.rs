@@ -10,6 +10,7 @@
 //!                [--threshold 0.20] [--bytes-threshold 0.20]
 //!                [--gate loss_k,axpy_k,probe_combine,mlp,mem/]
 //!                [--ab-max-ratio 0.67] [--ab-prefix lanes/]
+//!                [--ab-specs lanes/:scalar:wide:0.67,gemm/:reference:blocked:0.5]
 //!
 //! `--threshold` bounds the (noisy, hardware-dependent) ns/op ratios;
 //! `--bytes-threshold` bounds the deterministic peak-byte ratios and can
@@ -17,7 +18,12 @@
 //! intra-run scalar-vs-wide speedup on every `--ab-prefix` row pair
 //! (`<prefix><stem>_scalar` / `_wide`): both arms come from the same
 //! run, so the bound is hardware-portable and needs no stored anchor
-//! (0 disables the check).
+//! (0 disables the check).  `--ab-specs` generalizes that to any number
+//! of slow/fast row families, each with its own suffix pair and bound
+//! (`prefix:slow:fast:ratio[,...]`, suffixes without the leading
+//! underscore) — it is how the GEMM engine's `_reference`/`_blocked`
+//! speedup is enforced (DESIGN.md §15), and runs in addition to the
+//! legacy `--ab-prefix` pairing.
 //!
 //! Every failing row is reported in one invocation — the gate collects
 //! all regressions, A/B violations and missing rows before exiting
@@ -29,7 +35,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use zo_ldsd::bench::regression::{ab_gate, gate, parse_rows};
+use zo_ldsd::bench::regression::{ab_gate, ab_gate_suffixed, gate, parse_ab_specs, parse_rows};
 use zo_ldsd::cli::Args;
 use zo_ldsd::report::Table;
 
@@ -51,6 +57,7 @@ fn run() -> Result<()> {
             "gate",
             "ab-max-ratio",
             "ab-prefix",
+            "ab-specs",
         ],
         &[],
     )?;
@@ -60,6 +67,7 @@ fn run() -> Result<()> {
     let bytes_threshold = args.get_f64("bytes-threshold", threshold)?;
     let ab_max_ratio = args.get_f64("ab-max-ratio", 0.0)?;
     let ab_prefix = args.get_or("ab-prefix", "lanes/").to_string();
+    let ab_specs = parse_ab_specs(args.get_or("ab-specs", ""))?;
     let gates_raw = args
         .get_or("gate", "loss_k,axpy_k,probe_combine,mlp,mem/")
         .to_string();
@@ -145,12 +153,50 @@ fn run() -> Result<()> {
         Default::default()
     };
 
-    if !report.is_green() || !ab.is_green() {
+    // suffixed A/B families (--ab-specs): same intra-run portability as
+    // the lane pairing, with per-family suffixes and bounds
+    let mut spec_violations = 0usize;
+    for spec in &ab_specs {
+        let rep = ab_gate_suffixed(
+            &current,
+            &spec.prefix,
+            &spec.slow_suffix,
+            &spec.fast_suffix,
+            spec.max_ratio,
+        );
+        println!(
+            "bench-gate: {} A/B pair(s) checked (prefix {}, *{} <= {:.2}x *{})",
+            rep.compared, spec.prefix, spec.fast_suffix, spec.max_ratio, spec.slow_suffix,
+        );
+        if !rep.violations.is_empty() {
+            let mut t = Table::new(
+                "A/B speedup violations",
+                &["slow row", "slow ns", "fast ns", "ratio", "limit"],
+            );
+            for v in &rep.violations {
+                t.row(vec![
+                    v.scalar.clone(),
+                    format!("{:.1}", v.scalar_ns),
+                    if v.wide_ns.is_nan() {
+                        "MISSING".to_string()
+                    } else {
+                        format!("{:.1}", v.wide_ns)
+                    },
+                    format!("{:.2}x", v.ratio),
+                    format!("<= {:.2}x", spec.max_ratio),
+                ]);
+            }
+            t.print();
+        }
+        spec_violations += rep.violations.len();
+    }
+
+    if !report.is_green() || !ab.is_green() || spec_violations > 0 {
         bail!(
             "{} regression(s), {} missing gated row(s), {} A/B violation(s)",
             report.regressions.len(),
             report.missing.len(),
-            ab.violations.len()
+            ab.violations.len() + spec_violations
         );
     }
     println!("bench-gate: green");

@@ -37,7 +37,7 @@ use crate::oracle::{MlpOracle, Oracle, PjrtOracle, TransformerOracle};
 use crate::runtime::Runtime;
 use crate::snapshot::{self, CheckpointConfig};
 use crate::train::{
-    ParamStoreMode, ProbeDispatch, ProbeStorage, TrainConfig, TrainOutcome, Trainer,
+    GemmMode, ParamStoreMode, ProbeDispatch, ProbeStorage, TrainConfig, TrainOutcome, Trainer,
 };
 
 /// The forward-only MLP trial configuration: architecture, featurizer
@@ -152,6 +152,12 @@ pub struct TrialSpec {
     /// grids can use it to A/B f32 vs quantized stores without cloning
     /// configs (DESIGN.md §14).
     pub param_store: Option<ParamStoreMode>,
+    /// Per-trial override of the GEMM engine (None keeps the config's).
+    /// The CLI `train --gemm` flag flows through here; grids can use it
+    /// to A/B the blocked engine against the reference loop without
+    /// cloning configs (DESIGN.md §15).  Both engines produce identical
+    /// bits, so this only moves throughput.
+    pub gemm: Option<GemmMode>,
     /// Per-trial override of the checkpoint/resume policy (None keeps the
     /// config's).  Either way, a grid-level checkpoint directory is
     /// rewritten to a per-trial subdirectory (`<dir>/<sanitized id>`)
@@ -239,6 +245,9 @@ fn run_trial_measured(
     }
     if let Some(store) = spec.param_store {
         cfg.param_store = store;
+    }
+    if let Some(g) = spec.gemm {
+        cfg.gemm = g;
     }
     if let Some(ck) = &spec.checkpoint {
         cfg.checkpoint = ck.clone();
@@ -555,6 +564,7 @@ mod tests {
             probe_dispatch: None,
             probe_storage: None,
             param_store: None,
+            gemm: None,
             checkpoint: None,
             oracle: OracleSpec::Mlp(MlpTrial {
                 hidden: vec![8],
@@ -614,6 +624,7 @@ mod tests {
             probe_dispatch: None,
             probe_storage: None,
             param_store: None,
+            gemm: None,
             checkpoint: None,
             oracle: OracleSpec::Transformer(trial),
         };

@@ -41,7 +41,7 @@ commands:
         [--eval-every N] [--seed N] [--artifacts DIR]
         [--probe-dispatch batched|per-probe] [--threads N]
         [--probe-storage auto|materialized|streamed]
-        [--param-store f32|f16|int8]
+        [--param-store f32|f16|int8] [--gemm reference|blocked]
         [--checkpoint-dir DIR] [--checkpoint-every N] [--resume]
         [--max-run-steps N]
   toy   [--steps N] [--variant baseline|ldsd] [--seed N]
@@ -124,6 +124,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("probe_dispatch", "probe-dispatch"), ("threads", "threads"),
         ("probe_storage", "probe-storage"),
         ("param_store", "param-store"),
+        ("gemm", "gemm"),
         ("checkpoint.dir", "checkpoint-dir"),
         ("checkpoint.every", "checkpoint-every"),
         ("checkpoint.max_run_steps", "max-run-steps"),
@@ -214,6 +215,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             None => bail!("unknown param store '{s}' (f32|f16|int8)"),
         }
     };
+    // GEMM engine: the cache-blocked batched kernel (default) or the
+    // row-at-a-time reference loop; identical bits either way
+    // (DESIGN.md §15)
+    let gemm = {
+        let s = kv.get_or("gemm", "blocked");
+        match zo_ldsd::train::GemmMode::parse(s) {
+            Some(m) => m,
+            None => bail!("unknown gemm engine '{s}' (reference|blocked)"),
+        }
+    };
     // --threads 0 (the default) means "size from the environment":
     // ZO_THREADS if set, else cores - 1.  Results are bitwise identical
     // for any thread count (DESIGN.md §9).
@@ -295,6 +306,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         probe_dispatch: Some(dispatch),
         probe_storage: Some(storage),
         param_store: Some(param_store),
+        gemm: Some(gemm),
         checkpoint: None, // the config's policy applies
         oracle,
     };

@@ -21,6 +21,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::LayoutEntry;
+use crate::tensor::gemm::{self, GemmMode};
 use crate::tensor::{dot_lanes, Matrix};
 
 /// Hidden-layer nonlinearity of the MLP.
@@ -235,6 +236,10 @@ pub struct MlpState {
     acts: Vec<Vec<f32>>,
     /// Backprop deltas per layer (same shapes as `acts`).
     deltas: Vec<Vec<f32>>,
+    /// Whole-minibatch activations per layer (`[rows, fan_out]`) for the
+    /// blocked batched forward — lazily grown to the largest batch this
+    /// worker has seen, then reused allocation-free across probes.
+    batch_acts: Vec<Vec<f32>>,
 }
 
 impl MlpState {
@@ -246,12 +251,25 @@ impl MlpState {
             .map(|(_, fan_out)| vec![0.0f32; *fan_out])
             .collect();
         let deltas = acts.clone();
-        Self { acts, deltas }
+        let batch_acts = acts.iter().map(|_| Vec::new()).collect();
+        Self { acts, deltas, batch_acts }
     }
 
     /// The logits of the last forward pass.
     pub fn logits(&self) -> &[f32] {
         self.acts.last().expect("spec has at least one layer")
+    }
+
+    /// Grow the batched arena to `rows` examples (never shrinks).
+    fn ensure_batch(&mut self, rows: usize, dims: &[(usize, usize)]) {
+        if self.batch_acts.len() != dims.len() {
+            self.batch_acts = dims.iter().map(|_| Vec::new()).collect();
+        }
+        for (buf, (_, fan_out)) in self.batch_acts.iter_mut().zip(dims.iter()) {
+            if buf.len() < rows * fan_out {
+                buf.resize(rows * fan_out, 0.0);
+            }
+        }
     }
 }
 
@@ -315,12 +333,62 @@ pub fn batch_loss(
     state: &mut MlpState,
 ) -> f64 {
     debug_assert_eq!(feats.rows, labels.len(), "one label per feature row");
-    let mut acc = 0.0f64;
-    for r in 0..feats.rows {
-        let logits = forward_example(spec, params, feats.row(r), state);
-        acc += cross_entropy(logits, labels[r]);
+    match gemm::effective_gemm_mode() {
+        GemmMode::Reference => {
+            let mut acc = 0.0f64;
+            for r in 0..feats.rows {
+                let logits = forward_example(spec, params, feats.row(r), state);
+                acc += cross_entropy(logits, labels[r]);
+            }
+            acc / feats.rows.max(1) as f64
+        }
+        GemmMode::Blocked => batch_loss_blocked(spec, params, feats, labels, state),
     }
-    acc / feats.rows.max(1) as f64
+}
+
+/// The batched blocked-engine evaluation of [`batch_loss`]: each layer
+/// runs one [`gemm::gemm_rowmajor_lanes`] product over the whole
+/// minibatch instead of per-example unit loops.  Bit-identical to the
+/// reference path — every activation element is the same closed-form
+/// `bias + dot_lanes(w_row, x_row)` expression (then the same
+/// activation), only evaluated in a weight-row-reusing order; the CE
+/// fold stays in data-row order.
+fn batch_loss_blocked(
+    spec: &MlpSpec,
+    params: &[f32],
+    feats: &Matrix,
+    labels: &[i32],
+    state: &mut MlpState,
+) -> f64 {
+    let m = feats.rows;
+    if m == 0 {
+        return 0.0;
+    }
+    debug_assert_eq!(params.len(), spec.dim(), "params must match spec.dim()");
+    assert_eq!(feats.cols, spec.in_dim, "feature rows must be in_dim wide");
+    let dims = spec.layer_dims();
+    let n_layers = dims.len();
+    state.ensure_batch(m, &dims);
+    let mut off = 0usize;
+    for (l, &(fan_in, fan_out)) in dims.iter().enumerate() {
+        let w = &params[off..off + fan_in * fan_out];
+        let b = &params[off + fan_in * fan_out..off + (fan_in + 1) * fan_out];
+        off += (fan_in + 1) * fan_out;
+        let (done, todo) = state.batch_acts.split_at_mut(l);
+        let input: &[f32] = if l == 0 { &feats.data } else { &done[l - 1][..m * fan_in] };
+        let out = &mut todo[0][..m * fan_out];
+        gemm::gemm_rowmajor_lanes(input, m, fan_in, w, b, fan_out, out);
+        if l + 1 != n_layers {
+            out.iter_mut().for_each(|v| *v = spec.activation.apply(*v));
+        }
+    }
+    let c = dims.last().expect("spec has at least one layer").1;
+    let logits_all = state.batch_acts.last().expect("spec has at least one layer");
+    let mut acc = 0.0f64;
+    for (r, &label) in labels.iter().enumerate() {
+        acc += cross_entropy(&logits_all[r * c..(r + 1) * c], label);
+    }
+    acc / m as f64
 }
 
 /// Analytic mean-loss gradient over a feature minibatch (standard

@@ -36,6 +36,7 @@ use anyhow::{bail, Result};
 
 use crate::config::LayoutEntry;
 use crate::model::mlp::cross_entropy;
+use crate::tensor::gemm::{self, GemmMode, PackedB};
 use crate::tensor::lanes::accum_row;
 
 /// The additive key-padding mask value (mirrors `kernels/ref.py::NEG_INF`).
@@ -528,6 +529,89 @@ impl LoraOffsets {
     }
 }
 
+/// One layer's weight matrices packed for the blocked GEMM engine
+/// (panel-major [`PackedB`] images of the six `[d_in, d_out]` mats the
+/// batched forward multiplies by).  Biases, layernorm params and
+/// embeddings are read in place — only B-operands of GEMMs pack.
+struct LayerPacks {
+    wq: PackedB,
+    wk: PackedB,
+    wv: PackedB,
+    wo: PackedB,
+    wf1: PackedB,
+    wf2: PackedB,
+}
+
+impl LayerPacks {
+    fn empty() -> Self {
+        Self {
+            wq: PackedB::empty(),
+            wk: PackedB::empty(),
+            wv: PackedB::empty(),
+            wo: PackedB::empty(),
+            wf1: PackedB::empty(),
+            wf2: PackedB::empty(),
+        }
+    }
+}
+
+/// The weight-pack cache: every base weight matrix the batched forward
+/// feeds to the blocked engine, packed tile-major once and reused across
+/// all rows of the batch and all probes that share the base vector.
+/// Packing is a bit-free copy, so a pack of vector `w` and `w` itself
+/// produce identical forwards — the cache is a pure speed artifact.
+///
+/// Invalidation rules (DESIGN.md §15): in **LoRA mode** the base is
+/// frozen for the whole run, so the oracle packs once at construction
+/// and every probe of every step reuses it — packing amortizes to zero.
+/// In **FT mode** the trainable vector *is* the base, so the per-worker
+/// state repacks from the perturbed vector on each batch evaluation
+/// (reusing its allocations); the pack cost is one extra read of the
+/// weights, which the m = batch·seq GEMM rows amortize.  The classifier
+/// head and LoRA adapter A-factors are narrow (`n <= NR`) and run
+/// unpacked; adapter B-factors are per-probe trainables packed into
+/// worker scratch.
+pub struct BasePacks {
+    layers: Vec<LayerPacks>,
+}
+
+impl BasePacks {
+    /// An empty cache that [`BasePacks::repack`] fills (worker scratch).
+    pub fn empty() -> Self {
+        Self { layers: Vec::new() }
+    }
+
+    /// Pack every GEMM weight of `base` (a full `ft_layout` vector) —
+    /// the LoRA-mode once-per-run entry.
+    pub fn pack(spec: &TransformerSpec, base: &[f32]) -> Self {
+        let mut p = Self::empty();
+        p.repack_with(spec, &FtOffsets::new(spec), base);
+        p
+    }
+
+    /// Re-pack in place from a (possibly perturbed) base vector, reusing
+    /// allocations — the FT-mode per-evaluation entry.
+    pub fn repack(&mut self, spec: &TransformerSpec, base: &[f32]) {
+        self.repack_with(spec, &FtOffsets::new(spec), base);
+    }
+
+    fn repack_with(&mut self, spec: &TransformerSpec, ft: &FtOffsets, base: &[f32]) {
+        let d = spec.d_model;
+        let f = spec.d_ff;
+        if self.layers.len() != spec.n_layers {
+            self.layers = (0..spec.n_layers).map(|_| LayerPacks::empty()).collect();
+        }
+        for (lp, lo) in self.layers.iter_mut().zip(ft.layers.iter()) {
+            lp.wq.repack(&base[lo.wq..][..d * d], d, d);
+            lp.wk.repack(&base[lo.wk..][..d * d], d, d);
+            lp.wv.repack(&base[lo.wv..][..d * d], d, d);
+            lp.wo.repack(&base[lo.wo..][..d * d], d, d);
+            lp.wf1.repack(&base[lo.wf1..][..d * f], d, f);
+            lp.wf2.repack(&base[lo.wf2..][..f * d], f, d);
+        }
+    }
+}
+
 /// Per-worker forward scratch: layout offsets + activation buffers sized
 /// for `max_seq`.  Workers of a parallel K-probe evaluation each own one
 /// (allocated once per dispatch, reused across that worker's probes).
@@ -554,6 +638,26 @@ pub struct TransformerState {
     /// d_ff-wide MLP hidden staging
     hid: Vec<f32>,
     logits: Vec<f32>,
+    /// batched-forward arena (`[batch*seq, _]` activations for the
+    /// blocked engine): lazily grown to the largest batch this worker
+    /// has seen, then reused with zero heap traffic across probes
+    bx: Vec<f32>,
+    bxn: Vec<f32>,
+    bq: Vec<f32>,
+    bk: Vec<f32>,
+    bv: Vec<f32>,
+    battn: Vec<f32>,
+    bproj: Vec<f32>,
+    bdelta: Vec<f32>,
+    bhid: Vec<f32>,
+    bt: Vec<f32>,
+    pooled: Vec<f32>,
+    blogits: Vec<f32>,
+    /// FT-mode pack cache, repacked from the perturbed vector per
+    /// evaluation (LoRA-mode callers pass a run-lifetime cache instead)
+    own_packs: BasePacks,
+    /// per-probe pack scratch for trainable LoRA adapter B-factors
+    lora_pack: PackedB,
 }
 
 impl TransformerState {
@@ -575,12 +679,56 @@ impl TransformerState {
             tmp_r: vec![0.0; spec.lora_rank],
             hid: vec![0.0; spec.d_ff],
             logits: vec![0.0; spec.n_classes],
+            bx: Vec::new(),
+            bxn: Vec::new(),
+            bq: Vec::new(),
+            bk: Vec::new(),
+            bv: Vec::new(),
+            battn: Vec::new(),
+            bproj: Vec::new(),
+            bdelta: Vec::new(),
+            bhid: Vec::new(),
+            bt: Vec::new(),
+            pooled: Vec::new(),
+            blogits: Vec::new(),
+            own_packs: BasePacks::empty(),
+            lora_pack: PackedB::empty(),
         }
     }
 
     /// The logits of the last forward pass.
     pub fn logits(&self) -> &[f32] {
         &self.logits
+    }
+
+    /// Grow the batched arena to `bsz` examples of `seq` tokens (never
+    /// shrinks, so steady-state probe evaluations allocate nothing).
+    fn ensure_batch(&mut self, spec: &TransformerSpec, bsz: usize, seq: usize) {
+        let m = bsz * seq;
+        let d = spec.d_model;
+        let md = m * d;
+        if self.bx.len() < md {
+            self.bx.resize(md, 0.0);
+            self.bxn.resize(md, 0.0);
+            self.bq.resize(md, 0.0);
+            self.bk.resize(md, 0.0);
+            self.bv.resize(md, 0.0);
+            self.battn.resize(md, 0.0);
+            self.bproj.resize(md, 0.0);
+            self.bdelta.resize(md, 0.0);
+        }
+        if self.bhid.len() < m * spec.d_ff {
+            self.bhid.resize(m * spec.d_ff, 0.0);
+        }
+        if self.bt.len() < m * spec.lora_rank {
+            self.bt.resize(m * spec.lora_rank, 0.0);
+        }
+        if self.pooled.len() < bsz * d {
+            self.pooled.resize(bsz * d, 0.0);
+        }
+        if self.blogits.len() < bsz * spec.n_classes {
+            self.blogits.resize(bsz * spec.n_classes, 0.0);
+        }
     }
 }
 
@@ -883,7 +1031,10 @@ pub fn forward_example<'a>(
 /// Mean softmax cross-entropy of a token minibatch: examples evaluated in
 /// data-row order, losses folded through one f64 accumulator — the fixed
 /// term sequence that keeps every evaluation path (loss_dir, vectorized
-/// loss_k, streamed loss_probes) bitwise identical.
+/// loss_k, streamed loss_probes) bitwise identical.  Dispatches between
+/// the per-example reference forward and the batched blocked GEMM engine
+/// on [`gemm::effective_gemm_mode`]; the two are bit-identical by the
+/// §15 tiling contract, so the mode only changes speed.
 pub fn batch_loss(
     spec: &TransformerSpec,
     base: &[f32],
@@ -894,22 +1045,329 @@ pub fn batch_loss(
     labels: &[i32],
     state: &mut TransformerState,
 ) -> f64 {
+    batch_loss_packed(spec, base, lora, ids, mask, seq, labels, state, None)
+}
+
+/// [`batch_loss`] with an optional weight-pack cache.  `packs` supplies a
+/// pre-packed image of `base` for the blocked engine (the LoRA oracle's
+/// run-lifetime cache — the base is frozen, so it packs once); `None`
+/// makes the blocked path repack from `base` into worker scratch (the FT
+/// rule: the trainable vector *is* the base, so every perturbed
+/// evaluation repacks).  Packing is a bit-free copy, so both choices —
+/// and both engines — return identical bits.
+#[allow(clippy::too_many_arguments)]
+pub fn batch_loss_packed(
+    spec: &TransformerSpec,
+    base: &[f32],
+    lora: Option<&[f32]>,
+    ids: &[i32],
+    mask: &[f32],
+    seq: usize,
+    labels: &[i32],
+    state: &mut TransformerState,
+    packs: Option<&BasePacks>,
+) -> f64 {
     let b = labels.len();
     debug_assert_eq!(ids.len(), b * seq, "one id row per label");
     debug_assert_eq!(mask.len(), b * seq, "one mask row per label");
-    let mut acc = 0.0f64;
-    for row in 0..b {
-        let logits = forward_example(
-            spec,
-            base,
-            lora,
-            &ids[row * seq..(row + 1) * seq],
-            &mask[row * seq..(row + 1) * seq],
-            state,
-        );
-        acc += cross_entropy(logits, labels[row]);
+    match gemm::effective_gemm_mode() {
+        GemmMode::Reference => {
+            let mut acc = 0.0f64;
+            for row in 0..b {
+                let logits = forward_example(
+                    spec,
+                    base,
+                    lora,
+                    &ids[row * seq..(row + 1) * seq],
+                    &mask[row * seq..(row + 1) * seq],
+                    state,
+                );
+                acc += cross_entropy(logits, labels[row]);
+            }
+            acc / b.max(1) as f64
+        }
+        GemmMode::Blocked => {
+            batch_loss_blocked(spec, base, lora, ids, mask, seq, labels, state, packs)
+        }
     }
-    acc / b.max(1) as f64
+}
+
+/// Dispatch a narrow-B product: single-panel blocked when `n` fits one
+/// packed panel (LoRA A-factors, classifier heads — raw row-major B *is*
+/// the packed layout there), else the reference row loop.  Bit-identical
+/// either way, so this is purely a speed choice.
+fn gemm_narrow_auto(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    if n <= gemm::NR {
+        gemm::gemm_blocked_narrow(a, m, k, b, n, bias, out);
+    } else {
+        gemm::gemm_reference(a, m, k, b, n, bias, out);
+    }
+}
+
+/// Batched LoRA delta: `target += scale * ((Xn · A) · B)` over all m
+/// rows — the GEMM form of [`lora_delta`].  Element for element the same
+/// arithmetic: T and the delta accumulate ascending-k from zero, the
+/// scale multiplies the finished delta once, and the scaled value adds
+/// into the target.  B is a per-probe trainable, packed into worker
+/// scratch on each call (cost O(r·d), amortized by the m GEMM rows).
+#[allow(clippy::too_many_arguments)]
+fn lora_delta_batch(
+    lv: &[f32],
+    ao: usize,
+    bo: usize,
+    d: usize,
+    r: usize,
+    scale: f32,
+    xn: &[f32],
+    m: usize,
+    t: &mut [f32],
+    pack: &mut PackedB,
+    delta: &mut [f32],
+    target: &mut [f32],
+) {
+    let a = &lv[ao..][..d * r];
+    let bmat = &lv[bo..][..r * d];
+    let t = &mut t[..m * r];
+    gemm_narrow_auto(xn, m, d, a, r, None, t);
+    pack.repack(bmat, r, d);
+    let delta = &mut delta[..m * d];
+    gemm::gemm_blocked(t, m, r, pack, None, delta);
+    for (tv, dv) in target.iter_mut().zip(delta.iter()) {
+        *tv += *dv * scale;
+    }
+}
+
+/// The batched blocked-engine evaluation of [`batch_loss`]: every
+/// projection of every layer is one `[batch·seq, d_in] × [d_in, d_out]`
+/// blocked GEMM over the whole minibatch instead of batch·seq separate
+/// row×matrix loops.  Bit-for-bit identical to the reference path: each
+/// activation element's f32 operation sequence is unchanged (the tiling
+/// contract covers the GEMMs; embeddings, layernorm, attention, GELU,
+/// residual adds and the CE fold run the reference expressions in
+/// reference order per element), only the iteration over independent
+/// elements is rearranged.
+#[allow(clippy::too_many_arguments)]
+fn batch_loss_blocked(
+    spec: &TransformerSpec,
+    base: &[f32],
+    lora: Option<&[f32]>,
+    ids: &[i32],
+    mask: &[f32],
+    seq: usize,
+    labels: &[i32],
+    state: &mut TransformerState,
+    packs: Option<&BasePacks>,
+) -> f64 {
+    let bsz = labels.len();
+    if bsz == 0 {
+        return 0.0;
+    }
+    let d = spec.d_model;
+    let f = spec.d_ff;
+    let dh = spec.head_dim();
+    let r = spec.lora_rank;
+    let c = spec.n_classes;
+    let m = bsz * seq;
+    assert!(
+        (1..=spec.max_seq).contains(&seq),
+        "seq {seq} outside 1..={}",
+        spec.max_seq
+    );
+    debug_assert_eq!(base.len(), state.ft.total, "base must match spec layout");
+    if let Some(lv) = lora {
+        debug_assert_eq!(lv.len(), state.lora.total, "lora must match spec layout");
+    }
+    state.ensure_batch(spec, bsz, seq);
+    if packs.is_none() {
+        // FT rule: the trainable vector is the base — repack it for this
+        // evaluation (worker scratch, allocation-free at steady state)
+        let st = &mut *state;
+        st.own_packs.repack_with(spec, &st.ft, base);
+    }
+    let TransformerState {
+        ft,
+        lora: lora_off,
+        probs,
+        bx,
+        bxn,
+        bq,
+        bk,
+        bv,
+        battn,
+        bproj,
+        bdelta,
+        bhid,
+        bt,
+        pooled,
+        blogits,
+        own_packs,
+        lora_pack,
+        ..
+    } = state;
+    let packs: &BasePacks = packs.unwrap_or(&*own_packs);
+    let bx = &mut bx[..m * d];
+    let bxn = &mut bxn[..m * d];
+    let bq = &mut bq[..m * d];
+    let bk = &mut bk[..m * d];
+    let bv = &mut bv[..m * d];
+    let battn = &mut battn[..m * d];
+    let bproj = &mut bproj[..m * d];
+    let bhid = &mut bhid[..m * f];
+    let pooled = &mut pooled[..bsz * d];
+    let blogits = &mut blogits[..bsz * c];
+
+    // token + position embeddings, example-major rows
+    for row in 0..bsz {
+        for t in 0..seq {
+            let id = ids[row * seq + t];
+            assert!(
+                id >= 0 && (id as usize) < spec.vocab,
+                "token id {id} outside vocab {}",
+                spec.vocab
+            );
+            let tok = &base[ft.tok_emb + id as usize * d..][..d];
+            let pos = &base[ft.pos_emb + t * d..][..d];
+            let xr = &mut bx[(row * seq + t) * d..][..d];
+            for j in 0..d {
+                xr[j] = tok[j] + pos[j];
+            }
+        }
+    }
+
+    let denom = (dh as f32).sqrt();
+    let scale = spec.lora_scale;
+    for li in 0..spec.n_layers {
+        let lo = ft.layers[li];
+        let ll = lora_off.layers.get(li).copied();
+        let lp = &packs.layers[li];
+
+        // pre-LN + q/k/v projections as whole-batch GEMMs
+        for i in 0..m {
+            layernorm_row(
+                &bx[i * d..(i + 1) * d],
+                &base[lo.ln1_g..][..d],
+                &base[lo.ln1_b..][..d],
+                &mut bxn[i * d..(i + 1) * d],
+            );
+        }
+        gemm::gemm_blocked(bxn, m, d, &lp.wq, Some(&base[lo.bq..][..d]), bq);
+        gemm::gemm_blocked(bxn, m, d, &lp.wk, Some(&base[lo.bk..][..d]), bk);
+        gemm::gemm_blocked(bxn, m, d, &lp.wv, Some(&base[lo.bv..][..d]), bv);
+        if let (Some(lv), Some(ll)) = (lora, ll) {
+            for (pair, buf) in [(ll.q, &mut *bq), (ll.k, &mut *bk), (ll.v, &mut *bv)] {
+                if let Some((ao, bo)) = pair {
+                    lora_delta_batch(lv, ao, bo, d, r, scale, bxn, m, bt, lora_pack, bdelta, buf);
+                }
+            }
+        }
+
+        // multi-head attention, per example — reference arithmetic on the
+        // batched q/k/v rows (sequential dot, f64 partition function)
+        for ex in 0..bsz {
+            let mrow = &mask[ex * seq..(ex + 1) * seq];
+            let r0 = ex * seq;
+            for hh in 0..spec.n_heads {
+                let hd0 = hh * dh;
+                for t in 0..seq {
+                    for j in 0..seq {
+                        let qrow = &bq[(r0 + t) * d + hd0..(r0 + t) * d + hd0 + dh];
+                        let krow = &bk[(r0 + j) * d + hd0..(r0 + j) * d + hd0 + dh];
+                        let mut sc = crate::tensor::dot(qrow, krow) / denom;
+                        sc += (1.0 - mrow[j]) * NEG_INF;
+                        if spec.causal && j > t {
+                            sc = NEG_INF;
+                        }
+                        probs[j] = sc;
+                    }
+                    let mut mx = f32::NEG_INFINITY;
+                    for j in 0..seq {
+                        mx = mx.max(probs[j]);
+                    }
+                    let mut z = 0.0f64;
+                    for j in 0..seq {
+                        z += ((probs[j] - mx) as f64).exp();
+                    }
+                    for j in 0..seq {
+                        probs[j] = (((probs[j] - mx) as f64).exp() / z) as f32;
+                    }
+                    let ar = &mut battn[(r0 + t) * d + hd0..(r0 + t) * d + hd0 + dh];
+                    ar.iter_mut().for_each(|v| *v = 0.0);
+                    for j in 0..seq {
+                        let p = probs[j];
+                        let vr = &bv[(r0 + j) * d + hd0..(r0 + j) * d + hd0 + dh];
+                        for cc in 0..dh {
+                            ar[cc] += p * vr[cc];
+                        }
+                    }
+                }
+            }
+        }
+
+        // output projection (+ optional LoRA delta) + residual
+        gemm::gemm_blocked(battn, m, d, &lp.wo, Some(&base[lo.bo..][..d]), bproj);
+        if let (Some(lv), Some(ll)) = (lora, ll) {
+            if let Some((ao, bo)) = ll.o {
+                lora_delta_batch(lv, ao, bo, d, r, scale, battn, m, bt, lora_pack, bdelta, bproj);
+            }
+        }
+        for (xv, pv) in bx.iter_mut().zip(bproj.iter()) {
+            *xv += *pv;
+        }
+
+        // pre-LN MLP block with tanh-GELU + residual
+        for i in 0..m {
+            layernorm_row(
+                &bx[i * d..(i + 1) * d],
+                &base[lo.ln2_g..][..d],
+                &base[lo.ln2_b..][..d],
+                &mut bxn[i * d..(i + 1) * d],
+            );
+        }
+        gemm::gemm_blocked(bxn, m, d, &lp.wf1, Some(&base[lo.bf1..][..f]), bhid);
+        bhid.iter_mut().for_each(|v| *v = gelu(*v));
+        gemm::gemm_blocked(bhid, m, f, &lp.wf2, Some(&base[lo.bf2..][..d]), bproj);
+        for (xv, pv) in bx.iter_mut().zip(bproj.iter()) {
+            *xv += *pv;
+        }
+    }
+
+    // final LN on the pooled rows only (rows are independent, and the
+    // reference path discards every non-pooled row), then the head as
+    // one narrow GEMM over the gathered [bsz, d] pool
+    for ex in 0..bsz {
+        let mrow = &mask[ex * seq..(ex + 1) * seq];
+        let pt = pooled_position(spec.pool, mrow).min(seq - 1);
+        layernorm_row(
+            &bx[(ex * seq + pt) * d..(ex * seq + pt + 1) * d],
+            &base[ft.final_ln_g..][..d],
+            &base[ft.final_ln_b..][..d],
+            &mut pooled[ex * d..(ex + 1) * d],
+        );
+    }
+    let (hw, hb): (&[f32], &[f32]) = match lora {
+        Some(lv) => (
+            &lv[lora_off.head_w..][..d * c],
+            &lv[lora_off.head_b..][..c],
+        ),
+        None => (
+            &base[ft.head_w..][..d * c],
+            &base[ft.head_b..][..c],
+        ),
+    };
+    gemm_narrow_auto(pooled, bsz, d, hw, c, Some(hb), blogits);
+    let mut acc = 0.0f64;
+    for (row, &label) in labels.iter().enumerate() {
+        acc += cross_entropy(&blogits[row * c..(row + 1) * c], label);
+    }
+    acc / bsz as f64
 }
 
 // ---------------------------------------------------------------------------

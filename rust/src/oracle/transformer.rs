@@ -39,7 +39,7 @@ use crate::config::TrainMode;
 use crate::data::Batch;
 use crate::exec::ExecContext;
 use crate::model::transformer::{
-    batch_dir_derivative, batch_loss, TransformerSpec, TransformerState,
+    batch_dir_derivative, batch_loss_packed, BasePacks, TransformerSpec, TransformerState,
 };
 use crate::probe::ProbeSource;
 use crate::tensor::{ParamStore, ParamStoreMode};
@@ -62,6 +62,13 @@ pub struct TransformerOracle {
     /// forward unperturbed); empty in FT mode, where the base *is* the
     /// trainable and lives in `store`.
     frozen_base: Vec<f32>,
+    /// LoRA-mode weight-pack cache (DESIGN.md §15): the frozen base's
+    /// GEMM operands packed tile-major **once per run** at construction
+    /// and shared read-only by every probe worker — ZO never mutates the
+    /// base in LoRA mode, so the pack never invalidates.  `None` in FT
+    /// mode, where the trainable vector is the base and each perturbed
+    /// evaluation repacks into worker scratch.
+    base_packs: Option<BasePacks>,
     /// Current minibatch token ids (B x seq).
     ids: Vec<i32>,
     /// Current minibatch key-padding mask (B x seq).
@@ -123,12 +130,17 @@ impl TransformerOracle {
             }
         };
         let state = TransformerState::new(&spec);
+        let base_packs = match mode {
+            TrainMode::Ft => None,
+            TrainMode::Lora => Some(BasePacks::pack(&spec, &frozen_base)),
+        };
         let name = format!("transformer:{}:{}", spec.label(), mode.as_str());
         Ok(Self {
             spec,
             mode,
             store,
             frozen_base,
+            base_packs,
             ids: Vec::new(),
             mask: Vec::new(),
             labels: Vec::new(),
@@ -226,6 +238,7 @@ impl TransformerOracle {
         let spec = &self.spec;
         let store = &self.store;
         let frozen_base = &self.frozen_base;
+        let base_packs = self.base_packs.as_ref();
         let lora_mode = self.mode == TrainMode::Lora;
         let ids = &self.ids;
         let mask = &self.mask;
@@ -240,9 +253,11 @@ impl TransformerOracle {
                 let (w, st) = scratch;
                 store.perturb_into(tau, &dirs[j * d..(j + 1) * d], w);
                 if lora_mode {
-                    batch_loss(spec, frozen_base, Some(w), ids, mask, seq, labels, st)
+                    batch_loss_packed(
+                        spec, frozen_base, Some(w), ids, mask, seq, labels, st, base_packs,
+                    )
                 } else {
-                    batch_loss(spec, w, None, ids, mask, seq, labels, st)
+                    batch_loss_packed(spec, w, None, ids, mask, seq, labels, st, None)
                 }
             },
         );
@@ -313,7 +328,7 @@ impl Oracle for TransformerOracle {
         let mut state = std::mem::replace(&mut self.state, TransformerState::new(&self.spec));
         self.store.perturb_into(scale, dir, &mut wtmp);
         let v = match self.mode {
-            TrainMode::Ft => batch_loss(
+            TrainMode::Ft => batch_loss_packed(
                 &self.spec,
                 &wtmp,
                 None,
@@ -322,8 +337,9 @@ impl Oracle for TransformerOracle {
                 self.seq,
                 &self.labels,
                 &mut state,
+                None,
             ),
-            TrainMode::Lora => batch_loss(
+            TrainMode::Lora => batch_loss_packed(
                 &self.spec,
                 &self.frozen_base,
                 Some(&wtmp),
@@ -332,6 +348,7 @@ impl Oracle for TransformerOracle {
                 self.seq,
                 &self.labels,
                 &mut state,
+                self.base_packs.as_ref(),
             ),
         };
         self.wtmp = wtmp;
@@ -374,6 +391,7 @@ impl Oracle for TransformerOracle {
         let spec = &self.spec;
         let store = &self.store;
         let frozen_base = &self.frozen_base;
+        let base_packs = self.base_packs.as_ref();
         let lora_mode = self.mode == TrainMode::Lora;
         let ids = &self.ids;
         let mask = &self.mask;
@@ -390,9 +408,11 @@ impl Oracle for TransformerOracle {
                     store.perturb_range_into(c0, tau, piece, &mut w[c0..c0 + piece.len()]);
                 });
                 if lora_mode {
-                    batch_loss(spec, frozen_base, Some(w), ids, mask, seq, labels, st)
+                    batch_loss_packed(
+                        spec, frozen_base, Some(w), ids, mask, seq, labels, st, base_packs,
+                    )
                 } else {
-                    batch_loss(spec, w, None, ids, mask, seq, labels, st)
+                    batch_loss_packed(spec, w, None, ids, mask, seq, labels, st, None)
                 }
             },
         );

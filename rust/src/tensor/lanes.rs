@@ -144,8 +144,11 @@ pub fn effective_mode() -> LaneMode {
     }
 }
 
+/// True when dispatchers should take the avx2+fma clone ([`lane_kernel!`]
+/// reads it; `pub(crate)` so sibling modules — [`super::gemm`] — can stamp
+/// their own kernels from the same macro).
 #[inline]
-fn wide_active() -> bool {
+pub(crate) fn wide_active() -> bool {
     effective_mode() == LaneMode::Wide && cpu_wide()
 }
 
@@ -160,7 +163,7 @@ macro_rules! lane_kernel {
         pub fn $name($($arg: $ty),*) $(-> $ret)? {
             #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
             {
-                if wide_active() {
+                if $crate::tensor::lanes::wide_active() {
                     // SAFETY: wide_active() is true only after runtime
                     // detection of avx2+fma on this CPU.
                     unsafe {
@@ -178,6 +181,10 @@ macro_rules! lane_kernel {
         }
     };
 }
+
+// the blocked GEMM engine stamps its microkernel from the same macro, so
+// its scalar/wide forms share one body exactly like the kernels here
+pub(crate) use lane_kernel;
 
 #[inline(always)]
 fn fma_axpy_body(a: f32, x: &[f32], y: &mut [f32]) {
@@ -200,8 +207,11 @@ fn fma_perturb_fill_body(x: &[f32], tau: f32, v: &[f32], z: &mut [f32]) {
     }
 }
 
+// pub(crate): the blocked GEMM microkernel inlines this exact body into
+// its own tile loop, so the packed kernel's per-element arithmetic IS the
+// golden-pinned unfused accum_row update
 #[inline(always)]
-fn accum_row_body(xi: f32, w: &[f32], out: &mut [f32]) {
+pub(crate) fn accum_row_body(xi: f32, w: &[f32], out: &mut [f32]) {
     for (o, wv) in out.iter_mut().zip(w.iter()) {
         *o += xi * *wv;
     }

@@ -5,11 +5,13 @@
 //! parameter stores can share buffers without copies; the `Vector`
 //! new-type adds checked construction and convenience ops on top.
 
+pub mod gemm;
 pub mod lanes;
 mod ops;
 pub mod qstore;
 mod vector;
 
+pub use gemm::{effective_gemm_mode, force_gemm_mode, GemmMode, PackedB};
 pub use lanes::{dot_lanes, LaneMode};
 pub use ops::*;
 pub use qstore::{ParamStore, ParamStoreMode};

@@ -27,6 +27,10 @@ pub use crate::probe::ProbeStorage;
 /// lives (DESIGN.md §14).
 pub use crate::tensor::ParamStoreMode;
 
+/// GEMM-engine selection re-exported where the run configuration lives
+/// (DESIGN.md §15).
+pub use crate::tensor::GemmMode;
+
 /// Checkpoint/resume policy re-exported where the run configuration lives.
 pub use crate::snapshot::CheckpointConfig;
 
@@ -312,6 +316,11 @@ pub struct TrainConfig {
     /// forcing; quantized modes need a supporting oracle
     /// ([`crate::oracle::Oracle::supports_param_store`]).
     pub param_store: ParamStoreMode,
+    /// Model-forward GEMM engine: the blocked batched kernel (default) or
+    /// the row-at-a-time reference loop.  Bit-identical trajectories
+    /// either way (the §15 tiling contract); `ZO_GEMM` overrides for
+    /// whole-suite forcing.
+    pub gemm: GemmMode,
 }
 
 impl TrainConfig {
@@ -332,6 +341,7 @@ impl TrainConfig {
             checkpoint: CheckpointConfig::default(),
             shuffle: None,
             param_store: ParamStoreMode::F32,
+            gemm: GemmMode::Blocked,
         }
     }
 
@@ -352,6 +362,7 @@ impl TrainConfig {
             checkpoint: CheckpointConfig::default(),
             shuffle: None,
             param_store: ParamStoreMode::F32,
+            gemm: GemmMode::Blocked,
         }
     }
 
@@ -383,6 +394,7 @@ impl TrainConfig {
             checkpoint: CheckpointConfig::default(),
             shuffle: None,
             param_store: ParamStoreMode::F32,
+            gemm: GemmMode::Blocked,
         }
     }
 }
@@ -455,6 +467,10 @@ pub struct Trainer<O: Oracle> {
     /// Resolved parameter-storage mode (config + `ZO_PARAM_STORE`), part
     /// of the snapshot fingerprint.
     param_store: ParamStoreMode,
+    /// Resolved GEMM engine (config + `ZO_GEMM`), part of the snapshot
+    /// fingerprint (the modes are bitwise identical, but the fingerprint
+    /// records which engine produced the trajectory; DESIGN.md §15).
+    gemm: GemmMode,
     /// Cross-session run cursors (what snapshots capture and restore).
     progress: RunProgress,
 }
@@ -480,6 +496,8 @@ impl<O: Oracle> Trainer<O> {
         let d = oracle.dim();
         let storage = Self::resolve_storage(&cfg, &oracle)?;
         let param_store = Self::resolve_param_store(&cfg, &oracle)?;
+        let gemm = Self::resolve_gemm(&cfg)?;
+        crate::tensor::gemm::set_run_mode(Some(gemm));
         let estimator = build_estimator(&cfg.estimator, d, cfg.tau, cfg.seed, &exec, storage)?;
         let optimizer = crate::optim::optimizers_by_name(&cfg.optimizer, d)?;
         oracle.set_exec(exec);
@@ -501,6 +519,7 @@ impl<O: Oracle> Trainer<O> {
             probe_losses: Vec::new(),
             ptmp: Vec::new(),
             param_store,
+            gemm,
             progress,
         })
     }
@@ -538,6 +557,21 @@ impl<O: Oracle> Trainer<O> {
             oracle.name(),
             requested.label()
         )
+    }
+
+    /// Resolve the run's GEMM engine: the `ZO_GEMM` environment override
+    /// (CI forces the whole suite onto one engine with it) beats the
+    /// config.  No capability check is needed — both engines are plain
+    /// CPU paths every oracle supports, and they produce identical bits
+    /// (DESIGN.md §15), so the choice only moves throughput.
+    fn resolve_gemm(cfg: &TrainConfig) -> Result<GemmMode> {
+        match std::env::var("ZO_GEMM") {
+            Ok(s) => match GemmMode::parse(&s) {
+                Some(m) => Ok(m),
+                None => bail!("ZO_GEMM='{s}' (expected reference|blocked)"),
+            },
+            Err(_) => Ok(cfg.gemm),
+        }
     }
 
     /// Resolve the run's probe storage: the `ZO_PROBE_STORAGE` environment
@@ -611,6 +645,13 @@ impl<O: Oracle> Trainer<O> {
         // different (requantized) trajectory than the f32 run
         if self.param_store != ParamStoreMode::F32 {
             label.push_str(&format!("+{}", self.param_store.label()));
+        }
+        // the GEMM engine does NOT change the trajectory (the blocked
+        // kernel is bitwise identical to the reference loop), but a
+        // non-default engine is still recorded so a restored run knows
+        // which path produced its numbers
+        if self.gemm != GemmMode::Blocked {
+            label.push_str("+gemmref");
         }
         crate::snapshot::SnapshotFingerprint {
             label,
@@ -933,6 +974,7 @@ mod tests {
             checkpoint: CheckpointConfig::default(),
             shuffle: None,
             param_store: ParamStoreMode::F32,
+            gemm: GemmMode::Blocked,
         };
         let mut t2 = Trainer::new(
             mk(EstimatorKind::CentralK1(SamplerKind::Gaussian)),

@@ -15,8 +15,8 @@ use zo_ldsd::proptest::{check, Gen};
 use zo_ldsd::sampler::LdsdConfig;
 use zo_ldsd::snapshot;
 use zo_ldsd::train::{
-    CheckpointConfig, EstimatorKind, ParamStoreMode, ProbeStorage, SamplerKind, TrainConfig,
-    Trainer,
+    CheckpointConfig, EstimatorKind, GemmMode, ParamStoreMode, ProbeStorage, SamplerKind,
+    TrainConfig, Trainer,
 };
 
 fn mini_corpus() -> Corpus {
@@ -115,6 +115,7 @@ fn cfg_for(case: &ResumeCase, checkpoint: CheckpointConfig) -> TrainConfig {
         checkpoint,
         shuffle: None,
         param_store: ParamStoreMode::F32,
+        gemm: GemmMode::Blocked,
     }
 }
 

@@ -1,0 +1,350 @@
+//! The GEMM tiling contract (DESIGN.md §15) end to end: the cache-blocked
+//! packed kernel must produce *identical bits* to the row-at-a-time
+//! reference loop — at any (m, k, n), any tile size, either lane mode,
+//! any thread count — because both walk the same ascending-k term
+//! sequence per output element.  The suite pins that equality at three
+//! levels: the raw kernels on randomized shapes, the batched
+//! transformer/MLP forwards (FT + LoRA, provided packs + per-worker
+//! repacks), and whole training trajectories (threads x probe storage x
+//! parameter store) forced onto each engine.  CI runs the GEMM-heavy
+//! suites under both `ZO_GEMM` arms; this file carries the cross-engine
+//! assertions themselves.
+
+use zo_ldsd::config::TrainMode;
+use zo_ldsd::data::corpus::{Corpus, CorpusSpec};
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::model::transformer::batch_loss;
+use zo_ldsd::model::{Activation, MlpSpec, Pool, TransformerSpec, TransformerState};
+use zo_ldsd::oracle::{MlpOracle, Oracle, TransformerOracle};
+use zo_ldsd::proptest::{check, U64Range};
+use zo_ldsd::rng::Rng;
+use zo_ldsd::sampler::LdsdConfig;
+use zo_ldsd::tensor::gemm::{
+    force_gemm_mode, gemm_blocked_narrow, gemm_blocked_with, gemm_reference, PackedB, MR, NR,
+};
+use zo_ldsd::tensor::lanes::{force_mode, LaneMode};
+use zo_ldsd::tensor::{GemmMode, Matrix};
+use zo_ldsd::train::{
+    CheckpointConfig, EstimatorKind, ParamStoreMode, ProbeStorage, SamplerKind, ShuffleSpec,
+    TrainConfig, Trainer,
+};
+
+/// The lane/GEMM mode overrides are process-global; tests that force them
+/// serialize here so a concurrently running test never observes a
+/// half-flipped configuration.  (Results would still be identical — the
+/// contract — but the comparisons below are only meaningful when each
+/// arm really ran the engine it claims.)
+static MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn mode_lock() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Randomized kernel-level equality: blocked == reference bitwise for
+/// random (m, k, n), every tile-size combination (including degenerate
+/// 1-wide panels and m-tiles larger than MR), the narrow unpacked path,
+/// and both lane modes.
+#[test]
+fn prop_blocked_matches_reference_bitwise() {
+    let _guard = mode_lock();
+    check("gemm_blocked_bitwise", &U64Range(0, u64::MAX / 2), 40, |seed| {
+        let mut rng = Rng::new(*seed);
+        let m = 1 + rng.below(24) as usize;
+        let k = 1 + rng.below(40) as usize;
+        let n = 1 + rng.below(2 * NR as u64 + 5) as usize;
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        let mut bias = vec![0.0f32; n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        rng.fill_normal(&mut bias);
+        let biases: [Option<&[f32]>; 2] = [Some(&bias), None];
+
+        let mut ok = true;
+        for lane in [LaneMode::Scalar, LaneMode::Wide] {
+            force_mode(Some(lane));
+            for bias_opt in biases {
+                let mut want = vec![0.0f32; m * n];
+                gemm_reference(&a, m, k, &b, n, bias_opt, &mut want);
+                for nr in [1usize, 3, 8, NR] {
+                    let pb = PackedB::pack_with_nr(&b, k, n, nr);
+                    for mr in [1usize, 2, MR, 11] {
+                        let mut got = vec![0.0f32; m * n];
+                        let mut ctile = vec![0.0f32; mr * nr];
+                        gemm_blocked_with(&a, m, k, &pb, bias_opt, &mut got, mr, &mut ctile);
+                        ok &= bits_eq(&got, &want);
+                    }
+                }
+                if n <= NR {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_blocked_narrow(&a, m, k, &b, n, bias_opt, &mut got);
+                    ok &= bits_eq(&got, &want);
+                }
+            }
+        }
+        force_mode(None);
+        ok
+    });
+}
+
+fn tiny_corpus() -> Corpus {
+    Corpus::new(CorpusSpec {
+        vocab: 64,
+        seq: 8,
+        lexicon: 16,
+        min_len: 4,
+        signal_min: 1,
+        signal_max: 3,
+        ..CorpusSpec::default_mini()
+    })
+    .unwrap()
+}
+
+fn tiny_spec() -> TransformerSpec {
+    TransformerSpec::new(64, 16, 2, 2, 32, 8, 2, false, Pool::Cls, 2).unwrap()
+}
+
+/// The transformer batched forward under the blocked engine returns the
+/// per-example reference fold's exact bits — FT and LoRA, with the loss
+/// compared as full f64 bit patterns, across repeated evaluations
+/// through the same reused state (arena/pack reuse cannot leak bits).
+#[test]
+fn transformer_batch_loss_identical_bits_across_engines() {
+    let _guard = mode_lock();
+    let spec = tiny_spec();
+    let mut rng = Rng::new(41);
+    let mut base = vec![0.0f32; spec.d_ft()];
+    let mut lora = vec![0.0f32; spec.d_lora()];
+    rng.fill_normal(&mut base);
+    rng.fill_normal(&mut lora);
+    // keep the random base in a numerically sane regime for layernorm
+    for v in base.iter_mut() {
+        *v *= 0.05;
+    }
+    for v in lora.iter_mut() {
+        *v *= 0.05;
+    }
+    let batch = tiny_corpus().train_batch(2, 6);
+
+    let eval = |lora_opt: Option<&[f32]>| {
+        let mut state = TransformerState::new(&spec);
+        batch_loss(
+            &spec, &base, lora_opt, &batch.ids, &batch.mask, batch.seq, &batch.labels,
+            &mut state,
+        )
+    };
+    for lora_opt in [None, Some(&lora[..])] {
+        force_gemm_mode(Some(GemmMode::Reference));
+        let want = eval(lora_opt);
+        force_gemm_mode(Some(GemmMode::Blocked));
+        let got = eval(lora_opt);
+        // repeat through one reused state: arena growth and pack reuse
+        // must not perturb the bits
+        let again = {
+            let mut state = TransformerState::new(&spec);
+            let first = batch_loss(
+                &spec, &base, lora_opt, &batch.ids, &batch.mask, batch.seq, &batch.labels,
+                &mut state,
+            );
+            let second = batch_loss(
+                &spec, &base, lora_opt, &batch.ids, &batch.mask, batch.seq, &batch.labels,
+                &mut state,
+            );
+            assert_eq!(first.to_bits(), second.to_bits(), "state reuse changed bits");
+            second
+        };
+        force_gemm_mode(None);
+        assert!(want.is_finite());
+        assert_eq!(
+            want.to_bits(),
+            got.to_bits(),
+            "lora={}: blocked {got} vs reference {want}",
+            lora_opt.is_some()
+        );
+        assert_eq!(want.to_bits(), again.to_bits());
+    }
+}
+
+/// Oracle-level equality where the pack cache actually lives: the LoRA
+/// oracle packs its frozen base once per run, the FT oracle repacks per
+/// evaluation in each worker — both must match the reference engine
+/// bitwise through the vectorized `loss_k`, at 1 and 8 threads.
+#[test]
+fn transformer_oracle_loss_k_identical_bits_across_engines_and_threads() {
+    let _guard = mode_lock();
+    let batch = tiny_corpus().train_batch(0, 6);
+    let k = 4usize;
+    let tau = 1e-2f32;
+    for mode in [TrainMode::Lora, TrainMode::Ft] {
+        let d = match mode {
+            TrainMode::Lora => tiny_spec().d_lora(),
+            TrainMode::Ft => tiny_spec().d_ft(),
+        };
+        let mut dirs = vec![0.0f32; k * d];
+        Rng::new(29).fill_normal(&mut dirs);
+        for threads in [1usize, 8] {
+            let run = |gmode: GemmMode| {
+                force_gemm_mode(Some(gmode));
+                let mut o = TransformerOracle::from_seed(tiny_spec(), mode, 7);
+                o.set_exec(ExecContext::new(threads).with_shard_len(64));
+                o.set_batch(&batch).unwrap();
+                let losses = o.loss_k(&dirs, k, tau).unwrap();
+                force_gemm_mode(None);
+                losses
+            };
+            let want = run(GemmMode::Reference);
+            let got = run(GemmMode::Blocked);
+            for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{mode:?} t{threads} probe {i}: blocked {b} vs reference {a}"
+                );
+            }
+        }
+    }
+}
+
+/// The MLP batched forward under the blocked engine preserves the
+/// per-unit closed form (`bias[j] + dot_lanes(w_j, x)`) bitwise.
+#[test]
+fn mlp_batch_loss_identical_bits_across_engines() {
+    let _guard = mode_lock();
+    let spec = MlpSpec::new(24, vec![48, 40], 3, Activation::Tanh).unwrap();
+    let mut rng = Rng::new(53);
+    let mut params = vec![0.0f32; spec.dim()];
+    rng.fill_normal(&mut params);
+    let rows = 70usize; // spans multiple MB_LANES row blocks plus a tail
+    let mut feats = Matrix::zeros(rows, 24);
+    rng.fill_normal(&mut feats.data);
+    let labels: Vec<i32> = (0..rows).map(|r| (r % 3) as i32).collect();
+
+    let eval = |gmode: GemmMode| {
+        force_gemm_mode(Some(gmode));
+        let mut state = zo_ldsd::model::MlpState::new(&spec);
+        let loss = zo_ldsd::model::mlp::batch_loss(&spec, &params, &feats, &labels, &mut state);
+        force_gemm_mode(None);
+        loss
+    };
+    let want = eval(GemmMode::Reference);
+    let got = eval(GemmMode::Blocked);
+    assert!(want.is_finite());
+    assert_eq!(want.to_bits(), got.to_bits(), "blocked {got} vs reference {want}");
+}
+
+fn tfm_cfg(storage: ProbeStorage, seed: u64) -> TrainConfig {
+    TrainConfig {
+        estimator: EstimatorKind::BestOfK {
+            k: 5,
+            sampler: SamplerKind::Ldsd(LdsdConfig::default()),
+        },
+        optimizer: "zo_sgd_plain".into(),
+        lr: 0.05,
+        tau: 1e-3,
+        budget: 48,
+        eval_every: 0,
+        eval_batches: 2,
+        cosine_schedule: false,
+        seed,
+        probe_dispatch: Default::default(),
+        probe_storage: storage,
+        checkpoint: CheckpointConfig::default(),
+        shuffle: Some(ShuffleSpec { n_train: 24 }),
+        param_store: ParamStoreMode::F32,
+        gemm: GemmMode::Blocked,
+    }
+}
+
+/// Whole training trajectories are engine-invariant: the LoRA
+/// transformer run walks identical loss-curve and final-parameter bits
+/// under each forced engine, across 1-vs-8 threads and both probe
+/// storages.
+#[test]
+fn transformer_train_matrix_bitwise_identical_under_both_engines() {
+    let _guard = mode_lock();
+    let run = |gmode: GemmMode, threads: usize, storage: ProbeStorage| {
+        force_gemm_mode(Some(gmode));
+        let mut t = Trainer::with_exec(
+            tfm_cfg(storage, 19),
+            TransformerOracle::from_seed(tiny_spec(), TrainMode::Lora, 19),
+            tiny_corpus(),
+            ExecContext::new(threads).with_shard_len(64),
+        )
+        .unwrap();
+        let out = t.run(None).unwrap();
+        let mut p = Vec::new();
+        t.oracle().params_into(&mut p);
+        force_gemm_mode(None);
+        (out.loss_curve, p)
+    };
+    let (c_ref, p_ref) = run(GemmMode::Reference, 1, ProbeStorage::Materialized);
+    for (threads, storage) in [
+        (1usize, ProbeStorage::Materialized),
+        (8, ProbeStorage::Materialized),
+        (1, ProbeStorage::Streamed),
+        (8, ProbeStorage::Streamed),
+    ] {
+        let (c, p) = run(GemmMode::Blocked, threads, storage);
+        assert_eq!(c_ref.len(), c.len());
+        for (i, ((ca, la), (cb, lb))) in c_ref.iter().zip(c.iter()).enumerate() {
+            assert_eq!(ca, cb, "t{threads} {storage:?}: call axis diverged at {i}");
+            assert_eq!(
+                la.to_bits(),
+                lb.to_bits(),
+                "t{threads} {storage:?}: loss diverged at step {i}"
+            );
+        }
+        assert!(
+            bits_eq(&p_ref, &p),
+            "t{threads} {storage:?}: final params diverged from the reference engine"
+        );
+    }
+}
+
+/// The engine axis composes with quantized parameter storage: f32 and
+/// f16 MLP runs each walk identical bits under either engine (the store
+/// dequantizes to the same activations either way).
+#[test]
+fn mlp_train_engine_invariant_under_f32_and_f16_stores() {
+    let _guard = mode_lock();
+    let spec = MlpSpec::new(32, vec![16], 2, Activation::Tanh).unwrap();
+    let run = |gmode: GemmMode, store: ParamStoreMode| {
+        force_gemm_mode(Some(gmode));
+        let cfg = TrainConfig {
+            param_store: store,
+            budget: 60,
+            ..tfm_cfg(ProbeStorage::Materialized, 31)
+        };
+        let mut t = Trainer::with_exec(
+            cfg,
+            MlpOracle::from_seed(spec.clone(), 31),
+            Corpus::new(CorpusSpec::default_mini()).unwrap(),
+            ExecContext::new(4).with_shard_len(37),
+        )
+        .unwrap();
+        let out = t.run(None).unwrap();
+        let mut p = Vec::new();
+        t.oracle().params_into(&mut p);
+        force_gemm_mode(None);
+        (out.loss_curve, p)
+    };
+    for store in [ParamStoreMode::F32, ParamStoreMode::F16] {
+        let (c_ref, p_ref) = run(GemmMode::Reference, store);
+        let (c_blk, p_blk) = run(GemmMode::Blocked, store);
+        assert_eq!(c_ref.len(), c_blk.len());
+        for (i, ((ca, la), (cb, lb))) in c_ref.iter().zip(c_blk.iter()).enumerate() {
+            assert_eq!(ca, cb, "{}: call axis diverged at {i}", store.label());
+            assert_eq!(
+                la.to_bits(),
+                lb.to_bits(),
+                "{}: loss diverged at step {i}",
+                store.label()
+            );
+        }
+        assert!(bits_eq(&p_ref, &p_blk), "{}: final params diverged", store.label());
+    }
+}

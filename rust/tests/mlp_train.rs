@@ -14,8 +14,8 @@ use zo_ldsd::oracle::{GradOracle, MlpOracle, Oracle};
 use zo_ldsd::probe::{BoxedSampler, MaterializedProbes, ProbeLayout, ProbeSource, StreamedProbes};
 use zo_ldsd::sampler::{LdsdConfig, LdsdSampler};
 use zo_ldsd::train::{
-    CheckpointConfig, EstimatorKind, ParamStoreMode, ProbeStorage, SamplerKind, ShuffleSpec,
-    TrainConfig, Trainer,
+    CheckpointConfig, EstimatorKind, GemmMode, ParamStoreMode, ProbeStorage, SamplerKind,
+    ShuffleSpec, TrainConfig, Trainer,
 };
 
 fn mini_corpus() -> Corpus {
@@ -51,6 +51,7 @@ fn train_cfg(k: usize, budget: u64, seed: u64, storage: ProbeStorage) -> TrainCo
         checkpoint: CheckpointConfig::default(),
         shuffle: Some(ShuffleSpec { n_train: 24 }),
         param_store: ParamStoreMode::F32,
+        gemm: GemmMode::Blocked,
     }
 }
 

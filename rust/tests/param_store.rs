@@ -13,8 +13,8 @@ use zo_ldsd::oracle::{MlpOracle, Oracle};
 use zo_ldsd::probe::{BoxedSampler, ProbeLayout, ProbeSource, StreamedProbes};
 use zo_ldsd::sampler::{LdsdConfig, LdsdSampler};
 use zo_ldsd::train::{
-    CheckpointConfig, EstimatorKind, ParamStoreMode, ProbeStorage, SamplerKind, ShuffleSpec,
-    TrainConfig, Trainer,
+    CheckpointConfig, EstimatorKind, GemmMode, ParamStoreMode, ProbeStorage, SamplerKind,
+    ShuffleSpec, TrainConfig, Trainer,
 };
 
 const QUANT_MODES: [ParamStoreMode; 2] = [ParamStoreMode::F16, ParamStoreMode::Int8];
@@ -47,6 +47,7 @@ fn train_cfg(store: ParamStoreMode, storage: ProbeStorage, seed: u64) -> TrainCo
         checkpoint: CheckpointConfig::default(),
         shuffle: Some(ShuffleSpec { n_train: 24 }),
         param_store: store,
+        gemm: GemmMode::Blocked,
     }
 }
 

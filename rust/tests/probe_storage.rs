@@ -12,7 +12,7 @@ use zo_ldsd::oracle::{Oracle, QuadraticOracle};
 use zo_ldsd::probe::ProbeStorage;
 use zo_ldsd::proptest::{check, Gen, U64Range};
 use zo_ldsd::sampler::{GaussianSampler, LdsdConfig, LdsdSampler};
-use zo_ldsd::train::{EstimatorKind, ParamStoreMode, SamplerKind, TrainConfig, Trainer};
+use zo_ldsd::train::{EstimatorKind, GemmMode, ParamStoreMode, SamplerKind, TrainConfig, Trainer};
 
 /// One random probe-storage configuration to cross-check.
 #[derive(Debug, Clone)]
@@ -80,6 +80,7 @@ fn prop_streamed_and_materialized_trajectories_bitwise_equal() {
                 checkpoint: Default::default(),
                 shuffle: None,
                 param_store: ParamStoreMode::F32,
+                gemm: GemmMode::Blocked,
             };
             let ctx = ExecContext::new(case.threads).with_shard_len(case.shard_len);
             let mut t = Trainer::with_exec(

@@ -8,7 +8,8 @@ use zo_ldsd::eval::Evaluator;
 use zo_ldsd::oracle::{LinRegOracle, Oracle, PjrtOracle, QuadraticOracle};
 use zo_ldsd::runtime::Runtime;
 use zo_ldsd::train::{
-    EstimatorKind, ParamStoreMode, ProbeDispatch, ProbeStorage, SamplerKind, TrainConfig, Trainer,
+    EstimatorKind, GemmMode, ParamStoreMode, ProbeDispatch, ProbeStorage, SamplerKind, TrainConfig,
+    Trainer,
 };
 
 fn mini_corpus() -> Corpus {
@@ -72,6 +73,7 @@ fn central_and_bestofk_consume_identical_budget() {
         checkpoint: Default::default(),
         shuffle: None,
         param_store: ParamStoreMode::F32,
+        gemm: GemmMode::Blocked,
     };
     let oracle = || QuadraticOracle::new(vec![1.0; d], vec![1.0; d], vec![0.0; d]);
 
@@ -130,6 +132,7 @@ fn learnable_policy_beats_frozen_on_persistent_direction_quadratic() {
             checkpoint: Default::default(),
             shuffle: None,
             param_store: ParamStoreMode::F32,
+            gemm: GemmMode::Blocked,
         };
         let oracle =
             QuadraticOracle::new(vec![1.0; d], center.clone(), vec![0.0; d]);

@@ -17,8 +17,8 @@ use zo_ldsd::probe::{
 };
 use zo_ldsd::sampler::{LdsdConfig, LdsdSampler};
 use zo_ldsd::train::{
-    CheckpointConfig, EstimatorKind, ParamStoreMode, ProbeStorage, SamplerKind, ShuffleSpec,
-    TrainConfig, Trainer,
+    CheckpointConfig, EstimatorKind, GemmMode, ParamStoreMode, ProbeStorage, SamplerKind,
+    ShuffleSpec, TrainConfig, Trainer,
 };
 
 /// A corpus small enough for the tiny architecture below (vocab 64,
@@ -65,6 +65,7 @@ fn train_cfg(k: usize, budget: u64, seed: u64, storage: ProbeStorage) -> TrainCo
         checkpoint: CheckpointConfig::default(),
         shuffle: Some(ShuffleSpec { n_train: 24 }),
         param_store: ParamStoreMode::F32,
+        gemm: GemmMode::Blocked,
     }
 }
 
