@@ -12,6 +12,11 @@
 #   make test-transformer  the transformer + LoRA oracle suite (reference
 #                        parity golden + train matrix) under both probe-
 #                        storage modes (CI parity for the table1-smoke job)
+#   make test-store      the content-addressed store suite: store/lock/
+#                        snapshot unit tests plus the integration matrix
+#                        (corruption, GC, warm-start short-circuit, legacy
+#                        v2 migration) under both probe-storage modes
+#                        (CI parity for the store-smoke job)
 #   make test-lanes      the full test suite under ZO_LANES=scalar and
 #                        ZO_LANES=wide — the lane-accumulation contract
 #                        (DESIGN.md §14) says every result is bitwise
@@ -48,7 +53,7 @@
 #                        enforced speedup, DESIGN.md §15)
 
 .PHONY: artifacts build test test-streamed test-resume test-mlp \
-        test-transformer test-lanes test-gemm lint fmt doc \
+        test-transformer test-store test-lanes test-gemm lint fmt doc \
         bench bench-smoke bench-baseline bench-gate clean
 
 # Bench-regression gate knobs (DESIGN.md §12).  BENCH_JSON must reach the
@@ -56,7 +61,7 @@
 # package root (rust/), while bench-gate and CI read from the repo root.
 BENCH_OUT ?= BENCH_current.json
 BENCH_BASELINE ?= rust/benches/BENCH_baseline.json
-BENCH_GATES ?= loss_k,axpy_k,probe_combine,mlp,transformer,mem/,lanes/,qstore/,gemm/
+BENCH_GATES ?= loss_k,axpy_k,probe_combine,mlp,transformer,mem/,lanes/,qstore/,gemm/,snapshot/
 BENCH_THRESHOLD ?= 0.20
 BENCH_BYTES_THRESHOLD ?= 0.20
 BENCH_AB_MAX_RATIO ?= 0.67
@@ -91,6 +96,12 @@ test-mlp: build
 test-transformer: build
 	ZO_PROBE_STORAGE=materialized cargo test -q --test transformer_golden --test transformer_train
 	ZO_PROBE_STORAGE=streamed cargo test -q --test transformer_golden --test transformer_train
+
+test-store: build
+	cargo test -q --lib store::
+	cargo test -q --lib snapshot::
+	ZO_PROBE_STORAGE=materialized cargo test -q --test store --test checkpoint_resume
+	ZO_PROBE_STORAGE=streamed cargo test -q --test store --test checkpoint_resume
 
 test-lanes: build
 	ZO_LANES=scalar cargo test -q

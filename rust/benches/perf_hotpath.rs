@@ -164,6 +164,65 @@ fn main() {
         b.max_seconds = saved_max_seconds;
     }
 
+    // --- content-addressed snapshot persistence (the store tentpole) -------
+    // `snapshot/*` rows time one steady-state checkpoint write and one
+    // full load through the content-addressed store at d = 2^16.  The
+    // write row measures the dedup fast path: every blob of the
+    // generation already exists in the store, so the cost is hashing +
+    // existence checks + the manifest commit — the per-step overhead a
+    // long run actually pays once the store is warm.  The load row
+    // measures the manifest parse + blob fetch + checksum path.
+    {
+        use zo_ldsd::optim::OptimizerState;
+        use zo_ldsd::snapshot::{
+            load_snapshot, write_snapshot, SnapshotFingerprint, TrainerSnapshot,
+            SNAPSHOT_VERSION,
+        };
+        use zo_ldsd::store::Store;
+
+        let saved_max_seconds = b.max_seconds;
+        b.max_seconds = 1.5;
+        let dm = 1usize << 16;
+        let base = std::env::temp_dir()
+            .join(format!("zo-bench-snapshot-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let dir = base.join("ck");
+        let store = Store::open(base.join("store"));
+        let snap = TrainerSnapshot {
+            version: SNAPSHOT_VERSION,
+            fingerprint: SnapshotFingerprint {
+                label: "bestofk5/ldsd+zo_sgd".into(),
+                seed: 7,
+                budget: 1 << 20,
+                dim: dm,
+            },
+            step: 40,
+            oracle_calls_used: 240,
+            next_eval: 1200,
+            data_cursor: 320,
+            sampler_step: 40,
+            best_accuracy: 0.5,
+            params: (0..dm).map(|i| 0.25 + 1e-4 * (i % 101) as f32).collect(),
+            optimizer: OptimizerState {
+                scalars: vec![40],
+                buffers: vec![vec![0.5f32; dm]],
+            },
+            policy_mean: Some(vec![0.125f32; dm]),
+            loss_curve: vec![(6, 0.75), (12, 0.6)],
+            acc_curve: vec![(12, 0.5)],
+        };
+        // warm the store so the timed writes hit the dedup path only
+        let last = write_snapshot(&dir, &store, &snap).unwrap();
+        b.bench("snapshot/write_dedup", dm as f64, || {
+            write_snapshot(&dir, &store, &snap).unwrap();
+        });
+        b.bench("snapshot/load_dedup", dm as f64, || {
+            std::hint::black_box(load_snapshot(&last, Some(&store)).unwrap());
+        });
+        let _ = std::fs::remove_dir_all(&base);
+        b.max_seconds = saved_max_seconds;
+    }
+
     // --- RNG: scalar cached-spare path vs the pairwise hot loop -----------
     // (§Perf optimization #1: FT-mode LDSD draws K*d = 6.6M normals/step)
     {

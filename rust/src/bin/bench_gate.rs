@@ -30,6 +30,12 @@
 //! nonzero — and each table row prints the bound it was held to next to
 //! the observed ratio.
 //!
+//! With `--store-dir DIR`, a green gate archives the current report into
+//! the content-addressed store and pins it in the store's
+//! `bench.lock.json` under `--store-label` (default "current") — the
+//! audit trail of exactly which gated report byte-set passed
+//! (DESIGN.md §16).
+//!
 //! Regenerate the baseline on the reference runner with
 //! `make bench-baseline` and commit it (see DESIGN.md §12).
 
@@ -58,6 +64,8 @@ fn run() -> Result<()> {
             "ab-max-ratio",
             "ab-prefix",
             "ab-specs",
+            "store-dir",
+            "store-label",
         ],
         &[],
     )?;
@@ -81,10 +89,9 @@ fn run() -> Result<()> {
         &std::fs::read_to_string(&baseline_path)
             .with_context(|| format!("reading baseline {baseline_path}"))?,
     )?;
-    let current = parse_rows(
-        &std::fs::read_to_string(&current_path)
-            .with_context(|| format!("reading current {current_path}"))?,
-    )?;
+    let current_text = std::fs::read_to_string(&current_path)
+        .with_context(|| format!("reading current {current_path}"))?;
+    let current = parse_rows(&current_text)?;
 
     let report = gate(&baseline, &current, threshold, bytes_threshold, &gates);
     println!(
@@ -200,5 +207,14 @@ fn run() -> Result<()> {
         );
     }
     println!("bench-gate: green");
+    // archive the exact report bytes that passed: store object + lockfile
+    // pin, so the audit trail dedups across identical re-runs
+    if let Some(dir) = args.get("store-dir") {
+        let store = zo_ldsd::store::Store::open(dir);
+        let hash = store.put(current_text.as_bytes())?;
+        let label = args.get_or("store-label", "current");
+        zo_ldsd::store::BenchLock::record(store.root(), label, &hash)?;
+        println!("bench-gate: archived gated report as {hash} (label '{label}')");
+    }
     Ok(())
 }

@@ -5,9 +5,13 @@
 //! `artifacts/golden.json` carries python-generated batches that the
 //! integration tests compare against byte-for-byte.
 
-use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonio::{parse, to_string_canonical, to_string_pretty, Json};
 use crate::rng::{SplitMix64, GOLDEN_GAMMA};
+use crate::store::Store;
 
 use super::Batch;
 
@@ -207,6 +211,198 @@ impl Corpus {
     }
 }
 
+// --- content-addressed corpus archive (DESIGN.md §16) ----------------------
+
+/// Magic tag of an archived-corpus manifest object.
+const CORPUS_MAGIC: &str = "zocorp1";
+
+/// Registry file at the store root mapping archive names to manifest
+/// hashes.  Living under the store root makes it a GC root automatically:
+/// `Store::gc` scans `*.json` files there, so registered corpora are
+/// never swept.
+pub const CORPORA_FILE: &str = "corpora.json";
+
+fn i32s_to_bytes(xs: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_i32s(bytes: &[u8]) -> Result<Vec<i32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("i32 blob length {} is not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("f32 blob length {} is not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn chex(x: u64) -> Json {
+    Json::Str(format!("{x:016x}"))
+}
+
+fn chex_get(obj: &Json, key: &str) -> Result<u64> {
+    let s = obj
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("corpus manifest: missing hex field '{key}'"))?;
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 '{s}' for '{key}'"))
+}
+
+fn cf64(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn cf64_get(obj: &Json, key: &str) -> Result<f64> {
+    Ok(f64::from_bits(chex_get(obj, key)?))
+}
+
+fn cnum_get(obj: &Json, key: &str) -> Result<usize> {
+    obj.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("corpus manifest: missing numeric field '{key}'"))
+}
+
+/// Archive the first `n` train examples of `spec` into the
+/// content-addressed store: token ids, masks and labels as little-endian
+/// blobs plus a canonical manifest object, registered under `name` in the
+/// store-root [`CORPORA_FILE`] (which pins it against GC).  Returns the
+/// manifest hash.  Re-archiving identical content is a no-op: every blob
+/// dedups to the same objects.
+pub fn corpus_to_store(store: &Store, name: &str, spec: &CorpusSpec, n: usize) -> Result<String> {
+    if n == 0 {
+        bail!("corpus archive: n must be positive");
+    }
+    let batch = Corpus::new(spec.clone())?.batch(0, n);
+    let mut blobs = BTreeMap::new();
+    blobs.insert("ids".to_string(), Json::Str(store.put(&i32s_to_bytes(&batch.ids))?));
+    blobs.insert("mask".to_string(), Json::Str(store.put(&f32s_to_bytes(&batch.mask))?));
+    blobs
+        .insert("labels".to_string(), Json::Str(store.put(&i32s_to_bytes(&batch.labels))?));
+    let mut sp = BTreeMap::new();
+    sp.insert("vocab".to_string(), chex(spec.vocab));
+    sp.insert("seq".to_string(), Json::Num(spec.seq as f64));
+    sp.insert("n_classes".to_string(), chex(spec.n_classes));
+    sp.insert("lexicon".to_string(), chex(spec.lexicon));
+    sp.insert("min_len".to_string(), chex(spec.min_len));
+    sp.insert("signal_min".to_string(), chex(spec.signal_min));
+    sp.insert("signal_max".to_string(), chex(spec.signal_max));
+    sp.insert("contra".to_string(), cf64(spec.contra));
+    sp.insert("noise".to_string(), cf64(spec.noise));
+    sp.insert("seed".to_string(), chex(spec.seed));
+    let mut m = BTreeMap::new();
+    m.insert("magic".to_string(), Json::Str(CORPUS_MAGIC.to_string()));
+    m.insert("version".to_string(), Json::Num(1.0));
+    m.insert("n".to_string(), Json::Num(n as f64));
+    m.insert("spec".to_string(), Json::Obj(sp));
+    m.insert("blobs".to_string(), Json::Obj(blobs));
+    let hash = store.put(to_string_canonical(&Json::Obj(m)).as_bytes())?;
+    register_corpus(store, name, &hash)?;
+    Ok(hash)
+}
+
+/// Update the store-root corpora registry (`name → manifest hash`),
+/// preserving other entries and committing with tmp+rename.
+fn register_corpus(store: &Store, name: &str, hash: &str) -> Result<()> {
+    let path = store.root().join(CORPORA_FILE);
+    let mut entries: BTreeMap<String, Json> = match std::fs::read_to_string(&path) {
+        Ok(text) => parse(&text)
+            .ok()
+            .and_then(|j| j.get("entries").and_then(Json::as_obj).cloned())
+            .unwrap_or_default(),
+        Err(_) => BTreeMap::new(),
+    };
+    entries.insert(name.to_string(), Json::Str(hash.to_string()));
+    let mut root = BTreeMap::new();
+    root.insert("magic".to_string(), Json::Str(CORPUS_MAGIC.to_string()));
+    root.insert("version".to_string(), Json::Num(1.0));
+    root.insert("entries".to_string(), Json::Obj(entries));
+    std::fs::create_dir_all(store.root())
+        .with_context(|| format!("creating {}", store.root().display()))?;
+    let tmp = store
+        .root()
+        .join(format!(".tmp-{CORPORA_FILE}-{}", std::process::id()));
+    std::fs::write(&tmp, to_string_pretty(&Json::Obj(root)))
+        .with_context(|| format!("staging {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("committing {}", path.display()))?;
+    Ok(())
+}
+
+/// Load an archived corpus back from its manifest hash: the generation
+/// spec plus the materialized batch, bit-for-bit as archived.  Every read
+/// goes through [`Store::get`], so corrupt blobs fail loudly instead of
+/// returning wrong examples.
+pub fn corpus_from_store(store: &Store, hash: &str) -> Result<(CorpusSpec, Batch)> {
+    let bytes = store.get(hash)?;
+    let text = std::str::from_utf8(&bytes)
+        .map_err(|_| anyhow!("corpus object {hash}: not UTF-8"))?;
+    let m = parse(text).map_err(|e| anyhow!("corpus object {hash}: {e}"))?;
+    if m.get("magic").and_then(Json::as_str) != Some(CORPUS_MAGIC) {
+        bail!("corpus object {hash}: bad magic");
+    }
+    let sp = m
+        .get("spec")
+        .ok_or_else(|| anyhow!("corpus object {hash}: missing spec"))?;
+    let spec = CorpusSpec {
+        vocab: chex_get(sp, "vocab")?,
+        seq: cnum_get(sp, "seq")?,
+        n_classes: chex_get(sp, "n_classes")?,
+        lexicon: chex_get(sp, "lexicon")?,
+        min_len: chex_get(sp, "min_len")?,
+        signal_min: chex_get(sp, "signal_min")?,
+        signal_max: chex_get(sp, "signal_max")?,
+        contra: cf64_get(sp, "contra")?,
+        noise: cf64_get(sp, "noise")?,
+        seed: chex_get(sp, "seed")?,
+    };
+    let n = cnum_get(&m, "n")?;
+    let blobs = m
+        .get("blobs")
+        .ok_or_else(|| anyhow!("corpus object {hash}: missing blobs"))?;
+    let blob_hash = |key: &str| -> Result<&str> {
+        blobs
+            .get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("corpus object {hash}: missing blob '{key}'"))
+    };
+    let ids = bytes_to_i32s(&store.get(blob_hash("ids")?)?)?;
+    let mask = bytes_to_f32s(&store.get(blob_hash("mask")?)?)?;
+    let labels = bytes_to_i32s(&store.get(blob_hash("labels")?)?)?;
+    if ids.len() != n * spec.seq || mask.len() != n * spec.seq || labels.len() != n {
+        bail!(
+            "corpus object {hash}: blob shapes ({}, {}, {}) do not match n = {n}, seq = {}",
+            ids.len(),
+            mask.len(),
+            labels.len(),
+            spec.seq,
+        );
+    }
+    let batch = Batch { batch: n, seq: spec.seq, ids, mask, labels, features: None };
+    Ok((spec, batch))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -316,5 +512,43 @@ mod tests {
         let tr = c.train_batch(0, 4);
         let te = c.test_batch(0, 4);
         assert_ne!(tr.ids, te.ids);
+    }
+
+    #[test]
+    fn corpus_archive_roundtrip_bitwise_dedup_and_gc_rooted() {
+        let dir = std::env::temp_dir()
+            .join(format!("zo_corpus_store_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = Store::open(dir.join("store"));
+        let spec = CorpusSpec::default_mini();
+
+        let h1 = corpus_to_store(&store, "mini", &spec, 16).unwrap();
+        let count = store.object_count();
+        assert_eq!(count, 4, "ids + mask + labels + manifest");
+
+        // bit-for-bit round trip against a freshly generated batch
+        let (spec2, batch) = corpus_from_store(&store, &h1).unwrap();
+        assert_eq!(spec2, spec);
+        let fresh = corpus().batch(0, 16);
+        assert_eq!(batch.ids, fresh.ids);
+        assert_eq!(batch.labels, fresh.labels);
+        let bits: Vec<u32> = batch.mask.iter().map(|x| x.to_bits()).collect();
+        let fresh_bits: Vec<u32> = fresh.mask.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, fresh_bits);
+
+        // re-archiving identical content dedups to the same objects
+        let h2 = corpus_to_store(&store, "mini", &spec, 16).unwrap();
+        assert_eq!(h1, h2);
+        assert_eq!(store.object_count(), count);
+
+        // the store-root registry pins the archive, so GC keeps all of it
+        let registry =
+            std::fs::read_to_string(store.root().join(CORPORA_FILE)).unwrap();
+        assert!(registry.contains(&h1));
+        let report = store.gc(&[]).unwrap();
+        assert_eq!(report.swept, 0);
+        assert_eq!(report.live, count);
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -9,7 +9,7 @@ mod parse;
 mod write;
 
 pub use parse::{parse, ParseError};
-pub use write::to_string_pretty;
+pub use write::{to_string_canonical, to_string_pretty};
 
 use std::collections::BTreeMap;
 

@@ -9,6 +9,49 @@ pub fn to_string_pretty(v: &Json) -> String {
     out
 }
 
+/// Canonical serialization: compact (no whitespace), deterministically
+/// key-ordered (objects are `BTreeMap`s), with the same number and string
+/// encodings as [`to_string_pretty`].  Equal values always serialize to
+/// identical bytes, which is what makes content hashes over JSON stable —
+/// spec hashes and store-object identities are computed over this form
+/// (DESIGN.md §16).
+pub fn to_string_canonical(v: &Json) -> String {
+    let mut out = String::new();
+    write_canonical(v, &mut out);
+    out
+}
+
+fn write_canonical(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(x) => write_num(*x, out),
+        Json::Str(s) => write_str(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_canonical(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(k, out);
+                out.push(':');
+                write_canonical(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
 fn indent(n: usize, out: &mut String) {
     for _ in 0..n {
         out.push(' ');
@@ -117,5 +160,46 @@ mod tests {
         m.insert("x".into(), Json::Arr(vec![Json::Num(1.5), Json::Null]));
         let v = Json::Obj(m);
         assert_eq!(parse(&to_string_pretty(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn canonical_golden_bytes() {
+        // pins the canonical encoding: compact separators, sorted keys,
+        // pretty-writer number/string formats
+        let mut inner = BTreeMap::new();
+        inner.insert("z".into(), Json::Num(3.0));
+        inner.insert("a".into(), Json::Str("x\ny".into()));
+        let mut m = BTreeMap::new();
+        m.insert("b".into(), Json::Arr(vec![Json::Num(1.5), Json::Null, Json::Bool(true)]));
+        m.insert("a".into(), Json::Obj(inner));
+        let v = Json::Obj(m);
+        assert_eq!(
+            to_string_canonical(&v),
+            r#"{"a":{"a":"x\ny","z":3},"b":[1.5,null,true]}"#
+        );
+    }
+
+    #[test]
+    fn canonical_is_byte_stable_across_roundtrip_and_key_order() {
+        // insertion order must not matter (BTreeMap), and parsing the
+        // canonical text back must re-serialize to the identical bytes
+        let mut m1 = BTreeMap::new();
+        m1.insert("k1".into(), Json::Num(1321986.0));
+        m1.insert("k2".into(), Json::Str("v".into()));
+        let mut m2 = BTreeMap::new();
+        m2.insert("k2".into(), Json::Str("v".into()));
+        m2.insert("k1".into(), Json::Num(1321986.0));
+        let (a, b) = (to_string_canonical(&Json::Obj(m1)), to_string_canonical(&Json::Obj(m2)));
+        assert_eq!(a, b);
+        let reparsed = parse(&a).unwrap();
+        assert_eq!(to_string_canonical(&reparsed), a);
+        // and it agrees with the pretty writer after reparse
+        assert_eq!(parse(&to_string_pretty(&reparsed)).unwrap(), reparsed);
+    }
+
+    #[test]
+    fn canonical_empty_containers() {
+        assert_eq!(to_string_canonical(&Json::Obj(BTreeMap::new())), "{}");
+        assert_eq!(to_string_canonical(&Json::Arr(vec![])), "[]");
     }
 }

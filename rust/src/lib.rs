@@ -44,6 +44,13 @@
 //! + a few cursors, and a run interrupted at any step resumes
 //! bitwise-identically (DESIGN.md §11).
 //!
+//! Persistence routes through the content-addressed [`store`]
+//! (`--store-dir` / `ZO_STORE_DIR`, `store gc|verify|ls` subcommands):
+//! snapshot manifests reference blobs by SHA-256 hash so unchanged blobs
+//! dedup across retained generations, completed grids warm-start by
+//! canonical spec hash through `grid.lock.json`, and mark-and-sweep GC
+//! rooted at manifests reclaims unreachable objects (DESIGN.md §16).
+//!
 //! The first *network* workload is the forward-only MLP classifier
 //! ([`oracle::MlpOracle`] over the [`model::mlp`] core, `--oracle mlp`):
 //! forward evaluation — not probe algebra — dominates its step, it rides
@@ -73,5 +80,6 @@ pub mod rng;
 pub mod runtime;
 pub mod sampler;
 pub mod snapshot;
+pub mod store;
 pub mod tensor;
 pub mod train;

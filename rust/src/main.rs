@@ -6,6 +6,8 @@
 //!   toy                       Fig. 2 toy experiment (DGD on a9a-like data)
 //!   landscape                 Fig. 1 alignment landscape grid
 //!   memory                    ZO-vs-FO memory table
+//!   store                     content-addressed store maintenance
+//!                             (gc | verify | ls; DESIGN.md §16)
 //!
 //! Benches regenerate the paper's tables/figures: `cargo bench`.
 
@@ -43,10 +45,12 @@ commands:
         [--probe-storage auto|materialized|streamed]
         [--param-store f32|f16|int8] [--gemm reference|blocked]
         [--checkpoint-dir DIR] [--checkpoint-every N] [--resume]
-        [--max-run-steps N]
+        [--store-dir DIR] [--max-run-steps N]
   toy   [--steps N] [--variant baseline|ldsd] [--seed N]
   landscape [--grid N] [--eps F]
   memory [--model M] [--artifacts DIR]
+  store gc|verify|ls [--store-dir DIR] [--checkpoint-dir DIR]
+        [--root DIR]...
 
 `--oracle mlp` trains the forward-only MLP classifier on the synthetic
 corpus — no artifacts needed; epoch-shuffled minibatches by default
@@ -54,6 +58,11 @@ corpus — no artifacts needed; epoch-shuffled minibatches by default
 `--oracle transformer` trains the host-side decoder transformer on the
 same corpus — also artifact-free; --mode lora restricts the trainable
 subspace to the LoRA adapters + head (probe dimension = adapter count).
+Snapshots and completed-trial records live in a content-addressed store
+(default <checkpoint-dir>/store; --store-dir or ZO_STORE_DIR override).
+`store verify` re-hashes every object, `store gc` mark-and-sweeps
+unreachable ones (roots: the store's parent tree, plus any --root), and
+`store ls` lists objects (DESIGN.md §16).
 ";
 
 fn main() {
@@ -65,7 +74,7 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = Args::from_env_with_flags(
-        &["info", "train", "toy", "landscape", "memory"],
+        &["info", "train", "toy", "landscape", "memory", "store"],
         &["resume"],
     )?;
     match args.subcommand.as_deref() {
@@ -74,6 +83,7 @@ fn run() -> Result<()> {
         Some("toy") => cmd_toy(&args),
         Some("landscape") => cmd_landscape(&args),
         Some("memory") => cmd_memory(&args),
+        Some("store") => cmd_store(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -128,6 +138,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ("checkpoint.dir", "checkpoint-dir"),
         ("checkpoint.every", "checkpoint-every"),
         ("checkpoint.max_run_steps", "max-run-steps"),
+        ("store.dir", "store-dir"),
         ("oracle", "oracle"),
         ("mlp.hidden", "hidden"),
         ("mlp.activation", "activation"),
@@ -178,6 +189,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         every: kv.get_u64_or("checkpoint.every", 0)?,
         resume: args.flag("resume") || kv.get_bool_or("checkpoint.resume", false)?,
         max_run_steps: kv.get_u64_or("checkpoint.max_run_steps", 0)?,
+        // blob store location; None = <checkpoint-dir>/store, ZO_STORE_DIR
+        // beats both (DESIGN.md §16)
+        store_dir: kv.get("store.dir").map(String::from),
     };
     if cfg.checkpoint.every > 0 && cfg.checkpoint.dir.is_none() {
         bail!("--checkpoint-every needs --checkpoint-dir");
@@ -400,6 +414,79 @@ fn cmd_landscape(args: &Args) -> Result<()> {
             let c = expected_alignment_mc(&[mx, my], &gradient, eps, 4000, 99);
             println!("{mx:.3},{my:.3},{c:.5}");
         }
+    }
+    Ok(())
+}
+
+/// Resolve the store root for the `store` subcommand with the same
+/// precedence the training path uses: `ZO_STORE_DIR` (when nonempty)
+/// beats `--store-dir`, which beats `<--checkpoint-dir>/store`.
+fn store_root(args: &Args) -> Result<std::path::PathBuf> {
+    if let Ok(env) = std::env::var("ZO_STORE_DIR") {
+        if !env.trim().is_empty() {
+            return Ok(std::path::PathBuf::from(env));
+        }
+    }
+    if let Some(d) = args.get("store-dir") {
+        return Ok(std::path::PathBuf::from(d));
+    }
+    if let Some(d) = args.get("checkpoint-dir") {
+        return Ok(std::path::Path::new(d).join("store"));
+    }
+    bail!("store: need --store-dir, --checkpoint-dir or ZO_STORE_DIR");
+}
+
+fn cmd_store(args: &Args) -> Result<()> {
+    let root = store_root(args)?;
+    let store = zo_ldsd::store::Store::open(&root);
+    match args.positional.first().map(String::as_str) {
+        Some("ls") | None => {
+            let objects = store.objects();
+            for hash in &objects {
+                let bytes = std::fs::metadata(store.object_path(hash))
+                    .map(|m| m.len())
+                    .unwrap_or(0);
+                println!("{hash}  {bytes}");
+            }
+            println!("{} objects in {}", objects.len(), root.display());
+        }
+        Some("verify") => {
+            let report = store.verify();
+            println!(
+                "verified {}: {} ok, {} corrupt",
+                root.display(),
+                report.ok,
+                report.corrupt.len(),
+            );
+            for hash in &report.corrupt {
+                eprintln!("corrupt: {hash}");
+            }
+            if !report.corrupt.is_empty() {
+                bail!("store verify found {} corrupt object(s)", report.corrupt.len());
+            }
+        }
+        Some("gc") => {
+            // Roots: the tree holding the store (trial manifests and
+            // grid.lock.json live next to a conventionally-placed store),
+            // plus any explicitly passed --root trees.  The store root
+            // itself (lockfiles) is always scanned.
+            let mut roots: Vec<std::path::PathBuf> = Vec::new();
+            if let Some(parent) = root.parent() {
+                if !parent.as_os_str().is_empty() {
+                    roots.push(parent.to_path_buf());
+                }
+            }
+            roots.extend(args.get_all("root").into_iter().map(std::path::PathBuf::from));
+            let report = store.gc(&roots)?;
+            println!(
+                "gc {}: {} live, {} swept ({} bytes reclaimed)",
+                root.display(),
+                report.live,
+                report.swept,
+                report.swept_bytes,
+            );
+        }
+        Some(other) => bail!("unknown store action '{other}' (gc|verify|ls)"),
     }
     Ok(())
 }

@@ -1,4 +1,5 @@
-//! Crash-safe training snapshots (DESIGN.md §11).
+//! Crash-safe training snapshots (DESIGN.md §11) on the content-addressed
+//! store (DESIGN.md §16).
 //!
 //! A full training snapshot of a ZO run is tiny — that is the paper's own
 //! memory argument turned into an elasticity feature.  Because probe
@@ -13,9 +14,12 @@
 //!
 //! # On-disk format (versioned)
 //!
-//! One snapshot is a directory `step-<NNNNNNNNNN>/` containing
-//! `manifest.json` (written last — a crash mid-write leaves no manifest,
-//! so the directory is simply invalid) plus raw little-endian blobs:
+//! One snapshot is a directory `step-<NNNNNNNNNN>/` containing only
+//! `manifest.json` (written last into a `.tmp-*` staging sibling and
+//! `rename`d — a crash mid-write leaves no manifest, so the directory is
+//! simply invalid).  The blobs themselves live in the content-addressed
+//! [`crate::store::Store`], referenced from the manifest's inventory by
+//! SHA-256 hash:
 //!
 //! * `params.bin` — the trainable vector (f32 LE);
 //! * `opt-<i>.bin` — the optimizer's persistent moment buffers (f32 LE);
@@ -23,36 +27,56 @@
 //! * `loss_curve.bin` / `acc_curve.bin` — (u64 calls, f64 loss-bits)
 //!   pairs, 16 bytes per entry.
 //!
-//! All floating-point state lives in blobs, never in JSON — JSON numbers
+//! Content addressing dedups for free: blobs unchanged between retained
+//! generations (optimizer buffers early in training, the policy mean, a
+//! frozen LoRA base, curve prefixes) are stored exactly once.  All
+//! floating-point state lives in blobs, never in JSON — JSON numbers
 //! round-trip through decimal and cannot carry NaN/Inf, and bit-exactness
 //! is the whole point.  The manifest stores u64 fields as fixed-width hex
 //! strings (seeds use the full 64-bit range, above JSON's 2^53 integer
-//! ceiling) and an FNV-1a checksum per blob, so corruption is detected at
-//! load and [`load_latest`] falls back to the previous snapshot.
+//! ceiling) and, per blob, byte length + FNV-1a checksum + object hash —
+//! corruption is detected at load (store reads also re-hash) and
+//! [`load_latest`] falls back to the previous snapshot.
 //!
-//! Writes are atomic: blobs + manifest land in a `.tmp-*` sibling that is
-//! `rename`d into place, and [`write_snapshot`] prunes all but the newest
-//! two snapshots (the fallback depth).
+//! **Version 2** snapshots (pre-store: blobs as raw sibling files inside
+//! the `step-<N>/` directory) remain fully readable — [`load_snapshot`]
+//! dispatches on the manifest version, so a checkpoint tree written by an
+//! older build resumes bit-for-bit.  [`write_snapshot`] always writes
+//! version [`SNAPSHOT_VERSION`]; [`write_snapshot_legacy`] keeps the v2
+//! writer alive for the migration tests.
 //!
-//! Completed trials additionally persist their final [`TrainOutcome`] as a
-//! `completed/` record in the same container format, which lets
-//! [`crate::coordinator::run_grid`] skip finished trials on a resumed grid
-//! without re-running them.
+//! [`write_snapshot`] prunes all but the newest two snapshot *manifests*
+//! (the fallback depth); unrooted store objects are reclaimed by
+//! [`crate::store::Store::gc`], not by pruning.
+//!
+//! Completed trials persist their final [`TrainOutcome`] twice over the
+//! same bytes: a canonical-JSON outcome record *object* in the store
+//! (whose hash `grid.lock.json` pins for the coordinator's warm-start
+//! short-circuit) and a human-readable `completed/manifest.json` mirror
+//! in the trial directory.  The record carries the trial's canonical
+//! spec hash, so a resumed grid validates identity by hash — exact stale
+//! detection — rather than by comparing a few hand-picked fields.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::jsonio::{parse, to_string_pretty, Json};
+use crate::jsonio::{parse, to_string_canonical, to_string_pretty, Json};
 use crate::optim::OptimizerState;
+use crate::store::Store;
 use crate::train::TrainOutcome;
 
-/// Current snapshot container version.  Version 2 added the
-/// `data_cursor` field (the minibatch stream's batch cursor; DESIGN.md
-/// §12) — version-1 snapshots predate the epoch-shuffled stream and are
+/// Current snapshot container version.  Version 3 moved blobs into the
+/// content-addressed store (manifests reference them by SHA-256 hash);
+/// version 2 (raw sibling blobs) is still read for migration.  Version-1
+/// snapshots predate the epoch-shuffled stream's `data_cursor` and are
 /// refused rather than silently resumed with a rewound data pipeline.
-pub const SNAPSHOT_VERSION: u64 = 2;
+pub const SNAPSHOT_VERSION: u64 = 3;
+
+/// The pre-store container version (blobs as sibling files) — still
+/// readable, written only by the `*_legacy` helpers.
+pub const LEGACY_SNAPSHOT_VERSION: u64 = 2;
 
 const SNAPSHOT_MAGIC: &str = "zosnap1";
 const OUTCOME_MAGIC: &str = "zodone1";
@@ -60,7 +84,7 @@ const OUTCOME_MAGIC: &str = "zodone1";
 /// Crash-safe checkpoint/resume policy for one training run.
 ///
 /// Rides in [`crate::train::TrainConfig`] and threads from the CLI
-/// (`--checkpoint-dir`, `--checkpoint-every`, `--resume`,
+/// (`--checkpoint-dir`, `--checkpoint-every`, `--resume`, `--store-dir`,
 /// `--max-run-steps`) through `TrialSpec` to the trainer.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CheckpointConfig {
@@ -79,6 +103,34 @@ pub struct CheckpointConfig {
     /// injection for the resume tests; a halted session writes a final
     /// snapshot so no step is lost.
     pub max_run_steps: u64,
+    /// Root of the content-addressed blob store (None: defaults to
+    /// `<dir>/store`; `ZO_STORE_DIR` overrides both — env beats config).
+    /// The coordinator points every trial of a grid at one shared store
+    /// under the grid base so blobs dedup across trials.
+    pub store_dir: Option<String>,
+}
+
+/// Resolve the store root for a checkpoint config: `ZO_STORE_DIR`
+/// (environment, beats config) → [`CheckpointConfig::store_dir`] →
+/// `<checkpoint-dir>/store`.  None when checkpointing is disabled.
+pub fn resolve_store_dir(ck: &CheckpointConfig) -> Option<PathBuf> {
+    let dir = ck.dir.as_ref()?;
+    if let Ok(env) = std::env::var("ZO_STORE_DIR") {
+        if !env.trim().is_empty() {
+            return Some(PathBuf::from(env));
+        }
+    }
+    if let Some(sd) = &ck.store_dir {
+        return Some(PathBuf::from(sd));
+    }
+    Some(Path::new(dir).join("store"))
+}
+
+/// Open the resolved store for a checkpoint config (None when
+/// checkpointing is disabled; opening is lazy, so this costs nothing for
+/// read-only paths against a legacy tree).
+pub fn open_store(ck: &CheckpointConfig) -> Option<Store> {
+    resolve_store_dir(ck).map(Store::open)
 }
 
 /// Run-configuration identity a snapshot is only valid for.  Restoring
@@ -102,7 +154,8 @@ pub struct SnapshotFingerprint {
 /// *not* need saving).
 #[derive(Clone, Debug)]
 pub struct TrainerSnapshot {
-    /// Container version ([`SNAPSHOT_VERSION`]).
+    /// Container version ([`SNAPSHOT_VERSION`]; loaders normalize legacy
+    /// versions to the current one after a successful read).
     pub version: u64,
     /// The run configuration this snapshot belongs to.
     pub fingerprint: SnapshotFingerprint,
@@ -215,6 +268,8 @@ fn bytes_to_curve(bytes: &[u8]) -> Result<Vec<(u64, f64)>> {
 
 // --- blob container -------------------------------------------------------
 
+/// Legacy (v2) blob write: raw sibling file + {bytes, fnv} inventory
+/// entry.
 fn write_blob(
     dir: &Path,
     name: &str,
@@ -230,7 +285,25 @@ fn write_blob(
     Ok(())
 }
 
-fn read_blob(dir: &Path, name: &str, inventory: &Json) -> Result<Vec<u8>> {
+/// Store-backed (v3) blob write: put into the store (idempotent — an
+/// unchanged blob dedups against every prior generation) and record
+/// {bytes, fnv, hash} in the inventory.
+fn put_blob(
+    store: &Store,
+    name: &str,
+    bytes: &[u8],
+    inventory: &mut BTreeMap<String, Json>,
+) -> Result<()> {
+    let hash = store.put(bytes)?;
+    let mut entry = BTreeMap::new();
+    entry.insert("bytes".to_string(), Json::Num(bytes.len() as f64));
+    entry.insert("fnv".to_string(), jhex(fnv64(bytes)));
+    entry.insert("hash".to_string(), Json::Str(hash));
+    inventory.insert(name.to_string(), Json::Obj(entry));
+    Ok(())
+}
+
+fn inventory_entry<'a>(inventory: &'a Json, name: &str) -> Result<(&'a Json, usize, u64)> {
     let entry = inventory
         .get(name)
         .ok_or_else(|| anyhow!("manifest: blob '{name}' not in inventory"))?;
@@ -244,22 +317,72 @@ fn read_blob(dir: &Path, name: &str, inventory: &Json) -> Result<Vec<u8>> {
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow!("manifest: blob '{name}' has no checksum"))?,
     )?;
-    let path = dir.join(name);
-    let bytes = std::fs::read(&path)
-        .with_context(|| format!("reading blob {}", path.display()))?;
+    Ok((entry, want_len, want_fnv))
+}
+
+fn check_blob(bytes: &[u8], what: &str, want_len: usize, want_fnv: u64) -> Result<()> {
     if bytes.len() != want_len {
-        bail!("blob {}: {} bytes, manifest says {want_len}", path.display(), bytes.len());
+        bail!("blob {what}: {} bytes, manifest says {want_len}", bytes.len());
     }
-    let got = fnv64(&bytes);
+    let got = fnv64(bytes);
     if got != want_fnv {
         bail!(
-            "blob {}: checksum {} != manifest {} (corrupt snapshot)",
-            path.display(),
+            "blob {what}: checksum {} != manifest {} (corrupt snapshot)",
             hex64(got),
             hex64(want_fnv)
         );
     }
+    Ok(())
+}
+
+/// Legacy (v2) blob read: sibling file, validated against the manifest's
+/// byte length + FNV checksum.
+fn read_blob(dir: &Path, name: &str, inventory: &Json) -> Result<Vec<u8>> {
+    let (_, want_len, want_fnv) = inventory_entry(inventory, name)?;
+    let path = dir.join(name);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading blob {}", path.display()))?;
+    check_blob(&bytes, &path.display().to_string(), want_len, want_fnv)?;
     Ok(bytes)
+}
+
+/// Store-backed (v3) blob read: fetch by object hash (the store re-hashes
+/// on read), then cross-check the manifest's byte length + FNV checksum —
+/// the FNV machinery doubles as a guard against a manifest pointing at
+/// the wrong (but intact) object.
+fn read_blob_store(store: &Store, name: &str, inventory: &Json) -> Result<Vec<u8>> {
+    let (entry, want_len, want_fnv) = inventory_entry(inventory, name)?;
+    let hash = entry
+        .get("hash")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest: blob '{name}' has no object hash"))?;
+    let bytes = store
+        .get(hash)
+        .with_context(|| format!("blob '{name}'"))?;
+    check_blob(&bytes, name, want_len, want_fnv)?;
+    Ok(bytes)
+}
+
+/// Version-dispatching blob read for snapshot manifests.
+fn fetch_blob(
+    dir: &Path,
+    store: Option<&Store>,
+    version: u64,
+    name: &str,
+    inventory: &Json,
+) -> Result<Vec<u8>> {
+    if version >= SNAPSHOT_VERSION {
+        let store = store.ok_or_else(|| {
+            anyhow!(
+                "{}: store-backed snapshot (v{version}) but no store available \
+                 (set --store-dir / ZO_STORE_DIR)",
+                dir.display()
+            )
+        })?;
+        read_blob_store(store, name, inventory)
+    } else {
+        read_blob(dir, name, inventory)
+    }
 }
 
 fn read_manifest(dir: &Path, magic: &str) -> Result<Json> {
@@ -310,29 +433,10 @@ fn step_dir_name(step: u64) -> String {
     format!("step-{step:010}")
 }
 
-/// Atomically write one snapshot under `dir` (created if missing) and
-/// prune all but the newest [`SNAPSHOTS_KEPT`].  Returns the committed
-/// snapshot directory.
-pub fn write_snapshot(dir: &Path, snap: &TrainerSnapshot) -> Result<PathBuf> {
-    std::fs::create_dir_all(dir)
-        .with_context(|| format!("creating {}", dir.display()))?;
-    let name = step_dir_name(snap.step);
-    let tmp = stage_dir(dir, &name)?;
-
-    let mut blobs = BTreeMap::new();
-    write_blob(&tmp, "params.bin", &f32s_to_bytes(&snap.params), &mut blobs)?;
-    for (i, buf) in snap.optimizer.buffers.iter().enumerate() {
-        write_blob(&tmp, &format!("opt-{i}.bin"), &f32s_to_bytes(buf), &mut blobs)?;
-    }
-    if let Some(mu) = &snap.policy_mean {
-        write_blob(&tmp, "policy_mean.bin", &f32s_to_bytes(mu), &mut blobs)?;
-    }
-    write_blob(&tmp, "loss_curve.bin", &curve_to_bytes(&snap.loss_curve), &mut blobs)?;
-    write_blob(&tmp, "acc_curve.bin", &curve_to_bytes(&snap.acc_curve), &mut blobs)?;
-
+fn snapshot_manifest_fields(snap: &TrainerSnapshot, version: u64) -> BTreeMap<String, Json> {
     let mut m = BTreeMap::new();
     m.insert("magic".to_string(), Json::Str(SNAPSHOT_MAGIC.into()));
-    m.insert("version".to_string(), jhex(snap.version));
+    m.insert("version".to_string(), jhex(version));
     m.insert("label".to_string(), Json::Str(snap.fingerprint.label.clone()));
     m.insert("seed".to_string(), jhex(snap.fingerprint.seed));
     m.insert("budget".to_string(), jhex(snap.fingerprint.budget));
@@ -358,6 +462,64 @@ pub fn write_snapshot(dir: &Path, snap: &TrainerSnapshot) -> Result<PathBuf> {
         "has_policy_mean".to_string(),
         Json::Bool(snap.policy_mean.is_some()),
     );
+    m
+}
+
+/// Atomically write one snapshot under `dir` (created if missing): blobs
+/// go into `store` (content-addressed, deduped against every prior
+/// generation), the `step-<N>/` directory holds only the manifest.  All
+/// but the newest [`SNAPSHOTS_KEPT`] manifests are pruned (their objects
+/// become unreachable and are reclaimed by the next GC).  Returns the
+/// committed snapshot directory.
+pub fn write_snapshot(dir: &Path, store: &Store, snap: &TrainerSnapshot) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let name = step_dir_name(snap.step);
+    let tmp = stage_dir(dir, &name)?;
+
+    let mut blobs = BTreeMap::new();
+    put_blob(store, "params.bin", &f32s_to_bytes(&snap.params), &mut blobs)?;
+    for (i, buf) in snap.optimizer.buffers.iter().enumerate() {
+        put_blob(store, &format!("opt-{i}.bin"), &f32s_to_bytes(buf), &mut blobs)?;
+    }
+    if let Some(mu) = &snap.policy_mean {
+        put_blob(store, "policy_mean.bin", &f32s_to_bytes(mu), &mut blobs)?;
+    }
+    put_blob(store, "loss_curve.bin", &curve_to_bytes(&snap.loss_curve), &mut blobs)?;
+    put_blob(store, "acc_curve.bin", &curve_to_bytes(&snap.acc_curve), &mut blobs)?;
+
+    let mut m = snapshot_manifest_fields(snap, SNAPSHOT_VERSION);
+    m.insert("blobs".to_string(), Json::Obj(blobs));
+
+    let final_dir = dir.join(&name);
+    commit_dir(&tmp, &final_dir, Json::Obj(m))?;
+    prune(dir, SNAPSHOTS_KEPT);
+    sweep_stale_staging(dir);
+    Ok(final_dir)
+}
+
+/// The pre-store (v2) snapshot writer: blobs as raw sibling files inside
+/// the step directory.  Kept so the migration tests can fabricate
+/// checkpoints exactly as an older build would have written them; new
+/// code writes through [`write_snapshot`].
+pub fn write_snapshot_legacy(dir: &Path, snap: &TrainerSnapshot) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let name = step_dir_name(snap.step);
+    let tmp = stage_dir(dir, &name)?;
+
+    let mut blobs = BTreeMap::new();
+    write_blob(&tmp, "params.bin", &f32s_to_bytes(&snap.params), &mut blobs)?;
+    for (i, buf) in snap.optimizer.buffers.iter().enumerate() {
+        write_blob(&tmp, &format!("opt-{i}.bin"), &f32s_to_bytes(buf), &mut blobs)?;
+    }
+    if let Some(mu) = &snap.policy_mean {
+        write_blob(&tmp, "policy_mean.bin", &f32s_to_bytes(mu), &mut blobs)?;
+    }
+    write_blob(&tmp, "loss_curve.bin", &curve_to_bytes(&snap.loss_curve), &mut blobs)?;
+    write_blob(&tmp, "acc_curve.bin", &curve_to_bytes(&snap.acc_curve), &mut blobs)?;
+
+    let mut m = snapshot_manifest_fields(snap, LEGACY_SNAPSHOT_VERSION);
     m.insert("blobs".to_string(), Json::Obj(blobs));
 
     let final_dir = dir.join(&name);
@@ -368,19 +530,25 @@ pub fn write_snapshot(dir: &Path, snap: &TrainerSnapshot) -> Result<PathBuf> {
 }
 
 /// Load and fully validate the snapshot stored in `snap_dir` (manifest
-/// magic/version, blob lengths, checksums).
-pub fn load_snapshot(snap_dir: &Path) -> Result<TrainerSnapshot> {
+/// magic/version, blob lengths, checksums).  Dispatches on the manifest
+/// version: v3 manifests resolve blobs through `store`, legacy v2
+/// manifests read sibling blob files (no store needed).  The returned
+/// snapshot's `version` is normalized to [`SNAPSHOT_VERSION`].
+pub fn load_snapshot(snap_dir: &Path, store: Option<&Store>) -> Result<TrainerSnapshot> {
     let m = read_manifest(snap_dir, SNAPSHOT_MAGIC)?;
     let version = get_hex(&m, "version")?;
-    if version != SNAPSHOT_VERSION {
-        bail!("snapshot version {version} (this build reads {SNAPSHOT_VERSION})");
+    if version != SNAPSHOT_VERSION && version != LEGACY_SNAPSHOT_VERSION {
+        bail!(
+            "snapshot version {version} (this build reads \
+             {LEGACY_SNAPSHOT_VERSION} and {SNAPSHOT_VERSION})"
+        );
     }
     let blobs = m
         .get("blobs")
         .ok_or_else(|| anyhow!("manifest: missing blob inventory"))?
         .clone();
     let dim = get_hex(&m, "dim")? as usize;
-    let params = bytes_to_f32s(&read_blob(snap_dir, "params.bin", &blobs)?)?;
+    let params = bytes_to_f32s(&fetch_blob(snap_dir, store, version, "params.bin", &blobs)?)?;
     if params.len() != dim {
         bail!("params.bin holds {} f32, manifest says {dim}", params.len());
     }
@@ -390,8 +558,10 @@ pub fn load_snapshot(snap_dir: &Path) -> Result<TrainerSnapshot> {
         .ok_or_else(|| anyhow!("manifest: missing opt_buffers"))?;
     let mut buffers = Vec::with_capacity(n_buffers);
     for i in 0..n_buffers {
-        buffers.push(bytes_to_f32s(&read_blob(
+        buffers.push(bytes_to_f32s(&fetch_blob(
             snap_dir,
+            store,
+            version,
             &format!("opt-{i}.bin"),
             &blobs,
         )?)?);
@@ -408,12 +578,18 @@ pub fn load_snapshot(snap_dir: &Path) -> Result<TrainerSnapshot> {
         })
         .collect::<Result<Vec<u64>>>()?;
     let policy_mean = if m.get("has_policy_mean").and_then(Json::as_bool) == Some(true) {
-        Some(bytes_to_f32s(&read_blob(snap_dir, "policy_mean.bin", &blobs)?)?)
+        Some(bytes_to_f32s(&fetch_blob(
+            snap_dir,
+            store,
+            version,
+            "policy_mean.bin",
+            &blobs,
+        )?)?)
     } else {
         None
     };
     Ok(TrainerSnapshot {
-        version,
+        version: SNAPSHOT_VERSION,
         fingerprint: SnapshotFingerprint {
             label: get_str(&m, "label")?.to_string(),
             seed: get_hex(&m, "seed")?,
@@ -429,8 +605,8 @@ pub fn load_snapshot(snap_dir: &Path) -> Result<TrainerSnapshot> {
         params,
         optimizer: OptimizerState { scalars, buffers },
         policy_mean,
-        loss_curve: bytes_to_curve(&read_blob(snap_dir, "loss_curve.bin", &blobs)?)?,
-        acc_curve: bytes_to_curve(&read_blob(snap_dir, "acc_curve.bin", &blobs)?)?,
+        loss_curve: bytes_to_curve(&fetch_blob(snap_dir, store, version, "loss_curve.bin", &blobs)?)?,
+        acc_curve: bytes_to_curve(&fetch_blob(snap_dir, store, version, "acc_curve.bin", &blobs)?)?,
     })
 }
 
@@ -457,10 +633,12 @@ pub fn list_snapshots(dir: &Path) -> Vec<(u64, PathBuf)> {
 /// Load the newest *valid* snapshot under `dir`: corrupt or half-written
 /// snapshots are skipped (with a note on stderr) and the previous one is
 /// tried — the crash-safety contract with [`write_snapshot`]'s atomic
-/// rename and retention of [`SNAPSHOTS_KEPT`] generations.
-pub fn load_latest(dir: &Path) -> Option<TrainerSnapshot> {
+/// rename and retention of [`SNAPSHOTS_KEPT`] generations.  Legacy v2
+/// snapshot directories load without a store, so a pre-store checkpoint
+/// tree resumes unchanged.
+pub fn load_latest(dir: &Path, store: Option<&Store>) -> Option<TrainerSnapshot> {
     for (_, path) in list_snapshots(dir).iter().rev() {
-        match load_snapshot(path) {
+        match load_snapshot(path, store) {
             Ok(snap) => return Some(snap),
             Err(e) => {
                 eprintln!("snapshot: skipping {} ({e:#})", path.display());
@@ -497,9 +675,11 @@ fn sweep_stale_staging(dir: &Path) {
 // --- completed-trial outcome records --------------------------------------
 
 /// A completed trial's persisted [`TrainOutcome`] plus the identity it
-/// was produced under — enough for a resumed grid to refuse a record
-/// whose configuration no longer matches (seed/budget edits between grid
-/// runs must re-run the trial, not silently reuse stale numbers).
+/// was produced under.  The canonical spec hash is the exact identity a
+/// resumed grid validates against (any change to a hashed field changes
+/// the hash, so staleness detection cannot miss); legacy v2 records
+/// predate spec hashing and carry `None`, falling back to the old
+/// label/seed/budget comparison.
 #[derive(Clone, Debug)]
 pub struct OutcomeRecord {
     /// The finished trial's outcome (always `completed`).
@@ -510,13 +690,92 @@ pub struct OutcomeRecord {
     pub seed: u64,
     /// The run's total oracle budget.
     pub budget: u64,
+    /// Canonical spec hash of the trial that produced this record
+    /// (None on legacy records).
+    pub spec_hash: Option<String>,
 }
 
-/// Atomically persist a finished trial's [`TrainOutcome`] (plus the probe
-/// storage it resolved to and the run's seed/budget identity) as
-/// `dir/completed/`, in the same blob container format as snapshots.  A
-/// resumed grid returns this record instead of re-running the trial.
-pub fn write_outcome(
+/// Build the outcome-record manifest (shared by the store object and the
+/// `completed/` mirror): curve blobs are put into `store` first so the
+/// inventory can reference them by hash.
+fn outcome_manifest(store: &Store, rec: &OutcomeRecord) -> Result<Json> {
+    let mut blobs = BTreeMap::new();
+    put_blob(store, "loss_curve.bin", &curve_to_bytes(&rec.outcome.loss_curve), &mut blobs)?;
+    put_blob(store, "acc_curve.bin", &curve_to_bytes(&rec.outcome.acc_curve), &mut blobs)?;
+    let mut m = BTreeMap::new();
+    m.insert("magic".to_string(), Json::Str(OUTCOME_MAGIC.into()));
+    m.insert("version".to_string(), jhex(SNAPSHOT_VERSION));
+    m.insert("label".to_string(), Json::Str(rec.outcome.label.clone()));
+    m.insert("seed".to_string(), jhex(rec.seed));
+    m.insert("budget".to_string(), jhex(rec.budget));
+    m.insert("steps".to_string(), jhex(rec.outcome.steps));
+    m.insert("oracle_calls".to_string(), jhex(rec.outcome.oracle_calls));
+    m.insert(
+        "final_accuracy_bits".to_string(),
+        jhex(rec.outcome.final_accuracy.to_bits()),
+    );
+    m.insert(
+        "best_accuracy_bits".to_string(),
+        jhex(rec.outcome.best_accuracy.to_bits()),
+    );
+    m.insert(
+        "wall_seconds_bits".to_string(),
+        jhex(rec.outcome.wall_seconds.to_bits()),
+    );
+    m.insert(
+        "probe_storage".to_string(),
+        Json::Str(rec.probe_storage.clone()),
+    );
+    if let Some(h) = &rec.spec_hash {
+        m.insert("spec_hash".to_string(), Json::Str(h.clone()));
+    }
+    m.insert("blobs".to_string(), Json::Obj(blobs));
+    Ok(Json::Obj(m))
+}
+
+/// Persist an outcome record as a canonical-JSON store object and return
+/// its hash — the value `grid.lock.json` pins.  Idempotent: the same
+/// record always hashes to the same object, so re-recording a cached
+/// trial (lock backfill) costs nothing.
+pub fn outcome_to_store(store: &Store, rec: &OutcomeRecord) -> Result<String> {
+    let m = outcome_manifest(store, rec)?;
+    store.put(to_string_canonical(&m).as_bytes())
+}
+
+/// Load an outcome record from its store object (as pinned by
+/// `grid.lock.json`).  The store read re-hashes the manifest object and
+/// every curve blob, so a corrupt entry fails here and the trial re-runs.
+pub fn outcome_from_store(store: &Store, hash: &str) -> Result<OutcomeRecord> {
+    let bytes = store.get(hash)?;
+    let text = std::str::from_utf8(&bytes)
+        .map_err(|_| anyhow!("outcome object {hash}: not UTF-8"))?;
+    let m = parse(text).map_err(|e| anyhow!("outcome object {hash}: {e}"))?;
+    if m.get("magic").and_then(Json::as_str) != Some(OUTCOME_MAGIC) {
+        bail!("outcome object {hash}: bad magic");
+    }
+    outcome_from_manifest(&m, Path::new(""), Some(store))
+}
+
+/// Atomically persist a finished trial's outcome record: the canonical
+/// object goes into `store` (returning its hash for the grid lock) and a
+/// human-readable mirror of the same manifest is committed as
+/// `dir/completed/` — the per-trial record a resumed grid can still find
+/// without the lockfile.
+pub fn write_outcome(dir: &Path, store: &Store, rec: &OutcomeRecord) -> Result<String> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let m = outcome_manifest(store, rec)?;
+    let hash = store.put(to_string_canonical(&m).as_bytes())?;
+    let tmp = stage_dir(dir, "completed")?;
+    commit_dir(&tmp, &dir.join("completed"), m)?;
+    sweep_stale_staging(dir);
+    Ok(hash)
+}
+
+/// The pre-store (v2) outcome writer: curve blobs as sibling files under
+/// `dir/completed/`, no spec hash.  Kept so the migration tests can
+/// fabricate records exactly as an older build would have written them.
+pub fn write_outcome_legacy(
     dir: &Path,
     outcome: &TrainOutcome,
     probe_storage: &str,
@@ -531,7 +790,7 @@ pub fn write_outcome(
     write_blob(&tmp, "acc_curve.bin", &curve_to_bytes(&outcome.acc_curve), &mut blobs)?;
     let mut m = BTreeMap::new();
     m.insert("magic".to_string(), Json::Str(OUTCOME_MAGIC.into()));
-    m.insert("version".to_string(), jhex(SNAPSHOT_VERSION));
+    m.insert("version".to_string(), jhex(LEGACY_SNAPSHOT_VERSION));
     m.insert("label".to_string(), Json::Str(outcome.label.clone()));
     m.insert("seed".to_string(), jhex(seed));
     m.insert("budget".to_string(), jhex(budget));
@@ -556,15 +815,15 @@ pub fn write_outcome(
     Ok(())
 }
 
-/// Load a completed-trial record written by [`write_outcome`], if one
-/// exists and validates.  A corrupt record is reported and treated as
-/// absent (the trial just re-runs).
-pub fn load_outcome(dir: &Path) -> Option<OutcomeRecord> {
+/// Load a completed-trial record written by [`write_outcome`] (or a
+/// legacy v2 record), if one exists and validates.  A corrupt record is
+/// reported and treated as absent (the trial just re-runs).
+pub fn load_outcome(dir: &Path, store: Option<&Store>) -> Option<OutcomeRecord> {
     let cdir = dir.join("completed");
     if !cdir.join("manifest.json").exists() {
         return None;
     }
-    match try_load_outcome(&cdir) {
+    match try_load_outcome(&cdir, store) {
         Ok(v) => Some(v),
         Err(e) => {
             eprintln!("snapshot: ignoring {} ({e:#})", cdir.display());
@@ -573,32 +832,43 @@ pub fn load_outcome(dir: &Path) -> Option<OutcomeRecord> {
     }
 }
 
-fn try_load_outcome(cdir: &Path) -> Result<OutcomeRecord> {
+fn try_load_outcome(cdir: &Path, store: Option<&Store>) -> Result<OutcomeRecord> {
     let m = read_manifest(cdir, OUTCOME_MAGIC)?;
-    let version = get_hex(&m, "version")?;
-    if version != SNAPSHOT_VERSION {
-        bail!("outcome version {version} (this build reads {SNAPSHOT_VERSION})");
+    outcome_from_manifest(&m, cdir, store)
+}
+
+fn outcome_from_manifest(m: &Json, cdir: &Path, store: Option<&Store>) -> Result<OutcomeRecord> {
+    let version = get_hex(m, "version")?;
+    if version != SNAPSHOT_VERSION && version != LEGACY_SNAPSHOT_VERSION {
+        bail!(
+            "outcome version {version} (this build reads \
+             {LEGACY_SNAPSHOT_VERSION} and {SNAPSHOT_VERSION})"
+        );
     }
     let blobs = m
         .get("blobs")
         .ok_or_else(|| anyhow!("manifest: missing blob inventory"))?
         .clone();
     let outcome = TrainOutcome {
-        loss_curve: bytes_to_curve(&read_blob(cdir, "loss_curve.bin", &blobs)?)?,
-        acc_curve: bytes_to_curve(&read_blob(cdir, "acc_curve.bin", &blobs)?)?,
-        final_accuracy: f64::from_bits(get_hex(&m, "final_accuracy_bits")?),
-        best_accuracy: f64::from_bits(get_hex(&m, "best_accuracy_bits")?),
-        steps: get_hex(&m, "steps")?,
-        oracle_calls: get_hex(&m, "oracle_calls")?,
-        wall_seconds: f64::from_bits(get_hex(&m, "wall_seconds_bits")?),
-        label: get_str(&m, "label")?.to_string(),
+        loss_curve: bytes_to_curve(&fetch_blob(cdir, store, version, "loss_curve.bin", &blobs)?)?,
+        acc_curve: bytes_to_curve(&fetch_blob(cdir, store, version, "acc_curve.bin", &blobs)?)?,
+        final_accuracy: f64::from_bits(get_hex(m, "final_accuracy_bits")?),
+        best_accuracy: f64::from_bits(get_hex(m, "best_accuracy_bits")?),
+        steps: get_hex(m, "steps")?,
+        oracle_calls: get_hex(m, "oracle_calls")?,
+        wall_seconds: f64::from_bits(get_hex(m, "wall_seconds_bits")?),
+        label: get_str(m, "label")?.to_string(),
         completed: true,
     };
     Ok(OutcomeRecord {
         outcome,
-        probe_storage: get_str(&m, "probe_storage")?.to_string(),
-        seed: get_hex(&m, "seed")?,
-        budget: get_hex(&m, "budget")?,
+        probe_storage: get_str(m, "probe_storage")?.to_string(),
+        seed: get_hex(m, "seed")?,
+        budget: get_hex(m, "budget")?,
+        spec_hash: m
+            .get("spec_hash")
+            .and_then(Json::as_str)
+            .map(str::to_string),
     })
 }
 
@@ -631,6 +901,10 @@ mod tests {
         dir
     }
 
+    fn store_for(dir: &Path) -> Store {
+        Store::open(dir.join("store"))
+    }
+
     fn sample_snapshot(step: u64) -> TrainerSnapshot {
         TrainerSnapshot {
             version: SNAPSHOT_VERSION,
@@ -646,7 +920,10 @@ mod tests {
             data_cursor: step * 8,
             sampler_step: step,
             best_accuracy: 0.1 + step as f64,
-            params: vec![1.5, -2.25, f32::MIN_POSITIVE, 0.0, 3.0e-38],
+            // step-dependent params (the iterate moves every step), while
+            // the optimizer buffers and policy mean below stay constant —
+            // the realistic dedup shape across retained generations
+            params: vec![1.5 + step as f32, -2.25, f32::MIN_POSITIVE, 0.0, 3.0e-38],
             optimizer: OptimizerState {
                 scalars: vec![step],
                 buffers: vec![vec![0.5; 5], vec![-0.25; 5]],
@@ -688,18 +965,56 @@ mod tests {
     #[test]
     fn snapshot_roundtrip_is_bit_exact() {
         let dir = tmpdir("roundtrip");
+        let store = store_for(&dir);
         let snap = sample_snapshot(42);
-        let path = write_snapshot(&dir, &snap).unwrap();
-        let back = load_snapshot(&path).unwrap();
+        let path = write_snapshot(&dir, &store, &snap).unwrap();
+        let back = load_snapshot(&path, Some(&store)).unwrap();
         assert_snapshots_equal(&snap, &back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_v2_snapshot_still_loads_without_store() {
+        let dir = tmpdir("legacy");
+        let snap = sample_snapshot(42);
+        let path = write_snapshot_legacy(&dir, &snap).unwrap();
+        // sibling blobs on disk, readable with no store at all
+        assert!(path.join("params.bin").exists());
+        let back = load_snapshot(&path, None).unwrap();
+        assert_snapshots_equal(&snap, &back);
+        assert_eq!(back.version, SNAPSHOT_VERSION, "version normalized on load");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_backed_snapshot_requires_store() {
+        let dir = tmpdir("needstore");
+        let store = store_for(&dir);
+        let path = write_snapshot(&dir, &store, &sample_snapshot(3)).unwrap();
+        let err = load_snapshot(&path, None).unwrap_err();
+        assert!(err.to_string().contains("store"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retained_generations_dedup_shared_blobs() {
+        let dir = tmpdir("dedup");
+        let store = store_for(&dir);
+        write_snapshot(&dir, &store, &sample_snapshot(10)).unwrap();
+        write_snapshot(&dir, &store, &sample_snapshot(20)).unwrap();
+        // 6 blobs per snapshot, but opt-0, opt-1, policy_mean and both
+        // curves are identical across the two generations: 2 params +
+        // 2 opt + 1 policy + 2 curves = 7 objects, not 12
+        assert_eq!(store.object_count(), 7, "shared blobs must be stored once");
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn latest_wins_and_retention_prunes() {
         let dir = tmpdir("retention");
+        let store = store_for(&dir);
         for step in [10u64, 20, 30] {
-            write_snapshot(&dir, &sample_snapshot(step)).unwrap();
+            write_snapshot(&dir, &store, &sample_snapshot(step)).unwrap();
         }
         let snaps = list_snapshots(&dir);
         assert_eq!(
@@ -707,21 +1022,32 @@ mod tests {
             vec![20, 30],
             "only the newest {SNAPSHOTS_KEPT} are retained"
         );
-        assert_eq!(load_latest(&dir).unwrap().step, 30);
+        assert_eq!(load_latest(&dir, Some(&store)).unwrap().step, 30);
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn corrupt_newest_falls_back_to_previous() {
         let dir = tmpdir("fallback");
-        write_snapshot(&dir, &sample_snapshot(10)).unwrap();
-        let newest = write_snapshot(&dir, &sample_snapshot(20)).unwrap();
-        // flip a byte in the newest params blob: checksum must catch it
-        let pb = newest.join("params.bin");
+        let store = store_for(&dir);
+        write_snapshot(&dir, &store, &sample_snapshot(10)).unwrap();
+        let newest = write_snapshot(&dir, &store, &sample_snapshot(20)).unwrap();
+        // flip a byte in the newest params *object*: the store's
+        // re-hash-on-read must catch it (params are step-dependent, so
+        // step 10's object is untouched)
+        let m = read_manifest(&newest, SNAPSHOT_MAGIC).unwrap();
+        let hash = m
+            .get("blobs")
+            .and_then(|b| b.get("params.bin"))
+            .and_then(|e| e.get("hash"))
+            .and_then(Json::as_str)
+            .unwrap()
+            .to_string();
+        let pb = store.object_path(&hash);
         let mut bytes = std::fs::read(&pb).unwrap();
         bytes[0] ^= 0xFF;
         std::fs::write(&pb, &bytes).unwrap();
-        let loaded = load_latest(&dir).unwrap();
+        let loaded = load_latest(&dir, Some(&store)).unwrap();
         assert_eq!(loaded.step, 10, "corrupt newest must fall back");
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -729,7 +1055,8 @@ mod tests {
     #[test]
     fn half_written_snapshot_is_invisible() {
         let dir = tmpdir("halfwrite");
-        write_snapshot(&dir, &sample_snapshot(5)).unwrap();
+        let store = store_for(&dir);
+        write_snapshot(&dir, &store, &sample_snapshot(5)).unwrap();
         // a crash mid-write leaves a .tmp-* staging dir with no manifest
         let staged = dir.join(".tmp-step-0000000009-dead");
         std::fs::create_dir_all(&staged).unwrap();
@@ -737,15 +1064,13 @@ mod tests {
         // and possibly a committed dir missing its manifest
         let bare = dir.join("step-0000000099");
         std::fs::create_dir_all(&bare).unwrap();
-        let loaded = load_latest(&dir).unwrap();
+        let loaded = load_latest(&dir, Some(&store)).unwrap();
         assert_eq!(loaded.step, 5);
         std::fs::remove_dir_all(&dir).ok();
     }
 
-    #[test]
-    fn outcome_record_roundtrip() {
-        let dir = tmpdir("outcome");
-        let out = TrainOutcome {
+    fn sample_outcome() -> TrainOutcome {
+        TrainOutcome {
             loss_curve: vec![(6, 1.5), (12, 0.25)],
             acc_curve: vec![(12, 0.625)],
             final_accuracy: 0.625,
@@ -755,22 +1080,82 @@ mod tests {
             wall_seconds: 0.125,
             label: "bestofk5/ldsd+zo_sgd".into(),
             completed: true,
+        }
+    }
+
+    #[test]
+    fn outcome_record_roundtrip() {
+        let dir = tmpdir("outcome");
+        let store = store_for(&dir);
+        let rec = OutcomeRecord {
+            outcome: sample_outcome(),
+            probe_storage: "streamed".into(),
+            seed: 41,
+            budget: 12,
+            spec_hash: Some("ab".repeat(32)),
         };
-        assert!(load_outcome(&dir).is_none());
-        write_outcome(&dir, &out, "streamed", 41, 12).unwrap();
-        let rec = load_outcome(&dir).unwrap();
-        let back = &rec.outcome;
-        assert_eq!(rec.probe_storage, "streamed");
-        assert_eq!(rec.seed, 41);
-        assert_eq!(rec.budget, 12);
-        assert!(back.completed);
-        assert_eq!(back.steps, 2);
-        assert_eq!(back.final_accuracy.to_bits(), out.final_accuracy.to_bits());
-        assert_eq!(back.loss_curve.len(), 2);
-        for ((ca, la), (cb, lb)) in out.loss_curve.iter().zip(back.loss_curve.iter()) {
+        assert!(load_outcome(&dir, Some(&store)).is_none());
+        let hash = write_outcome(&dir, &store, &rec).unwrap();
+        // via the completed/ mirror
+        let back = load_outcome(&dir, Some(&store)).unwrap();
+        assert_eq!(back.probe_storage, "streamed");
+        assert_eq!(back.seed, 41);
+        assert_eq!(back.budget, 12);
+        assert_eq!(back.spec_hash.as_deref(), Some("ab".repeat(32).as_str()));
+        assert!(back.outcome.completed);
+        assert_eq!(back.outcome.steps, 2);
+        assert_eq!(
+            back.outcome.final_accuracy.to_bits(),
+            rec.outcome.final_accuracy.to_bits()
+        );
+        for ((ca, la), (cb, lb)) in rec.outcome.loss_curve.iter().zip(back.outcome.loss_curve.iter())
+        {
             assert_eq!(ca, cb);
             assert_eq!(la.to_bits(), lb.to_bits());
         }
+        // via the store object pinned by the grid lock
+        let from_store = outcome_from_store(&store, &hash).unwrap();
+        assert_eq!(from_store.seed, 41);
+        assert_eq!(
+            from_store.outcome.final_accuracy.to_bits(),
+            rec.outcome.final_accuracy.to_bits()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn outcome_to_store_is_idempotent() {
+        let dir = tmpdir("outcome_idem");
+        let store = store_for(&dir);
+        let rec = OutcomeRecord {
+            outcome: sample_outcome(),
+            probe_storage: "materialized".into(),
+            seed: 7,
+            budget: 12,
+            spec_hash: Some("cd".repeat(32)),
+        };
+        let h1 = outcome_to_store(&store, &rec).unwrap();
+        let n = store.object_count();
+        let h2 = outcome_to_store(&store, &rec).unwrap();
+        assert_eq!(h1, h2, "same record must hash to the same object");
+        assert_eq!(store.object_count(), n, "re-recording adds no objects");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_v2_outcome_still_loads() {
+        let dir = tmpdir("outcome_legacy");
+        let out = sample_outcome();
+        write_outcome_legacy(&dir, &out, "streamed", 41, 12).unwrap();
+        let rec = load_outcome(&dir, None).unwrap();
+        assert_eq!(rec.probe_storage, "streamed");
+        assert_eq!(rec.seed, 41);
+        assert_eq!(rec.budget, 12);
+        assert_eq!(rec.spec_hash, None, "legacy records carry no spec hash");
+        assert_eq!(
+            rec.outcome.final_accuracy.to_bits(),
+            out.final_accuracy.to_bits()
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -789,14 +1174,39 @@ mod tests {
     #[test]
     fn commits_sweep_stale_staging_leftovers() {
         let dir = tmpdir("sweep");
+        let store = store_for(&dir);
         // a previous process died mid-write, leaving manifest-less staging
         let stale = dir.join(".tmp-step-0000000003-12345");
         std::fs::create_dir_all(&stale).unwrap();
         std::fs::write(stale.join("params.bin"), [0u8; 16]).unwrap();
-        write_snapshot(&dir, &sample_snapshot(7)).unwrap();
+        write_snapshot(&dir, &store, &sample_snapshot(7)).unwrap();
         assert!(!stale.exists(), "stale staging must be swept on commit");
-        assert_eq!(load_latest(&dir).unwrap().step, 7);
+        assert_eq!(load_latest(&dir, Some(&store)).unwrap().step, 7);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resolve_store_dir_defaults_and_overrides() {
+        // no checkpoint dir → no store
+        assert_eq!(resolve_store_dir(&CheckpointConfig::default()), None);
+        // default: <dir>/store
+        let ck = CheckpointConfig {
+            dir: Some("/tmp/ck".into()),
+            ..Default::default()
+        };
+        assert_eq!(resolve_store_dir(&ck), Some(PathBuf::from("/tmp/ck/store")));
+        // explicit store_dir wins over the default
+        let ck2 = CheckpointConfig {
+            dir: Some("/tmp/ck".into()),
+            store_dir: Some("/tmp/shared-store".into()),
+            ..Default::default()
+        };
+        assert_eq!(
+            resolve_store_dir(&ck2),
+            Some(PathBuf::from("/tmp/shared-store"))
+        );
+        // (ZO_STORE_DIR beating both is covered in tests/store.rs to keep
+        // env mutation out of the parallel unit-test process)
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Lockfile-style pinning of canonical spec hashes to store objects.
+//!
+//! `grid.lock.json` lives at a grid's checkpoint base and maps each
+//! trial's canonical spec hash (SHA-256 over the canonical-JSON identity
+//! of the resolved spec, [`crate::coordinator`]) to the store hash of its
+//! completed outcome record.  The coordinator's warm-start short-circuit
+//! keys on this map: hash identity replaces the old
+//! sanitized-directory-name + label/seed/budget convention, so stale
+//! detection is exact (any identity field change changes the hash) and a
+//! reordered or partially-overlapping re-run grid still hits.
+//!
+//! `bench.lock.json` lives at the store root and pins bench-baseline
+//! labels to archived report objects ([`crate::bench`]'s regression gate
+//! archives its gated `BENCH_*.json` there).
+//!
+//! Both files are read-modify-written under a process-wide mutex and
+//! committed with the same tmp+rename discipline as snapshot manifests,
+//! so concurrent grid workers in one process never tear an update and a
+//! crash never leaves a half lockfile.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::jsonio::{parse, to_string_pretty, Json};
+
+/// File name of the per-grid lockfile (at the grid's checkpoint base).
+pub const GRID_LOCK_FILE: &str = "grid.lock.json";
+/// File name of the bench-baseline lockfile (at the store root).
+pub const BENCH_LOCK_FILE: &str = "bench.lock.json";
+
+const GRID_LOCK_MAGIC: &str = "zogrid1";
+const BENCH_LOCK_MAGIC: &str = "zobench1";
+const LOCK_VERSION: u64 = 1;
+
+/// Serializes read-modify-write cycles on lockfiles across grid workers.
+static LOCK_IO: Mutex<()> = Mutex::new(());
+
+/// One pinned trial in a [`GridLock`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LockEntry {
+    /// Store hash of the trial's outcome-record object.
+    pub outcome: String,
+    /// The trial's human-readable spec id (diagnostic only — identity is
+    /// the spec hash keying this entry).
+    pub id: String,
+    /// The trial's training label (diagnostic only).
+    pub label: String,
+}
+
+/// In-memory view of a `grid.lock.json`.
+#[derive(Clone, Debug, Default)]
+pub struct GridLock {
+    trials: BTreeMap<String, LockEntry>,
+}
+
+fn lock_path(base: &Path) -> PathBuf {
+    base.join(GRID_LOCK_FILE)
+}
+
+fn commit_json(path: &Path, json: &Json) -> Result<()> {
+    let dir = path.parent().context("lockfile path has no parent")?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let tmp = dir.join(format!(
+        ".tmp-{}-{}",
+        path.file_name().map(|n| n.to_string_lossy()).unwrap_or_default(),
+        std::process::id()
+    ));
+    std::fs::write(&tmp, to_string_pretty(json))
+        .with_context(|| format!("staging {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("committing {}", path.display()))?;
+    Ok(())
+}
+
+impl GridLock {
+    /// Load the lockfile at `base`, tolerating a missing or unreadable
+    /// file (→ empty lock: the grid simply runs cold).
+    pub fn load(base: &Path) -> GridLock {
+        let mut out = GridLock::default();
+        let text = match std::fs::read_to_string(lock_path(base)) {
+            Ok(t) => t,
+            Err(_) => return out,
+        };
+        let json = match parse(&text) {
+            Ok(j) => j,
+            Err(_) => return out,
+        };
+        if json.get("magic").and_then(Json::as_str) != Some(GRID_LOCK_MAGIC) {
+            return out;
+        }
+        if let Some(trials) = json.get("trials").and_then(Json::as_obj) {
+            for (spec_hash, entry) in trials {
+                let (Some(outcome), Some(id), Some(label)) = (
+                    entry.get("outcome").and_then(Json::as_str),
+                    entry.get("id").and_then(Json::as_str),
+                    entry.get("label").and_then(Json::as_str),
+                ) else {
+                    continue;
+                };
+                out.trials.insert(
+                    spec_hash.clone(),
+                    LockEntry {
+                        outcome: outcome.to_string(),
+                        id: id.to_string(),
+                        label: label.to_string(),
+                    },
+                );
+            }
+        }
+        out
+    }
+
+    /// Look up the pinned outcome for a canonical spec hash.
+    pub fn get(&self, spec_hash: &str) -> Option<&LockEntry> {
+        self.trials.get(spec_hash)
+    }
+
+    /// Number of pinned trials.
+    pub fn len(&self) -> usize {
+        self.trials.len()
+    }
+
+    /// True if no trial is pinned.
+    pub fn is_empty(&self) -> bool {
+        self.trials.is_empty()
+    }
+
+    /// Pin `spec_hash → entry` in the lockfile at `base`, preserving all
+    /// other entries (read-modify-write under the process-wide lock).
+    pub fn record(base: &Path, spec_hash: &str, entry: &LockEntry) -> Result<()> {
+        let _guard = LOCK_IO.lock().unwrap_or_else(|e| e.into_inner());
+        let mut lock = GridLock::load(base);
+        lock.trials.insert(spec_hash.to_string(), entry.clone());
+        let mut trials = BTreeMap::new();
+        for (hash, e) in &lock.trials {
+            let mut obj = BTreeMap::new();
+            obj.insert("outcome".to_string(), Json::Str(e.outcome.clone()));
+            obj.insert("id".to_string(), Json::Str(e.id.clone()));
+            obj.insert("label".to_string(), Json::Str(e.label.clone()));
+            trials.insert(hash.clone(), Json::Obj(obj));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("magic".to_string(), Json::Str(GRID_LOCK_MAGIC.to_string()));
+        root.insert("version".to_string(), Json::Num(LOCK_VERSION as f64));
+        root.insert("trials".to_string(), Json::Obj(trials));
+        commit_json(&lock_path(base), &Json::Obj(root))
+    }
+}
+
+/// In-memory view of a `bench.lock.json` (label → archived report hash).
+#[derive(Clone, Debug, Default)]
+pub struct BenchLock {
+    entries: BTreeMap<String, String>,
+}
+
+fn bench_lock_path(store_root: &Path) -> PathBuf {
+    store_root.join(BENCH_LOCK_FILE)
+}
+
+impl BenchLock {
+    /// Load the bench lockfile at the store root, tolerating absence.
+    pub fn load(store_root: &Path) -> BenchLock {
+        let mut out = BenchLock::default();
+        let text = match std::fs::read_to_string(bench_lock_path(store_root)) {
+            Ok(t) => t,
+            Err(_) => return out,
+        };
+        let json = match parse(&text) {
+            Ok(j) => j,
+            Err(_) => return out,
+        };
+        if json.get("magic").and_then(Json::as_str) != Some(BENCH_LOCK_MAGIC) {
+            return out;
+        }
+        if let Some(entries) = json.get("entries").and_then(Json::as_obj) {
+            for (label, hash) in entries {
+                if let Some(h) = hash.as_str() {
+                    out.entries.insert(label.clone(), h.to_string());
+                }
+            }
+        }
+        out
+    }
+
+    /// The archived report hash pinned for `label`, if any.
+    pub fn get(&self, label: &str) -> Option<&str> {
+        self.entries.get(label).map(String::as_str)
+    }
+
+    /// Number of pinned labels.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if no label is pinned.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Pin `label → hash` in the lockfile at `store_root`, preserving all
+    /// other entries.
+    pub fn record(store_root: &Path, label: &str, hash: &str) -> Result<()> {
+        let _guard = LOCK_IO.lock().unwrap_or_else(|e| e.into_inner());
+        let mut lock = BenchLock::load(store_root);
+        lock.entries.insert(label.to_string(), hash.to_string());
+        let mut entries = BTreeMap::new();
+        for (l, h) in &lock.entries {
+            entries.insert(l.clone(), Json::Str(h.clone()));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("magic".to_string(), Json::Str(BENCH_LOCK_MAGIC.to_string()));
+        root.insert("version".to_string(), Json::Num(LOCK_VERSION as f64));
+        root.insert("entries".to_string(), Json::Obj(entries));
+        commit_json(&bench_lock_path(store_root), &Json::Obj(root))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("zo_lock_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn grid_lock_roundtrip_preserves_entries() {
+        let dir = tmpdir("grid");
+        let e1 = LockEntry {
+            outcome: "a".repeat(64),
+            id: "trial-1".into(),
+            label: "ldsd+sgd".into(),
+        };
+        let e2 = LockEntry {
+            outcome: "b".repeat(64),
+            id: "trial-2".into(),
+            label: "gaussian+adam".into(),
+        };
+        GridLock::record(&dir, &"1".repeat(64), &e1).unwrap();
+        GridLock::record(&dir, &"2".repeat(64), &e2).unwrap();
+        let lock = GridLock::load(&dir);
+        assert_eq!(lock.len(), 2);
+        assert_eq!(lock.get(&"1".repeat(64)), Some(&e1));
+        assert_eq!(lock.get(&"2".repeat(64)), Some(&e2));
+        assert_eq!(lock.get(&"3".repeat(64)), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grid_lock_record_overwrites_same_hash() {
+        let dir = tmpdir("grid_ow");
+        let old = LockEntry { outcome: "a".repeat(64), id: "t".into(), label: "l".into() };
+        let new = LockEntry { outcome: "c".repeat(64), id: "t".into(), label: "l".into() };
+        GridLock::record(&dir, &"1".repeat(64), &old).unwrap();
+        GridLock::record(&dir, &"1".repeat(64), &new).unwrap();
+        let lock = GridLock::load(&dir);
+        assert_eq!(lock.len(), 1);
+        assert_eq!(lock.get(&"1".repeat(64)), Some(&new));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_or_corrupt_lock_loads_empty() {
+        let dir = tmpdir("grid_missing");
+        assert!(GridLock::load(&dir).is_empty());
+        std::fs::write(dir.join(GRID_LOCK_FILE), "not json {").unwrap();
+        assert!(GridLock::load(&dir).is_empty());
+        std::fs::write(dir.join(GRID_LOCK_FILE), "{\"magic\":\"wrong\"}").unwrap();
+        assert!(GridLock::load(&dir).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_lock_roundtrip() {
+        let dir = tmpdir("bench");
+        BenchLock::record(&dir, "main", &"d".repeat(64)).unwrap();
+        BenchLock::record(&dir, "pr", &"e".repeat(64)).unwrap();
+        let lock = BenchLock::load(&dir);
+        assert_eq!(lock.len(), 2);
+        assert_eq!(lock.get("main"), Some("d".repeat(64).as_str()));
+        assert_eq!(lock.get("pr"), Some("e".repeat(64).as_str()));
+        assert!(lock.get("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,406 @@
+//! Content-addressed artifact store (DESIGN.md §16).
+//!
+//! Every persisted artifact — snapshot blobs, completed-trial outcome
+//! records, archived bench baselines, materialized corpora — lives in one
+//! pacm-style object store: a blob is written once under
+//! `objects/<hh>/<sha256-hex>` (the first two hex chars shard the
+//! directory) and referenced everywhere else *by hash*.  Identical
+//! content is therefore stored exactly once: retained `step-<N>`
+//! snapshot generations that share an unchanged parameter vector, LDSD
+//! policy mean, or curve prefix all point at the same object, and a
+//! re-run grid's outcome records dedup against the previous run's.
+//!
+//! * **Writes are atomic**: object bytes land in a `.tmp-<hash>-<pid>`
+//!   sibling that is `rename`d into place; a crash mid-write leaves only
+//!   ignorable staging debris, never a half object.  An object that
+//!   already exists is never rewritten (content addressing makes the
+//!   write idempotent).
+//! * **Reads re-hash**: [`Store::get`] recomputes the digest and refuses
+//!   an object whose bytes no longer match its name, so corruption is
+//!   detected at the first read, not propagated into a resumed run.
+//! * **GC is refcount-free mark-and-sweep** ([`Store::gc`]): the roots
+//!   are manifests — `manifest.json` files under the caller's root
+//!   directories plus lockfiles (`grid.lock.json`, `bench.lock.json`,
+//!   `corpora.json`) — and marking follows hash references *through*
+//!   stored objects (an outcome record referenced by the grid lock keeps
+//!   its curve blobs live).  Everything unmarked is swept.  Pruning a
+//!   snapshot directory or dropping a lock entry is all it takes to
+//!   unroot its objects.
+//! * **[`Store::verify`]** re-hashes every object and reports mismatches
+//!   — the `zo-ldsd store verify` CLI pass.
+//!
+//! The store location resolves as `ZO_STORE_DIR` (environment, beats
+//! config) → [`crate::snapshot::CheckpointConfig::store_dir`] →
+//! `<checkpoint-dir>/store` (the default, so a grid's trials share one
+//! store under the grid base and dedup across trials).
+
+mod lock;
+mod sha256;
+
+pub use lock::{BenchLock, GridLock, LockEntry, BENCH_LOCK_FILE, GRID_LOCK_FILE};
+pub use sha256::{sha256, sha256_hex};
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio::{parse, Json};
+
+/// A content-addressed blob store rooted at one directory.
+///
+/// Opening is cheap (no I/O); directories are created lazily on the
+/// first write, so read paths against a store that was never written
+/// (e.g. a legacy checkpoint tree) touch nothing.
+#[derive(Clone, Debug)]
+pub struct Store {
+    root: PathBuf,
+}
+
+/// What [`Store::verify`] found.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    /// Objects whose bytes re-hashed to their name.
+    pub ok: usize,
+    /// Object hashes whose bytes did NOT re-hash to their name.
+    pub corrupt: Vec<String>,
+}
+
+/// What [`Store::gc`] did.
+#[derive(Clone, Debug, Default)]
+pub struct GcReport {
+    /// Objects reachable from the roots (kept).
+    pub live: usize,
+    /// Unreachable objects deleted.
+    pub swept: usize,
+    /// Total bytes reclaimed.
+    pub swept_bytes: u64,
+}
+
+fn is_hex64(s: &str) -> bool {
+    s.len() == 64 && s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+}
+
+impl Store {
+    /// Open (lazily) the store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Self {
+        Self { root: root.into() }
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Where the object named `hash` lives (whether or not it exists).
+    pub fn object_path(&self, hash: &str) -> PathBuf {
+        let shard = if hash.len() >= 2 { &hash[..2] } else { hash };
+        self.root.join("objects").join(shard).join(hash)
+    }
+
+    /// True if the object named `hash` is present.
+    pub fn contains(&self, hash: &str) -> bool {
+        self.object_path(hash).is_file()
+    }
+
+    /// Store `bytes` under their content hash and return it.  Idempotent:
+    /// an object that already exists is left untouched (dedup), otherwise
+    /// the bytes are staged in a `.tmp-*` sibling and renamed into place
+    /// (atomic commit — readers never see a partial object).
+    pub fn put(&self, bytes: &[u8]) -> Result<String> {
+        let hash = sha256_hex(bytes);
+        let path = self.object_path(&hash);
+        if path.is_file() {
+            return Ok(hash);
+        }
+        let dir = path.parent().expect("object path has a shard dir");
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let tmp = dir.join(format!(".tmp-{hash}-{}", std::process::id()));
+        std::fs::write(&tmp, bytes)
+            .with_context(|| format!("staging {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing {}", path.display()))?;
+        Ok(hash)
+    }
+
+    /// Read the object named `hash`, re-hashing the bytes to detect
+    /// corruption: a flipped bit anywhere in the object fails loudly here
+    /// rather than silently resuming a training run from bad state.
+    pub fn get(&self, hash: &str) -> Result<Vec<u8>> {
+        let path = self.object_path(hash);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading object {}", path.display()))?;
+        let got = sha256_hex(&bytes);
+        if got != hash {
+            bail!(
+                "object {}: content hashes to {got} (corrupt object)",
+                path.display()
+            );
+        }
+        Ok(bytes)
+    }
+
+    /// Every object hash in the store, sorted.  Staging debris and
+    /// foreign files are ignored.
+    pub fn objects(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let objects = self.root.join("objects");
+        let shards = match std::fs::read_dir(&objects) {
+            Ok(rd) => rd,
+            Err(_) => return out,
+        };
+        for shard in shards.flatten() {
+            if let Ok(rd) = std::fs::read_dir(shard.path()) {
+                for entry in rd.flatten() {
+                    let name = entry.file_name().to_string_lossy().into_owned();
+                    if is_hex64(&name) {
+                        out.push(name);
+                    }
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Number of objects in the store (the dedup-assertion counter).
+    pub fn object_count(&self) -> usize {
+        self.objects().len()
+    }
+
+    /// Re-hash every object against its name.
+    pub fn verify(&self) -> VerifyReport {
+        let mut report = VerifyReport::default();
+        for hash in self.objects() {
+            match self.get(&hash) {
+                Ok(_) => report.ok += 1,
+                Err(_) => report.corrupt.push(hash),
+            }
+        }
+        report
+    }
+
+    /// Mark-and-sweep garbage collection.  Marking starts from every
+    /// `*.json` file under the given root directories (recursively;
+    /// snapshot/outcome `manifest.json`s, `grid.lock.json`,
+    /// report files) plus the store root's own lockfiles
+    /// (`bench.lock.json`, `corpora.json`), collects every 64-hex string
+    /// that names a present object, and follows references *through*
+    /// stored JSON objects to a fixpoint — an outcome record pinned by
+    /// the grid lock keeps its curve blobs, a corpus manifest keeps its
+    /// token blobs.  Unmarked objects are deleted; `.tmp-*` staging
+    /// debris in the object tree is swept too.
+    pub fn gc(&self, roots: &[PathBuf]) -> Result<GcReport> {
+        let mut pending: Vec<String> = Vec::new();
+        let objects_dir = self.root.join("objects");
+        // the store root's own lockfiles are always roots, so corpora and
+        // archived bench baselines survive even when the caller only
+        // passes checkpoint trees
+        let mut scan_roots: Vec<PathBuf> = vec![self.root.clone()];
+        scan_roots.extend(roots.iter().cloned());
+        for root in &scan_roots {
+            collect_root_refs(root, &objects_dir, self, &mut pending);
+        }
+        // transitive closure through stored JSON objects
+        let mut marked: BTreeSet<String> = BTreeSet::new();
+        while let Some(hash) = pending.pop() {
+            if !marked.insert(hash.clone()) {
+                continue;
+            }
+            if let Ok(bytes) = self.get(&hash) {
+                if let Ok(text) = std::str::from_utf8(&bytes) {
+                    if let Ok(json) = parse(text) {
+                        collect_json_refs(&json, self, &mut pending);
+                    }
+                }
+            }
+        }
+        // sweep
+        let mut report = GcReport { live: marked.len(), ..Default::default() };
+        if let Ok(shards) = std::fs::read_dir(&objects_dir) {
+            for shard in shards.flatten() {
+                let mut emptied = true;
+                if let Ok(rd) = std::fs::read_dir(shard.path()) {
+                    for entry in rd.flatten() {
+                        let name = entry.file_name().to_string_lossy().into_owned();
+                        let stale_tmp = name.starts_with(".tmp-");
+                        if (is_hex64(&name) && !marked.contains(&name)) || stale_tmp {
+                            let len = entry.metadata().map(|m| m.len()).unwrap_or(0);
+                            if std::fs::remove_file(entry.path()).is_ok() && !stale_tmp {
+                                report.swept += 1;
+                                report.swept_bytes += len;
+                            }
+                        } else {
+                            emptied = false;
+                        }
+                    }
+                }
+                if emptied {
+                    std::fs::remove_dir(shard.path()).ok();
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// Recursively scan `root` for `*.json` files (skipping the store's
+/// object tree itself) and collect candidate object references.
+fn collect_root_refs(root: &Path, objects_dir: &Path, store: &Store, out: &mut Vec<String>) {
+    if root == objects_dir {
+        return;
+    }
+    if root.is_file() {
+        if root.extension().is_some_and(|e| e == "json") {
+            if let Ok(text) = std::fs::read_to_string(root) {
+                if let Ok(json) = parse(&text) {
+                    collect_json_refs(&json, store, out);
+                }
+            }
+        }
+        return;
+    }
+    if let Ok(rd) = std::fs::read_dir(root) {
+        for entry in rd.flatten() {
+            collect_root_refs(&entry.path(), objects_dir, store, out);
+        }
+    }
+}
+
+/// Collect every string in `json` that is 64 hex chars *and* names a
+/// present object.  Conservative by construction: a stray hex string can
+/// only over-retain, never free a live blob.
+fn collect_json_refs(json: &Json, store: &Store, out: &mut Vec<String>) {
+    match json {
+        Json::Str(s) => {
+            if is_hex64(s) && store.contains(s) {
+                out.push(s.clone());
+            }
+        }
+        Json::Arr(items) => {
+            for item in items {
+                collect_json_refs(item, store, out);
+            }
+        }
+        Json::Obj(map) => {
+            for val in map.values() {
+                collect_json_refs(val, store, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("zo_store_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_dedup() {
+        let dir = tmpdir("roundtrip");
+        let store = Store::open(dir.join("store"));
+        let h1 = store.put(b"hello").unwrap();
+        let h2 = store.put(b"hello").unwrap();
+        assert_eq!(h1, h2, "identical content must share one object");
+        assert_eq!(store.object_count(), 1);
+        assert_eq!(store.get(&h1).unwrap(), b"hello");
+        let h3 = store.put(b"world").unwrap();
+        assert_ne!(h1, h3);
+        assert_eq!(store.object_count(), 2);
+        assert_eq!(store.objects().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn get_detects_corruption() {
+        let dir = tmpdir("corrupt");
+        let store = Store::open(dir.join("store"));
+        let h = store.put(b"precious bits").unwrap();
+        let path = store.object_path(&h);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = store.get(&h).unwrap_err();
+        assert!(err.to_string().contains("corrupt"), "{err}");
+        let report = store.verify();
+        assert_eq!(report.ok, 0);
+        assert_eq!(report.corrupt, vec![h]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn verify_green_on_intact_store() {
+        let dir = tmpdir("verify");
+        let store = Store::open(dir.join("store"));
+        for i in 0..5u8 {
+            store.put(&[i; 9]).unwrap();
+        }
+        let report = store.verify();
+        assert_eq!(report.ok, 5);
+        assert!(report.corrupt.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_keeps_rooted_sweeps_unrooted() {
+        let dir = tmpdir("gc");
+        let store = Store::open(dir.join("store"));
+        let live = store.put(b"live blob").unwrap();
+        let nested = store.put(b"nested blob").unwrap();
+        // a stored JSON object referencing `nested` — reachable through
+        // one dereference, the outcome-record shape
+        let manifest = format!("{{\"blobs\":{{\"curve\":{{\"hash\":\"{nested}\"}}}}}}");
+        let mhash = store.put(manifest.as_bytes()).unwrap();
+        let dead = store.put(b"dead blob").unwrap();
+        // root: a manifest.json on disk referencing `live` + `mhash`
+        let rootdir = dir.join("trial");
+        std::fs::create_dir_all(&rootdir).unwrap();
+        std::fs::write(
+            rootdir.join("manifest.json"),
+            format!("{{\"a\":\"{live}\",\"outcome\":\"{mhash}\"}}"),
+        )
+        .unwrap();
+        let report = store.gc(&[dir.clone()]).unwrap();
+        assert_eq!(report.live, 3);
+        assert_eq!(report.swept, 1);
+        assert!(store.contains(&live));
+        assert!(store.contains(&mhash));
+        assert!(store.contains(&nested), "transitively referenced blob must survive");
+        assert!(!store.contains(&dead));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_sweeps_staging_debris() {
+        let dir = tmpdir("gc_tmp");
+        let store = Store::open(dir.join("store"));
+        let h = store.put(b"keep me").unwrap();
+        let shard = store.object_path(&h).parent().unwrap().to_path_buf();
+        std::fs::write(shard.join(".tmp-deadbeef-123"), b"half-written").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!("{{\"k\":\"{h}\"}}"),
+        )
+        .unwrap();
+        store.gc(&[dir.clone()]).unwrap();
+        assert!(store.contains(&h));
+        assert!(!shard.join(".tmp-deadbeef-123").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hex64_filter() {
+        assert!(is_hex64(&"a".repeat(64)));
+        assert!(!is_hex64(&"A".repeat(64)));
+        assert!(!is_hex64(&"a".repeat(63)));
+        assert!(!is_hex64(&"g".repeat(64)));
+    }
+}

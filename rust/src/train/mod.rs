@@ -741,11 +741,16 @@ impl<O: Oracle> Trainer<O> {
     }
 
     /// Write a snapshot of the current step boundary into the configured
-    /// checkpoint directory (no-op when none is configured).
+    /// checkpoint directory (no-op when none is configured).  Blobs land
+    /// in the resolved content-addressed store
+    /// ([`crate::snapshot::resolve_store_dir`]), the step directory only
+    /// holds the manifest.
     fn write_snapshot_now(&self) -> Result<()> {
         if let Some(dir) = &self.cfg.checkpoint.dir {
+            let store = crate::snapshot::open_store(&self.cfg.checkpoint)
+                .expect("checkpoint dir set implies a resolvable store");
             let snap = self.snapshot();
-            crate::snapshot::write_snapshot(std::path::Path::new(dir), &snap)?;
+            crate::snapshot::write_snapshot(std::path::Path::new(dir), &store, &snap)?;
         }
         Ok(())
     }
@@ -808,8 +813,11 @@ impl<O: Oracle> Trainer<O> {
         let t0 = std::time::Instant::now();
         if self.cfg.checkpoint.resume && self.progress.step == 0 {
             if let Some(dir) = self.cfg.checkpoint.dir.clone() {
+                // legacy (pre-store) snapshot trees load fine through the
+                // same call: v2 manifests never touch the store
+                let store = crate::snapshot::open_store(&self.cfg.checkpoint);
                 if let Some(snap) =
-                    crate::snapshot::load_latest(std::path::Path::new(&dir))
+                    crate::snapshot::load_latest(std::path::Path::new(&dir), store.as_ref())
                 {
                     self.restore(&snap)?;
                 }
@@ -1211,6 +1219,7 @@ mod tests {
             every: 3,
             resume,
             max_run_steps,
+            store_dir: None,
         };
         let mut first = Trainer::new(
             TrainConfig { checkpoint: ck(false, 11), ..base() },
@@ -1220,7 +1229,8 @@ mod tests {
         .unwrap();
         let partial = first.run(None).unwrap();
         assert!(!partial.completed);
-        assert!(crate::snapshot::load_latest(&dir).is_some());
+        let store = crate::store::Store::open(dir.join("store"));
+        assert!(crate::snapshot::load_latest(&dir, Some(&store)).is_some());
 
         let mut second = Trainer::new(
             TrainConfig { checkpoint: ck(true, 0), ..base() },

@@ -141,6 +141,7 @@ fn run_interrupted(case: &ResumeCase, dir: &Path) -> (Vec<(u64, f64)>, Vec<f32>,
         every: 2,
         resume: false,
         max_run_steps: case.interrupt,
+        store_dir: None,
     };
     let mut first =
         Trainer::with_exec(cfg_for(case, ck1), quad(case.d), mini_corpus(), ctx.clone())
@@ -156,6 +157,7 @@ fn run_interrupted(case: &ResumeCase, dir: &Path) -> (Vec<(u64, f64)>, Vec<f32>,
         every: 2,
         resume: true,
         max_run_steps: 0,
+        store_dir: None,
     };
     let mut second =
         Trainer::with_exec(cfg_for(case, ck2), quad(case.d), mini_corpus(), ctx).unwrap();
@@ -261,6 +263,7 @@ fn double_interruption_still_bitwise_identical() {
         every: 1,
         resume,
         max_run_steps,
+        store_dir: None,
     };
     let mut s1 =
         Trainer::with_exec(cfg_for(&case, ck(false, 3)), quad(case.d), mini_corpus(), ctx())
@@ -283,8 +286,10 @@ fn double_interruption_still_bitwise_identical() {
 }
 
 /// Snapshot container round-trip at the trainer level + on-disk format
-/// goldens: directory naming, manifest magic/fields, blob inventory.  The
-/// format is versioned; these goldens are the compatibility contract.
+/// goldens: directory naming, manifest magic/fields, the content-addressed
+/// blob inventory (v3: manifests name store objects by sha-256, the step
+/// directory holds no sibling blob files).  The format is versioned; these
+/// goldens are the compatibility contract.
 #[test]
 fn snapshot_format_roundtrip_and_golden() {
     let case = ResumeCase {
@@ -304,6 +309,7 @@ fn snapshot_format_roundtrip_and_golden() {
         every: 2,
         resume: false,
         max_run_steps: case.interrupt,
+        store_dir: None,
     };
     let mut t = Trainer::with_exec(
         cfg_for(&case, ck),
@@ -327,6 +333,11 @@ fn snapshot_format_roundtrip_and_golden() {
         manifest.get("magic").and_then(zo_ldsd::jsonio::Json::as_str),
         Some("zosnap1")
     );
+    assert_eq!(
+        manifest.get("version").and_then(zo_ldsd::jsonio::Json::as_str),
+        Some("0000000000000003"),
+        "new snapshots must be written in the store-backed v3 container"
+    );
     for field in [
         "version", "label", "seed", "budget", "dim", "step",
         "oracle_calls_used", "next_eval", "data_cursor", "sampler_step",
@@ -334,17 +345,37 @@ fn snapshot_format_roundtrip_and_golden() {
     ] {
         assert!(manifest.get(field).is_some(), "manifest missing '{field}'");
     }
+    // v3: blobs are content-addressed store objects, named by sha-256 —
+    // the step directory holds ONLY the manifest
+    let store = snapshot::open_store(&CheckpointConfig {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        ..Default::default()
+    })
+    .unwrap();
     let blobs = manifest.get("blobs").unwrap();
     for blob in ["params.bin", "opt-0.bin", "opt-1.bin", "policy_mean.bin",
                  "loss_curve.bin", "acc_curve.bin"] {
-        assert!(blobs.get(blob).is_some(), "inventory missing '{blob}'");
-        assert!(last_path.join(blob).exists(), "blob file missing '{blob}'");
+        let hash = blobs
+            .get(blob)
+            .and_then(zo_ldsd::jsonio::Json::as_str)
+            .unwrap_or_else(|| panic!("inventory missing '{blob}'"));
+        assert_eq!(hash.len(), 64, "'{blob}' must name a sha-256 object: {hash}");
+        assert!(store.contains(hash), "store object missing for '{blob}'");
+        assert!(
+            !last_path.join(blob).exists(),
+            "v3 step dirs must not carry sibling blob files ('{blob}')"
+        );
     }
+    let entries: Vec<_> = std::fs::read_dir(&last_path)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert_eq!(entries, vec!["manifest.json"], "{entries:?}");
     // no nulls anywhere in the manifest (non-finite leak guard)
     assert!(!text.contains("null"), "{text}");
 
     // round-trip: load == what the trainer would snapshot now
-    let loaded = snapshot::load_latest(&dir).unwrap();
+    let loaded = snapshot::load_latest(&dir, Some(&store)).unwrap();
     let live = t.snapshot();
     assert_eq!(loaded.step, live.step);
     assert_eq!(loaded.oracle_calls_used, live.oracle_calls_used);
@@ -364,6 +395,80 @@ fn snapshot_format_roundtrip_and_golden() {
         assert_eq!(a.to_bits(), b.to_bits());
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Migration: a checkpoint written by a pre-store build (the v2 container:
+/// blobs as raw sibling files, no object store) must resume bit-for-bit on
+/// the current build.  The legacy checkpoint is fabricated with the kept
+/// v2 writer from a mid-run snapshot, so it is exactly what an older build
+/// would have left on disk.
+#[test]
+fn legacy_v2_checkpoint_resumes_bitwise() {
+    let case = ResumeCase {
+        d: 95,
+        k: 4,
+        threads: 2,
+        shard_len: 32,
+        seed: 0xBEEF,
+        interrupt: 4,
+        steps: 11,
+        optimizer: "zo_adamm",
+        storage: ProbeStorage::Streamed,
+    };
+    let (curve_full, params_full, steps_full) =
+        run_to_end(&case, CheckpointConfig::default());
+
+    // session 1 on the CURRENT build, preempted mid-run: its halt
+    // snapshot is the state an old build would also have reached
+    let v3_dir = tmpdir("legacy_src");
+    let ck1 = CheckpointConfig {
+        dir: Some(v3_dir.to_string_lossy().into_owned()),
+        every: 0,
+        resume: false,
+        max_run_steps: case.interrupt,
+        store_dir: None,
+    };
+    let ctx = || ExecContext::new(case.threads).with_shard_len(case.shard_len);
+    let mut first =
+        Trainer::with_exec(cfg_for(&case, ck1.clone()), quad(case.d), mini_corpus(), ctx())
+            .unwrap();
+    assert!(!first.run(None).unwrap().completed);
+    let store = snapshot::open_store(&ck1).unwrap();
+    let snap = snapshot::load_latest(&v3_dir, Some(&store)).unwrap();
+
+    // re-materialize that state as a v2 checkpoint: sibling blob files,
+    // no store directory anywhere
+    let v2_dir = tmpdir("legacy_dst");
+    let written = snapshot::write_snapshot_legacy(&v2_dir, &snap).unwrap();
+    let text = std::fs::read_to_string(written.join("manifest.json")).unwrap();
+    let manifest = zo_ldsd::jsonio::parse(&text).unwrap();
+    assert_eq!(
+        manifest.get("version").and_then(zo_ldsd::jsonio::Json::as_str),
+        Some("0000000000000002")
+    );
+    assert!(written.join("params.bin").exists(), "v2 carries sibling blobs");
+
+    // session 2 resumes from the fabricated legacy checkpoint
+    let ck2 = CheckpointConfig {
+        dir: Some(v2_dir.to_string_lossy().into_owned()),
+        every: 0,
+        resume: true,
+        max_run_steps: 0,
+        store_dir: None,
+    };
+    let mut second =
+        Trainer::with_exec(cfg_for(&case, ck2), quad(case.d), mini_corpus(), ctx())
+            .unwrap();
+    let out = second.run(None).unwrap();
+    assert!(out.completed);
+    assert_eq!(out.steps, steps_full);
+    assert!(
+        curves_bitwise_equal(&curve_full, &out.loss_curve),
+        "legacy resume diverged from the uninterrupted trajectory"
+    );
+    assert!(params_bitwise_equal(&params_full, &t_params(&second)));
+    std::fs::remove_dir_all(&v3_dir).ok();
+    std::fs::remove_dir_all(&v2_dir).ok();
 }
 
 /// Resuming with a mismatched configuration must fail loudly, not walk a
@@ -387,6 +492,7 @@ fn resume_under_different_config_errors() {
         every: 1,
         resume,
         max_run_steps: if resume { 0 } else { 2 },
+        store_dir: None,
     };
     let mut first = Trainer::with_exec(
         cfg_for(&case, ck(false)),

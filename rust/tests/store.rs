@@ -1,0 +1,362 @@
+//! The content-addressed persistence layer end to end (DESIGN.md §16):
+//! corrupt objects fail loudly on read and verify, mark-and-sweep GC
+//! keeps everything reachable from manifests while sweeping junk, a
+//! re-run grid warm-starts by canonical spec hash with zero training
+//! steps and byte-identical outcomes, an edited config misses the cache
+//! exactly, and pre-store (v2) trial records migrate: they warm-start
+//! through the legacy field comparison and are backfilled into
+//! `grid.lock.json` as store objects.
+
+use std::path::{Path, PathBuf};
+
+use zo_ldsd::config::TrainMode;
+use zo_ldsd::coordinator::{
+    run_grid, run_local_trial, spec_hash, MlpTrial, OracleSpec, TrialResult, TrialSpec,
+};
+use zo_ldsd::data::CorpusSpec;
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::model::Activation;
+use zo_ldsd::optim::OptimizerState;
+use zo_ldsd::snapshot::{self, CheckpointConfig, SnapshotFingerprint, TrainerSnapshot};
+use zo_ldsd::store::{GridLock, Store};
+use zo_ldsd::train::{TrainConfig, TrainOutcome};
+
+const BUDGET: u64 = 120;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("zo_store_it_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// A tiny MLP trial checkpointing under `base` with resume on — the
+/// cheapest real training run the coordinator schedules.
+fn grid_spec(id: &str, seed: u64, lr: f32, base: &Path) -> TrialSpec {
+    let mut cfg = TrainConfig::algorithm2("zo_sgd_plain", lr, BUDGET);
+    cfg.eval_every = 0;
+    cfg.seed = seed;
+    TrialSpec {
+        id: id.into(),
+        model: "mlp".into(),
+        mode: TrainMode::Ft,
+        config: cfg,
+        eval_batches: 1,
+        probe_dispatch: None,
+        probe_storage: None,
+        param_store: None,
+        gemm: None,
+        checkpoint: Some(CheckpointConfig {
+            dir: Some(base.to_string_lossy().into_owned()),
+            every: 0,
+            resume: true,
+            max_run_steps: 0,
+            store_dir: None,
+        }),
+        oracle: OracleSpec::Mlp(MlpTrial {
+            hidden: vec![8],
+            activation: Activation::Tanh,
+            in_dim: 16,
+            corpus: CorpusSpec::default_mini(),
+            init_seed: 1,
+            eval_batch: 8,
+        }),
+    }
+}
+
+/// The hash the coordinator keys this spec under: overrides resolved the
+/// same way `run_trial` resolves them before hashing.
+fn resolved_hash(spec: &TrialSpec) -> String {
+    let mut cfg = spec.config.clone();
+    cfg.eval_batches = spec.eval_batches;
+    spec_hash(spec, &cfg)
+}
+
+fn outcomes_bitwise_equal(a: &TrainOutcome, b: &TrainOutcome) {
+    assert_eq!(a.label, b.label);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.oracle_calls, b.oracle_calls);
+    assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+    assert_eq!(a.best_accuracy.to_bits(), b.best_accuracy.to_bits());
+    assert_eq!(a.loss_curve.len(), b.loss_curve.len());
+    for ((ca, la), (cb, lb)) in a.loss_curve.iter().zip(b.loss_curve.iter()) {
+        assert_eq!(ca, cb);
+        assert_eq!(la.to_bits(), lb.to_bits());
+    }
+    assert_eq!(a.acc_curve.len(), b.acc_curve.len());
+    for ((ca, la), (cb, lb)) in a.acc_curve.iter().zip(b.acc_curve.iter()) {
+        assert_eq!(ca, cb);
+        assert_eq!(la.to_bits(), lb.to_bits());
+    }
+}
+
+/// A bit-flipped object must fail its re-hash on `get` and be reported by
+/// `verify`, while intact objects keep reading fine.
+#[test]
+fn corrupt_object_detected_on_read_and_verify() {
+    let root = tmp("corrupt");
+    let store = Store::open(&root);
+    let good = store.put(b"alpha").unwrap();
+    let bad = store.put(b"beta-object").unwrap();
+
+    let path = store.object_path(&bad);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[0] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    assert_eq!(store.get(&good).unwrap(), b"alpha");
+    assert!(store.get(&bad).is_err(), "corrupt object must not read back");
+    let report = store.verify();
+    assert_eq!(report.ok, 1);
+    assert_eq!(report.corrupt, vec![bad]);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// GC over randomized snapshot/outcome graphs: everything reachable from
+/// the retained manifests survives (and still loads bitwise), junk
+/// objects are swept, and a second GC finds nothing left to do.
+#[test]
+fn gc_sweeps_junk_keeps_reachable_snapshot_graphs() {
+    let mut rng = zo_ldsd::rng::Rng::new(0x5EED);
+    for round in 0..3 {
+        let base = tmp(&format!("gc{round}"));
+        let store = Store::open(base.join("store"));
+        let tdir = base.join("trial");
+        let d = 8 + rng.below(64) as usize;
+        let gens = 3 + rng.below(3);
+
+        let mut snap = TrainerSnapshot {
+            version: snapshot::SNAPSHOT_VERSION,
+            fingerprint: SnapshotFingerprint {
+                label: "bestofk5/ldsd+zo_sgd".into(),
+                seed: rng.next_u64(),
+                budget: 6000,
+                dim: d,
+            },
+            step: 0,
+            oracle_calls_used: 0,
+            next_eval: 1200,
+            data_cursor: 0,
+            sampler_step: 0,
+            best_accuracy: 0.25,
+            params: vec![0.0f32; d],
+            optimizer: OptimizerState {
+                scalars: vec![0],
+                // constant across generations: the blob every retained
+                // manifest shares (the dedup edge GC must not break)
+                buffers: vec![vec![0.5f32; d]],
+            },
+            policy_mean: Some(vec![0.125f32; d]),
+            loss_curve: vec![(6, 0.75)],
+            acc_curve: vec![(12, 0.5)],
+        };
+        for step in 1..=gens {
+            snap.step = step;
+            snap.oracle_calls_used = step * 6;
+            rng.fill_normal(&mut snap.params);
+            snapshot::write_snapshot(&tdir, &store, &snap).unwrap();
+        }
+        let rec = snapshot::OutcomeRecord {
+            outcome: TrainOutcome {
+                loss_curve: vec![(6, 0.9), (12, 0.7)],
+                acc_curve: vec![(12, 0.6)],
+                final_accuracy: 0.6,
+                best_accuracy: 0.6,
+                steps: gens,
+                oracle_calls: gens * 6,
+                wall_seconds: 0.0,
+                label: "bestofk5/ldsd+zo_sgd".into(),
+                completed: true,
+            },
+            probe_storage: "streamed".into(),
+            seed: snap.fingerprint.seed,
+            budget: 6000,
+            spec_hash: Some("ab".repeat(32)),
+        };
+        snapshot::write_outcome(&tdir, &store, &rec).unwrap();
+
+        // junk: objects nothing references (a crashed run's leftovers)
+        let mut junk = Vec::new();
+        for j in 0u8..3 {
+            let mut noise = vec![0.0f32; 16];
+            rng.fill_normal(&mut noise);
+            let bytes: Vec<u8> = noise.iter().flat_map(|v| v.to_le_bytes()).chain([j]).collect();
+            junk.push(store.put(&bytes).unwrap());
+        }
+
+        let before = store.object_count();
+        let report = store.gc(&[base.clone()]).unwrap();
+        assert!(
+            report.swept >= junk.len(),
+            "round {round}: swept {} < {} junk objects",
+            report.swept,
+            junk.len()
+        );
+        assert_eq!(report.live + report.swept, before);
+        for h in &junk {
+            assert!(!store.contains(h), "round {round}: junk survived GC");
+        }
+
+        // everything the retained manifests reference still loads bitwise
+        let snaps = snapshot::list_snapshots(&tdir);
+        assert!(!snaps.is_empty());
+        for (_, path) in &snaps {
+            snapshot::load_snapshot(path, Some(&store)).unwrap();
+        }
+        let latest = snapshot::load_latest(&tdir, Some(&store)).unwrap();
+        assert_eq!(latest.step, gens);
+        for (a, b) in latest.params.iter().zip(snap.params.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let loaded = snapshot::load_outcome(&tdir, Some(&store)).unwrap();
+        outcomes_bitwise_equal(&loaded.outcome, &rec.outcome);
+        assert_eq!(loaded.spec_hash, rec.spec_hash);
+
+        let post = store.verify();
+        assert!(post.corrupt.is_empty(), "round {round}: {:?}", post.corrupt);
+        assert_eq!(post.ok, report.live);
+        let again = store.gc(&[base.clone()]).unwrap();
+        assert_eq!(again.swept, 0, "round {round}: second GC must be a no-op");
+        std::fs::remove_dir_all(&base).ok();
+    }
+}
+
+/// The warm-start acceptance path: a re-run grid is served entirely from
+/// `grid.lock.json` — zero training-session oracle calls, bitwise-equal
+/// outcomes, no new store objects — and a *reordered* re-run still hits,
+/// because the cache keys on hash identity, not trial position.
+#[test]
+fn grid_warm_start_is_cached_bitwise_and_deduped() {
+    let base = tmp("warm");
+    let mk = |seed: u64| grid_spec(&format!("mlp/s{seed}"), seed, 0.05, &base);
+    let exec = ExecContext::new(2);
+
+    let cold: Vec<TrialResult> = run_grid("no-artifacts", vec![mk(1), mk(2)], &exec)
+        .into_iter()
+        .map(Result::unwrap)
+        .collect();
+    for tr in &cold {
+        assert!(!tr.cached, "{}: first run cannot be cached", tr.spec_id);
+        assert!(tr.outcome.completed);
+        assert!(tr.session_oracle_calls >= tr.outcome.oracle_calls);
+        assert!(tr.session_oracle_calls > 0);
+    }
+    let store = Store::open(base.join("store"));
+    let objects_after_cold = store.object_count();
+    assert!(objects_after_cold > 0, "cold run must populate the store");
+
+    let warm: Vec<TrialResult> = run_grid("no-artifacts", vec![mk(1), mk(2)], &exec)
+        .into_iter()
+        .map(Result::unwrap)
+        .collect();
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!(c.spec_id, w.spec_id);
+        assert!(w.cached, "{}: re-run must warm-start", w.spec_id);
+        assert_eq!(w.session_oracle_calls, 0, "{}: cached trials train zero steps", w.spec_id);
+        outcomes_bitwise_equal(&c.outcome, &w.outcome);
+    }
+    assert_eq!(
+        store.object_count(),
+        objects_after_cold,
+        "a fully-cached re-run must add no objects (content-addressed dedup)"
+    );
+
+    // reordered grid: position-independent hits
+    let rev: Vec<TrialResult> = run_grid("no-artifacts", vec![mk(2), mk(1)], &exec)
+        .into_iter()
+        .map(Result::unwrap)
+        .collect();
+    assert_eq!(rev[0].spec_id, "mlp/s2");
+    assert_eq!(rev[1].spec_id, "mlp/s1");
+    for r in &rev {
+        assert!(r.cached, "{}: reordered re-run must still hit", r.spec_id);
+        let original = cold.iter().find(|c| c.spec_id == r.spec_id).unwrap();
+        outcomes_bitwise_equal(&original.outcome, &r.outcome);
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Exact staleness: editing a field the legacy label/seed/budget triple
+/// cannot see (the learning rate) must miss the cache and re-run, while
+/// the unchanged spec keeps hitting its own pin afterwards.
+#[test]
+fn edited_config_misses_cache_and_reruns() {
+    let base = tmp("stale");
+    let exec = ExecContext::new(2);
+    let spec = grid_spec("mlp/edit", 5, 0.05, &base);
+    let cold = run_local_trial("no-artifacts", &spec, &exec).unwrap();
+    assert!(!cold.cached);
+
+    // same id, seed, budget, and method label — only lr differs, which
+    // the pre-hash freshness check was blind to
+    let edited = grid_spec("mlp/edit", 5, 0.1, &base);
+    assert_ne!(resolved_hash(&spec), resolved_hash(&edited));
+    let rerun = run_local_trial("no-artifacts", &edited, &exec).unwrap();
+    assert!(!rerun.cached, "edited lr must invalidate the cached outcome");
+    assert!(rerun.session_oracle_calls > 0, "stale hit must actually re-train");
+
+    // the original spec's pin is still intact alongside the new one
+    let hit = run_local_trial("no-artifacts", &spec, &exec).unwrap();
+    assert!(hit.cached);
+    outcomes_bitwise_equal(&cold.outcome, &hit.outcome);
+    let lock = GridLock::load(&base);
+    assert!(lock.get(&resolved_hash(&spec)).is_some());
+    assert!(lock.get(&resolved_hash(&edited)).is_some());
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Migration: a per-trial `completed/` record written by a pre-store
+/// build (v2: sibling curve blobs, no spec hash, no lockfile) must
+/// warm-start through the legacy field comparison, bitwise-identically —
+/// and the hit must backfill `grid.lock.json` with a store object so the
+/// next resume pins by hash directly.
+#[test]
+fn legacy_v2_outcome_record_warm_starts_and_backfills_lock() {
+    let exec = ExecContext::new(2);
+    let base = tmp("legacy");
+
+    // reference outcome from an uncheckpointed run of the same config —
+    // exactly what the old build would have recorded on completion
+    let mut reference_spec = grid_spec("mlp/legacy", 9, 0.05, &base);
+    reference_spec.checkpoint = Some(CheckpointConfig::default());
+    let reference = run_local_trial("no-artifacts", &reference_spec, &exec).unwrap();
+    assert!(!reference.cached);
+
+    let spec = grid_spec("mlp/legacy", 9, 0.05, &base);
+    let tdir = base.join(snapshot::sanitize_id(&spec.id));
+    snapshot::write_outcome_legacy(
+        &tdir,
+        &reference.outcome,
+        reference.probe_storage,
+        spec.config.seed,
+        spec.config.budget,
+    )
+    .unwrap();
+    let hash = resolved_hash(&spec);
+    assert!(
+        GridLock::load(&base).get(&hash).is_none(),
+        "fabricated legacy tree must start without a lockfile pin"
+    );
+
+    let warm = run_local_trial("no-artifacts", &spec, &exec).unwrap();
+    assert!(warm.cached, "legacy record must warm-start");
+    assert_eq!(warm.session_oracle_calls, 0);
+    outcomes_bitwise_equal(&reference.outcome, &warm.outcome);
+
+    // the hit upgraded the record: pinned in the lockfile as a store
+    // object that carries the canonical spec hash
+    let entry = GridLock::load(&base)
+        .get(&hash)
+        .cloned()
+        .expect("legacy hit must backfill grid.lock.json");
+    assert_eq!(entry.id, spec.id);
+    let store = Store::open(base.join("store"));
+    let rec = snapshot::outcome_from_store(&store, &entry.outcome).unwrap();
+    assert_eq!(rec.spec_hash.as_deref(), Some(hash.as_str()));
+    outcomes_bitwise_equal(&reference.outcome, &rec.outcome);
+
+    // second resume hits the pin directly
+    let again = run_local_trial("no-artifacts", &spec, &exec).unwrap();
+    assert!(again.cached);
+    assert_eq!(again.session_oracle_calls, 0);
+    std::fs::remove_dir_all(&base).ok();
+}

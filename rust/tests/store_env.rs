@@ -1,0 +1,80 @@
+//! `ZO_STORE_DIR` resolution (DESIGN.md §16): the environment override
+//! beats both `CheckpointConfig::store_dir` and the `<dir>/store`
+//! default, and a checkpointed run writes every blob there.  This lives
+//! in its own integration binary — env mutation is process-global, so it
+//! must not share a process with the rest of the store suite.
+
+use std::path::PathBuf;
+
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::oracle::QuadraticOracle;
+use zo_ldsd::sampler::LdsdConfig;
+use zo_ldsd::snapshot::{self, CheckpointConfig};
+use zo_ldsd::store::Store;
+use zo_ldsd::train::{EstimatorKind, SamplerKind, TrainConfig, Trainer};
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("zo_store_env_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn env_store_dir_overrides_config_and_default() {
+    let ck_dir = tmp("ck");
+    let cfg_store = tmp("cfg_store");
+    let env_store = tmp("env_store");
+
+    // precedence without the env var: config beats the <dir>/store default
+    let ck = CheckpointConfig {
+        dir: Some(ck_dir.to_string_lossy().into_owned()),
+        every: 1,
+        resume: false,
+        max_run_steps: 0,
+        store_dir: Some(cfg_store.to_string_lossy().into_owned()),
+    };
+    assert_eq!(snapshot::resolve_store_dir(&ck), Some(cfg_store.clone()));
+    let default_ck = CheckpointConfig { store_dir: None, ..ck.clone() };
+    assert_eq!(
+        snapshot::resolve_store_dir(&default_ck),
+        Some(ck_dir.join("store"))
+    );
+
+    // env beats config (process-global: this binary holds only this test)
+    std::env::set_var("ZO_STORE_DIR", &env_store);
+    assert_eq!(snapshot::resolve_store_dir(&ck), Some(env_store.clone()));
+
+    // a real checkpointed run lands every blob in the env-chosen store
+    let d = 24usize;
+    let mut cfg = TrainConfig::algorithm2("zo_sgd", 0.02, 60);
+    cfg.estimator = EstimatorKind::BestOfK {
+        k: 3,
+        sampler: SamplerKind::Ldsd(LdsdConfig::default()),
+    };
+    cfg.eval_every = 0;
+    cfg.eval_batches = 1;
+    cfg.seed = 11;
+    cfg.checkpoint = ck;
+    let diag: Vec<f32> = (0..d).map(|i| 1.0 + 0.1 * (i % 3) as f32).collect();
+    let oracle = QuadraticOracle::new(diag, vec![1.0; d], vec![0.0; d]);
+    let corpus = zo_ldsd::data::Corpus::new(zo_ldsd::data::CorpusSpec::default_mini()).unwrap();
+    let mut t = Trainer::with_exec(cfg, oracle, corpus, ExecContext::new(1)).unwrap();
+    let out = t.run(None).unwrap();
+    assert!(out.completed);
+
+    let env = Store::open(&env_store);
+    assert!(env.object_count() > 0, "blobs must land in ZO_STORE_DIR");
+    assert!(
+        Store::open(&cfg_store).object_count() == 0
+            && Store::open(ck_dir.join("store")).object_count() == 0,
+        "nothing may leak into the overridden store locations"
+    );
+    // and the manifests resolve against the env store
+    let snap = snapshot::load_latest(&ck_dir, Some(&env)).unwrap();
+    assert!(snap.step > 0);
+
+    std::env::remove_var("ZO_STORE_DIR");
+    for dir in [&ck_dir, &cfg_store, &env_store] {
+        std::fs::remove_dir_all(dir).ok();
+    }
+}
