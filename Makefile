@@ -17,6 +17,12 @@
 #                        (corruption, GC, warm-start short-circuit, legacy
 #                        v2 migration) under both probe-storage modes
 #                        (CI parity for the store-smoke job)
+#   make test-service    the distributed-service suite: loopback
+#                        coordinator + worker farming (byte-identical to
+#                        single-process), lease-expiry fault injection,
+#                        eval-shard merge, malformed-wire handling, HTTP
+#                        parser unit tests, and the env/flag precedence
+#                        contract (CI parity for the service-smoke job)
 #   make test-lanes      the full test suite under ZO_LANES=scalar and
 #                        ZO_LANES=wide — the lane-accumulation contract
 #                        (DESIGN.md §14) says every result is bitwise
@@ -53,8 +59,8 @@
 #                        enforced speedup, DESIGN.md §15)
 
 .PHONY: artifacts build test test-streamed test-resume test-mlp \
-        test-transformer test-store test-lanes test-gemm lint fmt doc \
-        bench bench-smoke bench-baseline bench-gate clean
+        test-transformer test-store test-service test-lanes test-gemm \
+        lint fmt doc bench bench-smoke bench-baseline bench-gate clean
 
 # Bench-regression gate knobs (DESIGN.md §12).  BENCH_JSON must reach the
 # bench binary as an absolute path: cargo runs benches with cwd = the
@@ -102,6 +108,10 @@ test-store: build
 	cargo test -q --lib snapshot::
 	ZO_PROBE_STORAGE=materialized cargo test -q --test store --test checkpoint_resume
 	ZO_PROBE_STORAGE=streamed cargo test -q --test store --test checkpoint_resume
+
+test-service: build
+	cargo test -q --lib service::
+	cargo test -q --test service --test precedence
 
 test-lanes: build
 	ZO_LANES=scalar cargo test -q

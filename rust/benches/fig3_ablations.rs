@@ -38,18 +38,9 @@ fn main() {
         .unwrap_or(900u64);
 
     let mut specs = Vec::new();
-    let spec = |id: String, c: TrainConfig| TrialSpec {
-        id,
-        model: "roberta_mini".into(),
-        mode: TrainMode::Lora,
-        config: c,
-        eval_batches: 8,
-        probe_dispatch: None,
-        probe_storage: None,
-        param_store: None,
-        gemm: None,
-        checkpoint: None,
-        oracle: zo_ldsd::coordinator::OracleSpec::Pjrt,
+    // the presets carry eval_batches = 8; TrialSpec::new folds it in
+    let spec = |id: String, c: TrainConfig| {
+        TrialSpec::new(&id, "roberta_mini", TrainMode::Lora, c, zo_ldsd::coordinator::OracleSpec::Pjrt)
     };
     if filter.is_empty() || filter == "k" {
         for k in [1usize, 5, 10] {

@@ -9,6 +9,11 @@
 //!     cargo bench --bench table1_sst2 -- full      # all optimizers
 //!     cargo bench --bench table1_sst2 -- --smoke   # CI: tiny budget
 //!
+//! The grid itself is [`table1_grid`] — the same spec builder behind
+//! `zo grid emit --preset table1*` and the service byte-identity tests,
+//! so every consumer schedules the identical trials through the one
+//! wire constructor path.
+//!
 //! `T1_BUDGET` overrides the per-trial forward budget; `BENCH_JSON=<path>`
 //! serializes one row per trial (`ns_per_op` = wall ns per oracle call,
 //! plus accuracy/steps/peak probe bytes) — the `table1-smoke` CI job
@@ -18,23 +23,20 @@
 //! `T1_CHECKPOINT_DIR=<dir>` checkpoints every trial under `<dir>` with
 //! resume on, so a re-run against the same directory short-circuits each
 //! trial through the grid's `grid.lock.json` result cache.
-//! `T1_REPORT=<path>` writes a deterministic canonical report (trial id,
-//! accuracy bits, steps, oracle calls, label, completed — no wall times
-//! or peaks), byte-comparable across cold and warm runs.
+//! `T1_REPORT=<path>` writes the deterministic canonical report
+//! ([`deterministic_report`]: trial id, accuracy bits, steps, oracle
+//! calls, label, completed — no wall times or peaks), byte-comparable
+//! across cold and warm runs and against a service-farmed grid.
 //! `T1_EXPECT_CACHED=1` asserts every trial was served from the cache
 //! with zero training-session oracle calls — the proof that the warm run
 //! did no training.
 
 use std::collections::BTreeMap;
 
-use zo_ldsd::config::TrainMode;
-use zo_ldsd::coordinator::{run_grid, OracleSpec, TransformerTrial, TrialSpec};
-use zo_ldsd::data::CorpusSpec;
+use zo_ldsd::coordinator::{deterministic_report, run_grid, table1_grid, OracleSpec};
 use zo_ldsd::exec::ExecContext;
 use zo_ldsd::jsonio::Json;
-use zo_ldsd::model::{LoraTargets, Pool};
 use zo_ldsd::report::Table;
-use zo_ldsd::train::TrainConfig;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -53,75 +55,30 @@ fn main() {
         .map(|v| !v.is_empty() && v != "0")
         .unwrap_or(false);
 
-    // The SST-2 stand-in: the synthetic sentiment corpus at a seq/vocab
-    // the host forward handles in bench time, under a small causal
-    // decoder with rank-4 q/v adapters (probe dimension = adapter + head
-    // params — the paper's LoRA fine-tuning shape).
-    let corpus = CorpusSpec {
-        vocab: 256,
-        seq: 16,
-        lexicon: 32,
-        min_len: 8,
-        signal_min: 2,
-        signal_max: 4,
-        ..CorpusSpec::default_mini()
-    };
-    let trial = TransformerTrial {
-        layers: 2,
-        heads: 2,
-        d_model: 32,
-        d_ff: 64,
-        lora_rank: 4,
-        lora_targets: LoraTargets::qv(),
-        causal: true,
-        pool: Pool::Last,
-        corpus,
-        init_seed: 7,
-        eval_batch: 64,
-    };
-    let tspec = trial.model_spec().unwrap();
-    println!(
-        "table1 bench: {} lora (d = {} of {} ft params), budget {budget} forwards",
-        tspec.label(),
-        tspec.d_lora(),
-        tspec.d_ft()
-    );
-
-    // LoRA learning rates calibrated on the mini corpus (the adapter
-    // subspace tolerates much larger steps than the PJRT FT runs)
-    let optimizers: &[(&str, f32)] = if full {
-        &[("zo_sgd", 0.02), ("zo_sgd_plain", 0.02), ("zo_adamm", 1e-3)]
-    } else {
-        &[("zo_sgd", 0.02)]
-    };
-
-    let mut specs = Vec::new();
-    for (optimizer, lr) in optimizers {
-        for (method, cfg) in [
-            ("gauss_2fwd", TrainConfig::gaussian_2fwd(optimizer, *lr, budget)),
-            ("gauss_6fwd", TrainConfig::gaussian_6fwd(optimizer, *lr, budget)),
-            ("alg2", TrainConfig::algorithm2(optimizer, *lr, budget)),
-        ] {
-            specs.push(TrialSpec {
-                id: format!("{}/lora/{optimizer}/{method}", tspec.label()),
-                model: tspec.label(),
-                mode: TrainMode::Lora,
-                config: cfg,
-                eval_batches: if smoke { 2 } else { 8 },
-                probe_dispatch: None,
-                probe_storage: None,
-                param_store: None,
-                gemm: None,
-                checkpoint: ck_dir.as_ref().map(|d| zo_ldsd::snapshot::CheckpointConfig {
-                    dir: Some(d.clone()),
-                    every: 0,
-                    resume: true,
-                    max_run_steps: 0,
-                    store_dir: None,
-                }),
-                oracle: OracleSpec::Transformer(trial.clone()),
+    // The SST-2 stand-in grid (see table1_grid for the architecture:
+    // small causal decoder, rank-4 q/v adapters — the paper's LoRA
+    // fine-tuning shape).  The bench only layers its warm-start
+    // checkpoint policy on top.
+    let mut specs = table1_grid(budget, full, smoke);
+    if let Some(d) = &ck_dir {
+        for spec in &mut specs {
+            spec.checkpoint = Some(zo_ldsd::snapshot::CheckpointConfig {
+                dir: Some(d.clone()),
+                every: 0,
+                resume: true,
+                max_run_steps: 0,
+                store_dir: None,
             });
         }
+    }
+    if let OracleSpec::Transformer(trial) = &specs[0].oracle {
+        let tspec = trial.model_spec().unwrap();
+        println!(
+            "table1 bench: {} lora (d = {} of {} ft params), budget {budget} forwards",
+            tspec.label(),
+            tspec.d_lora(),
+            tspec.d_ft()
+        );
     }
 
     let t0 = std::time::Instant::now();
@@ -132,7 +89,6 @@ fn main() {
     );
     let mut accs = BTreeMap::new();
     let mut json_rows: Vec<Json> = Vec::new();
-    let mut report_rows: Vec<Json> = Vec::new();
     let mut cache_misses: Vec<String> = Vec::new();
     for r in &results {
         match r {
@@ -142,27 +98,6 @@ fn main() {
                         "{} (cached {}, session oracle calls {})",
                         tr.spec_id, tr.cached, tr.session_oracle_calls
                     ));
-                }
-                if report_path.is_some() {
-                    // deterministic trial identity only: no wall times,
-                    // no peaks, accuracy pinned by bit pattern
-                    let mut row = BTreeMap::new();
-                    row.insert("id".to_string(), Json::Str(tr.spec_id.clone()));
-                    row.insert(
-                        "accuracy_bits".to_string(),
-                        Json::Str(format!("{:016x}", tr.outcome.final_accuracy.to_bits())),
-                    );
-                    row.insert(
-                        "steps".to_string(),
-                        Json::Str(format!("{:016x}", tr.outcome.steps)),
-                    );
-                    row.insert(
-                        "oracle_calls".to_string(),
-                        Json::Str(format!("{:016x}", tr.outcome.oracle_calls)),
-                    );
-                    row.insert("label".to_string(), Json::Str(tr.outcome.label.clone()));
-                    row.insert("completed".to_string(), Json::Bool(tr.outcome.completed));
-                    report_rows.push(Json::Obj(row));
                 }
                 table.row(vec![
                     tr.spec_id.clone(),
@@ -197,10 +132,7 @@ fn main() {
     }
     table.print();
     if let Some(path) = &report_path {
-        let mut root = BTreeMap::new();
-        root.insert("rows".to_string(), Json::Arr(report_rows));
-        let text = format!("{}\n", zo_ldsd::jsonio::to_string_canonical(&Json::Obj(root)));
-        match std::fs::write(path, text) {
+        match std::fs::write(path, deterministic_report(&results)) {
             Ok(()) => eprintln!("bench: wrote deterministic report to {path}"),
             Err(e) => {
                 eprintln!("bench: failed writing report {path}: {e}");

@@ -13,9 +13,11 @@
 //! drop coverage.  The `bench-gate` binary wraps this for the CI job
 //! (`.github/workflows/ci.yml`) and `make bench-gate`.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use crate::cli::Args;
 use crate::jsonio::{parse, Json};
+use crate::report::Table;
 
 /// One benchmark row as serialized under the `rows` key of a
 /// `BENCH_*.json` file.
@@ -273,6 +275,164 @@ pub fn parse_ab_specs(raw: &str) -> Result<Vec<AbSpec>> {
             })
         })
         .collect()
+}
+
+/// The bench-gate driver: everything behind the `bench-gate` binary and
+/// the `zo bench-gate` subcommand (both parse argv into [`Args`] and
+/// delegate here).  Diffs `--current` against `--baseline` within the
+/// gated row families, enforces the intra-run A/B speedup bounds, prints
+/// every violation, and — on a green gate with `--store-dir` — archives
+/// the exact report bytes into the content-addressed store under
+/// `--store-label` (DESIGN.md §12, §16).
+pub fn gate_cli(args: &Args) -> Result<()> {
+    let baseline_path = args.require("baseline")?.to_string();
+    let current_path = args.require("current")?.to_string();
+    let threshold = args.get_f64("threshold", 0.20)?;
+    let bytes_threshold = args.get_f64("bytes-threshold", threshold)?;
+    let ab_max_ratio = args.get_f64("ab-max-ratio", 0.0)?;
+    let ab_prefix = args.get_or("ab-prefix", "lanes/").to_string();
+    let ab_specs = parse_ab_specs(args.get_or("ab-specs", ""))?;
+    let gates_raw = args
+        .get_or("gate", "loss_k,axpy_k,probe_combine,mlp,mem/")
+        .to_string();
+    let gates: Vec<&str> = gates_raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+
+    let baseline = parse_rows(
+        &std::fs::read_to_string(&baseline_path)
+            .with_context(|| format!("reading baseline {baseline_path}"))?,
+    )?;
+    let current_text = std::fs::read_to_string(&current_path)
+        .with_context(|| format!("reading current {current_path}"))?;
+    let current = parse_rows(&current_text)?;
+
+    let report = gate(&baseline, &current, threshold, bytes_threshold, &gates);
+    println!(
+        "bench-gate: {} gated row(s) compared against {baseline_path} \
+         (ns +{:.0}%, bytes +{:.0}%, gates: {gates_raw})",
+        report.compared,
+        threshold * 100.0,
+        bytes_threshold * 100.0
+    );
+    for m in &report.missing {
+        println!("  MISSING from current run: {m}");
+    }
+    if !report.regressions.is_empty() {
+        let mut t = Table::new(
+            "bench regressions",
+            &["row", "metric", "baseline", "current", "ratio", "limit"],
+        );
+        for r in &report.regressions {
+            let limit = match r.metric {
+                "peak_bytes" => bytes_threshold,
+                _ => threshold,
+            };
+            t.row(vec![
+                r.name.clone(),
+                r.metric.to_string(),
+                format!("{:.1}", r.baseline),
+                format!("{:.1}", r.current),
+                format!("{:.2}x", r.ratio),
+                format!("<= {:.2}x", 1.0 + limit),
+            ]);
+        }
+        t.print();
+    }
+
+    // intra-run scalar-vs-wide speedup (hardware-portable: both arms are
+    // measured in the same run, so no stored anchor is involved)
+    let ab = if ab_max_ratio > 0.0 {
+        let ab = ab_gate(&current, &ab_prefix, ab_max_ratio);
+        println!(
+            "bench-gate: {} A/B pair(s) checked (prefix {ab_prefix}, wide <= {lim:.2}x scalar)",
+            ab.compared,
+            lim = ab_max_ratio
+        );
+        if !ab.violations.is_empty() {
+            let mut t = Table::new(
+                "A/B speedup violations",
+                &["scalar row", "scalar ns", "wide ns", "ratio", "limit"],
+            );
+            for v in &ab.violations {
+                t.row(vec![
+                    v.scalar.clone(),
+                    format!("{:.1}", v.scalar_ns),
+                    if v.wide_ns.is_nan() {
+                        "MISSING".to_string()
+                    } else {
+                        format!("{:.1}", v.wide_ns)
+                    },
+                    format!("{:.2}x", v.ratio),
+                    format!("<= {ab_max_ratio:.2}x"),
+                ]);
+            }
+            t.print();
+        }
+        ab
+    } else {
+        Default::default()
+    };
+
+    // suffixed A/B families (--ab-specs): same intra-run portability as
+    // the lane pairing, with per-family suffixes and bounds
+    let mut spec_violations = 0usize;
+    for spec in &ab_specs {
+        let rep = ab_gate_suffixed(
+            &current,
+            &spec.prefix,
+            &spec.slow_suffix,
+            &spec.fast_suffix,
+            spec.max_ratio,
+        );
+        println!(
+            "bench-gate: {} A/B pair(s) checked (prefix {}, *{} <= {:.2}x *{})",
+            rep.compared, spec.prefix, spec.fast_suffix, spec.max_ratio, spec.slow_suffix,
+        );
+        if !rep.violations.is_empty() {
+            let mut t = Table::new(
+                "A/B speedup violations",
+                &["slow row", "slow ns", "fast ns", "ratio", "limit"],
+            );
+            for v in &rep.violations {
+                t.row(vec![
+                    v.scalar.clone(),
+                    format!("{:.1}", v.scalar_ns),
+                    if v.wide_ns.is_nan() {
+                        "MISSING".to_string()
+                    } else {
+                        format!("{:.1}", v.wide_ns)
+                    },
+                    format!("{:.2}x", v.ratio),
+                    format!("<= {:.2}x", spec.max_ratio),
+                ]);
+            }
+            t.print();
+        }
+        spec_violations += rep.violations.len();
+    }
+
+    if !report.is_green() || !ab.is_green() || spec_violations > 0 {
+        bail!(
+            "{} regression(s), {} missing gated row(s), {} A/B violation(s)",
+            report.regressions.len(),
+            report.missing.len(),
+            ab.violations.len() + spec_violations
+        );
+    }
+    println!("bench-gate: green");
+    // archive the exact report bytes that passed: store object + lockfile
+    // pin, so the audit trail dedups across identical re-runs
+    if let Some(dir) = args.get("store-dir") {
+        let store = crate::store::Store::open(dir);
+        let hash = store.put(current_text.as_bytes())?;
+        let label = args.get_or("store-label", "current");
+        crate::store::BenchLock::record(store.root(), label, &hash)?;
+        println!("bench-gate: archived gated report as {hash} (label '{label}')");
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -2,11 +2,50 @@
 //!
 //! Supports subcommands, `--flag`, `--key value`, `--key=value` and
 //! positional arguments, with typed accessors and a generated usage
-//! string.  Used by `rust/src/main.rs` and the examples.
+//! string.  [`CommandSpec`] declares one subcommand's surface — its
+//! usage text plus the exact option/flag sets it accepts — giving every
+//! subcommand its own `--help` and strict unknown-flag rejection.  Used
+//! by `rust/src/main.rs` and the examples.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
+
+/// One subcommand's declared surface: summary + usage text and the
+/// option/flag sets it accepts.  Shared global options (`--threads`,
+/// `--store-dir`) are just listed in each accepting command's `opts`.
+#[derive(Clone, Copy, Debug)]
+pub struct CommandSpec {
+    /// Subcommand token (`train`, `serve`, ...).
+    pub name: &'static str,
+    /// One-line description for the global usage listing.
+    pub summary: &'static str,
+    /// Multi-line usage text printed by `<command> --help`.
+    pub usage: &'static str,
+    /// Value-taking options this command accepts (without `--`).
+    pub opts: &'static [&'static str],
+    /// Boolean flags this command accepts (without `--`).
+    pub flags: &'static [&'static str],
+}
+
+impl CommandSpec {
+    /// The `--help` text for this subcommand.
+    pub fn help(&self) -> String {
+        format!("{} — {}\n\nusage:\n{}", self.name, self.summary, self.usage)
+    }
+
+    /// Strict validation against this command's declared surface:
+    /// unknown options or flags are errors (`--help` is always known).
+    pub fn validate(&self, args: &Args) -> Result<()> {
+        let mut opts: Vec<&str> = self.opts.to_vec();
+        opts.push("help");
+        let mut flags: Vec<&str> = self.flags.to_vec();
+        flags.push("help");
+        args.reject_unknown(&opts, &flags).map_err(|e| {
+            anyhow!("{}: {e} (see `{} --help`)", self.name, self.name)
+        })
+    }
+}
 
 /// Parsed command line: subcommand, options, flags and positionals.
 #[derive(Clone, Debug, Default)]

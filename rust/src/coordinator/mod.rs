@@ -33,7 +33,11 @@
 //! the hash, not the position or directory name.  In-flight trials
 //! continue bitwise-identically from their newest valid snapshot.
 
+pub mod wire;
+
 use anyhow::{anyhow, Result};
+
+use std::collections::BTreeMap;
 
 use crate::config::{Manifest, TrainMode};
 use crate::data::corpus::CorpusSpec;
@@ -49,9 +53,10 @@ use crate::runtime::Runtime;
 use crate::snapshot::{self, CheckpointConfig};
 use crate::store::{sha256_hex, GridLock, LockEntry};
 use crate::train::{
-    EstimatorKind, GemmMode, ParamStoreMode, ProbeDispatch, ProbeStorage, SamplerKind,
-    TrainConfig, TrainOutcome, Trainer,
+    GemmMode, ParamStoreMode, ProbeDispatch, ProbeStorage, TrainConfig, TrainOutcome,
+    Trainer,
 };
+use wire::{jestimator, jf32, jhex64, jnum, jobj, jstr};
 
 /// The forward-only MLP trial configuration: architecture, featurizer
 /// width, the corpus it trains on, and the parameter-init seed.
@@ -236,10 +241,9 @@ pub fn spec_hash(spec: &TrialSpec, cfg: &TrainConfig) -> String {
         Some(s) => jobj(vec![("n_train", jhex64(s.n_train))]),
         None => Json::Null,
     };
-    let param_store = std::env::var("ZO_PARAM_STORE")
-        .ok()
-        .and_then(|s| ParamStoreMode::parse(&s))
-        .unwrap_or(cfg.param_store);
+    // same CONFIGURED > ENV precedence the trainer resolves with, so the
+    // hash always names the store the run will actually use
+    let param_store = crate::train::requested_param_store(cfg);
     let identity = jobj(vec![
         ("estimator", jestimator(&cfg.estimator)),
         ("optimizer", jstr(&cfg.optimizer)),
@@ -259,112 +263,72 @@ pub fn spec_hash(spec: &TrialSpec, cfg: &TrainConfig) -> String {
     sha256_hex(to_string_canonical(&identity).as_bytes())
 }
 
-fn jobj(pairs: Vec<(&str, Json)>) -> Json {
-    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
-}
-
-fn jstr(s: &str) -> Json {
-    Json::Str(s.to_string())
-}
-
-fn jnum(n: usize) -> Json {
-    Json::Num(n as f64)
-}
-
-fn jhex64(v: u64) -> Json {
-    Json::Str(format!("{v:016x}"))
-}
-
-fn jf32(x: f32) -> Json {
-    Json::Str(format!("{:08x}", x.to_bits()))
-}
-
-fn jf64(x: f64) -> Json {
-    Json::Str(format!("{:016x}", x.to_bits()))
-}
-
-fn jsampler(s: &SamplerKind) -> Json {
-    match s {
-        SamplerKind::Gaussian => jobj(vec![("kind", jstr("gaussian"))]),
-        SamplerKind::Sphere => jobj(vec![("kind", jstr("sphere"))]),
-        SamplerKind::Coordinate => jobj(vec![("kind", jstr("coordinate"))]),
-        SamplerKind::Ldsd(c) => jobj(vec![
-            ("kind", jstr("ldsd")),
-            ("eps", jf32(c.eps)),
-            ("gamma_mu", jf32(c.gamma_mu)),
-            ("reward_sign", jf32(c.reward_sign)),
-            ("init_norm", jf32(c.init_norm)),
-            ("renormalize", Json::Bool(c.renormalize)),
-            ("leave_one_out", Json::Bool(c.leave_one_out)),
-        ]),
-    }
-}
-
-fn jestimator(e: &EstimatorKind) -> Json {
-    match e {
-        EstimatorKind::CentralK1(s) => {
-            jobj(vec![("kind", jstr("central_k1")), ("sampler", jsampler(s))])
-        }
-        EstimatorKind::ForwardAvg { k, sampler } => jobj(vec![
-            ("kind", jstr("forward_avg")),
-            ("k", jnum(*k)),
-            ("sampler", jsampler(sampler)),
-        ]),
-        EstimatorKind::BestOfK { k, sampler } => jobj(vec![
-            ("kind", jstr("bestofk")),
-            ("k", jnum(*k)),
-            ("sampler", jsampler(sampler)),
-        ]),
-    }
-}
-
-fn jcorpus(c: &CorpusSpec) -> Json {
-    jobj(vec![
-        ("vocab", jhex64(c.vocab)),
-        ("seq", jnum(c.seq)),
-        ("n_classes", jhex64(c.n_classes)),
-        ("lexicon", jhex64(c.lexicon)),
-        ("min_len", jhex64(c.min_len)),
-        ("signal_min", jhex64(c.signal_min)),
-        ("signal_max", jhex64(c.signal_max)),
-        ("contra", jf64(c.contra)),
-        ("noise", jf64(c.noise)),
-        ("seed", jhex64(c.seed)),
-    ])
-}
-
+/// The oracle identity the spec hash covers: the wire encoding
+/// ([`OracleSpec::to_json`]), with the manifest model name merged in for
+/// PJRT trials (the name selects the artifact, so it is identity there;
+/// the host oracles ignore it).
 fn joracle(spec: &TrialSpec) -> Json {
     match &spec.oracle {
         OracleSpec::Pjrt => {
             jobj(vec![("kind", jstr("pjrt")), ("model", jstr(&spec.model))])
         }
-        OracleSpec::Mlp(m) => jobj(vec![
-            ("kind", jstr("mlp")),
-            (
-                "hidden",
-                Json::Arr(m.hidden.iter().map(|h| jnum(*h)).collect()),
-            ),
-            ("activation", jstr(m.activation.label())),
-            ("in_dim", jnum(m.in_dim)),
-            ("corpus", jcorpus(&m.corpus)),
-            ("init_seed", jhex64(m.init_seed)),
-            ("eval_batch", jnum(m.eval_batch)),
-        ]),
-        OracleSpec::Transformer(t) => jobj(vec![
-            ("kind", jstr("transformer")),
-            ("layers", jnum(t.layers)),
-            ("heads", jnum(t.heads)),
-            ("d_model", jnum(t.d_model)),
-            ("d_ff", jnum(t.d_ff)),
-            ("lora_rank", jnum(t.lora_rank)),
-            ("lora_targets", jstr(&t.lora_targets.label())),
-            ("causal", Json::Bool(t.causal)),
-            ("pool", jstr(t.pool.label())),
-            ("corpus", jcorpus(&t.corpus)),
-            ("init_seed", jhex64(t.init_seed)),
-            ("eval_batch", jnum(t.eval_batch)),
-        ]),
+        other => other.to_json(),
     }
+}
+
+/// [`spec_hash`] with the spec's own overrides already applied — the hash
+/// [`run_trial_measured`] computes after folding `eval_batches` and the
+/// per-trial `Some` overrides into the config.  This is the identity the
+/// service leases and collects outcomes under, so coordinator and worker
+/// agree on it without shipping a resolved config.
+pub fn resolved_spec_hash(spec: &TrialSpec) -> String {
+    let mut cfg = spec.config.clone();
+    cfg.eval_batches = spec.eval_batches;
+    if let Some(dispatch) = spec.probe_dispatch {
+        cfg.probe_dispatch = dispatch;
+    }
+    if let Some(storage) = spec.probe_storage {
+        cfg.probe_storage = storage;
+    }
+    if let Some(store) = spec.param_store {
+        cfg.param_store = store;
+    }
+    if let Some(g) = spec.gemm {
+        cfg.gemm = g;
+    }
+    spec_hash(spec, &cfg)
+}
+
+/// Render grid results as the deterministic canonical report: one row per
+/// `Ok` trial — id, accuracy/steps/oracle-call bit patterns, label,
+/// completed — no wall times, no peaks, no cache provenance.  Canonical
+/// JSON plus a trailing newline, so any two runs of the same grid are
+/// byte-comparable: cold vs warm, single-process vs farmed over workers
+/// (the service acceptance check), any thread count or storage mode.
+pub fn deterministic_report(results: &[Result<TrialResult>]) -> String {
+    let mut rows: Vec<Json> = Vec::new();
+    for tr in results.iter().flatten() {
+        let mut row = BTreeMap::new();
+        row.insert("id".to_string(), Json::Str(tr.spec_id.clone()));
+        row.insert(
+            "accuracy_bits".to_string(),
+            Json::Str(format!("{:016x}", tr.outcome.final_accuracy.to_bits())),
+        );
+        row.insert(
+            "steps".to_string(),
+            Json::Str(format!("{:016x}", tr.outcome.steps)),
+        );
+        row.insert(
+            "oracle_calls".to_string(),
+            Json::Str(format!("{:016x}", tr.outcome.oracle_calls)),
+        );
+        row.insert("label".to_string(), Json::Str(tr.outcome.label.clone()));
+        row.insert("completed".to_string(), Json::Bool(tr.outcome.completed));
+        rows.push(Json::Obj(row));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("rows".to_string(), Json::Arr(rows));
+    format!("{}\n", to_string_canonical(&Json::Obj(root)))
 }
 
 /// Where a trial persists its completed-outcome record: its private
@@ -639,12 +603,72 @@ fn cached_result(spec: &TrialSpec, rec: snapshot::OutcomeRecord) -> TrialResult 
 
 /// Map a stored probe-storage label back onto the static strings
 /// [`TrialResult::probe_storage`] carries.
-fn storage_label_static(label: &str) -> &'static str {
+pub(crate) fn storage_label_static(label: &str) -> &'static str {
     match label {
         "streamed" => "streamed",
         "auto" => "auto",
         _ => "materialized",
     }
+}
+
+/// The Table-1 bench workload as wire-constructable specs: the synthetic
+/// SST-2 stand-in corpus under a small causal decoder with rank-4 q/v
+/// adapters, the three sampling schemes per optimizer (`full` adds the
+/// plain-SGD and Adam arms).  One builder — routed through
+/// [`TrialSpec::new`], the single wire constructor path — feeds the
+/// `table1_sst2` bench, `zo grid emit`, and the service byte-identity
+/// tests, so every consumer schedules the identical grid.  `smoke`
+/// selects the CI evaluation width (2 test batches instead of 8).
+pub fn table1_grid(budget: u64, full: bool, smoke: bool) -> Vec<TrialSpec> {
+    let corpus = CorpusSpec {
+        vocab: 256,
+        seq: 16,
+        lexicon: 32,
+        min_len: 8,
+        signal_min: 2,
+        signal_max: 4,
+        ..CorpusSpec::default_mini()
+    };
+    let trial = TransformerTrial {
+        layers: 2,
+        heads: 2,
+        d_model: 32,
+        d_ff: 64,
+        lora_rank: 4,
+        lora_targets: LoraTargets::qv(),
+        causal: true,
+        pool: Pool::Last,
+        corpus,
+        init_seed: 7,
+        eval_batch: 64,
+    };
+    let label = trial
+        .model_spec()
+        .expect("the static table1 architecture is valid")
+        .label();
+    let optimizers: &[(&str, f32)] = if full {
+        &[("zo_sgd", 0.02), ("zo_sgd_plain", 0.02), ("zo_adamm", 1e-3)]
+    } else {
+        &[("zo_sgd", 0.02)]
+    };
+    let mut specs = Vec::new();
+    for (optimizer, lr) in optimizers {
+        for (method, mut cfg) in [
+            ("gauss_2fwd", TrainConfig::gaussian_2fwd(optimizer, *lr, budget)),
+            ("gauss_6fwd", TrainConfig::gaussian_6fwd(optimizer, *lr, budget)),
+            ("alg2", TrainConfig::algorithm2(optimizer, *lr, budget)),
+        ] {
+            cfg.eval_batches = if smoke { 2 } else { 8 };
+            specs.push(TrialSpec::new(
+                &format!("{label}/lora/{optimizer}/{method}"),
+                &label,
+                TrainMode::Lora,
+                cfg,
+                OracleSpec::Transformer(trial.clone()),
+            ));
+        }
+    }
+    specs
 }
 
 /// Run a batch of trials on the shared execution context.  Trial-level

@@ -1,0 +1,655 @@
+//! Versioned wire schema for trial specs and outcomes (DESIGN.md §17).
+//!
+//! One encoding, three consumers: the canonical spec hash
+//! ([`super::spec_hash`]), grid spec files (`zo-ldsd grid emit|run`), and
+//! the coordinator/worker HTTP service ([`crate::service`]) all speak the
+//! same canonical JSON — wire identity *is* cache identity, so an
+//! outcome computed by a remote worker slots straight into
+//! `grid.lock.json` warm-start on the coordinator.
+//!
+//! Encoding rules (inherited from the spec-hash encoding of DESIGN.md
+//! §16): floats travel as IEEE-754 bit patterns in fixed-width hex
+//! (`f32` → 8 hex digits, `f64` → 16), `u64` counters as 16-digit hex,
+//! small structural counts as JSON numbers.  Objects are
+//! [`BTreeMap`]-backed, so [`to_string_canonical`] emits sorted keys and
+//! the bytes are stable across builds and platforms.
+//!
+//! Every top-level message carries `"schema"`: a reader rejects versions
+//! it does not speak instead of guessing.  Checkpoint policy is
+//! deliberately *not* on the wire — where a worker snapshots is
+//! deployment-local configuration, not trial identity, and
+//! [`TrialSpec::from_json`] leaves it `None` for the receiver to fill in.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::TrainMode;
+use crate::data::corpus::CorpusSpec;
+use crate::jsonio::Json;
+use crate::model::mlp::Activation;
+use crate::model::{LoraTargets, Pool};
+use crate::sampler::LdsdConfig;
+use crate::train::{
+    EstimatorKind, GemmMode, ParamStoreMode, ProbeDispatch, ProbeStorage, SamplerKind,
+    ShuffleSpec, TrainConfig, TrainOutcome,
+};
+
+use super::{MlpTrial, OracleSpec, TransformerTrial, TrialSpec};
+
+/// Version stamped into (and required from) every wire message.
+pub const WIRE_SCHEMA_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// canonical encoders (shared with the spec hash in `coordinator::spec_hash`)
+
+/// Build a JSON object from literal key/value pairs.
+pub fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Owned-string JSON value.
+pub fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+/// Small structural count as a JSON number.
+pub fn jnum(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+/// `u64` as 16-digit zero-padded hex (exact at any magnitude — JSON
+/// numbers lose integers past 2^53).
+pub fn jhex64(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// `f32` as its IEEE-754 bit pattern in 8 hex digits.
+pub fn jf32(x: f32) -> Json {
+    Json::Str(format!("{:08x}", x.to_bits()))
+}
+
+/// `f64` as its IEEE-754 bit pattern in 16 hex digits.
+pub fn jf64(x: f64) -> Json {
+    Json::Str(format!("{:016x}", x.to_bits()))
+}
+
+pub(super) fn jsampler(s: &SamplerKind) -> Json {
+    match s {
+        SamplerKind::Gaussian => jobj(vec![("kind", jstr("gaussian"))]),
+        SamplerKind::Sphere => jobj(vec![("kind", jstr("sphere"))]),
+        SamplerKind::Coordinate => jobj(vec![("kind", jstr("coordinate"))]),
+        SamplerKind::Ldsd(c) => jobj(vec![
+            ("kind", jstr("ldsd")),
+            ("eps", jf32(c.eps)),
+            ("gamma_mu", jf32(c.gamma_mu)),
+            ("reward_sign", jf32(c.reward_sign)),
+            ("init_norm", jf32(c.init_norm)),
+            ("renormalize", Json::Bool(c.renormalize)),
+            ("leave_one_out", Json::Bool(c.leave_one_out)),
+        ]),
+    }
+}
+
+pub(super) fn jestimator(e: &EstimatorKind) -> Json {
+    match e {
+        EstimatorKind::CentralK1(s) => {
+            jobj(vec![("kind", jstr("central_k1")), ("sampler", jsampler(s))])
+        }
+        EstimatorKind::ForwardAvg { k, sampler } => jobj(vec![
+            ("kind", jstr("forward_avg")),
+            ("k", jnum(*k)),
+            ("sampler", jsampler(sampler)),
+        ]),
+        EstimatorKind::BestOfK { k, sampler } => jobj(vec![
+            ("kind", jstr("bestofk")),
+            ("k", jnum(*k)),
+            ("sampler", jsampler(sampler)),
+        ]),
+    }
+}
+
+pub(super) fn jcorpus(c: &CorpusSpec) -> Json {
+    jobj(vec![
+        ("vocab", jhex64(c.vocab)),
+        ("seq", jnum(c.seq)),
+        ("n_classes", jhex64(c.n_classes)),
+        ("lexicon", jhex64(c.lexicon)),
+        ("min_len", jhex64(c.min_len)),
+        ("signal_min", jhex64(c.signal_min)),
+        ("signal_max", jhex64(c.signal_max)),
+        ("contra", jf64(c.contra)),
+        ("noise", jf64(c.noise)),
+        ("seed", jhex64(c.seed)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// canonical decoders
+
+fn field<'a>(j: &'a Json, k: &str) -> Result<&'a Json> {
+    j.get(k).ok_or_else(|| anyhow!("missing field '{k}'"))
+}
+
+fn fstr<'a>(j: &'a Json, k: &str) -> Result<&'a str> {
+    field(j, k)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field '{k}' is not a string"))
+}
+
+fn fbool(j: &Json, k: &str) -> Result<bool> {
+    field(j, k)?
+        .as_bool()
+        .ok_or_else(|| anyhow!("field '{k}' is not a bool"))
+}
+
+fn fnum(j: &Json, k: &str) -> Result<usize> {
+    field(j, k)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("field '{k}' is not a count"))
+}
+
+fn fhex64(j: &Json, k: &str) -> Result<u64> {
+    let s = fstr(j, k)?;
+    u64::from_str_radix(s, 16).with_context(|| format!("field '{k}': bad hex u64 '{s}'"))
+}
+
+fn ff32(j: &Json, k: &str) -> Result<f32> {
+    let s = fstr(j, k)?;
+    let bits = u32::from_str_radix(s, 16)
+        .with_context(|| format!("field '{k}': bad f32 bit pattern '{s}'"))?;
+    Ok(f32::from_bits(bits))
+}
+
+fn ff64(j: &Json, k: &str) -> Result<f64> {
+    let s = fstr(j, k)?;
+    let bits = u64::from_str_radix(s, 16)
+        .with_context(|| format!("field '{k}': bad f64 bit pattern '{s}'"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// Check the `"schema"` stamp on a wire message against what this build
+/// speaks.
+pub fn check_schema(j: &Json) -> Result<()> {
+    let v = fhex64(j, "schema").context("wire message has no schema stamp")?;
+    if v != WIRE_SCHEMA_VERSION {
+        bail!(
+            "wire schema {v} not supported (this build speaks {WIRE_SCHEMA_VERSION})"
+        );
+    }
+    Ok(())
+}
+
+fn sampler_from_json(j: &Json) -> Result<SamplerKind> {
+    match fstr(j, "kind")? {
+        "gaussian" => Ok(SamplerKind::Gaussian),
+        "sphere" => Ok(SamplerKind::Sphere),
+        "coordinate" => Ok(SamplerKind::Coordinate),
+        "ldsd" => Ok(SamplerKind::Ldsd(LdsdConfig {
+            eps: ff32(j, "eps")?,
+            gamma_mu: ff32(j, "gamma_mu")?,
+            reward_sign: ff32(j, "reward_sign")?,
+            init_norm: ff32(j, "init_norm")?,
+            renormalize: fbool(j, "renormalize")?,
+            leave_one_out: fbool(j, "leave_one_out")?,
+        })),
+        other => bail!("unknown sampler kind '{other}'"),
+    }
+}
+
+fn estimator_from_json(j: &Json) -> Result<EstimatorKind> {
+    let sampler = sampler_from_json(field(j, "sampler")?)?;
+    match fstr(j, "kind")? {
+        "central_k1" => Ok(EstimatorKind::CentralK1(sampler)),
+        "forward_avg" => Ok(EstimatorKind::ForwardAvg { k: fnum(j, "k")?, sampler }),
+        "bestofk" => Ok(EstimatorKind::BestOfK { k: fnum(j, "k")?, sampler }),
+        other => bail!("unknown estimator kind '{other}'"),
+    }
+}
+
+fn corpus_from_json(j: &Json) -> Result<CorpusSpec> {
+    Ok(CorpusSpec {
+        vocab: fhex64(j, "vocab")?,
+        seq: fnum(j, "seq")?,
+        n_classes: fhex64(j, "n_classes")?,
+        lexicon: fhex64(j, "lexicon")?,
+        min_len: fhex64(j, "min_len")?,
+        signal_min: fhex64(j, "signal_min")?,
+        signal_max: fhex64(j, "signal_max")?,
+        contra: ff64(j, "contra")?,
+        noise: ff64(j, "noise")?,
+        seed: fhex64(j, "seed")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// OracleSpec
+
+impl OracleSpec {
+    /// Canonical wire encoding.  Field-for-field the oracle identity the
+    /// spec hash covers (the PJRT variant adds the manifest model name at
+    /// the [`TrialSpec`] level, since the name lives there).
+    pub fn to_json(&self) -> Json {
+        match self {
+            OracleSpec::Pjrt => jobj(vec![("kind", jstr("pjrt"))]),
+            OracleSpec::Mlp(m) => jobj(vec![
+                ("kind", jstr("mlp")),
+                (
+                    "hidden",
+                    Json::Arr(m.hidden.iter().map(|h| jnum(*h)).collect()),
+                ),
+                ("activation", jstr(m.activation.label())),
+                ("in_dim", jnum(m.in_dim)),
+                ("corpus", jcorpus(&m.corpus)),
+                ("init_seed", jhex64(m.init_seed)),
+                ("eval_batch", jnum(m.eval_batch)),
+            ]),
+            OracleSpec::Transformer(t) => jobj(vec![
+                ("kind", jstr("transformer")),
+                ("layers", jnum(t.layers)),
+                ("heads", jnum(t.heads)),
+                ("d_model", jnum(t.d_model)),
+                ("d_ff", jnum(t.d_ff)),
+                ("lora_rank", jnum(t.lora_rank)),
+                ("lora_targets", jstr(&t.lora_targets.label())),
+                ("causal", Json::Bool(t.causal)),
+                ("pool", jstr(t.pool.label())),
+                ("corpus", jcorpus(&t.corpus)),
+                ("init_seed", jhex64(t.init_seed)),
+                ("eval_batch", jnum(t.eval_batch)),
+            ]),
+        }
+    }
+
+    /// Decode the wire encoding produced by [`OracleSpec::to_json`].
+    pub fn from_json(j: &Json) -> Result<Self> {
+        match fstr(j, "kind")? {
+            "pjrt" => Ok(OracleSpec::Pjrt),
+            "mlp" => {
+                let hidden = field(j, "hidden")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("field 'hidden' is not an array"))?
+                    .iter()
+                    .map(|h| h.as_usize().ok_or_else(|| anyhow!("bad hidden width")))
+                    .collect::<Result<Vec<usize>>>()?;
+                Ok(OracleSpec::Mlp(MlpTrial {
+                    hidden,
+                    activation: Activation::parse(fstr(j, "activation")?)?,
+                    in_dim: fnum(j, "in_dim")?,
+                    corpus: corpus_from_json(field(j, "corpus")?)?,
+                    init_seed: fhex64(j, "init_seed")?,
+                    eval_batch: fnum(j, "eval_batch")?,
+                }))
+            }
+            "transformer" => Ok(OracleSpec::Transformer(TransformerTrial {
+                layers: fnum(j, "layers")?,
+                heads: fnum(j, "heads")?,
+                d_model: fnum(j, "d_model")?,
+                d_ff: fnum(j, "d_ff")?,
+                lora_rank: fnum(j, "lora_rank")?,
+                lora_targets: LoraTargets::parse(fstr(j, "lora_targets")?)?,
+                causal: fbool(j, "causal")?,
+                pool: Pool::parse(fstr(j, "pool")?)?,
+                corpus: corpus_from_json(field(j, "corpus")?)?,
+                init_seed: fhex64(j, "init_seed")?,
+                eval_batch: fnum(j, "eval_batch")?,
+            })),
+            other => bail!("unknown oracle kind '{other}'"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TrainConfig
+
+fn config_to_json(cfg: &TrainConfig) -> Json {
+    let shuffle = match &cfg.shuffle {
+        Some(s) => jobj(vec![("n_train", jhex64(s.n_train))]),
+        None => Json::Null,
+    };
+    jobj(vec![
+        ("estimator", jestimator(&cfg.estimator)),
+        ("optimizer", jstr(&cfg.optimizer)),
+        ("lr", jf32(cfg.lr)),
+        ("tau", jf32(cfg.tau)),
+        ("budget", jhex64(cfg.budget)),
+        ("eval_every", jhex64(cfg.eval_every)),
+        ("eval_batches", jnum(cfg.eval_batches)),
+        ("cosine_schedule", Json::Bool(cfg.cosine_schedule)),
+        ("seed", jhex64(cfg.seed)),
+        ("probe_dispatch", jstr(cfg.probe_dispatch.label())),
+        ("probe_storage", jstr(cfg.probe_storage.label())),
+        ("shuffle", shuffle),
+        ("param_store", jstr(cfg.param_store.label())),
+        ("gemm", jstr(cfg.gemm.label())),
+    ])
+}
+
+fn config_from_json(j: &Json) -> Result<TrainConfig> {
+    let shuffle = match field(j, "shuffle")? {
+        Json::Null => None,
+        s => Some(ShuffleSpec { n_train: fhex64(s, "n_train")? }),
+    };
+    let param = fstr(j, "param_store")?;
+    let gemm = fstr(j, "gemm")?;
+    Ok(TrainConfig {
+        estimator: estimator_from_json(field(j, "estimator")?)?,
+        optimizer: fstr(j, "optimizer")?.to_string(),
+        lr: ff32(j, "lr")?,
+        tau: ff32(j, "tau")?,
+        budget: fhex64(j, "budget")?,
+        eval_every: fhex64(j, "eval_every")?,
+        eval_batches: fnum(j, "eval_batches")?,
+        cosine_schedule: fbool(j, "cosine_schedule")?,
+        seed: fhex64(j, "seed")?,
+        probe_dispatch: ProbeDispatch::parse(fstr(j, "probe_dispatch")?)?,
+        probe_storage: ProbeStorage::parse(fstr(j, "probe_storage")?)?,
+        checkpoint: Default::default(),
+        shuffle,
+        param_store: ParamStoreMode::parse(param)
+            .ok_or_else(|| anyhow!("unknown param store '{param}'"))?,
+        gemm: GemmMode::parse(gemm).ok_or_else(|| anyhow!("unknown gemm mode '{gemm}'"))?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// TrialSpec
+
+/// Encode an optional per-trial override as its label or `null`.
+fn jopt(label: Option<&str>) -> Json {
+    match label {
+        Some(l) => jstr(l),
+        None => Json::Null,
+    }
+}
+
+impl TrialSpec {
+    /// The one constructor path for programmatic specs: identity fields
+    /// only, every per-trial override `None`, checkpoint policy left to
+    /// the runner.  Grids and the service build specs here (or through
+    /// [`TrialSpec::from_json`], which feeds the same fields) instead of
+    /// ad-hoc struct literals, so a new field shows up in exactly one
+    /// place.
+    pub fn new(id: &str, model: &str, mode: TrainMode, config: TrainConfig, oracle: OracleSpec) -> Self {
+        let eval_batches = config.eval_batches;
+        TrialSpec {
+            id: id.to_string(),
+            model: model.to_string(),
+            mode,
+            config,
+            eval_batches,
+            probe_dispatch: None,
+            probe_storage: None,
+            param_store: None,
+            gemm: None,
+            checkpoint: None,
+            oracle,
+        }
+    }
+
+    /// Canonical wire encoding, `"schema"`-stamped.  Checkpoint policy is
+    /// not serialized (worker-local; see module docs).
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("schema", jhex64(WIRE_SCHEMA_VERSION)),
+            ("id", jstr(&self.id)),
+            ("model", jstr(&self.model)),
+            ("mode", jstr(self.mode.as_str())),
+            ("config", config_to_json(&self.config)),
+            ("eval_batches", jnum(self.eval_batches)),
+            ("probe_dispatch", jopt(self.probe_dispatch.map(|d| d.label()))),
+            ("probe_storage", jopt(self.probe_storage.map(|s| s.label()))),
+            ("param_store", jopt(self.param_store.map(|p| p.label()))),
+            ("gemm", jopt(self.gemm.map(|g| g.label()))),
+            ("oracle", self.oracle.to_json()),
+        ])
+    }
+
+    /// Decode the wire encoding produced by [`TrialSpec::to_json`],
+    /// rejecting schema versions this build does not speak.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        check_schema(j)?;
+        let opt = |k: &str| -> Result<Option<&str>> {
+            match field(j, k)? {
+                Json::Null => Ok(None),
+                v => Ok(Some(v.as_str().ok_or_else(|| {
+                    anyhow!("field '{k}' is neither null nor a string")
+                })?)),
+            }
+        };
+        let probe_dispatch = opt("probe_dispatch")?.map(ProbeDispatch::parse).transpose()?;
+        let probe_storage = opt("probe_storage")?.map(ProbeStorage::parse).transpose()?;
+        let param_store = opt("param_store")?
+            .map(|s| ParamStoreMode::parse(s).ok_or_else(|| anyhow!("unknown param store '{s}'")))
+            .transpose()?;
+        let gemm = opt("gemm")?
+            .map(|s| GemmMode::parse(s).ok_or_else(|| anyhow!("unknown gemm mode '{s}'")))
+            .transpose()?;
+        Ok(TrialSpec {
+            id: fstr(j, "id")?.to_string(),
+            model: fstr(j, "model")?.to_string(),
+            mode: TrainMode::parse(fstr(j, "mode")?)?,
+            config: config_from_json(field(j, "config")?)?,
+            eval_batches: fnum(j, "eval_batches")?,
+            probe_dispatch,
+            probe_storage,
+            param_store,
+            gemm,
+            checkpoint: None,
+            oracle: OracleSpec::from_json(field(j, "oracle")?)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TrainOutcome
+
+fn jcurve(curve: &[(u64, f64)]) -> Json {
+    Json::Arr(
+        curve
+            .iter()
+            .map(|(calls, v)| Json::Arr(vec![jhex64(*calls), jf64(*v)]))
+            .collect(),
+    )
+}
+
+fn curve_from_json(j: &Json) -> Result<Vec<(u64, f64)>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("curve is not an array"))?;
+    arr.iter()
+        .map(|p| {
+            let pair = p.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                anyhow!("curve point is not a [calls, value] pair")
+            })?;
+            let calls = pair[0]
+                .as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| anyhow!("bad curve calls"))?;
+            let v = pair[1]
+                .as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .map(f64::from_bits)
+                .ok_or_else(|| anyhow!("bad curve value bits"))?;
+            Ok((calls, v))
+        })
+        .collect()
+}
+
+impl TrainOutcome {
+    /// Canonical wire encoding, `"schema"`-stamped; curves and floats as
+    /// bit patterns, so a decode is bit-exact.
+    pub fn to_json(&self) -> Json {
+        jobj(vec![
+            ("schema", jhex64(WIRE_SCHEMA_VERSION)),
+            ("loss_curve", jcurve(&self.loss_curve)),
+            ("acc_curve", jcurve(&self.acc_curve)),
+            ("final_accuracy", jf64(self.final_accuracy)),
+            ("best_accuracy", jf64(self.best_accuracy)),
+            ("steps", jhex64(self.steps)),
+            ("oracle_calls", jhex64(self.oracle_calls)),
+            ("wall_seconds", jf64(self.wall_seconds)),
+            ("label", jstr(&self.label)),
+            ("completed", Json::Bool(self.completed)),
+        ])
+    }
+
+    /// Decode the wire encoding produced by [`TrainOutcome::to_json`].
+    pub fn from_json(j: &Json) -> Result<Self> {
+        check_schema(j)?;
+        Ok(TrainOutcome {
+            loss_curve: curve_from_json(field(j, "loss_curve")?)?,
+            acc_curve: curve_from_json(field(j, "acc_curve")?)?,
+            final_accuracy: ff64(j, "final_accuracy")?,
+            best_accuracy: ff64(j, "best_accuracy")?,
+            steps: fhex64(j, "steps")?,
+            oracle_calls: fhex64(j, "oracle_calls")?,
+            wall_seconds: ff64(j, "wall_seconds")?,
+            label: fstr(j, "label")?.to_string(),
+            completed: fbool(j, "completed")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// grid spec files
+
+/// Encode a whole grid as a `"schema"`-stamped spec file
+/// (`{"schema": ..., "trials": [...]}`) — the `zo-ldsd grid emit` output
+/// and `grid run` / `serve --specs` input.
+pub fn grid_to_json(specs: &[TrialSpec]) -> Json {
+    jobj(vec![
+        ("schema", jhex64(WIRE_SCHEMA_VERSION)),
+        ("trials", Json::Arr(specs.iter().map(|s| s.to_json()).collect())),
+    ])
+}
+
+/// Decode a grid spec file produced by [`grid_to_json`].
+pub fn grid_from_json(j: &Json) -> Result<Vec<TrialSpec>> {
+    check_schema(j)?;
+    field(j, "trials")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("field 'trials' is not an array"))?
+        .iter()
+        .enumerate()
+        .map(|(i, t)| TrialSpec::from_json(t).with_context(|| format!("trial #{i}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec_hash;
+    use super::*;
+    use crate::jsonio::{parse, to_string_canonical};
+
+    fn sample_specs() -> Vec<TrialSpec> {
+        let corpus = CorpusSpec { vocab: 64, seq: 8, ..CorpusSpec::default_mini() };
+        let mlp = OracleSpec::Mlp(MlpTrial {
+            hidden: vec![8, 4],
+            activation: Activation::Relu,
+            in_dim: 16,
+            corpus: corpus.clone(),
+            init_seed: 3,
+            eval_batch: 8,
+        });
+        let tfm = OracleSpec::Transformer(TransformerTrial {
+            layers: 2,
+            heads: 2,
+            d_model: 16,
+            d_ff: 32,
+            lora_rank: 2,
+            lora_targets: LoraTargets::qv(),
+            causal: true,
+            pool: Pool::Last,
+            corpus,
+            init_seed: 7,
+            eval_batch: 16,
+        });
+        let mut shuffled = TrainConfig::gaussian_2fwd("zo_sgd", 0.02, 64);
+        shuffled.shuffle = Some(ShuffleSpec { n_train: 4096 });
+        let mut a = TrialSpec::new(
+            "wire/mlp",
+            "mlp",
+            TrainMode::Ft,
+            TrainConfig::algorithm2("zo_adamm", 1e-3, 120),
+            mlp,
+        );
+        a.probe_storage = Some(ProbeStorage::Streamed);
+        a.gemm = Some(GemmMode::Reference);
+        let b = TrialSpec::new("wire/tfm", "tfm", TrainMode::Lora, shuffled, tfm);
+        vec![a, b]
+    }
+
+    #[test]
+    fn trial_spec_roundtrip_preserves_spec_hash() {
+        for spec in sample_specs() {
+            let j = spec.to_json();
+            // canonical text is stable through a parse/re-encode cycle
+            let text = to_string_canonical(&j);
+            let back = TrialSpec::from_json(&parse(&text).unwrap()).unwrap();
+            assert_eq!(text, to_string_canonical(&back.to_json()));
+            // wire identity == cache identity: the decoded spec hashes
+            // identically, so a remote outcome slots into the grid lock
+            assert_eq!(
+                spec_hash(&spec, &spec.config),
+                spec_hash(&back, &back.config),
+                "spec '{}' must keep its hash across the wire",
+                spec.id
+            );
+            assert_eq!(spec.id, back.id);
+            assert_eq!(spec.eval_batches, back.eval_batches);
+            assert_eq!(spec.probe_storage, back.probe_storage);
+            assert_eq!(spec.gemm, back.gemm);
+            assert!(back.checkpoint.is_none(), "checkpoint policy must not travel");
+        }
+    }
+
+    #[test]
+    fn grid_file_roundtrip() {
+        let specs = sample_specs();
+        let text = format!("{}\n", to_string_canonical(&grid_to_json(&specs)));
+        let back = grid_from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), specs.len());
+        for (a, b) in specs.iter().zip(&back) {
+            assert_eq!(
+                to_string_canonical(&a.to_json()),
+                to_string_canonical(&b.to_json())
+            );
+        }
+    }
+
+    #[test]
+    fn outcome_roundtrip_is_bit_exact() {
+        let out = TrainOutcome {
+            // PI has a messy bit pattern (not representable in short
+            // decimal) — proves bit-exactness survives the hex encoding
+            loss_curve: vec![(2, 0.75), (4, std::f64::consts::PI)],
+            acc_curve: vec![(4, 0.5)],
+            final_accuracy: 0.8125,
+            best_accuracy: 0.875,
+            steps: 24,
+            oracle_calls: 120,
+            wall_seconds: 1.5,
+            label: "bestofk5/ldsd+zo_sgd".into(),
+            completed: true,
+        };
+        let back = TrainOutcome::from_json(&out.to_json()).unwrap();
+        assert_eq!(out.final_accuracy.to_bits(), back.final_accuracy.to_bits());
+        assert_eq!(out.loss_curve, back.loss_curve);
+        assert_eq!(out.acc_curve, back.acc_curve);
+        assert_eq!(out.label, back.label);
+        assert_eq!(out.steps, back.steps);
+        assert!(back.completed);
+    }
+
+    #[test]
+    fn unknown_schema_version_is_rejected() {
+        let spec = &sample_specs()[0];
+        let mut j = spec.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), jhex64(WIRE_SCHEMA_VERSION + 1));
+        }
+        let err = TrialSpec::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("schema"), "{err}");
+        let missing = jobj(vec![("id", jstr("x"))]);
+        assert!(TrialSpec::from_json(&missing).is_err());
+    }
+}

@@ -202,6 +202,20 @@ impl ExecContext {
         Self::new(threads)
     }
 
+    /// Resolve a worker budget under the uniform CONFIGURED > ENV
+    /// precedence contract (DESIGN.md §17): an explicit configuration
+    /// (`--threads N`, N > 0) wins; `configured == 0` means unconfigured
+    /// and defers to `ZO_THREADS`, then the core-count default
+    /// ([`ExecContext::from_env`]).  The CLI threads every `--threads`
+    /// flag through here so all subcommands resolve identically.
+    pub fn resolve(configured: usize) -> Self {
+        if configured > 0 {
+            Self::new(configured)
+        } else {
+            Self::from_env()
+        }
+    }
+
     /// Override the shard length (element count per shard; must be > 0).
     /// Changing it changes sampler substream keying, so runs are only
     /// reproducible at a fixed shard length.

@@ -51,6 +51,15 @@
 //! canonical spec hash through `grid.lock.json`, and mark-and-sweep GC
 //! rooted at manifests reclaims unreachable objects (DESIGN.md §16).
 //!
+//! Grids farm out over machines through the [`service`] subsystem
+//! (`zo serve` / `zo work`): a coordinator leases spec-hash-keyed
+//! trials and loss-evaluation shards to polling workers over a
+//! vendored HTTP/1.1 + canonical-JSON wire (schema-versioned
+//! [`coordinator::wire`]), workers sync store objects by hash, and the
+//! merged report is byte-identical to the single-process run — leases
+//! requeue on expiry, so a worker killed mid-trial never corrupts the
+//! grid (DESIGN.md §17).
+//!
 //! The first *network* workload is the forward-only MLP classifier
 //! ([`oracle::MlpOracle`] over the [`model::mlp`] core, `--oracle mlp`):
 //! forward evaluation — not probe algebra — dominates its step, it rides
@@ -79,6 +88,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod sampler;
+pub mod service;
 pub mod snapshot;
 pub mod store;
 pub mod tensor;

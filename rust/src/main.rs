@@ -1,24 +1,33 @@
-//! zo-ldsd: the L3 coordinator CLI.
+//! zo-ldsd: the L3 coordinator CLI (also installed as `zo`).
 //!
-//! Subcommands:
+//! Subcommand surface (each supports `--help`):
 //!   info                      inspect artifacts/manifest + runtime
 //!   train                     one fine-tuning run (model x mode x method)
+//!   grid                      emit / run wire-format trial grids
+//!   serve                     coordinator: farm a grid to workers (§17)
+//!   work                      worker: poll a coordinator for leases
 //!   toy                       Fig. 2 toy experiment (DGD on a9a-like data)
 //!   landscape                 Fig. 1 alignment landscape grid
 //!   memory                    ZO-vs-FO memory table
 //!   store                     content-addressed store maintenance
 //!                             (gc | verify | ls; DESIGN.md §16)
+//!   bench-gate                the CI benchmark-regression gate
 //!
 //! Benches regenerate the paper's tables/figures: `cargo bench`.
 
-use anyhow::{bail, Result};
+use std::time::Duration;
 
-use zo_ldsd::cli::Args;
+use anyhow::{anyhow, bail, Result};
+
+use zo_ldsd::cli::{Args, CommandSpec};
 use zo_ldsd::config::{Manifest, TrainMode};
+use zo_ldsd::coordinator::wire;
 use zo_ldsd::coordinator::{
-    run_local_trial, run_trial, MlpTrial, OracleSpec, TransformerTrial, TrialSpec,
+    deterministic_report, run_grid, run_local_trial, run_trial, table1_grid, MlpTrial,
+    OracleSpec, TransformerTrial, TrialResult, TrialSpec,
 };
 use zo_ldsd::data::{CorpusSpec, SyntheticRegression};
+use zo_ldsd::exec::ExecContext;
 use zo_ldsd::metrics::MemoryReport;
 use zo_ldsd::model::{Activation, LoraTargets, MlpSpec, Pool};
 use zo_ldsd::optim::{DgdConfig, DgdRunner};
@@ -26,44 +35,177 @@ use zo_ldsd::oracle::{LinRegOracle, Oracle};
 use zo_ldsd::report::Table;
 use zo_ldsd::runtime::Runtime;
 use zo_ldsd::sampler::expected_alignment_mc;
+use zo_ldsd::service::{Coordinator, CoordinatorConfig, WorkerConfig};
 use zo_ldsd::train::TrainConfig;
 
-const USAGE: &str = "\
-zo-ldsd <command> [options]
-
-commands:
-  info                         show manifest + runtime status
+/// Every subcommand's declared surface: usage, options, flags.  The
+/// global options `--threads` and `--store-dir` are shared by listing
+/// them in each accepting command.
+const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "info",
+        summary: "show manifest + runtime status",
+        usage: "  info [--artifacts DIR]",
+        opts: &["artifacts"],
+        flags: &[],
+    },
+    CommandSpec {
+        name: "train",
+        summary: "one fine-tuning run (model x mode x method)",
+        usage: "\
   train --model M --mode ft|lora --method 2fwd|6fwd|alg2
-        [--oracle pjrt|mlp|transformer]
+        [--oracle pjrt|mlp|transformer] [--config FILE] [--set K=V]...
         [--hidden 64,64] [--activation tanh|relu] [--in-dim N]
         [--layers N] [--heads N] [--d-model N] [--d-ff N]
         [--lora-rank N] [--lora-targets qv|qkvo|...]
         [--pool cls|last] [--causal 0|1] [--train-examples N]
         [--optimizer zo_sgd|zo_adamm|jaguar] [--lr F] [--budget N]
-        [--eval-every N] [--seed N] [--artifacts DIR]
+        [--eval-every N] [--eval-batches N] [--seed N] [--artifacts DIR]
         [--probe-dispatch batched|per-probe] [--threads N]
         [--probe-storage auto|materialized|streamed]
         [--param-store f32|f16|int8] [--gemm reference|blocked]
         [--checkpoint-dir DIR] [--checkpoint-every N] [--resume]
         [--store-dir DIR] [--max-run-steps N]
-  toy   [--steps N] [--variant baseline|ldsd] [--seed N]
-  landscape [--grid N] [--eps F]
-  memory [--model M] [--artifacts DIR]
-  store gc|verify|ls [--store-dir DIR] [--checkpoint-dir DIR]
-        [--root DIR]...
 
 `--oracle mlp` trains the forward-only MLP classifier on the synthetic
 corpus — no artifacts needed; epoch-shuffled minibatches by default
 (--train-examples 4096, 0 = sequential).
 `--oracle transformer` trains the host-side decoder transformer on the
 same corpus — also artifact-free; --mode lora restricts the trainable
-subspace to the LoRA adapters + head (probe dimension = adapter count).
+subspace to the LoRA adapters + head.
 Snapshots and completed-trial records live in a content-addressed store
-(default <checkpoint-dir>/store; --store-dir or ZO_STORE_DIR override).
-`store verify` re-hashes every object, `store gc` mark-and-sweeps
-unreachable ones (roots: the store's parent tree, plus any --root), and
-`store ls` lists objects (DESIGN.md §16).
-";
+(default <checkpoint-dir>/store; --store-dir beats ZO_STORE_DIR beats
+the default — DESIGN.md §17).",
+        opts: &[
+            "model", "mode", "method", "oracle", "config", "set", "hidden", "activation",
+            "in-dim", "layers", "heads", "d-model", "d-ff", "lora-rank", "lora-targets",
+            "pool", "causal", "train-examples", "optimizer", "lr", "budget", "eval-every",
+            "eval-batches", "seed", "artifacts", "probe-dispatch", "threads",
+            "probe-storage", "param-store", "gemm", "checkpoint-dir", "checkpoint-every",
+            "store-dir", "max-run-steps",
+        ],
+        flags: &["resume"],
+    },
+    CommandSpec {
+        name: "grid",
+        summary: "emit / run wire-format trial grids",
+        usage: "\
+  grid emit --preset table1-smoke|table1|table1-full [--budget N]
+            [--out FILE]
+  grid run  --specs FILE [--checkpoint-dir DIR] [--threads N]
+            [--artifacts DIR] [--report FILE] [--expect-cached]
+
+`emit` writes a schema-versioned wire grid file (the exact JSON the
+service protocol ships); `run` executes one in-process through
+run_grid.  --checkpoint-dir turns on per-trial checkpoint + resume with
+the grid's warm-start cache; --report writes the deterministic
+canonical report (byte-comparable across runs and against `serve`);
+--expect-cached asserts every trial was served from the cache with
+zero training-session oracle calls.",
+        opts: &["preset", "budget", "out", "specs", "checkpoint-dir", "threads",
+                "artifacts", "report"],
+        flags: &["expect-cached"],
+    },
+    CommandSpec {
+        name: "serve",
+        summary: "coordinator: farm a grid to workers over HTTP/JSON",
+        usage: "\
+  serve --dir DIR [--addr HOST:PORT] [--addr-file FILE] [--specs FILE]
+        [--lease-timeout-ms N] [--poll-ms N] [--until-done]
+        [--report FILE] [--expect-cached]
+
+Binds the coordinator (default 127.0.0.1:0; --addr-file records the
+bound address for scripts), resumes any queue.json persisted by a
+previous coordinator in --dir, and enqueues --specs (idempotent by
+canonical spec hash; trials already pinned in grid.lock.json are served
+from the store with zero training steps).  Leases expire after
+--lease-timeout-ms (default 60000) and requeue.  --until-done blocks
+until every trial is terminal, writes the deterministic report, and
+shuts down gracefully (persisting the queue); without it the
+coordinator serves until killed.",
+        opts: &["dir", "addr", "addr-file", "specs", "lease-timeout-ms", "poll-ms",
+                "report"],
+        flags: &["until-done", "expect-cached"],
+    },
+    CommandSpec {
+        name: "work",
+        summary: "worker: poll a coordinator for leased trials",
+        usage: "\
+  work --connect HOST:PORT --dir DIR [--threads N] [--poll-ms N]
+       [--retries N] [--backoff-ms N] [--max-leases N]
+
+Polls the coordinator for leases, runs trials through the local grid
+path (checkpoint + resume in --dir, blobs in --dir/store), pushes each
+outcome record and its curve blobs into the coordinator's store, and
+submits the result.  RPCs retry --retries times with exponential
+backoff from --backoff-ms.  Exits when the coordinator reports the
+queue done (or after --max-leases leases).",
+        opts: &["connect", "dir", "threads", "poll-ms", "retries", "backoff-ms",
+                "max-leases"],
+        flags: &[],
+    },
+    CommandSpec {
+        name: "toy",
+        summary: "Fig. 2 toy experiment (DGD on a9a-like data)",
+        usage: "  toy [--steps N] [--variant baseline|ldsd] [--seed N]",
+        opts: &["steps", "variant", "seed"],
+        flags: &[],
+    },
+    CommandSpec {
+        name: "landscape",
+        summary: "Fig. 1 alignment landscape grid",
+        usage: "  landscape [--grid N] [--eps F]",
+        opts: &["grid", "eps"],
+        flags: &[],
+    },
+    CommandSpec {
+        name: "memory",
+        summary: "ZO-vs-FO memory table",
+        usage: "  memory [--model M] [--artifacts DIR]",
+        opts: &["model", "artifacts"],
+        flags: &[],
+    },
+    CommandSpec {
+        name: "store",
+        summary: "content-addressed store maintenance (DESIGN.md §16)",
+        usage: "\
+  store gc|verify|ls [--store-dir DIR] [--checkpoint-dir DIR]
+        [--root DIR]...
+
+The store root resolves --store-dir, then ZO_STORE_DIR (nonempty),
+then <--checkpoint-dir>/store — the uniform CONFIGURED > ENV
+precedence (DESIGN.md §17).  `verify` re-hashes every object, `gc`
+mark-and-sweeps unreachable ones (roots: the store's parent tree plus
+any --root), `ls` lists objects.",
+        opts: &["store-dir", "checkpoint-dir", "root"],
+        flags: &[],
+    },
+    CommandSpec {
+        name: "bench-gate",
+        summary: "the CI benchmark-regression gate",
+        usage: "\
+  bench-gate --baseline FILE --current FILE
+             [--threshold 0.20] [--bytes-threshold 0.20]
+             [--gate loss_k,axpy_k,...] [--ab-max-ratio 0.67]
+             [--ab-prefix lanes/] [--ab-specs P:slow:fast:R[,...]]
+             [--store-dir DIR] [--store-label L]
+
+Also installed as the standalone `bench-gate` binary; both run the
+same driver (see DESIGN.md §12).",
+        opts: &["baseline", "current", "threshold", "bytes-threshold", "gate",
+                "ab-max-ratio", "ab-prefix", "ab-specs", "store-dir", "store-label"],
+        flags: &[],
+    },
+];
+
+fn global_usage() -> String {
+    let mut out = String::from("zo <command> [options]   (each command supports --help)\n\ncommands:\n");
+    for c in COMMANDS {
+        out.push_str(&format!("  {:<12} {}\n", c.name, c.summary));
+    }
+    out.push_str("\nBenches regenerate the paper's tables/figures: `cargo bench`.\n");
+    out
+}
 
 fn main() {
     if let Err(e) = run() {
@@ -72,22 +214,41 @@ fn main() {
     }
 }
 
+fn command(name: &str) -> &'static CommandSpec {
+    COMMANDS
+        .iter()
+        .find(|c| c.name == name)
+        .expect("dispatch table covers every parsed subcommand")
+}
+
 fn run() -> Result<()> {
+    let names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
     let args = Args::from_env_with_flags(
-        &["info", "train", "toy", "landscape", "memory", "store"],
-        &["resume"],
+        &names,
+        &["resume", "help", "until-done", "expect-cached"],
     )?;
-    match args.subcommand.as_deref() {
-        Some("info") => cmd_info(&args),
-        Some("train") => cmd_train(&args),
-        Some("toy") => cmd_toy(&args),
-        Some("landscape") => cmd_landscape(&args),
-        Some("memory") => cmd_memory(&args),
-        Some("store") => cmd_store(&args),
-        _ => {
-            print!("{USAGE}");
-            Ok(())
-        }
+    let Some(name) = args.subcommand.as_deref() else {
+        print!("{}", global_usage());
+        return Ok(());
+    };
+    let spec = command(name);
+    if args.flag("help") {
+        println!("{}", spec.help());
+        return Ok(());
+    }
+    spec.validate(&args)?;
+    match name {
+        "info" => cmd_info(&args),
+        "train" => cmd_train(&args),
+        "grid" => cmd_grid(&args),
+        "serve" => cmd_serve(&args),
+        "work" => cmd_work(&args),
+        "toy" => cmd_toy(&args),
+        "landscape" => cmd_landscape(&args),
+        "memory" => cmd_memory(&args),
+        "store" => cmd_store(&args),
+        "bench-gate" => zo_ldsd::bench::regression::gate_cli(&args),
+        _ => unreachable!("dispatch table covers every parsed subcommand"),
     }
 }
 
@@ -189,8 +350,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         every: kv.get_u64_or("checkpoint.every", 0)?,
         resume: args.flag("resume") || kv.get_bool_or("checkpoint.resume", false)?,
         max_run_steps: kv.get_u64_or("checkpoint.max_run_steps", 0)?,
-        // blob store location; None = <checkpoint-dir>/store, ZO_STORE_DIR
-        // beats both (DESIGN.md §16)
+        // blob store location; None = <checkpoint-dir>/store unless
+        // ZO_STORE_DIR forces the unconfigured default (DESIGN.md §17)
         store_dir: kv.get("store.dir").map(String::from),
     };
     if cfg.checkpoint.every > 0 && cfg.checkpoint.dir.is_none() {
@@ -240,14 +401,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     };
     // --threads 0 (the default) means "size from the environment":
-    // ZO_THREADS if set, else cores - 1.  Results are bitwise identical
-    // for any thread count (DESIGN.md §9).
+    // ZO_THREADS if set, else cores - 1 — the shared CONFIGURED > ENV
+    // resolution (DESIGN.md §17).  Results are bitwise identical for any
+    // thread count (DESIGN.md §9).
     let threads = kv.get_u64_or("threads", 0)? as usize;
-    let exec = if threads == 0 {
-        zo_ldsd::exec::ExecContext::from_env()
-    } else {
-        zo_ldsd::exec::ExecContext::new(threads)
-    };
+    let exec = ExecContext::resolve(threads);
 
     let eval_batches = args.get_usize("eval-batches", 8)?;
     let (id, oracle) = match oracle_kind.as_str() {
@@ -367,6 +525,181 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Load a wire grid file (as written by `grid emit` or persisted by the
+/// coordinator) into specs.
+fn load_specs(path: &str) -> Result<Vec<TrialSpec>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading grid file {path}: {e}"))?;
+    let j = zo_ldsd::jsonio::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    wire::grid_from_json(&j)
+}
+
+/// Summarize grid results, write the deterministic report when asked,
+/// and enforce `--expect-cached`.  Shared by `grid run` and `serve`.
+fn finish_grid(
+    results: &[Result<TrialResult>],
+    report_path: Option<&str>,
+    expect_cached: bool,
+) -> Result<()> {
+    let mut failures = 0usize;
+    let mut cache_misses: Vec<String> = Vec::new();
+    for r in results {
+        match r {
+            Ok(tr) => {
+                println!(
+                    "  {}  acc {:.4}  steps {}  calls {}{}",
+                    tr.spec_id,
+                    tr.outcome.final_accuracy,
+                    tr.outcome.steps,
+                    tr.outcome.oracle_calls,
+                    if tr.cached { "  (cached)" } else { "" },
+                );
+                if expect_cached && !(tr.cached && tr.session_oracle_calls == 0) {
+                    cache_misses.push(format!(
+                        "{} (cached {}, session oracle calls {})",
+                        tr.spec_id, tr.cached, tr.session_oracle_calls
+                    ));
+                }
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("  trial failed: {e:#}");
+            }
+        }
+    }
+    if let Some(path) = report_path {
+        std::fs::write(path, deterministic_report(results))
+            .map_err(|e| anyhow!("writing report {path}: {e}"))?;
+        println!("wrote deterministic report to {path}");
+    }
+    if expect_cached && !cache_misses.is_empty() {
+        bail!(
+            "--expect-cached but {} trial(s) ran cold: {}",
+            cache_misses.len(),
+            cache_misses.join("; ")
+        );
+    }
+    if failures > 0 {
+        bail!("{failures} trial(s) failed");
+    }
+    Ok(())
+}
+
+fn cmd_grid(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("emit") => {
+            let preset = args.get_or("preset", "table1-smoke");
+            let (default_budget, full, smoke) = match preset {
+                "table1-smoke" => (120, false, true),
+                "table1" => (2400, false, false),
+                "table1-full" => (2400, true, false),
+                other => bail!("unknown preset '{other}' (table1-smoke|table1|table1-full)"),
+            };
+            let budget = args.get_u64("budget", default_budget)?;
+            let specs = table1_grid(budget, full, smoke);
+            let text = format!(
+                "{}\n",
+                zo_ldsd::jsonio::to_string_canonical(&wire::grid_to_json(&specs))
+            );
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, text)
+                        .map_err(|e| anyhow!("writing grid file {path}: {e}"))?;
+                    println!("wrote {} trial spec(s) to {path}", specs.len());
+                }
+                None => print!("{text}"),
+            }
+            Ok(())
+        }
+        Some("run") => {
+            let mut specs = load_specs(args.require("specs")?)?;
+            if let Some(d) = args.get("checkpoint-dir") {
+                for s in &mut specs {
+                    s.checkpoint = Some(zo_ldsd::snapshot::CheckpointConfig {
+                        dir: Some(d.to_string()),
+                        every: 0,
+                        resume: true,
+                        max_run_steps: 0,
+                        store_dir: None,
+                    });
+                }
+            }
+            let exec = ExecContext::resolve(args.get_usize("threads", 0)?);
+            println!(
+                "grid run: {} trial(s) on {} thread(s)",
+                specs.len(),
+                exec.threads()
+            );
+            let results = run_grid(&artifacts_dir(args), specs, &exec);
+            finish_grid(&results, args.get("report"), args.flag("expect-cached"))
+        }
+        Some(other) => bail!("unknown grid action '{other}' (emit|run)"),
+        None => bail!("grid needs an action (emit|run); see `grid --help`"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.require("dir")?;
+    let mut coordinator = Coordinator::bind(CoordinatorConfig {
+        addr: args.get_or("addr", "127.0.0.1:0").to_string(),
+        dir: dir.into(),
+        lease_timeout: Duration::from_millis(args.get_u64("lease-timeout-ms", 60_000)?),
+    })?;
+    let addr = coordinator.addr();
+    println!("coordinator listening on {addr}");
+    if let Some(path) = args.get("specs") {
+        let specs = load_specs(path)?;
+        let total = specs.len();
+        let cached = coordinator.enqueue(specs)?;
+        println!("enqueued {total} trial(s), {cached} served from the warm-start cache");
+    }
+    // written only after --specs are queued: a worker gated on this file
+    // can never observe the pre-enqueue (empty, trivially "done") queue
+    if let Some(path) = args.get("addr-file") {
+        std::fs::write(path, format!("{addr}\n"))
+            .map_err(|e| anyhow!("writing addr file {path}: {e}"))?;
+    }
+    if !args.flag("until-done") {
+        // serve until killed: the queue persists on graceful shutdown
+        // requests (POST /api/v1/shutdown) and survives restarts
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let poll = Duration::from_millis(args.get_u64("poll-ms", 50)?);
+    let results = coordinator.run_until_done(poll)?;
+    let stats = coordinator.stats();
+    println!(
+        "queue drained: {} lease(s), {} requeue(s), {} outcome(s), {} duplicate(s), {} cached",
+        stats.leases_granted,
+        stats.requeues,
+        stats.outcomes_accepted,
+        stats.duplicates,
+        stats.cached_on_enqueue,
+    );
+    coordinator.shutdown()?;
+    finish_grid(&results, args.get("report"), args.flag("expect-cached"))
+}
+
+fn cmd_work(args: &Args) -> Result<()> {
+    let max_leases = args.get_u64("max-leases", 0)?;
+    let cfg = WorkerConfig {
+        connect: args.require("connect")?.to_string(),
+        dir: args.require("dir")?.into(),
+        threads: args.get_usize("threads", 0)?,
+        poll: Duration::from_millis(args.get_u64("poll-ms", 50)?),
+        retries: args.get_u64("retries", 4)? as u32,
+        backoff: Duration::from_millis(args.get_u64("backoff-ms", 100)?),
+        max_leases: if max_leases == 0 { None } else { Some(max_leases) },
+    };
+    let report = zo_ldsd::service::run_worker(&cfg)?;
+    println!(
+        "worker done: {} trial(s), {} eval shard(s), {} error(s)",
+        report.trials_run, report.evals_run, report.errors
+    );
+    Ok(())
+}
+
 fn cmd_toy(args: &Args) -> Result<()> {
     let steps = args.get_usize("steps", 400)?;
     let seed = args.get_u64("seed", 1)?;
@@ -418,17 +751,19 @@ fn cmd_landscape(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Resolve the store root for the `store` subcommand with the same
-/// precedence the training path uses: `ZO_STORE_DIR` (when nonempty)
-/// beats `--store-dir`, which beats `<--checkpoint-dir>/store`.
+/// Resolve the store root for the `store` subcommand under the uniform
+/// CONFIGURED > ENV precedence contract (DESIGN.md §17): an explicit
+/// `--store-dir` wins, then `ZO_STORE_DIR` (nonempty), then
+/// `<--checkpoint-dir>/store` — the same ordering
+/// [`zo_ldsd::snapshot::resolve_store_dir`] applies on the training path.
 fn store_root(args: &Args) -> Result<std::path::PathBuf> {
+    if let Some(d) = args.get("store-dir") {
+        return Ok(std::path::PathBuf::from(d));
+    }
     if let Ok(env) = std::env::var("ZO_STORE_DIR") {
         if !env.trim().is_empty() {
             return Ok(std::path::PathBuf::from(env));
         }
-    }
-    if let Some(d) = args.get("store-dir") {
-        return Ok(std::path::PathBuf::from(d));
     }
     if let Some(d) = args.get("checkpoint-dir") {
         return Ok(std::path::Path::new(d).join("store"));

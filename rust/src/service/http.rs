@@ -1,0 +1,436 @@
+//! Minimal vendored HTTP/1.1 over [`std::net`] — just enough protocol
+//! for the coordinator/worker wire (DESIGN.md §17): one request per
+//! connection (`connection: close`), explicit `content-length` framing
+//! (no chunked encoding), JSON or raw-byte bodies.  The parser is
+//! generic over [`std::io::Read`] so malformed-request and partial-body
+//! behaviour is unit-testable against in-memory cursors without a
+//! socket.
+//!
+//! No new dependencies: this module is the transport the service
+//! subsystem runs on inside the container's std-only toolchain.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonio::{to_string_canonical, Json};
+
+/// Hard cap on the request/response head (request line + headers).
+/// Anything larger is a malformed or hostile peer and fails parsing.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Hard cap on a message body.  Store objects (curve blobs, outcome
+/// manifests, parameter images) stay far below this.
+pub const MAX_BODY_BYTES: usize = 256 * 1024 * 1024;
+
+/// Per-connection socket read/write timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Accept-loop poll interval while the listener is idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Request method, verbatim (`GET`, `POST`).
+    pub method: String,
+    /// Request path, verbatim (no query parsing — routes are exact).
+    pub path: String,
+    /// Header fields, names lowercased, values trimmed.
+    pub headers: BTreeMap<String, String>,
+    /// Request body (empty when no `content-length` was sent).
+    pub body: Vec<u8>,
+}
+
+/// One HTTP response to serialize.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Status code (200, 400, 404, 409, 500).
+    pub status: u16,
+    /// `content-type` header value.
+    pub content_type: String,
+    /// Response body.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A 200 response carrying canonical JSON.
+    pub fn json(j: &Json) -> Response {
+        Response {
+            status: 200,
+            content_type: "application/json".to_string(),
+            body: format!("{}\n", to_string_canonical(j)).into_bytes(),
+        }
+    }
+
+    /// A 200 response carrying raw bytes (store objects).
+    pub fn bytes(body: Vec<u8>) -> Response {
+        Response {
+            status: 200,
+            content_type: "application/octet-stream".to_string(),
+            body,
+        }
+    }
+
+    /// An error response with a JSON `{"error": ...}` body.
+    pub fn error(status: u16, msg: &str) -> Response {
+        let mut m = BTreeMap::new();
+        m.insert("error".to_string(), Json::Str(msg.to_string()));
+        Response {
+            status,
+            content_type: "application/json".to_string(),
+            body: format!("{}\n", to_string_canonical(&Json::Obj(m))).into_bytes(),
+        }
+    }
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if present.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read one framed message: accumulate the head up to `\r\n\r\n`, then
+/// exactly `content-length` body bytes.  Returns the raw head text and
+/// the body.  Errors name the failure mode (truncated head, oversized
+/// head, partial body) so the server can answer 400 with a cause.
+fn read_framed<R: Read>(stream: &mut R) -> Result<(String, Vec<u8>)> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let head_len = loop {
+        if let Some(pos) = head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            bail!("message head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let n = stream.read(&mut tmp).context("reading message head")?;
+        if n == 0 {
+            bail!("connection closed mid-head (truncated message)");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_len])
+        .map_err(|_| anyhow!("message head is not UTF-8"))?
+        .to_string();
+    let body_len = content_length(&head)?;
+    if body_len > MAX_BODY_BYTES {
+        bail!("declared body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap");
+    }
+    let mut body = buf[head_len + 4..].to_vec();
+    while body.len() < body_len {
+        let n = stream.read(&mut tmp).context("reading message body")?;
+        if n == 0 {
+            bail!(
+                "connection closed mid-body: got {} of {} declared bytes (partial body)",
+                body.len(),
+                body_len
+            );
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(body_len);
+    Ok((head, body))
+}
+
+/// Parse the `content-length` header out of a raw message head
+/// (0 when absent, error when present but non-numeric).
+fn content_length(head: &str) -> Result<usize> {
+    for line in head.split("\r\n").skip(1) {
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            let v = value.trim();
+            return v
+                .parse::<usize>()
+                .map_err(|_| anyhow!("malformed content-length '{v}'"));
+        }
+    }
+    Ok(0)
+}
+
+/// Parse one HTTP request from a stream.  Generic over [`Read`] so the
+/// malformed/partial-body paths are testable with in-memory cursors.
+pub fn read_request<R: Read>(stream: &mut R) -> Result<Request> {
+    let (head, body) = read_framed(stream)?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && p.starts_with('/') => (m, p, v),
+        _ => bail!("malformed request line '{request_line}'"),
+    };
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol version '{version}'");
+    }
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            bail!("malformed header line '{line}'");
+        };
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+    Ok(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+    })
+}
+
+/// Serialize a response onto a stream (`connection: close` framing).
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> Result<()> {
+    let reason = match resp.status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        _ => "Status",
+    };
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        resp.status,
+        reason,
+        resp.content_type,
+        resp.body.len()
+    )
+    .context("writing response head")?;
+    w.write_all(&resp.body).context("writing response body")?;
+    w.flush().context("flushing response")?;
+    Ok(())
+}
+
+/// Parse one HTTP response from a stream: `(status, body)`.
+pub fn read_response<R: Read>(stream: &mut R) -> Result<(u16, Vec<u8>)> {
+    let (head, body) = read_framed(stream)?;
+    let status_line = head.split("\r\n").next().unwrap_or("");
+    let mut parts = status_line.split(' ');
+    let (version, code) = match (parts.next(), parts.next()) {
+        (Some(v), Some(c)) => (v, c),
+        _ => bail!("malformed status line '{status_line}'"),
+    };
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol version '{version}'");
+    }
+    let status = code
+        .parse::<u16>()
+        .map_err(|_| anyhow!("malformed status code '{code}'"))?;
+    Ok((status, body))
+}
+
+/// The request handler a server dispatches each parsed request through.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A polling single-listener HTTP server: nonblocking accept loop with a
+/// shared stop flag (graceful shutdown), one thread per connection, one
+/// request per connection.
+pub struct HttpServer {
+    listener: TcpListener,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind a listener (e.g. `127.0.0.1:0` for an OS-assigned port).
+    pub fn bind(addr: &str) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener nonblocking")?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        Ok(HttpServer {
+            listener,
+            addr,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (resolves an OS-assigned port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared stop flag: set it true and `serve` returns after its
+    /// next poll tick.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept connections until the stop flag is raised, dispatching each
+    /// request through `handler`.  Parse failures answer 400 with the
+    /// parse error; handler panics are confined to their connection
+    /// thread.
+    pub fn serve(&self, handler: Handler) {
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let h = Arc::clone(&handler);
+                    std::thread::spawn(move || handle_connection(stream, h));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => std::thread::sleep(ACCEPT_POLL),
+            }
+        }
+    }
+}
+
+/// Serve one connection: parse, dispatch, answer, close.
+fn handle_connection(mut stream: TcpStream, handler: Handler) {
+    // Accepted sockets can inherit the listener's nonblocking mode on
+    // some platforms; this connection uses blocking reads with timeouts.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let resp = match read_request(&mut stream) {
+        Ok(req) => handler(&req),
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    };
+    let _ = write_response(&mut stream, &resp);
+}
+
+/// One client request/response exchange against `addr` (`host:port`):
+/// connect, send, read `(status, body)`, close.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    )
+    .with_context(|| format!("sending {method} {path}"))?;
+    stream
+        .write_all(body)
+        .with_context(|| format!("sending {method} {path} body"))?;
+    stream.flush().context("flushing request")?;
+    read_response(&mut stream).with_context(|| format!("reading {method} {path} response"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req_bytes(head: &str, body: &[u8]) -> Vec<u8> {
+        let mut v = head.as_bytes().to_vec();
+        v.extend_from_slice(body);
+        v
+    }
+
+    #[test]
+    fn parses_a_well_formed_post() {
+        let body = br#"{"k":1}"#;
+        let raw = req_bytes(
+            &format!(
+                "POST /api/v1/lease HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+                body.len()
+            ),
+            body,
+        );
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/api/v1/lease");
+        assert_eq!(req.headers.get("content-type").map(String::as_str), Some("application/json"));
+        assert_eq!(req.body, body);
+    }
+
+    #[test]
+    fn get_without_content_length_has_empty_body() {
+        let raw = req_bytes("GET /api/v1/ping HTTP/1.1\r\n\r\n", b"");
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_request_line() {
+        for raw in [
+            "GARBAGE\r\n\r\n".to_string(),
+            "GET\r\n\r\n".to_string(),
+            "GET /x HTTP/1.1 extra\r\n\r\n".to_string(),
+            "GET nopath HTTP/1.1\r\n\r\n".to_string(),
+            "GET /x SPDY/9\r\n\r\n".to_string(),
+        ] {
+            let err = read_request(&mut Cursor::new(raw.into_bytes())).unwrap_err();
+            let msg = format!("{err}");
+            assert!(
+                msg.contains("malformed request line") || msg.contains("unsupported protocol"),
+                "unexpected error: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_partial_body() {
+        // declares 10 bytes, delivers 4, then EOF
+        let raw = req_bytes("POST /x HTTP/1.1\r\ncontent-length: 10\r\n\r\n", b"only");
+        let err = read_request(&mut Cursor::new(raw)).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("partial body"), "unexpected error: {msg}");
+        assert!(msg.contains("4 of 10"), "unexpected error: {msg}");
+    }
+
+    #[test]
+    fn rejects_truncated_head_and_oversized_head() {
+        let err = read_request(&mut Cursor::new(b"POST /x HTT".to_vec())).unwrap_err();
+        assert!(format!("{err}").contains("truncated"));
+
+        let mut huge = b"GET /x HTTP/1.1\r\n".to_vec();
+        huge.extend_from_slice("x-pad: ".as_bytes());
+        huge.extend_from_slice(&vec![b'a'; MAX_HEAD_BYTES + 64]);
+        let err = read_request(&mut Cursor::new(huge)).unwrap_err();
+        assert!(format!("{err}").contains("exceeds"));
+    }
+
+    #[test]
+    fn rejects_bad_content_length_and_bad_header() {
+        let raw = req_bytes("POST /x HTTP/1.1\r\ncontent-length: soon\r\n\r\n", b"");
+        let err = read_request(&mut Cursor::new(raw)).unwrap_err();
+        assert!(format!("{err}").contains("malformed content-length"));
+
+        let raw = req_bytes("POST /x HTTP/1.1\r\nnocolonhere\r\n\r\n", b"");
+        let err = read_request(&mut Cursor::new(raw)).unwrap_err();
+        assert!(format!("{err}").contains("malformed header line"));
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = Response::bytes(vec![1, 2, 3, 4, 5]);
+        let mut wire = Vec::new();
+        write_response(&mut wire, &resp).unwrap();
+        let (status, body) = read_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, vec![1, 2, 3, 4, 5]);
+
+        let err = Response::error(409, "spec hash mismatch");
+        let mut wire = Vec::new();
+        write_response(&mut wire, &err).unwrap();
+        let (status, body) = read_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(status, 409);
+        assert!(String::from_utf8(body).unwrap().contains("spec hash mismatch"));
+    }
+}

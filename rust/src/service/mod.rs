@@ -1,0 +1,40 @@
+//! Distributed seed-sync training service: a coordinator/worker pair
+//! over HTTP/JSON (DESIGN.md §17).
+//!
+//! Zero-order training ships *seeds and outcomes*, not gradients: a
+//! trial is fully described by its wire [`crate::coordinator::TrialSpec`]
+//! (schema-versioned, canonical-JSON — the same encoding its spec hash
+//! is computed over), and its result by a content-addressed outcome
+//! record plus two curve blobs.  That makes distribution nearly free —
+//! the coordinator ([`server::Coordinator`]) is a lease queue keyed by
+//! canonical spec hash, and workers ([`worker::run_worker`]) are plain
+//! polling clients that run trials through the exact single-process
+//! grid path and push the resulting objects back.  Identity does the
+//! heavy lifting:
+//!
+//! - **byte-identity**: a farmed grid's merged report is byte-identical
+//!   to the single-process run, because each worker runs the same
+//!   deterministic trainer on the same spec and the report is assembled
+//!   from bit-exact stored outcomes
+//!   ([`crate::coordinator::deterministic_report`]);
+//! - **fault tolerance**: a worker killed mid-trial just lets its lease
+//!   expire — the trial re-queues, and the grid state only ever sees
+//!   completed records (submission is idempotent, keyed by spec hash);
+//! - **warm starts**: re-serving a finished grid answers every trial
+//!   from `grid.lock.json` + the store with zero training steps.
+//!
+//! The transport ([`http`]) is a minimal vendored HTTP/1.1 over
+//! [`std::net`] — no new dependencies — and the protocol ([`proto`])
+//! stamps every message with the wire schema version so mismatched
+//! builds fail loudly.  Work is leased at two granularities: whole
+//! trials, and loss-evaluation shards ([`worker::eval_shard_losses`])
+//! that split one evaluation of a parameter image across test-batch
+//! ranges.
+
+pub mod http;
+pub mod proto;
+pub mod server;
+pub mod worker;
+
+pub use server::{Coordinator, CoordinatorConfig, ServiceStats};
+pub use worker::{eval_shard_losses, run_worker, WorkerConfig, WorkerReport};

@@ -1,0 +1,216 @@
+//! The versioned coordinator/worker wire protocol (DESIGN.md §17):
+//! route constants, the lease-reply message, and the JSON field getters
+//! the two endpoints share.  Every JSON message carries the wire schema
+//! version ([`crate::coordinator::wire::WIRE_SCHEMA_VERSION`]) and is
+//! rejected on mismatch, so a coordinator and worker from different
+//! builds fail loudly instead of silently misinterpreting each other.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::wire::{self, jhex64, jnum, jobj, jstr};
+use crate::coordinator::TrialSpec;
+use crate::jsonio::Json;
+
+/// Ping/identify: GET, answers the schema version.
+pub const P_PING: &str = "/api/v1/ping";
+/// Enqueue trials: POST, body is a wire grid file.
+pub const P_ENQUEUE: &str = "/api/v1/enqueue";
+/// Lease work: POST, answers a [`LeaseReply`].
+pub const P_LEASE: &str = "/api/v1/lease";
+/// Submit an outcome (trial or eval shard): POST.
+pub const P_OUTCOME: &str = "/api/v1/outcome";
+/// Enqueue loss-evaluation shards: POST.
+pub const P_EVAL_ENQUEUE: &str = "/api/v1/eval/enqueue";
+/// Store negotiation: POST a hash list, answers the missing subset.
+pub const P_STORE_HAVE: &str = "/api/v1/store/have";
+/// Store objects: POST raw bytes to push; GET `<prefix>/<hash>` to pull.
+pub const P_STORE_OBJ: &str = "/api/v1/store/obj";
+/// Queue status counters: GET.
+pub const P_STATUS: &str = "/api/v1/status";
+/// Completed results (wire outcomes per trial): GET.
+pub const P_RESULTS: &str = "/api/v1/results";
+/// Graceful shutdown: POST, persists the queue and stops the listener.
+pub const P_SHUTDOWN: &str = "/api/v1/shutdown";
+
+/// Required string field.
+pub fn gstr<'a>(j: &'a Json, k: &str) -> Result<&'a str> {
+    j.get(k)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing or non-string field '{k}'"))
+}
+
+/// Required `{:016x}` hex-encoded u64 field.
+pub fn ghex(j: &Json, k: &str) -> Result<u64> {
+    let s = gstr(j, k)?;
+    u64::from_str_radix(s, 16).map_err(|_| anyhow!("field '{k}' is not a hex u64: '{s}'"))
+}
+
+/// Required numeric (usize) field.
+pub fn gnum(j: &Json, k: &str) -> Result<usize> {
+    j.get(k)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing or non-numeric field '{k}'"))
+}
+
+/// Required string-array field.
+pub fn gstrs(j: &Json, k: &str) -> Result<Vec<String>> {
+    let arr = j
+        .get(k)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing or non-array field '{k}'"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("field '{k}' holds a non-string element"))
+        })
+        .collect()
+}
+
+/// A schema-stamped message with the given extra fields.
+pub fn message(fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("schema", jhex64(wire::WIRE_SCHEMA_VERSION))];
+    pairs.extend(fields);
+    jobj(pairs)
+}
+
+/// What the coordinator answers a lease request with.
+#[derive(Clone, Debug)]
+pub enum LeaseReply {
+    /// Nothing to hand out right now.  `done` means every queued job is
+    /// terminal — the worker can exit instead of polling again.
+    Idle {
+        /// True when the queue is fully terminal.
+        done: bool,
+    },
+    /// One full training trial.
+    Trial {
+        /// Lease token; quote it back when submitting.
+        lease_id: u64,
+        /// Queue index of the trial; quote it back when submitting.
+        index: usize,
+        /// Lease duration in ms — unfinished work past this is re-leased.
+        timeout_ms: u64,
+        /// Store objects to sync before starting (may be empty).
+        sync: Vec<String>,
+        /// The trial to run.
+        spec: TrialSpec,
+    },
+    /// One loss-evaluation shard: evaluate `spec`'s oracle at the
+    /// parameter image `params` over test batches `b0..b1`.
+    Eval {
+        /// Lease token; quote it back when submitting.
+        lease_id: u64,
+        /// Queue index of the shard; quote it back when submitting.
+        index: usize,
+        /// Lease duration in ms — unfinished work past this is re-leased.
+        timeout_ms: u64,
+        /// Store objects to sync before starting (includes `params`).
+        sync: Vec<String>,
+        /// The trial whose oracle defines the loss.
+        spec: TrialSpec,
+        /// Store hash of the f32 little-endian parameter image.
+        params: String,
+        /// First test-batch index (inclusive).
+        b0: u64,
+        /// Last test-batch index (exclusive).
+        b1: u64,
+    },
+}
+
+impl LeaseReply {
+    /// Wire encoding (schema-stamped).
+    pub fn to_json(&self) -> Json {
+        match self {
+            LeaseReply::Idle { done } => {
+                message(vec![("kind", jstr("idle")), ("done", Json::Bool(*done))])
+            }
+            LeaseReply::Trial {
+                lease_id,
+                index,
+                timeout_ms,
+                sync,
+                spec,
+            } => message(vec![
+                ("kind", jstr("trial")),
+                ("lease_id", jhex64(*lease_id)),
+                ("index", jnum(*index)),
+                ("timeout_ms", jhex64(*timeout_ms)),
+                ("sync", Json::Arr(sync.iter().map(|h| jstr(h)).collect())),
+                ("spec", spec.to_json()),
+            ]),
+            LeaseReply::Eval {
+                lease_id,
+                index,
+                timeout_ms,
+                sync,
+                spec,
+                params,
+                b0,
+                b1,
+            } => message(vec![
+                ("kind", jstr("eval")),
+                ("lease_id", jhex64(*lease_id)),
+                ("index", jnum(*index)),
+                ("timeout_ms", jhex64(*timeout_ms)),
+                ("sync", Json::Arr(sync.iter().map(|h| jstr(h)).collect())),
+                ("spec", spec.to_json()),
+                ("params", jstr(params)),
+                ("b0", jhex64(*b0)),
+                ("b1", jhex64(*b1)),
+            ]),
+        }
+    }
+
+    /// Decode a wire lease reply, validating the schema stamp.
+    pub fn from_json(j: &Json) -> Result<LeaseReply> {
+        wire::check_schema(j)?;
+        match gstr(j, "kind")? {
+            "idle" => Ok(LeaseReply::Idle {
+                done: j.get("done").and_then(Json::as_bool).unwrap_or(false),
+            }),
+            "trial" => Ok(LeaseReply::Trial {
+                lease_id: ghex(j, "lease_id")?,
+                index: gnum(j, "index")?,
+                timeout_ms: ghex(j, "timeout_ms")?,
+                sync: gstrs(j, "sync")?,
+                spec: TrialSpec::from_json(
+                    j.get("spec").ok_or_else(|| anyhow!("lease reply missing 'spec'"))?,
+                )?,
+            }),
+            "eval" => Ok(LeaseReply::Eval {
+                lease_id: ghex(j, "lease_id")?,
+                index: gnum(j, "index")?,
+                timeout_ms: ghex(j, "timeout_ms")?,
+                sync: gstrs(j, "sync")?,
+                spec: TrialSpec::from_json(
+                    j.get("spec").ok_or_else(|| anyhow!("lease reply missing 'spec'"))?,
+                )?,
+                params: gstr(j, "params")?.to_string(),
+                b0: ghex(j, "b0")?,
+                b1: ghex(j, "b1")?,
+            }),
+            other => bail!("unknown lease-reply kind '{other}'"),
+        }
+    }
+}
+
+/// Pack an f32 slice as little-endian bytes (parameter-image blobs).
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Unpack a little-endian f32 blob (must be a multiple of 4 bytes).
+pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("parameter blob of {} bytes is not a whole number of f32s", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

@@ -1,0 +1,766 @@
+//! The coordinator: an HTTP/JSON work queue that farms grid trials and
+//! loss-evaluation shards out to workers (DESIGN.md §17).
+//!
+//! The queue holds [`TrialSpec`]s keyed by canonical spec hash — the
+//! same identity `grid.lock.json` warm-starts use — so a trial a prior
+//! run already completed is served from the store with zero training
+//! steps, an outcome submitted twice (requeued lease whose original
+//! worker also finished) is accepted idempotently, and a worker killed
+//! mid-trial simply lets its lease expire and the trial re-queues.
+//! Success is *content*-keyed (any valid spec-hash-stamped record is
+//! accepted regardless of lease); failure is *lease*-keyed (only the
+//! current leaseholder can mark a trial failed), so a stale worker's
+//! error can never poison a trial another worker is re-running.
+//!
+//! Shutdown persists the queue (`queue.json`, the wire grid format) so a
+//! restarted coordinator resumes exactly where it stopped.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::http::{Handler, HttpServer, Request, Response};
+use super::proto::{self, LeaseReply};
+use crate::coordinator::wire::{self, jhex64, jnum, jobj, jstr};
+use crate::coordinator::{resolved_spec_hash, storage_label_static, TrialResult, TrialSpec};
+use crate::jsonio::{parse, to_string_canonical, Json};
+use crate::snapshot;
+use crate::store::{GridLock, LockEntry, Store};
+
+/// Where a queued trial stands.
+#[derive(Clone, Debug)]
+enum TrialStatus {
+    /// Waiting for a worker.
+    Pending,
+    /// Handed to a worker; re-queues if not finished by `deadline`.
+    Leased { lease: u64, deadline: Instant },
+    /// Finished: `outcome` is the store hash of the outcome record;
+    /// `cached` means it was served from a warm-start pin, no training.
+    Done { outcome: String, cached: bool },
+    /// The current leaseholder reported a terminal error.
+    Failed { error: String },
+}
+
+/// One queued trial.
+#[derive(Clone, Debug)]
+struct TrialState {
+    spec: TrialSpec,
+    hash: String,
+    status: TrialStatus,
+}
+
+/// Where a queued loss-evaluation shard stands.  Shard results are
+/// deterministic, so submission is content-keyed and leases carry only
+/// the requeue deadline.
+#[derive(Clone, Debug)]
+enum EvalStatus {
+    Pending,
+    Leased { deadline: Instant },
+    Done { losses: Vec<f64> },
+}
+
+/// One queued loss-evaluation shard: `spec`'s oracle at the stored
+/// parameter image, over test batches `b0..b1`.
+#[derive(Clone, Debug)]
+struct EvalJob {
+    spec: TrialSpec,
+    params: String,
+    b0: u64,
+    b1: u64,
+    status: EvalStatus,
+}
+
+/// Queue counters (observable via the status route and [`Coordinator::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    /// Leases handed out (trials + eval shards).
+    pub leases_granted: u64,
+    /// Expired leases returned to the queue.
+    pub requeues: u64,
+    /// Fresh outcomes accepted.
+    pub outcomes_accepted: u64,
+    /// Idempotent duplicate submissions (already-done jobs).
+    pub duplicates: u64,
+    /// Submissions rejected (hash mismatch, missing record).
+    pub rejected: u64,
+    /// Trials served from a warm-start pin at enqueue time.
+    pub cached_on_enqueue: u64,
+    /// Store objects pushed by workers.
+    pub store_pushes: u64,
+    /// Store objects pulled by workers.
+    pub store_pulls: u64,
+}
+
+#[derive(Default)]
+struct State {
+    trials: Vec<TrialState>,
+    evals: Vec<EvalJob>,
+    next_lease: u64,
+    stats: ServiceStats,
+}
+
+struct Inner {
+    dir: PathBuf,
+    store: Store,
+    lease_timeout: Duration,
+    stop: Arc<AtomicBool>,
+    state: Mutex<State>,
+}
+
+/// How to stand up a [`Coordinator`].
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Listen address (`127.0.0.1:0` picks a free port).
+    pub addr: String,
+    /// Grid directory: holds `grid.lock.json`, `queue.json`, and the
+    /// shared blob store (`<dir>/store`).
+    pub dir: PathBuf,
+    /// How long a lease stays exclusive before the work re-queues.
+    pub lease_timeout: Duration,
+}
+
+impl CoordinatorConfig {
+    /// Loopback coordinator on an OS-assigned port with the default
+    /// 60 s lease timeout.
+    pub fn loopback(dir: impl Into<PathBuf>) -> CoordinatorConfig {
+        CoordinatorConfig {
+            addr: "127.0.0.1:0".to_string(),
+            dir: dir.into(),
+            lease_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// A running coordinator: the HTTP listener thread plus the in-process
+/// handle used to enqueue work and collect results.
+pub struct Coordinator {
+    inner: Arc<Inner>,
+    addr: SocketAddr,
+    serve_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Bind the listener, start serving, and resume any persisted queue
+    /// left behind by a previous coordinator in the same directory.
+    pub fn bind(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating coordinator dir {}", cfg.dir.display()))?;
+        let http = HttpServer::bind(&cfg.addr)?;
+        let addr = http.addr();
+        let inner = Arc::new(Inner {
+            store: Store::open(cfg.dir.join("store")),
+            dir: cfg.dir,
+            lease_timeout: cfg.lease_timeout,
+            stop: http.stop_flag(),
+            state: Mutex::new(State::default()),
+        });
+        let route_inner = Arc::clone(&inner);
+        let handler: Handler = Arc::new(move |req| handle(&route_inner, req));
+        let serve_thread = std::thread::spawn(move || http.serve(handler));
+        let c = Coordinator {
+            inner,
+            addr,
+            serve_thread: Some(serve_thread),
+        };
+        c.resume_queue()?;
+        Ok(c)
+    }
+
+    /// The bound listen address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A snapshot of the queue counters.
+    pub fn stats(&self) -> ServiceStats {
+        self.inner.state.lock().unwrap().stats
+    }
+
+    /// Enqueue trials.  Idempotent by canonical spec hash: a spec whose
+    /// hash is already queued is skipped, and one a previous run pinned
+    /// in `grid.lock.json` (with its record still in the store) is
+    /// marked done immediately — the warm-start path, zero training
+    /// steps.  Returns how many landed pre-completed.
+    pub fn enqueue(&self, specs: Vec<TrialSpec>) -> Result<usize> {
+        let cached = self.inner.enqueue(specs)?;
+        Ok(cached)
+    }
+
+    /// Split a loss evaluation into leased shards: `spec`'s oracle at
+    /// the parameter image `params`, test batches `0..batches` in chunks
+    /// of `shard`.  Returns the number of shards queued.
+    pub fn enqueue_eval(
+        &self,
+        spec: &TrialSpec,
+        params: &[f32],
+        batches: u64,
+        shard: u64,
+    ) -> Result<usize> {
+        ensure!(shard > 0, "eval shard size must be >= 1");
+        let hash = self.inner.store.put(&proto::f32s_to_bytes(params))?;
+        let mut st = self.inner.state.lock().unwrap();
+        let mut n = 0;
+        let mut b0 = 0;
+        while b0 < batches {
+            let b1 = (b0 + shard).min(batches);
+            st.evals.push(EvalJob {
+                spec: spec.clone(),
+                params: hash.clone(),
+                b0,
+                b1,
+                status: EvalStatus::Pending,
+            });
+            n += 1;
+            b0 = b1;
+        }
+        Ok(n)
+    }
+
+    /// The concatenated per-batch losses once every eval shard is done
+    /// (shards sorted by batch range), else `None`.
+    pub fn eval_losses(&self) -> Option<Vec<f64>> {
+        let st = self.inner.state.lock().unwrap();
+        if st.evals.is_empty() {
+            return None;
+        }
+        let mut shards: Vec<(u64, &[f64])> = Vec::with_capacity(st.evals.len());
+        for job in &st.evals {
+            match &job.status {
+                EvalStatus::Done { losses } => shards.push((job.b0, losses)),
+                _ => return None,
+            }
+        }
+        shards.sort_by_key(|(b0, _)| *b0);
+        Some(shards.into_iter().flat_map(|(_, l)| l.iter().copied()).collect())
+    }
+
+    /// Block until every queued trial is terminal (done or failed), then
+    /// return results in queue order — the same shape [`crate::coordinator::run_grid`]
+    /// produces, so [`crate::coordinator::deterministic_report`] applies
+    /// directly.
+    pub fn run_until_done(&self, poll: Duration) -> Result<Vec<Result<TrialResult>>> {
+        loop {
+            {
+                let st = self.inner.state.lock().unwrap();
+                let all_terminal = st.trials.iter().all(|t| {
+                    matches!(
+                        t.status,
+                        TrialStatus::Done { .. } | TrialStatus::Failed { .. }
+                    )
+                });
+                if all_terminal {
+                    break;
+                }
+            }
+            std::thread::sleep(poll);
+        }
+        self.results()
+    }
+
+    /// Current results in queue order.  Unfinished trials come back as
+    /// errors; callers that want completion first use [`Coordinator::run_until_done`].
+    pub fn results(&self) -> Result<Vec<Result<TrialResult>>> {
+        let st = self.inner.state.lock().unwrap();
+        let mut out = Vec::with_capacity(st.trials.len());
+        for t in &st.trials {
+            out.push(match &t.status {
+                TrialStatus::Done { outcome, cached } => {
+                    trial_result(&self.inner.store, t, outcome, *cached)
+                }
+                TrialStatus::Failed { error } => Err(anyhow!("{error}")),
+                _ => Err(anyhow!("trial '{}' is not finished", t.spec.id)),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Graceful shutdown: persist the queue, stop the listener, join the
+    /// serve thread.  Safe to call once; `Drop` covers the non-graceful
+    /// path.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.inner.persist_queue()?;
+        self.inner.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.serve_thread.take() {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    fn resume_queue(&self) -> Result<usize> {
+        let path = self.inner.dir.join("queue.json");
+        if !path.exists() {
+            return Ok(0);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading persisted queue {}", path.display()))?;
+        let j = parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let specs = wire::grid_from_json(&j)?;
+        let n = specs.len();
+        self.inner.enqueue(specs)?;
+        Ok(n)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.serve_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Materialize a [`TrialResult`] from a stored outcome record.
+fn trial_result(
+    store: &Store,
+    t: &TrialState,
+    outcome_hash: &str,
+    cached: bool,
+) -> Result<TrialResult> {
+    let rec = snapshot::outcome_from_store(store, outcome_hash)
+        .with_context(|| format!("loading outcome record {outcome_hash}"))?;
+    let session_oracle_calls = if cached { 0 } else { rec.outcome.oracle_calls };
+    Ok(TrialResult {
+        spec_id: t.spec.id.clone(),
+        probe_storage: storage_label_static(&rec.probe_storage),
+        probe_peak_bytes: 0,
+        cached,
+        session_oracle_calls,
+        outcome: rec.outcome,
+    })
+}
+
+impl Inner {
+    fn enqueue(&self, specs: Vec<TrialSpec>) -> Result<usize> {
+        let lock = GridLock::load(&self.dir);
+        let mut cached = 0;
+        {
+            let mut st = self.state.lock().unwrap();
+            for spec in specs {
+                let hash = resolved_spec_hash(&spec);
+                if st.trials.iter().any(|t| t.hash == hash) {
+                    continue;
+                }
+                let status = match lock.get(&hash) {
+                    Some(entry)
+                        if snapshot::outcome_from_store(&self.store, &entry.outcome).is_ok() =>
+                    {
+                        cached += 1;
+                        st.stats.cached_on_enqueue += 1;
+                        TrialStatus::Done {
+                            outcome: entry.outcome.clone(),
+                            cached: true,
+                        }
+                    }
+                    _ => TrialStatus::Pending,
+                };
+                st.trials.push(TrialState { spec, hash, status });
+            }
+        }
+        self.persist_queue()?;
+        Ok(cached)
+    }
+
+    /// Persist the queued specs as a wire grid file (atomic rename) so a
+    /// restarted coordinator re-enqueues the same work.
+    fn persist_queue(&self) -> Result<()> {
+        let specs: Vec<TrialSpec> = {
+            let st = self.state.lock().unwrap();
+            st.trials.iter().map(|t| t.spec.clone()).collect()
+        };
+        let text = format!("{}\n", to_string_canonical(&wire::grid_to_json(&specs)));
+        let tmp = self.dir.join("queue.json.tmp");
+        let path = self.dir.join("queue.json");
+        std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Return expired leases to the queue, then hand out the first
+    /// pending job (eval shards before trials — they are short and
+    /// unblock a waiting aggregation).
+    fn grant_lease(&self) -> LeaseReply {
+        let now = Instant::now();
+        let timeout_ms = self.lease_timeout.as_millis() as u64;
+        let mut st = self.state.lock().unwrap();
+        let state = &mut *st;
+        let mut requeued = 0u64;
+        for t in state.trials.iter_mut() {
+            if let TrialStatus::Leased { deadline, .. } = &t.status {
+                if *deadline <= now {
+                    t.status = TrialStatus::Pending;
+                    requeued += 1;
+                }
+            }
+        }
+        for j in state.evals.iter_mut() {
+            if let EvalStatus::Leased { deadline, .. } = &j.status {
+                if *deadline <= now {
+                    j.status = EvalStatus::Pending;
+                    requeued += 1;
+                }
+            }
+        }
+        state.stats.requeues += requeued;
+
+        if let Some(i) = state
+            .evals
+            .iter()
+            .position(|j| matches!(j.status, EvalStatus::Pending))
+        {
+            state.next_lease += 1;
+            state.stats.leases_granted += 1;
+            let lease = state.next_lease;
+            let deadline = now + self.lease_timeout;
+            let job = &mut state.evals[i];
+            job.status = EvalStatus::Leased { deadline };
+            return LeaseReply::Eval {
+                lease_id: lease,
+                index: i,
+                timeout_ms,
+                sync: vec![job.params.clone()],
+                spec: job.spec.clone(),
+                params: job.params.clone(),
+                b0: job.b0,
+                b1: job.b1,
+            };
+        }
+
+        if let Some(i) = state
+            .trials
+            .iter()
+            .position(|t| matches!(t.status, TrialStatus::Pending))
+        {
+            state.next_lease += 1;
+            state.stats.leases_granted += 1;
+            let lease = state.next_lease;
+            let deadline = now + self.lease_timeout;
+            let t = &mut state.trials[i];
+            t.status = TrialStatus::Leased { lease, deadline };
+            return LeaseReply::Trial {
+                lease_id: lease,
+                index: i,
+                timeout_ms,
+                sync: Vec::new(),
+                spec: t.spec.clone(),
+            };
+        }
+
+        let done = state.trials.iter().all(|t| {
+            matches!(
+                t.status,
+                TrialStatus::Done { .. } | TrialStatus::Failed { .. }
+            )
+        }) && state
+            .evals
+            .iter()
+            .all(|j| matches!(j.status, EvalStatus::Done { .. }));
+        LeaseReply::Idle { done }
+    }
+
+    /// Accept a trial outcome: the record must already be in the
+    /// coordinator store and be stamped with the trial's spec hash.
+    /// Duplicates (already-done trials) are accepted idempotently.
+    fn submit_trial(&self, j: &Json) -> Result<Response> {
+        let idx = proto::gnum(j, "index")?;
+        let spec_hash = proto::gstr(j, "spec_hash")?;
+
+        if let Some(err) = j.get("error").and_then(Json::as_str) {
+            let lease_id = proto::ghex(j, "lease_id")?;
+            let mut st = self.state.lock().unwrap();
+            let n = st.trials.len();
+            ensure!(idx < n, "trial index {idx} out of range (queue has {n})");
+            ensure!(
+                st.trials[idx].hash == spec_hash,
+                "spec hash {spec_hash} does not match queued trial {idx}"
+            );
+            // failure is lease-keyed: only the current leaseholder may
+            // fail a trial, so a stale worker's error cannot poison a
+            // re-run already under way
+            let current = matches!(
+                st.trials[idx].status,
+                TrialStatus::Leased { lease, .. } if lease == lease_id
+            );
+            if current {
+                let msg = format!("worker error on '{}': {err}", st.trials[idx].spec.id);
+                st.trials[idx].status = TrialStatus::Failed { error: msg };
+            } else {
+                st.stats.rejected += 1;
+            }
+            return Ok(Response::json(&proto::message(vec![
+                ("ok", Json::Bool(true)),
+                ("accepted", Json::Bool(current)),
+            ])));
+        }
+
+        let rec_hash = proto::gstr(j, "outcome")?;
+        // success is content-keyed: validate the record against the
+        // store before touching queue state, and accept it regardless of
+        // which lease produced it
+        let rec = match snapshot::outcome_from_store(&self.store, rec_hash) {
+            Ok(rec) => rec,
+            Err(e) => {
+                self.state.lock().unwrap().stats.rejected += 1;
+                return Ok(Response::error(
+                    409,
+                    &format!("outcome record {rec_hash} is not in the coordinator store (push it before submitting): {e:#}"),
+                ));
+            }
+        };
+        if rec.spec_hash.as_deref() != Some(spec_hash) {
+            self.state.lock().unwrap().stats.rejected += 1;
+            return Ok(Response::error(
+                409,
+                &format!("record {rec_hash} is not stamped with spec hash {spec_hash}"),
+            ));
+        }
+
+        let mut st = self.state.lock().unwrap();
+        let n = st.trials.len();
+        ensure!(idx < n, "trial index {idx} out of range (queue has {n})");
+        if st.trials[idx].hash != spec_hash {
+            st.stats.rejected += 1;
+            return Ok(Response::error(
+                409,
+                &format!("spec hash {spec_hash} does not match queued trial {idx}"),
+            ));
+        }
+        let duplicate = matches!(st.trials[idx].status, TrialStatus::Done { .. });
+        if duplicate {
+            st.stats.duplicates += 1;
+        } else {
+            let entry = LockEntry {
+                outcome: rec_hash.to_string(),
+                id: st.trials[idx].spec.id.clone(),
+                label: rec.outcome.label.clone(),
+            };
+            // pin under the state lock so concurrent submissions
+            // serialize their read-modify-write of grid.lock.json
+            GridLock::record(&self.dir, spec_hash, &entry)?;
+            st.trials[idx].status = TrialStatus::Done {
+                outcome: rec_hash.to_string(),
+                cached: false,
+            };
+            st.stats.outcomes_accepted += 1;
+        }
+        Ok(Response::json(&proto::message(vec![
+            ("ok", Json::Bool(true)),
+            ("duplicate", Json::Bool(duplicate)),
+        ])))
+    }
+
+    /// Accept an eval-shard outcome (idempotent on duplicates).
+    fn submit_eval(&self, j: &Json) -> Result<Response> {
+        let idx = proto::gnum(j, "index")?;
+        let losses: Vec<f64> = proto::gstrs(j, "losses")?
+            .iter()
+            .map(|s| {
+                u64::from_str_radix(s, 16)
+                    .map(f64::from_bits)
+                    .map_err(|_| anyhow!("loss entry '{s}' is not a hex f64 bit pattern"))
+            })
+            .collect::<Result<_>>()?;
+        let mut st = self.state.lock().unwrap();
+        let n = st.evals.len();
+        ensure!(idx < n, "eval index {idx} out of range (queue has {n})");
+        let expected = (st.evals[idx].b1 - st.evals[idx].b0) as usize;
+        ensure!(
+            losses.len() == expected,
+            "eval shard {idx} expects {expected} losses, got {}",
+            losses.len()
+        );
+        let duplicate = matches!(st.evals[idx].status, EvalStatus::Done { .. });
+        if duplicate {
+            st.stats.duplicates += 1;
+        } else {
+            st.evals[idx].status = EvalStatus::Done { losses };
+            st.stats.outcomes_accepted += 1;
+        }
+        Ok(Response::json(&proto::message(vec![
+            ("ok", Json::Bool(true)),
+            ("duplicate", Json::Bool(duplicate)),
+        ])))
+    }
+
+    fn status_json(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let (mut pending, mut leased, mut done, mut failed) = (0usize, 0usize, 0usize, 0usize);
+        for t in &st.trials {
+            match t.status {
+                TrialStatus::Pending => pending += 1,
+                TrialStatus::Leased { .. } => leased += 1,
+                TrialStatus::Done { .. } => done += 1,
+                TrialStatus::Failed { .. } => failed += 1,
+            }
+        }
+        proto::message(vec![
+            ("trials", jnum(st.trials.len())),
+            ("pending", jnum(pending)),
+            ("leased", jnum(leased)),
+            ("done", jnum(done)),
+            ("failed", jnum(failed)),
+            ("evals", jnum(st.evals.len())),
+            ("leases_granted", jhex64(st.stats.leases_granted)),
+            ("requeues", jhex64(st.stats.requeues)),
+            ("outcomes_accepted", jhex64(st.stats.outcomes_accepted)),
+            ("duplicates", jhex64(st.stats.duplicates)),
+            ("rejected", jhex64(st.stats.rejected)),
+            ("cached_on_enqueue", jhex64(st.stats.cached_on_enqueue)),
+        ])
+    }
+
+    fn results_json(&self) -> Result<Json> {
+        let st = self.state.lock().unwrap();
+        let mut rows = Vec::with_capacity(st.trials.len());
+        for t in &st.trials {
+            let (status, outcome, cached) = match &t.status {
+                TrialStatus::Pending => ("pending", Json::Null, false),
+                TrialStatus::Leased { .. } => ("leased", Json::Null, false),
+                TrialStatus::Failed { error } => ("failed", jstr(error), false),
+                TrialStatus::Done { outcome, cached } => {
+                    let rec = snapshot::outcome_from_store(&self.store, outcome)
+                        .with_context(|| format!("loading outcome record {outcome}"))?;
+                    ("done", rec.outcome.to_json(), *cached)
+                }
+            };
+            rows.push(jobj(vec![
+                ("id", jstr(&t.spec.id)),
+                ("spec_hash", jstr(&t.hash)),
+                ("status", jstr(status)),
+                ("cached", Json::Bool(cached)),
+                ("outcome", outcome),
+            ]));
+        }
+        Ok(proto::message(vec![("rows", Json::Arr(rows))]))
+    }
+}
+
+/// Route one request.  Errors become 400s with the error chain as the
+/// body, so a worker's log names the actual failure.
+fn handle(inner: &Arc<Inner>, req: &Request) -> Response {
+    match route(inner, req) {
+        Ok(resp) => resp,
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    }
+}
+
+fn route(inner: &Arc<Inner>, req: &Request) -> Result<Response> {
+    let obj_prefix = format!("{}/", proto::P_STORE_OBJ);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", proto::P_PING) => Ok(Response::json(&proto::message(vec![(
+            "service",
+            jstr("zo-coordinator"),
+        )]))),
+        ("POST", proto::P_LEASE) => Ok(Response::json(&inner.grant_lease().to_json())),
+        ("POST", proto::P_ENQUEUE) => {
+            let j = body_json(&req.body)?;
+            let specs = wire::grid_from_json(&j)?;
+            let total = specs.len();
+            let cached = inner.enqueue(specs)?;
+            Ok(Response::json(&proto::message(vec![
+                ("ok", Json::Bool(true)),
+                ("total", jnum(total)),
+                ("cached", jnum(cached)),
+            ])))
+        }
+        ("POST", proto::P_OUTCOME) => {
+            let j = body_json(&req.body)?;
+            wire::check_schema(&j)?;
+            match proto::gstr(&j, "kind")? {
+                "trial" => inner.submit_trial(&j),
+                "eval" => inner.submit_eval(&j),
+                other => bail!("unknown outcome kind '{other}'"),
+            }
+        }
+        ("POST", proto::P_EVAL_ENQUEUE) => {
+            let j = body_json(&req.body)?;
+            wire::check_schema(&j)?;
+            let spec = TrialSpec::from_json(
+                j.get("spec").ok_or_else(|| anyhow!("eval enqueue missing 'spec'"))?,
+            )?;
+            let params_hash = proto::gstr(&j, "params")?;
+            let batches = proto::ghex(&j, "batches")?;
+            let shard = proto::ghex(&j, "shard")?;
+            ensure!(shard > 0, "eval shard size must be >= 1");
+            ensure!(
+                inner.store.contains(params_hash),
+                "parameter image {params_hash} is not in the coordinator store (push it first)"
+            );
+            let mut st = inner.state.lock().unwrap();
+            let mut n = 0;
+            let mut b0 = 0;
+            while b0 < batches {
+                let b1 = (b0 + shard).min(batches);
+                st.evals.push(EvalJob {
+                    spec: spec.clone(),
+                    params: params_hash.to_string(),
+                    b0,
+                    b1,
+                    status: EvalStatus::Pending,
+                });
+                n += 1;
+                b0 = b1;
+            }
+            Ok(Response::json(&proto::message(vec![
+                ("ok", Json::Bool(true)),
+                ("shards", jnum(n)),
+            ])))
+        }
+        ("POST", proto::P_STORE_HAVE) => {
+            let j = body_json(&req.body)?;
+            wire::check_schema(&j)?;
+            let hashes = proto::gstrs(&j, "hashes")?;
+            let missing: Vec<Json> = hashes
+                .iter()
+                .filter(|h| !inner.store.contains(h))
+                .map(|h| jstr(h))
+                .collect();
+            Ok(Response::json(&proto::message(vec![(
+                "missing",
+                Json::Arr(missing),
+            )])))
+        }
+        ("POST", proto::P_STORE_OBJ) => {
+            let hash = inner.store.put(&req.body)?;
+            inner.state.lock().unwrap().stats.store_pushes += 1;
+            Ok(Response::json(&proto::message(vec![(
+                "hash",
+                jstr(&hash),
+            )])))
+        }
+        ("GET", p) if p.starts_with(obj_prefix.as_str()) => {
+            let hash = &p[obj_prefix.len()..];
+            if !inner.store.contains(hash) {
+                return Ok(Response::error(404, &format!("no object {hash}")));
+            }
+            let bytes = inner.store.get(hash)?;
+            inner.state.lock().unwrap().stats.store_pulls += 1;
+            Ok(Response::bytes(bytes))
+        }
+        ("GET", proto::P_STATUS) => Ok(Response::json(&inner.status_json())),
+        ("GET", proto::P_RESULTS) => Ok(Response::json(&inner.results_json()?)),
+        ("POST", proto::P_SHUTDOWN) => {
+            inner.persist_queue()?;
+            inner.stop.store(true, Ordering::SeqCst);
+            Ok(Response::json(&proto::message(vec![(
+                "ok",
+                Json::Bool(true),
+            )])))
+        }
+        _ => Ok(Response::error(
+            404,
+            &format!("no route {} {}", req.method, req.path),
+        )),
+    }
+}
+
+/// Parse a request body as JSON.
+fn body_json(body: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(body).map_err(|_| anyhow!("request body is not UTF-8"))?;
+    parse(text).map_err(|e| anyhow!("request body is not valid JSON: {e}"))
+}

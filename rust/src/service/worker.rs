@@ -1,0 +1,395 @@
+//! The worker client: polls a coordinator for leases, runs trials
+//! through the local grid machinery ([`crate::coordinator::run_local_trial`]),
+//! evaluates loss shards, and ships results back (DESIGN.md §17).
+//!
+//! Every RPC goes through a bounded-retry loop with exponential backoff,
+//! so a coordinator mid-restart does not kill the worker.  A finished
+//! trial's outcome record (and its curve blobs) is pushed into the
+//! coordinator's store *before* the outcome is submitted — record last —
+//! so the coordinator never observes a record whose blob closure is
+//! incomplete.  The worker trains inside its own directory with
+//! checkpointing + resume on, which is what makes a kill mid-trial safe:
+//! nothing of the coordinator's grid state is touched until the
+//! completed record lands.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::http;
+use super::proto::{self, LeaseReply};
+use crate::coordinator::wire::{jhex64, jnum, jstr};
+use crate::coordinator::{resolved_spec_hash, run_local_trial, OracleSpec, TrialSpec};
+use crate::data::Corpus;
+use crate::exec::ExecContext;
+use crate::jsonio::{parse, to_string_canonical, Json};
+use crate::model::mlp::MlpSpec;
+use crate::oracle::{MlpOracle, Oracle, TransformerOracle};
+use crate::snapshot::CheckpointConfig;
+use crate::store::{GridLock, Store};
+
+/// How a worker runs.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Coordinator address (`host:port`).
+    pub connect: String,
+    /// Worker-local directory: per-trial checkpoints plus the local blob
+    /// store (`<dir>/store`).
+    pub dir: PathBuf,
+    /// Shard-parallel threads (0: `ZO_THREADS`, else core count).
+    pub threads: usize,
+    /// Idle-poll interval between lease requests.
+    pub poll: Duration,
+    /// RPC retries before giving up on the coordinator.
+    pub retries: u32,
+    /// Initial retry backoff (doubles per attempt, capped at 5 s).
+    pub backoff: Duration,
+    /// Stop after this many leases (None: run until the queue is done).
+    /// The fault-injection tests use it to kill a worker mid-grid.
+    pub max_leases: Option<u64>,
+}
+
+impl WorkerConfig {
+    /// A worker against `connect` working out of `dir`, with the default
+    /// cadence (50 ms poll, 4 retries, 100 ms initial backoff).
+    pub fn new(connect: impl Into<String>, dir: impl Into<PathBuf>) -> WorkerConfig {
+        WorkerConfig {
+            connect: connect.into(),
+            dir: dir.into(),
+            threads: 0,
+            poll: Duration::from_millis(50),
+            retries: 4,
+            backoff: Duration::from_millis(100),
+            max_leases: None,
+        }
+    }
+}
+
+/// What a worker did before exiting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerReport {
+    /// Trials run to completion and submitted.
+    pub trials_run: u64,
+    /// Loss-evaluation shards computed and submitted.
+    pub evals_run: u64,
+    /// Trials that errored locally (reported to the coordinator).
+    pub errors: u64,
+}
+
+/// Run the worker loop until the coordinator reports the queue done (or
+/// `max_leases` is hit).
+pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
+    std::fs::create_dir_all(&cfg.dir)
+        .with_context(|| format!("creating worker dir {}", cfg.dir.display()))?;
+    let store = Store::open(cfg.dir.join("store"));
+    let exec = ExecContext::resolve(cfg.threads);
+    let mut report = WorkerReport::default();
+    let mut leases = 0u64;
+    loop {
+        if let Some(max) = cfg.max_leases {
+            if leases >= max {
+                break;
+            }
+        }
+        let reply = rpc_json(cfg, "POST", proto::P_LEASE, proto::message(vec![]))?;
+        match LeaseReply::from_json(&reply)? {
+            LeaseReply::Idle { done } => {
+                if done {
+                    break;
+                }
+                std::thread::sleep(cfg.poll);
+            }
+            LeaseReply::Trial {
+                lease_id,
+                index,
+                sync,
+                spec,
+                ..
+            } => {
+                leases += 1;
+                sync_objects(cfg, &store, &sync)?;
+                let spec_hash = resolved_spec_hash(&spec);
+                match run_leased_trial(cfg, &exec, &spec, &spec_hash) {
+                    Ok(rec_hash) => {
+                        push_closure(cfg, &store, &rec_hash)?;
+                        rpc_json(
+                            cfg,
+                            "POST",
+                            proto::P_OUTCOME,
+                            proto::message(vec![
+                                ("kind", jstr("trial")),
+                                ("index", jnum(index)),
+                                ("lease_id", jhex64(lease_id)),
+                                ("spec_hash", jstr(&spec_hash)),
+                                ("outcome", jstr(&rec_hash)),
+                            ]),
+                        )?;
+                        report.trials_run += 1;
+                    }
+                    Err(e) => {
+                        report.errors += 1;
+                        rpc_json(
+                            cfg,
+                            "POST",
+                            proto::P_OUTCOME,
+                            proto::message(vec![
+                                ("kind", jstr("trial")),
+                                ("index", jnum(index)),
+                                ("lease_id", jhex64(lease_id)),
+                                ("spec_hash", jstr(&spec_hash)),
+                                ("error", jstr(&format!("{e:#}"))),
+                            ]),
+                        )?;
+                    }
+                }
+            }
+            LeaseReply::Eval {
+                index,
+                sync,
+                spec,
+                params,
+                b0,
+                b1,
+                ..
+            } => {
+                leases += 1;
+                sync_objects(cfg, &store, &sync)?;
+                let blob = store.get(&params)?;
+                let xs = proto::bytes_to_f32s(&blob)?;
+                let losses = eval_shard_losses(&spec, &xs, b0, b1)?;
+                let encoded: Vec<Json> = losses
+                    .iter()
+                    .map(|l| jstr(&format!("{:016x}", l.to_bits())))
+                    .collect();
+                rpc_json(
+                    cfg,
+                    "POST",
+                    proto::P_OUTCOME,
+                    proto::message(vec![
+                        ("kind", jstr("eval")),
+                        ("index", jnum(index)),
+                        ("losses", Json::Arr(encoded)),
+                    ]),
+                )?;
+                report.evals_run += 1;
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Run one leased trial in the worker's directory (checkpointing +
+/// resume on, store at `<dir>/store`) and return the store hash of the
+/// completed outcome record — read back from the worker's own
+/// `grid.lock.json` pin, which [`run_local_trial`] wrote under exactly
+/// this spec hash.
+fn run_leased_trial(
+    cfg: &WorkerConfig,
+    exec: &ExecContext,
+    spec: &TrialSpec,
+    spec_hash: &str,
+) -> Result<String> {
+    let mut spec = spec.clone();
+    // leased specs never carry a checkpoint policy (it is worker-local,
+    // deliberately off the wire); pin it to this worker's directory
+    spec.checkpoint = Some(CheckpointConfig {
+        dir: Some(cfg.dir.to_string_lossy().into_owned()),
+        every: 0,
+        resume: true,
+        max_run_steps: 0,
+        store_dir: None,
+    });
+    run_local_trial("artifacts", &spec, exec)?;
+    let entry = GridLock::load(&cfg.dir)
+        .get(spec_hash)
+        .cloned()
+        .ok_or_else(|| {
+            anyhow!(
+                "trial '{}' finished but left no grid-lock pin for {spec_hash}",
+                spec.id
+            )
+        })?;
+    Ok(entry.outcome)
+}
+
+/// Pull the listed objects from the coordinator into the local store
+/// (skipping ones already present), verifying content addresses.
+fn sync_objects(cfg: &WorkerConfig, store: &Store, hashes: &[String]) -> Result<()> {
+    for h in hashes {
+        if store.contains(h) {
+            continue;
+        }
+        let bytes = rpc_bytes(cfg, &format!("{}/{h}", proto::P_STORE_OBJ))?;
+        let got = store.put(&bytes)?;
+        ensure!(
+            &got == h,
+            "synced object hash mismatch: coordinator sent {got} for {h}"
+        );
+    }
+    Ok(())
+}
+
+/// Push an outcome record's closure (curve blobs, then the record
+/// itself, last) into the coordinator's store, skipping objects the
+/// coordinator already has.
+fn push_closure(cfg: &WorkerConfig, store: &Store, rec_hash: &str) -> Result<()> {
+    let manifest = store.get(rec_hash)?;
+    let text = std::str::from_utf8(&manifest)
+        .map_err(|_| anyhow!("outcome record {rec_hash} is not UTF-8"))?;
+    let j = parse(text).map_err(|e| anyhow!("outcome record {rec_hash}: {e}"))?;
+    // blobs first, record last: hashes[0] is the record, so push the
+    // reversed list and the coordinator never sees a dangling record
+    let mut hashes = vec![rec_hash.to_string()];
+    if let Some(Json::Obj(blobs)) = j.get("blobs") {
+        for v in blobs.values() {
+            if let Some(h) = v.as_str() {
+                hashes.push(h.to_string());
+            }
+        }
+    }
+    let listed: Vec<Json> = hashes.iter().map(|h| jstr(h)).collect();
+    let reply = rpc_json(
+        cfg,
+        "POST",
+        proto::P_STORE_HAVE,
+        proto::message(vec![("hashes", Json::Arr(listed))]),
+    )?;
+    let missing = proto::gstrs(&reply, "missing")?;
+    for h in hashes.iter().rev() {
+        if !missing.iter().any(|m| m == h) {
+            continue;
+        }
+        let bytes = store.get(h)?;
+        let reply = rpc_raw(cfg, "POST", proto::P_STORE_OBJ, "application/octet-stream", &bytes)?;
+        let stored = proto::gstr(&reply, "hash")?;
+        ensure!(
+            stored == h.as_str(),
+            "coordinator stored {stored} for pushed object {h}"
+        );
+    }
+    Ok(())
+}
+
+/// Losses of `spec`'s oracle at the parameter image `params` over test
+/// batches `b0..b1` — the eval-shard kernel, shared by workers and the
+/// in-process tests.  Bitwise-deterministic: the oracle is rebuilt from
+/// the spec's init seed, the image is installed verbatim, and each batch
+/// is evaluated with a zero probe direction (`f(x)` exactly).
+pub fn eval_shard_losses(spec: &TrialSpec, params: &[f32], b0: u64, b1: u64) -> Result<Vec<f64>> {
+    ensure!(b0 <= b1, "eval shard has b0 {b0} > b1 {b1}");
+    match &spec.oracle {
+        OracleSpec::Pjrt => {
+            bail!("eval shards need a host-side oracle (PJRT trials are not shardable)")
+        }
+        OracleSpec::Mlp(m) => {
+            let corpus = Corpus::new(m.corpus.clone())?;
+            let mspec = MlpSpec::new(
+                m.in_dim,
+                m.hidden.clone(),
+                m.corpus.n_classes as usize,
+                m.activation,
+            )?;
+            let oracle = MlpOracle::from_seed(mspec, m.init_seed);
+            shard_losses(oracle, &corpus, m.eval_batch, b0, b1, params)
+        }
+        OracleSpec::Transformer(t) => {
+            let corpus = Corpus::new(t.corpus.clone())?;
+            let tspec = t.model_spec()?;
+            let oracle = TransformerOracle::from_seed(tspec, spec.mode, t.init_seed);
+            shard_losses(oracle, &corpus, t.eval_batch, b0, b1, params)
+        }
+    }
+}
+
+fn shard_losses<O: Oracle>(
+    mut oracle: O,
+    corpus: &Corpus,
+    eval_batch: usize,
+    b0: u64,
+    b1: u64,
+    params: &[f32],
+) -> Result<Vec<f64>> {
+    ensure!(
+        oracle.dim() == params.len(),
+        "parameter image holds {} values but the oracle dimension is {}",
+        params.len(),
+        oracle.dim()
+    );
+    oracle.update_params(&mut |p: &mut [f32]| p.copy_from_slice(params))?;
+    let zero = vec![0.0f32; params.len()];
+    let mut out = Vec::with_capacity((b1 - b0) as usize);
+    for bi in b0..b1 {
+        oracle.set_batch(&corpus.test_batch(bi, eval_batch))?;
+        out.push(oracle.loss_dir(&zero, 0.0)?);
+    }
+    Ok(out)
+}
+
+/// One JSON RPC with bounded retry: non-200 answers become errors
+/// carrying the response body (the coordinator's error JSON).
+fn rpc_json(cfg: &WorkerConfig, method: &str, path: &str, body: Json) -> Result<Json> {
+    let payload = format!("{}\n", to_string_canonical(&body));
+    rpc_raw(cfg, method, path, "application/json", payload.as_bytes())
+}
+
+/// GET raw bytes (store objects) with bounded retry.
+fn rpc_bytes(cfg: &WorkerConfig, path: &str) -> Result<Vec<u8>> {
+    let (status, body) = rpc(cfg, "GET", path, "application/octet-stream", &[])?;
+    if status != 200 {
+        bail!(
+            "GET {path}: coordinator answered {status}: {}",
+            String::from_utf8_lossy(&body).trim()
+        );
+    }
+    Ok(body)
+}
+
+/// Send a request and parse the JSON reply, with bounded retry.
+fn rpc_raw(
+    cfg: &WorkerConfig,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+) -> Result<Json> {
+    let (status, reply) = rpc(cfg, method, path, content_type, body)?;
+    let text = String::from_utf8_lossy(&reply);
+    if status != 200 {
+        bail!("{method} {path}: coordinator answered {status}: {}", text.trim());
+    }
+    parse(text.as_ref()).map_err(|e| anyhow!("{method} {path}: bad JSON reply: {e}"))
+}
+
+/// The transport-level exchange: bounded retries with exponential
+/// backoff on connection failures (a coordinator mid-restart), capped at
+/// 5 s per wait.
+fn rpc(
+    cfg: &WorkerConfig,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    let mut delay = cfg.backoff;
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..=cfg.retries {
+        match http::http_request(&cfg.connect, method, path, content_type, body) {
+            Ok(r) => return Ok(r),
+            Err(e) => {
+                last = Some(e);
+                if attempt < cfg.retries {
+                    std::thread::sleep(delay);
+                    delay = delay.saturating_mul(2).min(Duration::from_secs(5));
+                }
+            }
+        }
+    }
+    Err(last
+        .unwrap_or_else(|| anyhow!("unreachable: no attempt ran"))
+        .context(format!(
+            "{method} {path}: coordinator at {} unreachable after {} attempts",
+            cfg.connect,
+            cfg.retries + 1
+        )))
+}

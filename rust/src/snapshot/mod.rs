@@ -103,25 +103,28 @@ pub struct CheckpointConfig {
     /// injection for the resume tests; a halted session writes a final
     /// snapshot so no step is lost.
     pub max_run_steps: u64,
-    /// Root of the content-addressed blob store (None: defaults to
-    /// `<dir>/store`; `ZO_STORE_DIR` overrides both — env beats config).
+    /// Root of the content-addressed blob store (None: `ZO_STORE_DIR`
+    /// when set, else `<dir>/store`; an explicit config beats the env —
+    /// the uniform CONFIGURED > ENV precedence contract, DESIGN.md §17).
     /// The coordinator points every trial of a grid at one shared store
     /// under the grid base so blobs dedup across trials.
     pub store_dir: Option<String>,
 }
 
-/// Resolve the store root for a checkpoint config: `ZO_STORE_DIR`
-/// (environment, beats config) → [`CheckpointConfig::store_dir`] →
-/// `<checkpoint-dir>/store`.  None when checkpointing is disabled.
+/// Resolve the store root for a checkpoint config under the uniform
+/// CONFIGURED > ENV precedence contract (DESIGN.md §17):
+/// [`CheckpointConfig::store_dir`] (explicit config, wins) →
+/// `ZO_STORE_DIR` (environment, nonempty) → `<checkpoint-dir>/store`.
+/// None when checkpointing is disabled.
 pub fn resolve_store_dir(ck: &CheckpointConfig) -> Option<PathBuf> {
     let dir = ck.dir.as_ref()?;
+    if let Some(sd) = &ck.store_dir {
+        return Some(PathBuf::from(sd));
+    }
     if let Ok(env) = std::env::var("ZO_STORE_DIR") {
         if !env.trim().is_empty() {
             return Some(PathBuf::from(env));
         }
-    }
-    if let Some(sd) = &ck.store_dir {
-        return Some(PathBuf::from(sd));
     }
     Some(Path::new(dir).join("store"))
 }
@@ -1205,8 +1208,9 @@ mod tests {
             resolve_store_dir(&ck2),
             Some(PathBuf::from("/tmp/shared-store"))
         );
-        // (ZO_STORE_DIR beating both is covered in tests/store.rs to keep
-        // env mutation out of the parallel unit-test process)
+        // (the CONFIGURED > ENV ordering against ZO_STORE_DIR is covered
+        // in tests/store_env.rs and tests/precedence.rs to keep env
+        // mutation out of the parallel unit-test process)
     }
 
     #[test]

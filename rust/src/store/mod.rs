@@ -29,8 +29,9 @@
 //! * **[`Store::verify`]** re-hashes every object and reports mismatches
 //!   — the `zo-ldsd store verify` CLI pass.
 //!
-//! The store location resolves as `ZO_STORE_DIR` (environment, beats
-//! config) → [`crate::snapshot::CheckpointConfig::store_dir`] →
+//! The store location resolves under the uniform precedence contract
+//! (DESIGN.md §17e): [`crate::snapshot::CheckpointConfig::store_dir`]
+//! (`--store-dir`, configured) → `ZO_STORE_DIR` (environment) →
 //! `<checkpoint-dir>/store` (the default, so a grid's trials share one
 //! store under the grid base and dedup across trials).
 

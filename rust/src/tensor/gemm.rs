@@ -37,8 +37,9 @@
 //!
 //! **Mode selection** mirrors `ZO_LANES`: `ZO_GEMM=reference|blocked`
 //! (invalid values panic loudly), defaulting to blocked.  The trainer
-//! threads `TrainConfig::gemm` through [`set_run_mode`] (the env
-//! override beats the config, like `ZO_PARAM_STORE`), and
+//! threads `TrainConfig::gemm` through [`set_run_mode`] under the
+//! uniform precedence contract (an explicit off-default config beats
+//! the env override, like `ZO_PARAM_STORE`; DESIGN.md §17e), and
 //! [`force_gemm_mode`] pins the mode for A/B benches and property tests.
 //! Both engines return identical bits, so a stale or racing mode switch
 //! can only change speed, never results.

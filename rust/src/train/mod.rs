@@ -262,6 +262,24 @@ pub fn build_estimator(
     Ok(est)
 }
 
+/// The parameter-storage mode a config *requests* before any oracle
+/// capability check, under the uniform CONFIGURED > ENV precedence
+/// contract: an explicit off-default config beats `ZO_PARAM_STORE`; the
+/// env forces only unconfigured (f32-default) runs.  Shared between the
+/// trainer's resolution ([`Trainer::with_exec`]) and the canonical spec
+/// hash ([`crate::coordinator::spec_hash`]) so the hash always names the
+/// store the run will actually use (quantization changes the
+/// trajectory, so a false cache hit would serve wrong numbers).
+pub fn requested_param_store(cfg: &TrainConfig) -> ParamStoreMode {
+    if cfg.param_store != ParamStoreMode::F32 {
+        return cfg.param_store;
+    }
+    std::env::var("ZO_PARAM_STORE")
+        .ok()
+        .and_then(|s| ParamStoreMode::parse(&s))
+        .unwrap_or(ParamStoreMode::F32)
+}
+
 /// Deterministic epoch shuffling of a finite training prefix
 /// ([`crate::data::EpochShuffle`]): each epoch visits the first `n_train`
 /// corpus examples once, in a per-epoch pseudorandom order keyed by the
@@ -524,26 +542,30 @@ impl<O: Oracle> Trainer<O> {
         })
     }
 
-    /// Resolve the run's parameter storage: the `ZO_PARAM_STORE`
-    /// environment override (CI forces the whole suite onto one mode with
-    /// it) beats the config.  A quantized mode needs a supporting oracle
+    /// Resolve the run's parameter storage under the uniform
+    /// CONFIGURED > ENV precedence contract (DESIGN.md §17): an explicit
+    /// off-default config (`--param-store f16|int8`) beats the
+    /// `ZO_PARAM_STORE` environment override; the env forces only
+    /// unconfigured (f32-default) runs, which is what CI's suite-wide
+    /// forcing arms need.  A quantized mode needs a supporting oracle
     /// ([`Oracle::supports_param_store`]): when the request came from the
     /// environment the run quietly keeps f32 (so suite-wide forcing skips
     /// the closed-form substrates), while an explicitly configured
-    /// quantized mode errors instead of silently widening.
+    /// quantized mode errors instead of silently widening.  An invalid
+    /// env value always errors, even when the config wins — a typo must
+    /// fail loudly.
     fn resolve_param_store(cfg: &TrainConfig, oracle: &O) -> Result<ParamStoreMode> {
-        let env = match std::env::var("ZO_PARAM_STORE") {
-            Ok(s) => match ParamStoreMode::parse(&s) {
-                Some(m) => Some(m),
-                None => bail!("ZO_PARAM_STORE='{s}' (expected f32|f16|int8)"),
-            },
-            Err(_) => None,
-        };
-        let requested = env.unwrap_or(cfg.param_store);
+        if let Ok(s) = std::env::var("ZO_PARAM_STORE") {
+            if ParamStoreMode::parse(&s).is_none() {
+                bail!("ZO_PARAM_STORE='{s}' (expected f32|f16|int8)");
+            }
+        }
+        let configured = cfg.param_store != ParamStoreMode::F32;
+        let requested = requested_param_store(cfg);
         if requested == ParamStoreMode::F32 || oracle.supports_param_store() {
             return Ok(requested);
         }
-        if env.is_some() && cfg.param_store == ParamStoreMode::F32 {
+        if !configured {
             eprintln!(
                 "ZO_PARAM_STORE={}: oracle '{}' keeps f32 parameter storage \
                  (quantized stores unsupported)",
@@ -559,40 +581,58 @@ impl<O: Oracle> Trainer<O> {
         )
     }
 
-    /// Resolve the run's GEMM engine: the `ZO_GEMM` environment override
-    /// (CI forces the whole suite onto one engine with it) beats the
-    /// config.  No capability check is needed — both engines are plain
-    /// CPU paths every oracle supports, and they produce identical bits
+    /// Resolve the run's GEMM engine under the uniform CONFIGURED > ENV
+    /// precedence contract: an explicit off-default config
+    /// (`--gemm reference`) beats the `ZO_GEMM` environment override, so
+    /// A/B rows that pin the reference engine stay pinned under CI's
+    /// suite-forcing arms; the env forces only unconfigured
+    /// (blocked-default) runs.  An invalid env value always errors.  No
+    /// capability check is needed — both engines are plain CPU paths
+    /// every oracle supports, and they produce identical bits
     /// (DESIGN.md §15), so the choice only moves throughput.
     fn resolve_gemm(cfg: &TrainConfig) -> Result<GemmMode> {
-        match std::env::var("ZO_GEMM") {
+        let env = match std::env::var("ZO_GEMM") {
             Ok(s) => match GemmMode::parse(&s) {
-                Some(m) => Ok(m),
+                Some(m) => Some(m),
                 None => bail!("ZO_GEMM='{s}' (expected reference|blocked)"),
             },
-            Err(_) => Ok(cfg.gemm),
+            Err(_) => None,
+        };
+        if cfg.gemm != GemmMode::Blocked {
+            return Ok(cfg.gemm);
         }
+        Ok(env.unwrap_or(cfg.gemm))
     }
 
-    /// Resolve the run's probe storage: the `ZO_PROBE_STORAGE` environment
-    /// override (CI forces the whole suite onto one path with it) beats
-    /// the config, and streaming needs batched dispatch + a streaming-
-    /// capable oracle + a seed-replay sampler.  When those preconditions
-    /// fail, an env- or auto-derived `streamed` quietly falls back to
-    /// materialized (the two are bitwise identical, so the run is still
-    /// correct); an explicitly configured `streamed` errors instead so a
-    /// CLI user is not silently handed the path they opted out of.
+    /// Resolve the run's probe storage under the uniform CONFIGURED > ENV
+    /// precedence contract: an explicit off-default config
+    /// (`--probe-storage materialized|streamed`) beats the
+    /// `ZO_PROBE_STORAGE` environment override — so equivalence tests
+    /// that pin one path stay pinned under CI's suite-forcing arms — and
+    /// the env forces only unconfigured (`Auto`) runs.  Streaming needs
+    /// batched dispatch + a streaming-capable oracle + a seed-replay
+    /// sampler.  When those preconditions fail, an env- or auto-derived
+    /// `streamed` quietly falls back to materialized (the two are bitwise
+    /// identical, so the run is still correct); an explicitly configured
+    /// `streamed` errors instead so a CLI user is not silently handed the
+    /// path they opted out of.  An invalid env value panics in
+    /// [`ProbeStorage::from_env`] — a typo must fail loudly.
     fn resolve_storage(cfg: &TrainConfig, oracle: &O) -> Result<ProbeStorage> {
         let env = ProbeStorage::from_env();
-        let requested = env.unwrap_or(cfg.probe_storage);
+        let configured = cfg.probe_storage != ProbeStorage::Auto;
+        let requested = if configured {
+            cfg.probe_storage
+        } else {
+            env.unwrap_or(ProbeStorage::Auto)
+        };
         let streaming_ok = cfg.probe_dispatch == ProbeDispatch::Batched
             && oracle.supports_streamed_probes()
             && cfg.estimator.sampler_kind().supports_replay();
         match requested {
             ProbeStorage::Streamed if !streaming_ok => {
-                // env.is_none() here implies the config itself asked for
-                // streamed, which deserves the error below
-                if env.is_some() {
+                if !configured {
+                    // the request came from the environment: quiet,
+                    // bitwise-identical fallback
                     Ok(ProbeStorage::Materialized)
                 } else {
                     bail!(

@@ -1,0 +1,142 @@
+//! The uniform env/flag precedence contract (DESIGN.md §17), pinned in
+//! one place: for every `ZO_*` knob, an explicit configuration beats the
+//! environment, and a process-wide FORCE (test/bench override) beats
+//! both.  This lives in its own integration binary — env mutation is
+//! process-global, so it must not share a process with suites that read
+//! these variables — and in ONE test function, because the test harness
+//! runs `#[test]`s concurrently in threads.
+//!
+//! Ordering inside the test matters: `lane_mode()` / `gemm_mode()` cache
+//! their env read on first call, so the lanes/GEMM sections run before
+//! anything that touches a kernel.
+
+use zo_ldsd::config::TrainMode;
+use zo_ldsd::coordinator::{run_local_trial, MlpTrial, OracleSpec, TrialSpec};
+use zo_ldsd::data::CorpusSpec;
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::model::Activation;
+use zo_ldsd::snapshot::{self, CheckpointConfig};
+use zo_ldsd::tensor::gemm::{
+    effective_gemm_mode, force_gemm_mode, gemm_mode, set_run_mode, GemmMode,
+};
+use zo_ldsd::tensor::lanes::{effective_mode, force_mode, lane_mode, LaneMode};
+use zo_ldsd::train::{
+    requested_param_store, ParamStoreMode, ProbeStorage, TrainConfig,
+};
+
+/// A tiny artifact-free MLP trial for end-to-end resolution checks.
+fn mlp_spec(id: &str, storage: Option<ProbeStorage>) -> TrialSpec {
+    let mut cfg = TrainConfig::algorithm2("zo_sgd_plain", 0.02, 40);
+    cfg.eval_every = 0;
+    cfg.eval_batches = 1;
+    let oracle = OracleSpec::Mlp(MlpTrial {
+        hidden: vec![8],
+        activation: Activation::Tanh,
+        in_dim: 16,
+        corpus: CorpusSpec::default_mini(),
+        init_seed: 1,
+        eval_batch: 8,
+    });
+    let mut spec = TrialSpec::new(id, "mlp", TrainMode::Ft, cfg, oracle);
+    spec.probe_storage = storage;
+    spec
+}
+
+#[test]
+fn forced_beats_configured_beats_env_for_every_knob() {
+    // --- ZO_LANES: FORCED > ENV > CPU detection.  Must run before any
+    // kernel call caches the env read.
+    std::env::set_var("ZO_LANES", "scalar");
+    assert_eq!(lane_mode(), LaneMode::Scalar, "env picked up on first read");
+    assert_eq!(effective_mode(), LaneMode::Scalar);
+    force_mode(Some(LaneMode::Wide));
+    assert_eq!(effective_mode(), LaneMode::Wide, "force beats env");
+    force_mode(None);
+    assert_eq!(effective_mode(), LaneMode::Scalar, "un-forcing restores env");
+    std::env::remove_var("ZO_LANES");
+
+    // --- ZO_GEMM (kernel layer): FORCED > trainer-installed run mode
+    // (the configured tier) > ENV.
+    std::env::set_var("ZO_GEMM", "reference");
+    assert_eq!(gemm_mode(), GemmMode::Reference, "env picked up on first read");
+    assert_eq!(effective_gemm_mode(), GemmMode::Reference);
+    set_run_mode(Some(GemmMode::Blocked));
+    assert_eq!(effective_gemm_mode(), GemmMode::Blocked, "configured run mode beats env");
+    force_gemm_mode(Some(GemmMode::Reference));
+    assert_eq!(effective_gemm_mode(), GemmMode::Reference, "force beats configured");
+    force_gemm_mode(None);
+    set_run_mode(None);
+    assert_eq!(effective_gemm_mode(), GemmMode::Reference, "back to the cached env read");
+    std::env::remove_var("ZO_GEMM");
+
+    // --- ZO_THREADS: --threads N > env > core-count default.
+    std::env::set_var("ZO_THREADS", "3");
+    assert_eq!(ExecContext::resolve(2).threads(), 2, "configured beats env");
+    assert_eq!(ExecContext::resolve(0).threads(), 3, "unconfigured defers to env");
+    std::env::set_var("ZO_THREADS", "not-a-number");
+    assert!(ExecContext::resolve(0).threads() >= 1, "junk env falls back to cores");
+    std::env::remove_var("ZO_THREADS");
+    assert_eq!(ExecContext::resolve(5).threads(), 5);
+    assert!(ExecContext::resolve(0).threads() >= 1);
+
+    // --- ZO_PARAM_STORE: an off-default config beats the env; the env
+    // forces only unconfigured (f32-default) runs.
+    let mut cfg = TrainConfig::algorithm2("zo_sgd", 0.02, 40);
+    std::env::set_var("ZO_PARAM_STORE", "int8");
+    cfg.param_store = ParamStoreMode::F16;
+    assert_eq!(requested_param_store(&cfg), ParamStoreMode::F16, "configured beats env");
+    cfg.param_store = ParamStoreMode::F32;
+    assert_eq!(requested_param_store(&cfg), ParamStoreMode::Int8, "env forces the default");
+    std::env::remove_var("ZO_PARAM_STORE");
+    assert_eq!(requested_param_store(&cfg), ParamStoreMode::F32);
+
+    // --- ZO_STORE_DIR: CheckpointConfig::store_dir > env > <dir>/store.
+    // (tests/store_env.rs drives a full checkpointed run through this;
+    // here we pin just the ordering.)
+    let ck = CheckpointConfig {
+        dir: Some("ckbase".into()),
+        every: 0,
+        resume: false,
+        max_run_steps: 0,
+        store_dir: Some("cfgstore".into()),
+    };
+    std::env::set_var("ZO_STORE_DIR", "envstore");
+    assert_eq!(
+        snapshot::resolve_store_dir(&ck).unwrap(),
+        std::path::PathBuf::from("cfgstore"),
+        "configured beats env"
+    );
+    let unconfigured = CheckpointConfig { store_dir: None, ..ck.clone() };
+    assert_eq!(
+        snapshot::resolve_store_dir(&unconfigured).unwrap(),
+        std::path::PathBuf::from("envstore"),
+        "env beats the <dir>/store default"
+    );
+    std::env::remove_var("ZO_STORE_DIR");
+    assert_eq!(
+        snapshot::resolve_store_dir(&unconfigured).unwrap(),
+        std::path::Path::new("ckbase").join("store")
+    );
+
+    // --- ZO_PROBE_STORAGE, end to end through a real run: an explicit
+    // --probe-storage pin survives the suite-wide env forcing; the env
+    // moves only unconfigured (auto) runs.  Both paths are bitwise
+    // identical, so only the resolved label differs.
+    std::env::set_var("ZO_PROBE_STORAGE", "streamed");
+    let exec = ExecContext::new(1);
+    let pinned = run_local_trial(
+        "artifacts",
+        &mlp_spec("prec/pinned", Some(ProbeStorage::Materialized)),
+        &exec,
+    )
+    .unwrap();
+    assert_eq!(pinned.probe_storage, "materialized", "configured beats env");
+    let forced = run_local_trial("artifacts", &mlp_spec("prec/forced", None), &exec).unwrap();
+    assert_eq!(forced.probe_storage, "streamed", "env forces the auto default");
+    std::env::remove_var("ZO_PROBE_STORAGE");
+    assert_eq!(
+        pinned.outcome.final_accuracy.to_bits(),
+        forced.outcome.final_accuracy.to_bits(),
+        "storage modes are bitwise identical"
+    );
+}

@@ -1,0 +1,269 @@
+//! The distributed seed-sync service end to end over loopback HTTP
+//! (DESIGN.md §17): a grid farmed across two workers merges to a report
+//! byte-identical to the single-process run, a worker killed mid-trial
+//! only costs a lease timeout (the trial re-queues and the merged report
+//! is still byte-identical), a restarted coordinator serves the whole
+//! grid from its result cache with zero training steps, loss-evaluation
+//! shards merge bitwise to the unsharded evaluation, and malformed
+//! requests answer 4xx without killing the listener.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use zo_ldsd::config::TrainMode;
+use zo_ldsd::coordinator::{deterministic_report, run_grid, MlpTrial, OracleSpec, TrialSpec};
+use zo_ldsd::data::CorpusSpec;
+use zo_ldsd::exec::ExecContext;
+use zo_ldsd::jsonio::{parse, to_string_canonical};
+use zo_ldsd::model::mlp::MlpSpec;
+use zo_ldsd::model::Activation;
+use zo_ldsd::service::http::http_request;
+use zo_ldsd::service::proto::{self, LeaseReply};
+use zo_ldsd::service::{
+    eval_shard_losses, run_worker, Coordinator, CoordinatorConfig, WorkerConfig,
+};
+use zo_ldsd::train::TrainConfig;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("zo_service_it_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// A tiny artifact-free MLP trial — the cheapest real training run the
+/// coordinator can farm out.  No checkpoint policy: workers pin their
+/// own, and the spec hash is identical either way.
+fn trial(id: &str, seed: u64, lr: f32) -> TrialSpec {
+    let mut cfg = TrainConfig::algorithm2("zo_sgd_plain", lr, 120);
+    cfg.eval_every = 0;
+    cfg.eval_batches = 1;
+    cfg.seed = seed;
+    let oracle = OracleSpec::Mlp(MlpTrial {
+        hidden: vec![8],
+        activation: Activation::Tanh,
+        in_dim: 16,
+        corpus: CorpusSpec::default_mini(),
+        init_seed: 1,
+        eval_batch: 8,
+    });
+    TrialSpec::new(id, "mlp", TrainMode::Ft, cfg, oracle)
+}
+
+/// A grid farmed over two loopback workers produces a merged report
+/// byte-identical to the single-process `run_grid`, and a coordinator
+/// restarted on the same directory re-serves every trial from the
+/// result cache with zero training-session oracle calls.
+#[test]
+fn farmed_grid_is_byte_identical_and_warm_restart_serves_cache() {
+    let base = tmp("farm");
+    let grid = || {
+        vec![
+            trial("svc/a", 1, 0.02),
+            trial("svc/b", 2, 0.02),
+            trial("svc/c", 3, 0.03),
+        ]
+    };
+    let single = run_grid("no-artifacts", grid(), &ExecContext::new(1));
+    let want = deterministic_report(&single);
+
+    let mut coordinator =
+        Coordinator::bind(CoordinatorConfig::loopback(base.join("coord"))).unwrap();
+    let addr = coordinator.addr().to_string();
+    assert_eq!(
+        coordinator.enqueue(grid()).unwrap(),
+        0,
+        "a cold queue has nothing cached"
+    );
+
+    let workers: Vec<_> = (0..2)
+        .map(|w| {
+            let cfg = WorkerConfig::new(addr.clone(), base.join(format!("w{w}")));
+            std::thread::spawn(move || run_worker(&cfg).unwrap())
+        })
+        .collect();
+    let farmed = coordinator.run_until_done(Duration::from_millis(20)).unwrap();
+    let mut trials_run = 0;
+    for h in workers {
+        let report = h.join().unwrap();
+        assert_eq!(report.errors, 0);
+        trials_run += report.trials_run;
+    }
+    assert_eq!(trials_run, 3, "the two workers drained the queue exactly once");
+    assert_eq!(
+        deterministic_report(&farmed),
+        want,
+        "farmed grid must be byte-identical to the single-process run"
+    );
+    for r in &farmed {
+        let tr = r.as_ref().unwrap();
+        assert!(!tr.cached, "cold trials train for real");
+        assert!(tr.outcome.completed);
+    }
+    let stats = coordinator.stats();
+    assert_eq!(stats.outcomes_accepted, 3);
+    assert_eq!(stats.cached_on_enqueue, 0);
+    coordinator.shutdown().unwrap();
+    drop(coordinator);
+
+    // restart on the same directory: queue.json restores the grid, and
+    // grid.lock.json + the store answer every trial without training
+    let warm_coordinator =
+        Coordinator::bind(CoordinatorConfig::loopback(base.join("coord"))).unwrap();
+    let warm = warm_coordinator
+        .run_until_done(Duration::from_millis(5))
+        .unwrap();
+    assert_eq!(warm.len(), 3, "the persisted queue restored the full grid");
+    for r in &warm {
+        let tr = r.as_ref().unwrap();
+        assert!(tr.cached, "warm trials come from the result cache");
+        assert_eq!(tr.session_oracle_calls, 0, "warm start does no training");
+    }
+    assert_eq!(deterministic_report(&warm), want, "warm report is byte-identical too");
+    assert_eq!(warm_coordinator.stats().cached_on_enqueue, 3);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// A worker killed mid-trial (a lease taken and never submitted) only
+/// costs the lease timeout: the trial re-queues, a live worker finishes
+/// the grid, and the merged report is still byte-identical to the
+/// single-process run.
+#[test]
+fn killed_worker_lease_expires_and_the_grid_still_merges_clean() {
+    let base = tmp("kill");
+    let grid = || vec![trial("kill/a", 11, 0.02), trial("kill/b", 12, 0.025)];
+    let single = run_grid("no-artifacts", grid(), &ExecContext::new(1));
+    let want = deterministic_report(&single);
+
+    let mut coordinator = Coordinator::bind(CoordinatorConfig {
+        addr: "127.0.0.1:0".to_string(),
+        dir: base.join("coord"),
+        lease_timeout: Duration::from_millis(250),
+    })
+    .unwrap();
+    let addr = coordinator.addr().to_string();
+    coordinator.enqueue(grid()).unwrap();
+
+    // the doomed worker: takes a trial lease over raw HTTP, then dies
+    // without ever submitting
+    let body = format!("{}\n", to_string_canonical(&proto::message(vec![])));
+    let (status, reply) =
+        http_request(&addr, "POST", proto::P_LEASE, "application/json", body.as_bytes()).unwrap();
+    assert_eq!(status, 200);
+    let j = parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+    match LeaseReply::from_json(&j).unwrap() {
+        LeaseReply::Trial { .. } => {}
+        other => panic!("expected a trial lease, got {other:?}"),
+    }
+
+    // a live worker drains the queue; the dead lease expires, re-queues,
+    // and the same worker picks the orphaned trial back up
+    let report = run_worker(&WorkerConfig::new(addr, base.join("w0"))).unwrap();
+    assert_eq!(report.errors, 0);
+    assert!(
+        report.trials_run >= 2,
+        "the live worker ran both trials (got {})",
+        report.trials_run
+    );
+    let farmed = coordinator.run_until_done(Duration::from_millis(10)).unwrap();
+    assert!(
+        coordinator.stats().requeues >= 1,
+        "the dead worker's lease must have expired and re-queued"
+    );
+    assert_eq!(
+        deterministic_report(&farmed),
+        want,
+        "a mid-trial kill must not perturb the merged report"
+    );
+    coordinator.shutdown().unwrap();
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Loss-evaluation shards farmed through the service merge bitwise to
+/// the unsharded local evaluation of the same parameter image.
+#[test]
+fn eval_shards_merge_bitwise_to_the_local_evaluation() {
+    let base = tmp("eval");
+    let spec = trial("eval/a", 21, 0.02);
+    let (mspec, init_seed) = match &spec.oracle {
+        OracleSpec::Mlp(m) => (
+            MlpSpec::new(
+                m.in_dim,
+                m.hidden.clone(),
+                m.corpus.n_classes as usize,
+                m.activation,
+            )
+            .unwrap(),
+            m.init_seed,
+        ),
+        other => panic!("expected an MLP oracle, got {other:?}"),
+    };
+    // any deterministic parameter image of the right dimension (a
+    // different seed than the oracle init, so the install is observable)
+    let params = mspec.init_params(init_seed ^ 0xE7A1);
+    let local = eval_shard_losses(&spec, &params, 0, 6).unwrap();
+    assert_eq!(local.len(), 6);
+
+    let coordinator =
+        Coordinator::bind(CoordinatorConfig::loopback(base.join("coord"))).unwrap();
+    let addr = coordinator.addr().to_string();
+    let shards = coordinator.enqueue_eval(&spec, &params, 6, 2).unwrap();
+    assert_eq!(shards, 3, "6 batches in chunks of 2");
+    assert!(coordinator.eval_losses().is_none(), "nothing evaluated yet");
+
+    let report = run_worker(&WorkerConfig::new(addr, base.join("w0"))).unwrap();
+    assert_eq!(report.evals_run, 3);
+    let merged = coordinator.eval_losses().expect("every shard is done");
+    assert_eq!(merged.len(), local.len());
+    for (a, b) in merged.iter().zip(local.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "sharded eval must merge bitwise");
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Garbage on the wire answers 4xx with a JSON error body and leaves the
+/// listener healthy.
+#[test]
+fn malformed_requests_answer_4xx_without_killing_the_service() {
+    let base = tmp("bad");
+    let coordinator =
+        Coordinator::bind(CoordinatorConfig::loopback(base.join("coord"))).unwrap();
+    let addr = coordinator.addr().to_string();
+
+    // a body that is not JSON at all
+    let (status, body) =
+        http_request(&addr, "POST", proto::P_ENQUEUE, "application/json", b"this is not json")
+            .unwrap();
+    assert_eq!(status, 400);
+    assert!(String::from_utf8_lossy(&body).contains("error"));
+
+    // valid JSON stamped with a wire schema from the future
+    let stale = r#"{"schema":"00000000000000ff","kind":"trial"}"#;
+    let (status, _) =
+        http_request(&addr, "POST", proto::P_OUTCOME, "application/json", stale.as_bytes())
+            .unwrap();
+    assert_eq!(status, 400);
+
+    // an outcome for a trial that was never queued
+    let bogus = format!(
+        r#"{{"schema":"{:016x}","kind":"eval","index":7,"losses":[]}}"#,
+        zo_ldsd::coordinator::wire::WIRE_SCHEMA_VERSION
+    );
+    let (status, _) =
+        http_request(&addr, "POST", proto::P_OUTCOME, "application/json", bogus.as_bytes())
+            .unwrap();
+    assert_eq!(status, 400);
+
+    // unknown route, and a store object that does not exist
+    let (status, _) = http_request(&addr, "GET", "/api/v1/nope", "text/plain", &[]).unwrap();
+    assert_eq!(status, 404);
+    let missing = format!("{}/{}", proto::P_STORE_OBJ, "ab".repeat(32));
+    let (status, _) = http_request(&addr, "GET", &missing, "text/plain", &[]).unwrap();
+    assert_eq!(status, 404);
+
+    // the listener survived all of it
+    let (status, body) =
+        http_request(&addr, "GET", proto::P_PING, "application/json", &[]).unwrap();
+    assert_eq!(status, 200);
+    assert!(String::from_utf8_lossy(&body).contains("zo-coordinator"));
+    std::fs::remove_dir_all(&base).ok();
+}

@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 
 use zo_ldsd::config::TrainMode;
 use zo_ldsd::coordinator::{
-    run_grid, run_local_trial, spec_hash, MlpTrial, OracleSpec, TrialResult, TrialSpec,
+    resolved_spec_hash, run_grid, run_local_trial, MlpTrial, OracleSpec, TrialResult, TrialSpec,
 };
 use zo_ldsd::data::CorpusSpec;
 use zo_ldsd::exec::ExecContext;
@@ -34,41 +34,32 @@ fn tmp(tag: &str) -> PathBuf {
 fn grid_spec(id: &str, seed: u64, lr: f32, base: &Path) -> TrialSpec {
     let mut cfg = TrainConfig::algorithm2("zo_sgd_plain", lr, BUDGET);
     cfg.eval_every = 0;
+    cfg.eval_batches = 1;
     cfg.seed = seed;
-    TrialSpec {
-        id: id.into(),
-        model: "mlp".into(),
-        mode: TrainMode::Ft,
-        config: cfg,
-        eval_batches: 1,
-        probe_dispatch: None,
-        probe_storage: None,
-        param_store: None,
-        gemm: None,
-        checkpoint: Some(CheckpointConfig {
-            dir: Some(base.to_string_lossy().into_owned()),
-            every: 0,
-            resume: true,
-            max_run_steps: 0,
-            store_dir: None,
-        }),
-        oracle: OracleSpec::Mlp(MlpTrial {
-            hidden: vec![8],
-            activation: Activation::Tanh,
-            in_dim: 16,
-            corpus: CorpusSpec::default_mini(),
-            init_seed: 1,
-            eval_batch: 8,
-        }),
-    }
+    let oracle = OracleSpec::Mlp(MlpTrial {
+        hidden: vec![8],
+        activation: Activation::Tanh,
+        in_dim: 16,
+        corpus: CorpusSpec::default_mini(),
+        init_seed: 1,
+        eval_batch: 8,
+    });
+    let mut spec = TrialSpec::new(id, "mlp", TrainMode::Ft, cfg, oracle);
+    spec.checkpoint = Some(CheckpointConfig {
+        dir: Some(base.to_string_lossy().into_owned()),
+        every: 0,
+        resume: true,
+        max_run_steps: 0,
+        store_dir: None,
+    });
+    spec
 }
 
 /// The hash the coordinator keys this spec under: overrides resolved the
-/// same way `run_trial` resolves them before hashing.
+/// same way `run_trial` resolves them before hashing (re-exported as
+/// [`resolved_spec_hash`] — the service leases under the same identity).
 fn resolved_hash(spec: &TrialSpec) -> String {
-    let mut cfg = spec.config.clone();
-    cfg.eval_batches = spec.eval_batches;
-    spec_hash(spec, &cfg)
+    resolved_spec_hash(spec)
 }
 
 fn outcomes_bitwise_equal(a: &TrainOutcome, b: &TrainOutcome) {

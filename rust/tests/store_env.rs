@@ -1,8 +1,10 @@
-//! `ZO_STORE_DIR` resolution (DESIGN.md §16): the environment override
-//! beats both `CheckpointConfig::store_dir` and the `<dir>/store`
-//! default, and a checkpointed run writes every blob there.  This lives
-//! in its own integration binary — env mutation is process-global, so it
-//! must not share a process with the rest of the store suite.
+//! `ZO_STORE_DIR` resolution under the uniform CONFIGURED > ENV
+//! precedence contract (DESIGN.md §17): an explicit
+//! `CheckpointConfig::store_dir` beats the environment, the environment
+//! beats the `<dir>/store` default, and a checkpointed run writes every
+//! blob to the resolved store.  This lives in its own integration binary
+//! — env mutation is process-global, so it must not share a process with
+//! the rest of the store suite.
 
 use std::path::PathBuf;
 
@@ -20,7 +22,7 @@ fn tmp(tag: &str) -> PathBuf {
 }
 
 #[test]
-fn env_store_dir_overrides_config_and_default() {
+fn config_store_dir_beats_env_which_beats_default() {
     let ck_dir = tmp("ck");
     let cfg_store = tmp("cfg_store");
     let env_store = tmp("env_store");
@@ -40,11 +42,25 @@ fn env_store_dir_overrides_config_and_default() {
         Some(ck_dir.join("store"))
     );
 
-    // env beats config (process-global: this binary holds only this test)
+    // with the env var set (process-global: this binary holds only this
+    // test): the explicit config still wins, the env replaces only the
+    // <dir>/store default
     std::env::set_var("ZO_STORE_DIR", &env_store);
-    assert_eq!(snapshot::resolve_store_dir(&ck), Some(env_store.clone()));
+    assert_eq!(snapshot::resolve_store_dir(&ck), Some(cfg_store.clone()));
+    assert_eq!(
+        snapshot::resolve_store_dir(&default_ck),
+        Some(env_store.clone())
+    );
+    // an empty/whitespace env value un-forces cleanly
+    std::env::set_var("ZO_STORE_DIR", "  ");
+    assert_eq!(
+        snapshot::resolve_store_dir(&default_ck),
+        Some(ck_dir.join("store"))
+    );
+    std::env::set_var("ZO_STORE_DIR", &env_store);
 
-    // a real checkpointed run lands every blob in the env-chosen store
+    // a real checkpointed run with no configured store_dir lands every
+    // blob in the env-chosen store
     let d = 24usize;
     let mut cfg = TrainConfig::algorithm2("zo_sgd", 0.02, 60);
     cfg.estimator = EstimatorKind::BestOfK {
@@ -54,7 +70,7 @@ fn env_store_dir_overrides_config_and_default() {
     cfg.eval_every = 0;
     cfg.eval_batches = 1;
     cfg.seed = 11;
-    cfg.checkpoint = ck;
+    cfg.checkpoint = default_ck;
     let diag: Vec<f32> = (0..d).map(|i| 1.0 + 0.1 * (i % 3) as f32).collect();
     let oracle = QuadraticOracle::new(diag, vec![1.0; d], vec![0.0; d]);
     let corpus = zo_ldsd::data::Corpus::new(zo_ldsd::data::CorpusSpec::default_mini()).unwrap();
@@ -67,7 +83,7 @@ fn env_store_dir_overrides_config_and_default() {
     assert!(
         Store::open(&cfg_store).object_count() == 0
             && Store::open(ck_dir.join("store")).object_count() == 0,
-        "nothing may leak into the overridden store locations"
+        "nothing may leak into the unconfigured store locations"
     );
     // and the manifests resolve against the env store
     let snap = snapshot::load_latest(&ck_dir, Some(&env)).unwrap();
